@@ -1,0 +1,57 @@
+//! The Prop-2 memory/compute trade-off, measured: sweep the binomial
+//! checkpoint budget N_c and report recomputed steps (executed vs DP
+//! prediction vs the paper's closed form) and measured checkpoint bytes.
+//!
+//!     cargo run --release --example checkpoint_tradeoff [-- --nt 32]
+
+use pnode::bench::Table;
+use pnode::checkpoint::{prop2_extra_steps, BinomialPlanner, CheckpointPolicy};
+use pnode::methods::{BlockSpec, GradientMethod, Pnode};
+use pnode::nn::Act;
+use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::tableau::Scheme;
+use pnode::util::cli::Args;
+use pnode::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let nt = args.get_usize("nt", 24);
+
+    let dims = vec![9, 24, 8];
+    let mut rng = Rng::new(9);
+    let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+    let rhs = MlpRhs::new(dims, Act::Tanh, true, 16, theta);
+    let mut u0 = vec![0.0f32; rhs.state_len()];
+    rng.fill_normal(&mut u0);
+    let lambda0 = vec![1.0f32; rhs.state_len()];
+    let spec = BlockSpec::new(Scheme::Rk4, nt);
+
+    let mut table = Table::new(
+        &format!("Checkpoint budget trade-off (RK4, N_t={nt})"),
+        &["N_c", "recomputed (executed)", "DP", "Prop. 2", "ckpt bytes", "time (ms)"],
+    );
+    let mut planner = BinomialPlanner::new();
+    for nc in [1usize, 2, 3, 4, 6, 8, 12, 16, nt - 1] {
+        let mut m = Pnode::new(CheckpointPolicy::Binomial { n_checkpoints: nc });
+        let t = std::time::Instant::now();
+        m.forward(&rhs, &spec, &u0);
+        let mut lambda = lambda0.clone();
+        let mut grad = vec![0.0f32; rhs.param_len()];
+        m.backward(&rhs, &spec, &mut lambda, &mut grad);
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        let r = m.report();
+        table.row(vec![
+            nc.to_string(),
+            r.recompute_steps.to_string(),
+            planner.optimal_cost(nt, nc).to_string(),
+            prop2_extra_steps(nt, nc).map(|v| v.to_string()).unwrap_or("-".into()),
+            r.ckpt_bytes.to_string(),
+            format!("{ms:.2}"),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nPNODE-All (N_c >= N_t-1) recomputes nothing; the budget knob trades\n\
+         memory for the DP-optimal number of re-executed steps (DESIGN.md §5)."
+    );
+}

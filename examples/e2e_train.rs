@@ -1,0 +1,105 @@
+//! END-TO-END VALIDATION DRIVER (DESIGN.md §7, recorded in EXPERIMENTS.md).
+//!
+//! Trains the full classification system — 4 neural-ODE blocks × 50,296
+//! params = 201,184 trainable parameters (paper budget: 199,800) — for a
+//! few hundred optimizer steps on the spiral surrogate, through the REAL
+//! production stack: Pallas-kernel HLO artifacts → PJRT runtime → Dopri5 →
+//! PNODE discrete adjoint with checkpointing → Adam.  Logs the loss curve.
+//!
+//!     make artifacts && cargo run --release --example e2e_train
+//!     (add `-- --no-xla` to run on the pure-Rust mirror instead)
+
+use pnode::methods::{method_by_name, BlockSpec};
+use pnode::data::spiral::SpiralDataset;
+use pnode::nn::{Act, Adam, Optimizer};
+use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::tableau::Scheme;
+use pnode::tasks::ClassificationTask;
+use pnode::util::cli::Args;
+use pnode::util::rng::Rng;
+
+const D: usize = 64;
+const B: usize = 128;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.get_usize("steps", 200);
+    let use_xla = !args.flag("no-xla");
+    let nt = args.get_usize("nt", 2);
+    let mut rng = Rng::new(123);
+
+    let dims = vec![D + 1, 168, 168, D];
+    let per_block = pnode::nn::param_count(&dims);
+    let dims_i = dims.clone();
+    let mut task = ClassificationTask::new(
+        &mut rng,
+        4,
+        BlockSpec::new(Scheme::Dopri5, nt),
+        per_block,
+        D,
+        10,
+        move |r| pnode::nn::init::kaiming_uniform(r, &dims_i, 1.0),
+        || method_by_name("pnode").unwrap(),
+    );
+    println!(
+        "e2e: 4 ODE blocks x {per_block} = {} params (paper: 199,800), \
+         Dopri5 N_t={nt}, batch {B}",
+        4 * per_block
+    );
+
+    let mut rhs: Box<dyn OdeRhs> = if use_xla {
+        let client = pnode::runtime::Client::cpu()?;
+        let manifest = pnode::runtime::Manifest::load_default()?;
+        let arts = pnode::runtime::ModelArtifacts::load(&client, &manifest, "clf_d64")?;
+        println!("backend: XLA/PJRT artifacts (Pallas dense kernel inside)");
+        Box::new(pnode::ode::XlaRhs::new(arts, task.block_theta(0).to_vec())?)
+    } else {
+        println!("backend: pure-Rust mirror");
+        Box::new(MlpRhs::new(dims, Act::Relu, true, B, task.block_theta(0).to_vec()))
+    };
+
+    let ds = SpiralDataset::generate(&mut rng, 800, 10, D);
+    let (train, test) = ds.split(0.9);
+    let mut opt = Adam::new(task.theta.len(), args.get_f64("lr", 1e-3));
+    let mut log = pnode::train::TrainLog::new();
+    let mut x = vec![0.0f32; B * D];
+    let mut y = vec![0usize; B];
+
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        train.fill_batch(step * B, B, &mut x, &mut y);
+        let res = task.grad_step(rhs.as_mut(), B, &x, &y, 0.05);
+        let gn = pnode::train::grad_norm(&res.grad);
+        task.apply_grad(&mut opt as &mut dyn Optimizer, &res.grad);
+        log.push(step, res.loss, Some(res.accuracy), gn, res.report.nfe_forward, res.report.nfe_backward);
+        if step % 20 == 0 || step + 1 == steps {
+            println!(
+                "step {step:4}  loss {:.4}  acc {:.3}  |g| {:.2e}  ckpt {}",
+                res.loss,
+                res.accuracy,
+                gn,
+                pnode::util::human_bytes(res.report.ckpt_bytes)
+            );
+        }
+    }
+    let total = t0.elapsed().as_secs_f64();
+
+    let mut xt = vec![0.0f32; B * D];
+    let mut yt = vec![0usize; B];
+    test.fill_batch(0, B, &mut xt, &mut yt);
+    let (tl, ta) = task.evaluate(rhs.as_mut(), B, &xt, &yt);
+    println!("\n=== E2E SUMMARY ===");
+    println!("steps: {steps}, total {total:.1}s ({:.3}s/step)", total / steps as f64);
+    println!(
+        "loss: {:.4} -> {:.4} (best {:.4})",
+        log.rows.first().unwrap().loss,
+        log.rows.last().unwrap().loss,
+        log.best_loss()
+    );
+    println!("test loss {tl:.4}, test acc {ta:.3}");
+    let out = "target/e2e_train_log.csv";
+    std::fs::create_dir_all("target").ok();
+    std::fs::write(out, log.to_csv())?;
+    println!("loss curve written to {out}");
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Stiff dynamics (paper §5.3): learn Robertson's chemistry.
+//! Crank–Nicolson (implicit, enabled by PNODE's high-level adjoint) learns
+//! the dynamics; adaptive Dopri5's gradients explode (Fig. 5 / Table 8).
+//!
+//!     cargo run --release --example stiff_robertson [-- --epochs 200]
+
+use pnode::data::robertson::RobertsonData;
+use pnode::nn::{Act, AdamW, Optimizer};
+use pnode::ode::implicit::ThetaScheme;
+use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::tasks::StiffTask;
+use pnode::train::GradStats;
+use pnode::util::cli::Args;
+use pnode::util::rng::Rng;
+
+fn train(task: &StiffTask, explicit: bool, epochs: usize) -> (f64, GradStats, f64, f64) {
+    let dims = vec![3, 24, 24, 24, 3];
+    let mut rng = Rng::new(5);
+    let mut theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 0.05);
+    let mut rhs = MlpRhs::new(dims, Act::Gelu, false, 1, theta.clone());
+    let mut opt = AdamW::new(theta.len(), 5e-3, 1e-4);
+    let mut stats = GradStats::default();
+    let mut loss = f64::NAN;
+    let mut nfe_f = 0.0;
+    let mut nfe_b = 0.0;
+    let t0 = std::time::Instant::now();
+    for _ in 0..epochs {
+        let step = if explicit {
+            task.grad_explicit_adaptive(&rhs, 1e-6)
+        } else {
+            task.grad_implicit(&rhs, ThetaScheme::crank_nicolson())
+        };
+        loss = step.loss;
+        nfe_f += step.nfe_forward as f64;
+        nfe_b += step.nfe_backward as f64;
+        let gn = pnode::train::grad_norm(&step.grad);
+        stats.observe(gn, 1e5);
+        if !gn.is_finite() {
+            break; // exploded
+        }
+        let mut g = step.grad;
+        pnode::train::clip_grad_norm(&mut g, 50.0);
+        opt.step(&mut theta, &g);
+        rhs.set_params(&theta);
+    }
+    let secs = t0.elapsed().as_secs_f64() / epochs as f64;
+    (loss, stats, secs, (nfe_f + nfe_b) / epochs as f64)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let epochs = args.get_usize("epochs", 150);
+    // min–max scaled data (paper §5.3.1) — without it the tiny species is
+    // invisible to the loss
+    let data = RobertsonData::generate(40, 6, true);
+    let task = StiffTask::new(data, 2);
+
+    println!("training with Crank–Nicolson (implicit, PNODE discrete adjoint)...");
+    let (mae_cn, stats_cn, secs_cn, nfe_cn) = train(&task, false, epochs);
+    println!("training with adaptive Dopri5 (explicit baseline)...");
+    let (mae_ex, stats_ex, secs_ex, nfe_ex) = train(&task, true, epochs);
+
+    let mut t = pnode::bench::Table::new(
+        "Robertson stiff dynamics (Table 8 / Fig. 5 shape)",
+        &["integrator", "final MAE", "max |grad|", "exploded", "NFE/iter", "s/iter"],
+    );
+    t.row(vec![
+        "Crank–Nicolson".into(),
+        format!("{mae_cn:.5}"),
+        format!("{:.2e}", stats_cn.max_norm),
+        stats_cn.exploded.to_string(),
+        format!("{nfe_cn:.0}"),
+        format!("{secs_cn:.3}"),
+    ]);
+    t.row(vec![
+        "Dopri5 (adaptive)".into(),
+        format!("{mae_ex:.5}"),
+        format!("{:.2e}", stats_ex.max_norm),
+        stats_ex.exploded.to_string(),
+        format!("{nfe_ex:.0}"),
+        format!("{secs_ex:.3}"),
+    ]);
+    t.print();
+    println!(
+        "\nExpected shape: CN trains stably to low MAE; the explicit method\n\
+         shows much larger gradient norms (explosion) and/or higher NFE."
+    );
+}

@@ -1,0 +1,158 @@
+"""AOT pipeline: lower every L2 entry point to HLO **text** artifacts.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` and
+NOT a serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the Rust
+``xla`` crate) rejects (``proto.id() <= INT_MAX``).  The HLO text parser
+reassigns ids, so text round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage (normally via ``make artifacts``):
+
+    cd python && python -m compile.aot --out-dir ../artifacts [--configs a,b]
+
+Produces ``<config>.<prim>.hlo.txt`` per primitive plus ``manifest.json``
+describing shapes/param layout for the Rust runtime loader.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    MlpSpec,
+    make_cnf_entry_points,
+    make_entry_points,
+    param_count,
+)
+
+# ---------------------------------------------------------------------------
+# Experiment configs (DESIGN.md §6).  Batch sizes are CPU-scaled; the paper's
+# V100 values are noted in DESIGN.md substitution table.
+# ---------------------------------------------------------------------------
+
+CONFIGS = {
+    # quick: tiny everything — used by Rust integration tests and quickstart.
+    "quick_d8": dict(kind="mlp", dims=(9, 16, 8), act="tanh", time_dep=True,
+                     batch=4),
+    # classification ODE block (paper: SqueezeNext on CIFAR10, 4 ODE blocks,
+    # 199,800 params total; here 4 blocks x 50,296 = 201,184).
+    "clf_d64": dict(kind="mlp", dims=(65, 168, 168, 64), act="relu",
+                    time_dep=True, batch=128),
+    # tanh variant for the Fig.2 activation ablation.
+    "clf_d64_tanh": dict(kind="mlp", dims=(65, 168, 168, 64), act="tanh",
+                         time_dep=True, batch=128),
+    # CNF (FFJORD) surrogates of POWER / MINIBOONE / BSDS300 (d = 6/43/63).
+    "cnf_power": dict(kind="cnf", dims=(7, 64, 64, 6), act="tanh",
+                      time_dep=True, batch=512),
+    "cnf_miniboone": dict(kind="cnf", dims=(44, 256, 256, 43), act="tanh",
+                          time_dep=True, batch=256),
+    "cnf_bsds300": dict(kind="cnf", dims=(64, 256, 256, 256, 63), act="tanh",
+                        time_dep=True, batch=128),
+    # stiff Robertson task: autonomous RHS, 5 GELU hidden layers (Kim et al.).
+    "stiff_d3": dict(kind="mlp", dims=(3, 50, 50, 50, 50, 50, 3), act="gelu",
+                     time_dep=False, batch=1),
+}
+
+# Primitives that consume (u, theta, t, ...) — example args per suffix.
+def _example_args(cfg, spec: MlpSpec):
+    b = cfg["batch"]
+    d = spec.state_dim
+    p = param_count(spec.dims)
+    f32 = jnp.float32
+    u = jax.ShapeDtypeStruct((b, d), f32)
+    th = jax.ShapeDtypeStruct((p,), f32)
+    t = jax.ShapeDtypeStruct((1,), f32)
+    v = jax.ShapeDtypeStruct((b, d), f32)
+    if cfg["kind"] == "mlp":
+        return {
+            "f": (u, th, t),
+            "vjp_u": (u, th, t, v),
+            "vjp_both": (u, th, t, v),
+            "jvp": (u, th, t, v),
+        }
+    else:  # cnf
+        eps = jax.ShapeDtypeStruct((b, d), f32)
+        vl = jax.ShapeDtypeStruct((b, 1), f32)
+        return {
+            "faug": (u, th, t, eps),
+            "vjp_aug": (u, th, t, eps, v, vl),
+        }
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(name: str, cfg: dict, out_dir: str) -> dict:
+    """Lower all primitives of one config; return its manifest entry."""
+    spec = MlpSpec(dims=tuple(cfg["dims"]), act=cfg["act"],
+                   time_dep=cfg["time_dep"])
+    entries = (make_entry_points(spec) if cfg["kind"] == "mlp"
+               else make_cnf_entry_points(spec))
+    examples = _example_args(cfg, spec)
+    arts, shapes = {}, {}
+    for suffix, fn in entries.items():
+        args = examples[suffix]
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.{suffix}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        arts[suffix] = fname
+        shapes[suffix] = [list(a.shape) for a in args]
+        print(f"  {fname}: {len(text)} chars, args {shapes[suffix]}")
+    return {
+        "kind": cfg["kind"],
+        "dims": list(cfg["dims"]),
+        "act": cfg["act"],
+        "time_dep": cfg["time_dep"],
+        "batch": cfg["batch"],
+        "state_dim": spec.state_dim,
+        "param_count": param_count(spec.dims),
+        "artifacts": arts,
+        "arg_shapes": shapes,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default=None,
+                    help="comma-separated subset (default: all)")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for k, v in CONFIGS.items():
+            print(f"{k}: {v}")
+        return 0
+
+    names = list(CONFIGS) if args.configs is None else args.configs.split(",")
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": 1, "configs": {}}
+    for name in names:
+        if name not in CONFIGS:
+            print(f"unknown config {name!r}", file=sys.stderr)
+            return 1
+        print(f"[aot] lowering {name} ...")
+        manifest["configs"][name] = lower_config(name, CONFIGS[name], args.out_dir)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest with {len(manifest['configs'])} configs")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

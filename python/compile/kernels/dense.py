@@ -1,0 +1,152 @@
+"""L1 — fused dense layer as a Pallas kernel.
+
+The hot spot of a neural ODE is the RHS MLP evaluated N_t * N_s times per
+forward pass (and its VJP in every reverse step).  On the paper's V100 this
+is cuBLAS GEMM + separate bias/activation kernels; here we re-think it for a
+TPU-style memory hierarchy:
+
+  * the GEMM is tiled into (bm, bn, bk) blocks sized for the MXU systolic
+    array (128x128 native tile, capped to the actual problem shape),
+  * partial products accumulate in an f32 VMEM scratch accumulator,
+  * bias add + activation are fused into the epilogue of the last k-step so
+    the pre-activation never round-trips to HBM,
+  * BlockSpec index maps express the HBM->VMEM schedule that CUDA code
+    expresses with threadblock tiling.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO ops.  On a real TPU the same
+kernel compiles with interpret=False; DESIGN.md §8 estimates the VMEM
+footprint and MXU utilisation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+# Activation epilogues fused into the kernel. Keep in sync with ref.py and
+# the Rust-side `nn/activations.rs`.
+ACTIVATIONS = ("identity", "relu", "tanh", "gelu", "sigmoid")
+
+
+def _apply_act(x, act: str):
+    if act == "identity":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "tanh":
+        return jnp.tanh(x)
+    if act == "gelu":
+        # tanh-approximation GELU (matches Rust impl and the paper's usage
+        # of GELU for the stiff task).
+        c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+        return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+    if act == "sigmoid":
+        return jax.nn.sigmoid(x)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, act: str, nk: int):
+    """One (bm, bn) output tile; grid axis 2 walks the k blocks."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU-shaped partial product, accumulated in f32 scratch.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k_step == nk - 1)
+    def _epilogue():
+        y = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        o_ref[...] = _apply_act(y, act).astype(o_ref.dtype)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest block <= target for the M/N axes (partial blocks are cropped)."""
+    return min(dim, target)
+
+
+def _pick_block_k(dim: int, target: int) -> int:
+    """K-axis block: MUST divide the dimension.
+
+    The k axis is a reduction: a partial trailing block would fold padded
+    (undefined) values into the accumulator, so we take the largest divisor
+    of ``dim`` not exceeding ``target``.  If the best divisor is tiny (prime
+    widths), fall back to the whole axis — a single resident slab is still
+    well within VMEM for the MLP widths used here (<= 512).
+    """
+    if dim <= target:
+        return dim
+    best = 1
+    for cand in range(1, target + 1):
+        if dim % cand == 0:
+            best = cand
+    return best if best >= 16 else dim
+
+
+@functools.partial(
+    jax.jit, static_argnames=("act", "bm", "bn", "bk", "interpret")
+)
+def dense(x, w, b, *, act: str = "identity", bm: int = 128, bn: int = 128,
+          bk: int = 128, interpret: bool = True):
+    """Fused ``act(x @ w + b)`` as a tiled Pallas kernel.
+
+    Args:
+      x: ``[M, K]`` input activations.
+      w: ``[K, N]`` weights.
+      b: ``[N]`` bias.
+      act: epilogue activation name (see ``ACTIVATIONS``).
+      bm/bn/bk: tile sizes (capped to the problem shape).
+      interpret: must stay True for CPU PJRT execution.
+
+    Returns:
+      ``[M, N]`` output, same dtype as ``x``.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {w.shape}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    bm_ = _pick_block(m, bm)
+    bn_ = _pick_block(n, bn)
+    bk_ = _pick_block_k(k, bk)
+    nk = _ceil_div(k, bk_)
+
+    grid = (_ceil_div(m, bm_), _ceil_div(n, bn_), nk)
+
+    return pl.pallas_call(
+        functools.partial(_dense_kernel, act=act, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bn_,), lambda i, j, s: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        # f32 accumulator tile held in VMEM across the k loop.
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=interpret,
+    )(x, w, b)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency of one grid step (DESIGN.md §8)."""
+    x_tile = bm * bk * dtype_bytes
+    w_tile = bk * bn * dtype_bytes
+    o_tile = bm * bn * dtype_bytes
+    acc = bm * bn * 4  # f32 accumulator
+    bias = bn * dtype_bytes
+    return x_tile + w_tile + o_tile + acc + bias

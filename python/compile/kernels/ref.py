@@ -1,0 +1,42 @@
+"""Pure-jnp correctness oracle for the Pallas kernels.
+
+Everything here is deliberately the most boring possible jnp code; the
+pytest suite (``python/tests/test_kernel.py``) sweeps shapes/dtypes with
+hypothesis and asserts allclose between ``kernels.dense.dense`` and
+``dense_ref``, and between the full Pallas-backed MLP and ``mlp_ref``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_act_ref(x, act: str):
+    if act == "identity":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "tanh":
+        return jnp.tanh(x)
+    if act == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+        return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+    if act == "sigmoid":
+        return jax.nn.sigmoid(x)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def dense_ref(x, w, b, *, act: str = "identity"):
+    """Reference ``act(x @ w + b)``."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    return apply_act_ref(y, act).astype(x.dtype)
+
+
+def mlp_ref(params, x, *, act: str, out_act: str = "identity"):
+    """Reference MLP given a list of (w, b) pairs."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        a = act if i < len(params) - 1 else out_act
+        h = dense_ref(h, w, b, act=a)
+    return h

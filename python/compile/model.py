@@ -1,0 +1,338 @@
+"""L2 — the paper's compute graph in JAX, calling the L1 Pallas kernels.
+
+The high-level-AD primitive of PNODE is the neural-ODE right-hand side
+
+    f(u, theta, t)  with  u in R^{BxD},  theta in R^{P} (flat),  t in R^{1}
+
+together with the derivative actions the discrete adjoint and the implicit
+solvers need:
+
+  * ``f``            — forward evaluation (one NFE),
+  * ``vjp_u``        — v^T df/du           (transposed Jacobian-vector product),
+  * ``vjp_both``     — (v^T df/du, v^T df/dtheta) fused in one executable so
+                       the forward pass inside the VJP is shared,
+  * ``jvp``          — (df/du) w           (matrix action for Newton-GMRES).
+
+Everything is lowered once by ``aot.py`` into HLO text artifacts; the Rust
+coordinator (L3) loads them through PJRT and owns the time loop, the adjoint
+sweep, checkpointing, and the optimizer.  Python never runs at train time.
+
+AD note: this jax version cannot reverse-differentiate *through* a
+``pallas_call``, so the VJP/JVP of the MLP are hand-rolled at the layer level
+(manual backprop), with the Pallas GEMM kernel used for every matmul in both
+the forward and the backward graph.  This mirrors the paper's own layering:
+the high-level adjoint composes manually-derived local derivatives.  The
+pure-jnp reference path (``use_pallas=False``) uses jax.vjp/jax.jvp and is
+the oracle the manual derivatives are tested against.  CNF augmented
+dynamics need second-order AD (gradient of a Hutchinson JVP), so CNF configs
+lower through the reference path (documented in DESIGN.md §2).
+
+Parameter layout (MUST match rust/src/nn/init.rs): for each layer l with
+weight W_l in R^{din x dout} (row-major) followed by bias b_l in R^{dout},
+concatenated over layers into a single flat f32 vector.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense as dense_kernel
+from .kernels import ref as kernel_ref
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MlpSpec:
+    """Architecture of the RHS MLP.
+
+    dims: layer widths [d_in, h1, ..., d_out]. If ``time_dep`` the network
+    input is concat([u, t]) so d_in == D + 1, else d_in == D.
+    """
+
+    dims: Tuple[int, ...]
+    act: str = "tanh"
+    out_act: str = "identity"
+    time_dep: bool = True
+    use_pallas: bool = True
+
+    @property
+    def state_dim(self) -> int:
+        return self.dims[-1]
+
+    @property
+    def in_dim(self) -> int:
+        return self.dims[0]
+
+
+def param_count(dims: Sequence[int]) -> int:
+    return sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+
+
+def unflatten_params(theta, dims: Sequence[int]):
+    """Slice the flat parameter vector into [(W, b), ...] per the layout."""
+    params = []
+    off = 0
+    for i in range(len(dims) - 1):
+        din, dout = dims[i], dims[i + 1]
+        w = theta[off:off + din * dout].reshape(din, dout)
+        off += din * dout
+        b = theta[off:off + dout]
+        off += dout
+        params.append((w, b))
+    return params
+
+
+def flatten_params(params) -> jnp.ndarray:
+    return jnp.concatenate([jnp.concatenate([w.reshape(-1), b]) for w, b in params])
+
+
+def init_params(key, dims: Sequence[int], scale: float = 1.0) -> jnp.ndarray:
+    """Kaiming-uniform init, mirrored by rust/src/nn/init.rs for cross-checks."""
+    parts = []
+    for i in range(len(dims) - 1):
+        din, dout = dims[i], dims[i + 1]
+        key, k1, k2 = jax.random.split(key, 3)
+        bound = scale * (1.0 / din) ** 0.5
+        parts.append(jax.random.uniform(k1, (din * dout,), minval=-bound, maxval=bound))
+        parts.append(jax.random.uniform(k2, (dout,), minval=-bound, maxval=bound))
+    return jnp.concatenate(parts).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Activations and their derivatives (from the pre-activation)
+# ---------------------------------------------------------------------------
+
+def act_apply(x, act: str):
+    return kernel_ref.apply_act_ref(x, act)
+
+
+def act_grad(pre, act: str):
+    """d act / d pre, evaluated elementwise at the pre-activation."""
+    if act == "identity":
+        return jnp.ones_like(pre)
+    if act == "relu":
+        return (pre > 0).astype(pre.dtype)
+    if act == "tanh":
+        y = jnp.tanh(pre)
+        return 1.0 - y * y
+    if act == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi).astype(pre.dtype)
+        inner = c * (pre + 0.044715 * pre ** 3)
+        th = jnp.tanh(inner)
+        sech2 = 1.0 - th * th
+        dinner = c * (1.0 + 3.0 * 0.044715 * pre * pre)
+        return 0.5 * (1.0 + th) + 0.5 * pre * sech2 * dinner
+    if act == "sigmoid":
+        y = jax.nn.sigmoid(pre)
+        return y * (1.0 - y)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+# ---------------------------------------------------------------------------
+# GEMM dispatch: Pallas kernel on the production path, jnp on the ref path
+# ---------------------------------------------------------------------------
+
+def _matmul(a, b, use_pallas: bool):
+    """a @ b through the Pallas kernel (identity epilogue, zero bias)."""
+    if use_pallas:
+        zero_bias = jnp.zeros((b.shape[1],), dtype=a.dtype)
+        return dense_kernel.dense(a, b, zero_bias, act="identity")
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def _dense_fused(x, w, b, act: str, use_pallas: bool):
+    if use_pallas:
+        return dense_kernel.dense(x, w, b, act=act)
+    return kernel_ref.dense_ref(x, w, b, act=act)
+
+
+# ---------------------------------------------------------------------------
+# MLP forward / manual VJP / manual JVP
+# ---------------------------------------------------------------------------
+
+def _layer_acts(spec: MlpSpec):
+    n = len(spec.dims) - 1
+    return [spec.act if i < n - 1 else spec.out_act for i in range(n)]
+
+
+def mlp_apply(spec: MlpSpec, theta, x):
+    """Apply the MLP to ``x`` [B, d_in]; fused dense kernels, no caches."""
+    params = unflatten_params(theta, spec.dims)
+    h = x
+    for (w, b), a in zip(params, _layer_acts(spec)):
+        h = _dense_fused(h, w, b, a, spec.use_pallas)
+    return h
+
+
+def _mlp_forward_cached(spec: MlpSpec, theta, x):
+    """Forward keeping per-layer inputs and pre-activations (for manual AD).
+
+    Pre-activations come from the Pallas GEMM; the activation is applied
+    outside the kernel here (XLA fuses it), because the backward needs
+    ``pre`` explicitly.
+    """
+    params = unflatten_params(theta, spec.dims)
+    h = x
+    xs, pres = [], []
+    for (w, b), a in zip(params, _layer_acts(spec)):
+        xs.append(h)
+        pre = _matmul(h, w, spec.use_pallas) + b
+        pres.append(pre)
+        h = act_apply(pre, a)
+    return h, xs, pres
+
+
+def mlp_vjp(spec: MlpSpec, theta, x, v, *, wrt_theta: bool = True):
+    """Manual reverse pass: returns (gx, gtheta_flat or None).
+
+    Standard layer-level backprop:
+        gpre = g * act'(pre);  gx = gpre @ W^T;  gW = x^T @ gpre;
+        gb = sum_rows(gpre)
+    with every matmul dispatched to the Pallas kernel.
+    """
+    params = unflatten_params(theta, spec.dims)
+    _, xs, pres = _mlp_forward_cached(spec, theta, x)
+    acts = _layer_acts(spec)
+    g = v
+    gparams = [None] * len(params)
+    for i in range(len(params) - 1, -1, -1):
+        w, _ = params[i]
+        gpre = g * act_grad(pres[i], acts[i])
+        if wrt_theta:
+            gw = _matmul(xs[i].T, gpre, spec.use_pallas)
+            gb = jnp.sum(gpre, axis=0)
+            gparams[i] = (gw, gb)
+        g = _matmul(gpre, w.T, spec.use_pallas)
+    gtheta = flatten_params(gparams) if wrt_theta else None
+    return g, gtheta
+
+
+def mlp_jvp(spec: MlpSpec, theta, x, dx):
+    """Manual forward-mode tangent wrt the input only: returns dy."""
+    params = unflatten_params(theta, spec.dims)
+    _, xs, pres = _mlp_forward_cached(spec, theta, x)
+    acts = _layer_acts(spec)
+    d = dx
+    for i, (w, _) in enumerate(params):
+        dpre = _matmul(d, w, spec.use_pallas)
+        d = dpre * act_grad(pres[i], acts[i])
+    return d
+
+
+# ---------------------------------------------------------------------------
+# RHS f(u, theta, t) and its derivative actions
+# ---------------------------------------------------------------------------
+
+def _augment_time(spec: MlpSpec, u, t):
+    if spec.time_dep:
+        tcol = jnp.broadcast_to(t.reshape(1, 1), (u.shape[0], 1)).astype(u.dtype)
+        return jnp.concatenate([u, tcol], axis=1)
+    return u
+
+
+def f_rhs(spec: MlpSpec, u, theta, t):
+    """The neural-ODE RHS: u [B, D], theta [P], t [1] -> du/dt [B, D]."""
+    return mlp_apply(spec, theta, _augment_time(spec, u, t))
+
+
+def f_vjp_u(spec: MlpSpec, u, theta, t, v):
+    """v^T df/du — the core primitive of the discrete adjoint (and GMRES^T)."""
+    if spec.use_pallas:
+        gx, _ = mlp_vjp(spec, theta, _augment_time(spec, u, t), v,
+                        wrt_theta=False)
+        return gx[:, :spec.state_dim] if spec.time_dep else gx
+    _, pull = jax.vjp(lambda uu: f_rhs(spec, uu, theta, t), u)
+    return pull(v)[0]
+
+
+def f_vjp_both(spec: MlpSpec, u, theta, t, v):
+    """(v^T df/du, v^T df/dtheta) with one shared forward."""
+    if spec.use_pallas:
+        gx, gth = mlp_vjp(spec, theta, _augment_time(spec, u, t), v,
+                          wrt_theta=True)
+        gu = gx[:, :spec.state_dim] if spec.time_dep else gx
+        return gu, gth
+    _, pull = jax.vjp(lambda uu, th: f_rhs(spec, uu, th, t), u, theta)
+    return pull(v)
+
+
+def f_jvp(spec: MlpSpec, u, theta, t, w):
+    """(df/du) w — matrix-free Newton/GMRES action for implicit steps."""
+    if spec.use_pallas:
+        if spec.time_dep:
+            zcol = jnp.zeros((u.shape[0], 1), dtype=u.dtype)
+            dx = jnp.concatenate([w, zcol], axis=1)
+        else:
+            dx = w
+        return mlp_jvp(spec, theta, _augment_time(spec, u, t), dx)
+    _, tangent = jax.jvp(lambda uu: f_rhs(spec, uu, theta, t), (u,), (w,))
+    return tangent
+
+
+# ---------------------------------------------------------------------------
+# CNF (FFJORD) augmented dynamics — reference path (needs 2nd-order AD)
+# ---------------------------------------------------------------------------
+#
+# d/dt [x, logp] = [f(x, theta, t), -tr(df/dx)]
+# with the trace estimated by Hutchinson:  tr(J) ~= eps^T J eps,
+# eps a fixed Rademacher sample per iteration (drawn by the Rust side).
+
+def _ref_spec(spec: MlpSpec) -> MlpSpec:
+    return MlpSpec(spec.dims, spec.act, spec.out_act, spec.time_dep,
+                   use_pallas=False)
+
+
+def f_aug(spec: MlpSpec, x, theta, t, eps):
+    """Augmented CNF dynamics.  Returns (dx [B, D], dlogp [B, 1])."""
+    rspec = _ref_spec(spec)
+
+    def fx(xx):
+        return f_rhs(rspec, xx, theta, t)
+
+    dx, jvp_eps = jax.jvp(fx, (x,), (eps,))
+    # eps^T J eps summed over feature dim -> per-sample trace estimate.
+    tr = jnp.sum(eps * jvp_eps, axis=1, keepdims=True)
+    return dx, -tr
+
+
+def f_aug_vjp(spec: MlpSpec, x, theta, t, eps, vx, vlogp):
+    """VJP of the augmented dynamics wrt (x, theta), fused.
+
+    vx [B, D], vlogp [B, 1] are the cotangents of (dx, dlogp).
+    Returns (gx [B, D], gtheta [P]).
+    """
+    _, pull = jax.vjp(lambda xx, th: f_aug(spec, xx, th, t, eps), x, theta)
+    gx, gth = pull((vx, vlogp))
+    return gx, gth
+
+
+# ---------------------------------------------------------------------------
+# Entry points lowered by aot.py (one jitted callable per artifact)
+# ---------------------------------------------------------------------------
+
+def make_entry_points(spec: MlpSpec):
+    """Return {artifact_suffix: callable} for one MLP config.
+
+    All callables return tuples (lowered with return_tuple=True) so the Rust
+    side can uniformly unwrap tuple outputs.
+    """
+    return {
+        "f": lambda u, th, t: (f_rhs(spec, u, th, t),),
+        "vjp_u": lambda u, th, t, v: (f_vjp_u(spec, u, th, t, v),),
+        "vjp_both": lambda u, th, t, v: f_vjp_both(spec, u, th, t, v),
+        "jvp": lambda u, th, t, w: (f_jvp(spec, u, th, t, w),),
+    }
+
+
+def make_cnf_entry_points(spec: MlpSpec):
+    return {
+        "faug": lambda x, th, t, e: f_aug(spec, x, th, t, e),
+        "vjp_aug": lambda x, th, t, e, vx, vl: f_aug_vjp(spec, x, th, t, e, vx, vl),
+    }

@@ -1,0 +1,64 @@
+"""AOT pipeline smoke tests: lowering, manifest integrity, HLO text format."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import CONFIGS, lower_config
+from compile.model import param_count
+
+
+def test_all_configs_well_formed():
+    for name, cfg in CONFIGS.items():
+        dims = cfg["dims"]
+        d = dims[-1]
+        expected_in = d + 1 if cfg["time_dep"] else d
+        assert dims[0] == expected_in, f"{name}: in dim {dims[0]} != {expected_in}"
+        assert cfg["kind"] in ("mlp", "cnf")
+        assert cfg["batch"] >= 1
+
+
+def test_classification_parameter_budget_matches_paper():
+    """Paper: 4 ODE blocks, 199,800 trainable params total. Ours: 201,184."""
+    per_block = param_count(CONFIGS["clf_d64"]["dims"])
+    total = 4 * per_block
+    assert abs(total - 199_800) / 199_800 < 0.02
+
+
+def test_lower_quick_config(tmp_path):
+    entry = lower_config("quick_d8", CONFIGS["quick_d8"], str(tmp_path))
+    # all four primitives emitted
+    assert set(entry["artifacts"]) == {"f", "vjp_u", "vjp_both", "jvp"}
+    for suffix, fname in entry["artifacts"].items():
+        path = tmp_path / fname
+        assert path.exists()
+        text = path.read_text()
+        assert text.startswith("HloModule"), f"{suffix} not HLO text"
+        # 64-bit-id proto pitfall: text must be parseable => ids reassigned
+        assert "ENTRY" in text
+    assert entry["param_count"] == param_count((9, 16, 8))
+    assert entry["arg_shapes"]["f"] == [[4, 8], [entry["param_count"]], [1]]
+
+
+def test_lower_cnf_config(tmp_path):
+    cfg = dict(CONFIGS["cnf_power"])
+    cfg["batch"] = 8  # shrink for test speed
+    entry = lower_config("cnf_tiny", cfg, str(tmp_path))
+    assert set(entry["artifacts"]) == {"faug", "vjp_aug"}
+    shapes = entry["arg_shapes"]["vjp_aug"]
+    assert shapes == [[8, 6], [entry["param_count"]], [1], [8, 6], [8, 6], [8, 1]]
+
+
+def test_manifest_written(tmp_path):
+    import subprocess, sys
+    env = dict(os.environ)
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+         "--configs", "quick_d8"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True, text=True, env=env)
+    assert out.returncode == 0, out.stderr
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    assert "quick_d8" in manifest["configs"]

@@ -1,0 +1,176 @@
+"""L2 correctness: RHS, VJP/JVP primitives, CNF augmented dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    MlpSpec,
+    f_aug,
+    f_aug_vjp,
+    f_jvp,
+    f_rhs,
+    f_vjp_both,
+    f_vjp_u,
+    flatten_params,
+    init_params,
+    param_count,
+    unflatten_params,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+SPEC = MlpSpec(dims=(5, 8, 4), act="tanh", time_dep=True)
+SPEC_AUTON = MlpSpec(dims=(3, 10, 3), act="gelu", time_dep=False)
+
+
+def _ref(spec):
+    """Pure-jnp twin of a spec — the jax-AD oracle path."""
+    return MlpSpec(spec.dims, spec.act, spec.out_act, spec.time_dep,
+                   use_pallas=False)
+
+
+def _setup(spec, b=3, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    theta = init_params(k1, spec.dims)
+    u = jax.random.normal(k2, (b, spec.state_dim), dtype=jnp.float32)
+    t = jnp.array([0.3], dtype=jnp.float32)
+    return u, theta, t
+
+
+def test_param_count_and_roundtrip():
+    dims = (65, 168, 168, 64)
+    assert param_count(dims) == 50296  # paper budget: 4 blocks = 201,184
+    key = jax.random.PRNGKey(0)
+    theta = init_params(key, dims)
+    assert theta.shape == (50296,)
+    back = flatten_params(unflatten_params(theta, dims))
+    np.testing.assert_array_equal(theta, back)
+
+
+@pytest.mark.parametrize("spec,b", [(SPEC, 3), (SPEC_AUTON, 1)])
+def test_rhs_shapes(spec, b):
+    u, theta, t = _setup(spec, b)
+    out = f_rhs(spec, u, theta, t)
+    assert out.shape == (b, spec.state_dim)
+    assert out.dtype == jnp.float32
+
+
+def test_pallas_and_ref_paths_agree():
+    spec_p = MlpSpec(dims=(5, 8, 4), act="tanh", time_dep=True, use_pallas=True)
+    spec_r = MlpSpec(dims=(5, 8, 4), act="tanh", time_dep=True, use_pallas=False)
+    u, theta, t = _setup(spec_p)
+    np.testing.assert_allclose(
+        f_rhs(spec_p, u, theta, t), f_rhs(spec_r, u, theta, t),
+        rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_vjp_u_matches_grad(seed):
+    u, theta, t = _setup(SPEC, seed=seed % 7)
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.normal(key, u.shape, dtype=jnp.float32)
+    got = f_vjp_u(SPEC, u, theta, t, v)  # manual backprop + Pallas GEMMs
+    want = jax.grad(lambda uu: jnp.vdot(f_rhs(_ref(SPEC), uu, theta, t), v))(u)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_vjp_both_matches_separate(seed):
+    u, theta, t = _setup(SPEC, seed=seed % 5)
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.normal(key, u.shape, dtype=jnp.float32)
+    gu, gth = f_vjp_both(SPEC, u, theta, t, v)
+    want_u = f_vjp_u(SPEC, u, theta, t, v)
+    want_th = jax.grad(lambda th: jnp.vdot(f_rhs(_ref(SPEC), u, th, t), v))(theta)
+    np.testing.assert_allclose(gu, want_u, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(gth, want_th, rtol=1e-5, atol=1e-6)
+
+
+def test_jvp_matches_jax_jvp_and_fd():
+    u, theta, t = _setup(SPEC)
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, u.shape, dtype=jnp.float32)
+    got = f_jvp(SPEC, u, theta, t, w)  # manual tangent + Pallas GEMMs
+    _, want = jax.jvp(lambda uu: f_rhs(_ref(SPEC), uu, theta, t), (u,), (w,))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    h = 1e-3
+    fd = (f_rhs(SPEC, u + h * w, theta, t) - f_rhs(SPEC, u - h * w, theta, t)) / (2 * h)
+    np.testing.assert_allclose(got, fd, rtol=1e-2, atol=1e-3)
+
+
+def test_jvp_vjp_duality():
+    """<v, J w> == <J^T v, w> to machine precision."""
+    u, theta, t = _setup(SPEC)
+    key = jax.random.PRNGKey(4)
+    k1, k2 = jax.random.split(key)
+    w = jax.random.normal(k1, u.shape, dtype=jnp.float32)
+    v = jax.random.normal(k2, u.shape, dtype=jnp.float32)
+    lhs = jnp.vdot(v, f_jvp(SPEC, u, theta, t, w))
+    rhs = jnp.vdot(f_vjp_u(SPEC, u, theta, t, v), w)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# CNF augmented dynamics
+# ---------------------------------------------------------------------------
+
+CNF_SPEC = MlpSpec(dims=(5, 16, 4), act="tanh", time_dep=True)
+
+
+def test_aug_dx_equals_plain_rhs():
+    u, theta, t = _setup(CNF_SPEC, b=4)
+    key = jax.random.PRNGKey(5)
+    eps = jnp.sign(jax.random.normal(key, u.shape)).astype(jnp.float32)
+    dx, _ = f_aug(CNF_SPEC, u, theta, t, eps)
+    np.testing.assert_allclose(dx, f_rhs(CNF_SPEC, u, theta, t),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_hutchinson_unbiased_for_exact_trace():
+    """E_eps[eps^T J eps] == tr(J); with D=4 average over many Rademacher
+    draws converges; also check the exact identity for a full +/-1 basis."""
+    u, theta, t = _setup(CNF_SPEC, b=2, seed=9)
+    jac = jax.jacfwd(lambda uu: f_rhs(_ref(CNF_SPEC), uu, theta, t))(u)
+    # jac: [B, D, B, D]; per-sample trace of the diagonal block.
+    d = u.shape[1]
+    exact = jnp.stack([jnp.trace(jac[i, :, i, :]) for i in range(u.shape[0])])
+
+    key = jax.random.PRNGKey(10)
+    n_draws = 4096
+    eps = jnp.sign(jax.random.normal(key, (n_draws,) + u.shape)).astype(jnp.float32)
+
+    @jax.jit
+    def estimate(all_eps):
+        def one(e):
+            _, dlp = f_aug(CNF_SPEC, u, theta, t, e)
+            return -dlp[:, 0]
+        return jnp.mean(jax.vmap(one)(all_eps), axis=0)
+
+    est = estimate(eps)
+    np.testing.assert_allclose(est, exact, rtol=0.15, atol=0.05)
+
+
+def test_aug_vjp_matches_grad():
+    u, theta, t = _setup(CNF_SPEC, b=3, seed=11)
+    key = jax.random.PRNGKey(12)
+    k1, k2, k3 = jax.random.split(key, 3)
+    eps = jnp.sign(jax.random.normal(k1, u.shape)).astype(jnp.float32)
+    vx = jax.random.normal(k2, u.shape, dtype=jnp.float32)
+    vl = jax.random.normal(k3, (u.shape[0], 1), dtype=jnp.float32)
+
+    gx, gth = f_aug_vjp(CNF_SPEC, u, theta, t, eps, vx, vl)
+
+    def scalar(uu, th):
+        dx, dlp = f_aug(CNF_SPEC, uu, th, t, eps)
+        return jnp.vdot(dx, vx) + jnp.vdot(dlp, vl)
+
+    want_x = jax.grad(scalar, argnums=0)(u, theta)
+    want_th = jax.grad(scalar, argnums=1)(u, theta)
+    np.testing.assert_allclose(gx, want_x, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gth, want_th, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,112 @@
+//! Fig. 2 regeneration (shape): training/test accuracy of the ODE-block
+//! classifier with discrete vs continuous adjoint across schemes, with
+//! ReLU dynamics (the irreversibility that breaks the continuous adjoint).
+//! Also prints the Prop.-1 discrepancy decay table (`--prop1` content).
+
+use pnode::bench::Table;
+use pnode::checkpoint::CheckpointPolicy;
+use pnode::data::spiral::SpiralDataset;
+use pnode::methods::{method_by_name, BlockSpec, GradientMethod, Pnode};
+use pnode::nn::{Act, Adam, Optimizer};
+use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::tableau::Scheme;
+use pnode::tasks::ClassificationTask;
+use pnode::testing::prop;
+use pnode::util::rng::Rng;
+
+const D: usize = 16;
+const B: usize = 64;
+
+fn train_once(method: &str, scheme: Scheme, steps: usize) -> (f64, f64) {
+    let mut rng = Rng::new(77);
+    let dims = vec![D + 1, 32, D];
+    let p = pnode::nn::param_count(&dims);
+    let dims_i = dims.clone();
+    let name = method.to_string();
+    let mut task = ClassificationTask::new(
+        &mut rng,
+        2,
+        BlockSpec::new(scheme, 1), // paper Fig. 2: one time step
+        p,
+        D,
+        4,
+        move |r| pnode::nn::init::kaiming_uniform(r, &dims_i, 1.0),
+        move || method_by_name(&name).unwrap(),
+    );
+    let mut rhs = MlpRhs::new(dims, Act::Relu, true, B, task.block_theta(0).to_vec());
+    let ds = SpiralDataset::generate(&mut rng, 300, 4, D);
+    let (train, test) = ds.split(0.9);
+    let mut opt = Adam::new(task.theta.len(), 3e-3);
+    let mut x = vec![0.0f32; B * D];
+    let mut y = vec![0usize; B];
+    let mut train_acc = 0.0;
+    for it in 0..steps {
+        train.fill_batch(it * B, B, &mut x, &mut y);
+        let res = task.grad_step(&mut rhs, B, &x, &y, 0.05);
+        train_acc = res.accuracy;
+        let g = res.grad;
+        task.apply_grad(&mut opt as &mut dyn Optimizer, &g);
+    }
+    let mut xt = vec![0.0f32; B * D];
+    let mut yt = vec![0usize; B];
+    test.fill_batch(0, B, &mut xt, &mut yt);
+    let (_, test_acc) = task.evaluate(&mut rhs, B, &xt, &yt);
+    (train_acc, test_acc)
+}
+
+fn main() {
+    let steps = if std::env::var("PNODE_BENCH_FULL").is_ok() { 250 } else { 80 };
+
+    let mut table = Table::new(
+        "Fig. 2 — accuracy with one time step, ReLU dynamics",
+        &["scheme", "method", "train acc", "test acc"],
+    );
+    for scheme in [Scheme::Euler, Scheme::Midpoint, Scheme::Rk4, Scheme::Dopri5] {
+        for method in ["pnode", "cont"] {
+            let (tr, te) = train_once(method, scheme, steps);
+            table.row(vec![
+                scheme.name().into(),
+                method.into(),
+                format!("{tr:.3}"),
+                format!("{te:.3}"),
+            ]);
+        }
+    }
+    table.print();
+
+    // Prop. 1: ||λ_cont − λ_disc|| decays ~O(h) accumulated
+    let mut t2 = Table::new(
+        "Prop. 1 — continuous-vs-discrete adjoint discrepancy (Euler)",
+        &["N_t", "rel-l2(λ_cont, λ_disc)"],
+    );
+    let dims = vec![5, 12, 4];
+    let mut rng = Rng::new(99);
+    let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.5);
+    let rhs = MlpRhs::new(dims, Act::Tanh, true, 2, theta);
+    let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
+    let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
+    let mut prev = f64::INFINITY;
+    for nt in [4usize, 8, 16, 32, 64] {
+        let spec = BlockSpec::new(Scheme::Euler, nt);
+        let mut disc = Pnode::new(CheckpointPolicy::All);
+        disc.forward(&rhs, &spec, &u0);
+        let mut l_d = w.clone();
+        let mut g = vec![0.0f32; rhs.param_len()];
+        disc.backward(&rhs, &spec, &mut l_d, &mut g);
+        let mut cont = method_by_name("cont").unwrap();
+        cont.forward(&rhs, &spec, &u0);
+        let mut l_c = w.clone();
+        let mut g2 = vec![0.0f32; rhs.param_len()];
+        cont.backward(&rhs, &spec, &mut l_c, &mut g2);
+        let gap = pnode::testing::rel_l2(&l_c, &l_d);
+        t2.row(vec![nt.to_string(), format!("{gap:.3e}")]);
+        assert!(gap < prev * 1.05, "discrepancy must decay");
+        prev = gap;
+    }
+    t2.print();
+    println!(
+        "\nExpected shape: discrete adjoint (pnode) reaches higher accuracy\n\
+         than the continuous adjoint with ReLU + low-accuracy schemes; the\n\
+         Prop.-1 gap shrinks as h -> 0."
+    );
+}

@@ -1,0 +1,95 @@
+//! Fig. 3 regeneration: memory and time-per-epoch as functions of N_t for
+//! (scheme × method), on the paper-sized classification model
+//! (dims 65-168-168-64, batch 128).  Memory columns come from the Table-2
+//! model (V100 semantics, +0.4 GB CUDA constant); time is measured on this
+//! testbed.  `PNODE_BENCH_FULL=1` widens the sweep.
+
+use pnode::bench::Table;
+use pnode::coordinator::Runner;
+use pnode::methods::{method_by_name, BlockSpec, MemModel};
+use pnode::nn::Act;
+use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::tableau::Scheme;
+use pnode::util::rng::Rng;
+
+fn main() {
+    let full = std::env::var("PNODE_BENCH_FULL").is_ok();
+    let schemes: Vec<Scheme> = if full {
+        vec![Scheme::Euler, Scheme::Midpoint, Scheme::Bosh3, Scheme::Rk4, Scheme::Dopri5]
+    } else {
+        vec![Scheme::Euler, Scheme::Rk4, Scheme::Dopri5]
+    };
+    let nts: Vec<usize> = if full { vec![1, 3, 5, 7, 9, 11] } else { vec![2, 5, 11] };
+    let methods = ["naive", "cont", "anode", "aca", "pnode", "pnode2"];
+
+    const D: usize = 64;
+    const B: usize = 128;
+    let dims = vec![D + 1, 168, 168, D];
+    let mut rng = Rng::new(3);
+    let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+    let rhs = MlpRhs::new(dims.clone(), Act::Relu, true, B, theta);
+    let mut u0 = vec![0.0f32; rhs.state_len()];
+    rng.fill_normal(&mut u0);
+    let lambda0 = vec![1.0f32; rhs.state_len()];
+    let nb = 4u64; // paper: 4 ODE blocks
+
+    let act_bytes = rhs.activation_bytes_per_eval();
+    let mut runner = Runner::new("fig3_sweep");
+    let mut table = Table::new(
+        "Fig. 3 — memory & time vs N_t (4 blocks modeled, 1 block measured)",
+        &["scheme", "N_t", "method", "model GB", "time/grad (s)", "NFE f/b"],
+    );
+
+    for &scheme in &schemes {
+        let s = scheme.tableau().s as u64;
+        for &nt in &nts {
+            let mm = MemModel {
+                act_bytes,
+                state_bytes: (B * D * 4) as u64,
+                param_bytes: (rhs.param_len() * 4) as u64,
+                n_stages: s,
+                nt: nt as u64,
+                nb,
+            };
+            for method in methods {
+                let model_mem = mm.by_method(method).unwrap();
+                let spec = BlockSpec::new(scheme, nt);
+                let row = runner.run_job(
+                    "spiral_clf",
+                    method,
+                    scheme.name(),
+                    nt,
+                    model_mem,
+                    || {
+                        let mut m = method_by_name(method).unwrap();
+                        m.forward(&rhs, &spec, &u0);
+                        let mut l = lambda0.clone();
+                        let mut g = vec![0.0f32; rhs.param_len()];
+                        m.backward(&rhs, &spec, &mut l, &mut g);
+                        m.report()
+                    },
+                );
+                let oom = model_mem > 32 * (1u64 << 30);
+                table.row(vec![
+                    scheme.name().into(),
+                    nt.to_string(),
+                    method.into(),
+                    if oom {
+                        format!("OOM ({:.1})", MemModel::gb(model_mem))
+                    } else {
+                        format!("{:.3}", MemModel::gb(model_mem))
+                    },
+                    format!("{:.3}", row.time_secs),
+                    format!("{}/{}", row.nfe_forward, row.nfe_backward),
+                ]);
+            }
+        }
+    }
+    table.print();
+    let path = runner.save().expect("save results");
+    println!("\nrows saved to {path:?} (total {:.1}s)", runner.elapsed_secs());
+    println!(
+        "Expected shape: PNODE has the slowest memory growth among\n\
+         reverse-accurate methods and the fastest time; naive grows steepest."
+    );
+}

@@ -1,0 +1,115 @@
+//! Hot-path microbenchmarks (the §Perf profile base): ERK step, adjoint
+//! step, VJP through the pure-Rust MLP and (if built) the XLA artifacts,
+//! GMRES iteration, checkpoint store ops.
+
+use pnode::adjoint::discrete_erk::{adjoint_erk_step, AdjointErkWorkspace};
+use pnode::bench::bench_fn;
+use pnode::linalg::gmres::{gmres, GmresOptions};
+use pnode::nn::Act;
+use pnode::ode::erk::{erk_step, ErkWorkspace};
+use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::tableau;
+use pnode::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    // paper-scale RHS: 65-168-168-64, batch 128
+    let dims = vec![65, 168, 168, 64];
+    let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+    let rhs = MlpRhs::new(dims, Act::Relu, true, 128, theta);
+    let n = rhs.state_len();
+    let mut u = vec![0.0f32; n];
+    rng.fill_normal(&mut u);
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v);
+    let mut out = vec![0.0f32; n];
+    let mut gt = vec![0.0f32; rhs.param_len()];
+
+    println!("{}", bench_fn("mlp.f (B=128, 65-168-168-64)", 2, 10, || {
+        rhs.f(0.3, &u, &mut out);
+    }).summary());
+    println!("{}", bench_fn("mlp.vjp_both", 2, 10, || {
+        rhs.vjp_both(0.3, &u, &v, &mut out, &mut gt);
+    }).summary());
+    println!("{}", bench_fn("mlp.jvp", 2, 10, || {
+        rhs.jvp(0.3, &u, &v, &mut out);
+    }).summary());
+
+    let tab = &tableau::DOPRI5;
+    let mut ks: Vec<Vec<f32>> = (0..tab.s).map(|_| vec![0.0f32; n]).collect();
+    let mut un = vec![0.0f32; n];
+    let mut ews = ErkWorkspace::new(n);
+    println!("{}", bench_fn("erk_step dopri5", 2, 10, || {
+        erk_step(tab, &rhs, 0.0, 0.1, &u, &mut ks, &mut un, &mut ews, None);
+    }).summary());
+
+    let mut aws = AdjointErkWorkspace::new(tab.s, n);
+    let mut lambda = v.clone();
+    println!("{}", bench_fn("adjoint_erk_step dopri5", 1, 5, || {
+        adjoint_erk_step(tab, &rhs, 0.0, 0.1, &u, &ks, &mut lambda, &mut gt, &mut aws);
+    }).summary());
+
+    // GMRES on the implicit-step operator
+    let mut x = vec![0.0f32; n];
+    let mut jw = vec![0.0f32; n];
+    println!("{}", bench_fn("gmres (I - h/2 J) solve", 1, 5, || {
+        x.fill(0.0);
+        gmres(
+            |w, out| {
+                rhs.jvp(0.3, &u, w, &mut jw);
+                for i in 0..n {
+                    out[i] = w[i] - 0.05 * jw[i];
+                }
+            },
+            &v,
+            &mut x,
+            &GmresOptions::default(),
+        );
+    }).summary());
+
+    // checkpoint store ops
+    use pnode::checkpoint::{CheckpointStore, StepCheckpoint};
+    println!("{}", bench_fn("checkpoint insert+remove (6 stages)", 5, 20, || {
+        let mut store = CheckpointStore::new();
+        for step in 0..16 {
+            store.insert(StepCheckpoint {
+                step,
+                t: 0.0,
+                h: 0.1,
+                u: u.clone(),
+                ks: Some(ks.clone()),
+            });
+        }
+        for step in (0..16).rev() {
+            store.remove(step);
+        }
+    }).summary());
+
+    // XLA artifact path (if built)
+    if let (Ok(client), Ok(manifest)) =
+        (pnode::runtime::Client::cpu(), pnode::runtime::Manifest::load_default())
+    {
+        if let Ok(arts) =
+            pnode::runtime::ModelArtifacts::load(&client, &manifest, "clf_d64")
+        {
+            let entry = arts.entry.clone();
+            let mut rng2 = Rng::new(2);
+            let theta = pnode::nn::init::kaiming_uniform(&mut rng2, &entry.dims, 1.0);
+            let xrhs = pnode::ode::XlaRhs::new(arts, theta).unwrap();
+            let nx = xrhs.state_len();
+            let mut ux = vec![0.0f32; nx];
+            rng2.fill_normal(&mut ux);
+            let mut ox = vec![0.0f32; nx];
+            let mut gx = vec![0.0f32; xrhs.param_len()];
+            println!("{}", bench_fn("XLA clf_d64 f", 2, 10, || {
+                xrhs.f(0.3, &ux, &mut ox);
+            }).summary());
+            let vx = ox.clone();
+            println!("{}", bench_fn("XLA clf_d64 vjp_both", 2, 10, || {
+                xrhs.vjp_both(0.3, &ux, &vx, &mut ox, &mut gx);
+            }).summary());
+        }
+    } else {
+        println!("(XLA artifacts not available; skipped PJRT micro-benches)");
+    }
+}

@@ -1,0 +1,110 @@
+//! Table 8 + Fig. 5 regeneration: Crank–Nicolson vs adaptive Dopri5 on the
+//! Robertson stiff system — NFE-F/NFE-B, time per iteration, gradient
+//! norms (explosion), and Fig. 4's raw-vs-scaled data comparison.
+
+use pnode::bench::Table;
+use pnode::data::robertson::RobertsonData;
+use pnode::nn::{Act, AdamW, Optimizer};
+use pnode::ode::implicit::ThetaScheme;
+use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::tasks::StiffTask;
+use pnode::train::GradStats;
+use pnode::util::rng::Rng;
+use pnode::util::stats::Stream;
+
+struct Outcome {
+    mae: f64,
+    nfe_f: f64,
+    nfe_b: f64,
+    secs: f64,
+    max_grad: f64,
+    exploded: bool,
+}
+
+fn train(task: &StiffTask, mode: &str, epochs: usize) -> Outcome {
+    let dims = vec![3, 24, 24, 24, 3];
+    let mut rng = Rng::new(5);
+    let mut theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 0.05);
+    let mut rhs = MlpRhs::new(dims, Act::Gelu, false, 1, theta.clone());
+    let mut opt = AdamW::new(theta.len(), 5e-3, 1e-4);
+    let mut stats = GradStats::default();
+    let (mut nfe_f, mut nfe_b) = (Stream::new(), Stream::new());
+    let mut secs = Stream::new();
+    let mut mae = f64::NAN;
+    for _ in 0..epochs {
+        let t = std::time::Instant::now();
+        let step = match mode {
+            "cn" => task.grad_implicit(&rhs, ThetaScheme::crank_nicolson()),
+            "beuler" => task.grad_implicit(&rhs, ThetaScheme::backward_euler()),
+            _ => task.grad_explicit_adaptive(&rhs, 1e-6),
+        };
+        secs.push(t.elapsed().as_secs_f64());
+        mae = step.loss;
+        nfe_f.push(step.nfe_forward as f64);
+        nfe_b.push(step.nfe_backward as f64);
+        let gn = pnode::train::grad_norm(&step.grad);
+        stats.observe(gn, 1e5);
+        if !gn.is_finite() {
+            break;
+        }
+        let mut g = step.grad;
+        pnode::train::clip_grad_norm(&mut g, 50.0);
+        opt.step(&mut theta, &g);
+        rhs.set_params(&theta);
+    }
+    Outcome {
+        mae,
+        nfe_f: nfe_f.mean(),
+        nfe_b: nfe_b.mean(),
+        secs: secs.mean(),
+        max_grad: stats.max_norm,
+        exploded: stats.exploded,
+    }
+}
+
+fn main() {
+    let epochs = if std::env::var("PNODE_BENCH_FULL").is_ok() { 400 } else { 60 };
+
+    // Fig. 4: scaled vs raw data
+    let mut fig4 = Table::new(
+        "Fig. 4 — effect of min–max scaling (CN, short training)",
+        &["data", "final MAE", "note"],
+    );
+    for (label, scaled) in [("raw", false), ("scaled", true)] {
+        let data = RobertsonData::generate(40, 6, scaled);
+        let task = StiffTask::new(data, 2);
+        let o = train(&task, "cn", epochs / 2);
+        fig4.row(vec![
+            label.into(),
+            format!("{:.5}", o.mae),
+            if scaled { "species comparable".into() } else { "u2 invisible in loss".to_string() },
+        ]);
+    }
+    fig4.print();
+
+    // Table 8 + Fig. 5
+    let data = RobertsonData::generate(40, 6, true);
+    let task = StiffTask::new(data, 2);
+    let mut t8 = Table::new(
+        "Table 8 / Fig. 5 — CN vs adaptive Dopri5 on Robertson",
+        &["integrator", "avg NFE-F", "avg NFE-B", "time/iter (s)", "final MAE", "max |grad|", "exploded"],
+    );
+    for mode in ["cn", "beuler", "dopri5"] {
+        let o = train(&task, mode, epochs);
+        t8.row(vec![
+            mode.into(),
+            format!("{:.0}", o.nfe_f),
+            format!("{:.0}", o.nfe_b),
+            format!("{:.3}", o.secs),
+            format!("{:.5}", o.mae),
+            format!("{:.2e}", o.max_grad),
+            o.exploded.to_string(),
+        ]);
+    }
+    t8.print();
+    println!(
+        "\nExpected shape (paper Table 8 / Fig. 5): implicit methods train\n\
+         stably; the explicit adaptive method needs far more NFE as training\n\
+         progresses (stiffness grows) and its gradient norms blow up."
+    );
+}

@@ -1,0 +1,205 @@
+//! Continuous adjoint — the vanilla neural ODE's gradient (Chen et al.),
+//! the paper's non-reverse-accurate baseline ("NODE cont").
+//!
+//! The augmented system [u, λ, μ] is integrated *backward* in time with the
+//! same scheme and step count as the forward pass:
+//!
+//!   du/dt = f(u, θ, t)
+//!   dλ/dt = −(∂f/∂u)ᵀ λ
+//!   dμ/dt = −(∂f/∂θ)ᵀ λ
+//!
+//! u is reconstructed by reversing the trajectory (no storage — the O(N_l)
+//! memory claim), which is exactly the source of the gradient inaccuracy:
+//! the Jacobians are evaluated at backward-reconstructed states u ≠ u_n
+//! (paper Table 1 / Prop. 1 bound the discrepancy by O(h²) per step).
+
+use crate::ode::erk::integrate_fixed;
+use crate::ode::rhs::{Nfe, OdeRhs};
+use crate::ode::tableau::Tableau;
+
+/// RHS of the backward augmented system, wrapping the model RHS.
+struct AugmentedBackward<'a> {
+    inner: &'a dyn OdeRhs,
+    n: usize,
+    p: usize,
+}
+
+impl<'a> OdeRhs for AugmentedBackward<'a> {
+    fn state_len(&self) -> usize {
+        2 * self.n + self.p
+    }
+
+    fn param_len(&self) -> usize {
+        0
+    }
+
+    fn params(&self) -> &[f32] {
+        &[]
+    }
+
+    fn set_params(&mut self, _theta: &[f32]) {}
+
+    fn f(&self, t: f64, z: &[f32], out: &mut [f32]) {
+        let (n, p) = (self.n, self.p);
+        let (u, rest) = z.split_at(n);
+        let (lam, _mu) = rest.split_at(n);
+        let (out_u, out_rest) = out.split_at_mut(n);
+        let (out_lam, out_mu) = out_rest.split_at_mut(n);
+        // du/dt = f
+        self.inner.f(t, u, out_u);
+        // dλ/dt = -(∂f/∂u)ᵀλ ; dμ/dt = -(∂f/∂θ)ᵀλ
+        let mut gtheta = vec![0.0f32; p];
+        self.inner.vjp_both(t, u, lam, out_lam, &mut gtheta);
+        for x in out_lam.iter_mut() {
+            *x = -*x;
+        }
+        for (o, g) in out_mu.iter_mut().zip(&gtheta) {
+            *o = -g;
+        }
+    }
+
+    fn vjp_u(&self, _t: f64, _u: &[f32], _v: &[f32], _out: &mut [f32]) {
+        unimplemented!("no second-order adjoints")
+    }
+
+    fn vjp_both(&self, _t: f64, _u: &[f32], _v: &[f32], _o: &mut [f32], _g: &mut [f32]) {
+        unimplemented!("no second-order adjoints")
+    }
+
+    fn jvp(&self, _t: f64, _u: &[f32], _w: &[f32], _out: &mut [f32]) {
+        unimplemented!("no second-order adjoints")
+    }
+
+    fn nfe(&self) -> Nfe {
+        self.inner.nfe()
+    }
+
+    fn reset_nfe(&self) {
+        self.inner.reset_nfe()
+    }
+}
+
+/// Continuous-adjoint gradient for a fixed-step ERK forward pass.
+///
+/// `u_final` is the state at `tf` (from the forward integration), `lambda`
+/// enters as ∂L/∂u(t_F) and leaves as ∂L/∂u_0; `grad_theta` accumulates
+/// ∂L/∂θ.  The backward pass takes `nt` steps of the same scheme.
+#[allow(clippy::too_many_arguments)]
+pub fn continuous_adjoint_erk(
+    tab: &Tableau,
+    rhs: &dyn OdeRhs,
+    t0: f64,
+    tf: f64,
+    nt: usize,
+    u_final: &[f32],
+    lambda: &mut [f32],
+    grad_theta: &mut [f32],
+) {
+    let n = u_final.len();
+    let p = rhs.param_len();
+    let aug = AugmentedBackward { inner: rhs, n, p };
+    let mut z0 = vec![0.0f32; 2 * n + p];
+    z0[..n].copy_from_slice(u_final);
+    z0[n..2 * n].copy_from_slice(lambda);
+    // μ starts at 0
+    let zf = integrate_fixed(tab, &aug, tf, t0, nt, &z0, |_, _, _, _, _, _| {});
+    lambda.copy_from_slice(&zf[n..2 * n]);
+    for (g, m) in grad_theta.iter_mut().zip(&zf[2 * n..]) {
+        *g += m;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Act;
+    use crate::ode::erk::integrate_fixed;
+    use crate::ode::rhs::{LinearRhs, MlpRhs};
+    use crate::ode::tableau;
+    use crate::testing::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn linear_problem_gradient_is_nearly_exact() {
+        // For linear f the Hessian is zero => continuous == discrete adjoint
+        // (paper Prop. 1), so the gradient must match finite differences.
+        let d = 3;
+        let mut rng = Rng::new(7);
+        let mut a = prop::vec_normal(&mut rng, d * d);
+        for x in a.iter_mut() {
+            *x *= 0.3;
+        }
+        let rhs = LinearRhs::new(d, a);
+        let u0 = prop::vec_normal(&mut rng, d);
+        let w = prop::vec_normal(&mut rng, d);
+        let tab = &tableau::RK4;
+        let nt = 20;
+
+        let uf = integrate_fixed(tab, &rhs, 0.0, 1.0, nt, &u0, |_, _, _, _, _, _| {});
+        let mut lambda = w.clone();
+        let mut gtheta = vec![0.0f32; d * d];
+        continuous_adjoint_erk(tab, &rhs, 0.0, 1.0, nt, &uf, &mut lambda, &mut gtheta);
+
+        let loss = |u0: &[f32]| {
+            let uf = integrate_fixed(tab, &rhs, 0.0, 1.0, nt, u0, |_, _, _, _, _, _| {});
+            crate::tensor::dot(&w, &uf)
+        };
+        let h = 1e-3f32;
+        for idx in 0..d {
+            let mut up = u0.clone();
+            up[idx] += h;
+            let mut um = u0.clone();
+            um[idx] -= h;
+            let fd = (loss(&up) - loss(&um)) / (2.0 * h as f64);
+            assert!(
+                (fd - lambda[idx] as f64).abs() < 5e-3 * (1.0 + fd.abs()),
+                "dL/du[{idx}]: {} vs fd {fd}",
+                lambda[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn nonlinear_gradient_has_order_h2_discrepancy() {
+        // Prop. 1: per-step discrepancy O(h²) -> accumulated O(h).  Halving h
+        // should roughly halve the gap between continuous and FD gradients.
+        let dims = vec![2, 6, 2];
+        let mut rng = Rng::new(11);
+        let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.5);
+        let rhs = MlpRhs::new(dims, Act::Tanh, false, 1, theta);
+        let u0 = vec![0.4f32, -0.3];
+        let w = vec![1.0f32, 0.5];
+        let tab = &tableau::EULER;
+
+        let gap = |nt: usize| -> f64 {
+            let uf = integrate_fixed(tab, &rhs, 0.0, 1.0, nt, &u0, |_, _, _, _, _, _| {});
+            let mut lambda = w.clone();
+            let mut gtheta = vec![0.0f32; rhs.param_len()];
+            continuous_adjoint_erk(tab, &rhs, 0.0, 1.0, nt, &uf, &mut lambda, &mut gtheta);
+            // FD oracle for dL/du0
+            let loss = |u0: &[f32]| {
+                let uf = integrate_fixed(tab, &rhs, 0.0, 1.0, nt, u0, |_, _, _, _, _, _| {});
+                crate::tensor::dot(&w, &uf)
+            };
+            let h = 1e-3f32;
+            let mut worst = 0.0f64;
+            for idx in 0..2 {
+                let mut up = u0.clone();
+                up[idx] += h;
+                let mut um = u0.clone();
+                um[idx] -= h;
+                let fd = (loss(&up) - loss(&um)) / (2.0 * h as f64);
+                worst = worst.max((fd - lambda[idx] as f64).abs());
+            }
+            worst
+        };
+
+        let g1 = gap(10);
+        let g2 = gap(40);
+        assert!(
+            g2 < g1 * 0.6,
+            "discrepancy should shrink with h: nt=10 gap {g1:.2e}, nt=40 gap {g2:.2e}"
+        );
+        assert!(g1 > 1e-6, "gap should be visible for coarse steps: {g1:.2e}");
+    }
+}

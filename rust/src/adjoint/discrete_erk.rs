@@ -1,0 +1,209 @@
+//! Discrete adjoint of one explicit Runge–Kutta step — literal reverse-mode
+//! differentiation of the step map, hence reverse-accurate by construction
+//! (paper §2.2, eq. 7, and Table 1 for the Euler special case).
+//!
+//! Forward step:
+//!   U_i = u_n + h Σ_{j<i} a_ij k_j,   k_i = f(t_n + c_i h, U_i),
+//!   u_{n+1} = u_n + h Σ_i b_i k_i.
+//!
+//! Reverse (cotangent λ = ū_{n+1}):
+//!   k̄_i = h b_i λ + h Σ_{j>i} a_ji Ū_j            (processed i = s-1 … 0)
+//!   Ū_i = (∂f/∂u(U_i))ᵀ k̄_i,    θ̄ += (∂f/∂θ(U_i))ᵀ k̄_i
+//!   λ_n = λ + Σ_i Ū_i.
+//!
+//! Requires the stage derivatives `ks` of the forward step; stage states
+//! are reconstructed with pure linear algebra (no extra NFE).
+
+use crate::ode::erk::stage_state;
+use crate::ode::rhs::OdeRhs;
+use crate::ode::tableau::Tableau;
+use crate::tensor;
+
+/// Reusable buffers: adjoint of a step allocates nothing.
+pub struct AdjointErkWorkspace {
+    /// Ū_i per stage
+    ubars: Vec<Vec<f32>>,
+    /// k̄ for the current stage
+    kbar: Vec<f32>,
+    /// reconstructed stage state
+    ustage: Vec<f32>,
+}
+
+impl AdjointErkWorkspace {
+    pub fn new(s: usize, n: usize) -> Self {
+        AdjointErkWorkspace {
+            ubars: (0..s).map(|_| vec![0.0; n]).collect(),
+            kbar: vec![0.0; n],
+            ustage: vec![0.0; n],
+        }
+    }
+}
+
+/// Reverse one ERK step: `lambda` enters as λ_{n+1}, leaves as λ_n;
+/// `grad_theta` accumulates θ̄.  Costs `s` backward NFE (one fused
+/// `vjp_both` per stage).
+#[allow(clippy::too_many_arguments)]
+pub fn adjoint_erk_step(
+    tab: &Tableau,
+    rhs: &dyn OdeRhs,
+    t: f64,
+    h: f64,
+    u: &[f32],
+    ks: &[Vec<f32>],
+    lambda: &mut [f32],
+    grad_theta: &mut [f32],
+    ws: &mut AdjointErkWorkspace,
+) {
+    let s = tab.s;
+    debug_assert_eq!(ks.len(), s);
+    for i in (0..s).rev() {
+        // k̄_i = h b_i λ + h Σ_{j>i} a_ji Ū_j
+        let kbar = &mut ws.kbar;
+        tensor::zero(kbar);
+        if tab.b[i] != 0.0 {
+            tensor::axpy((h * tab.b[i]) as f32, lambda, kbar);
+        }
+        for j in i + 1..s {
+            let a = tab.a(j, i);
+            if a != 0.0 {
+                tensor::axpy((h * a) as f32, &ws.ubars[j], kbar);
+            }
+        }
+        // skip stages with zero cotangent (e.g. FSAL stage with b_s = 0 and
+        // no dependents): saves a VJP without changing the result
+        if tensor::nrm_inf(kbar) == 0.0 {
+            tensor::zero(&mut ws.ubars[i]);
+            continue;
+        }
+        // Ū_i = (∂f/∂u)ᵀ k̄_i at the reconstructed stage state
+        stage_state(tab, i, h, u, ks, &mut ws.ustage);
+        let ti = t + tab.c[i] * h;
+        let (kbar_ref, ubar_i) = (&ws.kbar, &mut ws.ubars[i]);
+        rhs.vjp_both(ti, &ws.ustage, kbar_ref, ubar_i, grad_theta);
+    }
+    // λ_n = λ + Σ_i Ū_i
+    for ubar in &ws.ubars {
+        tensor::axpy(1.0, ubar, lambda);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Act;
+    use crate::ode::erk::{erk_step, ErkWorkspace};
+    use crate::ode::rhs::{LinearRhs, MlpRhs};
+    use crate::ode::tableau;
+    use crate::testing::prop;
+    use crate::util::rng::Rng;
+
+    /// One-step gradient check: L = <w, u_1>; dL/du_0 and dL/dθ vs FD.
+    fn one_step_check(tab: &Tableau, rhs: &mut dyn OdeRhs, seed: u64) -> Result<(), String> {
+        let n = rhs.state_len();
+        let p = rhs.param_len();
+        let mut rng = Rng::new(seed);
+        let u0 = prop::vec_uniform(&mut rng, n, 0.5);
+        let w = prop::vec_uniform(&mut rng, n, 1.0);
+        let (t, h) = (0.1, 0.05);
+
+        let mut ks: Vec<Vec<f32>> = (0..tab.s).map(|_| vec![0.0f32; n]).collect();
+        let mut u1 = vec![0.0f32; n];
+        let mut ews = ErkWorkspace::new(n);
+        erk_step(tab, rhs, t, h, &u0, &mut ks, &mut u1, &mut ews, None);
+
+        let mut lambda = w.clone();
+        let mut gtheta = vec![0.0f32; p];
+        let mut aws = AdjointErkWorkspace::new(tab.s, n);
+        adjoint_erk_step(tab, rhs, t, h, &u0, &ks, &mut lambda, &mut gtheta, &mut aws);
+
+        let loss = |rhs: &dyn OdeRhs, u0: &[f32]| -> f64 {
+            let mut ks: Vec<Vec<f32>> = (0..tab.s).map(|_| vec![0.0f32; n]).collect();
+            let mut u1 = vec![0.0f32; n];
+            let mut ews = ErkWorkspace::new(n);
+            erk_step(tab, rhs, t, h, u0, &mut ks, &mut u1, &mut ews, None);
+            crate::tensor::dot(&w, &u1)
+        };
+
+        let fd = 1e-3f32;
+        for idx in 0..n.min(5) {
+            let mut up = u0.clone();
+            up[idx] += fd;
+            let mut um = u0.clone();
+            um[idx] -= fd;
+            let d = (loss(rhs, &up) - loss(rhs, &um)) / (2.0 * fd as f64);
+            if (d - lambda[idx] as f64).abs() > 5e-3 * (1.0 + d.abs()) {
+                return Err(format!("{}: dL/du[{idx}] {} vs fd {d}", tab.name, lambda[idx]));
+            }
+        }
+        let theta0 = rhs.params().to_vec();
+        for idx in [0, p / 2, p - 1] {
+            let mut tp = theta0.clone();
+            tp[idx] += fd;
+            rhs.set_params(&tp);
+            let lp = loss(rhs, &u0);
+            let mut tm = theta0.clone();
+            tm[idx] -= fd;
+            rhs.set_params(&tm);
+            let lm = loss(rhs, &u0);
+            rhs.set_params(&theta0);
+            let d = (lp - lm) / (2.0 * fd as f64);
+            if (d - gtheta[idx] as f64).abs() > 5e-3 * (1.0 + d.abs()) {
+                return Err(format!("{}: dL/dθ[{idx}] {} vs fd {d}", tab.name, gtheta[idx]));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn one_step_adjoint_matches_fd_all_schemes() {
+        for tab in [
+            &tableau::EULER,
+            &tableau::MIDPOINT,
+            &tableau::BOSH3,
+            &tableau::RK4,
+            &tableau::DOPRI5,
+        ] {
+            prop::check(&format!("erk-adjoint-{}", tab.name), 17, 3, |rng| {
+                let dims = vec![4, 6, 3];
+                let theta =
+                    crate::nn::init::kaiming_uniform(&mut rng.fork(1), &dims, 1.0);
+                let mut rhs = MlpRhs::new(dims, Act::Tanh, true, 2, theta);
+                one_step_check(tab, &mut rhs, rng.next_u64())
+            });
+        }
+    }
+
+    #[test]
+    fn linear_system_adjoint_is_exact_transpose() {
+        // For du/dt = A u and Euler: u1 = (I + hA) u0, so λ0 = (I + hA)ᵀ λ1
+        let d = 3;
+        let mut rng = Rng::new(3);
+        let a = prop::vec_normal(&mut rng, d * d);
+        let rhs = LinearRhs::new(d, a.clone());
+        let tab = &tableau::EULER;
+        let u0 = prop::vec_normal(&mut rng, d);
+        let lam1 = prop::vec_normal(&mut rng, d);
+        let h = 0.05f64;
+
+        let mut ks = vec![vec![0.0f32; d]];
+        let mut u1 = vec![0.0f32; d];
+        let mut ews = ErkWorkspace::new(d);
+        erk_step(tab, &rhs, 0.0, h, &u0, &mut ks, &mut u1, &mut ews, None);
+
+        let mut lambda = lam1.clone();
+        let mut gtheta = vec![0.0f32; d * d];
+        let mut aws = AdjointErkWorkspace::new(1, d);
+        adjoint_erk_step(tab, &rhs, 0.0, h, &u0, &ks, &mut lambda, &mut gtheta, &mut aws);
+
+        // expected (I + hA)ᵀ λ1
+        let mut want = lam1.clone();
+        for j in 0..d {
+            let mut acc = 0.0f32;
+            for i in 0..d {
+                acc += a[i * d + j] * lam1[i];
+            }
+            want[j] += h as f32 * acc;
+        }
+        crate::testing::assert_allclose(&lambda, &want, 1e-5, 1e-6, "euler exact transpose");
+    }
+}

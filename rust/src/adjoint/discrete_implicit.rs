@@ -1,0 +1,169 @@
+//! Discrete adjoint of the implicit theta-method (paper §3.3, eq. 13).
+//!
+//! Forward step (θ = 1 backward Euler, θ = ½ Crank–Nicolson):
+//!   u_{n+1} = u_n + h (1−θ) f(t_n, u_n) + h θ f(t_{n+1}, u_{n+1})
+//!
+//! Adjoint: solve the *transposed* linear system
+//!   (I − hθ ∂f/∂u(u_{n+1}))ᵀ λ_s = λ_{n+1}
+//! with matrix-free GMRES whose operator is the VJP primitive, then
+//!   λ_n = λ_s + h(1−θ) (∂f/∂u(u_n))ᵀ λ_s
+//!   μ  += hθ (∂f/∂θ(u_{n+1}))ᵀ λ_s + h(1−θ) (∂f/∂θ(u_n))ᵀ λ_s.
+//!
+//! Only solutions need checkpointing for implicit steps (no stage vectors).
+
+use crate::linalg::gmres::{gmres, GmresOptions, GmresResult};
+use crate::ode::implicit::ThetaScheme;
+use crate::ode::rhs::OdeRhs;
+use crate::tensor;
+
+/// Reverse one implicit theta step.  `lambda` enters as λ_{n+1}, leaves as
+/// λ_n; `grad_theta` accumulates μ contributions.  Returns the GMRES stats
+/// of the transposed solve.
+#[allow(clippy::too_many_arguments)]
+pub fn adjoint_theta_step(
+    scheme: ThetaScheme,
+    rhs: &dyn OdeRhs,
+    t: f64,
+    h: f64,
+    u_n: &[f32],
+    u_np1: &[f32],
+    lambda: &mut [f32],
+    grad_theta: &mut [f32],
+    gmres_opts: &GmresOptions,
+) -> GmresResult {
+    let theta = scheme.theta;
+    let n = u_n.len();
+    let t1 = t + h;
+
+    // transposed solve: (I - hθ Jᵀ(u_{n+1})) λ_s = λ_{n+1}
+    let mut lambda_s = lambda.to_vec(); // warm start from λ_{n+1}
+    let mut vjp_buf = vec![0.0f32; n];
+    let res = {
+        let op = |w: &[f32], out: &mut [f32]| {
+            rhs.vjp_u(t1, u_np1, w, &mut vjp_buf);
+            for i in 0..n {
+                out[i] = w[i] - (h * theta) as f32 * vjp_buf[i];
+            }
+        };
+        gmres(op, lambda, &mut lambda_s, gmres_opts)
+    };
+
+    // μ += hθ (∂f/∂θ(u_{n+1}))ᵀ λ_s   [+ h(1−θ) (∂f/∂θ(u_n))ᵀ λ_s]
+    // and λ_n = λ_s + h(1−θ) Jᵀ(u_n) λ_s
+    let mut scaled = lambda_s.clone();
+    tensor::scal((h * theta) as f32, &mut scaled);
+    let mut sink_u = vec![0.0f32; n];
+    rhs.vjp_both(t1, u_np1, &scaled, &mut sink_u, grad_theta);
+
+    lambda.copy_from_slice(&lambda_s);
+    if theta < 1.0 {
+        let mut scaled_n = lambda_s.clone();
+        tensor::scal((h * (1.0 - theta)) as f32, &mut scaled_n);
+        let mut gu = vec![0.0f32; n];
+        rhs.vjp_both(t, u_n, &scaled_n, &mut gu, grad_theta);
+        tensor::axpy(1.0, &gu, lambda);
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Act;
+    use crate::ode::implicit::{ImplicitStepper, ThetaScheme};
+    use crate::ode::rhs::MlpRhs;
+    use crate::testing::prop;
+    use crate::util::rng::Rng;
+
+    fn mk_rhs(seed: u64) -> MlpRhs {
+        let dims = vec![3, 8, 3];
+        let mut rng = Rng::new(seed);
+        let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+        MlpRhs::new(dims, Act::Tanh, false, 1, theta)
+    }
+
+    fn one_step_check(scheme: ThetaScheme, seed: u64) -> Result<(), String> {
+        let mut rhs = mk_rhs(seed);
+        let n = rhs.state_len();
+        let p = rhs.param_len();
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let u0 = prop::vec_uniform(&mut rng, n, 0.5);
+        let w = prop::vec_uniform(&mut rng, n, 1.0);
+        let (t, h) = (0.0, 0.1);
+
+        let step = |rhs: &dyn OdeRhs, u0: &[f32]| -> Vec<f32> {
+            let mut stepper = ImplicitStepper::new(scheme, n);
+            let mut u1 = vec![0.0f32; n];
+            stepper.step(rhs, t, h, u0, &mut u1);
+            u1
+        };
+
+        let u1 = step(&rhs, &u0);
+        let mut lambda = w.clone();
+        let mut gtheta = vec![0.0f32; p];
+        let res = adjoint_theta_step(
+            scheme,
+            &rhs,
+            t,
+            h,
+            &u0,
+            &u1,
+            &mut lambda,
+            &mut gtheta,
+            &GmresOptions::default(),
+        );
+        if !res.converged {
+            return Err("transposed GMRES did not converge".into());
+        }
+
+        let loss = |rhs: &dyn OdeRhs, u0: &[f32]| crate::tensor::dot(&w, &step(rhs, u0));
+        let fd = 1e-3f32;
+        for idx in 0..n {
+            let mut up = u0.clone();
+            up[idx] += fd;
+            let mut um = u0.clone();
+            um[idx] -= fd;
+            let d = (loss(&rhs, &up) - loss(&rhs, &um)) / (2.0 * fd as f64);
+            if (d - lambda[idx] as f64).abs() > 1e-2 * (1.0 + d.abs()) {
+                return Err(format!(
+                    "{}: dL/du[{idx}] {} vs fd {d}",
+                    scheme.name, lambda[idx]
+                ));
+            }
+        }
+        let theta0 = rhs.params().to_vec();
+        for idx in [0usize, p / 3, p - 1] {
+            let mut tp = theta0.clone();
+            tp[idx] += fd;
+            rhs.set_params(&tp);
+            let lp = loss(&rhs, &u0);
+            let mut tm = theta0.clone();
+            tm[idx] -= fd;
+            rhs.set_params(&tm);
+            let lm = loss(&rhs, &u0);
+            rhs.set_params(&theta0);
+            let d = (lp - lm) / (2.0 * fd as f64);
+            if (d - gtheta[idx] as f64).abs() > 1e-2 * (1.0 + d.abs()) {
+                return Err(format!(
+                    "{}: dL/dθ[{idx}] {} vs fd {d}",
+                    scheme.name, gtheta[idx]
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn backward_euler_adjoint_matches_fd() {
+        prop::check("be-adjoint", 23, 4, |rng| {
+            one_step_check(ThetaScheme::backward_euler(), rng.next_u64())
+        });
+    }
+
+    #[test]
+    fn crank_nicolson_adjoint_matches_fd() {
+        prop::check("cn-adjoint", 29, 4, |rng| {
+            one_step_check(ThetaScheme::crank_nicolson(), rng.next_u64())
+        });
+    }
+}

@@ -1,0 +1,165 @@
+//! Minimal timing harness + table printer used by every `cargo bench`
+//! target (`[[bench]] harness = false`).
+
+use std::time::Instant;
+
+use crate::util::stats::Stream;
+
+/// Timing statistics of a benchmarked closure.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} ± {} (n={}, min {}, max {})",
+            self.name,
+            crate::util::human_secs(self.mean_secs),
+            crate::util::human_secs(self.std_secs),
+            self.iters,
+            crate::util::human_secs(self.min_secs),
+            crate::util::human_secs(self.max_secs),
+        )
+    }
+}
+
+/// Run `f` `iters` times after `warmup` unmeasured runs.
+pub fn bench_fn(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Stream::new();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        s.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_secs: s.mean(),
+        std_secs: s.std(),
+        min_secs: s.min(),
+        max_secs: s.max(),
+    }
+}
+
+/// Aligned-column table printer (paper-style output).
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(r[c].len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", cell, w = widths[c]));
+            }
+            s.trim_end().to_string() + "\n"
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * ncols));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Export rows as JSON for EXPERIMENTS.md tooling.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::Obj(
+                    self.headers
+                        .iter()
+                        .zip(r)
+                        .map(|(h, c)| (h.clone(), Json::Str(c.clone())))
+                        .collect(),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench_fn("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(r.mean_secs >= 0.0);
+        assert!(r.min_secs <= r.mean_secs + 1e-12);
+        assert_eq!(r.iters, 5);
+        assert!(r.summary().contains("spin"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Test", &["a", "column_b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["long_cell".into(), "x".into()]);
+        let s = t.render();
+        assert!(s.contains("== Test =="));
+        assert!(s.contains("long_cell"));
+        let j = t.to_json().to_string_compact();
+        assert!(j.contains("column_b"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

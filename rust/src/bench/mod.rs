@@ -1,0 +1,7 @@
+//! Benchmark harness (criterion is unavailable offline): timed runs with
+//! warmup and statistics, aligned table printing matching the paper's
+//! table format, and JSON export of rows.
+
+pub mod harness;
+
+pub use harness::{bench_fn, BenchResult, Table};

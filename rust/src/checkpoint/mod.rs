@@ -1,0 +1,11 @@
+//! Checkpointing for the discrete adjoint: byte-accounted storage,
+//! policies (All / SolutionOnly / Binomial), the Prop-2 closed form, and a
+//! DP-optimal binomial scheduler for multistage schemes.
+
+pub mod binomial;
+pub mod policy;
+pub mod store;
+
+pub use binomial::{optimal_extra_steps, prop2_extra_steps, BinomialPlanner};
+pub use policy::CheckpointPolicy;
+pub use store::{CheckpointStore, StepCheckpoint};

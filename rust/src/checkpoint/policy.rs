@@ -1,0 +1,53 @@
+//! Checkpointing policies (the PNODE memory/compute trade-off knob).
+
+/// How the forward pass checkpoints and what the backward pass recomputes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CheckpointPolicy {
+    /// Store solution + stages at every step: zero recomputation, the
+    /// paper's default "PNODE" configuration (worst-case memory).
+    All,
+    /// Store solutions only ("PNODE2"): N_t - 1 step recomputations,
+    /// memory shrinks by the stage factor.
+    SolutionOnly,
+    /// Binomial (Revolve-style) with at most `n_checkpoints` slots:
+    /// recomputation given by the optimal schedule / Prop. 2.
+    Binomial { n_checkpoints: usize },
+}
+
+impl CheckpointPolicy {
+    pub fn parse(s: &str) -> Option<CheckpointPolicy> {
+        if let Some(rest) = s.strip_prefix("binomial:") {
+            return rest.parse().ok().map(|n| CheckpointPolicy::Binomial { n_checkpoints: n });
+        }
+        match s {
+            "all" => Some(CheckpointPolicy::All),
+            "solution" | "solution_only" | "pnode2" => Some(CheckpointPolicy::SolutionOnly),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            CheckpointPolicy::All => "all".into(),
+            CheckpointPolicy::SolutionOnly => "solution_only".into(),
+            CheckpointPolicy::Binomial { n_checkpoints } => format!("binomial:{n_checkpoints}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in [
+            CheckpointPolicy::All,
+            CheckpointPolicy::SolutionOnly,
+            CheckpointPolicy::Binomial { n_checkpoints: 7 },
+        ] {
+            assert_eq!(CheckpointPolicy::parse(&p.name()), Some(p));
+        }
+        assert_eq!(CheckpointPolicy::parse("bogus"), None);
+    }
+}

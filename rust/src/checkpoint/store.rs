@@ -1,0 +1,143 @@
+//! Checkpoint storage with exact byte accounting.
+//!
+//! A step checkpoint holds the solution `u_n` and optionally the stage
+//! derivatives `k_i` of the step departing from `t_n` (the paper's
+//! "solutions ... with the stage values"); size = `(N_s + 1) × state` f32s
+//! when stages are kept, matching the Table-2 memory column.  Peak bytes
+//! are tracked so benchmarks report *measured* checkpoint memory alongside
+//! the analytic model.
+
+use std::collections::BTreeMap;
+
+/// One stored step.
+#[derive(Clone, Debug)]
+pub struct StepCheckpoint {
+    pub step: usize,
+    pub t: f64,
+    pub h: f64,
+    pub u: Vec<f32>,
+    /// stage derivatives `k_i`, present under stage-storing policies
+    pub ks: Option<Vec<Vec<f32>>>,
+}
+
+impl StepCheckpoint {
+    pub fn bytes(&self) -> u64 {
+        let mut elems = self.u.len();
+        if let Some(ks) = &self.ks {
+            elems += ks.iter().map(|k| k.len()).sum::<usize>();
+        }
+        (elems * std::mem::size_of::<f32>()) as u64 + 48 // struct overhead
+    }
+}
+
+/// Step-indexed checkpoint store.
+#[derive(Debug, Default)]
+pub struct CheckpointStore {
+    slots: BTreeMap<usize, StepCheckpoint>,
+    bytes: u64,
+    peak_bytes: u64,
+}
+
+impl CheckpointStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, cp: StepCheckpoint) {
+        let step = cp.step;
+        let add = cp.bytes();
+        if let Some(old) = self.slots.insert(step, cp) {
+            self.bytes -= old.bytes();
+        }
+        self.bytes += add;
+        self.peak_bytes = self.peak_bytes.max(self.bytes);
+    }
+
+    pub fn remove(&mut self, step: usize) -> Option<StepCheckpoint> {
+        let cp = self.slots.remove(&step)?;
+        self.bytes -= cp.bytes();
+        Some(cp)
+    }
+
+    pub fn get(&self, step: usize) -> Option<&StepCheckpoint> {
+        self.slots.get(&step)
+    }
+
+    /// Latest checkpoint at or below `step`.
+    pub fn nearest_at_or_below(&self, step: usize) -> Option<&StepCheckpoint> {
+        self.slots.range(..=step).next_back().map(|(_, cp)| cp)
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+
+    pub fn clear(&mut self) {
+        self.slots.clear();
+        self.bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cp(step: usize, n: usize, stages: usize) -> StepCheckpoint {
+        StepCheckpoint {
+            step,
+            t: step as f64,
+            h: 1.0,
+            u: vec![0.0; n],
+            ks: if stages > 0 { Some(vec![vec![0.0; n]; stages]) } else { None },
+        }
+    }
+
+    #[test]
+    fn byte_accounting_tracks_peak() {
+        let mut s = CheckpointStore::new();
+        s.insert(cp(0, 100, 4)); // (4+1)*100*4 + 48 = 2048
+        assert_eq!(s.bytes(), 2048);
+        s.insert(cp(1, 100, 0)); // 100*4+48 = 448
+        assert_eq!(s.bytes(), 2048 + 448);
+        assert_eq!(s.peak_bytes(), 2048 + 448);
+        s.remove(0);
+        assert_eq!(s.bytes(), 448);
+        assert_eq!(s.peak_bytes(), 2048 + 448, "peak sticks");
+    }
+
+    #[test]
+    fn reinsert_replaces_without_leak() {
+        let mut s = CheckpointStore::new();
+        s.insert(cp(3, 10, 0));
+        let b1 = s.bytes();
+        s.insert(cp(3, 10, 2));
+        assert_eq!(s.len(), 1);
+        assert!(s.bytes() > b1);
+        s.remove(3);
+        assert_eq!(s.bytes(), 0);
+    }
+
+    #[test]
+    fn nearest_lookup() {
+        let mut s = CheckpointStore::new();
+        for step in [0usize, 4, 9] {
+            s.insert(cp(step, 2, 0));
+        }
+        assert_eq!(s.nearest_at_or_below(6).unwrap().step, 4);
+        assert_eq!(s.nearest_at_or_below(4).unwrap().step, 4);
+        assert_eq!(s.nearest_at_or_below(100).unwrap().step, 9);
+        assert_eq!(s.nearest_at_or_below(3).unwrap().step, 0);
+    }
+}

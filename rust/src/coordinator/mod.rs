@@ -1,0 +1,9 @@
+//! Experiment coordinator: a job matrix runner that executes
+//! (method × scheme × N_t) sweeps, collects rows, and writes results —
+//! the "leader" of the benchmark harness.  Pure-Rust jobs can run on a
+//! thread pool; PJRT-backed jobs run on the leader thread (the PJRT CPU
+//! client is not Sync).
+
+pub mod runner;
+
+pub use runner::{ExperimentRow, Runner};

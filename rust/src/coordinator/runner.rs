@@ -1,0 +1,149 @@
+//! Sweep runner: executes a matrix of experiment jobs, collects uniform
+//! result rows, and persists them as JSON under `target/bench_results/`.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::methods::MethodReport;
+use crate::util::json::Json;
+
+/// One uniform result row (a line of a paper table).
+#[derive(Clone, Debug)]
+pub struct ExperimentRow {
+    pub experiment: String,
+    pub dataset: String,
+    pub method: String,
+    pub scheme: String,
+    pub nt: usize,
+    pub nfe_forward: u64,
+    pub nfe_backward: u64,
+    pub time_secs: f64,
+    /// modeled accelerator memory (Table-2 semantics, +CUDA constant)
+    pub model_mem_bytes: u64,
+    /// measured checkpoint bytes in this process
+    pub measured_ckpt_bytes: u64,
+    pub extra: Vec<(String, String)>,
+}
+
+impl ExperimentRow {
+    pub fn from_report(
+        experiment: &str,
+        dataset: &str,
+        method: &str,
+        scheme: &str,
+        nt: usize,
+        report: &MethodReport,
+        time_secs: f64,
+        model_mem_bytes: u64,
+    ) -> Self {
+        ExperimentRow {
+            experiment: experiment.into(),
+            dataset: dataset.into(),
+            method: method.into(),
+            scheme: scheme.into(),
+            nt,
+            nfe_forward: report.nfe_forward,
+            nfe_backward: report.nfe_backward,
+            time_secs,
+            model_mem_bytes,
+            measured_ckpt_bytes: report.ckpt_bytes,
+            extra: Vec::new(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("experiment".to_string(), Json::str(self.experiment.clone())),
+            ("dataset".to_string(), Json::str(self.dataset.clone())),
+            ("method".to_string(), Json::str(self.method.clone())),
+            ("scheme".to_string(), Json::str(self.scheme.clone())),
+            ("nt".to_string(), Json::num(self.nt as f64)),
+            ("nfe_forward".to_string(), Json::num(self.nfe_forward as f64)),
+            ("nfe_backward".to_string(), Json::num(self.nfe_backward as f64)),
+            ("time_secs".to_string(), Json::num(self.time_secs)),
+            ("model_mem_bytes".to_string(), Json::num(self.model_mem_bytes as f64)),
+            (
+                "measured_ckpt_bytes".to_string(),
+                Json::num(self.measured_ckpt_bytes as f64),
+            ),
+        ];
+        for (k, v) in &self.extra {
+            kv.push((k.clone(), Json::str(v.clone())));
+        }
+        Json::Obj(kv)
+    }
+}
+
+/// Collects rows, times jobs, writes JSON.
+pub struct Runner {
+    pub experiment: String,
+    pub rows: Vec<ExperimentRow>,
+    started: Instant,
+}
+
+impl Runner {
+    pub fn new(experiment: &str) -> Self {
+        Runner { experiment: experiment.into(), rows: Vec::new(), started: Instant::now() }
+    }
+
+    /// Time a job and push its row.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_job(
+        &mut self,
+        dataset: &str,
+        method: &str,
+        scheme: &str,
+        nt: usize,
+        model_mem_bytes: u64,
+        job: impl FnOnce() -> MethodReport,
+    ) -> &ExperimentRow {
+        let t = Instant::now();
+        let report = job();
+        let secs = t.elapsed().as_secs_f64();
+        self.rows.push(ExperimentRow::from_report(
+            &self.experiment,
+            dataset,
+            method,
+            scheme,
+            nt,
+            &report,
+            secs,
+            model_mem_bytes,
+        ));
+        self.rows.last().unwrap()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Persist all rows to `target/bench_results/<experiment>.json`.
+    pub fn save(&self) -> std::io::Result<PathBuf> {
+        let dir = PathBuf::from("target/bench_results");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{}.json", self.experiment));
+        let json = Json::Arr(self.rows.iter().map(|r| r.to_json()).collect());
+        std::fs::write(&path, json.to_string_pretty())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_collects_and_serializes() {
+        let mut r = Runner::new("unit_test");
+        r.run_job("ds", "pnode", "rk4", 10, 123, || MethodReport {
+            nfe_forward: 40,
+            nfe_backward: 40,
+            ..Default::default()
+        });
+        assert_eq!(r.rows.len(), 1);
+        assert_eq!(r.rows[0].nfe_forward, 40);
+        let j = r.rows[0].to_json().to_string_compact();
+        assert!(j.contains("\"pnode\""));
+        assert!(j.contains("\"nt\":10"));
+    }
+}

@@ -1,0 +1,51 @@
+//! Synthetic datasets standing in for the paper's benchmarks
+//! (substitution table in DESIGN.md §2): spiral classification for
+//! CIFAR-10/SqueezeNext, seeded Gaussian mixtures for the POWER /
+//! MINIBOONE / BSDS300 tabular CNF datasets, and the true Robertson
+//! chemistry for the stiff-dynamics task.
+
+pub mod robertson;
+pub mod spiral;
+pub mod tabular;
+
+pub use robertson::RobertsonData;
+pub use spiral::SpiralDataset;
+pub use tabular::TabularDataset;
+
+/// Min–max feature scaling to [0, 1] (paper eq. 16).  Returns (min, max)
+/// per feature for later inverse mapping.
+pub fn min_max_scale(data: &mut [f32], n_features: usize) -> (Vec<f32>, Vec<f32>) {
+    let rows = data.len() / n_features;
+    let mut mins = vec![f32::INFINITY; n_features];
+    let mut maxs = vec![f32::NEG_INFINITY; n_features];
+    for r in 0..rows {
+        for c in 0..n_features {
+            let v = data[r * n_features + c];
+            mins[c] = mins[c].min(v);
+            maxs[c] = maxs[c].max(v);
+        }
+    }
+    for r in 0..rows {
+        for c in 0..n_features {
+            let span = (maxs[c] - mins[c]).max(1e-12);
+            data[r * n_features + c] = (data[r * n_features + c] - mins[c]) / span;
+        }
+    }
+    (mins, maxs)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn min_max_scales_to_unit_interval() {
+        let mut d = vec![1.0f32, 10.0, 3.0, 20.0, 2.0, 15.0];
+        let (mins, maxs) = super::min_max_scale(&mut d, 2);
+        assert_eq!(mins, vec![1.0, 10.0]);
+        assert_eq!(maxs, vec![3.0, 20.0]);
+        for &x in &d {
+            assert!((0.0..=1.0).contains(&x));
+        }
+        assert_eq!(d[0], 0.0);
+        assert_eq!(d[2], 1.0);
+    }
+}

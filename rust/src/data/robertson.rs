@@ -1,0 +1,141 @@
+//! Ground-truth data for the stiff task (§5.3): solve Robertson's
+//! equations with a tightly-converged implicit integrator on a dense
+//! internal grid, then sample 40 points log-spaced over [1e-5, 100]
+//! (paper's setup), optionally min–max scaled (paper eq. 16).
+
+use crate::ode::implicit::{integrate_implicit_grid, ThetaScheme};
+use crate::ode::rhs::RobertsonRhs;
+
+pub struct RobertsonData {
+    /// observation times (log-spaced)
+    pub ts: Vec<f64>,
+    /// [n_obs, 3] concentrations at the observation times
+    pub u: Vec<f32>,
+    /// per-species (min, max) used for scaling (None if unscaled)
+    pub scale: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+/// `n` log-spaced points in [a, b].
+pub fn logspace(a: f64, b: f64, n: usize) -> Vec<f64> {
+    let (la, lb) = (a.ln(), b.ln());
+    (0..n)
+        .map(|i| (la + (lb - la) * i as f64 / (n - 1) as f64).exp())
+        .collect()
+}
+
+impl RobertsonData {
+    /// Generate the paper's dataset: u0 = [1,0,0], 40 log-spaced samples
+    /// over [1e-5, 100].  `substeps` dense implicit sub-steps between
+    /// consecutive observations control the reference accuracy.
+    ///
+    /// The reference integrator is backward Euler (L-stable — Robertson's
+    /// extreme stiffness makes Crank–Nicolson's marginal A-stability
+    /// oscillate on coarse grids) over a geometrically refined sub-grid.
+    pub fn generate(n_obs: usize, substeps: usize, scaled: bool) -> Self {
+        let ts = logspace(1e-5, 100.0, n_obs);
+        // dense grid: start at t=0, densify between observations
+        let mut grid = vec![0.0f64];
+        let mut prev = 0.0f64;
+        for &t in &ts {
+            for s in 1..=substeps {
+                grid.push(prev + (t - prev) * s as f64 / substeps as f64);
+            }
+            prev = t;
+        }
+        let rhs = RobertsonRhs::default();
+        let mut u = Vec::with_capacity(n_obs * 3);
+        let mut next_obs = 0usize;
+        // integrate and capture at observation times
+        let grid_ref = &grid;
+        let ts_ref = &ts;
+        integrate_implicit_grid(
+            ThetaScheme::backward_euler(),
+            &rhs,
+            grid_ref,
+            &[1.0, 0.0, 0.0],
+            |step, _t, _h, _u_prev, u_next| {
+                let t_next = grid_ref[step + 1];
+                while next_obs < ts_ref.len()
+                    && (t_next - ts_ref[next_obs]).abs() < 1e-12 * ts_ref[next_obs].max(1.0)
+                {
+                    u.extend_from_slice(u_next);
+                    next_obs += 1;
+                }
+            },
+        );
+        assert_eq!(u.len(), n_obs * 3, "missed observation times");
+
+        let mut data = RobertsonData { ts, u, scale: None };
+        if scaled {
+            data.apply_min_max();
+        }
+        data
+    }
+
+    /// Min–max scale each species to [0, 1] (paper §5.3.1).
+    pub fn apply_min_max(&mut self) {
+        let (mins, maxs) = crate::data::min_max_scale(&mut self.u, 3);
+        self.scale = Some((mins, maxs));
+    }
+
+    pub fn n_obs(&self) -> usize {
+        self.ts.len()
+    }
+
+    pub fn obs(&self, i: usize) -> &[f32] {
+        &self.u[i * 3..(i + 1) * 3]
+    }
+
+    /// Initial condition in the (possibly scaled) data space.
+    pub fn u0(&self) -> Vec<f32> {
+        // the trajectory starts from the first observation
+        self.obs(0).to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logspace_endpoints_and_monotone() {
+        let ts = logspace(1e-5, 100.0, 40);
+        assert_eq!(ts.len(), 40);
+        assert!((ts[0] - 1e-5).abs() < 1e-12);
+        assert!((ts[39] - 100.0).abs() < 1e-9);
+        for w in ts.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn robertson_physics_sanity() {
+        let data = RobertsonData::generate(40, 12, false);
+        assert_eq!(data.n_obs(), 40);
+        // u1 decays from 1, u3 grows from 0, mass conserved
+        let first = data.obs(0);
+        let last = data.obs(39);
+        assert!(first[0] > 0.99, "{first:?}");
+        assert!(last[0] < first[0]);
+        assert!(last[2] > 0.1);
+        for i in 0..40 {
+            let o = data.obs(i);
+            let mass = o[0] as f64 + o[1] as f64 + o[2] as f64;
+            assert!((mass - 1.0).abs() < 1e-3, "obs {i}: mass {mass}");
+            // u2 stays tiny (the fast species): the famous 5-orders gap
+            assert!(o[1] < 1e-3);
+        }
+    }
+
+    #[test]
+    fn scaling_normalizes_species() {
+        let data = RobertsonData::generate(40, 8, true);
+        assert!(data.scale.is_some());
+        let mut max2 = 0.0f32;
+        for i in 0..data.n_obs() {
+            max2 = max2.max(data.obs(i)[1]);
+        }
+        // after min-max, even the tiny species spans up to 1
+        assert!((max2 - 1.0).abs() < 1e-6, "max of species 2 = {max2}");
+    }
+}

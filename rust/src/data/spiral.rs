@@ -1,0 +1,145 @@
+//! Interleaved-spirals classification data, lifted to D dimensions with a
+//! fixed random projection — the CIFAR-10 surrogate (DESIGN.md §2): it
+//! exercises exactly what Fig. 2/3 measure (gradient fidelity and
+//! memory/time scaling of the ODE-block classifier), with a decision
+//! boundary hard enough that gradient errors visibly hurt accuracy.
+
+use crate::util::rng::Rng;
+
+pub struct SpiralDataset {
+    pub n_classes: usize,
+    pub dim: usize,
+    /// [n, dim] row-major features
+    pub x: Vec<f32>,
+    pub y: Vec<usize>,
+}
+
+impl SpiralDataset {
+    /// `n_per_class` points per class, lifted from 2-D spirals to `dim`
+    /// with a random orthogonal-ish projection + small noise.
+    pub fn generate(rng: &mut Rng, n_per_class: usize, n_classes: usize, dim: usize) -> Self {
+        assert!(dim >= 2);
+        // random projection 2 -> dim (fixed by the rng seed)
+        let mut proj = vec![0.0f32; 2 * dim];
+        rng.fill_normal(&mut proj);
+        for v in proj.iter_mut() {
+            *v /= (dim as f32).sqrt();
+        }
+
+        let n = n_per_class * n_classes;
+        let mut x = vec![0.0f32; n * dim];
+        let mut y = vec![0usize; n];
+        for c in 0..n_classes {
+            for i in 0..n_per_class {
+                let idx = c * n_per_class + i;
+                let t = i as f32 / n_per_class as f32; // 0..1 along the arm
+                let r = 0.2 + 2.0 * t;
+                let phi = 2.0 * std::f32::consts::PI
+                    * (c as f32 / n_classes as f32 + 0.75 * t)
+                    + rng.normal_f32(0.0, 0.03);
+                let (px, py) = (r * phi.cos(), r * phi.sin());
+                for d in 0..dim {
+                    x[idx * dim + d] = px * proj[d] + py * proj[dim + d]
+                        + rng.normal_f32(0.0, 0.01);
+                }
+                y[idx] = c;
+            }
+        }
+        // shuffle jointly
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut xs = vec![0.0f32; n * dim];
+        let mut ys = vec![0usize; n];
+        for (new, &old) in order.iter().enumerate() {
+            xs[new * dim..(new + 1) * dim].copy_from_slice(&x[old * dim..(old + 1) * dim]);
+            ys[new] = y[old];
+        }
+        SpiralDataset { n_classes, dim, x: xs, y: ys }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Split into (train, test) at `frac`.
+    pub fn split(&self, frac: f64) -> (SpiralView<'_>, SpiralView<'_>) {
+        let cut = (self.len() as f64 * frac) as usize;
+        (
+            SpiralView { data: self, start: 0, end: cut },
+            SpiralView { data: self, start: cut, end: self.len() },
+        )
+    }
+}
+
+/// Borrowed contiguous slice of the dataset.
+pub struct SpiralView<'a> {
+    data: &'a SpiralDataset,
+    start: usize,
+    end: usize,
+}
+
+impl<'a> SpiralView<'a> {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fill a fixed-size batch (wrapping around) starting at `offset`.
+    pub fn fill_batch(&self, offset: usize, bsz: usize, x: &mut [f32], y: &mut [usize]) {
+        let dim = self.data.dim;
+        for b in 0..bsz {
+            let idx = self.start + (offset + b) % self.len();
+            x[b * dim..(b + 1) * dim]
+                .copy_from_slice(&self.data.x[idx * dim..(idx + 1) * dim]);
+            y[b] = self.data.y[idx];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_balanced_shuffled_classes() {
+        let mut rng = Rng::new(5);
+        let ds = SpiralDataset::generate(&mut rng, 50, 4, 8);
+        assert_eq!(ds.len(), 200);
+        let mut counts = [0usize; 4];
+        for &c in &ds.y {
+            counts[c] += 1;
+        }
+        assert_eq!(counts, [50; 4]);
+        // shuffled: the first 50 labels are not all class 0
+        assert!(ds.y[..50].iter().any(|&c| c != ds.y[0]));
+    }
+
+    #[test]
+    fn features_are_bounded_and_nontrivial() {
+        let mut rng = Rng::new(6);
+        let ds = SpiralDataset::generate(&mut rng, 30, 2, 16);
+        let norm: f64 = ds.x.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(norm > 1.0);
+        assert!(ds.x.iter().all(|v| v.abs() < 10.0));
+    }
+
+    #[test]
+    fn batch_filling_wraps() {
+        let mut rng = Rng::new(7);
+        let ds = SpiralDataset::generate(&mut rng, 10, 2, 4);
+        let (train, test) = ds.split(0.8);
+        assert_eq!(train.len(), 16);
+        assert_eq!(test.len(), 4);
+        let mut x = vec![0.0f32; 8 * 4];
+        let mut y = vec![0usize; 8];
+        test.fill_batch(0, 8, &mut x, &mut y); // 8 > 4: wraps
+        assert_eq!(&y[0..4], &y[4..8]);
+    }
+}

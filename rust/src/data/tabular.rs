@@ -1,0 +1,147 @@
+//! Gaussian-mixture tabular datasets — surrogates of POWER (d=6),
+//! MINIBOONE (d=43), BSDS300 (d=63) for the CNF experiments (Tables 3–7).
+//! The CNF columns the paper reports (NFE, time/iter, memory) depend on
+//! dimensionality, batch size, and N_t, not on the particular density, so a
+//! seeded mixture of anisotropic Gaussians preserves the benchmark while
+//! keeping the repo self-contained (DESIGN.md §2).
+
+use crate::util::rng::Rng;
+
+pub struct TabularDataset {
+    pub dim: usize,
+    pub n: usize,
+    /// [n, dim] row-major, standardized to zero mean / unit variance
+    pub x: Vec<f32>,
+}
+
+/// Named presets mirroring the paper's datasets.
+pub fn preset(name: &str) -> Option<(usize, usize)> {
+    // (dim, default sample count)
+    Some(match name {
+        "power" => (6, 8192),
+        "miniboone" => (43, 4096),
+        "bsds300" => (63, 4096),
+        _ => return None,
+    })
+}
+
+impl TabularDataset {
+    /// `k`-component mixture with random means/scales and correlations.
+    pub fn generate(rng: &mut Rng, dim: usize, n: usize, k: usize) -> Self {
+        // component parameters
+        let mut means = vec![0.0f32; k * dim];
+        rng.fill_uniform(&mut means, -3.0, 3.0);
+        let mut scales = vec![0.0f32; k * dim];
+        rng.fill_uniform(&mut scales, 0.2, 1.2);
+        // shared random rotation (correlates features)
+        let mut rot = vec![0.0f32; dim * dim];
+        rng.fill_normal(&mut rot);
+        for v in rot.iter_mut() {
+            *v /= (dim as f32).sqrt();
+        }
+
+        let mut x = vec![0.0f32; n * dim];
+        let mut z = vec![0.0f32; dim];
+        for row in 0..n {
+            let c = rng.below(k);
+            for d in 0..dim {
+                z[d] = means[c * dim + d] + scales[c * dim + d] * rng.normal() as f32;
+            }
+            // x_row = rot @ z (mixing)
+            for i in 0..dim {
+                let mut acc = 0.0f32;
+                for j in 0..dim {
+                    acc += rot[i * dim + j] * z[j];
+                }
+                x[row * dim + i] = acc;
+            }
+        }
+        // standardize per feature
+        for d in 0..dim {
+            let mut mean = 0.0f64;
+            for row in 0..n {
+                mean += x[row * dim + d] as f64;
+            }
+            mean /= n as f64;
+            let mut var = 0.0f64;
+            for row in 0..n {
+                var += (x[row * dim + d] as f64 - mean).powi(2);
+            }
+            let std = (var / n as f64).sqrt().max(1e-8);
+            for row in 0..n {
+                x[row * dim + d] = ((x[row * dim + d] as f64 - mean) / std) as f32;
+            }
+        }
+        TabularDataset { dim, n, x }
+    }
+
+    pub fn from_preset(rng: &mut Rng, name: &str) -> Option<Self> {
+        let (dim, n) = preset(name)?;
+        Some(Self::generate(rng, dim, n, 8))
+    }
+
+    /// Fill a batch (wrapping) starting at `offset`.
+    pub fn fill_batch(&self, offset: usize, bsz: usize, out: &mut [f32]) {
+        for b in 0..bsz {
+            let idx = (offset + b) % self.n;
+            out[b * self.dim..(b + 1) * self.dim]
+                .copy_from_slice(&self.x[idx * self.dim..(idx + 1) * self.dim]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_dimensions() {
+        assert_eq!(preset("power").unwrap().0, 6);
+        assert_eq!(preset("miniboone").unwrap().0, 43);
+        assert_eq!(preset("bsds300").unwrap().0, 63);
+        assert!(preset("mnist").is_none());
+    }
+
+    #[test]
+    fn standardized_moments() {
+        let mut rng = Rng::new(9);
+        let ds = TabularDataset::generate(&mut rng, 5, 4000, 4);
+        for d in 0..5 {
+            let mut mean = 0.0f64;
+            let mut var = 0.0f64;
+            for row in 0..ds.n {
+                mean += ds.x[row * 5 + d] as f64;
+            }
+            mean /= ds.n as f64;
+            for row in 0..ds.n {
+                var += (ds.x[row * 5 + d] as f64 - mean).powi(2);
+            }
+            var /= ds.n as f64;
+            assert!(mean.abs() < 1e-5, "feature {d} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-4, "feature {d} var {var}");
+        }
+    }
+
+    #[test]
+    fn mixture_is_multimodal() {
+        // crude: histogram of the first feature should not look unimodal —
+        // check that variance of per-quartile means is substantial
+        let mut rng = Rng::new(10);
+        let ds = TabularDataset::generate(&mut rng, 3, 3000, 6);
+        let mut f0: Vec<f32> = (0..ds.n).map(|r| ds.x[r * 3]).collect();
+        f0.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = ds.n / 4;
+        let spread = f0[3 * q] - f0[q];
+        assert!(spread > 0.5, "spread {spread}");
+    }
+
+    #[test]
+    fn batches_wrap() {
+        let mut rng = Rng::new(11);
+        let ds = TabularDataset::generate(&mut rng, 4, 10, 2);
+        let mut out = vec![0.0f32; 12 * 4];
+        ds.fill_batch(5, 12, &mut out);
+        // row 5 of the batch == dataset row 0 == batch row... offset 5 + 5 = 10 % 10 = 0
+        assert_eq!(&out[5 * 4..6 * 4], &ds.x[0..4]);
+    }
+}

@@ -1,0 +1,37 @@
+//! # PNODE-RS
+//!
+//! A memory-efficient neural-ODE training framework based on high-level
+//! discrete adjoint differentiation — a Rust + JAX/Pallas reproduction of
+//! Zhang & Zhao, *A memory-efficient neural ODE framework based on
+//! high-level adjoint differentiation* (2022).
+//!
+//! Architecture (three layers, Python never on the training path):
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the fused dense
+//!   layer at the heart of the RHS MLP, tiled for a TPU-style memory
+//!   hierarchy, lowered AOT.
+//! * **L2** — JAX compute graph (`python/compile/model.py`): the RHS
+//!   `f(u, θ, t)` and its VJP/JVP actions, exported once as HLO text.
+//! * **L3** — this crate: the PJRT runtime, time integrators and their
+//!   discrete adjoints, checkpointing (incl. binomial/Revolve), the five
+//!   gradient methods from the paper (PNODE, NODE-cont, NODE-naive, ANODE,
+//!   ACA), Newton–GMRES implicit solvers, the training loop, datasets, and
+//!   the benchmark harness that regenerates every table and figure.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
+
+pub mod adjoint;
+pub mod bench;
+pub mod checkpoint;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod methods;
+pub mod nn;
+pub mod ode;
+pub mod runtime;
+pub mod tasks;
+pub mod tensor;
+pub mod testing;
+pub mod train;
+pub mod util;

@@ -1,0 +1,257 @@
+//! Restarted GMRES(m) with modified Gram–Schmidt and Givens rotations.
+//!
+//! Matrix-free: the operator is a closure `w -> A w`.  The implicit time
+//! steps use it twice — forward with the JVP action
+//! `w - hγ (∂f/∂u) w`, and in the adjoint with the *transposed* action
+//! `w - hγ (∂f/∂u)ᵀ w` (paper eq. 13) — which is exactly why the framework
+//! only ever needs Jacobian-vector products, never the matrix.
+
+use crate::tensor;
+
+#[derive(Clone, Debug)]
+pub struct GmresOptions {
+    /// restart length
+    pub m: usize,
+    /// relative tolerance on ||r|| / ||b||
+    pub rtol: f64,
+    /// absolute tolerance on ||r||
+    pub atol: f64,
+    pub max_restarts: usize,
+}
+
+impl Default for GmresOptions {
+    fn default() -> Self {
+        // f32 state vectors: tighter tolerances than ~1e-6 relative are not
+        // reliably reachable (the paper's PETSc solves run f64)
+        GmresOptions { m: 30, rtol: 1e-6, atol: 1e-9, max_restarts: 20 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GmresResult {
+    pub converged: bool,
+    /// operator applications
+    pub iters: usize,
+    pub residual: f64,
+}
+
+/// Solve `A x = b`, overwriting `x` (initial guess in, solution out).
+pub fn gmres<F>(mut apply: F, b: &[f32], x: &mut [f32], opts: &GmresOptions) -> GmresResult
+where
+    F: FnMut(&[f32], &mut [f32]),
+{
+    let n = b.len();
+    let bnorm = tensor::nrm2(b).max(1e-300);
+    let tol = (opts.rtol * bnorm).max(opts.atol);
+    let m = opts.m.min(n.max(1));
+
+    let mut iters = 0usize;
+    let mut r = vec![0.0f32; n];
+    let mut w = vec![0.0f32; n];
+    // Krylov basis (m+1 vectors)
+    let mut v: Vec<Vec<f32>> = (0..=m).map(|_| vec![0.0f32; n]).collect();
+    // Hessenberg (column-major per iteration), Givens cos/sin, rhs g
+    let mut hcol = vec![0.0f64; m + 1];
+    let mut hmat = vec![0.0f64; (m + 1) * m];
+    let mut cs = vec![0.0f64; m];
+    let mut sn = vec![0.0f64; m];
+    let mut g = vec![0.0f64; m + 1];
+
+    for _restart in 0..=opts.max_restarts {
+        // r = b - A x
+        apply(x, &mut r);
+        iters += 1;
+        for i in 0..n {
+            r[i] = b[i] - r[i];
+        }
+        let rnorm = tensor::nrm2(&r);
+        if rnorm <= tol {
+            return GmresResult { converged: true, iters, residual: rnorm };
+        }
+
+        // v0 = r / ||r||
+        for i in 0..n {
+            v[0][i] = (r[i] as f64 / rnorm) as f32;
+        }
+        g.iter_mut().for_each(|x| *x = 0.0);
+        g[0] = rnorm;
+
+        let mut k_used = 0;
+        for k in 0..m {
+            // w = A v_k
+            apply(&v[k], &mut w);
+            iters += 1;
+            // modified Gram–Schmidt
+            for j in 0..=k {
+                let hjk = tensor::dot(&w, &v[j]);
+                hcol[j] = hjk;
+                tensor::axpy(-(hjk as f32), &v[j], &mut w);
+            }
+            let hk1 = tensor::nrm2(&w);
+            hcol[k + 1] = hk1;
+            if hk1 > 1e-300 {
+                for i in 0..n {
+                    v[k + 1][i] = (w[i] as f64 / hk1) as f32;
+                }
+            }
+            // apply existing Givens rotations to the new column
+            for j in 0..k {
+                let t = cs[j] * hcol[j] + sn[j] * hcol[j + 1];
+                hcol[j + 1] = -sn[j] * hcol[j] + cs[j] * hcol[j + 1];
+                hcol[j] = t;
+            }
+            // new rotation to zero hcol[k+1]
+            let denom = (hcol[k] * hcol[k] + hcol[k + 1] * hcol[k + 1]).sqrt();
+            if denom > 1e-300 {
+                cs[k] = hcol[k] / denom;
+                sn[k] = hcol[k + 1] / denom;
+            } else {
+                cs[k] = 1.0;
+                sn[k] = 0.0;
+            }
+            hcol[k] = cs[k] * hcol[k] + sn[k] * hcol[k + 1];
+            hcol[k + 1] = 0.0;
+            g[k + 1] = -sn[k] * g[k];
+            g[k] = cs[k] * g[k];
+            // store column
+            for j in 0..=k + 1 {
+                hmat[j * m + k] = hcol[j];
+            }
+            k_used = k + 1;
+            if g[k + 1].abs() <= tol || hk1 <= 1e-300 {
+                break;
+            }
+        }
+
+        // back-substitute y from the k_used×k_used triangular system
+        let mut y = vec![0.0f64; k_used];
+        for j in (0..k_used).rev() {
+            let mut acc = g[j];
+            for l in j + 1..k_used {
+                acc -= hmat[j * m + l] * y[l];
+            }
+            y[j] = acc / hmat[j * m + j];
+        }
+        // x += V y
+        for j in 0..k_used {
+            tensor::axpy(y[j] as f32, &v[j], x);
+        }
+
+        // convergence check for this cycle
+        apply(x, &mut r);
+        iters += 1;
+        for i in 0..n {
+            r[i] = b[i] - r[i];
+        }
+        let rnorm = tensor::nrm2(&r);
+        if rnorm <= tol {
+            return GmresResult { converged: true, iters, residual: rnorm };
+        }
+    }
+
+    apply(x, &mut r);
+    for i in 0..n {
+        r[i] = b[i] - r[i];
+    }
+    GmresResult { converged: false, iters, residual: tensor::nrm2(&r) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+    use crate::util::rng::Rng;
+
+    fn dense_apply(a: &[f32], n: usize) -> impl FnMut(&[f32], &mut [f32]) + '_ {
+        move |x: &[f32], y: &mut [f32]| {
+            for i in 0..n {
+                let mut acc = 0.0f32;
+                for j in 0..n {
+                    acc += a[i * n + j] * x[j];
+                }
+                y[i] = acc;
+            }
+        }
+    }
+
+    #[test]
+    fn solves_identity() {
+        let n = 5;
+        let b = vec![1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let mut x = vec![0.0f32; n];
+        let res = gmres(|v, out| out.copy_from_slice(v), &b, &mut x, &GmresOptions::default());
+        assert!(res.converged);
+        crate::testing::assert_allclose(&x, &b, 1e-6, 1e-7, "identity solve");
+    }
+
+    #[test]
+    fn solves_random_spd_systems() {
+        prop::check("gmres-spd", 13, 10, |rng| {
+            let n = prop::size_in(rng, 2, 20);
+            // A = M Mᵀ + n I (well-conditioned SPD)
+            let m = prop::vec_normal(rng, n * n);
+            let mut a = vec![0.0f32; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for k in 0..n {
+                        acc += m[i * n + k] * m[j * n + k];
+                    }
+                    a[i * n + j] = acc + if i == j { n as f32 } else { 0.0 };
+                }
+            }
+            let xtrue = prop::vec_normal(rng, n);
+            let mut b = vec![0.0f32; n];
+            dense_apply(&a, n)(&xtrue, &mut b);
+            let mut x = vec![0.0f32; n];
+            let res = gmres(dense_apply(&a, n), &b, &mut x, &GmresOptions::default());
+            if !res.converged {
+                return Err(format!("no convergence, res {:.2e}", res.residual));
+            }
+            let err = crate::testing::rel_l2(&x, &xtrue);
+            if err > 1e-4 {
+                return Err(format!("solution error {err:.2e}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn restarted_solve_nontrivial() {
+        // force restarts with small m on a shifted random matrix
+        let n = 40;
+        let mut rng = Rng::new(21);
+        let mut a = prop::vec_normal(&mut rng, n * n);
+        for x in a.iter_mut() {
+            *x *= 0.1;
+        }
+        for i in 0..n {
+            a[i * n + i] += 2.0; // diagonally dominant-ish
+        }
+        let xtrue = prop::vec_normal(&mut rng, n);
+        let mut b = vec![0.0f32; n];
+        dense_apply(&a, n)(&xtrue, &mut b);
+        let mut x = vec![0.0f32; n];
+        let opts = GmresOptions { m: 5, ..Default::default() };
+        let res = gmres(dense_apply(&a, n), &b, &mut x, &opts);
+        assert!(res.converged, "residual {:.2e}", res.residual);
+        assert!(crate::testing::rel_l2(&x, &xtrue) < 1e-4);
+    }
+
+    #[test]
+    fn warm_start_counts_fewer_iters() {
+        let n = 30;
+        let mut rng = Rng::new(5);
+        let mut a = vec![0.0f32; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0 + 0.1 * rng.f32();
+        }
+        let b = prop::vec_normal(&mut rng, n);
+        let mut cold = vec![0.0f32; n];
+        let rc = gmres(dense_apply(&a, n), &b, &mut cold, &GmresOptions::default());
+        let mut warm = cold.clone();
+        let rw = gmres(dense_apply(&a, n), &b, &mut warm, &GmresOptions::default());
+        assert!(rw.iters <= rc.iters);
+        assert!(rw.converged);
+    }
+}

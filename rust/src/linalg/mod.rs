@@ -1,0 +1,8 @@
+//! Matrix-free iterative linear algebra: restarted GMRES and a
+//! Jacobian-free Newton–Krylov solver (the paper's PETSc SNES/KSP role).
+
+pub mod gmres;
+pub mod newton;
+
+pub use gmres::{gmres, GmresOptions, GmresResult};
+pub use newton::{newton_solve, NewtonOptions, NewtonResult};

@@ -1,0 +1,166 @@
+//! Jacobian-free Newton–Krylov: Newton's method where each linear solve is
+//! matrix-free GMRES over the JVP action (PETSc SNES + matrix-free KSP in
+//! the paper's implementation).
+
+use crate::linalg::gmres::{gmres, GmresOptions, GmresResult};
+use crate::tensor;
+
+#[derive(Clone, Debug)]
+pub struct NewtonOptions {
+    pub atol: f64,
+    pub rtol: f64,
+    pub max_iters: usize,
+    pub gmres: GmresOptions,
+}
+
+impl Default for NewtonOptions {
+    fn default() -> Self {
+        // f32 residuals: see GmresOptions::default on tolerance choice
+        NewtonOptions {
+            atol: 1e-7,
+            rtol: 1e-6,
+            max_iters: 25,
+            gmres: GmresOptions::default(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct NewtonResult {
+    pub converged: bool,
+    pub iters: usize,
+    pub residual_norm: f64,
+    /// cumulative GMRES operator applications
+    pub linear_iters: usize,
+}
+
+/// Solve R(x) = 0 in place.
+///
+/// * `residual(x, out)` — evaluates R(x).
+/// * `jacobian_apply(x, w, out)` — evaluates (∂R/∂x)(x) · w.
+pub fn newton_solve<R, J>(
+    mut residual: R,
+    mut jacobian_apply: J,
+    x: &mut [f32],
+    opts: &NewtonOptions,
+) -> NewtonResult
+where
+    R: FnMut(&[f32], &mut [f32]),
+    J: FnMut(&[f32], &[f32], &mut [f32]),
+{
+    let n = x.len();
+    let mut r = vec![0.0f32; n];
+    let mut dx = vec![0.0f32; n];
+    let mut neg_r = vec![0.0f32; n];
+    let mut linear_iters = 0usize;
+
+    residual(x, &mut r);
+    let r0 = tensor::nrm2(&r).max(1e-300);
+    let tol = (opts.rtol * r0).max(opts.atol);
+
+    for it in 0..opts.max_iters {
+        let rn = tensor::nrm2(&r);
+        if rn <= tol {
+            return NewtonResult {
+                converged: true,
+                iters: it,
+                residual_norm: rn,
+                linear_iters,
+            };
+        }
+        for i in 0..n {
+            neg_r[i] = -r[i];
+        }
+        tensor::zero(&mut dx);
+        let x_frozen = x.to_vec();
+        let lin: GmresResult = gmres(
+            |w, out| jacobian_apply(&x_frozen, w, out),
+            &neg_r,
+            &mut dx,
+            &opts.gmres,
+        );
+        linear_iters += lin.iters;
+        // damped update with simple backtracking if the step increases ||R||
+        let mut lambda = 1.0f32;
+        let mut accepted = false;
+        for _ in 0..6 {
+            let mut xt = x_frozen.clone();
+            tensor::axpy(lambda, &dx, &mut xt);
+            residual(&xt, &mut r);
+            if tensor::nrm2(&r) < rn || lambda < 1e-3 {
+                x.copy_from_slice(&xt);
+                accepted = true;
+                break;
+            }
+            lambda *= 0.5;
+        }
+        if !accepted {
+            // take the tiny step anyway; next iteration re-evaluates
+            tensor::axpy(lambda, &dx, x);
+            residual(x, &mut r);
+        }
+    }
+
+    let rn = tensor::nrm2(&r);
+    NewtonResult {
+        converged: rn <= tol,
+        iters: opts.max_iters,
+        residual_norm: rn,
+        linear_iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_scalar_nonlinear() {
+        // R(x) = x^3 - 8, root x = 2
+        let mut x = vec![5.0f32];
+        let res = newton_solve(
+            |x, out| out[0] = x[0] * x[0] * x[0] - 8.0,
+            |x, w, out| out[0] = 3.0 * x[0] * x[0] * w[0],
+            &mut x,
+            &NewtonOptions::default(),
+        );
+        assert!(res.converged, "{res:?}");
+        assert!((x[0] - 2.0).abs() < 1e-5, "{}", x[0]);
+    }
+
+    #[test]
+    fn solves_2d_system() {
+        // R = [x^2 + y^2 - 4, x - y]  => x = y = sqrt(2)
+        let mut x = vec![3.0f32, 1.0];
+        let res = newton_solve(
+            |v, out| {
+                out[0] = v[0] * v[0] + v[1] * v[1] - 4.0;
+                out[1] = v[0] - v[1];
+            },
+            |v, w, out| {
+                out[0] = 2.0 * v[0] * w[0] + 2.0 * v[1] * w[1];
+                out[1] = w[0] - w[1];
+            },
+            &mut x,
+            &NewtonOptions::default(),
+        );
+        assert!(res.converged);
+        let s = 2.0f32.sqrt();
+        assert!((x[0] - s).abs() < 1e-5 && (x[1] - s).abs() < 1e-5, "{x:?}");
+    }
+
+    #[test]
+    fn quadratic_convergence_iteration_count() {
+        // well-scaled problem should converge in <= 8 Newton iterations
+        let mut x = vec![0.5f32];
+        let res = newton_solve(
+            |x, out| out[0] = x[0].exp() - 3.0,
+            |x, w, out| out[0] = x[0].exp() * w[0],
+            &mut x,
+            &NewtonOptions::default(),
+        );
+        assert!(res.converged);
+        assert!(res.iters <= 8, "iters {}", res.iters);
+        assert!((x[0] - 3.0f32.ln()).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,318 @@
+//! `pnode` — CLI entrypoint of the PNODE-RS framework.
+//!
+//! Subcommands:
+//!   info                      — artifact/platform info
+//!   gradcheck                 — XLA-vs-Rust cross-check on quick_d8
+//!   train-clf [--method ...]  — classification training (spiral surrogate)
+//!   train-stiff [--scheme cn] — stiff Robertson training
+//!   bench <table2|prop2>      — analytic tables (full benches live in
+//!                               `cargo bench` targets)
+
+use anyhow::Result;
+
+use pnode::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(),
+        Some("gradcheck") => cmd_gradcheck(),
+        Some("train-clf") => cmd_train_clf(&args),
+        Some("train-stiff") => cmd_train_stiff(&args),
+        Some("bench") => cmd_bench(&args),
+        _ => {
+            eprintln!(
+                "usage: pnode <info|gradcheck|train-clf|train-stiff|bench> [options]\n\
+                 see README.md for details"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let client = pnode::runtime::Client::cpu()?;
+    println!("platform: {} ({} devices)", client.platform_name(), client.device_count());
+    match pnode::runtime::Manifest::load_default() {
+        Ok(m) => {
+            println!("artifacts: {} configs in {:?}", m.configs.len(), m.dir);
+            for (name, cfg) in &m.configs {
+                println!(
+                    "  {name}: kind={} dims={:?} act={} batch={} params={}",
+                    cfg.kind, cfg.dims, cfg.act, cfg.batch, cfg.param_count
+                );
+            }
+        }
+        Err(e) => println!("artifacts: not available ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_gradcheck() -> Result<()> {
+    use pnode::nn::Act;
+    use pnode::ode::rhs::OdeRhs;
+    use pnode::util::rng::Rng;
+
+    let client = pnode::runtime::Client::cpu()?;
+    let manifest = pnode::runtime::Manifest::load_default()?;
+    let arts = pnode::runtime::ModelArtifacts::load(&client, &manifest, "quick_d8")?;
+    let entry = arts.entry.clone();
+    let mut rng = Rng::new(7);
+    let theta = pnode::nn::init::kaiming_uniform(&mut rng, &entry.dims, 1.0);
+
+    let xla = pnode::ode::XlaRhs::new(arts, theta.clone())?;
+    let rust = pnode::ode::MlpRhs::new(
+        entry.dims.clone(),
+        Act::parse(&entry.act).unwrap(),
+        entry.time_dep,
+        entry.batch,
+        theta,
+    );
+
+    let n = xla.state_len();
+    let mut u = vec![0.0f32; n];
+    rng.fill_normal(&mut u);
+    let v = {
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v);
+        v
+    };
+
+    let mut fx = vec![0.0f32; n];
+    let mut fr = vec![0.0f32; n];
+    xla.f(0.3, &u, &mut fx);
+    rust.f(0.3, &u, &mut fr);
+    let f_err = pnode::testing::rel_l2(&fx, &fr);
+
+    let mut gx = vec![0.0f32; n];
+    let mut gr = vec![0.0f32; n];
+    let mut gtx = vec![0.0f32; xla.param_len()];
+    let mut gtr = vec![0.0f32; rust.param_len()];
+    xla.vjp_both(0.3, &u, &v, &mut gx, &mut gtx);
+    rust.vjp_both(0.3, &u, &v, &mut gr, &mut gtr);
+    let vjp_err = pnode::testing::rel_l2(&gx, &gr);
+    let vjpt_err = pnode::testing::rel_l2(&gtx, &gtr);
+
+    println!("f      rel-l2: {f_err:.3e}");
+    println!("vjp_u  rel-l2: {vjp_err:.3e}");
+    println!("vjp_th rel-l2: {vjpt_err:.3e}");
+    anyhow::ensure!(f_err < 1e-4 && vjp_err < 1e-4 && vjpt_err < 1e-4, "cross-check FAILED");
+    println!("gradcheck OK: XLA artifacts match the pure-Rust mirror");
+    Ok(())
+}
+
+fn cmd_train_clf(args: &Args) -> Result<()> {
+    use pnode::data::spiral::SpiralDataset;
+    use pnode::methods::{method_by_name, BlockSpec};
+    use pnode::nn::{Act, Optimizer};
+    use pnode::ode::rhs::OdeRhs;
+    use pnode::ode::tableau::Scheme;
+    use pnode::tasks::ClassificationTask;
+    use pnode::util::rng::Rng;
+
+    let method_name = args.get_or("method", "pnode").to_string();
+    let scheme = Scheme::parse(args.get_or("scheme", "dopri5")).expect("unknown scheme");
+    let nt = args.get_usize("nt", 4);
+    let steps = args.get_usize("steps", 100);
+    let n_blocks = args.get_usize("blocks", 4);
+    let seed = args.get_u64("seed", 42);
+    let use_xla = !args.flag("no-xla");
+
+    let mut rng = Rng::new(seed);
+    const D: usize = 64;
+    const B: usize = 128;
+    let dims = vec![D + 1, 168, 168, D];
+    let per_block = pnode::nn::param_count(&dims);
+    let dims_init = dims.clone();
+
+    let mut task = ClassificationTask::new(
+        &mut rng,
+        n_blocks,
+        BlockSpec { scheme, t0: 0.0, tf: 1.0, nt },
+        per_block,
+        D,
+        10,
+        move |r| pnode::nn::init::kaiming_uniform(r, &dims_init, 1.0),
+        || method_by_name(&method_name).expect("unknown method"),
+    );
+    println!(
+        "classification: {} blocks x {} params = {} total (paper: 199,800)",
+        n_blocks,
+        per_block,
+        per_block * n_blocks
+    );
+
+    let mut rhs: Box<dyn OdeRhs> = if use_xla {
+        let client = pnode::runtime::Client::cpu()?;
+        let manifest = pnode::runtime::Manifest::load_default()?;
+        let cfg = args.get_or("config", "clf_d64");
+        let arts = pnode::runtime::ModelArtifacts::load(&client, &manifest, cfg)?;
+        Box::new(pnode::ode::XlaRhs::new(arts, task.block_theta(0).to_vec())?)
+    } else {
+        Box::new(pnode::ode::MlpRhs::new(
+            dims,
+            Act::Relu,
+            true,
+            B,
+            task.block_theta(0).to_vec(),
+        ))
+    };
+
+    let ds = SpiralDataset::generate(&mut rng, 600, 10, D);
+    let (train, test) = ds.split(0.9);
+    let mut opt = pnode::nn::Adam::new(task.theta.len(), args.get_f64("lr", 1e-3));
+    let mut log = pnode::train::TrainLog::new();
+    let mut x = vec![0.0f32; B * D];
+    let mut y = vec![0usize; B];
+
+    for step in 0..steps {
+        train.fill_batch(step * B, B, &mut x, &mut y);
+        let res = task.grad_step(rhs.as_mut(), B, &x, &y, 0.05);
+        let gn = pnode::train::grad_norm(&res.grad);
+        task.apply_grad(&mut opt as &mut dyn Optimizer, &res.grad);
+        log.push(
+            step,
+            res.loss,
+            Some(res.accuracy),
+            gn,
+            res.report.nfe_forward,
+            res.report.nfe_backward,
+        );
+        if step % 10 == 0 || step + 1 == steps {
+            println!(
+                "step {step:4}  loss {:.4}  acc {:.3}  |g| {:.2e}  nfe {}/{}",
+                res.loss, res.accuracy, gn, res.report.nfe_forward, res.report.nfe_backward
+            );
+        }
+    }
+    let mut xt = vec![0.0f32; B * D];
+    let mut yt = vec![0usize; B];
+    test.fill_batch(0, B, &mut xt, &mut yt);
+    let (tl, ta) = task.evaluate(rhs.as_mut(), B, &xt, &yt);
+    println!("test: loss {tl:.4} acc {ta:.3}");
+    if let Some(out) = args.get("log-out") {
+        std::fs::write(out, log.to_csv())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_train_stiff(args: &Args) -> Result<()> {
+    use pnode::data::robertson::RobertsonData;
+    use pnode::nn::{Act, Optimizer};
+    use pnode::ode::implicit::ThetaScheme;
+    use pnode::ode::rhs::OdeRhs;
+    use pnode::tasks::StiffTask;
+    use pnode::util::rng::Rng;
+
+    let epochs = args.get_usize("epochs", 300);
+    let scheme = args.get_or("scheme", "cn").to_string();
+    let scaled = !args.flag("raw");
+    let use_xla = !args.flag("no-xla");
+    let seed = args.get_u64("seed", 3);
+
+    let data = RobertsonData::generate(40, 8, scaled);
+    let task = StiffTask::new(data, args.get_usize("substeps", 2));
+
+    // small init: the untrained field must stay bounded over [1e-5, 100]
+    let dims = vec![3, 50, 50, 50, 50, 50, 3];
+    let mut rng = Rng::new(seed);
+    let theta0 = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 0.1);
+    let mut rhs: Box<dyn OdeRhs> = if use_xla {
+        let client = pnode::runtime::Client::cpu()?;
+        let manifest = pnode::runtime::Manifest::load_default()?;
+        let arts = pnode::runtime::ModelArtifacts::load(&client, &manifest, "stiff_d3")?;
+        Box::new(pnode::ode::XlaRhs::new(arts, theta0.clone())?)
+    } else {
+        Box::new(pnode::ode::MlpRhs::new(dims, Act::Gelu, false, 1, theta0.clone()))
+    };
+
+    let mut opt = pnode::nn::AdamW::new(rhs.param_len(), args.get_f64("lr", 5e-3), 1e-4);
+    let mut theta = theta0;
+    let mut stats = pnode::train::GradStats::default();
+    for epoch in 0..epochs {
+        let step = if scheme == "dopri5" {
+            task.grad_explicit_adaptive(rhs.as_ref(), 1e-6)
+        } else {
+            let s = if scheme == "beuler" {
+                ThetaScheme::backward_euler()
+            } else {
+                ThetaScheme::crank_nicolson()
+            };
+            task.grad_implicit(rhs.as_ref(), s)
+        };
+        let gn = pnode::train::grad_norm(&step.grad);
+        stats.observe(gn, 1e6);
+        let mut grad = step.grad;
+        pnode::train::clip_grad_norm(&mut grad, 100.0);
+        opt.step(&mut theta, &grad);
+        rhs.set_params(&theta);
+        if epoch % 20 == 0 || epoch + 1 == epochs {
+            println!(
+                "epoch {epoch:4}  MAE {:.5}  |g| {:.2e}  nfe {}/{}{}",
+                step.loss,
+                gn,
+                step.nfe_forward,
+                step.nfe_backward,
+                if stats.exploded { "  [EXPLODED]" } else { "" }
+            );
+        }
+    }
+    println!("max |g| over run: {:.3e}  exploded: {}", stats.max_norm, stats.exploded);
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("prop2") => {
+            let mut t = pnode::bench::Table::new(
+                "Prop. 2 — minimal recomputations p̃(N_t, N_c) [formula | DP-optimal]",
+                &["N_t", "N_c=1", "N_c=2", "N_c=3", "N_c=5", "N_c=8"],
+            );
+            let mut planner = pnode::checkpoint::BinomialPlanner::new();
+            for nt in [5usize, 10, 20, 40, 80] {
+                let mut cells = vec![nt.to_string()];
+                for nc in [1usize, 2, 3, 5, 8] {
+                    let f = pnode::checkpoint::prop2_extra_steps(nt, nc).unwrap();
+                    let d = planner.optimal_cost(nt, nc);
+                    cells.push(format!("{f} | {d}"));
+                }
+                t.row(cells);
+            }
+            t.print();
+        }
+        Some("table2") => {
+            let mm = pnode::methods::MemModel {
+                act_bytes: 128 * (65 + 168 + 168 + 168 + 168 + 64) * 4,
+                state_bytes: 128 * 64 * 4,
+                param_bytes: 50_296 * 4,
+                n_stages: 6,
+                nt: 10,
+                nb: 4,
+            };
+            let mut t = pnode::bench::Table::new(
+                "Table 2 — modeled memory (clf_d64, Dopri5, N_t=10, N_b=4)",
+                &["method", "model GB", "reverse-accurate", "implicit"],
+            );
+            for (name, ra, imp) in [
+                ("cont", "x", "x"),
+                ("naive", "yes", "x"),
+                ("anode", "yes", "x"),
+                ("aca", "yes", "x"),
+                ("pnode", "yes", "yes"),
+                ("pnode2", "yes", "yes"),
+            ] {
+                let bytes = mm.by_method(name).unwrap();
+                t.row(vec![
+                    name.into(),
+                    format!("{:.3}", pnode::methods::MemModel::gb(bytes)),
+                    ra.into(),
+                    imp.into(),
+                ]);
+            }
+            t.print();
+        }
+        _ => eprintln!("usage: pnode bench <prop2|table2>  (full sweeps: cargo bench)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,151 @@
+//! Table-2 memory model: translate each method's structural memory
+//! (AD-graph depth × activation size + checkpoint storage) into the bytes a
+//! V100-class accelerator would hold, so the benches can print "GPU Mem
+//! (GB)" columns comparable to the paper's (DESIGN.md §2, §9).
+
+/// Constant allocator overhead the paper attributes to the CUDA runtime
+/// (§5.1: "the CUDA runtime allocates ∼0.4 GB").
+pub const CUDA_RUNTIME_BYTES: u64 = 429_496_730; // 0.4 GiB
+
+/// Problem-size inputs of the model.
+#[derive(Clone, Copy, Debug)]
+pub struct MemModel {
+    /// bytes of intermediate activations of one f evaluation (batch incl.)
+    pub act_bytes: u64,
+    /// bytes of one state vector (B × D × 4)
+    pub state_bytes: u64,
+    /// parameter + optimizer-state bytes (θ, grads, Adam moments)
+    pub param_bytes: u64,
+    /// number of stages of the scheme
+    pub n_stages: u64,
+    /// time steps per block
+    pub nt: u64,
+    /// number of ODE blocks
+    pub nb: u64,
+}
+
+impl MemModel {
+    /// Fixed cost every method pays: runtime + params/optimizer + one batch.
+    fn base(&self) -> u64 {
+        CUDA_RUNTIME_BYTES + 4 * self.param_bytes + 2 * self.state_bytes
+    }
+
+    /// NODE-naive: graph over all blocks/steps/stages; no checkpoints.
+    pub fn node_naive(&self) -> u64 {
+        self.base() + self.nb * self.nt * self.n_stages * self.act_bytes
+    }
+
+    /// NODE-cont: one f-eval graph; no storage (reconstructs backward).
+    pub fn node_cont(&self) -> u64 {
+        self.base() + self.act_bytes
+    }
+
+    /// ANODE: block-input checkpoints + one block's full tape at a time.
+    pub fn anode(&self) -> u64 {
+        self.base() + self.nb * self.state_bytes + self.nt * self.n_stages * self.act_bytes
+    }
+
+    /// ACA: per-step solution checkpoints + a one-step local graph.
+    pub fn aca(&self) -> u64 {
+        self.base() + self.nb * self.nt * self.state_bytes + self.n_stages * self.act_bytes
+    }
+
+    /// PNODE (checkpoint all): (N_t−1)(N_s+1) vectors + one f-eval graph.
+    pub fn pnode(&self) -> u64 {
+        self.base()
+            + self.nb * (self.nt.saturating_sub(1)) * (self.n_stages + 1) * self.state_bytes
+            + self.act_bytes
+    }
+
+    /// PNODE2 (solutions only): N_t−1 vectors + one f-eval graph.
+    pub fn pnode2(&self) -> u64 {
+        self.base() + self.nb * (self.nt.saturating_sub(1)) * self.state_bytes + self.act_bytes
+    }
+
+    /// PNODE with a binomial budget of `nc` checkpoints per block.
+    pub fn pnode_binomial(&self, nc: u64) -> u64 {
+        self.base()
+            + self.nb * nc.min(self.nt.saturating_sub(1)) * (self.n_stages + 1) * self.state_bytes
+            + self.act_bytes
+    }
+
+    pub fn by_method(&self, name: &str) -> Option<u64> {
+        Some(match name {
+            "naive" | "node_naive" => self.node_naive(),
+            "cont" | "node_cont" => self.node_cont(),
+            "anode" => self.anode(),
+            "aca" => self.aca(),
+            "pnode" => self.pnode(),
+            "pnode2" => self.pnode2(),
+            _ => return None,
+        })
+    }
+
+    pub fn gb(bytes: u64) -> f64 {
+        bytes as f64 / (1u64 << 30) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> MemModel {
+        MemModel {
+            act_bytes: 50 << 20, // 50 MiB per eval
+            state_bytes: 2 << 20,
+            param_bytes: 800 << 10,
+            n_stages: 6,
+            nt: 11,
+            nb: 4,
+        }
+    }
+
+    #[test]
+    fn ordering_matches_paper_figure3() {
+        let m = model();
+        // naive largest; pnode smallest among reverse-accurate; cont smallest
+        assert!(m.node_naive() > m.anode());
+        assert!(m.anode() > m.pnode());
+        assert!(m.pnode() > m.pnode2());
+        assert!(m.node_cont() < m.pnode2());
+        assert!(m.aca() < m.anode());
+    }
+
+    #[test]
+    fn pnode_memory_grows_slowest_with_nt() {
+        let grow = |f: &dyn Fn(&MemModel) -> u64| {
+            let mut m = model();
+            m.nt = 2;
+            let lo = f(&m);
+            m.nt = 32;
+            let hi = f(&m);
+            (hi - lo) as f64
+        };
+        let naive_growth = grow(&|m| m.node_naive());
+        let anode_growth = grow(&|m| m.anode());
+        let pnode_growth = grow(&|m| m.pnode());
+        assert!(pnode_growth < anode_growth);
+        assert!(anode_growth < naive_growth);
+        // cont is flat in N_t
+        assert_eq!(grow(&|m| m.node_cont()), 0.0);
+    }
+
+    #[test]
+    fn binomial_interpolates() {
+        let m = model();
+        let full = m.pnode();
+        let tight = m.pnode_binomial(2);
+        assert!(tight < full);
+        assert!(tight > m.node_cont());
+        assert_eq!(m.pnode_binomial(1000), full, "budget caps at N_t-1");
+    }
+
+    #[test]
+    fn by_method_covers_table() {
+        let m = model();
+        for name in crate::methods::METHOD_NAMES {
+            assert!(m.by_method(name).is_some(), "{name}");
+        }
+    }
+}

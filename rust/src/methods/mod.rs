@@ -1,0 +1,108 @@
+//! The five neural-ODE gradient methods the paper compares (Table 2):
+//! PNODE (ours, discrete adjoint + checkpoint policies), NODE-cont
+//! (continuous adjoint), NODE-naive (full tape), ANODE (block
+//! checkpointing), and ACA (adaptive checkpoint adjoint).  All expose the
+//! same [`GradientMethod`] interface so tasks and benches are generic.
+
+pub mod baselines;
+pub mod memmodel;
+pub mod pnode;
+
+pub use baselines::{Aca, Anode, NodeCont, NodeNaive};
+pub use memmodel::MemModel;
+pub use pnode::Pnode;
+
+use crate::checkpoint::CheckpointPolicy;
+use crate::ode::rhs::OdeRhs;
+use crate::ode::tableau::Scheme;
+
+/// Integration window of one ODE block.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockSpec {
+    pub scheme: Scheme,
+    pub t0: f64,
+    pub tf: f64,
+    pub nt: usize,
+}
+
+impl BlockSpec {
+    pub fn new(scheme: Scheme, nt: usize) -> Self {
+        BlockSpec { scheme, t0: 0.0, tf: 1.0, nt }
+    }
+}
+
+/// Resource accounting for one forward+backward gradient computation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MethodReport {
+    /// function evaluations in the forward pass
+    pub nfe_forward: u64,
+    /// function evaluations in the backward pass (recomputes + transposed
+    /// products, per each method's own accounting — matches the paper's
+    /// NFE-B column semantics)
+    pub nfe_backward: u64,
+    /// re-executed forward steps (PNODE checkpointing overhead)
+    pub recompute_steps: u64,
+    /// measured peak checkpoint bytes
+    pub ckpt_bytes: u64,
+    /// modeled AD-graph residency (tape emulation, Table-2 semantics)
+    pub graph_bytes: u64,
+}
+
+impl MethodReport {
+    pub fn total_model_bytes(&self) -> u64 {
+        self.ckpt_bytes + self.graph_bytes
+    }
+}
+
+/// A gradient engine for one ODE block.
+pub trait GradientMethod {
+    fn name(&self) -> &'static str;
+
+    /// Whether gradients are exact to machine precision wrt the discrete map.
+    fn reverse_accurate(&self) -> bool;
+
+    /// Integrate forward; must be called before `backward`.
+    fn forward(&mut self, rhs: &dyn OdeRhs, spec: &BlockSpec, u0: &[f32]) -> Vec<f32>;
+
+    /// Propagate `lambda` (∂L/∂u_F → ∂L/∂u_0), accumulate `grad_theta`.
+    fn backward(&mut self, rhs: &dyn OdeRhs, spec: &BlockSpec, lambda: &mut [f32], grad_theta: &mut [f32]);
+
+    /// Accounting of the latest forward+backward (call after backward).
+    fn report(&self) -> MethodReport;
+}
+
+/// Construct a method by name (CLI / bench matrix).
+pub fn method_by_name(name: &str) -> Option<Box<dyn GradientMethod>> {
+    Some(match name {
+        "pnode" => Box::new(Pnode::new(CheckpointPolicy::All)),
+        "pnode2" => Box::new(Pnode::new(CheckpointPolicy::SolutionOnly)),
+        "node_cont" | "cont" => Box::new(NodeCont::new()),
+        "node_naive" | "naive" => Box::new(NodeNaive::new()),
+        "anode" => Box::new(Anode::new()),
+        "aca" => Box::new(Aca::new()),
+        _ => {
+            if let Some(rest) = name.strip_prefix("pnode:") {
+                let policy = CheckpointPolicy::parse(rest)?;
+                return Some(Box::new(Pnode::new(policy)));
+            }
+            return None;
+        }
+    })
+}
+
+/// All method names in the paper's table order.
+pub static METHOD_NAMES: &[&str] = &["naive", "cont", "anode", "aca", "pnode", "pnode2"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_factory_knows_all_names() {
+        for name in METHOD_NAMES {
+            assert!(method_by_name(name).is_some(), "{name}");
+        }
+        assert!(method_by_name("pnode:binomial:4").is_some());
+        assert!(method_by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,72 @@
+//! PNODE: high-level discrete adjoint with checkpointing (the paper's
+//! contribution).  `CheckpointPolicy::All` is the paper's default "PNODE"
+//! configuration; `SolutionOnly` is "PNODE2"; `Binomial{n}` exposes the
+//! full memory/compute trade-off of Prop. 2.
+
+use crate::adjoint::driver::ErkAdjointRun;
+use crate::checkpoint::CheckpointPolicy;
+use crate::methods::{BlockSpec, GradientMethod, MethodReport};
+use crate::ode::rhs::OdeRhs;
+
+pub struct Pnode {
+    pub policy: CheckpointPolicy,
+    run: Option<ErkAdjointRun<'static>>,
+    report: MethodReport,
+}
+
+impl Pnode {
+    pub fn new(policy: CheckpointPolicy) -> Self {
+        Pnode { policy, run: None, report: MethodReport::default() }
+    }
+}
+
+impl GradientMethod for Pnode {
+    fn name(&self) -> &'static str {
+        match self.policy {
+            CheckpointPolicy::All => "pnode",
+            CheckpointPolicy::SolutionOnly => "pnode2",
+            CheckpointPolicy::Binomial { .. } => "pnode-binomial",
+        }
+    }
+
+    fn reverse_accurate(&self) -> bool {
+        true
+    }
+
+    fn forward(&mut self, rhs: &dyn OdeRhs, spec: &BlockSpec, u0: &[f32]) -> Vec<f32> {
+        rhs.reset_nfe();
+        let tab = spec.scheme.tableau();
+        let mut run = ErkAdjointRun::new(tab, self.policy, spec.t0, spec.tf, spec.nt);
+        let uf = run.forward(rhs, u0);
+        self.report = MethodReport {
+            nfe_forward: rhs.nfe().forward,
+            ..MethodReport::default()
+        };
+        self.run = Some(run);
+        uf
+    }
+
+    fn backward(
+        &mut self,
+        rhs: &dyn OdeRhs,
+        _spec: &BlockSpec,
+        lambda: &mut [f32],
+        grad_theta: &mut [f32],
+    ) {
+        let run = self.run.as_mut().expect("forward before backward");
+        rhs.reset_nfe();
+        run.backward(rhs, lambda, grad_theta);
+        let nfe = rhs.nfe();
+        // NFE-B: transposed products + stage recomputes (the paper counts
+        // both as function evaluations in the backward pass)
+        self.report.nfe_backward = nfe.backward + nfe.forward;
+        self.report.recompute_steps = run.recompute_steps;
+        self.report.ckpt_bytes = run.peak_checkpoint_bytes();
+        // the only graph ever built is one f evaluation deep: O(N_l)
+        self.report.graph_bytes = rhs.activation_bytes_per_eval();
+    }
+
+    fn report(&self) -> MethodReport {
+        self.report
+    }
+}

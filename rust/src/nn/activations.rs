@@ -1,0 +1,132 @@
+//! Activation functions and their derivatives.
+//!
+//! MUST stay in sync with `python/compile/kernels/dense.py` (the Pallas
+//! epilogue) and `model.py::act_grad`; the cross-check test in
+//! `rust/tests/xla_runtime.rs` compares this implementation against the
+//! compiled HLO numerically.
+
+/// Activation kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Identity,
+    Relu,
+    Tanh,
+    Gelu,
+    Sigmoid,
+}
+
+impl Act {
+    pub fn parse(s: &str) -> Option<Act> {
+        Some(match s {
+            "identity" => Act::Identity,
+            "relu" => Act::Relu,
+            "tanh" => Act::Tanh,
+            "gelu" => Act::Gelu,
+            "sigmoid" => Act::Sigmoid,
+            _ => return None,
+        })
+    }
+
+    /// y = act(x)
+    #[inline]
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            Act::Identity => x,
+            Act::Relu => x.max(0.0),
+            Act::Tanh => x.tanh(),
+            Act::Gelu => {
+                // tanh-approximation (matches jax kernel)
+                const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+                0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+            }
+            Act::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+        }
+    }
+
+    /// d act / d x evaluated at the pre-activation x.
+    #[inline]
+    pub fn grad(&self, x: f32) -> f32 {
+        match self {
+            Act::Identity => 1.0,
+            Act::Relu => {
+                if x > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Act::Tanh => {
+                let y = x.tanh();
+                1.0 - y * y
+            }
+            Act::Gelu => {
+                const C: f32 = 0.7978845608028654;
+                let inner = C * (x + 0.044715 * x * x * x);
+                let th = inner.tanh();
+                let sech2 = 1.0 - th * th;
+                let dinner = C * (1.0 + 3.0 * 0.044715 * x * x);
+                0.5 * (1.0 + th) + 0.5 * x * sech2 * dinner
+            }
+            Act::Sigmoid => {
+                let y = 1.0 / (1.0 + (-x).exp());
+                y * (1.0 - y)
+            }
+        }
+    }
+
+    /// Apply elementwise in place.
+    pub fn apply_slice(&self, xs: &mut [f32]) {
+        for x in xs {
+            *x = self.apply(*x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let h = 1e-3f64;
+        for act in [Act::Identity, Act::Tanh, Act::Gelu, Act::Sigmoid] {
+            for &x in &[-2.0f32, -0.5, 0.1, 0.9, 3.0] {
+                let fd = (act.apply(x + h as f32) as f64 - act.apply(x - h as f32) as f64)
+                    / (2.0 * h);
+                let g = act.grad(x) as f64;
+                assert!(
+                    (fd - g).abs() < 5e-3,
+                    "{act:?} at {x}: fd {fd} vs grad {g}"
+                );
+            }
+        }
+        // relu away from the kink
+        assert_eq!(Act::Relu.grad(1.0), 1.0);
+        assert_eq!(Act::Relu.grad(-1.0), 0.0);
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(Act::Relu.apply(-3.0), 0.0);
+        assert_eq!(Act::Relu.apply(2.0), 2.0);
+        assert!((Act::Sigmoid.apply(0.0) - 0.5).abs() < 1e-7);
+        assert!((Act::Tanh.apply(0.0)).abs() < 1e-7);
+        assert!((Act::Gelu.apply(0.0)).abs() < 1e-7);
+        // gelu(x) -> x for large x
+        assert!((Act::Gelu.apply(6.0) - 6.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn parse_all() {
+        for (s, a) in [
+            ("identity", Act::Identity),
+            ("relu", Act::Relu),
+            ("tanh", Act::Tanh),
+            ("gelu", Act::Gelu),
+            ("sigmoid", Act::Sigmoid),
+        ] {
+            assert_eq!(Act::parse(s), Some(a));
+        }
+        assert_eq!(Act::parse("swish"), None);
+    }
+}

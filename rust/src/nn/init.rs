@@ -1,0 +1,60 @@
+//! Parameter initialisation.
+//!
+//! Layout contract (shared with `python/compile/model.py`): for each layer,
+//! weight `W ∈ R^{din×dout}` row-major, then bias `b ∈ R^{dout}`,
+//! concatenated over layers into one flat f32 vector.
+
+use crate::util::rng::Rng;
+
+/// Kaiming-uniform initialisation of a full MLP parameter vector:
+/// each layer's entries drawn from U(-1/sqrt(din), 1/sqrt(din)).
+pub fn kaiming_uniform(rng: &mut Rng, dims: &[usize], scale: f32) -> Vec<f32> {
+    let mut theta = Vec::with_capacity(super::param_count(dims));
+    for w in dims.windows(2) {
+        let (din, dout) = (w[0], w[1]);
+        let bound = scale / (din as f32).sqrt();
+        for _ in 0..din * dout + dout {
+            theta.push(rng.uniform(-bound as f64, bound as f64) as f32);
+        }
+    }
+    theta
+}
+
+/// Offsets of (W, b) for layer `l` inside the flat vector.
+pub fn layer_offsets(dims: &[usize], l: usize) -> (usize, usize, usize) {
+    let mut off = 0;
+    for i in 0..l {
+        off += dims[i] * dims[i + 1] + dims[i + 1];
+    }
+    let w_off = off;
+    let b_off = off + dims[l] * dims[l + 1];
+    let end = b_off + dims[l + 1];
+    (w_off, b_off, end)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_len_and_bounds() {
+        let dims = [9, 16, 8];
+        let mut rng = Rng::new(0);
+        let theta = kaiming_uniform(&mut rng, &dims, 1.0);
+        assert_eq!(theta.len(), crate::nn::param_count(&dims));
+        let bound0 = 1.0 / 3.0 + 1e-6; // 1/sqrt(9)
+        for &x in &theta[..9 * 16 + 16] {
+            assert!(x.abs() <= bound0);
+        }
+    }
+
+    #[test]
+    fn offsets_partition_vector() {
+        let dims = [5, 8, 4];
+        let (w0, b0, e0) = layer_offsets(&dims, 0);
+        let (w1, b1, e1) = layer_offsets(&dims, 1);
+        assert_eq!((w0, b0, e0), (0, 40, 48));
+        assert_eq!((w1, b1, e1), (48, 48 + 32, 48 + 36));
+        assert_eq!(e1, crate::nn::param_count(&dims));
+    }
+}

@@ -1,0 +1,34 @@
+//! Neural-network pieces owned by the Rust side: a pure-Rust MLP that
+//! mirrors the JAX model exactly (same parameter layout, same activations)
+//! for cross-checking and XLA-free tests, parameter initialisation,
+//! optimizers (SGD/Adam/AdamW), and the linear classification readout with
+//! closed-form softmax-CE gradients.
+
+pub mod activations;
+pub mod init;
+pub mod mlp;
+pub mod optimizer;
+pub mod readout;
+
+pub use activations::Act;
+pub use init::kaiming_uniform;
+pub use mlp::Mlp;
+pub use optimizer::{Adam, AdamW, Optimizer, Sgd};
+pub use readout::Readout;
+
+/// Parameter count of an MLP with the given layer widths
+/// (matches `python/compile/model.py::param_count`).
+pub fn param_count(dims: &[usize]) -> usize {
+    dims.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn param_count_matches_python() {
+        // asserted on the python side too (test_aot.py)
+        assert_eq!(super::param_count(&[9, 16, 8]), 296);
+        assert_eq!(super::param_count(&[65, 168, 168, 64]), 50_296);
+        assert_eq!(super::param_count(&[3, 50, 50, 50, 50, 50, 3]), 10_553);
+    }
+}

@@ -1,0 +1,210 @@
+//! Linear classification readout with closed-form softmax cross-entropy
+//! gradients.
+//!
+//! The ODE block maps features u0 -> u(T); the readout maps u(T) -> logits.
+//! Loss and all three gradients (du, dW, db) have closed forms, so this
+//! layer is trained directly in Rust — no artifact needed:
+//!
+//!   p = softmax(u W + b),  L = -mean_i log p[i, y_i]
+//!   dL/dlogits = (p - onehot(y)) / B
+//!   dL/du = dL/dlogits W^T,  dL/dW = u^T dL/dlogits,  dL/db = Σ_rows
+
+use crate::tensor::gemm::{sgemm, sgemm_at, sgemm_bt};
+use crate::util::rng::Rng;
+
+/// Linear readout (D features -> K classes).
+#[derive(Clone, Debug)]
+pub struct Readout {
+    pub d: usize,
+    pub k: usize,
+    /// [D, K] row-major
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+/// Result of a loss evaluation.
+pub struct ReadoutGrads {
+    pub loss: f64,
+    pub accuracy: f64,
+    /// dL/du [B, D]
+    pub du: Vec<f32>,
+    pub dw: Vec<f32>,
+    pub db: Vec<f32>,
+}
+
+impl Readout {
+    pub fn new(rng: &mut Rng, d: usize, k: usize) -> Self {
+        let bound = 1.0 / (d as f32).sqrt();
+        let mut w = vec![0.0f32; d * k];
+        rng.fill_uniform(&mut w, -bound, bound);
+        Readout { d, k, w, b: vec![0.0; k] }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.d * self.k + self.k
+    }
+
+    /// logits = u W + b
+    pub fn logits(&self, bsz: usize, u: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; bsz * self.k];
+        sgemm(bsz, self.d, self.k, u, &self.w, &mut out, 0.0);
+        for r in 0..bsz {
+            for j in 0..self.k {
+                out[r * self.k + j] += self.b[j];
+            }
+        }
+        out
+    }
+
+    /// Mean CE loss + accuracy + all gradients.
+    pub fn loss_and_grads(&self, bsz: usize, u: &[f32], labels: &[usize]) -> ReadoutGrads {
+        debug_assert_eq!(labels.len(), bsz);
+        let mut p = self.logits(bsz, u);
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        // softmax rows + CE
+        for r in 0..bsz {
+            let row = &mut p[r * self.k..(r + 1) * self.k];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut argmax = 0;
+            for (j, x) in row.iter().enumerate() {
+                if *x == mx {
+                    argmax = j;
+                    break;
+                }
+            }
+            if argmax == labels[r] {
+                correct += 1;
+            }
+            let mut z = 0.0f64;
+            for x in row.iter_mut() {
+                *x = (*x - mx).exp();
+                z += *x as f64;
+            }
+            for x in row.iter_mut() {
+                *x = (*x as f64 / z) as f32;
+            }
+            loss -= (row[labels[r]].max(1e-12) as f64).ln();
+        }
+        loss /= bsz as f64;
+        // dlogits = (p - onehot) / B
+        let scale = 1.0 / bsz as f32;
+        for r in 0..bsz {
+            p[r * self.k + labels[r]] -= 1.0;
+        }
+        for x in p.iter_mut() {
+            *x *= scale;
+        }
+        // du = dlogits @ W^T
+        let mut du = vec![0.0f32; bsz * self.d];
+        sgemm_bt(bsz, self.k, self.d, &p, &self.w, &mut du, 0.0);
+        // dW = u^T @ dlogits
+        let mut dw = vec![0.0f32; self.d * self.k];
+        sgemm_at(self.d, bsz, self.k, u, &p, &mut dw, 0.0);
+        // db = column sums
+        let mut db = vec![0.0f32; self.k];
+        for r in 0..bsz {
+            for j in 0..self.k {
+                db[j] += p[r * self.k + j];
+            }
+        }
+        ReadoutGrads { loss, accuracy: correct as f64 / bsz as f64, du, dw, db }
+    }
+
+    /// SGD-style in-place update (the trainer uses its own optimizer state
+    /// for θ; the readout is small enough for plain steps).
+    pub fn apply_grads(&mut self, lr: f32, g: &ReadoutGrads) {
+        for (w, d) in self.w.iter_mut().zip(&g.dw) {
+            *w -= lr * d;
+        }
+        for (b, d) in self.b.iter_mut().zip(&g.db) {
+            *b -= lr * d;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn loss_decreases_under_training() {
+        let mut rng = Rng::new(0);
+        let (bsz, d, k) = (32, 8, 3);
+        let mut ro = Readout::new(&mut rng, d, k);
+        // separable data: class = argmax of first k features
+        let mut u = vec![0.0f32; bsz * d];
+        rng.fill_normal(&mut u);
+        let labels: Vec<usize> = (0..bsz)
+            .map(|r| {
+                let row = &u[r * d..r * d + k];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect();
+        let first = ro.loss_and_grads(bsz, &u, &labels).loss;
+        for _ in 0..200 {
+            let g = ro.loss_and_grads(bsz, &u, &labels);
+            ro.apply_grads(0.5, &g);
+        }
+        let last = ro.loss_and_grads(bsz, &u, &labels);
+        assert!(last.loss < first * 0.2, "{} -> {}", first, last.loss);
+        assert!(last.accuracy > 0.9);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        prop::check("readout-fd", 3, 5, |rng| {
+            let (bsz, d, k) = (4, 5, 3);
+            let ro = Readout::new(rng, d, k);
+            let u = prop::vec_normal(rng, bsz * d);
+            let labels: Vec<usize> = (0..bsz).map(|_| rng.below(k)).collect();
+            let g = ro.loss_and_grads(bsz, &u, &labels);
+            let h = 1e-3f32;
+            // check du at a few entries
+            for idx in [0usize, 7, bsz * d - 1] {
+                let mut up = u.clone();
+                up[idx] += h;
+                let mut um = u.clone();
+                um[idx] -= h;
+                let lp = ro.loss_and_grads(bsz, &up, &labels).loss;
+                let lm = ro.loss_and_grads(bsz, &um, &labels).loss;
+                let fd = (lp - lm) / (2.0 * h as f64);
+                if (fd - g.du[idx] as f64).abs() > 1e-3 * (1.0 + fd.abs()) {
+                    return Err(format!("du[{idx}]: {} vs fd {fd}", g.du[idx]));
+                }
+            }
+            // check dW at a few entries
+            for idx in [0usize, d * k / 2, d * k - 1] {
+                let mut rp = ro.clone();
+                rp.w[idx] += h;
+                let mut rm = ro.clone();
+                rm.w[idx] -= h;
+                let lp = rp.loss_and_grads(bsz, &u, &labels).loss;
+                let lm = rm.loss_and_grads(bsz, &u, &labels).loss;
+                let fd = (lp - lm) / (2.0 * h as f64);
+                if (fd - g.dw[idx] as f64).abs() > 1e-3 * (1.0 + fd.abs()) {
+                    return Err(format!("dw[{idx}]: {} vs fd {fd}", g.dw[idx]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn softmax_probabilities_valid() {
+        let mut rng = Rng::new(9);
+        let ro = Readout::new(&mut rng, 4, 3);
+        let u = prop::vec_normal(&mut rng, 2 * 4);
+        let g = ro.loss_and_grads(2, &u, &[0, 2]);
+        assert!(g.loss > 0.0);
+        assert!(g.accuracy >= 0.0 && g.accuracy <= 1.0);
+        // gradient wrt logits sums to ~0 per row => db sums to 0
+        let s: f32 = g.db.iter().sum();
+        assert!(s.abs() < 1e-6);
+    }
+}

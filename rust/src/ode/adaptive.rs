@@ -1,0 +1,204 @@
+//! Adaptive step-size control (PI controller) for embedded ERK pairs.
+//!
+//! The paper's adaptive experiments use Dopri5 with
+//! `abstol = reltol = 1e-6` (§5.3.2); rejected steps cost forward NFE but
+//! never enter the adjoint (only accepted steps are recorded — see §4:
+//! "rejected time steps have no influence ... on the memory cost of PNODE").
+
+use crate::ode::erk::{erk_step, error_estimate, ErkWorkspace};
+use crate::ode::rhs::OdeRhs;
+use crate::ode::tableau::Tableau;
+use crate::tensor;
+
+/// PI step-size controller.
+#[derive(Clone, Debug)]
+pub struct AdaptiveController {
+    pub atol: f64,
+    pub rtol: f64,
+    pub safety: f64,
+    pub min_factor: f64,
+    pub max_factor: f64,
+    /// PI exponents (set from the method order at run time)
+    pub alpha: f64,
+    pub beta: f64,
+    pub max_steps: usize,
+}
+
+impl AdaptiveController {
+    pub fn new(atol: f64, rtol: f64) -> Self {
+        AdaptiveController {
+            atol,
+            rtol,
+            safety: 0.9,
+            min_factor: 0.2,
+            max_factor: 10.0,
+            alpha: 0.0, // filled per-order
+            beta: 0.04,
+            max_steps: 100_000,
+        }
+    }
+}
+
+/// Outcome of an adaptive integration.
+#[derive(Clone, Debug)]
+pub struct AdaptiveResult {
+    /// accepted (t_n, h_n) pairs, in order
+    pub steps: Vec<(f64, f64)>,
+    pub rejected: usize,
+    pub final_state: Vec<f32>,
+}
+
+/// Integrate adaptively from `t0` to `tf`; `sink` fires on *accepted* steps
+/// with `(accepted_index, t, h, u_n, ks, u_{n+1})`.
+pub fn integrate_adaptive<F>(
+    tab: &Tableau,
+    rhs: &dyn OdeRhs,
+    t0: f64,
+    tf: f64,
+    h0: f64,
+    ctrl: &AdaptiveController,
+    u0: &[f32],
+    mut sink: F,
+) -> AdaptiveResult
+where
+    F: FnMut(usize, f64, f64, &[f32], &[Vec<f32>], &[f32]),
+{
+    assert!(tab.b_err.is_some(), "{} has no embedded pair", tab.name);
+    let n = u0.len();
+    let order = tab.order as f64;
+    let alpha = if ctrl.alpha > 0.0 { ctrl.alpha } else { 0.7 / order };
+    let beta = ctrl.beta / order;
+
+    let mut u = u0.to_vec();
+    let mut u_next = vec![0.0f32; n];
+    let mut err = vec![0.0f32; n];
+    let mut scale_ref = vec![0.0f32; n];
+    let mut ks: Vec<Vec<f32>> = (0..tab.s).map(|_| vec![0.0f32; n]).collect();
+    let mut ws = ErkWorkspace::new(n);
+    let mut fsal: Option<Vec<f32>> = None;
+
+    let mut t = t0;
+    let mut h = h0.min(tf - t0);
+    let mut err_prev: f64 = 1.0;
+    let mut steps = Vec::new();
+    let mut rejected = 0usize;
+    let mut accepted_idx = 0usize;
+
+    for _ in 0..ctrl.max_steps {
+        if t >= tf - 1e-14 * (tf - t0).abs() {
+            break;
+        }
+        h = h.min(tf - t);
+        erk_step(tab, rhs, t, h, &u, &mut ks, &mut u_next, &mut ws, fsal.as_deref());
+        error_estimate(tab, h, &ks, &mut err);
+        for i in 0..n {
+            scale_ref[i] = u[i].abs().max(u_next[i].abs());
+        }
+        let err_norm = tensor::wrms_norm(&err, &scale_ref, ctrl.atol, ctrl.rtol);
+
+        if err_norm <= 1.0 || h <= 1e-14 * (tf - t0).abs() {
+            // accept
+            sink(accepted_idx, t, h, &u, &ks, &u_next);
+            steps.push((t, h));
+            accepted_idx += 1;
+            if tab.fsal {
+                match &mut fsal {
+                    Some(buf) => buf.copy_from_slice(&ks[tab.s - 1]),
+                    None => fsal = Some(ks[tab.s - 1].clone()),
+                }
+            }
+            std::mem::swap(&mut u, &mut u_next);
+            t += h;
+            // PI controller update
+            let e = err_norm.max(1e-10);
+            let factor =
+                ctrl.safety * e.powf(-alpha) * err_prev.powf(beta);
+            h *= factor.clamp(ctrl.min_factor, ctrl.max_factor);
+            err_prev = e;
+        } else {
+            // reject: shrink, invalidate FSAL cache (stage 0 is still valid
+            // since u didn't change, but keep it simple and correct)
+            rejected += 1;
+            fsal = None;
+            let factor = ctrl.safety * err_norm.powf(-1.0 / order);
+            h *= factor.clamp(ctrl.min_factor, 1.0);
+        }
+    }
+
+    AdaptiveResult { steps, rejected, final_state: u }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::rhs::LinearRhs;
+    use crate::ode::tableau;
+
+    #[test]
+    fn adaptive_dopri5_hits_tolerance() {
+        let rhs = LinearRhs::new(2, vec![0.0, 1.0, -1.0, 0.0]);
+        let ctrl = AdaptiveController::new(1e-8, 1e-8);
+        let res = integrate_adaptive(
+            &tableau::DOPRI5,
+            &rhs,
+            0.0,
+            2.0,
+            0.1,
+            &ctrl,
+            &[1.0, 0.0],
+            |_, _, _, _, _, _| {},
+        );
+        let exact = [2.0f64.cos() as f32, -(2.0f64.sin()) as f32];
+        let err = crate::testing::rel_l2(&res.final_state, &exact);
+        assert!(err < 1e-6, "err {err:.2e}");
+        assert!(!res.steps.is_empty());
+        // steps must tile [0, 2]
+        let total: f64 = res.steps.iter().map(|(_, h)| h).sum();
+        assert!((total - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tighter_tolerance_means_more_steps() {
+        let rhs = LinearRhs::new(2, vec![0.0, 1.0, -1.0, 0.0]);
+        let loose = integrate_adaptive(
+            &tableau::DOPRI5,
+            &rhs,
+            0.0,
+            5.0,
+            0.5,
+            &AdaptiveController::new(1e-3, 1e-3),
+            &[1.0, 0.0],
+            |_, _, _, _, _, _| {},
+        );
+        let tight = integrate_adaptive(
+            &tableau::DOPRI5,
+            &rhs,
+            0.0,
+            5.0,
+            0.5,
+            &AdaptiveController::new(1e-10, 1e-10),
+            &[1.0, 0.0],
+            |_, _, _, _, _, _| {},
+        );
+        assert!(tight.steps.len() > loose.steps.len());
+    }
+
+    #[test]
+    fn stiff_problem_forces_tiny_steps() {
+        // du/dt = -50 u: explicit adaptive must take many steps
+        let rhs = LinearRhs::new(1, vec![-50.0]);
+        let res = integrate_adaptive(
+            &tableau::DOPRI5,
+            &rhs,
+            0.0,
+            1.0,
+            0.5,
+            &AdaptiveController::new(1e-6, 1e-6),
+            &[1.0],
+            |_, _, _, _, _, _| {},
+        );
+        // exp(-50) underflows f32 relative comparison; absolute check
+        assert!(res.final_state[0].abs() < 1e-4, "{}", res.final_state[0]);
+        assert!(res.steps.len() > 10);
+    }
+}

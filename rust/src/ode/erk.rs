@@ -1,0 +1,224 @@
+//! Explicit Runge–Kutta stepping with stage recording.
+//!
+//! A step records the stage derivatives `k_i = f(t + c_i h, U_i)` so that
+//! (a) the discrete adjoint can reconstruct the stage states
+//! `U_i = u_n + h Σ_{j<i} a_ij k_j` with pure linear algebra (no extra NFE),
+//! and (b) FSAL schemes can reuse `k_{s-1}` as the next step's `k_0`.
+
+use crate::ode::rhs::OdeRhs;
+use crate::ode::tableau::Tableau;
+use crate::tensor;
+
+/// Reusable scratch so the hot loop allocates nothing.
+pub struct ErkWorkspace {
+    /// stage state U_i
+    stage_state: Vec<f32>,
+}
+
+impl ErkWorkspace {
+    pub fn new(n: usize) -> Self {
+        ErkWorkspace { stage_state: vec![0.0; n] }
+    }
+}
+
+/// Take one ERK step.
+///
+/// * `ks` must hold `tab.s` vectors of length `state_len`; they are filled
+///   with the stage derivatives.
+/// * If `fsal_k0` is `Some` and the tableau is FSAL, stage 0 is copied from
+///   it instead of evaluating `f` (saves one NFE per step).
+/// * `u_next` may not alias `u`.
+pub fn erk_step(
+    tab: &Tableau,
+    rhs: &dyn OdeRhs,
+    t: f64,
+    h: f64,
+    u: &[f32],
+    ks: &mut [Vec<f32>],
+    u_next: &mut [f32],
+    ws: &mut ErkWorkspace,
+    fsal_k0: Option<&[f32]>,
+) {
+    debug_assert_eq!(ks.len(), tab.s);
+    let n = u.len();
+    debug_assert!(ks.iter().all(|k| k.len() == n));
+    for i in 0..tab.s {
+        if i == 0 {
+            if let (true, Some(k0)) = (tab.fsal, fsal_k0) {
+                ks[0].copy_from_slice(k0);
+                continue;
+            }
+            rhs.f(t, u, &mut ks[0]);
+            continue;
+        }
+        // U_i = u + h Σ_{j<i} a_ij k_j
+        let us = &mut ws.stage_state;
+        us.copy_from_slice(u);
+        for (j, kj) in ks.iter().enumerate().take(i) {
+            let a = tab.a(i, j);
+            if a != 0.0 {
+                tensor::axpy((h * a) as f32, kj, us);
+            }
+        }
+        rhs.f(t + tab.c[i] * h, us, &mut ks[i]);
+    }
+    // u_next = u + h Σ b_i k_i
+    u_next.copy_from_slice(u);
+    for i in 0..tab.s {
+        if tab.b[i] != 0.0 {
+            tensor::axpy((h * tab.b[i]) as f32, &ks[i], u_next);
+        }
+    }
+}
+
+/// Reconstruct stage state `U_i` from the recorded stage derivatives.
+pub fn stage_state(
+    tab: &Tableau,
+    i: usize,
+    h: f64,
+    u: &[f32],
+    ks: &[Vec<f32>],
+    out: &mut [f32],
+) {
+    out.copy_from_slice(u);
+    for j in 0..i {
+        let a = tab.a(i, j);
+        if a != 0.0 {
+            tensor::axpy((h * a) as f32, &ks[j], out);
+        }
+    }
+}
+
+/// Local error estimate of an embedded pair: `err = h Σ b_err_i k_i`.
+pub fn error_estimate(tab: &Tableau, h: f64, ks: &[Vec<f32>], out: &mut [f32]) {
+    let b_err = tab.b_err.expect("scheme has no embedded error estimate");
+    tensor::zero(out);
+    for i in 0..tab.s {
+        if b_err[i] != 0.0 {
+            tensor::axpy((h * b_err[i]) as f32, &ks[i], out);
+        }
+    }
+}
+
+/// Integrate with fixed steps from `t0` to `tf` in `nt` steps, calling
+/// `sink` after every step with `(step_index, t_n, h, u_n, ks, u_{n+1})`.
+/// Returns the final state.
+#[allow(clippy::too_many_arguments)]
+pub fn integrate_fixed<F>(
+    tab: &Tableau,
+    rhs: &dyn OdeRhs,
+    t0: f64,
+    tf: f64,
+    nt: usize,
+    u0: &[f32],
+    mut sink: F,
+) -> Vec<f32>
+where
+    F: FnMut(usize, f64, f64, &[f32], &[Vec<f32>], &[f32]),
+{
+    let n = u0.len();
+    let h = (tf - t0) / nt as f64;
+    let mut u = u0.to_vec();
+    let mut u_next = vec![0.0f32; n];
+    let mut ks: Vec<Vec<f32>> = (0..tab.s).map(|_| vec![0.0f32; n]).collect();
+    let mut ws = ErkWorkspace::new(n);
+    let mut fsal: Option<Vec<f32>> = None;
+    for step in 0..nt {
+        let t = t0 + step as f64 * h;
+        erk_step(tab, rhs, t, h, &u, &mut ks, &mut u_next, &mut ws, fsal.as_deref());
+        sink(step, t, h, &u, &ks, &u_next);
+        if tab.fsal {
+            // k_{s-1} at (t+h, u_next) is next step's k_0
+            match &mut fsal {
+                Some(buf) => buf.copy_from_slice(&ks[tab.s - 1]),
+                None => fsal = Some(ks[tab.s - 1].clone()),
+            }
+        }
+        std::mem::swap(&mut u, &mut u_next);
+    }
+    u
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::rhs::LinearRhs;
+    use crate::ode::tableau;
+
+    /// du/dt = A u with A = [[0, 1], [-1, 0]]: solution rotates, |u| const.
+    fn rotation() -> LinearRhs {
+        LinearRhs::new(2, vec![0.0, 1.0, -1.0, 0.0])
+    }
+
+    fn integrate(tab: &Tableau, nt: usize) -> Vec<f32> {
+        let rhs = rotation();
+        integrate_fixed(tab, &rhs, 0.0, 1.0, nt, &[1.0, 0.0], |_, _, _, _, _, _| {})
+    }
+
+    #[test]
+    fn convergence_orders() {
+        // error at t=1 must shrink like h^order
+        let exact = [1.0f64.cos() as f32, -(1.0f64.sin()) as f32];
+        for (tab, min_rate) in [
+            (&tableau::EULER, 0.9),
+            (&tableau::MIDPOINT, 1.9),
+            (&tableau::BOSH3, 2.9),
+            (&tableau::RK4, 3.9),
+            (&tableau::DOPRI5, 4.5),
+        ] {
+            let e1 = crate::testing::rel_l2(&integrate(tab, 10), &exact);
+            let e2 = crate::testing::rel_l2(&integrate(tab, 20), &exact);
+            let rate = (e1 / e2).log2();
+            // escape when the error already sits at the f32 roundoff floor
+            assert!(
+                rate > min_rate || e2 < 1e-6,
+                "{}: rate {rate:.2} (e1={e1:.2e}, e2={e2:.2e})",
+                tab.name
+            );
+        }
+    }
+
+    #[test]
+    fn fsal_saves_evaluations() {
+        let rhs = rotation();
+        let nt = 10;
+        integrate_fixed(&tableau::DOPRI5, &rhs, 0.0, 1.0, nt, &[1.0, 0.0], |_, _, _, _, _, _| {});
+        // 7 stages, FSAL => 7 + 6*(nt-1) forward evals
+        assert_eq!(rhs.nfe().forward, (7 + 6 * (nt - 1)) as u64);
+    }
+
+    #[test]
+    fn stage_state_reconstruction() {
+        let rhs = rotation();
+        let tab = &tableau::RK4;
+        let n = 2;
+        let u = vec![0.3f32, -0.7];
+        let mut ks: Vec<Vec<f32>> = (0..tab.s).map(|_| vec![0.0f32; n]).collect();
+        let mut u_next = vec![0.0f32; n];
+        let mut ws = ErkWorkspace::new(n);
+        let (t, h) = (0.2, 0.05);
+        erk_step(tab, &rhs, t, h, &u, &mut ks, &mut u_next, &mut ws, None);
+        // reconstructed U_i must satisfy k_i = f(t + c_i h, U_i)
+        for i in 0..tab.s {
+            let mut ui = vec![0.0f32; n];
+            stage_state(tab, i, h, &u, &ks, &mut ui);
+            let mut fi = vec![0.0f32; n];
+            rhs.f(t + tab.c[i] * h, &ui, &mut fi);
+            crate::testing::assert_allclose(&fi, &ks[i], 1e-6, 1e-7, "stage recon");
+        }
+    }
+
+    #[test]
+    fn error_estimate_is_small_for_smooth_problem() {
+        let rhs = rotation();
+        let tab = &tableau::DOPRI5;
+        let u = vec![1.0f32, 0.0];
+        let mut ks: Vec<Vec<f32>> = (0..tab.s).map(|_| vec![0.0f32; 2]).collect();
+        let mut u_next = vec![0.0f32; 2];
+        let mut ws = ErkWorkspace::new(2);
+        erk_step(tab, &rhs, 0.0, 0.01, &u, &mut ks, &mut u_next, &mut ws, None);
+        let mut err = vec![0.0f32; 2];
+        error_estimate(tab, 0.01, &ks, &mut err);
+        assert!(crate::tensor::nrm2(&err) < 1e-10);
+    }
+}

@@ -1,0 +1,237 @@
+//! Implicit theta-method stepping (backward Euler θ=1, Crank–Nicolson θ=½)
+//! with Jacobian-free Newton–GMRES — the capability the paper argues only
+//! PNODE's high-level adjoint can support (§3.3).
+//!
+//! Step equation:  u_{n+1} = u_n + h [ (1-θ) f(t_n, u_n) + θ f(t_{n+1}, u_{n+1}) ]
+//! Newton residual: R(x) = x - u_n - h (1-θ) f_n - h θ f(t_{n+1}, x)
+//! Jacobian action: (∂R/∂x) w = w - h θ (∂f/∂u)(x) w   — via the JVP
+//! primitive, so the nonlinear solver never builds a matrix and never
+//! enters any AD graph (the paper's key point for memory).
+
+use crate::linalg::newton::{newton_solve, NewtonOptions, NewtonResult};
+use crate::ode::rhs::OdeRhs;
+use crate::tensor;
+
+/// θ-scheme parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ThetaScheme {
+    /// implicit weight θ ∈ (0, 1]
+    pub theta: f64,
+    pub name: &'static str,
+    pub order: usize,
+}
+
+impl ThetaScheme {
+    pub fn backward_euler() -> Self {
+        ThetaScheme { theta: 1.0, name: "beuler", order: 1 }
+    }
+
+    pub fn crank_nicolson() -> Self {
+        ThetaScheme { theta: 0.5, name: "cn", order: 2 }
+    }
+}
+
+/// Record of one implicit step (what the adjoint needs).
+#[derive(Clone, Debug)]
+pub struct ImplicitStepRecord {
+    pub newton: NewtonResult,
+}
+
+/// Implicit stepper with reusable workspace.
+pub struct ImplicitStepper {
+    pub scheme: ThetaScheme,
+    pub newton_opts: NewtonOptions,
+    f_n: Vec<f32>,
+    f_x: Vec<f32>,
+}
+
+impl ImplicitStepper {
+    pub fn new(scheme: ThetaScheme, n: usize) -> Self {
+        ImplicitStepper {
+            scheme,
+            newton_opts: NewtonOptions::default(),
+            f_n: vec![0.0; n],
+            f_x: vec![0.0; n],
+        }
+    }
+
+    /// One step: fills `u_next` (also the Newton iterate); returns the
+    /// Newton statistics.
+    pub fn step(
+        &mut self,
+        rhs: &dyn OdeRhs,
+        t: f64,
+        h: f64,
+        u: &[f32],
+        u_next: &mut [f32],
+    ) -> ImplicitStepRecord {
+        let theta = self.scheme.theta;
+        let n = u.len();
+        // explicit part: rhs_const = u_n + h(1-θ) f(t_n, u_n)
+        let mut rhs_const = u.to_vec();
+        if theta < 1.0 {
+            rhs.f(t, u, &mut self.f_n);
+            tensor::axpy((h * (1.0 - theta)) as f32, &self.f_n, &mut rhs_const);
+        }
+        // predictor: forward Euler
+        if theta >= 1.0 {
+            rhs.f(t, u, &mut self.f_n);
+        }
+        u_next.copy_from_slice(u);
+        tensor::axpy(h as f32, &self.f_n, u_next);
+
+        let t1 = t + h;
+        let f_x = &mut self.f_x;
+        let newton = {
+            let residual = |x: &[f32], out: &mut [f32]| {
+                rhs.f(t1, x, f_x);
+                for i in 0..n {
+                    out[i] = x[i] - rhs_const[i] - (h * theta) as f32 * f_x[i];
+                }
+            };
+            let mut jw = vec![0.0f32; n];
+            let jacobian = |x: &[f32], w: &[f32], out: &mut [f32]| {
+                rhs.jvp(t1, x, w, &mut jw);
+                for i in 0..n {
+                    out[i] = w[i] - (h * theta) as f32 * jw[i];
+                }
+            };
+            newton_solve(residual, jacobian, u_next, &self.newton_opts)
+        };
+        ImplicitStepRecord { newton }
+    }
+}
+
+/// Fixed-step implicit integration; `sink(step, t, h, u_n, u_{n+1})` fires
+/// after each step.
+pub fn integrate_implicit<F>(
+    scheme: ThetaScheme,
+    rhs: &dyn OdeRhs,
+    t0: f64,
+    tf: f64,
+    nt: usize,
+    u0: &[f32],
+    mut sink: F,
+) -> Vec<f32>
+where
+    F: FnMut(usize, f64, f64, &[f32], &[f32]),
+{
+    let n = u0.len();
+    let h = (tf - t0) / nt as f64;
+    let mut stepper = ImplicitStepper::new(scheme, n);
+    let mut u = u0.to_vec();
+    let mut u_next = vec![0.0f32; n];
+    for step in 0..nt {
+        let t = t0 + step as f64 * h;
+        stepper.step(rhs, t, h, &u, &mut u_next);
+        sink(step, t, h, &u, &u_next);
+        std::mem::swap(&mut u, &mut u_next);
+    }
+    u
+}
+
+/// Implicit integration over a *non-uniform* grid `ts` (used by the stiff
+/// task: log-spaced observation times).
+pub fn integrate_implicit_grid<F>(
+    scheme: ThetaScheme,
+    rhs: &dyn OdeRhs,
+    ts: &[f64],
+    u0: &[f32],
+    mut sink: F,
+) -> Vec<f32>
+where
+    F: FnMut(usize, f64, f64, &[f32], &[f32]),
+{
+    let n = u0.len();
+    let mut stepper = ImplicitStepper::new(scheme, n);
+    let mut u = u0.to_vec();
+    let mut u_next = vec![0.0f32; n];
+    for step in 0..ts.len() - 1 {
+        let t = ts[step];
+        let h = ts[step + 1] - ts[step];
+        stepper.step(rhs, t, h, &u, &mut u_next);
+        sink(step, t, h, &u, &u_next);
+        std::mem::swap(&mut u, &mut u_next);
+    }
+    u
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::rhs::{LinearRhs, RobertsonRhs};
+
+    #[test]
+    fn backward_euler_is_first_order() {
+        let rhs = LinearRhs::new(1, vec![-1.0]);
+        let exact = (-1.0f64).exp() as f32;
+        let run = |nt| {
+            let u = integrate_implicit(
+                ThetaScheme::backward_euler(),
+                &rhs,
+                0.0,
+                1.0,
+                nt,
+                &[1.0],
+                |_, _, _, _, _| {},
+            );
+            (u[0] - exact).abs() as f64
+        };
+        let (e1, e2) = (run(20), run(40));
+        let rate = (e1 / e2).log2();
+        assert!(rate > 0.8 && rate < 1.3, "rate {rate}");
+    }
+
+    #[test]
+    fn crank_nicolson_is_second_order() {
+        let rhs = LinearRhs::new(2, vec![0.0, 1.0, -1.0, 0.0]);
+        let exact = [1.0f64.cos() as f32, -(1.0f64.sin()) as f32];
+        let run = |nt| {
+            let u = integrate_implicit(
+                ThetaScheme::crank_nicolson(),
+                &rhs,
+                0.0,
+                1.0,
+                nt,
+                &[1.0, 0.0],
+                |_, _, _, _, _| {},
+            );
+            crate::testing::rel_l2(&u, &exact)
+        };
+        let (e1, e2) = (run(20), run(40));
+        let rate = (e1 / e2).log2();
+        assert!(rate > 1.8, "rate {rate} (e1 {e1:.2e}, e2 {e2:.2e})");
+    }
+
+    #[test]
+    fn unconditional_stability_on_stiff_decay() {
+        // du/dt = -1000 u with h = 0.1 (λh = -100): explicit Euler explodes,
+        // BE stays bounded and positive.
+        let rhs = LinearRhs::new(1, vec![-1000.0]);
+        let u = integrate_implicit(
+            ThetaScheme::backward_euler(),
+            &rhs,
+            0.0,
+            1.0,
+            10,
+            &[1.0],
+            |_, _, _, _, _| {},
+        );
+        assert!(u[0] >= 0.0 && u[0] < 1e-3, "{}", u[0]);
+    }
+
+    #[test]
+    fn robertson_short_integration_conserves_mass() {
+        let rhs = RobertsonRhs::default();
+        let u = integrate_implicit_grid(
+            ThetaScheme::crank_nicolson(),
+            &rhs,
+            &[0.0, 1e-4, 1e-3, 1e-2, 0.1, 1.0],
+            &[1.0, 0.0, 0.0],
+            |_, _, _, _, _| {},
+        );
+        let mass = u[0] as f64 + u[1] as f64 + u[2] as f64;
+        assert!((mass - 1.0).abs() < 1e-4, "mass {mass}");
+        assert!(u[0] < 1.0 && u[2] > 0.0);
+    }
+}

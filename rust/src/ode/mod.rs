@@ -1,0 +1,18 @@
+//! Time integration: Butcher tableaus, explicit RK (fixed + adaptive) and
+//! implicit theta-methods (backward Euler, Crank–Nicolson) with
+//! matrix-free Newton–GMRES.  The discrete adjoints live in
+//! [`crate::adjoint`]; the checkpointing machinery in [`crate::checkpoint`].
+
+pub mod adaptive;
+pub mod erk;
+pub mod implicit;
+pub mod rhs;
+pub mod rhs_xla;
+pub mod tableau;
+
+pub use adaptive::{AdaptiveController, AdaptiveResult};
+pub use erk::{erk_step, ErkWorkspace};
+pub use implicit::{ImplicitStepper, ThetaScheme};
+pub use rhs::{LinearRhs, MlpRhs, Nfe, OdeRhs, RobertsonRhs};
+pub use rhs_xla::{XlaCnfRhs, XlaRhs};
+pub use tableau::{Scheme, Tableau};

@@ -1,0 +1,491 @@
+//! The high-level AD primitive of the whole framework: the ODE right-hand
+//! side `f(u, θ, t)` together with its derivative actions.
+//!
+//! Everything above this trait (integrators, adjoints, checkpointing,
+//! gradient methods) is generic over [`OdeRhs`]; implementations:
+//!
+//! * [`crate::ode::rhs_xla::XlaRhs`] — the production path, executing the
+//!   AOT-compiled Pallas/JAX artifacts through PJRT,
+//! * [`MlpRhs`] — the pure-Rust mirror (XLA-free tests + cross-checks),
+//! * [`LinearRhs`] — analytic `du/dt = A u` with exact Jacobians,
+//! * [`RobertsonRhs`] — the true stiff chemistry of Section 5.3, used to
+//!   generate ground-truth data and to exercise the implicit solvers.
+
+use std::cell::Cell;
+
+use crate::nn::{Act, Mlp};
+
+/// Forward/backward function-evaluation counters (NFE-F / NFE-B in the
+/// paper's tables).  Forward = `f` and `jvp`; backward = `vjp_*`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Nfe {
+    pub forward: u64,
+    pub backward: u64,
+}
+
+/// The neural-ODE right-hand side and its derivative actions.
+///
+/// State vectors are flat `[B*D]` f32 slices; parameters a flat `[P]`
+/// vector owned by the implementation.
+pub trait OdeRhs {
+    /// Flat state length (batch × state dim).
+    fn state_len(&self) -> usize;
+    /// Parameter count.
+    fn param_len(&self) -> usize;
+    fn params(&self) -> &[f32];
+    fn set_params(&mut self, theta: &[f32]);
+
+    /// out = f(u, θ, t)
+    fn f(&self, t: f64, u: &[f32], out: &mut [f32]);
+
+    /// out = (∂f/∂u)ᵀ v
+    fn vjp_u(&self, t: f64, u: &[f32], v: &[f32], out: &mut [f32]);
+
+    /// out_u = (∂f/∂u)ᵀ v ; grad_theta += (∂f/∂θ)ᵀ v
+    fn vjp_both(&self, t: f64, u: &[f32], v: &[f32], out_u: &mut [f32], grad_theta: &mut [f32]);
+
+    /// out = (∂f/∂u) w
+    fn jvp(&self, t: f64, u: &[f32], w: &[f32], out: &mut [f32]);
+
+    fn nfe(&self) -> Nfe;
+    fn reset_nfe(&self);
+
+    /// Bytes of intermediate activations one `f` evaluation materialises
+    /// (feeds the Table-2 memory model; 0 for analytic RHSs).
+    fn activation_bytes_per_eval(&self) -> u64 {
+        0
+    }
+}
+
+/// Shared counter plumbing for implementations.
+#[derive(Clone, Debug, Default)]
+pub struct NfeCounter {
+    forward: Cell<u64>,
+    backward: Cell<u64>,
+}
+
+impl NfeCounter {
+    pub fn hit_forward(&self) {
+        self.forward.set(self.forward.get() + 1);
+    }
+
+    pub fn hit_backward(&self) {
+        self.backward.set(self.backward.get() + 1);
+    }
+
+    pub fn get(&self) -> Nfe {
+        Nfe { forward: self.forward.get(), backward: self.backward.get() }
+    }
+
+    pub fn reset(&self) {
+        self.forward.set(0);
+        self.backward.set(0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LinearRhs: du/dt = A u (A trainable)
+// ---------------------------------------------------------------------------
+
+/// `du/dt = A u` with `θ = vec(A)` — exact Jacobians, ideal for gradient
+/// checks: ∂f/∂u = A, (∂f/∂θ)ᵀv accumulates v uᵀ.
+pub struct LinearRhs {
+    pub d: usize,
+    a: Vec<f32>, // [d, d] row-major
+    nfe: NfeCounter,
+}
+
+impl LinearRhs {
+    pub fn new(d: usize, a: Vec<f32>) -> Self {
+        assert_eq!(a.len(), d * d);
+        LinearRhs { d, a, nfe: NfeCounter::default() }
+    }
+}
+
+impl OdeRhs for LinearRhs {
+    fn state_len(&self) -> usize {
+        self.d
+    }
+
+    fn param_len(&self) -> usize {
+        self.d * self.d
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.a
+    }
+
+    fn set_params(&mut self, theta: &[f32]) {
+        self.a.copy_from_slice(theta);
+    }
+
+    fn f(&self, _t: f64, u: &[f32], out: &mut [f32]) {
+        self.nfe.hit_forward();
+        for i in 0..self.d {
+            let mut acc = 0.0f32;
+            for j in 0..self.d {
+                acc += self.a[i * self.d + j] * u[j];
+            }
+            out[i] = acc;
+        }
+    }
+
+    fn vjp_u(&self, _t: f64, _u: &[f32], v: &[f32], out: &mut [f32]) {
+        self.nfe.hit_backward();
+        // Aᵀ v
+        for j in 0..self.d {
+            let mut acc = 0.0f32;
+            for i in 0..self.d {
+                acc += self.a[i * self.d + j] * v[i];
+            }
+            out[j] = acc;
+        }
+    }
+
+    fn vjp_both(&self, t: f64, u: &[f32], v: &[f32], out_u: &mut [f32], grad_theta: &mut [f32]) {
+        self.vjp_u(t, u, v, out_u);
+        // ∂f_i/∂A_ij = u_j  =>  gA_ij += v_i u_j
+        for i in 0..self.d {
+            for j in 0..self.d {
+                grad_theta[i * self.d + j] += v[i] * u[j];
+            }
+        }
+    }
+
+    fn jvp(&self, t: f64, _u: &[f32], w: &[f32], out: &mut [f32]) {
+        self.nfe.hit_forward();
+        // A w — same as f with w
+        let saved = self.nfe.get();
+        self.f(t, w, out);
+        // f() already counted; undo double-count of this jvp
+        self.nfe.forward.set(saved.forward);
+    }
+
+    fn nfe(&self) -> Nfe {
+        self.nfe.get()
+    }
+
+    fn reset_nfe(&self) {
+        self.nfe.reset();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RobertsonRhs: the true stiff chemistry (data generation / implicit tests)
+// ---------------------------------------------------------------------------
+
+/// Robertson's equations (paper eq. 14):
+///   u1' = -k1 u1 + k3 u2 u3
+///   u2' =  k1 u1 - k2 u2² - k3 u2 u3
+///   u3' =  k2 u2²
+/// Stiff with k1 = 0.04, k2 = 3e7, k3 = 1e4.  Not trainable (param_len 0).
+pub struct RobertsonRhs {
+    pub k1: f64,
+    pub k2: f64,
+    pub k3: f64,
+    nfe: NfeCounter,
+}
+
+impl Default for RobertsonRhs {
+    fn default() -> Self {
+        RobertsonRhs { k1: 0.04, k2: 3e7, k3: 1e4, nfe: NfeCounter::default() }
+    }
+}
+
+impl RobertsonRhs {
+    /// 3×3 Jacobian at u.
+    pub fn jacobian(&self, u: &[f32]) -> [[f64; 3]; 3] {
+        let (k1, k2, k3) = (self.k1, self.k2, self.k3);
+        let (u2, u3) = (u[1] as f64, u[2] as f64);
+        [
+            [-k1, k3 * u3, k3 * u2],
+            [k1, -2.0 * k2 * u2 - k3 * u3, -k3 * u2],
+            [0.0, 2.0 * k2 * u2, 0.0],
+        ]
+    }
+}
+
+impl OdeRhs for RobertsonRhs {
+    fn state_len(&self) -> usize {
+        3
+    }
+
+    fn param_len(&self) -> usize {
+        0
+    }
+
+    fn params(&self) -> &[f32] {
+        &[]
+    }
+
+    fn set_params(&mut self, _theta: &[f32]) {}
+
+    fn f(&self, _t: f64, u: &[f32], out: &mut [f32]) {
+        self.nfe.hit_forward();
+        let (u1, u2, u3) = (u[0] as f64, u[1] as f64, u[2] as f64);
+        out[0] = (-self.k1 * u1 + self.k3 * u2 * u3) as f32;
+        out[1] = (self.k1 * u1 - self.k2 * u2 * u2 - self.k3 * u2 * u3) as f32;
+        out[2] = (self.k2 * u2 * u2) as f32;
+    }
+
+    fn vjp_u(&self, _t: f64, u: &[f32], v: &[f32], out: &mut [f32]) {
+        self.nfe.hit_backward();
+        let j = self.jacobian(u);
+        for col in 0..3 {
+            out[col] =
+                (j[0][col] * v[0] as f64 + j[1][col] * v[1] as f64 + j[2][col] * v[2] as f64)
+                    as f32;
+        }
+    }
+
+    fn vjp_both(&self, t: f64, u: &[f32], v: &[f32], out_u: &mut [f32], _gt: &mut [f32]) {
+        self.vjp_u(t, u, v, out_u);
+    }
+
+    fn jvp(&self, _t: f64, u: &[f32], w: &[f32], out: &mut [f32]) {
+        self.nfe.hit_forward();
+        let j = self.jacobian(u);
+        for row in 0..3 {
+            out[row] =
+                (j[row][0] * w[0] as f64 + j[row][1] * w[1] as f64 + j[row][2] * w[2] as f64)
+                    as f32;
+        }
+    }
+
+    fn nfe(&self) -> Nfe {
+        self.nfe.get()
+    }
+
+    fn reset_nfe(&self) {
+        self.nfe.reset();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MlpRhs: pure-Rust neural RHS (mirror of the XLA artifacts)
+// ---------------------------------------------------------------------------
+
+/// Neural RHS backed by the pure-Rust [`Mlp`].
+///
+/// If `time_dep`, the MLP input is `concat([u, t])` per sample (matching
+/// `model.py::_augment_time`); gradients wrt the appended `t` column are
+/// dropped.
+pub struct MlpRhs {
+    mlp: Mlp,
+    pub batch: usize,
+    pub state_dim: usize,
+    pub time_dep: bool,
+    nfe: NfeCounter,
+}
+
+impl MlpRhs {
+    pub fn new(dims: Vec<usize>, act: Act, time_dep: bool, batch: usize, theta: Vec<f32>) -> Self {
+        let state_dim = *dims.last().unwrap();
+        let expect_in = if time_dep { state_dim + 1 } else { state_dim };
+        assert_eq!(dims[0], expect_in, "in dim mismatch for time_dep={time_dep}");
+        MlpRhs {
+            mlp: Mlp::new(dims, act, theta),
+            batch,
+            state_dim,
+            time_dep,
+            nfe: NfeCounter::default(),
+        }
+    }
+
+    fn augment(&self, t: f64, u: &[f32]) -> Vec<f32> {
+        if !self.time_dep {
+            return u.to_vec();
+        }
+        let d = self.state_dim;
+        let mut x = vec![0.0f32; self.batch * (d + 1)];
+        for r in 0..self.batch {
+            x[r * (d + 1)..r * (d + 1) + d].copy_from_slice(&u[r * d..(r + 1) * d]);
+            x[r * (d + 1) + d] = t as f32;
+        }
+        x
+    }
+
+    fn strip(&self, gx: &[f32], out: &mut [f32]) {
+        if !self.time_dep {
+            out.copy_from_slice(gx);
+            return;
+        }
+        let d = self.state_dim;
+        for r in 0..self.batch {
+            out[r * d..(r + 1) * d].copy_from_slice(&gx[r * (d + 1)..r * (d + 1) + d]);
+        }
+    }
+}
+
+impl OdeRhs for MlpRhs {
+    fn state_len(&self) -> usize {
+        self.batch * self.state_dim
+    }
+
+    fn param_len(&self) -> usize {
+        self.mlp.params().len()
+    }
+
+    fn params(&self) -> &[f32] {
+        self.mlp.params()
+    }
+
+    fn set_params(&mut self, theta: &[f32]) {
+        self.mlp.set_params(theta);
+    }
+
+    fn f(&self, t: f64, u: &[f32], out: &mut [f32]) {
+        self.nfe.hit_forward();
+        let x = self.augment(t, u);
+        let mut y = Vec::new();
+        self.mlp.forward(self.batch, &x, &mut y);
+        out.copy_from_slice(&y);
+    }
+
+    fn vjp_u(&self, t: f64, u: &[f32], v: &[f32], out: &mut [f32]) {
+        self.nfe.hit_backward();
+        let x = self.augment(t, u);
+        let mut gx = Vec::new();
+        self.mlp.vjp(self.batch, &x, v, &mut gx, None);
+        self.strip(&gx, out);
+    }
+
+    fn vjp_both(&self, t: f64, u: &[f32], v: &[f32], out_u: &mut [f32], grad_theta: &mut [f32]) {
+        self.nfe.hit_backward();
+        let x = self.augment(t, u);
+        let mut gx = Vec::new();
+        self.mlp.vjp(self.batch, &x, v, &mut gx, Some(grad_theta));
+        self.strip(&gx, out_u);
+    }
+
+    fn jvp(&self, t: f64, u: &[f32], w: &[f32], out: &mut [f32]) {
+        self.nfe.hit_forward();
+        let x = self.augment(t, u);
+        // tangent of the augmented input: dt column is 0
+        let dx = if self.time_dep {
+            let d = self.state_dim;
+            let mut dx = vec![0.0f32; self.batch * (d + 1)];
+            for r in 0..self.batch {
+                dx[r * (d + 1)..r * (d + 1) + d].copy_from_slice(&w[r * d..(r + 1) * d]);
+            }
+            dx
+        } else {
+            w.to_vec()
+        };
+        let mut dy = Vec::new();
+        self.mlp.jvp(self.batch, &x, &dx, &mut dy);
+        out.copy_from_slice(&dy);
+    }
+
+    fn nfe(&self) -> Nfe {
+        self.nfe.get()
+    }
+
+    fn reset_nfe(&self) {
+        self.nfe.reset();
+    }
+
+    fn activation_bytes_per_eval(&self) -> u64 {
+        self.mlp.activation_bytes(self.batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+    use crate::util::rng::Rng;
+
+    fn mk_mlp(seed: u64) -> MlpRhs {
+        let dims = vec![5, 8, 4];
+        let mut rng = Rng::new(seed);
+        let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+        MlpRhs::new(dims, Act::Tanh, true, 3, theta)
+    }
+
+    #[test]
+    fn linear_rhs_exact() {
+        let a = vec![0.0, 1.0, -1.0, 0.0]; // rotation generator
+        let rhs = LinearRhs::new(2, a);
+        let mut out = [0.0f32; 2];
+        rhs.f(0.0, &[1.0, 0.0], &mut out);
+        assert_eq!(out, [0.0, -1.0]);
+        let mut vj = [0.0f32; 2];
+        rhs.vjp_u(0.0, &[1.0, 0.0], &[1.0, 0.0], &mut vj);
+        assert_eq!(vj, [0.0, 1.0]); // Aᵀ e1
+    }
+
+    #[test]
+    fn robertson_mass_conservation() {
+        // u1' + u2' + u3' = 0
+        let rhs = RobertsonRhs::default();
+        let u = [0.7f32, 1e-5, 0.3];
+        let mut du = [0.0f32; 3];
+        rhs.f(0.0, &u, &mut du);
+        let s = du[0] as f64 + du[1] as f64 + du[2] as f64;
+        assert!(s.abs() < 1e-4, "{s}");
+    }
+
+    #[test]
+    fn robertson_jacobian_matches_fd() {
+        let rhs = RobertsonRhs::default();
+        let u = [0.9f32, 2e-5, 0.1];
+        let j = rhs.jacobian(&u);
+        let h = 1e-6f32;
+        for col in 0..3 {
+            let mut up = u;
+            up[col] += h;
+            let mut um = u;
+            um[col] -= h;
+            let mut fp = [0.0f32; 3];
+            let mut fm = [0.0f32; 3];
+            rhs.f(0.0, &up, &mut fp);
+            rhs.f(0.0, &um, &mut fm);
+            for row in 0..3 {
+                let fd = (fp[row] as f64 - fm[row] as f64) / (2.0 * h as f64);
+                let rel = (fd - j[row][col]).abs() / (1.0 + j[row][col].abs());
+                assert!(rel < 2e-2, "J[{row}][{col}] {} vs fd {fd}", j[row][col]);
+            }
+        }
+    }
+
+    #[test]
+    fn mlp_rhs_duality_and_nfe() {
+        prop::check("mlp-rhs-duality", 11, 10, |rng| {
+            let rhs = mk_mlp(rng.next_u64());
+            let n = rhs.state_len();
+            let u = prop::vec_normal(rng, n);
+            let w = prop::vec_normal(rng, n);
+            let v = prop::vec_normal(rng, n);
+            let mut jw = vec![0.0f32; n];
+            rhs.jvp(0.3, &u, &w, &mut jw);
+            let mut jtv = vec![0.0f32; n];
+            rhs.vjp_u(0.3, &u, &v, &mut jtv);
+            let lhs = crate::tensor::dot(&v, &jw);
+            let rhsv = crate::tensor::dot(&jtv, &w);
+            if (lhs - rhsv).abs() > 1e-4 * (1.0 + lhs.abs()) {
+                return Err(format!("duality broken: {lhs} vs {rhsv}"));
+            }
+            Ok(())
+        });
+        let rhs = mk_mlp(1);
+        rhs.reset_nfe();
+        let u = vec![0.1f32; rhs.state_len()];
+        let mut out = vec![0.0f32; rhs.state_len()];
+        rhs.f(0.0, &u, &mut out);
+        rhs.f(0.1, &u, &mut out);
+        rhs.vjp_u(0.0, &u, &out.clone(), &mut out);
+        assert_eq!(rhs.nfe(), Nfe { forward: 2, backward: 1 });
+    }
+
+    #[test]
+    fn time_dependence_is_real() {
+        let rhs = mk_mlp(5);
+        let u = vec![0.3f32; rhs.state_len()];
+        let mut a = vec![0.0f32; rhs.state_len()];
+        let mut b = vec![0.0f32; rhs.state_len()];
+        rhs.f(0.0, &u, &mut a);
+        rhs.f(0.9, &u, &mut b);
+        assert!(crate::tensor::max_abs_diff(&a, &b) > 1e-6);
+    }
+}

@@ -1,0 +1,264 @@
+//! [`XlaRhs`]: the production `OdeRhs` executing AOT-compiled artifacts.
+//!
+//! All four primitives (`f`, `vjp_u`, `vjp_both`, `jvp`) are separate HLO
+//! executables compiled at startup from `artifacts/<config>.<prim>.hlo.txt`;
+//! the L2 `vjp_both` fuses the u- and θ-cotangents over one shared forward
+//! recompute (the Pallas dense kernel runs inside all of them).
+
+use std::cell::RefCell;
+
+use anyhow::Result;
+
+use crate::ode::rhs::{Nfe, NfeCounter, OdeRhs};
+use crate::runtime::ModelArtifacts;
+
+/// Neural RHS backed by PJRT executables.
+pub struct XlaRhs {
+    arts: ModelArtifacts,
+    theta: Vec<f32>,
+    batch: usize,
+    state_dim: usize,
+    nfe: NfeCounter,
+    /// reusable t buffer ([1]-shaped artifact input)
+    t_buf: RefCell<[f32; 1]>,
+}
+
+impl XlaRhs {
+    pub fn new(arts: ModelArtifacts, theta: Vec<f32>) -> Result<Self> {
+        anyhow::ensure!(
+            arts.entry.kind == "mlp",
+            "XlaRhs wants an 'mlp' config, got {:?} ({})",
+            arts.entry.kind,
+            arts.entry.name
+        );
+        anyhow::ensure!(
+            theta.len() == arts.entry.param_count,
+            "theta len {} != param_count {}",
+            theta.len(),
+            arts.entry.param_count
+        );
+        let batch = arts.entry.batch;
+        let state_dim = arts.entry.state_dim;
+        Ok(XlaRhs { arts, theta, batch, state_dim, nfe: NfeCounter::default(), t_buf: RefCell::new([0.0]) })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn state_dim(&self) -> usize {
+        self.state_dim
+    }
+
+    pub fn artifacts(&self) -> &ModelArtifacts {
+        &self.arts
+    }
+
+    fn run1(&self, prim: &str, t: f64, u: &[f32], extra: Option<&[f32]>, out: &mut [f32]) {
+        self.t_buf.borrow_mut()[0] = t as f32;
+        let tb = self.t_buf.borrow();
+        let exe = self.arts.get(prim).expect("primitive loaded");
+        let res = match extra {
+            Some(v) => exe.call(&[u, &self.theta, &tb[..], v]),
+            None => exe.call(&[u, &self.theta, &tb[..]]),
+        }
+        .unwrap_or_else(|e| panic!("XLA {prim} failed: {e:#}"));
+        out.copy_from_slice(&res[0]);
+    }
+}
+
+impl OdeRhs for XlaRhs {
+    fn state_len(&self) -> usize {
+        self.batch * self.state_dim
+    }
+
+    fn param_len(&self) -> usize {
+        self.theta.len()
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.theta
+    }
+
+    fn set_params(&mut self, theta: &[f32]) {
+        self.theta.copy_from_slice(theta);
+    }
+
+    fn f(&self, t: f64, u: &[f32], out: &mut [f32]) {
+        self.nfe.hit_forward();
+        self.run1("f", t, u, None, out);
+    }
+
+    fn vjp_u(&self, t: f64, u: &[f32], v: &[f32], out: &mut [f32]) {
+        self.nfe.hit_backward();
+        self.run1("vjp_u", t, u, Some(v), out);
+    }
+
+    fn vjp_both(&self, t: f64, u: &[f32], v: &[f32], out_u: &mut [f32], grad_theta: &mut [f32]) {
+        self.nfe.hit_backward();
+        self.t_buf.borrow_mut()[0] = t as f32;
+        let tb = self.t_buf.borrow();
+        let exe = self.arts.get("vjp_both").expect("vjp_both loaded");
+        let res = exe
+            .call(&[u, &self.theta, &tb[..], v])
+            .unwrap_or_else(|e| panic!("XLA vjp_both failed: {e:#}"));
+        out_u.copy_from_slice(&res[0]);
+        for (g, d) in grad_theta.iter_mut().zip(&res[1]) {
+            *g += d;
+        }
+    }
+
+    fn jvp(&self, t: f64, u: &[f32], w: &[f32], out: &mut [f32]) {
+        self.nfe.hit_forward();
+        self.run1("jvp", t, u, Some(w), out);
+    }
+
+    fn nfe(&self) -> Nfe {
+        self.nfe.get()
+    }
+
+    fn reset_nfe(&self) {
+        self.nfe.reset();
+    }
+
+    fn activation_bytes_per_eval(&self) -> u64 {
+        // same formula as the Rust mirror: per-layer inputs + preactivations
+        let dims = &self.arts.entry.dims;
+        let mut elems = 0usize;
+        for w in dims.windows(2) {
+            elems += self.batch * w[0] + self.batch * w[1];
+        }
+        (elems * 4) as u64
+    }
+}
+
+/// Augmented CNF dynamics backed by PJRT executables (`faug`, `vjp_aug`).
+///
+/// State layout: `[x (B*D) | logp (B)]` flattened; ε is the Hutchinson
+/// probe, fixed per training iteration (`set_eps`).
+pub struct XlaCnfRhs {
+    arts: ModelArtifacts,
+    theta: Vec<f32>,
+    batch: usize,
+    dim: usize,
+    eps: Vec<f32>,
+    nfe: NfeCounter,
+    t_buf: RefCell<[f32; 1]>,
+}
+
+impl XlaCnfRhs {
+    pub fn new(arts: ModelArtifacts, theta: Vec<f32>) -> Result<Self> {
+        anyhow::ensure!(arts.entry.kind == "cnf", "XlaCnfRhs wants a 'cnf' config");
+        anyhow::ensure!(theta.len() == arts.entry.param_count);
+        let batch = arts.entry.batch;
+        let dim = arts.entry.state_dim;
+        Ok(XlaCnfRhs {
+            arts,
+            theta,
+            batch,
+            dim,
+            eps: vec![1.0; batch * dim],
+            nfe: NfeCounter::default(),
+            t_buf: RefCell::new([0.0]),
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Set the Hutchinson probe for this iteration.
+    pub fn set_eps(&mut self, eps: &[f32]) {
+        assert_eq!(eps.len(), self.batch * self.dim);
+        self.eps.copy_from_slice(eps);
+    }
+
+    fn split<'a>(&self, u: &'a [f32]) -> (&'a [f32], &'a [f32]) {
+        u.split_at(self.batch * self.dim)
+    }
+}
+
+impl OdeRhs for XlaCnfRhs {
+    fn state_len(&self) -> usize {
+        self.batch * self.dim + self.batch
+    }
+
+    fn param_len(&self) -> usize {
+        self.theta.len()
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.theta
+    }
+
+    fn set_params(&mut self, theta: &[f32]) {
+        self.theta.copy_from_slice(theta);
+    }
+
+    fn f(&self, t: f64, u: &[f32], out: &mut [f32]) {
+        self.nfe.hit_forward();
+        let (x, _logp) = self.split(u);
+        self.t_buf.borrow_mut()[0] = t as f32;
+        let tb = self.t_buf.borrow();
+        let exe = self.arts.get("faug").expect("faug loaded");
+        let res = exe
+            .call(&[x, &self.theta, &tb[..], &self.eps])
+            .unwrap_or_else(|e| panic!("XLA faug failed: {e:#}"));
+        let nd = self.batch * self.dim;
+        out[..nd].copy_from_slice(&res[0]);
+        out[nd..].copy_from_slice(&res[1]);
+    }
+
+    fn vjp_u(&self, t: f64, u: &[f32], v: &[f32], out: &mut [f32]) {
+        // CNF adjoint always needs θ grads too; route through vjp_both and
+        // drop them (only used by continuous-adjoint baselines).
+        let mut scratch = vec![0.0f32; self.theta.len()];
+        self.vjp_both(t, u, v, out, &mut scratch);
+        // vjp_both already counted backward NFE
+    }
+
+    fn vjp_both(&self, t: f64, u: &[f32], v: &[f32], out_u: &mut [f32], grad_theta: &mut [f32]) {
+        self.nfe.hit_backward();
+        let (x, _) = self.split(u);
+        let nd = self.batch * self.dim;
+        let (vx, vlogp) = v.split_at(nd);
+        self.t_buf.borrow_mut()[0] = t as f32;
+        let tb = self.t_buf.borrow();
+        let exe = self.arts.get("vjp_aug").expect("vjp_aug loaded");
+        let res = exe
+            .call(&[x, &self.theta, &tb[..], &self.eps, vx, vlogp])
+            .unwrap_or_else(|e| panic!("XLA vjp_aug failed: {e:#}"));
+        out_u[..nd].copy_from_slice(&res[0]);
+        // d(dynamics)/d(logp) = 0: logp never feeds back into f
+        out_u[nd..].fill(0.0);
+        for (g, d) in grad_theta.iter_mut().zip(&res[1]) {
+            *g += d;
+        }
+    }
+
+    fn jvp(&self, _t: f64, _u: &[f32], _w: &[f32], _out: &mut [f32]) {
+        unimplemented!("CNF tasks use explicit schemes only (no jvp artifact)")
+    }
+
+    fn nfe(&self) -> Nfe {
+        self.nfe.get()
+    }
+
+    fn reset_nfe(&self) {
+        self.nfe.reset();
+    }
+
+    fn activation_bytes_per_eval(&self) -> u64 {
+        let dims = &self.arts.entry.dims;
+        let mut elems = 0usize;
+        for w in dims.windows(2) {
+            elems += self.batch * w[0] + self.batch * w[1];
+        }
+        // the Hutchinson JVP roughly doubles the forward graph
+        (2 * elems * 4) as u64
+    }
+}

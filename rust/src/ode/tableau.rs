@@ -1,0 +1,264 @@
+//! Butcher tableaus for the explicit Runge–Kutta schemes used in the paper
+//! (Euler, Midpoint, Bosh3, RK4, Dopri5) plus scheme metadata.
+//!
+//! Layout: `a` is the full s×s matrix flattened row-major (strictly lower
+//! triangular for ERK), `b` the quadrature weights, `c` the abscissae.
+//! `b_err` (if present) are the *error* weights `b - b̂` of the embedded
+//! pair, so the local error estimate is `err = h * Σ_i b_err[i] k_i`.
+
+/// Identifier for every integration scheme the framework supports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    Euler,
+    Midpoint,
+    Bosh3,
+    Rk4,
+    Dopri5,
+    /// implicit backward Euler (theta = 1)
+    BackwardEuler,
+    /// implicit Crank–Nicolson (theta = 1/2)
+    CrankNicolson,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Option<Scheme> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "euler" => Scheme::Euler,
+            "midpoint" => Scheme::Midpoint,
+            "bosh3" => Scheme::Bosh3,
+            "rk4" => Scheme::Rk4,
+            "dopri5" => Scheme::Dopri5,
+            "beuler" | "backward_euler" | "be" => Scheme::BackwardEuler,
+            "cn" | "crank_nicolson" | "cranknicolson" => Scheme::CrankNicolson,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Euler => "euler",
+            Scheme::Midpoint => "midpoint",
+            Scheme::Bosh3 => "bosh3",
+            Scheme::Rk4 => "rk4",
+            Scheme::Dopri5 => "dopri5",
+            Scheme::BackwardEuler => "beuler",
+            Scheme::CrankNicolson => "cn",
+        }
+    }
+
+    pub fn is_implicit(&self) -> bool {
+        matches!(self, Scheme::BackwardEuler | Scheme::CrankNicolson)
+    }
+
+    /// Explicit tableau (panics for implicit schemes — those go through
+    /// [`crate::ode::implicit`]).
+    pub fn tableau(&self) -> &'static Tableau {
+        match self {
+            Scheme::Euler => &EULER,
+            Scheme::Midpoint => &MIDPOINT,
+            Scheme::Bosh3 => &BOSH3,
+            Scheme::Rk4 => &RK4,
+            Scheme::Dopri5 => &DOPRI5,
+            _ => panic!("{} is implicit; no explicit tableau", self.name()),
+        }
+    }
+}
+
+/// An explicit Runge–Kutta Butcher tableau.
+#[derive(Debug)]
+pub struct Tableau {
+    pub name: &'static str,
+    pub order: usize,
+    /// number of stages
+    pub s: usize,
+    /// s*s row-major, strictly lower triangular
+    pub a: &'static [f64],
+    pub b: &'static [f64],
+    pub c: &'static [f64],
+    /// embedded error weights b - b̂ (None for fixed-step-only schemes)
+    pub b_err: Option<&'static [f64]>,
+    /// first-same-as-last: k[s-1] of an accepted step equals k[0] of the next
+    pub fsal: bool,
+}
+
+impl Tableau {
+    #[inline]
+    pub fn a(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.s + j]
+    }
+
+    /// Row-sum consistency check Σ_j a_ij == c_i (tested).
+    pub fn is_consistent(&self) -> bool {
+        for i in 0..self.s {
+            let row: f64 = (0..self.s).map(|j| self.a(i, j)).sum();
+            if (row - self.c[i]).abs() > 1e-12 {
+                return false;
+            }
+        }
+        (self.b.iter().sum::<f64>() - 1.0).abs() < 1e-12
+    }
+}
+
+pub static EULER: Tableau = Tableau {
+    name: "euler",
+    order: 1,
+    s: 1,
+    a: &[0.0],
+    b: &[1.0],
+    c: &[0.0],
+    b_err: None,
+    fsal: false,
+};
+
+pub static MIDPOINT: Tableau = Tableau {
+    name: "midpoint",
+    order: 2,
+    s: 2,
+    a: &[0.0, 0.0, 0.5, 0.0],
+    b: &[0.0, 1.0],
+    c: &[0.0, 0.5],
+    b_err: None,
+    fsal: false,
+};
+
+/// Bogacki–Shampine 3(2), FSAL.
+pub static BOSH3: Tableau = Tableau {
+    name: "bosh3",
+    order: 3,
+    s: 4,
+    a: &[
+        0.0, 0.0, 0.0, 0.0, //
+        0.5, 0.0, 0.0, 0.0, //
+        0.0, 0.75, 0.0, 0.0, //
+        2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0, 0.0,
+    ],
+    b: &[2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0, 0.0],
+    c: &[0.0, 0.5, 0.75, 1.0],
+    // b - b̂ with b̂ = [7/24, 1/4, 1/3, 1/8]
+    b_err: Some(&[
+        2.0 / 9.0 - 7.0 / 24.0,
+        1.0 / 3.0 - 0.25,
+        4.0 / 9.0 - 1.0 / 3.0,
+        -0.125,
+    ]),
+    fsal: true,
+};
+
+pub static RK4: Tableau = Tableau {
+    name: "rk4",
+    order: 4,
+    s: 4,
+    a: &[
+        0.0, 0.0, 0.0, 0.0, //
+        0.5, 0.0, 0.0, 0.0, //
+        0.0, 0.5, 0.0, 0.0, //
+        0.0, 0.0, 1.0, 0.0,
+    ],
+    b: &[1.0 / 6.0, 1.0 / 3.0, 1.0 / 3.0, 1.0 / 6.0],
+    c: &[0.0, 0.5, 0.5, 1.0],
+    b_err: None,
+    fsal: false,
+};
+
+/// Dormand–Prince 5(4), FSAL.
+pub static DOPRI5: Tableau = Tableau {
+    name: "dopri5",
+    order: 5,
+    s: 7,
+    a: &[
+        0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, //
+        0.2, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, //
+        3.0 / 40.0, 9.0 / 40.0, 0.0, 0.0, 0.0, 0.0, 0.0, //
+        44.0 / 45.0, -56.0 / 15.0, 32.0 / 9.0, 0.0, 0.0, 0.0, 0.0, //
+        19372.0 / 6561.0, -25360.0 / 2187.0, 64448.0 / 6561.0, -212.0 / 729.0, 0.0, 0.0, 0.0, //
+        9017.0 / 3168.0, -355.0 / 33.0, 46732.0 / 5247.0, 49.0 / 176.0, -5103.0 / 18656.0, 0.0, 0.0, //
+        35.0 / 384.0, 0.0, 500.0 / 1113.0, 125.0 / 192.0, -2187.0 / 6784.0, 11.0 / 84.0, 0.0,
+    ],
+    b: &[
+        35.0 / 384.0,
+        0.0,
+        500.0 / 1113.0,
+        125.0 / 192.0,
+        -2187.0 / 6784.0,
+        11.0 / 84.0,
+        0.0,
+    ],
+    c: &[0.0, 0.2, 0.3, 0.8, 8.0 / 9.0, 1.0, 1.0],
+    // b - b̂ with b̂ the 4th-order weights
+    b_err: Some(&[
+        35.0 / 384.0 - 5179.0 / 57600.0,
+        0.0,
+        500.0 / 1113.0 - 7571.0 / 16695.0,
+        125.0 / 192.0 - 393.0 / 640.0,
+        -2187.0 / 6784.0 + 92097.0 / 339200.0,
+        11.0 / 84.0 - 187.0 / 2100.0,
+        -1.0 / 40.0,
+    ]),
+    fsal: true,
+};
+
+/// All explicit schemes (bench sweeps iterate over this).
+pub static EXPLICIT_SCHEMES: &[Scheme] = &[
+    Scheme::Euler,
+    Scheme::Midpoint,
+    Scheme::Bosh3,
+    Scheme::Rk4,
+    Scheme::Dopri5,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tableaus_consistent() {
+        for t in [&EULER, &MIDPOINT, &BOSH3, &RK4, &DOPRI5] {
+            assert!(t.is_consistent(), "{} inconsistent", t.name);
+            assert_eq!(t.a.len(), t.s * t.s);
+            assert_eq!(t.b.len(), t.s);
+            assert_eq!(t.c.len(), t.s);
+            if let Some(be) = t.b_err {
+                assert_eq!(be.len(), t.s);
+                // error weights of a consistent embedded pair sum to 0
+                assert!(be.iter().sum::<f64>().abs() < 1e-12, "{}", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn strictly_lower_triangular() {
+        for t in [&EULER, &MIDPOINT, &BOSH3, &RK4, &DOPRI5] {
+            for i in 0..t.s {
+                for j in i..t.s {
+                    assert_eq!(t.a(i, j), 0.0, "{} a[{i}][{j}]", t.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fsal_last_row_equals_b() {
+        for t in [&BOSH3, &DOPRI5] {
+            assert!(t.fsal);
+            for j in 0..t.s {
+                assert!(
+                    (t.a(t.s - 1, j) - t.b[j]).abs() < 1e-15,
+                    "{}: FSAL requires a[s-1][:] == b",
+                    t.name
+                );
+            }
+            assert_eq!(t.c[t.s - 1], 1.0);
+        }
+    }
+
+    #[test]
+    fn scheme_parse_roundtrip() {
+        for s in EXPLICIT_SCHEMES {
+            assert_eq!(Scheme::parse(s.name()), Some(*s));
+        }
+        assert_eq!(Scheme::parse("cn"), Some(Scheme::CrankNicolson));
+        assert_eq!(Scheme::parse("nope"), None);
+        assert!(Scheme::CrankNicolson.is_implicit());
+        assert!(!Scheme::Dopri5.is_implicit());
+    }
+}

@@ -1,0 +1,44 @@
+//! PJRT client handle.
+
+use anyhow::{Context, Result};
+
+/// Thin wrapper around [`xla::PjRtClient`] so the rest of the crate never
+/// imports `xla` directly.  Cheap to clone (the underlying client is
+/// refcounted).
+#[derive(Clone)]
+pub struct Client {
+    pub(crate) inner: xla::PjRtClient,
+}
+
+impl Client {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let inner = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Client { inner })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.inner.device_count()
+    }
+
+    /// Load an HLO-text file and compile it into an [`super::Executable`].
+    pub fn compile_hlo_text(
+        &self,
+        path: &std::path::Path,
+        name: &str,
+        arg_shapes: Vec<Vec<usize>>,
+    ) -> Result<super::Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .inner
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        Ok(super::Executable::new(name.to_string(), exe, arg_shapes))
+    }
+}

@@ -1,0 +1,117 @@
+//! A compiled HLO primitive, callable with flat f32 slices.
+
+use std::cell::Cell;
+
+use anyhow::{bail, Context, Result};
+
+/// One compiled artifact (e.g. `clf_d64.vjp_both`).
+///
+/// All our artifacts take N f32 arrays and return a tuple of f32 arrays
+/// (lowered with `return_tuple=True`).  `call` shape-checks inputs against
+/// the manifest, executes, and flattens the outputs back to `Vec<f32>`.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    arg_shapes: Vec<Vec<usize>>,
+    /// number of invocations (feeds NFE accounting)
+    calls: Cell<u64>,
+}
+
+impl Executable {
+    pub(crate) fn new(
+        name: String,
+        exe: xla::PjRtLoadedExecutable,
+        arg_shapes: Vec<Vec<usize>>,
+    ) -> Self {
+        Executable { name, exe, arg_shapes, calls: Cell::new(0) }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn arg_shapes(&self) -> &[Vec<usize>] {
+        &self.arg_shapes
+    }
+
+    pub fn call_count(&self) -> u64 {
+        self.calls.get()
+    }
+
+    pub fn reset_call_count(&self) {
+        self.calls.set(0)
+    }
+
+    /// Execute with flat f32 inputs; returns the tuple elements flattened.
+    pub fn call(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.arg_shapes.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.name,
+                self.arg_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().zip(&self.arg_shapes).enumerate() {
+            let want: usize = shape.iter().product();
+            if data.len() != want {
+                bail!(
+                    "{}: arg {i} has {} elements, manifest shape {:?} wants {want}",
+                    self.name,
+                    data.len(),
+                    shape
+                );
+            }
+            let bytes = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                shape,
+                bytes,
+            )
+            .with_context(|| format!("{}: building literal for arg {i}", self.name))?;
+            literals.push(lit);
+        }
+
+        self.calls.set(self.calls.get() + 1);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("{}: reading result", self.name))?;
+        let parts = tuple
+            .to_tuple()
+            .with_context(|| format!("{}: untupling result", self.name))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, part) in parts.into_iter().enumerate() {
+            let v = part
+                .to_vec::<f32>()
+                .with_context(|| format!("{}: output {i} to_vec", self.name))?;
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Execute and write the single output into `out` (hot-path variant,
+    /// avoids one Vec allocation when the primitive returns one array).
+    pub fn call_into(&self, inputs: &[&[f32]], out: &mut [f32]) -> Result<()> {
+        let results = self.call(inputs)?;
+        if results.len() != 1 {
+            bail!("{}: call_into expects 1 output, got {}", self.name, results.len());
+        }
+        if results[0].len() != out.len() {
+            bail!(
+                "{}: output has {} elements, destination {}",
+                self.name,
+                results[0].len(),
+                out.len()
+            );
+        }
+        out.copy_from_slice(&results[0]);
+        Ok(())
+    }
+}

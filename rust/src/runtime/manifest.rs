@@ -1,0 +1,176 @@
+//! Manifest parsing and per-config artifact loading.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::{Client, Executable};
+
+/// One model configuration from `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ConfigEntry {
+    pub name: String,
+    /// "mlp" (classification / stiff) or "cnf" (FFJORD augmented dynamics)
+    pub kind: String,
+    /// layer widths of the RHS MLP (input includes +1 when `time_dep`)
+    pub dims: Vec<usize>,
+    pub act: String,
+    pub time_dep: bool,
+    pub batch: usize,
+    pub state_dim: usize,
+    pub param_count: usize,
+    /// primitive suffix -> artifact file name
+    pub artifacts: BTreeMap<String, String>,
+    /// primitive suffix -> argument shapes
+    pub arg_shapes: BTreeMap<String, Vec<Vec<usize>>>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ConfigEntry>,
+}
+
+impl Manifest {
+    /// Load from `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = json::parse(&text).context("parsing manifest.json")?;
+        let version = root.req("version")?.as_usize().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut configs = BTreeMap::new();
+        for (name, cfg) in root.req("configs")?.as_obj().unwrap_or(&[]) {
+            configs.insert(name.clone(), parse_config(name, cfg)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), configs })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<Manifest> {
+        Self::load(&super::artifacts_dir())
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigEntry> {
+        self.configs.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "config {name:?} not in manifest (have: {:?})",
+                self.configs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+fn parse_config(name: &str, cfg: &Json) -> Result<ConfigEntry> {
+    let str_of = |key: &str| -> Result<String> {
+        Ok(cfg.req(key)?.as_str().context(key.to_string())?.to_string())
+    };
+    let usize_of = |key: &str| -> Result<usize> {
+        cfg.req(key)?.as_usize().with_context(|| key.to_string())
+    };
+    let mut artifacts = BTreeMap::new();
+    for (k, v) in cfg.req("artifacts")?.as_obj().unwrap_or(&[]) {
+        artifacts.insert(k.clone(), v.as_str().unwrap_or_default().to_string());
+    }
+    let mut arg_shapes = BTreeMap::new();
+    for (k, v) in cfg.req("arg_shapes")?.as_obj().unwrap_or(&[]) {
+        let shapes = v
+            .as_arr()
+            .context("arg_shapes entry not an array")?
+            .iter()
+            .map(|s| s.as_usize_vec().context("bad shape"))
+            .collect::<Result<Vec<_>>>()?;
+        arg_shapes.insert(k.clone(), shapes);
+    }
+    Ok(ConfigEntry {
+        name: name.to_string(),
+        kind: str_of("kind")?,
+        dims: cfg.req("dims")?.as_usize_vec().context("dims")?,
+        act: str_of("act")?,
+        time_dep: cfg.req("time_dep")?.as_bool().context("time_dep")?,
+        batch: usize_of("batch")?,
+        state_dim: usize_of("state_dim")?,
+        param_count: usize_of("param_count")?,
+        artifacts,
+        arg_shapes,
+    })
+}
+
+/// The compiled executables for one model config.
+///
+/// Primitives are compiled eagerly at construction (compilation is a few
+/// hundred ms each; we pay it once at startup, never on the hot path).
+pub struct ModelArtifacts {
+    pub entry: ConfigEntry,
+    executables: BTreeMap<String, Executable>,
+}
+
+impl ModelArtifacts {
+    /// Compile every primitive listed in the manifest for `config`.
+    pub fn load(client: &Client, manifest: &Manifest, config: &str) -> Result<Self> {
+        let entry = manifest.config(config)?.clone();
+        let mut executables = BTreeMap::new();
+        for (suffix, file) in &entry.artifacts {
+            let shapes = entry
+                .arg_shapes
+                .get(suffix)
+                .with_context(|| format!("no arg_shapes for {suffix}"))?
+                .clone();
+            let path = manifest.dir.join(file);
+            let name = format!("{config}.{suffix}");
+            let exe = client.compile_hlo_text(&path, &name, shapes)?;
+            executables.insert(suffix.clone(), exe);
+        }
+        Ok(ModelArtifacts { entry, executables })
+    }
+
+    pub fn get(&self, suffix: &str) -> Result<&Executable> {
+        self.executables.get(suffix).ok_or_else(|| {
+            anyhow::anyhow!(
+                "{}: primitive {suffix:?} not loaded (have {:?})",
+                self.entry.name,
+                self.executables.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Total executable invocations across all primitives.
+    pub fn total_calls(&self) -> u64 {
+        self.executables.values().map(|e| e.call_count()).sum()
+    }
+
+    pub fn reset_call_counts(&self) {
+        for e in self.executables.values() {
+            e.reset_call_count();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest_snippet() {
+        let text = r#"{"version":1,"configs":{"quick_d8":{
+            "kind":"mlp","dims":[9,16,8],"act":"tanh","time_dep":true,
+            "batch":4,"state_dim":8,"param_count":296,
+            "artifacts":{"f":"quick_d8.f.hlo.txt"},
+            "arg_shapes":{"f":[[4,8],[296],[1]]}}}}"#;
+        let root = json::parse(text).unwrap();
+        let cfg = root.get("configs").unwrap().get("quick_d8").unwrap();
+        let entry = parse_config("quick_d8", cfg).unwrap();
+        assert_eq!(entry.kind, "mlp");
+        assert_eq!(entry.dims, vec![9, 16, 8]);
+        assert!(entry.time_dep);
+        assert_eq!(entry.param_count, 296);
+        assert_eq!(entry.arg_shapes["f"], vec![vec![4, 8], vec![296], vec![1]]);
+    }
+}

@@ -1,0 +1,26 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only module that touches the `xla` crate.  The compile path
+//! (`python/compile/aot.py`) writes `artifacts/*.hlo.txt` plus
+//! `artifacts/manifest.json`; [`Manifest`] parses the manifest,
+//! [`ModelArtifacts`] compiles the executables for one model config, and
+//! [`Executable::call`] runs one primitive with flat `f32` slices in/out.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits HloModuleProto with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+mod client;
+mod executable;
+mod manifest;
+
+pub use client::Client;
+pub use executable::Executable;
+pub use manifest::{ConfigEntry, Manifest, ModelArtifacts};
+
+/// Default artifacts directory, overridable with the PNODE_ARTIFACTS env var.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("PNODE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

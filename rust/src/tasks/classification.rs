@@ -1,0 +1,216 @@
+//! Classification with a chain of neural-ODE blocks + linear readout —
+//! the SqueezeNext-on-CIFAR10 surrogate (paper §5.1; substitution noted in
+//! DESIGN.md §2).  `n_blocks` ODE blocks share one architecture but own
+//! separate parameter slices (paper: 4 blocks, 199,800 params total; ours:
+//! 4 × 50,296 = 201,184 with the `clf_d64` artifact config).
+
+use crate::methods::{BlockSpec, GradientMethod, MethodReport};
+use crate::nn::readout::Readout;
+use crate::ode::rhs::OdeRhs;
+use crate::util::rng::Rng;
+
+pub struct ClassificationTask {
+    pub n_blocks: usize,
+    pub spec: BlockSpec,
+    /// concatenated per-block parameters
+    pub theta: Vec<f32>,
+    pub readout: Readout,
+    /// per-block gradient engines (each holds its forward state)
+    methods: Vec<Box<dyn GradientMethod>>,
+}
+
+/// Outcome of one training step.
+pub struct StepResult {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub grad: Vec<f32>,
+    pub report: MethodReport,
+}
+
+impl ClassificationTask {
+    /// `make_method` constructs one gradient engine per block (they must
+    /// be independent instances).
+    pub fn new(
+        rng: &mut Rng,
+        n_blocks: usize,
+        spec: BlockSpec,
+        per_block_params: usize,
+        state_dim: usize,
+        n_classes: usize,
+        init: impl Fn(&mut Rng) -> Vec<f32>,
+        make_method: impl Fn() -> Box<dyn GradientMethod>,
+    ) -> Self {
+        let mut theta = Vec::with_capacity(n_blocks * per_block_params);
+        for _ in 0..n_blocks {
+            let t = init(rng);
+            assert_eq!(t.len(), per_block_params);
+            theta.extend_from_slice(&t);
+        }
+        let readout = Readout::new(rng, state_dim, n_classes);
+        let methods = (0..n_blocks).map(|_| make_method()).collect();
+        ClassificationTask { n_blocks, spec, theta, readout, methods }
+    }
+
+    pub fn per_block(&self) -> usize {
+        self.theta.len() / self.n_blocks
+    }
+
+    pub fn block_theta(&self, b: usize) -> &[f32] {
+        let p = self.per_block();
+        &self.theta[b * p..(b + 1) * p]
+    }
+
+    /// Forward through all blocks; returns the final features.
+    pub fn forward(&mut self, rhs: &mut dyn OdeRhs, x: &[f32]) -> Vec<f32> {
+        let mut u = x.to_vec();
+        for b in 0..self.n_blocks {
+            rhs.set_params(self.block_theta(b));
+            u = self.methods[b].forward(rhs, &self.spec, &u);
+        }
+        u
+    }
+
+    /// Inference-only loss/accuracy (no tapes, no gradients).
+    pub fn evaluate(
+        &mut self,
+        rhs: &mut dyn OdeRhs,
+        bsz: usize,
+        x: &[f32],
+        y: &[usize],
+    ) -> (f64, f64) {
+        let u = self.forward(rhs, x);
+        let g = self.readout.loss_and_grads(bsz, &u, y);
+        (g.loss, g.accuracy)
+    }
+
+    /// One full forward + loss + backward; returns gradients wrt all block
+    /// parameters (concatenated, same layout as `theta`).  Readout grads
+    /// are applied internally with `readout_lr`.
+    pub fn grad_step(
+        &mut self,
+        rhs: &mut dyn OdeRhs,
+        bsz: usize,
+        x: &[f32],
+        y: &[usize],
+        readout_lr: f32,
+    ) -> StepResult {
+        let u_final = self.forward(rhs, x);
+        let ro = self.readout.loss_and_grads(bsz, &u_final, y);
+
+        let p = self.per_block();
+        let mut grad = vec![0.0f32; self.theta.len()];
+        let mut lambda = ro.du.clone();
+        let mut report = MethodReport::default();
+        for b in (0..self.n_blocks).rev() {
+            rhs.set_params(self.block_theta(b));
+            self.methods[b].backward(rhs, &self.spec, &mut lambda, &mut grad[b * p..(b + 1) * p]);
+            let r = self.methods[b].report();
+            report.nfe_forward += r.nfe_forward;
+            report.nfe_backward += r.nfe_backward;
+            report.recompute_steps += r.recompute_steps;
+            report.ckpt_bytes += r.ckpt_bytes;
+            // graph memory is a high-water mark, not a sum: blocks backprop
+            // one at a time
+            report.graph_bytes = report.graph_bytes.max(r.graph_bytes);
+        }
+        self.readout.apply_grads(readout_lr, &ro);
+        StepResult { loss: ro.loss, accuracy: ro.accuracy, grad, report }
+    }
+
+    /// Apply an optimizer update to the block parameters.
+    pub fn apply_grad(&mut self, opt: &mut dyn crate::nn::Optimizer, grad: &[f32]) {
+        opt.step(&mut self.theta, grad);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::CheckpointPolicy;
+    use crate::methods::pnode::Pnode;
+    use crate::nn::{Act, Adam, Optimizer};
+    use crate::ode::rhs::MlpRhs;
+    use crate::ode::tableau::Scheme;
+    use crate::data::spiral::SpiralDataset;
+
+    const D: usize = 8;
+    const B: usize = 16;
+
+    fn mk_task(rng: &mut Rng, n_blocks: usize) -> (ClassificationTask, MlpRhs) {
+        let dims = vec![D + 1, 16, D];
+        let p = crate::nn::param_count(&dims);
+        let dims2 = dims.clone();
+        let task = ClassificationTask::new(
+            rng,
+            n_blocks,
+            BlockSpec::new(Scheme::Rk4, 4),
+            p,
+            D,
+            3,
+            move |r| crate::nn::init::kaiming_uniform(r, &dims2, 1.0),
+            || Box::new(Pnode::new(CheckpointPolicy::All)),
+        );
+        let theta0 = task.block_theta(0).to_vec();
+        let rhs = MlpRhs::new(dims, Act::Tanh, true, B, theta0);
+        (task, rhs)
+    }
+
+    #[test]
+    fn multi_block_training_reduces_loss() {
+        let mut rng = Rng::new(201);
+        let (mut task, mut rhs) = mk_task(&mut rng, 2);
+        let ds = SpiralDataset::generate(&mut rng, 40, 3, D);
+        let (train, _) = ds.split(1.0);
+        let mut opt = Adam::new(task.theta.len(), 5e-3);
+        let mut x = vec![0.0f32; B * D];
+        let mut y = vec![0usize; B];
+
+        let mut first = None;
+        let mut last = 0.0;
+        for it in 0..30 {
+            train.fill_batch(it * B, B, &mut x, &mut y);
+            let res = task.grad_step(&mut rhs, B, &x, &y, 0.05);
+            if first.is_none() {
+                first = Some(res.loss);
+            }
+            last = res.loss;
+            let g = res.grad;
+            task.apply_grad(&mut opt as &mut dyn Optimizer, &g);
+        }
+        assert!(
+            last < first.unwrap() * 0.9,
+            "loss should drop: {first:?} -> {last}"
+        );
+    }
+
+    #[test]
+    fn block_gradients_match_finite_differences() {
+        let mut rng = Rng::new(211);
+        let (mut task, mut rhs) = mk_task(&mut rng, 2);
+        let mut x = vec![0.0f32; B * D];
+        rng.fill_normal(&mut x);
+        let y: Vec<usize> = (0..B).map(|_| rng.below(3)).collect();
+
+        let res = task.grad_step(&mut rhs, B, &x, &y, 0.0);
+        // FD on a few entries of each block's θ (readout frozen: lr=0)
+        let h = 1e-2f32;
+        let loss_at = |task: &mut ClassificationTask, rhs: &mut MlpRhs| -> f64 {
+            let u = task.forward(rhs, &x);
+            task.readout.loss_and_grads(B, &u, &y).loss
+        };
+        for &idx in &[0usize, 7, task.theta.len() - 1] {
+            let orig = task.theta[idx];
+            task.theta[idx] = orig + h;
+            let lp = loss_at(&mut task, &mut rhs);
+            task.theta[idx] = orig - h;
+            let lm = loss_at(&mut task, &mut rhs);
+            task.theta[idx] = orig;
+            let fd = (lp - lm) / (2.0 * h as f64);
+            assert!(
+                (fd - res.grad[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                "grad[{idx}] {} vs fd {fd}",
+                res.grad[idx]
+            );
+        }
+    }
+}

@@ -1,0 +1,331 @@
+//! FFJORD continuous normalizing flows for density estimation (paper
+//! §5.2, Tables 3–7).
+//!
+//! State layout per flow: `[x (B·D) | logp (B)]`.  Dynamics are the
+//! Hutchinson-augmented RHS (the `cnf_*` artifacts, or [`LinearCnfRhs`]
+//! for XLA-free tests).  The NLL under a standard-normal base is
+//!     L = −mean_b [ log N(z_b(T)) + Δlogp_b(T) ]
+//! whose gradient seeds the adjoint: ∂L/∂z = z/B, ∂L/∂Δlogp = −1/B.
+
+use crate::methods::{BlockSpec, GradientMethod, MethodReport};
+use crate::ode::rhs::{Nfe, NfeCounter, OdeRhs};
+use crate::util::rng::Rng;
+
+const LOG_2PI: f64 = 1.8378770664093453;
+
+pub struct CnfTask {
+    pub n_flows: usize,
+    pub spec: BlockSpec,
+    pub batch: usize,
+    pub dim: usize,
+    /// concatenated per-flow parameters
+    pub theta: Vec<f32>,
+    methods: Vec<Box<dyn GradientMethod>>,
+}
+
+pub struct CnfStep {
+    pub nll: f64,
+    pub grad: Vec<f32>,
+    pub report: MethodReport,
+}
+
+impl CnfTask {
+    pub fn new(
+        rng: &mut Rng,
+        n_flows: usize,
+        spec: BlockSpec,
+        batch: usize,
+        dim: usize,
+        per_flow_params: usize,
+        init: impl Fn(&mut Rng) -> Vec<f32>,
+        make_method: impl Fn() -> Box<dyn GradientMethod>,
+    ) -> Self {
+        let mut theta = Vec::with_capacity(n_flows * per_flow_params);
+        for _ in 0..n_flows {
+            let t = init(rng);
+            assert_eq!(t.len(), per_flow_params);
+            theta.extend_from_slice(&t);
+        }
+        CnfTask {
+            n_flows,
+            spec,
+            batch,
+            dim,
+            theta,
+            methods: (0..n_flows).map(|_| make_method()).collect(),
+        }
+    }
+
+    pub fn per_flow(&self) -> usize {
+        self.theta.len() / self.n_flows
+    }
+
+    /// NLL of the final augmented state.
+    pub fn nll(&self, z: &[f32]) -> f64 {
+        let (b, d) = (self.batch, self.dim);
+        let (x, logp) = z.split_at(b * d);
+        let mut total = 0.0f64;
+        for r in 0..b {
+            let mut logn = -0.5 * d as f64 * LOG_2PI;
+            for c in 0..d {
+                let v = x[r * d + c] as f64;
+                logn -= 0.5 * v * v;
+            }
+            total += logn + logp[r] as f64;
+        }
+        -total / b as f64
+    }
+
+    /// ∂NLL/∂z at the final state.
+    fn nll_grad(&self, z: &[f32]) -> Vec<f32> {
+        let (b, d) = (self.batch, self.dim);
+        let mut g = vec![0.0f32; z.len()];
+        let inv_b = 1.0 / b as f32;
+        for i in 0..b * d {
+            g[i] = z[i] * inv_b; // −∂logN/∂x = x
+        }
+        for r in 0..b {
+            g[b * d + r] = -inv_b;
+        }
+        g
+    }
+
+    /// One gradient computation on a batch `x` [B, D].
+    pub fn grad_step(&mut self, rhs: &mut dyn OdeRhs, x: &[f32]) -> CnfStep {
+        let (b, d) = (self.batch, self.dim);
+        let p = self.per_flow();
+        // z0 = [x, 0]
+        let mut z = vec![0.0f32; b * d + b];
+        z[..b * d].copy_from_slice(x);
+        for f in 0..self.n_flows {
+            rhs.set_params(&self.theta[f * p..(f + 1) * p]);
+            z = self.methods[f].forward(rhs, &self.spec, &z);
+        }
+        let nll = self.nll(&z);
+        let mut lambda = self.nll_grad(&z);
+        let mut grad = vec![0.0f32; self.theta.len()];
+        let mut report = MethodReport::default();
+        for f in (0..self.n_flows).rev() {
+            rhs.set_params(&self.theta[f * p..(f + 1) * p]);
+            self.methods[f].backward(rhs, &self.spec, &mut lambda, &mut grad[f * p..(f + 1) * p]);
+            let r = self.methods[f].report();
+            report.nfe_forward += r.nfe_forward;
+            report.nfe_backward += r.nfe_backward;
+            report.recompute_steps += r.recompute_steps;
+            report.ckpt_bytes += r.ckpt_bytes;
+            report.graph_bytes = report.graph_bytes.max(r.graph_bytes);
+        }
+        CnfStep { nll, grad, report }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LinearCnfRhs: analytic CNF dynamics for XLA-free tests
+// ---------------------------------------------------------------------------
+
+/// dx/dt = A x with Hutchinson trace estimate −εᵀAε (exact derivatives).
+/// θ = vec(A).  Gradients of the augmented system are closed-form, making
+/// the full CNF pipeline testable without artifacts.
+pub struct LinearCnfRhs {
+    pub batch: usize,
+    pub dim: usize,
+    a: Vec<f32>,
+    pub eps: Vec<f32>,
+    nfe: NfeCounter,
+}
+
+impl LinearCnfRhs {
+    pub fn new(batch: usize, dim: usize, a: Vec<f32>, rng: &mut Rng) -> Self {
+        assert_eq!(a.len(), dim * dim);
+        let mut eps = vec![0.0f32; batch * dim];
+        rng.fill_rademacher(&mut eps);
+        LinearCnfRhs { batch, dim, a, eps, nfe: NfeCounter::default() }
+    }
+}
+
+impl OdeRhs for LinearCnfRhs {
+    fn state_len(&self) -> usize {
+        self.batch * self.dim + self.batch
+    }
+
+    fn param_len(&self) -> usize {
+        self.dim * self.dim
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.a
+    }
+
+    fn set_params(&mut self, theta: &[f32]) {
+        self.a.copy_from_slice(theta);
+    }
+
+    fn f(&self, _t: f64, z: &[f32], out: &mut [f32]) {
+        self.nfe.hit_forward();
+        let (b, d) = (self.batch, self.dim);
+        let (x, _) = z.split_at(b * d);
+        for r in 0..b {
+            for i in 0..d {
+                let mut acc = 0.0f32;
+                for j in 0..d {
+                    acc += self.a[i * d + j] * x[r * d + j];
+                }
+                out[r * d + i] = acc;
+            }
+            // dlogp = -ε_rᵀ A ε_r
+            let e = &self.eps[r * d..(r + 1) * d];
+            let mut tr = 0.0f32;
+            for i in 0..d {
+                for j in 0..d {
+                    tr += e[i] * self.a[i * d + j] * e[j];
+                }
+            }
+            out[b * d + r] = -tr;
+        }
+    }
+
+    fn vjp_u(&self, _t: f64, _z: &[f32], v: &[f32], out: &mut [f32]) {
+        self.nfe.hit_backward();
+        let (b, d) = (self.batch, self.dim);
+        let (vx, _vlogp) = v.split_at(b * d);
+        // gx = Aᵀ vx ; dlogp independent of x and of logp
+        for r in 0..b {
+            for j in 0..d {
+                let mut acc = 0.0f32;
+                for i in 0..d {
+                    acc += self.a[i * d + j] * vx[r * d + i];
+                }
+                out[r * d + j] = acc;
+            }
+            out[b * d + r] = 0.0;
+        }
+    }
+
+    fn vjp_both(&self, t: f64, z: &[f32], v: &[f32], out_u: &mut [f32], grad_theta: &mut [f32]) {
+        self.vjp_u(t, z, v, out_u);
+        let (b, d) = (self.batch, self.dim);
+        let (x, _) = z.split_at(b * d);
+        let (vx, vlogp) = v.split_at(b * d);
+        // dL/dA_ij += Σ_r vx[r,i] x[r,j] − vlogp[r] ε_i ε_j
+        for r in 0..b {
+            let e = &self.eps[r * d..(r + 1) * d];
+            for i in 0..d {
+                for j in 0..d {
+                    grad_theta[i * d + j] +=
+                        vx[r * d + i] * x[r * d + j] - vlogp[r] * e[i] * e[j];
+                }
+            }
+        }
+    }
+
+    fn jvp(&self, _t: f64, _u: &[f32], _w: &[f32], _out: &mut [f32]) {
+        unimplemented!("CNF uses explicit schemes only")
+    }
+
+    fn nfe(&self) -> Nfe {
+        self.nfe.get()
+    }
+
+    fn reset_nfe(&self) {
+        self.nfe.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::CheckpointPolicy;
+    use crate::methods::pnode::Pnode;
+    use crate::ode::tableau::Scheme;
+
+    const B: usize = 8;
+    const D: usize = 3;
+
+    fn mk() -> (CnfTask, LinearCnfRhs, Vec<f32>) {
+        let mut rng = Rng::new(301);
+        // contraction toward 0 => flow maps data toward the base density
+        let a = vec![
+            -0.5, 0.1, 0.0, //
+            0.0, -0.4, 0.05, //
+            0.1, 0.0, -0.6,
+        ];
+        let task = CnfTask::new(
+            &mut rng,
+            1,
+            BlockSpec::new(Scheme::Rk4, 8),
+            B,
+            D,
+            D * D,
+            |_r| a.clone(),
+            || Box::new(Pnode::new(CheckpointPolicy::All)),
+        );
+        let rhs = LinearCnfRhs::new(B, D, a.clone(), &mut rng);
+        let mut x = vec![0.0f32; B * D];
+        rng.fill_normal(&mut x);
+        for v in x.iter_mut() {
+            *v *= 2.0; // over-dispersed data
+        }
+        (task, rhs, x)
+    }
+
+    #[test]
+    fn hutchinson_trace_is_exact_in_expectation_for_rademacher() {
+        // for fixed eps, εᵀAε deviates from tr(A); over the diagonal it's exact
+        let mut rng = Rng::new(303);
+        let a = vec![1.0f32, 0.0, 0.0, 2.0];
+        let rhs = LinearCnfRhs::new(4, 2, a, &mut rng);
+        let z = vec![0.0f32; 4 * 2 + 4];
+        let mut out = vec![0.0f32; 12];
+        rhs.f(0.0, &z, &mut out);
+        // diagonal A: εᵀAε = Σ a_ii ε_i² = tr(A) exactly for Rademacher ε
+        for r in 0..4 {
+            assert!((out[8 + r] + 3.0).abs() < 1e-5, "{}", out[8 + r]);
+        }
+    }
+
+    #[test]
+    fn nll_gradient_matches_finite_differences() {
+        let (mut task, mut rhs, x) = mk();
+        let res = task.grad_step(&mut rhs, &x);
+        assert!(res.nll.is_finite());
+
+        let h = 1e-3f32;
+        for &idx in &[0usize, 4, 8] {
+            let orig = task.theta[idx];
+            task.theta[idx] = orig + h;
+            let mut z = vec![0.0f32; B * D + B];
+            z[..B * D].copy_from_slice(&x);
+            rhs.set_params(&task.theta);
+            let mut m = Pnode::new(CheckpointPolicy::All);
+            use crate::methods::GradientMethod;
+            let zf = m.forward(&rhs, &task.spec, &z);
+            let lp = task.nll(&zf);
+            task.theta[idx] = orig - h;
+            rhs.set_params(&task.theta);
+            let zf = m.forward(&rhs, &task.spec, &z);
+            let lm = task.nll(&zf);
+            task.theta[idx] = orig;
+            let fd = (lp - lm) / (2.0 * h as f64);
+            assert!(
+                (fd - res.grad[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                "grad[{idx}] {} vs fd {fd}",
+                res.grad[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn training_linear_cnf_reduces_nll() {
+        let (mut task, mut rhs, x) = mk();
+        let mut opt = crate::nn::Adam::new(task.theta.len(), 2e-2);
+        use crate::nn::Optimizer;
+        let first = task.grad_step(&mut rhs, &x).nll;
+        let mut last = first;
+        for _ in 0..40 {
+            let res = task.grad_step(&mut rhs, &x);
+            last = res.nll;
+            opt.step(&mut task.theta, &res.grad);
+        }
+        assert!(last < first - 0.05, "NLL {first} -> {last}");
+    }
+}

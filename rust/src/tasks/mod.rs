@@ -1,0 +1,12 @@
+//! The paper's three experiment families, built on the generic method
+//! layer: image-classification surrogate (§5.1, Figs. 2–3), FFJORD
+//! continuous normalizing flows (§5.2, Tables 3–7), and stiff Robertson
+//! dynamics with implicit integration (§5.3, Figs. 4–5, Table 8).
+
+pub mod classification;
+pub mod cnf;
+pub mod stiff;
+
+pub use classification::ClassificationTask;
+pub use cnf::{CnfTask, LinearCnfRhs};
+pub use stiff::StiffTask;

@@ -1,0 +1,251 @@
+//! Learning stiff dynamics (paper §5.3): train a neural ODE on Robertson's
+//! chemistry with the Crank–Nicolson discrete adjoint (enabled uniquely by
+//! PNODE) and compare against adaptive Dopri5, whose gradients explode
+//! (Fig. 5).  Loss = MAE over 40 log-spaced observations (eq. 15), with
+//! min–max feature scaling (eq. 16).
+
+use crate::adjoint::driver::ImplicitAdjointRun;
+use crate::data::robertson::RobertsonData;
+use crate::linalg::gmres::GmresOptions;
+use crate::ode::adaptive::{integrate_adaptive, AdaptiveController};
+use crate::adjoint::discrete_erk::AdjointErkWorkspace;
+use crate::ode::implicit::ThetaScheme;
+use crate::ode::rhs::OdeRhs;
+use crate::ode::tableau;
+
+pub struct StiffTask {
+    pub data: RobertsonData,
+    /// internal sub-steps between consecutive observations
+    pub substeps: usize,
+}
+
+pub struct StiffStep {
+    pub loss: f64,
+    pub grad: Vec<f32>,
+    pub nfe_forward: u64,
+    pub nfe_backward: u64,
+    /// predictions at the observation times [n_obs, 3]
+    pub pred: Vec<f32>,
+}
+
+impl StiffTask {
+    pub fn new(data: RobertsonData, substeps: usize) -> Self {
+        StiffTask { data, substeps }
+    }
+
+    /// Full integration grid: obs times densified by `substeps`.
+    fn grid(&self) -> (Vec<f64>, Vec<usize>) {
+        let mut grid = Vec::new();
+        let mut obs_idx = Vec::new(); // grid index of each observation
+        grid.push(self.data.ts[0]);
+        obs_idx.push(0usize);
+        for w in self.data.ts.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            for s in 1..=self.substeps {
+                grid.push(a + (b - a) * s as f64 / self.substeps as f64);
+            }
+            obs_idx.push(grid.len() - 1);
+        }
+        (grid, obs_idx)
+    }
+
+    /// MAE loss and its per-observation gradients.
+    fn mae(&self, preds: &[Vec<f32>]) -> (f64, Vec<Vec<f32>>) {
+        let n = preds.len();
+        let mut loss = 0.0f64;
+        let mut grads = Vec::with_capacity(n);
+        let denom = (n * 3) as f64;
+        for (i, p) in preds.iter().enumerate() {
+            let obs = self.data.obs(i);
+            let mut g = vec![0.0f32; 3];
+            for c in 0..3 {
+                let d = p[c] as f64 - obs[c] as f64;
+                loss += d.abs() / denom;
+                g[c] = (d.signum() / denom) as f32;
+            }
+            grads.push(g);
+        }
+        (loss, grads)
+    }
+
+    /// Gradient via the Crank–Nicolson (or BE) discrete adjoint with
+    /// observation-time λ jumps.
+    pub fn grad_implicit(&self, rhs: &dyn OdeRhs, scheme: ThetaScheme) -> StiffStep {
+        rhs.reset_nfe();
+        let (grid, obs_idx) = self.grid();
+        let mut run = ImplicitAdjointRun::new(scheme, grid);
+        run.gmres_opts = GmresOptions { rtol: 1e-8, ..Default::default() };
+        let u0 = self.data.u0();
+        run.forward(rhs, &u0);
+        let nfe_f = rhs.nfe().forward;
+
+        // predictions at observation indices (obs 0 is the initial state)
+        let preds: Vec<Vec<f32>> = obs_idx.iter().map(|&gi| run.state(gi).to_vec()).collect();
+        let (loss, obs_grads) = self.mae(&preds);
+        let mut pred_flat = Vec::with_capacity(preds.len() * 3);
+        for p in &preds {
+            pred_flat.extend_from_slice(p);
+        }
+
+        // backward with λ jumps at each observation
+        let mut lambda = vec![0.0f32; 3];
+        let mut grad = vec![0.0f32; rhs.param_len()];
+        for seg in (0..obs_idx.len() - 1).rev() {
+            // jump for the observation at the segment's right edge
+            let right_obs = seg + 1;
+            for c in 0..3 {
+                lambda[c] += obs_grads[right_obs][c];
+            }
+            run.backward_range(rhs, obs_idx[seg], obs_idx[right_obs], &mut lambda, &mut grad);
+        }
+        // (gradient wrt u0 is discarded: u0 is data)
+        let nfe = rhs.nfe();
+        StiffStep {
+            loss,
+            grad,
+            nfe_forward: nfe_f,
+            nfe_backward: nfe.backward + (nfe.forward - nfe_f),
+            pred: pred_flat,
+        }
+    }
+
+    /// Gradient via adaptive Dopri5 + discrete adjoint per segment (the
+    /// explicit baseline of Fig. 5 / Table 8).
+    pub fn grad_explicit_adaptive(&self, rhs: &dyn OdeRhs, tol: f64) -> StiffStep {
+        rhs.reset_nfe();
+        let tab = &tableau::DOPRI5;
+        let ctrl = AdaptiveController::new(tol, tol);
+        let u0 = self.data.u0();
+        let n_obs = self.data.n_obs();
+
+        // forward per segment, recording all accepted steps (policy All)
+        let mut seg_steps: Vec<Vec<(f64, f64, Vec<f32>, Vec<Vec<f32>>)>> = Vec::new();
+        let mut preds = vec![u0.clone()];
+        let mut u = u0.clone();
+        for w in self.data.ts.windows(2) {
+            let mut steps = Vec::new();
+            let res = integrate_adaptive(
+                tab,
+                rhs,
+                w[0],
+                w[1],
+                (w[1] - w[0]) / 4.0,
+                &ctrl,
+                &u,
+                |_, t, h, u_n, ks, _| {
+                    steps.push((t, h, u_n.to_vec(), ks.to_vec()));
+                },
+            );
+            u = res.final_state.clone();
+            preds.push(u.clone());
+            seg_steps.push(steps);
+        }
+        let nfe_f = rhs.nfe().forward;
+        let (loss, obs_grads) = self.mae(&preds);
+        let mut pred_flat = Vec::with_capacity(preds.len() * 3);
+        for p in &preds {
+            pred_flat.extend_from_slice(p);
+        }
+
+        // discrete adjoint over accepted steps, with λ jumps at observations
+        let mut lambda = vec![0.0f32; 3];
+        let mut grad = vec![0.0f32; rhs.param_len()];
+        let mut aws = AdjointErkWorkspace::new(tab.s, 3);
+        for seg in (0..n_obs - 1).rev() {
+            for c in 0..3 {
+                lambda[c] += obs_grads[seg + 1][c];
+            }
+            for (t, h, u_n, ks) in seg_steps[seg].iter().rev() {
+                crate::adjoint::discrete_erk::adjoint_erk_step(
+                    tab, rhs, *t, *h, u_n, ks, &mut lambda, &mut grad, &mut aws,
+                );
+            }
+        }
+        let nfe = rhs.nfe();
+        StiffStep {
+            loss,
+            grad,
+            nfe_forward: nfe_f,
+            nfe_backward: nfe.backward + (nfe.forward - nfe_f),
+            pred: pred_flat,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Act;
+    use crate::ode::rhs::MlpRhs;
+    use crate::util::rng::Rng;
+
+    fn mk_rhs(seed: u64) -> MlpRhs {
+        // small net for tests (paper uses 5×50 GELU); init small so the
+        // untrained vector field does not blow up over the long [1e-5, 100]
+        // horizon (the paper's min–max scaling serves the same purpose)
+        let dims = vec![3, 16, 16, 3];
+        let mut rng = Rng::new(seed);
+        let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 0.05);
+        MlpRhs::new(dims, Act::Gelu, false, 1, theta)
+    }
+
+    fn small_task() -> StiffTask {
+        StiffTask::new(RobertsonData::generate(10, 4, true), 2)
+    }
+
+    #[test]
+    fn implicit_gradient_matches_finite_differences() {
+        let mut rhs = mk_rhs(401);
+        let task = small_task();
+        let step = task.grad_implicit(&rhs, ThetaScheme::crank_nicolson());
+        assert!(step.loss.is_finite());
+
+        let h = 1e-3f32;
+        let theta0 = rhs.params().to_vec();
+        for &idx in &[0usize, 50, theta0.len() - 1] {
+            let mut tp = theta0.clone();
+            tp[idx] += h;
+            rhs.set_params(&tp);
+            let lp = task.grad_implicit(&rhs, ThetaScheme::crank_nicolson()).loss;
+            let mut tm = theta0.clone();
+            tm[idx] -= h;
+            rhs.set_params(&tm);
+            let lm = task.grad_implicit(&rhs, ThetaScheme::crank_nicolson()).loss;
+            rhs.set_params(&theta0);
+            let fd = (lp - lm) / (2.0 * h as f64);
+            assert!(
+                (fd - step.grad[idx] as f64).abs() < 3e-2 * (1.0 + fd.abs()),
+                "grad[{idx}] {} vs fd {fd}",
+                step.grad[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn training_with_cn_reduces_mae() {
+        let mut rhs = mk_rhs(411);
+        let task = small_task();
+        let mut opt = crate::nn::AdamW::new(rhs.param_len(), 5e-3, 1e-4);
+        use crate::nn::Optimizer;
+        let first = task.grad_implicit(&rhs, ThetaScheme::crank_nicolson()).loss;
+        let mut theta = rhs.params().to_vec();
+        let mut last = first;
+        for _ in 0..60 {
+            let step = task.grad_implicit(&rhs, ThetaScheme::crank_nicolson());
+            last = step.loss;
+            opt.step(&mut theta, &step.grad);
+            rhs.set_params(&theta);
+        }
+        assert!(last < first * 0.8, "MAE {first} -> {last}");
+    }
+
+    #[test]
+    fn explicit_adaptive_path_runs() {
+        let rhs = mk_rhs(421);
+        let task = small_task();
+        let step = task.grad_explicit_adaptive(&rhs, 1e-5);
+        assert!(step.loss.is_finite());
+        assert!(step.nfe_forward > 0);
+        assert_eq!(step.grad.len(), rhs.param_len());
+    }
+}

@@ -1,0 +1,184 @@
+//! Small blocked SGEMM for the pure-Rust MLP (cross-check path and
+//! XLA-free tests).  The production hot path runs GEMMs inside the AOT HLO;
+//! this one only needs to be correct and reasonably fast.
+
+/// c[m,n] (+)= a[m,k] @ b[k,n];  row-major, `beta` scales existing c.
+pub fn sgemm(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    beta: f32,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if beta == 0.0 {
+        c.fill(0.0);
+    } else if beta != 1.0 {
+        for x in c.iter_mut() {
+            *x *= beta;
+        }
+    }
+    // ikj loop order: unit-stride inner loop over b and c rows.
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let aval = a[i * k + p];
+            if aval == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += aval * brow[j];
+            }
+        }
+    }
+}
+
+/// c[m,n] (+)= a^T[m,k] @ b[k,n] where a is stored [k,m] row-major.
+pub fn sgemm_at(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32], // [k, m]
+    b: &[f32], // [k, n]
+    c: &mut [f32],
+    beta: f32,
+) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if beta == 0.0 {
+        c.fill(0.0);
+    } else if beta != 1.0 {
+        for x in c.iter_mut() {
+            *x *= beta;
+        }
+    }
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for i in 0..m {
+            let aval = arow[i];
+            if aval == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aval * brow[j];
+            }
+        }
+    }
+}
+
+/// c[m,n] (+)= a[m,k] @ b^T[k,n] where b is stored [n,k] row-major.
+pub fn sgemm_bt(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32], // [m, k]
+    b: &[f32], // [n, k]
+    c: &mut [f32],
+    beta: f32,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    if beta == 0.0 {
+        c.fill(0.0);
+    } else if beta != 1.0 {
+        for x in c.iter_mut() {
+            *x *= beta;
+        }
+    }
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            crow[j] += acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn fill(seed: usize, len: usize) -> Vec<f32> {
+        (0..len).map(|i| ((i * 31 + seed * 17) % 13) as f32 - 6.0).collect()
+    }
+
+    #[test]
+    fn sgemm_matches_naive() {
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (8, 8, 8), (13, 21, 7)] {
+            let a = fill(1, m * k);
+            let b = fill(2, k * n);
+            let mut c = vec![0.0; m * n];
+            sgemm(m, k, n, &a, &b, &mut c, 0.0);
+            assert_eq!(c, naive(m, k, n, &a, &b), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn sgemm_beta_accumulates() {
+        let a = fill(1, 4);
+        let b = fill(2, 4);
+        let mut c = vec![1.0; 4];
+        sgemm(2, 2, 2, &a, &b, &mut c, 1.0);
+        let mut want = naive(2, 2, 2, &a, &b);
+        for w in want.iter_mut() {
+            *w += 1.0;
+        }
+        assert_eq!(c, want);
+    }
+
+    #[test]
+    fn transposed_variants_match() {
+        let (m, k, n) = (5, 7, 3);
+        let a = fill(3, m * k);
+        let b = fill(4, k * n);
+        let want = naive(m, k, n, &a, &b);
+
+        // a stored transposed [k,m]
+        let mut at = vec![0.0; k * m];
+        for i in 0..m {
+            for p in 0..k {
+                at[p * m + i] = a[i * k + p];
+            }
+        }
+        let mut c = vec![0.0; m * n];
+        sgemm_at(m, k, n, &at, &b, &mut c, 0.0);
+        assert_eq!(c, want);
+
+        // b stored transposed [n,k]
+        let mut bt = vec![0.0; n * k];
+        for p in 0..k {
+            for j in 0..n {
+                bt[j * k + p] = b[p * n + j];
+            }
+        }
+        let mut c2 = vec![0.0; m * n];
+        sgemm_bt(m, k, n, &a, &bt, &mut c2, 0.0);
+        assert_eq!(c2, want);
+    }
+}

@@ -1,0 +1,127 @@
+//! Flat f32 vector/matrix kernels used by the L3 hot loop.
+//!
+//! ODE states, adjoint variables, and parameter vectors are flat `Vec<f32>`;
+//! these routines are the only numeric kernels the coordinator itself runs
+//! (everything heavy goes through the AOT-compiled HLO).  They are written
+//! to autovectorise and to allocate nothing.
+
+pub mod gemm;
+
+/// y += a * x
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// y = x
+#[inline]
+pub fn copy(x: &[f32], y: &mut [f32]) {
+    y.copy_from_slice(x);
+}
+
+/// x *= a
+#[inline]
+pub fn scal(a: f32, x: &mut [f32]) {
+    for xi in x {
+        *xi *= a;
+    }
+}
+
+/// out = x + a*y  (no aliasing)
+#[inline]
+pub fn waxpy(out: &mut [f32], x: &[f32], a: f32, y: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..out.len() {
+        out[i] = x[i] + a * y[i];
+    }
+}
+
+/// <x, y>
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    // f64 accumulation: GMRES orthogonalisation is sensitive to this.
+    x.iter().zip(y).map(|(a, b)| *a as f64 * *b as f64).sum()
+}
+
+/// ||x||_2
+#[inline]
+pub fn nrm2(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// ||x||_inf
+#[inline]
+pub fn nrm_inf(x: &[f32]) -> f64 {
+    x.iter().fold(0.0f64, |m, &v| m.max(v.abs() as f64))
+}
+
+/// x = 0
+#[inline]
+pub fn zero(x: &mut [f32]) {
+    x.fill(0.0);
+}
+
+/// Weighted RMS norm used by adaptive step-size control:
+/// sqrt(mean_i (x_i / (atol + rtol*|ref_i|))^2)
+pub fn wrms_norm(x: &[f32], reference: &[f32], atol: f64, rtol: f64) -> f64 {
+    debug_assert_eq!(x.len(), reference.len());
+    let mut acc = 0.0f64;
+    for i in 0..x.len() {
+        let w = atol + rtol * (reference[i].abs() as f64);
+        let r = x[i] as f64 / w;
+        acc += r * r;
+    }
+    (acc / x.len() as f64).sqrt()
+}
+
+/// Max |x - y| (test helper and convergence checks).
+pub fn max_abs_diff(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .fold(0.0f64, |m, (a, b)| m.max((a - b).abs() as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [1.0, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn waxpy_no_alias() {
+        let x = [1.0, 2.0];
+        let y = [10.0, 20.0];
+        let mut out = [0.0; 2];
+        waxpy(&mut out, &x, 0.5, &y);
+        assert_eq!(out, [6.0, 12.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let x = [3.0, -4.0];
+        assert!((nrm2(&x) - 5.0).abs() < 1e-12);
+        assert_eq!(nrm_inf(&x), 4.0);
+        assert!((dot(&x, &x) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wrms() {
+        let e = [0.1, 0.1];
+        let r = [1.0, 1.0];
+        // w = 0.1 + 0.1*1 = 0.2, ratio = 0.5 each -> rms 0.5
+        let n = wrms_norm(&e, &r, 0.1, 0.1);
+        assert!((n - 0.5).abs() < 1e-6);
+    }
+}

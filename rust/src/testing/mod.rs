@@ -1,0 +1,27 @@
+//! Test-support utilities (property-test runner, tolerances).
+
+pub mod prop;
+
+/// Assert two slices are elementwise close.
+pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f64, atol: f64, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * (*w as f64).abs();
+        let diff = (*g as f64 - *w as f64).abs();
+        assert!(
+            diff <= tol,
+            "{ctx}: index {i}: got {g}, want {w}, |diff| {diff:.3e} > tol {tol:.3e}"
+        );
+    }
+}
+
+/// Relative L2 error between two vectors.
+pub fn rel_l2(got: &[f32], want: &[f32]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (g, w) in got.iter().zip(want) {
+        num += ((*g - *w) as f64).powi(2);
+        den += (*w as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}

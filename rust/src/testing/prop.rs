@@ -1,0 +1,96 @@
+//! Miniature property-testing runner (the offline registry has no proptest).
+//!
+//! `check` runs a property over `n` seeded random cases; on failure it
+//! reports the failing case index and the exact seed so the case replays
+//! deterministically with `replay`.
+
+use crate::util::rng::Rng;
+
+/// Run `property` over `n` cases derived from `base_seed`.
+/// The property returns `Err(message)` to signal a counterexample.
+pub fn check<F>(name: &str, base_seed: u64, n: usize, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..n {
+        let seed = case_seed(base_seed, case);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{n} (seed {seed:#x}):\n  {msg}\n  \
+                 replay with testing::prop::replay({seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F>(seed: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    property(&mut rng).expect("replayed property failed");
+}
+
+fn case_seed(base: u64, case: usize) -> u64 {
+    base.wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(case as u64)
+        .rotate_left(17)
+        | 1
+}
+
+// ---------- common generators ----------
+
+/// Random vector with entries in [-scale, scale].
+pub fn vec_uniform(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.uniform(-scale as f64, scale as f64) as f32).collect()
+}
+
+/// Random standard-normal vector.
+pub fn vec_normal(rng: &mut Rng, len: usize) -> Vec<f32> {
+    let mut v = vec![0.0; len];
+    rng.fill_normal(&mut v);
+    v
+}
+
+/// Random size in [lo, hi].
+pub fn size_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("dot-commutes", 1, 50, |rng| {
+            let n = size_in(rng, 1, 32);
+            let x = vec_normal(rng, n);
+            let y = vec_normal(rng, n);
+            let a = crate::tensor::dot(&x, &y);
+            let b = crate::tensor::dot(&y, &x);
+            if (a - b).abs() < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("{a} != {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn reports_counterexample() {
+        check("always-fails", 2, 3, |_rng| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn seeds_are_distinct() {
+        let s: Vec<u64> = (0..100).map(|i| case_seed(42, i)).collect();
+        let mut dedup = s.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), s.len());
+    }
+}

@@ -1,0 +1,120 @@
+//! Metric accumulation for training runs (loss curves, NFE, wall-clock).
+
+use std::time::Instant;
+
+/// One epoch/iteration record.
+#[derive(Clone, Debug)]
+pub struct LogRow {
+    pub step: usize,
+    pub loss: f64,
+    pub accuracy: Option<f64>,
+    pub grad_norm: f64,
+    pub nfe_forward: u64,
+    pub nfe_backward: u64,
+    pub wall_secs: f64,
+}
+
+/// Append-only training log with CSV/JSON export.
+#[derive(Debug, Default)]
+pub struct TrainLog {
+    pub rows: Vec<LogRow>,
+    started: Option<Instant>,
+}
+
+impl TrainLog {
+    pub fn new() -> Self {
+        TrainLog { rows: Vec::new(), started: Some(Instant::now()) }
+    }
+
+    pub fn push(
+        &mut self,
+        step: usize,
+        loss: f64,
+        accuracy: Option<f64>,
+        grad_norm: f64,
+        nfe_forward: u64,
+        nfe_backward: u64,
+    ) {
+        let wall = self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        self.rows.push(LogRow {
+            step,
+            loss,
+            accuracy,
+            grad_norm,
+            nfe_forward,
+            nfe_backward,
+            wall_secs: wall,
+        });
+    }
+
+    pub fn last(&self) -> Option<&LogRow> {
+        self.rows.last()
+    }
+
+    pub fn best_loss(&self) -> f64 {
+        self.rows.iter().map(|r| r.loss).fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s =
+            String::from("step,loss,accuracy,grad_norm,nfe_forward,nfe_backward,wall_secs\n");
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{:.3}\n",
+                r.step,
+                r.loss,
+                r.accuracy.map(|a| a.to_string()).unwrap_or_default(),
+                r.grad_norm,
+                r.nfe_forward,
+                r.nfe_backward,
+                r.wall_secs
+            ));
+        }
+        s
+    }
+}
+
+/// Gradient statistics across a run (explosion detection for Fig. 5).
+#[derive(Clone, Debug, Default)]
+pub struct GradStats {
+    pub max_norm: f64,
+    pub exploded: bool,
+}
+
+impl GradStats {
+    pub fn observe(&mut self, norm: f64, explode_threshold: f64) {
+        self.max_norm = self.max_norm.max(norm);
+        if !norm.is_finite() || norm > explode_threshold {
+            self.exploded = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_and_export() {
+        let mut log = TrainLog::new();
+        log.push(0, 1.0, Some(0.1), 0.5, 10, 10);
+        log.push(1, 0.5, Some(0.6), 0.4, 10, 10);
+        assert_eq!(log.best_loss(), 0.5);
+        assert_eq!(log.last().unwrap().step, 1);
+        let csv = log.to_csv();
+        assert!(csv.lines().count() == 3);
+        assert!(csv.contains("0.5"));
+    }
+
+    #[test]
+    fn explosion_detection() {
+        let mut g = GradStats::default();
+        g.observe(1.0, 1e3);
+        assert!(!g.exploded);
+        g.observe(f64::NAN, 1e3);
+        assert!(g.exploded);
+        let mut h = GradStats::default();
+        h.observe(1e6, 1e3);
+        assert!(h.exploded);
+    }
+}

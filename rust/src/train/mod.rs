@@ -1,0 +1,38 @@
+//! Training-loop utilities: metrics accumulation and gradient norms.
+
+pub mod metrics;
+
+pub use metrics::{GradStats, TrainLog};
+
+/// Global L2 norm of a gradient vector (the paper's Fig. 5 plots this to
+/// show the explicit-method explosion on stiff dynamics).
+pub fn grad_norm(grad: &[f32]) -> f64 {
+    crate::tensor::nrm2(grad)
+}
+
+/// Clip a gradient in place to `max_norm`; returns the pre-clip norm.
+pub fn clip_grad_norm(grad: &mut [f32], max_norm: f64) -> f64 {
+    let n = grad_norm(grad);
+    if n > max_norm && n > 0.0 {
+        let s = (max_norm / n) as f32;
+        for g in grad.iter_mut() {
+            *g *= s;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn clip_caps_norm() {
+        let mut g = vec![3.0f32, 4.0];
+        let pre = super::clip_grad_norm(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-9);
+        assert!((super::grad_norm(&g) - 1.0).abs() < 1e-6);
+        // under the cap: untouched
+        let mut h = vec![0.3f32, 0.4];
+        super::clip_grad_norm(&mut h, 1.0);
+        assert_eq!(h, vec![0.3, 0.4]);
+    }
+}

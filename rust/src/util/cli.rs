@@ -1,0 +1,130 @@
+//! Tiny CLI argument parser (no clap offline).
+//!
+//! Grammar: `prog [subcommand] [--key value | --flag] [positional...]`.
+//! Values never start with `--`; `--flag` followed by another option or end
+//! of argv is a boolean flag.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        // first bare token is the subcommand
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        out.options.insert(name.to_string(), it.next().unwrap());
+                    }
+                    _ => out.flags.push(name.to_string()),
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --nt 10 --scheme dopri5 file.json --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_usize("nt", 0), 10);
+        assert_eq!(a.get("scheme"), Some("dopri5"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["file.json"]);
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse("bench --table=3 --out=/tmp/x");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.get("table"), Some("3"));
+        assert_eq!(a.get("out"), Some("/tmp/x"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --fast");
+        assert!(a.flag("fast"));
+        assert!(a.get("fast").is_none());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_f64("lr", 0.005), 0.005);
+        assert_eq!(a.get_u64("seed", 42), 42);
+    }
+}

@@ -1,0 +1,55 @@
+//! Small self-contained substrates replacing crates unavailable in the
+//! offline registry (DESIGN.md §2): JSON, RNG, CLI parsing, statistics.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Human-readable byte size (GiB/MiB/KiB).
+pub fn human_bytes(bytes: u64) -> String {
+    const G: f64 = (1u64 << 30) as f64;
+    const M: f64 = (1u64 << 20) as f64;
+    const K: f64 = (1u64 << 10) as f64;
+    let b = bytes as f64;
+    if b >= G {
+        format!("{:.3} GiB", b / G)
+    } else if b >= M {
+        format!("{:.2} MiB", b / M)
+    } else if b >= K {
+        format!("{:.1} KiB", b / K)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Human-readable duration.
+pub fn human_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(3 << 20), "3.00 MiB");
+        assert_eq!(human_bytes(5 << 30), "5.000 GiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(human_secs(2.5), "2.500 s");
+        assert_eq!(human_secs(0.002), "2.000 ms");
+        assert_eq!(human_secs(0.000002), "2.0 us");
+    }
+}

@@ -1,0 +1,172 @@
+//! Deep finite-difference gradient checks across schemes, policies, and
+//! both implicit methods — the "reverse-accurate to machine precision"
+//! claim, exercised harder than the unit tests do.
+
+use pnode::checkpoint::CheckpointPolicy;
+use pnode::methods::{BlockSpec, GradientMethod, Pnode};
+use pnode::nn::Act;
+use pnode::ode::implicit::{integrate_implicit, ThetaScheme};
+use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::tableau::EXPLICIT_SCHEMES;
+use pnode::testing::prop;
+use pnode::util::rng::Rng;
+
+fn mk_rhs(seed: u64) -> MlpRhs {
+    let dims = vec![4, 9, 3];
+    let mut rng = Rng::new(seed);
+    let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.2);
+    MlpRhs::new(dims, Act::Tanh, true, 2, theta)
+}
+
+#[test]
+fn fd_check_every_scheme_and_policy() {
+    for &scheme in EXPLICIT_SCHEMES {
+        for policy in [
+            CheckpointPolicy::All,
+            CheckpointPolicy::SolutionOnly,
+            CheckpointPolicy::Binomial { n_checkpoints: 2 },
+        ] {
+            let mut rhs = mk_rhs(33);
+            let mut rng = Rng::new(34);
+            let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
+            let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
+            let spec = BlockSpec::new(scheme, 7);
+
+            let mut m = Pnode::new(policy);
+            m.forward(&rhs, &spec, &u0);
+            let mut lambda = w.clone();
+            let mut g = vec![0.0f32; rhs.param_len()];
+            m.backward(&rhs, &spec, &mut lambda, &mut g);
+
+            let loss = |rhs: &dyn OdeRhs| {
+                let uf = pnode::ode::erk::integrate_fixed(
+                    scheme.tableau(),
+                    rhs,
+                    spec.t0,
+                    spec.tf,
+                    spec.nt,
+                    &u0,
+                    |_, _, _, _, _, _| {},
+                );
+                pnode::tensor::dot(&w, &uf)
+            };
+            let h = 1e-2f32;
+            let theta0 = rhs.params().to_vec();
+            let p = theta0.len();
+            for idx in [0usize, p / 4, p / 2, p - 1] {
+                let mut tp = theta0.clone();
+                tp[idx] += h;
+                rhs.set_params(&tp);
+                let lp = loss(&rhs);
+                let mut tm = theta0.clone();
+                tm[idx] -= h;
+                rhs.set_params(&tm);
+                let lm = loss(&rhs);
+                rhs.set_params(&theta0);
+                let fd = (lp - lm) / (2.0 * h as f64);
+                assert!(
+                    (fd - g[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "{}/{}: dθ[{idx}] {} vs fd {fd}",
+                    scheme.name(),
+                    policy.name(),
+                    g[idx]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fd_check_implicit_multistep() {
+    for scheme in [ThetaScheme::backward_euler(), ThetaScheme::crank_nicolson()] {
+        let mut rhs = {
+            let dims = vec![3, 12, 3];
+            let mut rng = Rng::new(44);
+            let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 0.8);
+            MlpRhs::new(dims, Act::Gelu, false, 1, theta)
+        };
+        let u0 = vec![0.4f32, -0.1, 0.3];
+        let w = vec![1.0f32, 0.5, -0.3];
+        let (t0, tf, nt) = (0.0, 1.0, 6);
+
+        let mut run = pnode::adjoint::driver::ImplicitAdjointRun::new(
+            scheme,
+            (0..=nt).map(|i| t0 + (tf - t0) * i as f64 / nt as f64).collect(),
+        );
+        run.forward(&rhs, &u0);
+        let mut lambda = w.clone();
+        let mut g = vec![0.0f32; rhs.param_len()];
+        run.backward(&rhs, &mut lambda, &mut g);
+
+        let loss = |rhs: &dyn OdeRhs| {
+            let uf = integrate_implicit(scheme, rhs, t0, tf, nt, &u0, |_, _, _, _, _| {});
+            pnode::tensor::dot(&w, &uf)
+        };
+        let h = 1e-2f32;
+        let theta0 = rhs.params().to_vec();
+        for idx in [0usize, theta0.len() / 2, theta0.len() - 1] {
+            let mut tp = theta0.clone();
+            tp[idx] += h;
+            rhs.set_params(&tp);
+            let lp = loss(&rhs);
+            let mut tm = theta0.clone();
+            tm[idx] -= h;
+            rhs.set_params(&tm);
+            let lm = loss(&rhs);
+            rhs.set_params(&theta0);
+            let fd = (lp - lm) / (2.0 * h as f64);
+            assert!(
+                (fd - g[idx] as f64).abs() < 3e-2 * (1.0 + fd.abs()),
+                "{}: dθ[{idx}] {} vs fd {fd}",
+                scheme.name,
+                g[idx]
+            );
+        }
+    }
+}
+
+/// Property: for random seeds, discrete-adjoint λ equals the FD directional
+/// derivative along a random direction.
+#[test]
+fn fd_directional_derivative_property() {
+    prop::check("fd-directional", 55, 6, |rng| {
+        let rhs = mk_rhs(rng.next_u64());
+        let n = rhs.state_len();
+        let u0 = prop::vec_uniform(rng, n, 0.5);
+        let w = prop::vec_uniform(rng, n, 1.0);
+        let dir = prop::vec_normal(rng, n);
+        let spec = BlockSpec::new(pnode::ode::tableau::Scheme::Midpoint, 5);
+
+        let mut m = Pnode::new(CheckpointPolicy::All);
+        m.forward(&rhs, &spec, &u0);
+        let mut lambda = w.clone();
+        let mut g = vec![0.0f32; rhs.param_len()];
+        m.backward(&rhs, &spec, &mut lambda, &mut g);
+        let analytic = pnode::tensor::dot(&lambda, &dir);
+
+        let loss = |u0: &[f32]| {
+            let uf = pnode::ode::erk::integrate_fixed(
+                spec.scheme.tableau(),
+                &rhs,
+                spec.t0,
+                spec.tf,
+                spec.nt,
+                u0,
+                |_, _, _, _, _, _| {},
+            );
+            pnode::tensor::dot(&w, &uf)
+        };
+        let h = 1e-3f32;
+        let mut up = u0.clone();
+        let mut um = u0.clone();
+        for i in 0..n {
+            up[i] += h * dir[i];
+            um[i] -= h * dir[i];
+        }
+        let fd = (loss(&up) - loss(&um)) / (2.0 * h as f64);
+        if (fd - analytic).abs() > 2e-2 * (1.0 + fd.abs()) {
+            return Err(format!("directional: analytic {analytic} vs fd {fd}"));
+        }
+        Ok(())
+    });
+}

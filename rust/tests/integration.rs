@@ -1,0 +1,183 @@
+//! Cross-module integration tests (XLA-free: the pure-Rust MLP mirror
+//! drives the full integrator → adjoint → checkpoint → optimizer stack).
+
+use pnode::checkpoint::CheckpointPolicy;
+use pnode::data::spiral::SpiralDataset;
+use pnode::methods::{method_by_name, BlockSpec, GradientMethod, Pnode};
+use pnode::nn::{Act, Adam, Optimizer};
+use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::tableau::{Scheme, EXPLICIT_SCHEMES};
+use pnode::tasks::ClassificationTask;
+use pnode::testing::prop;
+use pnode::util::rng::Rng;
+
+fn mk_rhs(dims: &[usize], batch: usize, seed: u64) -> MlpRhs {
+    let mut rng = Rng::new(seed);
+    let theta = pnode::nn::init::kaiming_uniform(&mut rng, dims, 1.0);
+    MlpRhs::new(dims.to_vec(), Act::Tanh, true, batch, theta)
+}
+
+/// Every (scheme × method) combination produces a gradient that agrees
+/// with PNODE-All for reverse-accurate methods.
+#[test]
+fn all_schemes_times_all_methods_agree() {
+    let rhs = mk_rhs(&[5, 8, 4], 2, 1);
+    let mut rng = Rng::new(2);
+    let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
+    let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
+
+    for &scheme in EXPLICIT_SCHEMES {
+        let spec = BlockSpec::new(scheme, 6);
+        let mut reference = Pnode::new(CheckpointPolicy::All);
+        reference.forward(&rhs, &spec, &u0);
+        let mut l_ref = w.clone();
+        let mut g_ref = vec![0.0f32; rhs.param_len()];
+        reference.backward(&rhs, &spec, &mut l_ref, &mut g_ref);
+
+        for name in ["naive", "anode", "aca", "pnode2", "pnode:binomial:3"] {
+            let mut m = method_by_name(name).unwrap();
+            m.forward(&rhs, &spec, &u0);
+            let mut l = w.clone();
+            let mut g = vec![0.0f32; rhs.param_len()];
+            m.backward(&rhs, &spec, &mut l, &mut g);
+            pnode::testing::assert_allclose(
+                &l,
+                &l_ref,
+                1e-4,
+                1e-6,
+                &format!("{} lambda ({})", name, scheme.name()),
+            );
+            pnode::testing::assert_allclose(
+                &g,
+                &g_ref,
+                1e-4,
+                1e-6,
+                &format!("{} gtheta ({})", name, scheme.name()),
+            );
+        }
+    }
+}
+
+/// Continuous-adjoint discrepancy shrinks as O(h) accumulated (Prop. 1).
+#[test]
+fn prop1_continuous_adjoint_discrepancy_order() {
+    let rhs = mk_rhs(&[4, 10, 3], 1, 7);
+    let mut rng = Rng::new(8);
+    let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.4);
+    let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
+
+    let gap = |nt: usize| -> f64 {
+        let spec = BlockSpec::new(Scheme::Euler, nt);
+        let mut pnode = Pnode::new(CheckpointPolicy::All);
+        pnode.forward(&rhs, &spec, &u0);
+        let mut l_d = w.clone();
+        let mut g_d = vec![0.0f32; rhs.param_len()];
+        pnode.backward(&rhs, &spec, &mut l_d, &mut g_d);
+
+        let mut cont = method_by_name("cont").unwrap();
+        cont.forward(&rhs, &spec, &u0);
+        let mut l_c = w.clone();
+        let mut g_c = vec![0.0f32; rhs.param_len()];
+        cont.backward(&rhs, &spec, &mut l_c, &mut g_c);
+        pnode::testing::rel_l2(&l_c, &l_d)
+    };
+    let g1 = gap(8);
+    let g2 = gap(32);
+    assert!(g1 > 1e-7, "coarse-step gap should be visible: {g1:.2e}");
+    assert!(g2 < g1 * 0.5, "gap must shrink with h: {g1:.2e} -> {g2:.2e}");
+}
+
+/// Recompute counts across the full binomial budget range are monotone and
+/// hit the paper's endpoints (0 at full memory, N_t−1 at solution-only).
+#[test]
+fn checkpoint_budget_tradeoff_curve() {
+    let rhs = mk_rhs(&[4, 6, 3], 2, 11);
+    let mut rng = Rng::new(12);
+    let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
+    let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
+    let nt = 16;
+    let spec = BlockSpec::new(Scheme::Rk4, nt);
+
+    let mut prev_recompute = u64::MAX;
+    let mut prev_bytes = 0u64;
+    for nc in [1usize, 2, 4, 8, 15] {
+        let mut m = Pnode::new(CheckpointPolicy::Binomial { n_checkpoints: nc });
+        m.forward(&rhs, &spec, &u0);
+        let mut l = w.clone();
+        let mut g = vec![0.0f32; rhs.param_len()];
+        m.backward(&rhs, &spec, &mut l, &mut g);
+        let r = m.report();
+        assert!(
+            r.recompute_steps <= prev_recompute,
+            "recompute not monotone at nc={nc}"
+        );
+        assert!(r.ckpt_bytes >= prev_bytes, "memory not monotone at nc={nc}");
+        prev_recompute = r.recompute_steps;
+        prev_bytes = r.ckpt_bytes;
+        if nc >= nt - 1 {
+            assert_eq!(r.recompute_steps, 0);
+        }
+    }
+}
+
+/// End-to-end: a 2-block classifier trains to >90% train accuracy on an
+/// easy spiral with every reverse-accurate method.
+#[test]
+fn classification_trains_with_each_method() {
+    const D: usize = 8;
+    const B: usize = 32;
+    for name in ["pnode", "pnode2", "aca"] {
+        let mut rng = Rng::new(100);
+        let dims = vec![D + 1, 24, D];
+        let p = pnode::nn::param_count(&dims);
+        let dims_i = dims.clone();
+        let name_owned = name.to_string();
+        let mut task = ClassificationTask::new(
+            &mut rng,
+            2,
+            BlockSpec::new(Scheme::Bosh3, 3),
+            p,
+            D,
+            2,
+            move |r| pnode::nn::init::kaiming_uniform(r, &dims_i, 1.0),
+            move || method_by_name(&name_owned).unwrap(),
+        );
+        let mut rhs = MlpRhs::new(dims, Act::Tanh, true, B, task.block_theta(0).to_vec());
+        let ds = SpiralDataset::generate(&mut rng, 100, 2, D);
+        let (train, _) = ds.split(1.0);
+        let mut opt = Adam::new(task.theta.len(), 1e-2);
+        let mut x = vec![0.0f32; B * D];
+        let mut y = vec![0usize; B];
+        let mut acc = 0.0;
+        for it in 0..60 {
+            train.fill_batch(it * B, B, &mut x, &mut y);
+            let res = task.grad_step(&mut rhs, B, &x, &y, 0.1);
+            acc = res.accuracy;
+            let g = res.grad;
+            task.apply_grad(&mut opt as &mut dyn Optimizer, &g);
+        }
+        assert!(acc > 0.85, "{name}: final train acc {acc}");
+    }
+}
+
+/// NFE counters propagate through the whole stack consistently.
+#[test]
+fn nfe_accounting_is_consistent() {
+    let rhs = mk_rhs(&[5, 8, 4], 2, 21);
+    let spec = BlockSpec::new(Scheme::Dopri5, 10);
+    let mut rng = Rng::new(22);
+    let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
+    let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
+
+    let mut m = Pnode::new(CheckpointPolicy::All);
+    m.forward(&rhs, &spec, &u0);
+    let mut l = w.clone();
+    let mut g = vec![0.0f32; rhs.param_len()];
+    m.backward(&rhs, &spec, &mut l, &mut g);
+    let r = m.report();
+    // FSAL: 7 + 6*(nt-1) forward evals
+    assert_eq!(r.nfe_forward, 7 + 6 * 9);
+    // backward: ≤ s vjps per step (zero-cotangent stages are skipped)
+    assert!(r.nfe_backward <= 7 * 10);
+    assert!(r.nfe_backward >= 6 * 10);
+}

@@ -1,0 +1,138 @@
+//! Method-equivalence and Table-2 shape tests at a scale closer to the
+//! paper's benchmarks (larger nets, more steps) than the unit tests.
+
+use pnode::checkpoint::CheckpointPolicy;
+use pnode::methods::{method_by_name, BlockSpec, GradientMethod, MemModel, Pnode};
+use pnode::nn::Act;
+use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::tableau::Scheme;
+use pnode::testing::prop;
+use pnode::util::rng::Rng;
+
+fn big_rhs(seed: u64) -> MlpRhs {
+    let dims = vec![17, 32, 32, 16];
+    let mut rng = Rng::new(seed);
+    let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+    MlpRhs::new(dims, Act::Tanh, true, 8, theta)
+}
+
+#[test]
+fn gradients_identical_at_scale() {
+    let rhs = big_rhs(61);
+    let mut rng = Rng::new(62);
+    let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
+    let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
+    let spec = BlockSpec::new(Scheme::Dopri5, 11);
+
+    let mut reference = Pnode::new(CheckpointPolicy::All);
+    reference.forward(&rhs, &spec, &u0);
+    let mut l_ref = w.clone();
+    let mut g_ref = vec![0.0f32; rhs.param_len()];
+    reference.backward(&rhs, &spec, &mut l_ref, &mut g_ref);
+
+    for name in ["naive", "anode", "aca", "pnode2", "pnode:binomial:4"] {
+        let mut m = method_by_name(name).unwrap();
+        m.forward(&rhs, &spec, &u0);
+        let mut l = w.clone();
+        let mut g = vec![0.0f32; rhs.param_len()];
+        m.backward(&rhs, &spec, &mut l, &mut g);
+        assert!(
+            pnode::testing::rel_l2(&l, &l_ref) < 1e-5,
+            "{name}: lambda deviates"
+        );
+        assert!(
+            pnode::testing::rel_l2(&g, &g_ref) < 1e-5,
+            "{name}: grad deviates"
+        );
+    }
+}
+
+#[test]
+fn table2_shape_at_benchmark_scale() {
+    // clf_d64-like instantiation of the memory model: orderings and
+    // crossovers the paper reports in Fig. 3 must hold.
+    let act_bytes = 128u64 * (65 + 168 + 168 + 168 + 168 + 64) * 4;
+    for nt in [2u64, 5, 11, 20] {
+        let m = MemModel {
+            act_bytes,
+            state_bytes: 128 * 64 * 4,
+            param_bytes: 50_296 * 4,
+            n_stages: 6,
+            nt,
+            nb: 4,
+        };
+        assert!(m.node_naive() > m.anode(), "nt={nt}");
+        assert!(m.anode() > m.aca(), "nt={nt}");
+        assert!(m.aca() > m.node_cont(), "nt={nt}");
+        assert!(m.pnode() < m.anode(), "nt={nt}: pnode must beat anode");
+        assert!(m.pnode2() < m.aca() + act_bytes, "nt={nt}");
+        // PNODE has the slowest growth among reverse-accurate methods
+        if nt >= 5 {
+            let m2 = MemModel { nt: nt * 2, ..m };
+            let growth = |f: &dyn Fn(&MemModel) -> u64| f(&m2) - f(&m);
+            let g_naive = growth(&|x| x.node_naive());
+            let g_anode = growth(&|x| x.anode());
+            let g_pnode = growth(&|x| x.pnode());
+            assert!(g_pnode < g_anode && g_anode < g_naive, "nt={nt}");
+        }
+    }
+}
+
+#[test]
+fn recompute_overhead_ordering() {
+    // ACA does ~2x the recompute of ANODE's 1x; PNODE-All none.
+    let rhs = big_rhs(71);
+    let mut rng = Rng::new(72);
+    let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
+    let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
+    let spec = BlockSpec::new(Scheme::Rk4, 12);
+
+    let report_of = |name: &str| {
+        let mut m = method_by_name(name).unwrap();
+        m.forward(&rhs, &spec, &u0);
+        let mut l = w.clone();
+        let mut g = vec![0.0f32; rhs.param_len()];
+        m.backward(&rhs, &spec, &mut l, &mut g);
+        m.report()
+    };
+    let pnode = report_of("pnode");
+    let pnode2 = report_of("pnode2");
+    let anode = report_of("anode");
+    let aca = report_of("aca");
+    assert_eq!(pnode.recompute_steps, 0);
+    assert_eq!(pnode2.recompute_steps, (spec.nt - 1) as u64);
+    assert_eq!(anode.recompute_steps, spec.nt as u64);
+    assert_eq!(aca.recompute_steps, 2 * spec.nt as u64);
+    // NFE-B ordering: aca > anode ≈ pnode > naive(0)
+    assert!(aca.nfe_backward > anode.nfe_backward);
+    assert_eq!(report_of("naive").nfe_backward, 0);
+}
+
+#[test]
+fn wallclock_shape_pnode_not_slower_than_aca() {
+    // timing smoke test (coarse: assert PNODE-All <= 1.5x ACA)
+    let rhs = big_rhs(81);
+    let mut rng = Rng::new(82);
+    let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
+    let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
+    let spec = BlockSpec::new(Scheme::Dopri5, 10);
+
+    let time_of = |name: &str| {
+        let mut m = method_by_name(name).unwrap();
+        let t = std::time::Instant::now();
+        for _ in 0..3 {
+            m.forward(&rhs, &spec, &u0);
+            let mut l = w.clone();
+            let mut g = vec![0.0f32; rhs.param_len()];
+            m.backward(&rhs, &spec, &mut l, &mut g);
+        }
+        t.elapsed().as_secs_f64()
+    };
+    let _warm = time_of("pnode");
+    let t_pnode = time_of("pnode");
+    let t_aca = time_of("aca");
+    assert!(
+        t_pnode <= t_aca * 1.5,
+        "pnode {t_pnode:.4}s should not be slower than aca {t_aca:.4}s"
+    );
+}
