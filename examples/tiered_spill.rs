@@ -1,0 +1,105 @@
+//! Tiered checkpoint storage demo: solve an `N_t` sweep whose checkpoint
+//! footprint exceeds the RAM budget, spilling to disk and prefetching back
+//! during the adjoint sweep — at near-in-memory speed, with gradients
+//! bitwise-identical to the all-resident backend (uncompressed path).
+//!
+//!     cargo run --release --example tiered_spill [-- --nt 1024 --budget 1m]
+
+use pnode::bench::Table;
+use pnode::checkpoint::CheckpointPolicy;
+use pnode::methods::{BlockSpec, GradientMethod, Pnode};
+use pnode::nn::Act;
+use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::tableau::Scheme;
+use pnode::util::cli::Args;
+use pnode::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let nt = args.get_usize("nt", 1024);
+    let budget_spec = args.get_or("budget", "1m").to_string();
+    let budget = pnode::checkpoint::MemoryBudget::parse(&budget_spec)
+        .expect("bad --budget (e.g. 512k, 1m)");
+
+    let dims = vec![17, 32, 16];
+    let mut rng = Rng::new(7);
+    let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+    let rhs = MlpRhs::new(dims, Act::Tanh, true, 8, theta);
+    let mut u0 = vec![0.0f32; rhs.state_len()];
+    rng.fill_normal(&mut u0);
+    let lambda0 = vec![1.0f32; rhs.state_len()];
+    let spec = BlockSpec { scheme: Scheme::Rk4, t0: 0.0, tf: 1.0, nt };
+
+    let spill_dir = std::env::temp_dir().join(format!("pnode-tiered-spill-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&spill_dir);
+
+    let run = |policy: CheckpointPolicy| {
+        let mut m = Pnode::new(policy);
+        let t = std::time::Instant::now();
+        m.forward(&rhs, &spec, &u0);
+        let mut lambda = lambda0.clone();
+        let mut grad = vec![0.0f32; rhs.param_len()];
+        m.backward(&rhs, &spec, &mut lambda, &mut grad);
+        (m.report(), t.elapsed().as_secs_f64(), lambda, grad)
+    };
+
+    let (r_mem, t_mem, l_mem, g_mem) = run(CheckpointPolicy::All);
+    let tiered = |f16: bool| CheckpointPolicy::Tiered {
+        budget_bytes: budget.bytes,
+        dir: spill_dir.to_string_lossy().into_owned(),
+        compress_f16: f16,
+        inner: Box::new(CheckpointPolicy::All),
+    };
+    let (r_t, t_t, l_t, g_t) = run(tiered(false));
+    let (r_h, t_h, _, _) = run(tiered(true));
+
+    let mut table = Table::new(
+        &format!(
+            "Tiered checkpoint storage (RK4, N_t={nt}, RAM budget {})",
+            pnode::util::human_bytes(budget.bytes)
+        ),
+        &["backend", "peak RAM", "cold written", "spills", "prefetch hits", "sync reads", "time (s)"],
+    );
+    for (name, r, secs) in [
+        ("in-memory", &r_mem, t_mem),
+        ("tiered f32", &r_t, t_t),
+        ("tiered f16", &r_h, t_h),
+    ] {
+        table.row(vec![
+            name.into(),
+            pnode::util::human_bytes(r.tier.peak_hot_bytes),
+            pnode::util::human_bytes(r.tier.cold_bytes_written),
+            r.tier.spills.to_string(),
+            r.tier.prefetch_hits.to_string(),
+            r.tier.cold_reads.to_string(),
+            format!("{secs:.3}"),
+        ]);
+    }
+    table.print();
+
+    assert!(
+        r_mem.ckpt_bytes > budget.bytes,
+        "footprint {} must exceed the budget {} for this demo — raise --nt",
+        r_mem.ckpt_bytes,
+        budget.bytes
+    );
+    assert!(r_t.tier.spills > 0, "tiered run must spill");
+    assert_eq!(l_t, l_mem, "λ: tiered (f32) is bitwise identical to in-memory");
+    assert_eq!(g_t, g_mem, "θ̄: tiered (f32) is bitwise identical to in-memory");
+    println!(
+        "\ncheckpoint footprint {} vs RAM budget {}: {}x over budget, \
+         gradients bitwise identical, slowdown {:.2}x",
+        pnode::util::human_bytes(r_mem.ckpt_bytes),
+        pnode::util::human_bytes(budget.bytes),
+        r_mem.ckpt_bytes / budget.bytes.max(1),
+        t_t / t_mem.max(1e-9),
+    );
+    println!(
+        "f16 cold tier: {} written ({:.2}x smaller), max |err| {:.2e} over {} elems",
+        pnode::util::human_bytes(r_h.tier.cold_bytes_written),
+        r_t.tier.cold_bytes_written as f64 / r_h.tier.cold_bytes_written.max(1) as f64,
+        r_h.tier.compress_max_abs_err,
+        r_h.tier.compressed_elems,
+    );
+    let _ = std::fs::remove_dir_all(&spill_dir);
+}

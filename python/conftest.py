@@ -1,0 +1,7 @@
+"""Make `python/` importable (`compile.*` namespace packages) when pytest
+runs from the repo root (`python -m pytest python/tests -q`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,114 @@
+//! Tiered checkpoint-storage I/O bench: gradient wall-time and tier
+//! traffic across RAM budgets (all-resident → heavy spill), f32 vs f16
+//! cold payloads, and in-memory vs tiered at equal placement.  Rows land
+//! in `target/bench_results/tiered_io.json` with the spill/prefetch
+//! counters per row.  `PNODE_BENCH_FULL=1` widens the sweep.
+
+use pnode::bench::Table;
+use pnode::checkpoint::CheckpointPolicy;
+use pnode::coordinator::Runner;
+use pnode::methods::{BlockSpec, GradientMethod, Pnode};
+use pnode::nn::Act;
+use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::tableau::Scheme;
+use pnode::util::rng::Rng;
+
+fn main() {
+    let full = std::env::var("PNODE_BENCH_FULL").is_ok();
+    let nt = if full { 4096 } else { 512 };
+
+    let dims = vec![33, 64, 32];
+    let mut rng = Rng::new(11);
+    let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+    let rhs = MlpRhs::new(dims, Act::Tanh, true, 16, theta);
+    let mut u0 = vec![0.0f32; rhs.state_len()];
+    rng.fill_normal(&mut u0);
+    let lambda0 = vec![1.0f32; rhs.state_len()];
+    let spec = BlockSpec { scheme: Scheme::Dopri5, t0: 0.0, tf: 1.0, nt };
+
+    let spill_dir =
+        std::env::temp_dir().join(format!("pnode-tiered-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&spill_dir);
+
+    // footprint of the all-resident run, to express budgets as fractions
+    let footprint = {
+        let mut m = Pnode::new(CheckpointPolicy::All);
+        m.forward(&rhs, &spec, &u0);
+        let mut l = lambda0.clone();
+        let mut g = vec![0.0f32; rhs.param_len()];
+        m.backward(&rhs, &spec, &mut l, &mut g);
+        m.report().ckpt_bytes
+    };
+    println!(
+        "all-resident checkpoint footprint: {} (N_t = {nt}, Dopri5)",
+        pnode::util::human_bytes(footprint)
+    );
+
+    let mut runner = Runner::new("tiered_io");
+    let mut table = Table::new(
+        "Tiered checkpoint I/O — budget sweep",
+        &["config", "budget", "time/grad (s)", "peak RAM", "cold written", "spills", "pf hits", "sync reads"],
+    );
+
+    let mut job = |label: &str, policy: CheckpointPolicy, budget_label: &str| {
+        let row = runner.run_job("mlp_33_64_32", label, "dopri5", nt, 0, || {
+            let mut m = Pnode::new(policy.clone());
+            m.forward(&rhs, &spec, &u0);
+            let mut l = lambda0.clone();
+            let mut g = vec![0.0f32; rhs.param_len()];
+            m.backward(&rhs, &spec, &mut l, &mut g);
+            m.report()
+        });
+        table.row(vec![
+            label.into(),
+            budget_label.into(),
+            format!("{:.4}", row.time_secs),
+            pnode::util::human_bytes(row.ckpt_hot_bytes),
+            pnode::util::human_bytes(row.ckpt_cold_bytes),
+            row.spill_count.to_string(),
+            row.prefetch_hits.to_string(),
+            row.cold_reads.to_string(),
+        ]);
+    };
+
+    job("in-memory", CheckpointPolicy::All, "∞");
+    let fractions: &[(u64, &str)] = if full {
+        &[(2, "1/2"), (4, "1/4"), (8, "1/8"), (16, "1/16"), (64, "1/64")]
+    } else {
+        &[(2, "1/2"), (4, "1/4"), (16, "1/16")]
+    };
+    let dir = spill_dir.to_string_lossy().into_owned();
+    for &(div, label) in fractions {
+        for f16 in [false, true] {
+            let policy = CheckpointPolicy::Tiered {
+                budget_bytes: (footprint / div).max(1),
+                dir: dir.clone(),
+                compress_f16: f16,
+                inner: Box::new(CheckpointPolicy::All),
+            };
+            let name = if f16 { "tiered+f16" } else { "tiered" };
+            job(name, policy, label);
+        }
+    }
+    // composition: Revolve placement under a byte budget
+    job(
+        "tiered+binomial:32",
+        CheckpointPolicy::Tiered {
+            budget_bytes: (footprint / 16).max(1),
+            dir: dir.clone(),
+            compress_f16: false,
+            inner: Box::new(CheckpointPolicy::Binomial { n_checkpoints: 32 }),
+        },
+        "1/16",
+    );
+
+    table.print();
+    let path = runner.save().expect("save results");
+    println!("\nrows saved to {path:?} (total {:.1}s)", runner.elapsed_secs());
+    println!(
+        "Expected shape: time/grad degrades only mildly as the budget shrinks\n\
+         (reads overlap recomputation via the reverse-order prefetcher);\n\
+         f16 halves cold bytes at ~1e-3 relative checkpoint error."
+    );
+    let _ = std::fs::remove_dir_all(&spill_dir);
+}

@@ -4,11 +4,18 @@
 //! Backward: walk steps in reverse; restore the closest checkpoint and
 //! recompute as dictated by the policy (for the binomial policy, the
 //! DP-optimal schedule from [`crate::checkpoint::binomial`]).
+//!
+//! Storage is behind the [`CheckpointBackend`] trait: in-RAM by default,
+//! or the tiered backend (RAM budget + disk spill + reverse-order
+//! prefetch) when the policy is [`CheckpointPolicy::Tiered`].  The
+//! backward pass brackets its work with `begin_reverse_sweep`/`finish` so
+//! tiered backends can overlap disk reads with stage recomputation.
 
 use crate::adjoint::discrete_erk::{adjoint_erk_step, AdjointErkWorkspace};
 use crate::adjoint::discrete_implicit::adjoint_theta_step;
 use crate::checkpoint::binomial::{Anchor, BinomialPlanner, BlockDecision};
-use crate::checkpoint::{CheckpointPolicy, CheckpointStore, StepCheckpoint};
+use crate::checkpoint::tiered::{CheckpointBackend, TierStats, TieredConfig, TieredStore};
+use crate::checkpoint::{CheckpointPolicy, CheckpointStore, MemoryBudget, StepCheckpoint};
 use crate::linalg::gmres::GmresOptions;
 use crate::ode::erk::{erk_step, integrate_fixed, ErkWorkspace};
 use crate::ode::implicit::{integrate_implicit_grid, ThetaScheme};
@@ -22,7 +29,7 @@ pub struct ErkAdjointRun<'t> {
     pub t0: f64,
     pub tf: f64,
     pub nt: usize,
-    store: CheckpointStore,
+    store: Box<dyn CheckpointBackend>,
     /// (u, ks) of the final step, retained transiently from the forward pass
     transient_last: Option<(Vec<f32>, Vec<Vec<f32>>)>,
     /// number of re-executed forward steps during the backward pass
@@ -33,13 +40,25 @@ pub struct ErkAdjointRun<'t> {
 
 impl<'t> ErkAdjointRun<'t> {
     pub fn new(tab: &'t Tableau, policy: CheckpointPolicy, t0: f64, tf: f64, nt: usize) -> Self {
+        let store: Box<dyn CheckpointBackend> = match &policy {
+            CheckpointPolicy::Tiered { budget_bytes, dir, compress_f16, .. } => Box::new(
+                TieredStore::create(TieredConfig {
+                    budget: MemoryBudget::from_bytes(*budget_bytes),
+                    dir: dir.into(),
+                    compress_f16: *compress_f16,
+                    prefetch_window: 4,
+                })
+                .expect("creating tiered checkpoint store (spill dir writable?)"),
+            ),
+            _ => Box::new(CheckpointStore::new()),
+        };
         ErkAdjointRun {
             tab,
             policy,
             t0,
             tf,
             nt,
-            store: CheckpointStore::new(),
+            store,
             transient_last: None,
             recompute_steps: 0,
             planner: BinomialPlanner::new(),
@@ -62,13 +81,15 @@ impl<'t> ErkAdjointRun<'t> {
         self.recompute_steps = 0;
         let h = self.h();
         let nt = self.nt;
-        let store_positions: Vec<usize> = match self.policy {
+        let store_positions: Vec<usize> = match self.policy.placement() {
             CheckpointPolicy::All | CheckpointPolicy::SolutionOnly => (0..nt).collect(),
             CheckpointPolicy::Binomial { n_checkpoints } => {
-                self.planner.forward_store_positions(nt, n_checkpoints)
+                let nc = *n_checkpoints;
+                self.planner.forward_store_positions(nt, nc)
             }
+            CheckpointPolicy::Tiered { .. } => unreachable!("placement() is never Tiered"),
         };
-        let with_stages = !matches!(self.policy, CheckpointPolicy::SolutionOnly);
+        let with_stages = self.policy.stores_stages();
         let store = &mut self.store;
         let transient = &mut self.transient_last;
         let uf = integrate_fixed(self.tab, rhs, self.t0, self.tf, nt, u0, |step, t, h_, u, ks, _un| {
@@ -88,7 +109,10 @@ impl<'t> ErkAdjointRun<'t> {
         });
         // the binomial executor always needs an anchor at step 0; the input
         // u_0 is available for free (it is the batch), so pin it (bare).
-        if matches!(self.policy, CheckpointPolicy::Binomial { .. }) && self.store.get(0).is_none()
+        // contains() and not get(): a tiered get would pointlessly page the
+        // record in from disk just to test presence.
+        if matches!(self.policy.placement(), CheckpointPolicy::Binomial { .. })
+            && !self.store.contains(0)
         {
             self.store.insert(StepCheckpoint {
                 step: 0,
@@ -106,12 +130,20 @@ impl<'t> ErkAdjointRun<'t> {
         &self.final_state
     }
 
+    /// Peak checkpoint bytes resident in RAM (for tiered storage the cold
+    /// tier is excluded — that is the point; see [`ErkAdjointRun::tier_stats`]).
     pub fn peak_checkpoint_bytes(&self) -> u64 {
-        self.store.peak_bytes()
+        self.store.peak_hot_bytes()
     }
 
     pub fn checkpoint_count(&self) -> usize {
         self.store.len()
+    }
+
+    /// Storage-tier counters (hot/cold bytes, spills, prefetch hits);
+    /// zeros beyond the hot fields for the in-memory backend.
+    pub fn tier_stats(&self) -> TierStats {
+        self.store.stats()
     }
 
     /// Backward pass: `lambda` enters as ∂L/∂u(t_F), leaves as ∂L/∂u_0;
@@ -120,10 +152,11 @@ impl<'t> ErkAdjointRun<'t> {
         let n = lambda.len();
         let mut aws = AdjointErkWorkspace::new(self.tab.s, n);
         let mut ews = ErkWorkspace::new(n);
-        match self.policy {
+        self.store.begin_reverse_sweep();
+        match self.policy.placement().clone() {
             CheckpointPolicy::All => {
                 for step in (0..self.nt).rev() {
-                    let cp = self.store.remove(step).expect("checkpoint stored");
+                    let cp = self.store.take(step).expect("checkpoint stored");
                     let ks = cp.ks.as_ref().expect("stages stored");
                     adjoint_erk_step(
                         self.tab, rhs, cp.t, cp.h, &cp.u, ks, lambda, grad_theta, &mut aws,
@@ -135,7 +168,7 @@ impl<'t> ErkAdjointRun<'t> {
                 let mut ks: Vec<Vec<f32>> = (0..self.tab.s).map(|_| vec![0.0f32; n]).collect();
                 let mut u_next = vec![0.0f32; n];
                 for step in (0..self.nt).rev() {
-                    let cp = self.store.remove(step).expect("checkpoint stored");
+                    let cp = self.store.take(step).expect("checkpoint stored");
                     if step == self.nt - 1 {
                         if let Some((u, tks)) = self.transient_last.take() {
                             adjoint_erk_step(
@@ -153,21 +186,15 @@ impl<'t> ErkAdjointRun<'t> {
                 }
             }
             CheckpointPolicy::Binomial { n_checkpoints } => {
-                // initial anchor: u_0 (bare) == checkpoint at 0 if stored
-                let u0 = match self.store.get(0) {
-                    Some(cp) => cp.u.clone(),
-                    None => {
-                        // reconstruct u_0 unavailable: policy stores step 0 by
-                        // construction when it's ever needed; if not stored the
-                        // anchor is the caller's u0 which forward() saw — store
-                        // it implicitly via transient of the first checkpoint.
-                        panic!("binomial forward must checkpoint step 0 or caller's u0");
-                    }
-                };
-                let _ = u0;
+                assert!(
+                    self.store.contains(0),
+                    "binomial forward must checkpoint step 0 or caller's u0"
+                );
                 self.binomial_block(rhs, 0, self.nt, n_checkpoints, true, lambda, grad_theta, &mut aws, &mut ews);
             }
+            CheckpointPolicy::Tiered { .. } => unreachable!("placement() is never Tiered"),
         }
+        self.store.finish();
     }
 
     /// Recursive executor for the binomial policy, mirroring the DP.
@@ -219,7 +246,7 @@ impl<'t> ErkAdjointRun<'t> {
                 panic!("binomial executor: no anchor at step {lo}");
             }
             adjoint_erk_step(self.tab, rhs, self.t_of(lo), h, &u, &ks_owned, lambda, grad_theta, aws);
-            self.store.remove(lo);
+            let _ = self.store.take(lo);
             return;
         }
 
@@ -298,67 +325,89 @@ impl<'t> ErkAdjointRun<'t> {
 }
 
 /// Gradient run for the implicit theta-methods: solution-only checkpoints
-/// over an arbitrary (possibly log-spaced) time grid.
+/// over an arbitrary (possibly log-spaced) time grid, stored through the
+/// same [`CheckpointBackend`] abstraction as the ERK run — so long stiff
+/// trajectories can run under a RAM budget with disk spill + prefetch
+/// ([`ImplicitAdjointRun::tiered`]).
 pub struct ImplicitAdjointRun {
     pub scheme: ThetaScheme,
     pub ts: Vec<f64>,
     pub gmres_opts: GmresOptions,
-    /// u_n at every grid point (solutions only — no stages for implicit)
-    trajectory: Vec<Vec<f32>>,
+    /// u_n at every grid index (solutions only — no stages for implicit)
+    store: Box<dyn CheckpointBackend>,
 }
 
 impl ImplicitAdjointRun {
     pub fn new(scheme: ThetaScheme, ts: Vec<f64>) -> Self {
-        ImplicitAdjointRun {
-            scheme,
-            ts,
-            gmres_opts: GmresOptions::default(),
-            trajectory: Vec::new(),
-        }
+        Self::with_backend(scheme, ts, Box::new(CheckpointStore::new()))
+    }
+
+    /// Tiered storage: at most `cfg.budget` bytes of trajectory resident,
+    /// the rest spilled under `cfg.dir` and prefetched back in reverse
+    /// order during the backward sweep.
+    pub fn tiered(
+        scheme: ThetaScheme,
+        ts: Vec<f64>,
+        cfg: TieredConfig,
+    ) -> std::io::Result<Self> {
+        Ok(Self::with_backend(scheme, ts, Box::new(TieredStore::create(cfg)?)))
+    }
+
+    fn with_backend(scheme: ThetaScheme, ts: Vec<f64>, store: Box<dyn CheckpointBackend>) -> Self {
+        ImplicitAdjointRun { scheme, ts, gmres_opts: GmresOptions::default(), store }
     }
 
     /// Forward integration storing every solution; returns u(t_F).
     pub fn forward(&mut self, rhs: &dyn OdeRhs, u0: &[f32]) -> Vec<f32> {
-        self.trajectory.clear();
-        self.trajectory.push(u0.to_vec());
-        let traj = &mut self.trajectory;
-        let uf = integrate_implicit_grid(self.scheme, rhs, &self.ts, u0, |_, _, _, _, un| {
-            traj.push(un.to_vec());
+        self.store.clear();
+        let ts = &self.ts;
+        let step_h = |i: usize| if i + 1 < ts.len() { ts[i + 1] - ts[i] } else { 0.0 };
+        self.store.insert(StepCheckpoint {
+            step: 0,
+            t: ts[0],
+            h: step_h(0),
+            u: u0.to_vec(),
+            ks: None,
         });
-        uf
+        let store = &mut self.store;
+        let mut idx = 0usize;
+        integrate_implicit_grid(self.scheme, rhs, ts, u0, |_, _, _, _, un| {
+            idx += 1;
+            store.insert(StepCheckpoint {
+                step: idx,
+                t: ts[idx],
+                h: step_h(idx),
+                u: un.to_vec(),
+                ks: None,
+            });
+        })
     }
 
-    /// State at grid index i (0 = initial).
-    pub fn state(&self, i: usize) -> &[f32] {
-        &self.trajectory[i]
+    /// State at grid index i (0 = initial).  Promotes the record from the
+    /// cold tier if it was spilled — hence `&mut`.
+    pub fn state(&mut self, i: usize) -> &[f32] {
+        &self.store.get(i).expect("state stored").u
     }
 
+    /// Trajectory bytes currently resident in RAM.
     pub fn checkpoint_bytes(&self) -> u64 {
-        self.trajectory.iter().map(|u| (u.len() * 4) as u64).sum()
+        self.store.hot_bytes()
+    }
+
+    /// Storage-tier counters (zeros beyond the hot fields in-memory).
+    pub fn tier_stats(&self) -> TierStats {
+        self.store.stats()
     }
 
     /// Backward sweep over all steps; λ and θ-gradient as in the ERK run.
     pub fn backward(&mut self, rhs: &dyn OdeRhs, lambda: &mut [f32], grad_theta: &mut [f32]) {
-        for step in (0..self.ts.len() - 1).rev() {
-            let t = self.ts[step];
-            let h = self.ts[step + 1] - self.ts[step];
-            let res = adjoint_theta_step(
-                self.scheme,
-                rhs,
-                t,
-                h,
-                &self.trajectory[step],
-                &self.trajectory[step + 1],
-                lambda,
-                grad_theta,
-                &self.gmres_opts,
-            );
-            debug_assert!(res.converged, "transposed solve stalled at step {step}");
-        }
+        self.backward_range_impl(rhs, 0, self.ts.len() - 1, lambda, grad_theta, true);
     }
 
     /// Backward over a sub-range [i, j) of grid steps (multi-observation
-    /// losses add λ jumps between ranges — see tasks/stiff.rs).
+    /// losses add λ jumps between ranges — see tasks/stiff.rs).  Consumes
+    /// the states in (i, j]; state `i` stays stored so the next (lower)
+    /// range can use it as its right boundary.
     pub fn backward_range(
         &mut self,
         rhs: &dyn OdeRhs,
@@ -367,21 +416,52 @@ impl ImplicitAdjointRun {
         lambda: &mut [f32],
         grad_theta: &mut [f32],
     ) {
+        self.backward_range_impl(rhs, i, j, lambda, grad_theta, false);
+    }
+
+    fn backward_range_impl(
+        &mut self,
+        rhs: &dyn OdeRhs,
+        i: usize,
+        j: usize,
+        lambda: &mut [f32],
+        grad_theta: &mut [f32],
+        check_convergence: bool,
+    ) {
+        if i >= j {
+            return;
+        }
+        self.store.begin_reverse_sweep();
+        // pairs (step, step+1) walk down from j; each state's last use is
+        // as the pair's lower end, so carry it over instead of re-reading
+        let mut upper = self.store.take(j).expect("state stored").u;
         for step in (i..j).rev() {
             let t = self.ts[step];
             let h = self.ts[step + 1] - self.ts[step];
-            adjoint_theta_step(
+            let lower = if step == i {
+                // boundary: a later backward_range call still needs it
+                self.store.get(step).expect("state stored").u.clone()
+            } else {
+                self.store.take(step).expect("state stored").u
+            };
+            let res = adjoint_theta_step(
                 self.scheme,
                 rhs,
                 t,
                 h,
-                &self.trajectory[step],
-                &self.trajectory[step + 1],
+                &lower,
+                &upper,
                 lambda,
                 grad_theta,
                 &self.gmres_opts,
             );
+            if check_convergence {
+                debug_assert!(res.converged, "transposed solve stalled at step {step}");
+            }
+            let _ = res;
+            upper = lower;
         }
+        self.store.finish();
     }
 }
 
@@ -469,6 +549,117 @@ mod tests {
         }
     }
 
+    fn tmp_spill_dir(tag: &str) -> String {
+        let d = std::env::temp_dir()
+            .join(format!("pnode-driver-tiered-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn tiered_spill_gradients_are_bitwise_identical_to_in_memory() {
+        let rhs = mk_rhs(71);
+        let n = rhs.state_len();
+        let mut rng = Rng::new(72);
+        let u0 = prop::vec_uniform(&mut rng, n, 0.5);
+        let w = prop::vec_uniform(&mut rng, n, 1.0);
+        let nt = 16;
+
+        let (l_mem, g_mem, _) = grad_with_policy(CheckpointPolicy::All, &rhs, &u0, &w, nt);
+
+        let dir = tmp_spill_dir("all");
+        // budget far below one full trajectory: forces spilling
+        let policy = CheckpointPolicy::Tiered {
+            budget_bytes: 600,
+            dir: dir.clone(),
+            compress_f16: false,
+            inner: Box::new(CheckpointPolicy::All),
+        };
+        let mut run = ErkAdjointRun::new(&tableau::RK4, policy, 0.0, 1.0, nt);
+        run.forward(&rhs, &u0);
+        let mut l_t = w.to_vec();
+        let mut g_t = vec![0.0f32; rhs.param_len()];
+        run.backward(&rhs, &mut l_t, &mut g_t);
+        let st = run.tier_stats();
+
+        assert_eq!(run.recompute_steps, 0, "All placement never recomputes");
+        assert_eq!(l_t, l_mem, "λ bitwise identical across backends");
+        assert_eq!(g_t, g_mem, "θ̄ bitwise identical across backends");
+        assert!(st.spills > 0, "budget must force spills: {st:?}");
+        assert!(st.prefetch_hits > 0, "reverse sweep must use the prefetcher: {st:?}");
+        assert!(st.cold_bytes_written > 0);
+        assert!(
+            st.peak_hot_bytes <= 600 + 2 * 500,
+            "hot tier stays near budget: {st:?}"
+        );
+        let _ = std::fs::remove_dir_all(std::path::Path::new(&dir));
+    }
+
+    #[test]
+    fn tiered_composes_with_binomial_and_solution_only() {
+        let rhs = mk_rhs(81);
+        let n = rhs.state_len();
+        let mut rng = Rng::new(82);
+        let u0 = prop::vec_uniform(&mut rng, n, 0.5);
+        let w = prop::vec_uniform(&mut rng, n, 1.0);
+        let nt = 12;
+        let (l_ref, g_ref, _) = grad_with_policy(CheckpointPolicy::All, &rhs, &u0, &w, nt);
+
+        for (tag, inner, want_recompute) in [
+            ("bin", CheckpointPolicy::Binomial { n_checkpoints: 3 }, None),
+            ("sol", CheckpointPolicy::SolutionOnly, Some((nt - 1) as u64)),
+        ] {
+            let dir = tmp_spill_dir(tag);
+            let policy = CheckpointPolicy::Tiered {
+                budget_bytes: 512,
+                dir: dir.clone(),
+                compress_f16: false,
+                inner: Box::new(inner.clone()),
+            };
+            let (l, g, recompute) = grad_with_policy(policy, &rhs, &u0, &w, nt);
+            assert_eq!(l, l_ref, "{tag}: λ bitwise vs in-memory All");
+            assert_eq!(g, g_ref, "{tag}: θ̄ bitwise vs in-memory All");
+            if let Some(want) = want_recompute {
+                assert_eq!(recompute, want, "{tag}");
+            }
+            // recompute counts must match the same placement without tiers
+            let (_, _, recompute_mem) = grad_with_policy(inner, &rhs, &u0, &w, nt);
+            assert_eq!(recompute, recompute_mem, "{tag}: tiering never changes the schedule");
+            let _ = std::fs::remove_dir_all(std::path::Path::new(&dir));
+        }
+    }
+
+    #[test]
+    fn tiered_f16_compression_accounts_error_and_stays_close() {
+        let rhs = mk_rhs(91);
+        let n = rhs.state_len();
+        let mut rng = Rng::new(92);
+        let u0 = prop::vec_uniform(&mut rng, n, 0.5);
+        let w = prop::vec_uniform(&mut rng, n, 1.0);
+        let nt = 16;
+        let (l_ref, g_ref, _) = grad_with_policy(CheckpointPolicy::All, &rhs, &u0, &w, nt);
+
+        let dir = tmp_spill_dir("f16");
+        let policy = CheckpointPolicy::Tiered {
+            budget_bytes: 600,
+            dir: dir.clone(),
+            compress_f16: true,
+            inner: Box::new(CheckpointPolicy::All),
+        };
+        let mut run = ErkAdjointRun::new(&tableau::RK4, policy, 0.0, 1.0, nt);
+        run.forward(&rhs, &u0);
+        let mut l = w.to_vec();
+        let mut g = vec![0.0f32; rhs.param_len()];
+        run.backward(&rhs, &mut l, &mut g);
+        let st = run.tier_stats();
+        assert!(st.compressed_elems > 0, "{st:?}");
+        assert!(st.compress_max_abs_err > 0.0 && st.compress_max_abs_err < 5e-2, "{st:?}");
+        // f16 state error (~5e-4 relative) propagates mildly into gradients
+        crate::testing::assert_allclose(&l, &l_ref, 1e-1, 1e-3, "f16 λ");
+        crate::testing::assert_allclose(&g, &g_ref, 1e-1, 1e-3, "f16 θ̄");
+        let _ = std::fs::remove_dir_all(std::path::Path::new(&dir));
+    }
+
     #[test]
     fn full_gradient_matches_finite_differences() {
         let mut rhs = mk_rhs(51);
@@ -518,6 +709,47 @@ mod tests {
                 gtheta[idx]
             );
         }
+    }
+
+    #[test]
+    fn implicit_tiered_matches_in_memory_bitwise() {
+        use crate::checkpoint::tiered::TieredConfig;
+        let rhs = {
+            let dims = vec![3, 8, 3];
+            let mut rng = Rng::new(63);
+            let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+            MlpRhs::new(dims, crate::nn::Act::Gelu, false, 1, theta)
+        };
+        let ts: Vec<f64> = (0..=12).map(|i| i as f64 / 12.0).collect();
+        let u0 = vec![0.5f32, -0.2, 0.1];
+        let w = vec![1.0f32, -0.5, 0.25];
+
+        let grad = |run: &mut ImplicitAdjointRun| {
+            run.forward(&rhs, &u0);
+            let mut l = w.clone();
+            let mut g = vec![0.0f32; rhs.param_len()];
+            run.backward(&rhs, &mut l, &mut g);
+            (l, g)
+        };
+        let mut mem = ImplicitAdjointRun::new(ThetaScheme::crank_nicolson(), ts.clone());
+        let (l_mem, g_mem) = grad(&mut mem);
+
+        let dir = tmp_spill_dir("implicit");
+        // each state record is 3*4+48 = 60 B; 13 states ≈ 780 B total
+        let mut tr = ImplicitAdjointRun::tiered(
+            ThetaScheme::crank_nicolson(),
+            ts,
+            TieredConfig::new(150, &dir),
+        )
+        .expect("tiered store");
+        let (l_t, g_t) = grad(&mut tr);
+        let st = tr.tier_stats();
+
+        assert_eq!(l_t, l_mem, "implicit λ bitwise identical across backends");
+        assert_eq!(g_t, g_mem, "implicit θ̄ bitwise identical across backends");
+        assert!(st.spills > 0, "150 B budget must spill: {st:?}");
+        assert!(st.prefetch_hits > 0, "backward sweep prefetches: {st:?}");
+        let _ = std::fs::remove_dir_all(std::path::Path::new(&dir));
     }
 
     #[test]

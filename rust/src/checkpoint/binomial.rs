@@ -303,6 +303,42 @@ mod tests {
     }
 
     #[test]
+    fn single_checkpoint_schedules_are_executable() {
+        // n_checkpoints == 1 is the tightest legal budget: the DP must
+        // still produce a finite schedule whose decisions terminate.
+        let mut planner = BinomialPlanner::new();
+        for nt in 2..=40usize {
+            let cost = planner.cost(nt, 1, Anchor::Bare, true);
+            assert!(cost < (nt * nt) as u64, "nt={nt}: cost {cost} blows up");
+            let pos = planner.forward_store_positions(nt, 1);
+            assert!(pos.len() <= 1, "nt={nt}: {pos:?}");
+        }
+        // cost is strictly increasing in nt once recomputation kicks in
+        let c3 = planner.cost(3, 1, Anchor::Bare, true);
+        let c10 = planner.cost(10, 1, Anchor::Bare, true);
+        assert!(c10 > c3);
+    }
+
+    #[test]
+    fn oversized_budgets_never_recompute() {
+        // n_checkpoints >= n_steps (and the boundary nc = nt-1): every
+        // step can stay resident, so the optimal schedule recomputes
+        // nothing and the forward pass stores at most nt positions.
+        let mut planner = BinomialPlanner::new();
+        for nt in 1..=30usize {
+            for nc in [nt.max(2) - 1, nt, nt + 1, 4 * nt] {
+                let cost = planner.cost(nt, nc, Anchor::Bare, true);
+                assert_eq!(cost, 0, "nt={nt} nc={nc}");
+                let pos = planner.forward_store_positions(nt, nc);
+                assert!(pos.len() <= nt, "nt={nt} nc={nc}: {pos:?}");
+                for w in pos.windows(2) {
+                    assert!(w[0] < w[1]);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn forward_positions_fit_slots_and_range() {
         let mut planner = BinomialPlanner::new();
         for (nt, nc) in [(10usize, 3usize), (25, 4), (40, 2), (7, 7)] {

@@ -1,11 +1,14 @@
 //! Checkpointing for the discrete adjoint: byte-accounted storage,
-//! policies (All / SolutionOnly / Binomial), the Prop-2 closed form, and a
-//! DP-optimal binomial scheduler for multistage schemes.
+//! policies (All / SolutionOnly / Binomial / Tiered), the Prop-2 closed
+//! form, a DP-optimal binomial scheduler for multistage schemes, and the
+//! tiered (RAM-budget + disk-spill + reverse-prefetch) storage backend.
 
 pub mod binomial;
 pub mod policy;
 pub mod store;
+pub mod tiered;
 
 pub use binomial::{optimal_extra_steps, prop2_extra_steps, BinomialPlanner};
 pub use policy::CheckpointPolicy;
 pub use store::{CheckpointStore, StepCheckpoint};
+pub use tiered::{CheckpointBackend, MemoryBudget, TierStats, TieredConfig, TieredStore};

@@ -1,7 +1,16 @@
 //! Checkpointing policies (the PNODE memory/compute trade-off knob).
 
+use crate::checkpoint::tiered::MemoryBudget;
+
 /// How the forward pass checkpoints and what the backward pass recomputes.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+///
+/// `All` / `SolutionOnly` / `Binomial` govern *placement* (which steps are
+/// stored, with or without stages).  `Tiered` is orthogonal: it reuses one
+/// of those placements (`inner`) but routes the stored checkpoints through
+/// the budgeted RAM-tier/disk-spill backend instead of keeping everything
+/// resident — so `Tiered{inner: Binomial{..}}` composes the Revolve
+/// schedule with bounded host memory.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum CheckpointPolicy {
     /// Store solution + stages at every step: zero recomputation, the
     /// paper's default "PNODE" configuration (worst-case memory).
@@ -12,17 +21,87 @@ pub enum CheckpointPolicy {
     /// Binomial (Revolve-style) with at most `n_checkpoints` slots:
     /// recomputation given by the optimal schedule / Prop. 2.
     Binomial { n_checkpoints: usize },
+    /// Tiered storage: `inner` placement, hot-tier RAM capped at
+    /// `budget_bytes`, overflow spilled to a file under `dir` (optionally
+    /// f16-compressed), streamed back by a reverse-order prefetcher during
+    /// the adjoint sweep.
+    Tiered {
+        budget_bytes: u64,
+        /// spill directory (created on demand; the spill file is deleted
+        /// when the run is dropped)
+        dir: String,
+        /// store cold payloads as f16 (2× smaller, lossy, error-accounted)
+        compress_f16: bool,
+        /// placement policy: `All`, `SolutionOnly`, or `Binomial`
+        inner: Box<CheckpointPolicy>,
+    },
 }
 
 impl CheckpointPolicy {
-    pub fn parse(s: &str) -> Option<CheckpointPolicy> {
+    /// Parse a policy spec.  Grammar:
+    ///
+    /// ```text
+    /// all | solution | solution_only | pnode2
+    /// binomial:<n>                          n >= 1
+    /// tiered:<budget>[+f16]:<dir>[:<inner>] budget e.g. 4096 / 64k / 8m / 1g
+    /// ```
+    ///
+    /// Degenerate specs (`binomial:0`, zero budgets, nested `tiered`) are
+    /// rejected with a message naming the offending part rather than
+    /// constructing a policy whose schedule can never run.
+    pub fn parse(s: &str) -> Result<CheckpointPolicy, String> {
         if let Some(rest) = s.strip_prefix("binomial:") {
-            return rest.parse().ok().map(|n| CheckpointPolicy::Binomial { n_checkpoints: n });
+            let n: usize = rest
+                .parse()
+                .map_err(|_| format!("bad binomial checkpoint count {rest:?} in {s:?}"))?;
+            if n == 0 {
+                return Err(format!(
+                    "binomial:0 is degenerate: the Revolve schedule needs at least one \
+                     checkpoint slot (got {s:?}; use n >= 1, or `solution_only`)"
+                ));
+            }
+            return Ok(CheckpointPolicy::Binomial { n_checkpoints: n });
+        }
+        if let Some(rest) = s.strip_prefix("tiered:") {
+            let (budget_part, rest) = rest
+                .split_once(':')
+                .ok_or_else(|| format!("tiered policy {s:?} is missing the spill dir (want tiered:<budget>:<dir>[:<inner>])"))?;
+            let (budget_spec, compress_f16) = match budget_part.strip_suffix("+f16") {
+                Some(b) => (b, true),
+                None => (budget_part, false),
+            };
+            let budget = MemoryBudget::parse(budget_spec).map_err(|e| format!("{s:?}: {e}"))?;
+            if rest.contains(":tiered:") || rest.starts_with("tiered:") {
+                return Err(format!("{s:?}: tiered policies cannot nest"));
+            }
+            // the inner policy is recognized from the END of the spec, so
+            // the dir itself may contain ':' (Windows drives, URL-ish
+            // paths) and name() round-trips for any dir
+            let (dir, inner) = match split_inner_suffix(rest) {
+                Some((dir, inner_spec)) => {
+                    let inner = CheckpointPolicy::parse(inner_spec)
+                        .map_err(|e| format!("{s:?}: bad inner policy: {e}"))?;
+                    (dir, inner)
+                }
+                None => (rest, CheckpointPolicy::All),
+            };
+            if dir.is_empty() {
+                return Err(format!("{s:?}: empty spill dir"));
+            }
+            return Ok(CheckpointPolicy::Tiered {
+                budget_bytes: budget.bytes,
+                dir: dir.to_string(),
+                compress_f16,
+                inner: Box::new(inner),
+            });
         }
         match s {
-            "all" => Some(CheckpointPolicy::All),
-            "solution" | "solution_only" | "pnode2" => Some(CheckpointPolicy::SolutionOnly),
-            _ => None,
+            "all" => Ok(CheckpointPolicy::All),
+            "solution" | "solution_only" | "pnode2" => Ok(CheckpointPolicy::SolutionOnly),
+            _ => Err(format!(
+                "unknown checkpoint policy {s:?} (want all | solution_only | binomial:<n> | \
+                 tiered:<budget>:<dir>[:<inner>])"
+            )),
         }
     }
 
@@ -31,8 +110,52 @@ impl CheckpointPolicy {
             CheckpointPolicy::All => "all".into(),
             CheckpointPolicy::SolutionOnly => "solution_only".into(),
             CheckpointPolicy::Binomial { n_checkpoints } => format!("binomial:{n_checkpoints}"),
+            CheckpointPolicy::Tiered { budget_bytes, dir, compress_f16, inner } => {
+                format!(
+                    "tiered:{}{}:{}:{}",
+                    MemoryBudget::from_bytes(*budget_bytes).display(),
+                    if *compress_f16 { "+f16" } else { "" },
+                    dir,
+                    inner.name()
+                )
+            }
         }
     }
+
+    /// The placement policy: which steps get stored, and whether stages
+    /// ride along.  Identity for non-tiered policies; unwraps nested
+    /// `Tiered` layers fully (the parser rejects nesting, but the variant
+    /// is public, so be total rather than panic downstream).
+    pub fn placement(&self) -> &CheckpointPolicy {
+        let mut p = self;
+        while let CheckpointPolicy::Tiered { inner, .. } = p {
+            p = inner.as_ref();
+        }
+        p
+    }
+
+    /// Whether stored checkpoints carry stage derivatives.
+    pub fn stores_stages(&self) -> bool {
+        !matches!(self.placement(), CheckpointPolicy::SolutionOnly)
+    }
+}
+
+/// Split `<dir>[:<inner-policy>]` by recognizing a valid inner-policy spec
+/// at the *end* of the string (`:all`, `:solution_only`, `:solution`,
+/// `:pnode2`, `:binomial:<digits>`); everything before it is the dir.
+fn split_inner_suffix(rest: &str) -> Option<(&str, &str)> {
+    for suffix in [":all", ":solution_only", ":solution", ":pnode2"] {
+        if let Some(dir) = rest.strip_suffix(suffix) {
+            return Some((dir, &suffix[1..]));
+        }
+    }
+    if let Some(pos) = rest.rfind(":binomial:") {
+        let digits = &rest[pos + ":binomial:".len()..];
+        if !digits.is_empty() && digits.bytes().all(|b| b.is_ascii_digit()) {
+            return Some((&rest[..pos], &rest[pos + 1..]));
+        }
+    }
+    None
 }
 
 #[cfg(test)]
@@ -45,9 +168,112 @@ mod tests {
             CheckpointPolicy::All,
             CheckpointPolicy::SolutionOnly,
             CheckpointPolicy::Binomial { n_checkpoints: 7 },
+            CheckpointPolicy::Tiered {
+                budget_bytes: 8 << 20,
+                dir: "/tmp/spill".into(),
+                compress_f16: false,
+                inner: Box::new(CheckpointPolicy::All),
+            },
+            CheckpointPolicy::Tiered {
+                budget_bytes: 64 << 10,
+                dir: "spill_dir".into(),
+                compress_f16: true,
+                inner: Box::new(CheckpointPolicy::Binomial { n_checkpoints: 5 }),
+            },
         ] {
-            assert_eq!(CheckpointPolicy::parse(&p.name()), Some(p));
+            assert_eq!(CheckpointPolicy::parse(&p.name()), Ok(p.clone()), "{}", p.name());
         }
-        assert_eq!(CheckpointPolicy::parse("bogus"), None);
+        assert!(CheckpointPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn degenerate_specs_are_rejected_with_context() {
+        let e = CheckpointPolicy::parse("binomial:0").unwrap_err();
+        assert!(e.contains("binomial:0") && e.contains("at least one"), "{e}");
+        assert!(CheckpointPolicy::parse("binomial:").is_err());
+        assert!(CheckpointPolicy::parse("binomial:x").is_err());
+        assert!(CheckpointPolicy::parse("binomial:-2").is_err());
+        let e = CheckpointPolicy::parse("tiered:0:/tmp/x").unwrap_err();
+        assert!(e.contains("zero"), "{e}");
+        assert!(CheckpointPolicy::parse("tiered:8m").is_err(), "missing dir");
+        assert!(CheckpointPolicy::parse("tiered:8m:").is_err(), "empty dir");
+        let e = CheckpointPolicy::parse("tiered:8m:/tmp/x:binomial:0").unwrap_err();
+        assert!(e.contains("inner"), "{e}");
+        let e = CheckpointPolicy::parse("tiered:8m:/tmp/x:tiered:8m:/tmp/y").unwrap_err();
+        assert!(e.contains("nest"), "{e}");
+    }
+
+    #[test]
+    fn tiered_parse_shapes() {
+        match CheckpointPolicy::parse("tiered:64k:/tmp/spill").unwrap() {
+            CheckpointPolicy::Tiered { budget_bytes, dir, compress_f16, inner } => {
+                assert_eq!(budget_bytes, 64 << 10);
+                assert_eq!(dir, "/tmp/spill");
+                assert!(!compress_f16);
+                assert_eq!(*inner, CheckpointPolicy::All);
+            }
+            p => panic!("wrong variant {p:?}"),
+        }
+        match CheckpointPolicy::parse("tiered:1m+f16:sd:solution_only").unwrap() {
+            CheckpointPolicy::Tiered { compress_f16, inner, .. } => {
+                assert!(compress_f16);
+                assert_eq!(*inner, CheckpointPolicy::SolutionOnly);
+            }
+            p => panic!("wrong variant {p:?}"),
+        }
+    }
+
+    #[test]
+    fn dirs_containing_colons_round_trip() {
+        // the inner policy is recognized from the end, so Windows-style
+        // and otherwise colon-bearing dirs survive name() -> parse()
+        for dir in ["C:\\spill", "data:all:x", "/tmp/all", "/tmp/binomial:7-ish"] {
+            for inner in [
+                CheckpointPolicy::All,
+                CheckpointPolicy::SolutionOnly,
+                CheckpointPolicy::Binomial { n_checkpoints: 7 },
+            ] {
+                let p = CheckpointPolicy::Tiered {
+                    budget_bytes: 4096,
+                    dir: dir.into(),
+                    compress_f16: false,
+                    inner: Box::new(inner),
+                };
+                assert_eq!(CheckpointPolicy::parse(&p.name()), Ok(p.clone()), "{}", p.name());
+            }
+        }
+        // bare colon-dir without an inner suffix parses as dir + default
+        match CheckpointPolicy::parse("tiered:8m:C:\\spill").unwrap() {
+            CheckpointPolicy::Tiered { dir, inner, .. } => {
+                assert_eq!(dir, "C:\\spill");
+                assert_eq!(*inner, CheckpointPolicy::All);
+            }
+            p => panic!("wrong variant {p:?}"),
+        }
+    }
+
+    #[test]
+    fn placement_and_stage_semantics() {
+        let tiered = CheckpointPolicy::parse("tiered:8m:/tmp/x:binomial:4").unwrap();
+        assert_eq!(
+            tiered.placement(),
+            &CheckpointPolicy::Binomial { n_checkpoints: 4 }
+        );
+        assert!(tiered.stores_stages());
+        // programmatically nested (parser rejects it): placement unwraps fully
+        let nested = CheckpointPolicy::Tiered {
+            budget_bytes: 1024,
+            dir: "/tmp/a".into(),
+            compress_f16: false,
+            inner: Box::new(tiered.clone()),
+        };
+        assert_eq!(
+            nested.placement(),
+            &CheckpointPolicy::Binomial { n_checkpoints: 4 }
+        );
+        let t2 = CheckpointPolicy::parse("tiered:8m:/tmp/x:pnode2").unwrap();
+        assert!(!t2.stores_stages());
+        assert!(CheckpointPolicy::All.stores_stages());
+        assert!(!CheckpointPolicy::SolutionOnly.stores_stages());
     }
 }

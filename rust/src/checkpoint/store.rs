@@ -84,9 +84,13 @@ impl CheckpointStore {
         self.peak_bytes
     }
 
+    /// Drop everything and reset accounting, peak included: a cleared
+    /// store begins a fresh run (the adjoint driver clears at the top of
+    /// every forward pass), so peaks report per-run, not lifetime, memory.
     pub fn clear(&mut self) {
         self.slots.clear();
         self.bytes = 0;
+        self.peak_bytes = 0;
     }
 }
 
@@ -127,6 +131,54 @@ mod tests {
         assert!(s.bytes() > b1);
         s.remove(3);
         assert_eq!(s.bytes(), 0);
+    }
+
+    #[test]
+    fn peak_accounting_across_evict_restore_cycles() {
+        // simulate the binomial executor's churn: evict (remove) and
+        // restore (re-insert) the same steps repeatedly; `bytes` must
+        // return to baseline every cycle and `peak` must only ratchet up.
+        let mut s = CheckpointStore::new();
+        for step in 0..4 {
+            s.insert(cp(step, 50, 2)); // 3*50*4+48 = 648 each
+        }
+        let baseline = s.bytes();
+        assert_eq!(baseline, 4 * 648);
+        let mut peak = s.peak_bytes();
+        for cycle in 0..5 {
+            let evicted: Vec<StepCheckpoint> =
+                (0..2).map(|step| s.remove(step).unwrap()).collect();
+            assert_eq!(s.bytes(), baseline - 2 * 648, "cycle {cycle}");
+            for cp in evicted {
+                s.insert(cp);
+            }
+            assert_eq!(s.bytes(), baseline, "cycle {cycle}: restore is lossless");
+            assert!(s.peak_bytes() >= peak, "peak never decreases");
+            peak = s.peak_bytes();
+        }
+        // an extra transient resident raises the peak exactly once
+        s.insert(cp(99, 50, 2));
+        assert_eq!(s.peak_bytes(), baseline + 648);
+        s.remove(99);
+        assert_eq!(s.bytes(), baseline);
+        assert_eq!(s.peak_bytes(), baseline + 648, "peak sticks after the transient");
+    }
+
+    #[test]
+    fn clear_resets_bytes_and_peak_for_the_next_run() {
+        let mut s = CheckpointStore::new();
+        s.insert(cp(1, 10, 1));
+        s.insert(cp(2, 10, 1));
+        assert!(s.peak_bytes() > 0);
+        s.clear();
+        assert_eq!(s.bytes(), 0);
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.peak_bytes(), 0, "peak is per-run, not lifetime");
+        assert!(s.get(1).is_none());
+        // reuse after clear keeps accounting exact
+        s.insert(cp(3, 10, 0));
+        assert_eq!(s.bytes(), 10 * 4 + 48);
+        assert_eq!(s.peak_bytes(), 10 * 4 + 48);
     }
 
     #[test]

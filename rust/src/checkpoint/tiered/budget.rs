@@ -1,0 +1,85 @@
+//! RAM budget for the hot checkpoint tier.
+
+/// A byte budget with a human-friendly parser (`"4096"`, `"64k"`, `"8m"`,
+/// `"2g"`; binary multiples).  `u64::MAX` means unlimited.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemoryBudget {
+    pub bytes: u64,
+}
+
+impl MemoryBudget {
+    pub fn unlimited() -> MemoryBudget {
+        MemoryBudget { bytes: u64::MAX }
+    }
+
+    pub fn from_bytes(bytes: u64) -> MemoryBudget {
+        MemoryBudget { bytes }
+    }
+
+    pub fn is_unlimited(&self) -> bool {
+        self.bytes == u64::MAX
+    }
+
+    /// Parse `"<number>[k|m|g]"` (case-insensitive).  Zero budgets are
+    /// rejected: a hot tier that can hold nothing deadlocks the sweep.
+    pub fn parse(s: &str) -> Result<MemoryBudget, String> {
+        let t = s.trim().to_ascii_lowercase();
+        if t.is_empty() {
+            return Err("empty memory budget".into());
+        }
+        let (num, mult) = match t.as_bytes()[t.len() - 1] {
+            b'k' => (&t[..t.len() - 1], 1u64 << 10),
+            b'm' => (&t[..t.len() - 1], 1u64 << 20),
+            b'g' => (&t[..t.len() - 1], 1u64 << 30),
+            _ => (t.as_str(), 1u64),
+        };
+        let n: u64 = num
+            .parse()
+            .map_err(|_| format!("bad memory budget {s:?} (want e.g. \"4096\", \"64k\", \"8m\")"))?;
+        let bytes = n
+            .checked_mul(mult)
+            .ok_or_else(|| format!("memory budget {s:?} overflows u64"))?;
+        if bytes == 0 {
+            return Err(format!("memory budget {s:?} is zero; the hot tier needs room for at least one checkpoint"));
+        }
+        Ok(MemoryBudget { bytes })
+    }
+
+    /// Render in the same grammar `parse` accepts (exact round-trip).
+    pub fn display(&self) -> String {
+        let b = self.bytes;
+        for (shift, suffix) in [(30u32, "g"), (20, "m"), (10, "k")] {
+            if b >= (1 << shift) && b % (1 << shift) == 0 {
+                return format!("{}{suffix}", b >> shift);
+            }
+        }
+        b.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_suffixes() {
+        assert_eq!(MemoryBudget::parse("4096").unwrap().bytes, 4096);
+        assert_eq!(MemoryBudget::parse("64k").unwrap().bytes, 64 << 10);
+        assert_eq!(MemoryBudget::parse("8M").unwrap().bytes, 8 << 20);
+        assert_eq!(MemoryBudget::parse("2g").unwrap().bytes, 2u64 << 30);
+        assert!(MemoryBudget::parse("0").is_err());
+        assert!(MemoryBudget::parse("0m").is_err());
+        assert!(MemoryBudget::parse("").is_err());
+        assert!(MemoryBudget::parse("12q").is_err());
+        assert!(MemoryBudget::parse("-5").is_err());
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for s in ["4096", "64k", "8m", "2g", "1023", "3145728"] {
+            let b = MemoryBudget::parse(s).unwrap();
+            assert_eq!(MemoryBudget::parse(&b.display()).unwrap(), b, "{s}");
+        }
+        assert_eq!(MemoryBudget::parse("8m").unwrap().display(), "8m");
+    }
+}

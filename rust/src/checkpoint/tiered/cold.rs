@@ -1,0 +1,560 @@
+//! File-backed cold tier: compact binary step-checkpoint records.
+//!
+//! One append-only spill file per store, with an in-memory index
+//! (`step -> RecordMeta`).  Record layout (little-endian):
+//!
+//! ```text
+//! [magic u32 = 0x504e434b "PNCK"] [step u64] [t f64] [h f64]
+//! [u_len u32] [n_stages u32] [stage_len u32] [encoding u8] [pad u8;3]
+//! [payload: u then stages, row-major; f32 LE or f16 LE per `encoding`]
+//! ```
+//!
+//! The index is never persisted: the spill file lives exactly as long as
+//! one forward+backward pass and is deleted on drop.  f16 compression is
+//! lossy; the codec accounts the exact round-trip error it introduces
+//! (`compressed_elems`, `max_abs_err`) so benchmarks can report the
+//! gradient-accuracy cost alongside the 2× byte saving.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::checkpoint::store::StepCheckpoint;
+
+const RECORD_MAGIC: u32 = 0x504e_434b; // "PNCK"
+const HEADER_BYTES: u64 = 4 + 8 + 8 + 8 + 4 + 4 + 4 + 4;
+
+/// Payload element encoding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Encoding {
+    F32,
+    F16,
+}
+
+impl Encoding {
+    fn elem_bytes(self) -> u64 {
+        match self {
+            Encoding::F32 => 4,
+            Encoding::F16 => 2,
+        }
+    }
+
+    fn tag(self) -> u8 {
+        match self {
+            Encoding::F32 => 0,
+            Encoding::F16 => 1,
+        }
+    }
+
+    fn from_tag(tag: u8) -> Option<Encoding> {
+        match tag {
+            0 => Some(Encoding::F32),
+            1 => Some(Encoding::F16),
+            _ => None,
+        }
+    }
+}
+
+/// Index entry: everything needed to read one record back without
+/// consulting the writer.
+#[derive(Clone, Copy, Debug)]
+pub struct RecordMeta {
+    pub step: usize,
+    pub offset: u64,
+    pub t: f64,
+    pub h: f64,
+    pub u_len: u32,
+    pub n_stages: u32,
+    pub stage_len: u32,
+    pub encoding: Encoding,
+}
+
+impl RecordMeta {
+    pub fn elems(&self) -> u64 {
+        self.u_len as u64 + self.n_stages as u64 * self.stage_len as u64
+    }
+
+    pub fn payload_bytes(&self) -> u64 {
+        self.elems() * self.encoding.elem_bytes()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        HEADER_BYTES + self.payload_bytes()
+    }
+}
+
+/// The cold tier: appends at the tail, reads anywhere, deletes its file on
+/// drop.
+pub struct ColdStore {
+    path: PathBuf,
+    writer: BufWriter<File>,
+    reader: File,
+    index: BTreeMap<usize, RecordMeta>,
+    write_offset: u64,
+    writer_dirty: bool,
+    compress: bool,
+    // ---- counters ----
+    pub bytes_written: u64,
+    pub live_bytes: u64,
+    pub spills: u64,
+    pub compressed_elems: u64,
+    pub compress_max_abs_err: f32,
+}
+
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl ColdStore {
+    /// Create a fresh spill file under `dir` (created if absent).  The file
+    /// name embeds the pid and a process-wide sequence number so concurrent
+    /// stores never collide.
+    pub fn create(dir: &Path, compress: bool) -> io::Result<ColdStore> {
+        std::fs::create_dir_all(dir)?;
+        let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = dir.join(format!("pnode-spill-{}-{}.ckpt", std::process::id(), seq));
+        let write_file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)?;
+        let reader = File::open(&path)?;
+        Ok(ColdStore {
+            path,
+            writer: BufWriter::new(write_file),
+            reader,
+            index: BTreeMap::new(),
+            write_offset: 0,
+            writer_dirty: false,
+            compress,
+            bytes_written: 0,
+            live_bytes: 0,
+            spills: 0,
+            compressed_elems: 0,
+            compress_max_abs_err: 0.0,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn contains(&self, step: usize) -> bool {
+        self.index.contains_key(&step)
+    }
+
+    /// Live record metadata in descending step order — the order the
+    /// backward sweep will want them back.
+    pub fn snapshot_desc(&self) -> Vec<RecordMeta> {
+        self.index.values().rev().copied().collect()
+    }
+
+    /// Append one checkpoint.  Replaces any index entry for the same step
+    /// (the old record becomes dead space in the file; spill files live for
+    /// one pass, so we trade compaction for strictly sequential writes).
+    pub fn append(&mut self, cp: &StepCheckpoint) -> io::Result<()> {
+        let (n_stages, stage_len) = match &cp.ks {
+            Some(ks) => (ks.len() as u32, ks.first().map(|k| k.len()).unwrap_or(0) as u32),
+            None => (0u32, 0u32),
+        };
+        let encoding = if self.compress { Encoding::F16 } else { Encoding::F32 };
+        let meta = RecordMeta {
+            step: cp.step,
+            offset: self.write_offset,
+            t: cp.t,
+            h: cp.h,
+            u_len: cp.u.len() as u32,
+            n_stages,
+            stage_len,
+            encoding,
+        };
+
+        fn write_slice(
+            w: &mut BufWriter<File>,
+            encoding: Encoding,
+            xs: &[f32],
+            max_err: &mut f32,
+            n_comp: &mut u64,
+        ) -> io::Result<()> {
+            match encoding {
+                Encoding::F32 => {
+                    for x in xs {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                Encoding::F16 => {
+                    for x in xs {
+                        let bits = f32_to_f16_bits(*x);
+                        let err = (x - f16_bits_to_f32(bits)).abs();
+                        if err > *max_err {
+                            *max_err = err;
+                        }
+                        *n_comp += 1;
+                        w.write_all(&bits.to_le_bytes())?;
+                    }
+                }
+            }
+            Ok(())
+        }
+
+        self.writer.write_all(&RECORD_MAGIC.to_le_bytes())?;
+        self.writer.write_all(&(cp.step as u64).to_le_bytes())?;
+        self.writer.write_all(&cp.t.to_le_bytes())?;
+        self.writer.write_all(&cp.h.to_le_bytes())?;
+        self.writer.write_all(&meta.u_len.to_le_bytes())?;
+        self.writer.write_all(&meta.n_stages.to_le_bytes())?;
+        self.writer.write_all(&meta.stage_len.to_le_bytes())?;
+        self.writer.write_all(&[encoding.tag(), 0, 0, 0])?;
+
+        let mut max_err = self.compress_max_abs_err;
+        let mut n_comp = self.compressed_elems;
+        write_slice(&mut self.writer, encoding, &cp.u, &mut max_err, &mut n_comp)?;
+        if let Some(ks) = &cp.ks {
+            for k in ks {
+                write_slice(&mut self.writer, encoding, k, &mut max_err, &mut n_comp)?;
+            }
+        }
+        self.compress_max_abs_err = max_err;
+        self.compressed_elems = n_comp;
+
+        let total = meta.total_bytes();
+        self.write_offset += total;
+        self.bytes_written += total;
+        self.spills += 1;
+        self.writer_dirty = true;
+        if let Some(old) = self.index.insert(cp.step, meta) {
+            self.live_bytes -= old.total_bytes();
+        }
+        self.live_bytes += total;
+        Ok(())
+    }
+
+    /// Make pending writes visible to `self.reader` and other handles on
+    /// the file (the prefetcher's).
+    pub fn flush(&mut self) -> io::Result<()> {
+        if self.writer_dirty {
+            self.writer.flush()?;
+            self.writer_dirty = false;
+        }
+        Ok(())
+    }
+
+    /// Read the record for `step` back into RAM (the index entry stays —
+    /// pair with [`ColdStore::remove`] to consume it).
+    pub fn read(&mut self, step: usize) -> io::Result<Option<StepCheckpoint>> {
+        let meta = match self.index.get(&step) {
+            Some(m) => *m,
+            None => return Ok(None),
+        };
+        self.flush()?;
+        read_record(&mut self.reader, &meta).map(Some)
+    }
+
+    /// Drop the index entry for `step`.  Returns whether it existed.
+    pub fn remove(&mut self, step: usize) -> bool {
+        match self.index.remove(&step) {
+            Some(meta) => {
+                self.live_bytes -= meta.total_bytes();
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.index.clear();
+        self.live_bytes = 0;
+        self.bytes_written = 0;
+        self.spills = 0;
+        self.compressed_elems = 0;
+        self.compress_max_abs_err = 0.0;
+        // leave the file as-is; write_offset keeps growing (offsets must
+        // stay unique), the file dies with the store
+    }
+}
+
+impl Drop for ColdStore {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Decode one record at `meta.offset` from `file`.  Shared by the store's
+/// synchronous path and the prefetcher thread (which holds its own handle).
+pub fn read_record(file: &mut File, meta: &RecordMeta) -> io::Result<StepCheckpoint> {
+    file.seek(SeekFrom::Start(meta.offset))?;
+    let mut header = [0u8; HEADER_BYTES as usize];
+    file.read_exact(&mut header)?;
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    let step = u64::from_le_bytes(header[4..12].try_into().unwrap()) as usize;
+    let enc_tag = header[40];
+    if magic != RECORD_MAGIC || step != meta.step || Encoding::from_tag(enc_tag) != Some(meta.encoding)
+    {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("corrupt spill record at offset {} (step {})", meta.offset, meta.step),
+        ));
+    }
+    let mut payload = vec![0u8; meta.payload_bytes() as usize];
+    file.read_exact(&mut payload)?;
+
+    let decode = |bytes: &[u8]| -> Vec<f32> {
+        match meta.encoding {
+            Encoding::F32 => bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+            Encoding::F16 => bytes
+                .chunks_exact(2)
+                .map(|c| f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+                .collect(),
+        }
+    };
+    let eb = meta.encoding.elem_bytes() as usize;
+    let u_bytes = meta.u_len as usize * eb;
+    let u = decode(&payload[..u_bytes]);
+    let ks = if meta.n_stages > 0 {
+        let stage_bytes = meta.stage_len as usize * eb;
+        let mut ks = Vec::with_capacity(meta.n_stages as usize);
+        for i in 0..meta.n_stages as usize {
+            let lo = u_bytes + i * stage_bytes;
+            ks.push(decode(&payload[lo..lo + stage_bytes]));
+        }
+        Some(ks)
+    } else {
+        None
+    };
+    Ok(StepCheckpoint { step: meta.step, t: meta.t, h: meta.h, u, ks })
+}
+
+// ---------------------------------------------------------------------------
+// f16 codec (IEEE 754 binary16, round-to-nearest-even) — hand-rolled, the
+// offline registry has no `half` crate.
+// ---------------------------------------------------------------------------
+
+/// Convert an f32 to binary16 bits with round-to-nearest-even.
+pub fn f32_to_f16_bits(value: f32) -> u16 {
+    let x = value.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let exp32 = ((x >> 23) & 0xff) as i32;
+    let mant = x & 0x007f_ffff;
+    if exp32 == 255 {
+        // Inf / NaN (quiet any NaN payload into a canonical one)
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let exp = exp32 - 127 + 15;
+    if exp >= 31 {
+        return sign | 0x7c00; // overflow -> ±Inf
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // underflow -> ±0
+        }
+        // subnormal: shift the (implicit-bit) mantissa into 10 bits
+        let m = mant | 0x0080_0000;
+        let shift = (14 - exp) as u32; // in [14, 24]
+        let half_mant = (m >> shift) as u16;
+        let round_bit = 1u32 << (shift - 1);
+        // round up when the round bit is set and (sticky || result-lsb)
+        if (m & round_bit) != 0 && (m & (3 * round_bit - 1)) != 0 {
+            return sign | (half_mant + 1);
+        }
+        return sign | half_mant;
+    }
+    let half = (sign as u32) | ((exp as u32) << 10) | (mant >> 13);
+    let round_bit = 0x0000_1000u32; // dropped bit 12
+    if (mant & round_bit) != 0 && (mant & ((round_bit << 1) | (round_bit - 1))) != 0 {
+        // carry may ripple into the exponent; that is the correct result
+        // (e.g. rounding up to the next power of two, or to Inf)
+        return (half + 1) as u16;
+    }
+    half as u16
+}
+
+/// Convert binary16 bits back to f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    let bits = if exp == 31 {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: renormalize
+            let mut e = 113u32; // 127 - 15 + 1
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x03ff) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("pnode-cold-test-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn cp(step: usize, n: usize, stages: usize, seed: u64) -> StepCheckpoint {
+        let mut rng = Rng::new(seed);
+        let mut u = vec![0.0f32; n];
+        rng.fill_normal(&mut u);
+        let ks = (stages > 0).then(|| {
+            (0..stages)
+                .map(|_| {
+                    let mut k = vec![0.0f32; n];
+                    rng.fill_normal(&mut k);
+                    k
+                })
+                .collect()
+        });
+        StepCheckpoint { step, t: 0.25 * step as f64, h: 0.25, u, ks }
+    }
+
+    #[test]
+    fn f16_codec_known_values() {
+        for (f, bits) in [
+            (0.0f32, 0x0000u16),
+            (-0.0, 0x8000),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff),  // f16 max
+            (6.1035156e-5, 0x0400), // smallest normal
+            (5.9604645e-8, 0x0001), // smallest subnormal
+            (f32::INFINITY, 0x7c00),
+            (f32::NEG_INFINITY, 0xfc00),
+        ] {
+            assert_eq!(f32_to_f16_bits(f), bits, "{f}");
+            if f.is_finite() {
+                assert_eq!(f16_bits_to_f32(bits), f, "{bits:#x}");
+            }
+        }
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // overflow saturates to Inf
+        assert_eq!(f32_to_f16_bits(1e9), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-1e9), 0xfc00);
+        // underflow flushes to zero
+        assert_eq!(f32_to_f16_bits(1e-10), 0x0000);
+    }
+
+    #[test]
+    fn f16_roundtrip_error_is_bounded() {
+        let mut rng = Rng::new(99);
+        let mut xs = vec![0.0f32; 4096];
+        rng.fill_normal(&mut xs);
+        for x in xs {
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            // f16 has 11 significand bits: relative error <= 2^-11
+            assert!((x - y).abs() <= x.abs() * 4.9e-4 + 6e-8, "{x} -> {y}");
+        }
+    }
+
+    #[test]
+    fn f16_roundtrip_is_idempotent() {
+        let mut rng = Rng::new(7);
+        let mut xs = vec![0.0f32; 512];
+        rng.fill_normal(&mut xs);
+        for x in xs {
+            let bits = f32_to_f16_bits(x);
+            assert_eq!(f32_to_f16_bits(f16_bits_to_f32(bits)), bits);
+        }
+    }
+
+    #[test]
+    fn cold_store_roundtrip_lossless() {
+        let dir = tmp_dir("lossless");
+        let mut cold = ColdStore::create(&dir, false).unwrap();
+        let cps: Vec<StepCheckpoint> =
+            (0..5).map(|s| cp(s, 37, if s % 2 == 0 { 4 } else { 0 }, s as u64)).collect();
+        for c in &cps {
+            cold.append(c).unwrap();
+        }
+        assert_eq!(cold.len(), 5);
+        assert_eq!(cold.spills, 5);
+        assert!(cold.live_bytes > 0);
+        assert_eq!(cold.compressed_elems, 0);
+        for c in cps.iter().rev() {
+            let back = cold.read(c.step).unwrap().unwrap();
+            assert_eq!(back.step, c.step);
+            assert_eq!(back.t, c.t);
+            assert_eq!(back.h, c.h);
+            assert_eq!(back.u, c.u, "u bitwise");
+            assert_eq!(back.ks, c.ks, "stages bitwise");
+            assert!(cold.remove(c.step));
+        }
+        assert!(cold.is_empty());
+        assert_eq!(cold.live_bytes, 0);
+        let path = cold.path().to_path_buf();
+        assert!(path.exists());
+        drop(cold);
+        assert!(!path.exists(), "spill file deleted on drop");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cold_store_f16_accounts_error() {
+        let dir = tmp_dir("f16");
+        let mut cold = ColdStore::create(&dir, true).unwrap();
+        let c = cp(3, 64, 2, 11);
+        cold.append(&c).unwrap();
+        assert_eq!(cold.compressed_elems, (64 * 3) as u64);
+        let back = cold.read(3).unwrap().unwrap();
+        let mut worst = 0.0f32;
+        for (a, b) in c.u.iter().zip(&back.u) {
+            worst = worst.max((a - b).abs());
+        }
+        assert!(worst <= cold.compress_max_abs_err);
+        // payload is half the f32 size
+        let meta = cold.snapshot_desc()[0];
+        assert_eq!(meta.payload_bytes(), (64 * 3 * 2) as u64);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replacing_a_step_keeps_live_bytes_consistent() {
+        let dir = tmp_dir("replace");
+        let mut cold = ColdStore::create(&dir, false).unwrap();
+        cold.append(&cp(4, 16, 0, 1)).unwrap();
+        let live1 = cold.live_bytes;
+        cold.append(&cp(4, 16, 2, 2)).unwrap();
+        assert_eq!(cold.len(), 1);
+        assert!(cold.live_bytes > live1);
+        let back = cold.read(4).unwrap().unwrap();
+        assert_eq!(back.ks.as_ref().map(|k| k.len()), Some(2), "newest version wins");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_is_descending() {
+        let dir = tmp_dir("desc");
+        let mut cold = ColdStore::create(&dir, false).unwrap();
+        for s in [2usize, 9, 5, 0] {
+            cold.append(&cp(s, 8, 0, s as u64)).unwrap();
+        }
+        let steps: Vec<usize> = cold.snapshot_desc().iter().map(|m| m.step).collect();
+        assert_eq!(steps, vec![9, 5, 2, 0]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,174 @@
+//! Tiered checkpoint storage (DESIGN.md §6).
+//!
+//! The adjoint drivers talk to checkpoint storage through the
+//! [`CheckpointBackend`] trait.  Two backends exist:
+//!
+//! * the in-RAM [`crate::checkpoint::CheckpointStore`] (the `InMemory`
+//!   backend — everything resident, exact byte accounting), and
+//! * [`TieredStore`]: a [`MemoryBudget`]-governed hot tier that evicts
+//!   least-soon-needed step checkpoints to a file-backed cold tier
+//!   ([`ColdStore`], compact binary records, optional f16 compression with
+//!   error accounting), plus a background [`Prefetcher`] that streams cold
+//!   records back in reverse step order during the adjoint sweep so disk
+//!   reads overlap stage recomputation.
+//!
+//! "Least-soon-needed" exploits the adjoint access pattern: the backward
+//! sweep consumes checkpoints from step `N_t - 1` down to `0`, so the
+//! smallest resident step index is always the one needed furthest in the
+//! future — eviction is a single `BTreeMap` front-pop, no clairvoyance
+//! required (this is the Belady-optimal victim for the reverse sweep).
+
+pub mod budget;
+pub mod cold;
+pub mod prefetch;
+pub mod store;
+
+pub use budget::MemoryBudget;
+pub use cold::{f16_bits_to_f32, f32_to_f16_bits, ColdStore, Encoding};
+pub use prefetch::Prefetcher;
+pub use store::{TieredConfig, TieredStore};
+
+use crate::checkpoint::store::{CheckpointStore, StepCheckpoint};
+
+/// Counters a storage backend reports after a forward+backward pass.
+/// All-zero (except the hot fields) for the in-memory backend.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TierStats {
+    /// bytes currently resident in the hot (RAM) tier
+    pub hot_bytes: u64,
+    /// peak bytes ever resident in the hot tier
+    pub peak_hot_bytes: u64,
+    /// total bytes appended to the cold (disk) tier
+    pub cold_bytes_written: u64,
+    /// bytes of live (not yet consumed) cold records
+    pub cold_bytes_live: u64,
+    /// number of checkpoints evicted hot → cold
+    pub spills: u64,
+    /// lookups served from RAM without touching the cold tier
+    pub hot_hits: u64,
+    /// cold lookups satisfied by the background prefetcher
+    pub prefetch_hits: u64,
+    /// cold lookups that had to read the file synchronously
+    pub cold_reads: u64,
+    /// elements stored through the f16 codec
+    pub compressed_elems: u64,
+    /// max |x - decode(encode(x))| introduced by f16 compression
+    pub compress_max_abs_err: f32,
+}
+
+/// Step-indexed checkpoint storage as seen by the adjoint drivers.
+///
+/// Lookups take `&mut self` because a tiered backend may migrate a record
+/// from disk into RAM to satisfy them.  `Send` so runs can move across
+/// worker threads (the coordinator's thread-pool path, future sharding).
+pub trait CheckpointBackend: Send {
+    /// Store a checkpoint (replacing any previous one at the same step).
+    fn insert(&mut self, cp: StepCheckpoint);
+
+    /// Remove and return the checkpoint at `step`, from whichever tier
+    /// holds it.
+    fn take(&mut self, step: usize) -> Option<StepCheckpoint>;
+
+    /// Borrow the checkpoint at `step`, promoting it to the hot tier
+    /// first if it lives on disk.
+    fn get(&mut self, step: usize) -> Option<&StepCheckpoint>;
+
+    /// Whether any tier holds a checkpoint for `step` (no I/O).
+    fn contains(&self, step: usize) -> bool;
+
+    /// Number of live checkpoints across all tiers.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes currently resident in RAM.
+    fn hot_bytes(&self) -> u64;
+
+    /// Peak bytes ever resident in RAM.
+    fn peak_hot_bytes(&self) -> u64;
+
+    /// Drop every checkpoint (all tiers) and stop any background work.
+    fn clear(&mut self);
+
+    /// Called when the backward sweep starts: the access pattern from here
+    /// on is (mostly) descending step order.  Tiered backends launch the
+    /// reverse-order prefetcher here.
+    fn begin_reverse_sweep(&mut self) {}
+
+    /// Called after the backward sweep: join background threads, settle
+    /// counters.
+    fn finish(&mut self) {}
+
+    /// Tier counters for reporting (zeros where not applicable).
+    fn stats(&self) -> TierStats;
+}
+
+impl CheckpointBackend for CheckpointStore {
+    fn insert(&mut self, cp: StepCheckpoint) {
+        CheckpointStore::insert(self, cp);
+    }
+
+    fn take(&mut self, step: usize) -> Option<StepCheckpoint> {
+        CheckpointStore::remove(self, step)
+    }
+
+    fn get(&mut self, step: usize) -> Option<&StepCheckpoint> {
+        CheckpointStore::get(self, step)
+    }
+
+    fn contains(&self, step: usize) -> bool {
+        CheckpointStore::get(self, step).is_some()
+    }
+
+    fn len(&self) -> usize {
+        CheckpointStore::len(self)
+    }
+
+    fn hot_bytes(&self) -> u64 {
+        self.bytes()
+    }
+
+    fn peak_hot_bytes(&self) -> u64 {
+        self.peak_bytes()
+    }
+
+    fn clear(&mut self) {
+        CheckpointStore::clear(self);
+    }
+
+    fn stats(&self) -> TierStats {
+        TierStats {
+            hot_bytes: self.bytes(),
+            peak_hot_bytes: self.peak_bytes(),
+            ..TierStats::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cp(step: usize, n: usize) -> StepCheckpoint {
+        StepCheckpoint { step, t: step as f64, h: 1.0, u: vec![1.0; n], ks: None }
+    }
+
+    #[test]
+    fn in_memory_backend_roundtrip_through_trait() {
+        let mut store: Box<dyn CheckpointBackend> = Box::new(CheckpointStore::new());
+        store.insert(cp(3, 8));
+        store.insert(cp(7, 8));
+        assert_eq!(store.len(), 2);
+        assert!(store.contains(3) && !store.contains(4));
+        assert_eq!(store.get(7).unwrap().step, 7);
+        let taken = store.take(3).unwrap();
+        assert_eq!(taken.step, 3);
+        assert_eq!(store.len(), 1);
+        assert!(store.stats().peak_hot_bytes > 0);
+        assert_eq!(store.stats().spills, 0);
+        store.clear();
+        assert!(store.is_empty());
+    }
+}

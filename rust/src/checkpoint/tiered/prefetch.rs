@@ -1,0 +1,243 @@
+//! Background reverse-order prefetcher for the adjoint sweep.
+//!
+//! At `begin_reverse_sweep` the tiered store snapshots its cold index in
+//! descending step order and hands it to a thread that decodes records and
+//! pushes them through a bounded channel.  The backward sweep consumes
+//! checkpoints from step `N_t - 1` downward, so by the time the driver asks
+//! for a spilled step the decode is usually already done — disk latency
+//! hides behind stage recomputation.  The `sync_channel` capacity is the
+//! read-ahead window: the thread blocks once it is `window` records ahead,
+//! bounding prefetch RAM.
+//!
+//! Delivery order is exactly the snapshot order, which lets the consumer
+//! make a precise choice per lookup: if the wanted step is still ahead in
+//! `pending`, block on the channel (the record is in flight); otherwise
+//! fall back to a synchronous [`super::cold::read_record`].
+
+use std::collections::{BTreeSet, VecDeque};
+use std::fs::File;
+use std::path::Path;
+use std::sync::mpsc::{sync_channel, Receiver, TryRecvError};
+use std::thread::JoinHandle;
+
+use super::cold::{read_record, RecordMeta};
+use crate::checkpoint::store::StepCheckpoint;
+
+pub struct Prefetcher {
+    /// `Option` so `Drop` can disconnect the channel before joining
+    rx: Option<Receiver<StepCheckpoint>>,
+    /// steps not yet received, in delivery order (descending)
+    pending: VecDeque<usize>,
+    /// steps whose snapshot record was superseded after spawn; their
+    /// deliveries are dropped instead of returned (stale payloads)
+    invalid: BTreeSet<usize>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Spawn a reader thread over its own handle on the spill file.  The
+    /// caller must have flushed the writer first.  `records` must be the
+    /// order the consumer will (mostly) want: descending step.
+    pub fn spawn(
+        path: &Path,
+        records: Vec<RecordMeta>,
+        window: usize,
+    ) -> std::io::Result<Prefetcher> {
+        let pending: VecDeque<usize> = records.iter().map(|r| r.step).collect();
+        let mut file = File::open(path)?;
+        let (tx, rx) = sync_channel::<StepCheckpoint>(window.max(1));
+        let handle = std::thread::Builder::new()
+            .name("pnode-ckpt-prefetch".into())
+            .spawn(move || {
+                for meta in &records {
+                    match read_record(&mut file, meta) {
+                        // receiver gone: sweep finished early, just exit
+                        Err(_) => return, // consumer falls back to sync reads
+                        Ok(cp) => {
+                            if tx.send(cp).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                }
+            })?;
+        Ok(Prefetcher { rx: Some(rx), pending, invalid: BTreeSet::new(), handle: Some(handle) })
+    }
+
+    /// The consumer bypassed or replaced the cold record for `step`
+    /// (synchronous read, or a fresh insert superseding it): stop
+    /// advertising it and drop its delivery when it arrives — the
+    /// in-flight payload is stale.
+    pub fn invalidate(&mut self, step: usize) {
+        if let Some(pos) = self.pending.iter().position(|&s| s == step) {
+            let _ = self.pending.remove(pos);
+            self.invalid.insert(step);
+        }
+    }
+
+    /// Largest step still in flight (delivery is descending, so this is
+    /// the next record the thread will hand over).
+    pub fn next_pending(&self) -> Option<usize> {
+        self.pending.front().copied()
+    }
+
+    /// Whether `step` is still ahead in the delivery queue.
+    pub fn will_deliver(&self, step: usize) -> bool {
+        // pending is descending; anything <= front may still arrive
+        self.pending.iter().any(|&s| s == step)
+    }
+
+    /// Non-blocking receive.  Stale (invalidated) deliveries are dropped,
+    /// never returned.
+    pub fn try_recv(&mut self) -> Option<StepCheckpoint> {
+        loop {
+            let recv = match self.rx.as_ref() {
+                Some(rx) => rx.try_recv(),
+                None => return None,
+            };
+            match recv {
+                Ok(cp) => {
+                    if self.invalid.remove(&cp.step) {
+                        continue; // superseded while in flight
+                    }
+                    self.mark_received(cp.step);
+                    return Some(cp);
+                }
+                Err(TryRecvError::Empty) => return None,
+                Err(TryRecvError::Disconnected) => {
+                    self.rx = None;
+                    self.pending.clear();
+                    return None;
+                }
+            }
+        }
+    }
+
+    /// Blocking receive; `None` when the thread is done (or died — the
+    /// consumer then falls back to synchronous reads).  Stale
+    /// (invalidated) deliveries are dropped, never returned.
+    pub fn recv(&mut self) -> Option<StepCheckpoint> {
+        loop {
+            let recv = match self.rx.as_ref() {
+                Some(rx) => rx.recv(),
+                None => return None,
+            };
+            match recv {
+                Ok(cp) => {
+                    if self.invalid.remove(&cp.step) {
+                        continue; // superseded while in flight
+                    }
+                    self.mark_received(cp.step);
+                    return Some(cp);
+                }
+                Err(_) => {
+                    self.rx = None;
+                    self.pending.clear();
+                    return None;
+                }
+            }
+        }
+    }
+
+    fn mark_received(&mut self, step: usize) {
+        // delivery matches `pending` front-to-back by construction; be
+        // defensive anyway
+        if self.pending.front() == Some(&step) {
+            self.pending.pop_front();
+        } else if let Some(pos) = self.pending.iter().position(|&s| s == step) {
+            let _ = self.pending.remove(pos);
+        }
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // disconnect first so a blocked `send` in the thread errors out
+        self.rx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::tiered::cold::ColdStore;
+    use crate::util::rng::Rng;
+
+    fn spilled_store(n_records: usize, n: usize) -> (ColdStore, std::path::PathBuf) {
+        let dir = std::env::temp_dir()
+            .join(format!("pnode-prefetch-test-{}-{n_records}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cold = ColdStore::create(&dir, false).unwrap();
+        let mut rng = Rng::new(5);
+        for step in 0..n_records {
+            let mut u = vec![0.0f32; n];
+            rng.fill_normal(&mut u);
+            cold.append(&StepCheckpoint { step, t: step as f64, h: 1.0, u, ks: None })
+                .unwrap();
+        }
+        cold.flush().unwrap();
+        (cold, dir)
+    }
+
+    #[test]
+    fn delivers_all_records_in_reverse_order() {
+        let (cold, dir) = spilled_store(12, 33);
+        let mut pf = Prefetcher::spawn(cold.path(), cold.snapshot_desc(), 3).unwrap();
+        let mut got = Vec::new();
+        while let Some(cp) = pf.recv() {
+            got.push(cp.step);
+        }
+        assert_eq!(got, (0..12).rev().collect::<Vec<_>>());
+        assert_eq!(pf.next_pending(), None);
+        drop(cold);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn will_deliver_tracks_pending() {
+        let (cold, dir) = spilled_store(4, 8);
+        let mut pf = Prefetcher::spawn(cold.path(), cold.snapshot_desc(), 2).unwrap();
+        assert!(pf.will_deliver(0) && pf.will_deliver(3));
+        let first = pf.recv().unwrap();
+        assert_eq!(first.step, 3);
+        assert!(!pf.will_deliver(3));
+        assert!(pf.will_deliver(0));
+        drop(pf); // joins the thread even with records unconsumed
+        drop(cold);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn invalidated_steps_are_never_delivered() {
+        let (cold, dir) = spilled_store(5, 9);
+        let mut pf = Prefetcher::spawn(cold.path(), cold.snapshot_desc(), 2).unwrap();
+        pf.invalidate(3);
+        assert!(!pf.will_deliver(3), "invalidated step no longer advertised");
+        let mut got = Vec::new();
+        while let Some(cp) = pf.recv() {
+            got.push(cp.step);
+        }
+        assert_eq!(got, vec![4, 2, 1, 0], "stale delivery dropped, order kept");
+        drop(cold);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prefetched_payload_matches_store_read() {
+        let (mut cold, dir) = spilled_store(6, 17);
+        let direct = cold.read(4).unwrap().unwrap();
+        let mut pf = Prefetcher::spawn(cold.path(), cold.snapshot_desc(), 2).unwrap();
+        let mut found = None;
+        while let Some(cp) = pf.recv() {
+            if cp.step == 4 {
+                found = Some(cp);
+            }
+        }
+        assert_eq!(found.unwrap().u, direct.u, "prefetch path is bit-identical");
+        drop(cold);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

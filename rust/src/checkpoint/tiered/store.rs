@@ -1,0 +1,512 @@
+//! The tiered backend: budgeted hot tier over a spill file, with
+//! reverse-order prefetch during the adjoint sweep.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::PathBuf;
+
+use super::budget::MemoryBudget;
+use super::cold::ColdStore;
+use super::prefetch::Prefetcher;
+use super::{CheckpointBackend, TierStats};
+use crate::checkpoint::store::StepCheckpoint;
+
+/// Construction parameters for [`TieredStore`].
+#[derive(Clone, Debug)]
+pub struct TieredConfig {
+    /// RAM allowance for the hot tier (prefetch buffer included)
+    pub budget: MemoryBudget,
+    /// directory for the spill file (created if absent, file deleted on drop)
+    pub dir: PathBuf,
+    /// store cold payloads as f16 (2× smaller, lossy, error-accounted)
+    pub compress_f16: bool,
+    /// prefetch read-ahead window, in records
+    pub prefetch_window: usize,
+}
+
+impl TieredConfig {
+    pub fn new(budget_bytes: u64, dir: impl Into<PathBuf>) -> TieredConfig {
+        TieredConfig {
+            budget: MemoryBudget::from_bytes(budget_bytes),
+            dir: dir.into(),
+            compress_f16: false,
+            prefetch_window: 4,
+        }
+    }
+}
+
+/// Two-tier checkpoint store.
+///
+/// Invariants: a step lives in exactly one place — `hot`, `prefetched`
+/// (+ its `cold` index entry, which is dropped on consumption), or `cold`.
+/// `hot_bytes + prefetched_bytes` is the RAM footprint and is what the
+/// budget governs.
+pub struct TieredStore {
+    hot: BTreeMap<usize, StepCheckpoint>,
+    hot_bytes: u64,
+    peak_hot_bytes: u64,
+    budget: MemoryBudget,
+    cold: ColdStore,
+    /// prefetched-but-not-yet-consumed records (step -> checkpoint)
+    prefetched: BTreeMap<usize, StepCheckpoint>,
+    prefetched_bytes: u64,
+    prefetcher: Option<Prefetcher>,
+    prefetch_window: usize,
+    stats_hot_hits: u64,
+    stats_prefetch_hits: u64,
+    stats_cold_reads: u64,
+}
+
+impl TieredStore {
+    pub fn create(cfg: TieredConfig) -> io::Result<TieredStore> {
+        let cold = ColdStore::create(&cfg.dir, cfg.compress_f16)?;
+        Ok(TieredStore {
+            hot: BTreeMap::new(),
+            hot_bytes: 0,
+            peak_hot_bytes: 0,
+            budget: cfg.budget,
+            cold,
+            prefetched: BTreeMap::new(),
+            prefetched_bytes: 0,
+            prefetcher: None,
+            prefetch_window: cfg.prefetch_window.max(1),
+            stats_hot_hits: 0,
+            stats_prefetch_hits: 0,
+            stats_cold_reads: 0,
+        })
+    }
+
+    fn ram_bytes(&self) -> u64 {
+        self.hot_bytes + self.prefetched_bytes
+    }
+
+    fn note_peak(&mut self) {
+        self.peak_hot_bytes = self.peak_hot_bytes.max(self.ram_bytes());
+    }
+
+    /// Evict least-soon-needed (smallest-step) hot entries until the RAM
+    /// footprint fits the budget.  `protect` is never evicted and at least
+    /// one entry always stays resident (spilling the sole checkpoint just
+    /// to re-read it immediately would thrash).
+    fn enforce_budget(&mut self, protect: Option<usize>) {
+        while self.ram_bytes() > self.budget.bytes && self.hot.len() > 1 {
+            let victim = match self.hot.keys().copied().find(|s| Some(*s) != protect) {
+                Some(v) => v,
+                None => break,
+            };
+            let cp = self.hot.remove(&victim).expect("victim resident");
+            self.hot_bytes -= cp.bytes();
+            self.cold
+                .append(&cp)
+                .expect("checkpoint spill failed (disk full or spill dir gone?)");
+        }
+    }
+
+    fn hot_insert(&mut self, cp: StepCheckpoint, protect: Option<usize>) {
+        let step = cp.step;
+        let add = cp.bytes();
+        if let Some(old) = self.hot.insert(step, cp) {
+            self.hot_bytes -= old.bytes();
+        }
+        self.hot_bytes += add;
+        // a fresh insert supersedes any older tier copy of the same step —
+        // including one still in flight from the prefetcher (its payload
+        // is the stale version; mark it so it gets dropped on arrival)
+        self.cold.remove(step);
+        if let Some(old) = self.prefetched.remove(&step) {
+            self.prefetched_bytes -= old.bytes();
+        }
+        if let Some(pf) = &mut self.prefetcher {
+            pf.invalidate(step);
+        }
+        self.note_peak();
+        self.enforce_budget(protect);
+    }
+
+    /// Drain whatever the prefetcher has ready, respecting the budget
+    /// (entries left in the channel keep back-pressuring the reader
+    /// thread).  Records whose index entry vanished (consumed through
+    /// another path) are dropped.
+    fn drain_prefetch(&mut self) {
+        loop {
+            if self.ram_bytes() >= self.budget.bytes && !self.prefetched.is_empty() {
+                break;
+            }
+            let cp = match self.prefetcher.as_mut().and_then(|pf| pf.try_recv()) {
+                Some(cp) => cp,
+                None => break,
+            };
+            if self.cold.contains(cp.step) {
+                self.prefetched_bytes += cp.bytes();
+                self.prefetched.insert(cp.step, cp);
+                self.note_peak();
+            }
+        }
+    }
+
+    /// Pull `step` out of the cold tier (prefetched buffer, in-flight
+    /// prefetch, or synchronous read), removing its cold index entry.
+    fn fetch_cold(&mut self, step: usize) -> Option<StepCheckpoint> {
+        if !self.cold.contains(step) {
+            return None;
+        }
+        self.drain_prefetch();
+        if let Some(cp) = self.prefetched.remove(&step) {
+            self.prefetched_bytes -= cp.bytes();
+            self.cold.remove(step);
+            self.stats_prefetch_hits += 1;
+            return Some(cp);
+        }
+        // If the record is still ahead in the prefetch stream, wait for it:
+        // the read is already in flight, a second synchronous read would
+        // double the I/O.  Records received on the way down are kept only
+        // while they fit the budget — beyond that they are dropped (their
+        // cold entries remain, a later lookup re-reads them), so RAM stays
+        // bounded by budget + one record even under out-of-order access.
+        if self.prefetcher.as_ref().map(|pf| pf.will_deliver(step)).unwrap_or(false) {
+            while let Some(cp) = self.prefetcher.as_mut().and_then(|pf| pf.recv()) {
+                if cp.step == step {
+                    self.cold.remove(step);
+                    self.stats_prefetch_hits += 1;
+                    return Some(cp);
+                }
+                if self.cold.contains(cp.step)
+                    && self.ram_bytes() + cp.bytes() <= self.budget.bytes
+                {
+                    self.prefetched_bytes += cp.bytes();
+                    self.prefetched.insert(cp.step, cp);
+                    self.note_peak();
+                }
+            }
+        }
+        // prefetcher gone or out of order: synchronous read.  Invalidate
+        // any still-in-flight delivery of this step — if the step is later
+        // re-spilled, that old payload must not satisfy the new entry.
+        let cp = self
+            .cold
+            .read(step)
+            .expect("cold tier read failed")
+            .expect("indexed record readable");
+        self.cold.remove(step);
+        if let Some(pf) = &mut self.prefetcher {
+            pf.invalidate(step);
+        }
+        self.stats_cold_reads += 1;
+        Some(cp)
+    }
+
+    fn stop_prefetcher(&mut self) {
+        self.prefetcher = None; // Drop disconnects the channel and joins
+    }
+}
+
+impl CheckpointBackend for TieredStore {
+    fn insert(&mut self, cp: StepCheckpoint) {
+        let step = cp.step;
+        self.hot_insert(cp, Some(step));
+    }
+
+    fn take(&mut self, step: usize) -> Option<StepCheckpoint> {
+        if let Some(cp) = self.hot.remove(&step) {
+            self.hot_bytes -= cp.bytes();
+            self.stats_hot_hits += 1;
+            return Some(cp);
+        }
+        self.fetch_cold(step)
+    }
+
+    fn get(&mut self, step: usize) -> Option<&StepCheckpoint> {
+        if self.hot.contains_key(&step) {
+            self.stats_hot_hits += 1;
+        } else {
+            let cp = self.fetch_cold(step)?;
+            self.hot_insert(cp, Some(step));
+        }
+        self.hot.get(&step)
+    }
+
+    fn contains(&self, step: usize) -> bool {
+        self.hot.contains_key(&step)
+            || self.prefetched.contains_key(&step)
+            || self.cold.contains(step)
+    }
+
+    fn len(&self) -> usize {
+        // prefetched records still hold their cold index entry, so hot +
+        // cold covers everything exactly once
+        self.hot.len() + self.cold.len()
+    }
+
+    fn hot_bytes(&self) -> u64 {
+        self.ram_bytes()
+    }
+
+    fn peak_hot_bytes(&self) -> u64 {
+        self.peak_hot_bytes
+    }
+
+    fn clear(&mut self) {
+        // a cleared store starts a fresh run: counters and peaks reset so
+        // reused runs (ErkAdjointRun::forward calls clear first) report
+        // per-run numbers, not lifetime totals
+        self.stop_prefetcher();
+        self.hot.clear();
+        self.hot_bytes = 0;
+        self.peak_hot_bytes = 0;
+        self.prefetched.clear();
+        self.prefetched_bytes = 0;
+        self.stats_hot_hits = 0;
+        self.stats_prefetch_hits = 0;
+        self.stats_cold_reads = 0;
+        self.cold.clear();
+    }
+
+    fn begin_reverse_sweep(&mut self) {
+        self.stop_prefetcher();
+        if self.cold.is_empty() {
+            return;
+        }
+        if self.cold.flush().is_err() {
+            return; // fall back to per-record synchronous reads
+        }
+        self.prefetcher =
+            Prefetcher::spawn(self.cold.path(), self.cold.snapshot_desc(), self.prefetch_window)
+                .ok();
+    }
+
+    fn finish(&mut self) {
+        self.stop_prefetcher();
+    }
+
+    fn stats(&self) -> TierStats {
+        TierStats {
+            hot_bytes: self.ram_bytes(),
+            peak_hot_bytes: self.peak_hot_bytes,
+            cold_bytes_written: self.cold.bytes_written,
+            cold_bytes_live: self.cold.live_bytes,
+            spills: self.cold.spills,
+            hot_hits: self.stats_hot_hits,
+            prefetch_hits: self.stats_prefetch_hits,
+            cold_reads: self.stats_cold_reads,
+            compressed_elems: self.cold.compressed_elems,
+            compress_max_abs_err: self.cold.compress_max_abs_err,
+        }
+    }
+}
+
+impl Drop for TieredStore {
+    fn drop(&mut self) {
+        self.stop_prefetcher();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("pnode-tiered-test-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn cp(step: usize, n: usize, stages: usize, seed: u64) -> StepCheckpoint {
+        let mut rng = Rng::new(seed);
+        let mut u = vec![0.0f32; n];
+        rng.fill_normal(&mut u);
+        let ks = if stages > 0 {
+            let mut ks = Vec::new();
+            for _ in 0..stages {
+                let mut k = vec![0.0f32; n];
+                rng.fill_normal(&mut k);
+                ks.push(k);
+            }
+            Some(ks)
+        } else {
+            None
+        };
+        StepCheckpoint { step, t: step as f64, h: 1.0, u, ks }
+    }
+
+    fn mk(budget: u64, tag: &str) -> (TieredStore, PathBuf) {
+        let dir = tmp_dir(tag);
+        let store = TieredStore::create(TieredConfig::new(budget, &dir)).unwrap();
+        (store, dir)
+    }
+
+    #[test]
+    fn spills_beyond_budget_and_reads_back_bitwise() {
+        // each checkpoint: 64 floats * (1+2 stages) * 4B + 48 = 816 B
+        let per = cp(0, 64, 2, 0).bytes();
+        let (mut store, dir) = mk(3 * per, "spill");
+        let originals: Vec<StepCheckpoint> = (0..10).map(|s| cp(s, 64, 2, s as u64)).collect();
+        for c in &originals {
+            store.insert(c.clone());
+        }
+        let st = store.stats();
+        assert!(st.hot_bytes <= 3 * per, "hot tier fits budget: {} <= {}", st.hot_bytes, 3 * per);
+        assert_eq!(st.spills, 7, "10 inserted, 3 resident");
+        assert_eq!(store.len(), 10, "nothing lost");
+        // the *largest* steps stay hot (they are needed first in reverse)
+        assert!(store.hot.contains_key(&9) && store.hot.contains_key(&8));
+        assert!(store.cold.contains(0));
+
+        store.begin_reverse_sweep();
+        for c in originals.iter().rev() {
+            let back = store.take(c.step).expect("present");
+            assert_eq!(back.u, c.u, "step {} u bitwise", c.step);
+            assert_eq!(back.ks, c.ks, "step {} stages bitwise", c.step);
+        }
+        store.finish();
+        let st = store.stats();
+        assert_eq!(st.hot_hits + st.prefetch_hits + st.cold_reads, 10);
+        assert_eq!(st.hot_hits, 3);
+        assert!(
+            st.prefetch_hits >= 1,
+            "reverse sweep must hit the prefetcher: {st:?}"
+        );
+        assert!(store.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reverse_sweep_with_prefetch_hits_everything() {
+        let per = cp(0, 32, 0, 0).bytes();
+        let (mut store, dir) = mk(2 * per, "allhits");
+        for s in 0..20 {
+            store.insert(cp(s, 32, 0, s as u64));
+        }
+        store.begin_reverse_sweep();
+        for s in (0..20).rev() {
+            assert!(store.take(s).is_some(), "step {s}");
+        }
+        store.finish();
+        let st = store.stats();
+        // delivery order == consumption order, so no synchronous reads
+        assert_eq!(st.cold_reads, 0, "prefetcher should satisfy all cold lookups: {st:?}");
+        assert_eq!(st.prefetch_hits, 18);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn get_promotes_to_hot_without_losing_the_record() {
+        let per = cp(0, 16, 0, 0).bytes();
+        let (mut store, dir) = mk(2 * per, "promote");
+        for s in 0..6 {
+            store.insert(cp(s, 16, 0, s as u64));
+        }
+        assert!(store.cold.contains(1));
+        let u_before = store.get(1).expect("promoted").u.clone();
+        assert!(store.hot.contains_key(&1), "resident after get");
+        assert!(!store.cold.contains(1), "single owner");
+        assert_eq!(store.take(1).unwrap().u, u_before);
+        assert_eq!(store.len(), 5);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn out_of_order_access_falls_back_to_sync_reads() {
+        let per = cp(0, 16, 0, 0).bytes();
+        let (mut store, dir) = mk(per, "ooo");
+        for s in 0..8 {
+            store.insert(cp(s, 16, 0, s as u64));
+        }
+        store.begin_reverse_sweep();
+        // ascending (wrong-direction) access: steps below the prefetch
+        // front are still in flight -> prefetch; consumed fronts are fine
+        for s in 0..8 {
+            assert!(store.take(s).is_some(), "step {s}");
+        }
+        store.finish();
+        let st = store.stats();
+        assert_eq!(st.hot_hits + st.prefetch_hits + st.cold_reads, 8);
+        assert!(store.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unlimited_budget_never_spills() {
+        let (mut store, dir) = mk(u64::MAX, "unlim");
+        for s in 0..12 {
+            store.insert(cp(s, 8, 1, s as u64));
+        }
+        assert_eq!(store.stats().spills, 0);
+        assert_eq!(store.hot.len(), 12);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn clear_starts_a_fresh_run_with_fresh_counters() {
+        let per = cp(0, 16, 0, 0).bytes();
+        let (mut store, dir) = mk(2 * per, "clearstats");
+        for s in 0..6 {
+            store.insert(cp(s, 16, 0, s as u64));
+        }
+        store.begin_reverse_sweep();
+        for s in (0..6).rev() {
+            let _ = store.take(s);
+        }
+        store.finish();
+        let st1 = store.stats();
+        assert!(st1.spills > 0 && st1.peak_hot_bytes > 0);
+        store.clear();
+        let st2 = store.stats();
+        assert_eq!(st2.spills, 0, "per-run counters reset: {st2:?}");
+        assert_eq!(st2.peak_hot_bytes, 0);
+        assert_eq!(st2.cold_bytes_written, 0);
+        assert_eq!(st2.hot_hits + st2.prefetch_hits + st2.cold_reads, 0);
+        // the second run accounts independently
+        for s in 0..4 {
+            store.insert(cp(s, 16, 0, s as u64));
+        }
+        assert_eq!(store.stats().spills, 2);
+        assert_eq!(store.len(), 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn superseding_a_spilled_step_mid_sweep_returns_the_new_version() {
+        // regression: a step spilled before the sweep, then replaced after
+        // the prefetcher snapshot, must come back as the NEW version (the
+        // stale in-flight delivery is dropped)
+        let per = cp(0, 16, 0, 0).bytes();
+        let (mut store, dir) = mk(per, "stale");
+        for s in 0..6 {
+            store.insert(cp(s, 16, 0, s as u64));
+        }
+        assert!(store.cold.contains(2));
+        store.begin_reverse_sweep();
+        // replace step 2 while its old record is in the prefetch stream
+        let replacement = cp(2, 16, 0, 999);
+        store.insert(replacement.clone());
+        for s in (0..6).rev() {
+            let got = store.take(s).expect("present");
+            if s == 2 {
+                assert_eq!(got.u, replacement.u, "stale prefetch payload must not win");
+            }
+        }
+        store.finish();
+        assert!(store.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn peak_accounts_hot_plus_prefetched() {
+        let per = cp(0, 64, 0, 0).bytes();
+        let (mut store, dir) = mk(3 * per, "peak");
+        for s in 0..9 {
+            store.insert(cp(s, 64, 0, s as u64));
+        }
+        let peak_fwd = store.peak_hot_bytes();
+        assert!(peak_fwd <= 3 * per + per, "eviction keeps peak near budget");
+        store.begin_reverse_sweep();
+        for s in (0..9).rev() {
+            store.take(s);
+        }
+        store.finish();
+        assert!(store.peak_hot_bytes() >= peak_fwd);
+        assert_eq!(store.hot_bytes(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

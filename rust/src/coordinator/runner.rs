@@ -22,6 +22,16 @@ pub struct ExperimentRow {
     pub model_mem_bytes: u64,
     /// measured checkpoint bytes in this process
     pub measured_ckpt_bytes: u64,
+    /// peak bytes resident in the hot (RAM) checkpoint tier
+    pub ckpt_hot_bytes: u64,
+    /// bytes written to the cold (disk) checkpoint tier
+    pub ckpt_cold_bytes: u64,
+    /// checkpoints evicted hot → cold
+    pub spill_count: u64,
+    /// cold lookups served by the background prefetcher
+    pub prefetch_hits: u64,
+    /// cold lookups that fell back to synchronous reads
+    pub cold_reads: u64,
     pub extra: Vec<(String, String)>,
 }
 
@@ -47,6 +57,11 @@ impl ExperimentRow {
             time_secs,
             model_mem_bytes,
             measured_ckpt_bytes: report.ckpt_bytes,
+            ckpt_hot_bytes: report.tier.peak_hot_bytes,
+            ckpt_cold_bytes: report.tier.cold_bytes_written,
+            spill_count: report.tier.spills,
+            prefetch_hits: report.tier.prefetch_hits,
+            cold_reads: report.tier.cold_reads,
             extra: Vec::new(),
         }
     }
@@ -66,6 +81,11 @@ impl ExperimentRow {
                 "measured_ckpt_bytes".to_string(),
                 Json::num(self.measured_ckpt_bytes as f64),
             ),
+            ("ckpt_hot_bytes".to_string(), Json::num(self.ckpt_hot_bytes as f64)),
+            ("ckpt_cold_bytes".to_string(), Json::num(self.ckpt_cold_bytes as f64)),
+            ("spill_count".to_string(), Json::num(self.spill_count as f64)),
+            ("prefetch_hits".to_string(), Json::num(self.prefetch_hits as f64)),
+            ("cold_reads".to_string(), Json::num(self.cold_reads as f64)),
         ];
         for (k, v) in &self.extra {
             kv.push((k.clone(), Json::str(v.clone())));
@@ -145,5 +165,8 @@ mod tests {
         let j = r.rows[0].to_json().to_string_compact();
         assert!(j.contains("\"pnode\""));
         assert!(j.contains("\"nt\":10"));
+        assert!(j.contains("\"spill_count\""), "tier columns serialized: {j}");
+        assert!(j.contains("\"prefetch_hits\""));
+        assert!(j.contains("\"ckpt_cold_bytes\""));
     }
 }

@@ -12,11 +12,13 @@
 //!   hierarchy, lowered AOT.
 //! * **L2** — JAX compute graph (`python/compile/model.py`): the RHS
 //!   `f(u, θ, t)` and its VJP/JVP actions, exported once as HLO text.
-//! * **L3** — this crate: the PJRT runtime, time integrators and their
-//!   discrete adjoints, checkpointing (incl. binomial/Revolve), the five
-//!   gradient methods from the paper (PNODE, NODE-cont, NODE-naive, ANODE,
-//!   ACA), Newton–GMRES implicit solvers, the training loop, datasets, and
-//!   the benchmark harness that regenerates every table and figure.
+//! * **L3** — this crate: the PJRT runtime (behind the `xla` feature),
+//!   time integrators and their discrete adjoints, checkpointing (incl.
+//!   binomial/Revolve and the tiered RAM-budget/disk-spill storage
+//!   backend with reverse-order prefetch), the five gradient methods from
+//!   the paper (PNODE, NODE-cont, NODE-naive, ANODE, ACA), Newton–GMRES
+//!   implicit solvers, the training loop, datasets, and the benchmark
+//!   harness that regenerates every table and figure.
 //!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
 

@@ -12,7 +12,7 @@ pub use baselines::{Aca, Anode, NodeCont, NodeNaive};
 pub use memmodel::MemModel;
 pub use pnode::Pnode;
 
-use crate::checkpoint::CheckpointPolicy;
+use crate::checkpoint::{CheckpointPolicy, TierStats};
 use crate::ode::rhs::OdeRhs;
 use crate::ode::tableau::Scheme;
 
@@ -42,10 +42,13 @@ pub struct MethodReport {
     pub nfe_backward: u64,
     /// re-executed forward steps (PNODE checkpointing overhead)
     pub recompute_steps: u64,
-    /// measured peak checkpoint bytes
+    /// measured peak checkpoint bytes resident in RAM
     pub ckpt_bytes: u64,
     /// modeled AD-graph residency (tape emulation, Table-2 semantics)
     pub graph_bytes: u64,
+    /// storage-tier counters (hot/cold bytes, spills, prefetch hits);
+    /// zeros beyond the hot fields for purely in-memory checkpointing
+    pub tier: TierStats,
 }
 
 impl MethodReport {
@@ -82,7 +85,7 @@ pub fn method_by_name(name: &str) -> Option<Box<dyn GradientMethod>> {
         "aca" => Box::new(Aca::new()),
         _ => {
             if let Some(rest) = name.strip_prefix("pnode:") {
-                let policy = CheckpointPolicy::parse(rest)?;
+                let policy = CheckpointPolicy::parse(rest).ok()?;
                 return Some(Box::new(Pnode::new(policy)));
             }
             return None;
@@ -103,6 +106,9 @@ mod tests {
             assert!(method_by_name(name).is_some(), "{name}");
         }
         assert!(method_by_name("pnode:binomial:4").is_some());
+        assert!(method_by_name("pnode:tiered:8m:/tmp/pnode-spill").is_some());
+        assert!(method_by_name("pnode:tiered:8m:/tmp/pnode-spill:binomial:4").is_some());
+        assert!(method_by_name("pnode:binomial:0").is_none(), "degenerate policy rejected");
         assert!(method_by_name("nope").is_none());
     }
 }

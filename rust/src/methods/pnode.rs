@@ -26,6 +26,7 @@ impl GradientMethod for Pnode {
             CheckpointPolicy::All => "pnode",
             CheckpointPolicy::SolutionOnly => "pnode2",
             CheckpointPolicy::Binomial { .. } => "pnode-binomial",
+            CheckpointPolicy::Tiered { .. } => "pnode-tiered",
         }
     }
 
@@ -36,7 +37,7 @@ impl GradientMethod for Pnode {
     fn forward(&mut self, rhs: &dyn OdeRhs, spec: &BlockSpec, u0: &[f32]) -> Vec<f32> {
         rhs.reset_nfe();
         let tab = spec.scheme.tableau();
-        let mut run = ErkAdjointRun::new(tab, self.policy, spec.t0, spec.tf, spec.nt);
+        let mut run = ErkAdjointRun::new(tab, self.policy.clone(), spec.t0, spec.tf, spec.nt);
         let uf = run.forward(rhs, u0);
         self.report = MethodReport {
             nfe_forward: rhs.nfe().forward,
@@ -62,6 +63,7 @@ impl GradientMethod for Pnode {
         self.report.nfe_backward = nfe.backward + nfe.forward;
         self.report.recompute_steps = run.recompute_steps;
         self.report.ckpt_bytes = run.peak_checkpoint_bytes();
+        self.report.tier = run.tier_stats();
         // the only graph ever built is one f evaluation deep: O(N_l)
         self.report.graph_bytes = rhs.activation_bytes_per_eval();
     }

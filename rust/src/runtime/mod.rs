@@ -10,12 +10,20 @@
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
 
+#[cfg(feature = "xla")]
 mod client;
+#[cfg(feature = "xla")]
 mod executable;
 mod manifest;
+#[cfg(not(feature = "xla"))]
+mod stub;
 
+#[cfg(feature = "xla")]
 pub use client::Client;
+#[cfg(feature = "xla")]
 pub use executable::Executable;
+#[cfg(not(feature = "xla"))]
+pub use stub::{Client, Executable};
 pub use manifest::{ConfigEntry, Manifest, ModelArtifacts};
 
 /// Default artifacts directory, overridable with the PNODE_ARTIFACTS env var.

@@ -1,0 +1,72 @@
+//! `xla`-free stand-ins for [`Client`] and [`Executable`].
+//!
+//! Compiled when the `xla` feature is off (the default: the `xla` crate
+//! needs libxla_extension, unavailable in offline builds).  `Client::cpu()`
+//! fails with a clear message, so every artifact-gated code path — the
+//! `xla_runtime` tests, the PJRT micro-benches, `pnode info` — degrades to
+//! its documented "artifacts not available" behaviour.  The pure-Rust
+//! `MlpRhs` mirror covers the full algorithmic surface without it.
+
+use anyhow::{bail, Result};
+
+const MSG: &str = "pnode was built without the `xla` feature; \
+                   PJRT execution is unavailable (enable with \
+                   `--features xla` and the `xla` dependency — see Cargo.toml)";
+
+/// Stub PJRT client: construction always fails.
+#[derive(Clone)]
+pub struct Client;
+
+impl Client {
+    pub fn cpu() -> Result<Self> {
+        bail!(MSG)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-disabled".into()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile_hlo_text(
+        &self,
+        _path: &std::path::Path,
+        _name: &str,
+        _arg_shapes: Vec<Vec<usize>>,
+    ) -> Result<Executable> {
+        bail!(MSG)
+    }
+}
+
+/// Stub executable: never constructible (no `Client` can exist to compile
+/// one), so the methods only keep the call sites type-checking.
+pub struct Executable {
+    name: String,
+    arg_shapes: Vec<Vec<usize>>,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn arg_shapes(&self) -> &[Vec<usize>] {
+        &self.arg_shapes
+    }
+
+    pub fn call_count(&self) -> u64 {
+        0
+    }
+
+    pub fn reset_call_count(&self) {}
+
+    pub fn call(&self, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        bail!(MSG)
+    }
+
+    pub fn call_into(&self, _inputs: &[&[f32]], _out: &mut [f32]) -> Result<()> {
+        bail!(MSG)
+    }
+}

@@ -32,7 +32,7 @@ fn fd_check_every_scheme_and_policy() {
             let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
             let spec = BlockSpec::new(scheme, 7);
 
-            let mut m = Pnode::new(policy);
+            let mut m = Pnode::new(policy.clone());
             m.forward(&rhs, &spec, &u0);
             let mut lambda = w.clone();
             let mut g = vec![0.0f32; rhs.param_len()];

@@ -160,6 +160,47 @@ fn classification_trains_with_each_method() {
     }
 }
 
+/// The tiered storage backend, addressed through the method-factory string
+/// form, spills past its RAM budget and still reproduces the in-memory
+/// gradients bit-for-bit (uncompressed cold tier).
+#[test]
+fn tiered_method_spec_spills_and_matches_in_memory() {
+    let rhs = mk_rhs(&[5, 8, 4], 2, 31);
+    let mut rng = Rng::new(32);
+    let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
+    let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
+    let spec = BlockSpec::new(Scheme::Dopri5, 24);
+
+    let mut reference = Pnode::new(CheckpointPolicy::All);
+    reference.forward(&rhs, &spec, &u0);
+    let mut l_ref = w.clone();
+    let mut g_ref = vec![0.0f32; rhs.param_len()];
+    reference.backward(&rhs, &spec, &mut l_ref, &mut g_ref);
+
+    let dir = std::env::temp_dir().join(format!("pnode-int-tiered-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let name = format!("pnode:tiered:2k:{}", dir.to_string_lossy());
+    let mut m = method_by_name(&name).expect("tiered method spec parses");
+    m.forward(&rhs, &spec, &u0);
+    let mut l = w.clone();
+    let mut g = vec![0.0f32; rhs.param_len()];
+    m.backward(&rhs, &spec, &mut l, &mut g);
+    let r = m.report();
+
+    assert_eq!(l, l_ref, "tiered λ is bitwise identical");
+    assert_eq!(g, g_ref, "tiered θ̄ is bitwise identical");
+    assert!(r.tier.spills > 0, "2 KiB budget must spill: {:?}", r.tier);
+    assert!(r.tier.cold_bytes_written > 0);
+    assert!(r.tier.prefetch_hits > 0, "backward sweep prefetches: {:?}", r.tier);
+    assert!(
+        r.ckpt_bytes < reference.report().ckpt_bytes,
+        "hot-tier peak ({}) must undercut the all-resident peak ({})",
+        r.ckpt_bytes,
+        reference.report().ckpt_bytes
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// NFE counters propagate through the whole stack consistently.
 #[test]
 fn nfe_accounting_is_consistent() {
