@@ -28,7 +28,12 @@ fn main() {
     let mut u0 = vec![0.0f32; rhs.state_len()];
     rng.fill_normal(&mut u0);
     let lambda0 = vec![1.0f32; rhs.state_len()];
-    let spec = BlockSpec { scheme: Scheme::Rk4, t0: 0.0, tf: 1.0, nt };
+    let spec = BlockSpec {
+        scheme: Scheme::Rk4,
+        t0: 0.0,
+        tf: 1.0,
+        grid: pnode::ode::grid::TimeGrid::Uniform { nt },
+    };
 
     let spill_dir = std::env::temp_dir().join(format!("pnode-tiered-spill-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&spill_dir);

@@ -1,6 +1,8 @@
 //! Table 8 + Fig. 5 regeneration: Crank–Nicolson vs adaptive Dopri5 on the
-//! Robertson stiff system — NFE-F/NFE-B, time per iteration, gradient
-//! norms (explosion), and Fig. 4's raw-vs-scaled data comparison.
+//! Robertson stiff system — NFE-F/NFE-B, time per iteration, accepted vs
+//! rejected step counts (the adaptive grid now runs through the unified
+//! checkpointed adjoint driver), gradient norms (explosion), and Fig. 4's
+//! raw-vs-scaled data comparison.
 
 use pnode::bench::Table;
 use pnode::data::robertson::RobertsonData;
@@ -16,6 +18,8 @@ struct Outcome {
     mae: f64,
     nfe_f: f64,
     nfe_b: f64,
+    accepted: f64,
+    rejected: f64,
     secs: f64,
     max_grad: f64,
     exploded: bool,
@@ -29,6 +33,7 @@ fn train(task: &StiffTask, mode: &str, epochs: usize) -> Outcome {
     let mut opt = AdamW::new(theta.len(), 5e-3, 1e-4);
     let mut stats = GradStats::default();
     let (mut nfe_f, mut nfe_b) = (Stream::new(), Stream::new());
+    let (mut accepted, mut rejected) = (Stream::new(), Stream::new());
     let mut secs = Stream::new();
     let mut mae = f64::NAN;
     for _ in 0..epochs {
@@ -42,6 +47,8 @@ fn train(task: &StiffTask, mode: &str, epochs: usize) -> Outcome {
         mae = step.loss;
         nfe_f.push(step.nfe_forward as f64);
         nfe_b.push(step.nfe_backward as f64);
+        accepted.push(step.n_accepted as f64);
+        rejected.push(step.n_rejected as f64);
         let gn = pnode::train::grad_norm(&step.grad);
         stats.observe(gn, 1e5);
         if !gn.is_finite() {
@@ -56,6 +63,8 @@ fn train(task: &StiffTask, mode: &str, epochs: usize) -> Outcome {
         mae,
         nfe_f: nfe_f.mean(),
         nfe_b: nfe_b.mean(),
+        accepted: accepted.mean(),
+        rejected: rejected.mean(),
         secs: secs.mean(),
         max_grad: stats.max_norm,
         exploded: stats.exploded,
@@ -87,7 +96,10 @@ fn main() {
     let task = StiffTask::new(data, 2);
     let mut t8 = Table::new(
         "Table 8 / Fig. 5 — CN vs adaptive Dopri5 on Robertson",
-        &["integrator", "avg NFE-F", "avg NFE-B", "time/iter (s)", "final MAE", "max |grad|", "exploded"],
+        &[
+            "integrator", "avg NFE-F", "avg NFE-B", "avg steps", "avg rejects",
+            "time/iter (s)", "final MAE", "max |grad|", "exploded",
+        ],
     );
     for mode in ["cn", "beuler", "dopri5"] {
         let o = train(&task, mode, epochs);
@@ -95,6 +107,8 @@ fn main() {
             mode.into(),
             format!("{:.0}", o.nfe_f),
             format!("{:.0}", o.nfe_b),
+            format!("{:.0}", o.accepted),
+            format!("{:.0}", o.rejected),
             format!("{:.3}", o.secs),
             format!("{:.5}", o.mae),
             format!("{:.2e}", o.max_grad),

@@ -9,6 +9,7 @@ use pnode::checkpoint::CheckpointPolicy;
 use pnode::coordinator::Runner;
 use pnode::methods::{BlockSpec, GradientMethod, Pnode};
 use pnode::nn::Act;
+use pnode::ode::grid::TimeGrid;
 use pnode::ode::rhs::{MlpRhs, OdeRhs};
 use pnode::ode::tableau::Scheme;
 use pnode::util::rng::Rng;
@@ -24,7 +25,12 @@ fn main() {
     let mut u0 = vec![0.0f32; rhs.state_len()];
     rng.fill_normal(&mut u0);
     let lambda0 = vec![1.0f32; rhs.state_len()];
-    let spec = BlockSpec { scheme: Scheme::Dopri5, t0: 0.0, tf: 1.0, nt };
+    let spec = BlockSpec {
+        scheme: Scheme::Dopri5,
+        t0: 0.0,
+        tf: 1.0,
+        grid: TimeGrid::Uniform { nt },
+    };
 
     let spill_dir =
         std::env::temp_dir().join(format!("pnode-tiered-bench-{}", std::process::id()));

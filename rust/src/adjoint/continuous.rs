@@ -109,6 +109,34 @@ pub fn continuous_adjoint_erk(
     }
 }
 
+/// Continuous-adjoint gradient over an explicit (possibly nonuniform)
+/// forward step list: the augmented system retraces the recorded
+/// `(t_n, h_n)` grid in reverse (each forward step `(t, h)` becomes the
+/// backward step `(t + h, -h)`), so adaptive and nonuniform forward
+/// passes get the matching backward discretization.
+pub fn continuous_adjoint_erk_grid(
+    tab: &Tableau,
+    rhs: &dyn OdeRhs,
+    steps: &[(f64, f64)],
+    u_final: &[f32],
+    lambda: &mut [f32],
+    grad_theta: &mut [f32],
+) {
+    let n = u_final.len();
+    let p = rhs.param_len();
+    let aug = AugmentedBackward { inner: rhs, n, p };
+    let mut z0 = vec![0.0f32; 2 * n + p];
+    z0[..n].copy_from_slice(u_final);
+    z0[n..2 * n].copy_from_slice(lambda);
+    let reversed: Vec<(f64, f64)> =
+        steps.iter().rev().map(|&(t, h)| (t + h, -h)).collect();
+    let zf = crate::ode::erk::integrate_grid(tab, &aug, &reversed, &z0, |_, _, _, _, _, _| {});
+    lambda.copy_from_slice(&zf[n..2 * n]);
+    for (g, m) in grad_theta.iter_mut().zip(&zf[2 * n..]) {
+        *g += m;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +185,31 @@ mod tests {
                 lambda[idx]
             );
         }
+    }
+
+    #[test]
+    fn grid_variant_matches_fixed_on_uniform_grids() {
+        let dims = vec![3, 8, 3];
+        let mut rng = Rng::new(21);
+        let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+        let rhs = MlpRhs::new(dims, Act::Tanh, false, 1, theta);
+        let u0 = vec![0.3f32, -0.2, 0.5];
+        let w = vec![1.0f32, 0.5, -0.25];
+        let tab = &tableau::RK4;
+        let nt = 12;
+        let uf = integrate_fixed(tab, &rhs, 0.0, 1.0, nt, &u0, |_, _, _, _, _, _| {});
+
+        let mut l_fixed = w.clone();
+        let mut g_fixed = vec![0.0f32; rhs.param_len()];
+        continuous_adjoint_erk(tab, &rhs, 0.0, 1.0, nt, &uf, &mut l_fixed, &mut g_fixed);
+
+        let steps = crate::ode::grid::uniform_steps(0.0, 1.0, nt);
+        let mut l_grid = w.clone();
+        let mut g_grid = vec![0.0f32; rhs.param_len()];
+        continuous_adjoint_erk_grid(tab, &rhs, &steps, &uf, &mut l_grid, &mut g_grid);
+
+        crate::testing::assert_allclose(&l_grid, &l_fixed, 1e-5, 1e-6, "grid λ");
+        crate::testing::assert_allclose(&g_grid, &g_fixed, 1e-5, 1e-6, "grid θ̄");
     }
 
     #[test]

@@ -1,45 +1,111 @@
-//! The checkpoint-policy-aware adjoint driver (PNODE Algorithm 1).
+//! The checkpoint-policy-aware, time-grid-generic adjoint driver
+//! (PNODE Algorithm 1).
 //!
-//! Forward: integrate, storing checkpoints per [`CheckpointPolicy`].
-//! Backward: walk steps in reverse; restore the closest checkpoint and
-//! recompute as dictated by the policy (for the binomial policy, the
-//! DP-optimal schedule from [`crate::checkpoint::binomial`]).
+//! One driver, [`AdjointDriver<S: StepScheme>`], runs every gradient
+//! configuration in the framework:
+//!
+//! * **Scheme** — [`ErkStep`] (explicit RK, stage-recording) or
+//!   [`ThetaStep`] (implicit θ-methods, solution-recording); see
+//!   [`crate::adjoint::scheme`].
+//! * **Grid** — a [`TimeGrid`]: uniform, explicit nonuniform, or
+//!   *adaptive*, where the forward pass generates the grid with the PI
+//!   controller and records only the **accepted** `(t_n, h_n)` steps
+//!   (rejected trials cost forward NFE but never enter the adjoint, the
+//!   checkpoint store, or the backward NFE — paper §4).  The backward
+//!   sweep then differentiates the accepted discrete map exactly.
+//! * **Policy** — a [`CheckpointPolicy`]: `All` / `SolutionOnly` run a
+//!   linear sweep; `Binomial` executes the DP-optimal Revolve-style
+//!   schedule from [`crate::checkpoint::binomial`]; `Tiered` routes any
+//!   placement through the RAM-budget/disk-spill backend.
 //!
 //! Storage is behind the [`CheckpointBackend`] trait: in-RAM by default,
 //! or the tiered backend (RAM budget + disk spill + reverse-order
-//! prefetch) when the policy is [`CheckpointPolicy::Tiered`].  The
-//! backward pass brackets its work with `begin_reverse_sweep`/`finish` so
-//! tiered backends can overlap disk reads with stage recomputation.
+//! prefetch) when the policy is [`CheckpointPolicy::Tiered`].  Anchors
+//! carry their own `(t_n, h_n)`, so the binomial DP, the tiered store's
+//! least-soon-needed eviction, and the reverse prefetcher all work
+//! verbatim off the recorded grid.  The backward pass brackets its work
+//! with `begin_reverse_sweep`/`finish` so tiered backends can overlap
+//! disk reads with stage recomputation.
+//!
+//! Adaptive grids and the binomial policy compose as follows: the DP
+//! schedule needs the step count up front, which a single adaptive pass
+//! cannot know, so the forward pass records the accepted grid only (plus
+//! the free `u_0` anchor) and the backward executor creates checkpoints
+//! by replaying from `u_0` under the DP's recompute-mode (`fwd = false`)
+//! costs.  Replayed walks reproduce the forward states bitwise (an FSAL
+//! stage equals a fresh evaluation at the same `(t, u)`), so gradients
+//! are identical across placements and storage backends on the same
+//! accepted grid.
 
-use crate::adjoint::discrete_erk::{adjoint_erk_step, AdjointErkWorkspace};
-use crate::adjoint::discrete_implicit::adjoint_theta_step;
+use crate::adjoint::scheme::{ErkStep, StepScheme, ThetaStep};
 use crate::checkpoint::binomial::{Anchor, BinomialPlanner, BlockDecision};
 use crate::checkpoint::tiered::{CheckpointBackend, TierStats, TieredConfig, TieredStore};
 use crate::checkpoint::{CheckpointPolicy, CheckpointStore, MemoryBudget, StepCheckpoint};
-use crate::linalg::gmres::GmresOptions;
-use crate::ode::erk::{erk_step, integrate_fixed, ErkWorkspace};
-use crate::ode::implicit::{integrate_implicit_grid, ThetaScheme};
+use crate::ode::grid::{default_adaptive_h0, uniform_steps, TimeGrid};
+use crate::ode::implicit::ThetaScheme;
 use crate::ode::rhs::OdeRhs;
 use crate::ode::tableau::Tableau;
 
-/// One full forward+backward gradient computation over an ERK scheme.
-pub struct ErkAdjointRun<'t> {
-    pub tab: &'t Tableau,
+/// One full forward+backward gradient computation: scheme × grid × policy.
+pub struct AdjointDriver<S> {
+    pub scheme: S,
     pub policy: CheckpointPolicy,
     pub t0: f64,
     pub tf: f64,
-    pub nt: usize,
+    pub grid: TimeGrid,
+    /// recorded (accepted) `(t_n, h_n)` steps of the latest forward pass
+    steps: Vec<(f64, f64)>,
+    /// rejected adaptive trials of the latest forward pass
+    n_rejected: usize,
     store: Box<dyn CheckpointBackend>,
-    /// (u, ks) of the final step, retained transiently from the forward pass
+    /// `(u, ks)` of the final step, retained transiently from the forward
+    /// pass (not kept for adaptive+binomial, whose backward replays from
+    /// `u_0` anyway)
     transient_last: Option<(Vec<f32>, Vec<Vec<f32>>)>,
     /// number of re-executed forward steps during the backward pass
     pub recompute_steps: u64,
     planner: BinomialPlanner,
     final_state: Vec<f32>,
+    /// whether the forward pass stored the binomial DP's checkpoints
+    /// (false for adaptive grids and stage-free schemes: backward runs in
+    /// the DP's recompute mode)
+    fwd_stored: bool,
 }
 
-impl<'t> ErkAdjointRun<'t> {
-    pub fn new(tab: &'t Tableau, policy: CheckpointPolicy, t0: f64, tf: f64, nt: usize) -> Self {
+/// Explicit-RK driver (the `pnode*` methods).
+pub type ErkDriver<'t> = AdjointDriver<ErkStep<'t>>;
+
+/// Implicit θ-method driver (the stiff task).
+pub type ThetaDriver = AdjointDriver<ThetaStep>;
+
+impl<'t> ErkDriver<'t> {
+    pub fn erk(
+        tab: &'t Tableau,
+        policy: CheckpointPolicy,
+        t0: f64,
+        tf: f64,
+        grid: TimeGrid,
+    ) -> Self {
+        AdjointDriver::new(ErkStep { tab }, policy, t0, tf, grid)
+    }
+}
+
+impl ThetaDriver {
+    /// Driver for an implicit θ-scheme over the time points `ts`
+    /// (arbitrary, e.g. log-spaced).
+    pub fn theta(scheme: ThetaScheme, policy: CheckpointPolicy, ts: &[f64]) -> Self {
+        AdjointDriver::new(
+            ThetaStep::new(scheme),
+            policy,
+            ts[0],
+            *ts.last().expect("nonempty time grid"),
+            TimeGrid::from_times(ts),
+        )
+    }
+}
+
+impl<S: StepScheme> AdjointDriver<S> {
+    pub fn new(scheme: S, policy: CheckpointPolicy, t0: f64, tf: f64, grid: TimeGrid) -> Self {
         let store: Box<dyn CheckpointBackend> = match &policy {
             CheckpointPolicy::Tiered { budget_bytes, dir, compress_f16, .. } => Box::new(
                 TieredStore::create(TieredConfig {
@@ -52,48 +118,90 @@ impl<'t> ErkAdjointRun<'t> {
             ),
             _ => Box::new(CheckpointStore::new()),
         };
-        ErkAdjointRun {
-            tab,
+        AdjointDriver {
+            scheme,
             policy,
             t0,
             tf,
-            nt,
+            grid,
+            steps: Vec::new(),
+            n_rejected: 0,
             store,
             transient_last: None,
             recompute_steps: 0,
             planner: BinomialPlanner::new(),
             final_state: Vec::new(),
+            fwd_stored: true,
         }
     }
 
-    fn h(&self) -> f64 {
-        (self.tf - self.t0) / self.nt as f64
-    }
+    // ---------------- forward ----------------
 
-    fn t_of(&self, step: usize) -> f64 {
-        self.t0 + step as f64 * self.h()
-    }
-
-    /// Forward pass: integrates and checkpoints per policy; returns u(t_F).
+    /// Forward pass: integrates per the grid (generating it for
+    /// [`TimeGrid::Adaptive`]), checkpoints per policy; returns `u(t_F)`.
     pub fn forward(&mut self, rhs: &dyn OdeRhs, u0: &[f32]) -> Vec<f32> {
         self.store.clear();
         self.transient_last = None;
         self.recompute_steps = 0;
-        let h = self.h();
-        let nt = self.nt;
+        self.n_rejected = 0;
+        self.fwd_stored = true;
+        match self.grid.clone() {
+            TimeGrid::Uniform { nt } => {
+                self.steps = uniform_steps(self.t0, self.tf, nt);
+                self.forward_over_steps(rhs, u0)
+            }
+            TimeGrid::Explicit(steps) => {
+                self.steps = steps;
+                self.forward_over_steps(rhs, u0)
+            }
+            TimeGrid::Adaptive { atol, rtol, h0 } => {
+                self.forward_adaptive(rhs, u0, atol, rtol, h0)
+            }
+        }
+    }
+
+    /// Pin the (free) bare anchor at step 0: the binomial executor always
+    /// needs one, and `u_0` is the batch input.  `contains()` and not
+    /// `get()`: a tiered get would pointlessly page the record in from
+    /// disk just to test presence.
+    fn pin_initial_anchor(&mut self, u0: &[f32]) {
+        if !self.store.contains(0) {
+            self.store.insert(StepCheckpoint {
+                step: 0,
+                t: self.t0,
+                h: self.steps.first().map(|s| s.1).unwrap_or(0.0),
+                u: u0.to_vec(),
+                ks: None,
+            });
+        }
+    }
+
+    fn forward_over_steps(&mut self, rhs: &dyn OdeRhs, u0: &[f32]) -> Vec<f32> {
+        let nt = self.steps.len();
+        let is_binomial =
+            matches!(self.policy.placement(), CheckpointPolicy::Binomial { .. });
         let store_positions: Vec<usize> = match self.policy.placement() {
             CheckpointPolicy::All | CheckpointPolicy::SolutionOnly => (0..nt).collect(),
             CheckpointPolicy::Binomial { n_checkpoints } => {
-                let nc = *n_checkpoints;
-                self.planner.forward_store_positions(nt, nc)
+                if self.scheme.needs_stages() {
+                    let nc = *n_checkpoints;
+                    self.planner.forward_store_positions(nt, nc)
+                } else {
+                    // stage-free schemes gain nothing from forward-stored
+                    // binomial checkpoints (there are no stages to keep):
+                    // run the whole schedule in the DP's recompute mode
+                    self.fwd_stored = false;
+                    Vec::new()
+                }
             }
             CheckpointPolicy::Tiered { .. } => unreachable!("placement() is never Tiered"),
         };
-        let with_stages = self.policy.stores_stages();
+        let with_stages = self.policy.stores_stages() && self.scheme.needs_stages();
+        let scheme = &self.scheme;
+        let steps = &self.steps;
         let store = &mut self.store;
         let transient = &mut self.transient_last;
-        let uf = integrate_fixed(self.tab, rhs, self.t0, self.tf, nt, u0, |step, t, h_, u, ks, _un| {
-            debug_assert!((h_ - h).abs() < 1e-12);
+        let uf = scheme.integrate(rhs, steps, u0, &mut |step, t, h, u, ks, _un| {
             if store_positions.binary_search(&step).is_ok() {
                 store.insert(StepCheckpoint {
                     step,
@@ -103,35 +211,122 @@ impl<'t> ErkAdjointRun<'t> {
                     ks: with_stages.then(|| ks.to_vec()),
                 });
             }
-            if step == nt - 1 {
+            if step + 1 == nt {
                 *transient = Some((u.to_vec(), ks.to_vec()));
             }
         });
-        // the binomial executor always needs an anchor at step 0; the input
-        // u_0 is available for free (it is the batch), so pin it (bare).
-        // contains() and not get(): a tiered get would pointlessly page the
-        // record in from disk just to test presence.
-        if matches!(self.policy.placement(), CheckpointPolicy::Binomial { .. })
-            && !self.store.contains(0)
-        {
-            self.store.insert(StepCheckpoint {
-                step: 0,
-                t: self.t0,
-                h,
-                u: u0.to_vec(),
-                ks: None,
-            });
+        if is_binomial {
+            self.pin_initial_anchor(u0);
         }
         self.final_state = uf.clone();
         uf
     }
 
+    fn forward_adaptive(
+        &mut self,
+        rhs: &dyn OdeRhs,
+        u0: &[f32],
+        atol: f64,
+        rtol: f64,
+        h0: Option<f64>,
+    ) -> Vec<f32> {
+        let h0 = h0.unwrap_or_else(|| default_adaptive_h0(self.t0, self.tf));
+        let is_binomial =
+            matches!(self.policy.placement(), CheckpointPolicy::Binomial { .. });
+        let with_stages = self.policy.stores_stages() && self.scheme.needs_stages();
+        let res = if is_binomial {
+            // grid-generation pass: record accepted steps only (see the
+            // module docs); the backward executor replays from u_0
+            self.fwd_stored = false;
+            let scheme = &self.scheme;
+            scheme.integrate_adaptive(
+                rhs, self.t0, self.tf, atol, rtol, h0, u0,
+                &mut |_, _, _, _, _, _| {},
+            )
+        } else {
+            let scheme = &self.scheme;
+            let store = &mut self.store;
+            let transient = &mut self.transient_last;
+            scheme.integrate_adaptive(
+                rhs, self.t0, self.tf, atol, rtol, h0, u0,
+                &mut |step, t, h, u, ks, _un| {
+                    store.insert(StepCheckpoint {
+                        step,
+                        t,
+                        h,
+                        u: u.to_vec(),
+                        ks: with_stages.then(|| ks.to_vec()),
+                    });
+                    // which step is last is unknown until the controller
+                    // stops, so keep the latest (u, ks) as the transient —
+                    // overwriting in place so the per-step cost is a copy,
+                    // not an allocation.  This keeps backward NFE parity
+                    // with a frozen-explicit replay of the accepted grid
+                    // (SolutionOnly recomputes N_t − 1 on both).
+                    match transient {
+                        Some((tu, tks)) if tu.len() == u.len() && tks.len() == ks.len() => {
+                            tu.copy_from_slice(u);
+                            for (dst, src) in tks.iter_mut().zip(ks) {
+                                dst.copy_from_slice(src);
+                            }
+                        }
+                        _ => *transient = Some((u.to_vec(), ks.to_vec())),
+                    }
+                },
+            )
+        };
+        let res = res.unwrap_or_else(|| {
+            panic!(
+                "TimeGrid::Adaptive requires an embedded error estimate ({} has none)",
+                self.scheme.name()
+            )
+        });
+        self.steps = res.steps;
+        self.n_rejected = res.rejected;
+        if is_binomial {
+            self.pin_initial_anchor(u0);
+        }
+        self.final_state = res.final_state.clone();
+        res.final_state
+    }
+
+    // ---------------- observability ----------------
+
     pub fn final_state(&self) -> &[f32] {
         &self.final_state
     }
 
+    /// The recorded (accepted) `(t_n, h_n)` steps of the latest forward
+    /// pass — for adaptive grids, the grid the PI controller generated.
+    pub fn grid_steps(&self) -> &[(f64, f64)] {
+        &self.steps
+    }
+
+    /// Accepted step count of the latest forward pass.
+    pub fn n_accepted(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Rejected adaptive trials of the latest forward pass (0 for static
+    /// grids).
+    pub fn n_rejected(&self) -> usize {
+        self.n_rejected
+    }
+
+    /// State at grid index `i` (`0` = initial, `n_accepted()` = final).
+    /// Promotes the record from the cold tier if it was spilled — hence
+    /// `&mut`.  Linear placements only (binomial consumes its anchors).
+    pub fn state(&mut self, i: usize) -> &[f32] {
+        if i == self.steps.len() {
+            &self.final_state
+        } else {
+            &self.store.get(i).expect("state stored").u
+        }
+    }
+
     /// Peak checkpoint bytes resident in RAM (for tiered storage the cold
-    /// tier is excluded — that is the point; see [`ErkAdjointRun::tier_stats`]).
+    /// tier is excluded — that is the point; see
+    /// [`AdjointDriver::tier_stats`]).
     pub fn peak_checkpoint_bytes(&self) -> u64 {
         self.store.peak_hot_bytes()
     }
@@ -146,55 +341,126 @@ impl<'t> ErkAdjointRun<'t> {
         self.store.stats()
     }
 
+    // ---------------- backward ----------------
+
     /// Backward pass: `lambda` enters as ∂L/∂u(t_F), leaves as ∂L/∂u_0;
     /// `grad_theta` accumulates ∂L/∂θ.
     pub fn backward(&mut self, rhs: &dyn OdeRhs, lambda: &mut [f32], grad_theta: &mut [f32]) {
-        let n = lambda.len();
-        let mut aws = AdjointErkWorkspace::new(self.tab.s, n);
-        let mut ews = ErkWorkspace::new(n);
+        let nt = self.steps.len();
+        if nt == 0 {
+            return;
+        }
         self.store.begin_reverse_sweep();
         match self.policy.placement().clone() {
-            CheckpointPolicy::All => {
-                for step in (0..self.nt).rev() {
-                    let cp = self.store.take(step).expect("checkpoint stored");
-                    let ks = cp.ks.as_ref().expect("stages stored");
-                    adjoint_erk_step(
-                        self.tab, rhs, cp.t, cp.h, &cp.u, ks, lambda, grad_theta, &mut aws,
-                    );
-                }
-            }
-            CheckpointPolicy::SolutionOnly => {
-                let h = self.h();
-                let mut ks: Vec<Vec<f32>> = (0..self.tab.s).map(|_| vec![0.0f32; n]).collect();
-                let mut u_next = vec![0.0f32; n];
-                for step in (0..self.nt).rev() {
-                    let cp = self.store.take(step).expect("checkpoint stored");
-                    if step == self.nt - 1 {
-                        if let Some((u, tks)) = self.transient_last.take() {
-                            adjoint_erk_step(
-                                self.tab, rhs, cp.t, h, &u, &tks, lambda, grad_theta, &mut aws,
-                            );
-                            continue;
-                        }
-                    }
-                    // recompute this step's stages (1 step execution)
-                    erk_step(self.tab, rhs, cp.t, h, &cp.u, &mut ks, &mut u_next, &mut ews, None);
-                    self.recompute_steps += 1;
-                    adjoint_erk_step(
-                        self.tab, rhs, cp.t, h, &cp.u, &ks, lambda, grad_theta, &mut aws,
-                    );
-                }
+            CheckpointPolicy::All | CheckpointPolicy::SolutionOnly => {
+                self.linear_sweep(rhs, 0, nt, false, lambda, grad_theta);
             }
             CheckpointPolicy::Binomial { n_checkpoints } => {
                 assert!(
                     self.store.contains(0),
-                    "binomial forward must checkpoint step 0 or caller's u0"
+                    "binomial backward needs an anchor at step 0"
                 );
-                self.binomial_block(rhs, 0, self.nt, n_checkpoints, true, lambda, grad_theta, &mut aws, &mut ews);
+                let n = lambda.len();
+                let mut aws = self.scheme.adj_workspace(n);
+                let mut ews = self.scheme.fwd_workspace(n);
+                let fwd = self.fwd_stored;
+                self.binomial_block(
+                    rhs, 0, nt, n_checkpoints, fwd, lambda, grad_theta, &mut aws, &mut ews,
+                );
             }
             CheckpointPolicy::Tiered { .. } => unreachable!("placement() is never Tiered"),
         }
         self.store.finish();
+    }
+
+    /// Backward over the sub-range of steps `[i, j)` (multi-observation
+    /// losses add λ jumps between ranges — see tasks/stiff.rs).  Consumes
+    /// the checkpoints in `(i, j]`; the checkpoint at `i` stays stored so
+    /// the next (lower) range can reuse it.  Linear placements only.
+    pub fn backward_range(
+        &mut self,
+        rhs: &dyn OdeRhs,
+        i: usize,
+        j: usize,
+        lambda: &mut [f32],
+        grad_theta: &mut [f32],
+    ) {
+        assert!(
+            matches!(
+                self.policy.placement(),
+                CheckpointPolicy::All | CheckpointPolicy::SolutionOnly
+            ),
+            "backward_range requires a linear (All/SolutionOnly) placement"
+        );
+        if i >= j {
+            return;
+        }
+        self.store.begin_reverse_sweep();
+        self.linear_sweep(rhs, i, j, true, lambda, grad_theta);
+        self.store.finish();
+    }
+
+    /// Linear reverse sweep over steps `[i, j)`.  Carries the arrival
+    /// state `u_{n+1}` down the sweep (stage-free schemes consume it;
+    /// stage-recording schemes use stored or recomputed stages).
+    fn linear_sweep(
+        &mut self,
+        rhs: &dyn OdeRhs,
+        i: usize,
+        j: usize,
+        keep_boundary: bool,
+        lambda: &mut [f32],
+        grad_theta: &mut [f32],
+    ) {
+        let n = lambda.len();
+        let nt = self.steps.len();
+        let mut fws = self.scheme.fwd_workspace(n);
+        let mut aws = self.scheme.adj_workspace(n);
+        let needs_stages = self.scheme.needs_stages();
+        let mut ks_buf: Vec<Vec<f32>> =
+            (0..self.scheme.n_stages()).map(|_| vec![0.0f32; n]).collect();
+        let mut un_buf = vec![0.0f32; n];
+        let mut upper: Vec<f32> = if j == nt {
+            self.final_state.clone()
+        } else {
+            self.store.take(j).expect("range boundary state stored").u
+        };
+        for step in (i..j).rev() {
+            let (t, h) = self.steps[step];
+            let keep = keep_boundary && step == i;
+            // the global last step's (u, ks) may be retained transiently
+            // from the forward pass: adjoint it without a recompute
+            if step + 1 == nt && !keep && self.transient_last.is_some() {
+                let (u, tks) = self.transient_last.take().expect("transient last step");
+                let _ = self.store.take(step); // consume the slot if stored
+                self.scheme
+                    .adjoint_step(rhs, t, h, &u, &tks, &upper, lambda, grad_theta, &mut aws);
+                upper = u;
+                continue;
+            }
+            let cp = if keep {
+                self.store.get(step).expect("state stored").clone()
+            } else {
+                self.store.take(step).expect("state stored")
+            };
+            if needs_stages {
+                if let Some(ks) = cp.ks.as_ref() {
+                    self.scheme
+                        .adjoint_step(rhs, t, h, &cp.u, ks, &upper, lambda, grad_theta, &mut aws);
+                } else {
+                    // recompute this step's stages (one step execution)
+                    self.scheme.step(rhs, t, h, &cp.u, &mut ks_buf, &mut un_buf, &mut fws);
+                    self.recompute_steps += 1;
+                    self.scheme.adjoint_step(
+                        rhs, t, h, &cp.u, &ks_buf, &upper, lambda, grad_theta, &mut aws,
+                    );
+                }
+            } else {
+                self.scheme
+                    .adjoint_step(rhs, t, h, &cp.u, &[], &upper, lambda, grad_theta, &mut aws);
+            }
+            upper = cp.u;
+        }
     }
 
     /// Recursive executor for the binomial policy, mirroring the DP.
@@ -208,16 +474,23 @@ impl<'t> ErkAdjointRun<'t> {
         fwd: bool,
         lambda: &mut [f32],
         grad_theta: &mut [f32],
-        aws: &mut AdjointErkWorkspace,
-        ews: &mut ErkWorkspace,
+        aws: &mut S::Adj,
+        ews: &mut S::Fwd,
     ) {
         if lo >= hi {
             return;
         }
         let n = lambda.len();
-        let h = self.h();
+        let nt = self.steps.len();
         let len = hi - lo;
-        let anchor_kind = if self.store.get(lo).map(|cp| cp.ks.is_some()).unwrap_or(false) {
+        let needs_stages = self.scheme.needs_stages();
+        // For stage-free schemes a bare solution anchor is as good as a
+        // full one (the adjoint re-executes the step either way), so
+        // report Full to the planner — a Split{offset: 0} upgrade would
+        // otherwise loop forever.
+        let anchor_kind = if !needs_stages
+            || self.store.get(lo).map(|cp| cp.ks.is_some()).unwrap_or(false)
+        {
             Anchor::Full
         } else {
             Anchor::Bare
@@ -225,243 +498,124 @@ impl<'t> ErkAdjointRun<'t> {
 
         if len == 1 {
             // adjoint step `lo`
-            let (u, ks_owned);
-            if fwd && lo == self.nt - 1 {
-                let (tu, tks) = self.transient_last.take().expect("transient last stages");
-                u = tu;
-                ks_owned = tks;
-            } else if let Some(cp) = self.store.get(lo) {
-                if let Some(ks) = &cp.ks {
-                    u = cp.u.clone();
-                    ks_owned = ks.clone();
-                } else {
-                    let mut ks: Vec<Vec<f32>> = (0..self.tab.s).map(|_| vec![0.0f32; n]).collect();
-                    let mut un = vec![0.0f32; n];
-                    erk_step(self.tab, rhs, cp.t, h, &cp.u, &mut ks, &mut un, ews, None);
-                    self.recompute_steps += 1;
-                    u = cp.u.clone();
-                    ks_owned = ks;
-                }
+            let (t, h) = self.steps[lo];
+            if lo + 1 == nt && self.transient_last.is_some() {
+                let (u, tks) = self.transient_last.take().expect("transient last step");
+                let u_next = self.final_state.clone();
+                self.scheme
+                    .adjoint_step(rhs, t, h, &u, &tks, &u_next, lambda, grad_theta, aws);
             } else {
-                panic!("binomial executor: no anchor at step {lo}");
+                let cp = self
+                    .store
+                    .get(lo)
+                    .unwrap_or_else(|| panic!("binomial executor: no anchor at step {lo}"))
+                    .clone();
+                match (needs_stages, cp.ks.as_ref()) {
+                    (true, Some(ks)) => {
+                        self.scheme
+                            .adjoint_step(rhs, t, h, &cp.u, ks, &[], lambda, grad_theta, aws);
+                    }
+                    _ => {
+                        // re-execute the step for its stages / arrival
+                        // state.  (Known slack for stage-free schemes: the
+                        // arrival state equals the anchor of the
+                        // previously-adjointed step, which the executor
+                        // does not thread through — the DP's Anchor::Full
+                        // cost model undercounts this one execution.
+                        // Binomial placement on θ-schemes is a secondary
+                        // combination; the linear sweep carries the state
+                        // and pays zero recomputes.)
+                        let mut ks: Vec<Vec<f32>> =
+                            (0..self.scheme.n_stages()).map(|_| vec![0.0f32; n]).collect();
+                        let mut un = vec![0.0f32; n];
+                        self.scheme.step(rhs, t, h, &cp.u, &mut ks, &mut un, ews);
+                        self.recompute_steps += 1;
+                        self.scheme
+                            .adjoint_step(rhs, t, h, &cp.u, &ks, &un, lambda, grad_theta, aws);
+                    }
+                }
             }
-            adjoint_erk_step(self.tab, rhs, self.t_of(lo), h, &u, &ks_owned, lambda, grad_theta, aws);
             let _ = self.store.take(lo);
             return;
         }
 
         match self.planner.decide(len, c, anchor_kind, fwd) {
             BlockDecision::DirectLast => {
-                // adjoint step hi-1 via walk from anchor at lo, then recurse
+                // adjoint step hi-1 via walk from the anchor, then recurse
                 let last = hi - 1;
-                if fwd && last == self.nt - 1 {
-                    let (u, ks) = self.transient_last.take().expect("transient last stages");
-                    adjoint_erk_step(
-                        self.tab, rhs, self.t_of(last), h, &u, &ks, lambda, grad_theta, aws,
-                    );
+                let (tl, hl) = self.steps[last];
+                if last + 1 == nt && self.transient_last.is_some() {
+                    let (u, tks) = self.transient_last.take().expect("transient last step");
+                    let u_next = self.final_state.clone();
+                    self.scheme
+                        .adjoint_step(rhs, tl, hl, &u, &tks, &u_next, lambda, grad_theta, aws);
                 } else {
-                    let anchor = self.store.get(lo).expect("anchor checkpoint").u.clone();
-                    let mut u = anchor;
+                    let mut u = self.store.get(lo).expect("anchor checkpoint").u.clone();
                     let mut un = vec![0.0f32; n];
-                    let mut ks: Vec<Vec<f32>> = (0..self.tab.s).map(|_| vec![0.0f32; n]).collect();
+                    let mut ks: Vec<Vec<f32>> =
+                        (0..self.scheme.n_stages()).map(|_| vec![0.0f32; n]).collect();
                     for s in lo..last {
-                        erk_step(self.tab, rhs, self.t_of(s), h, &u, &mut ks, &mut un, ews, None);
+                        let (t, h) = self.steps[s];
+                        self.scheme.step(rhs, t, h, &u, &mut ks, &mut un, ews);
                         self.recompute_steps += 1;
                         std::mem::swap(&mut u, &mut un);
                     }
-                    // one more execution for the stages of step `last`
-                    erk_step(self.tab, rhs, self.t_of(last), h, &u, &mut ks, &mut un, ews, None);
+                    // one more execution for step `last` itself
+                    self.scheme.step(rhs, tl, hl, &u, &mut ks, &mut un, ews);
                     self.recompute_steps += 1;
-                    adjoint_erk_step(
-                        self.tab, rhs, self.t_of(last), h, &u, &ks, lambda, grad_theta, aws,
-                    );
+                    self.scheme
+                        .adjoint_step(rhs, tl, hl, &u, &ks, &un, lambda, grad_theta, aws);
                 }
                 self.binomial_block(rhs, lo, hi - 1, c, false, lambda, grad_theta, aws, ews);
             }
             BlockDecision::Split { offset } => {
                 if offset == 0 {
-                    // upgrade anchor at lo to full
+                    // upgrade the bare anchor at `lo` to full (only ever
+                    // decided for stage-recording schemes)
                     if anchor_kind == Anchor::Bare && !fwd {
                         let cp = self.store.get(lo).expect("anchor").clone();
+                        let (t, h) = self.steps[lo];
                         let mut ks: Vec<Vec<f32>> =
-                            (0..self.tab.s).map(|_| vec![0.0f32; n]).collect();
+                            (0..self.scheme.n_stages()).map(|_| vec![0.0f32; n]).collect();
                         let mut un = vec![0.0f32; n];
-                        erk_step(self.tab, rhs, cp.t, h, &cp.u, &mut ks, &mut un, ews, None);
+                        self.scheme.step(rhs, t, h, &cp.u, &mut ks, &mut un, ews);
                         self.recompute_steps += 1;
                         self.store.insert(StepCheckpoint { ks: Some(ks), ..cp });
                     }
-                    // fwd case: forward pass already stored it full
+                    // fwd case: the forward pass already stored it full
                     self.binomial_block(rhs, lo, hi, c - 1, fwd, lambda, grad_theta, aws, ews);
                     return;
                 }
                 let mid = lo + offset;
                 if !fwd && self.store.get(mid).is_none() {
-                    // create the checkpoint by walking (offset steps + 1 for stages)
-                    let anchor = self.store.get(lo).expect("anchor checkpoint").u.clone();
-                    let mut u = anchor;
+                    // create the checkpoint by walking from the anchor
+                    let mut u = self.store.get(lo).expect("anchor checkpoint").u.clone();
                     let mut un = vec![0.0f32; n];
-                    let mut ks: Vec<Vec<f32>> = (0..self.tab.s).map(|_| vec![0.0f32; n]).collect();
+                    let mut ks: Vec<Vec<f32>> =
+                        (0..self.scheme.n_stages()).map(|_| vec![0.0f32; n]).collect();
                     for s in lo..mid {
-                        erk_step(self.tab, rhs, self.t_of(s), h, &u, &mut ks, &mut un, ews, None);
+                        let (t, h) = self.steps[s];
+                        self.scheme.step(rhs, t, h, &u, &mut ks, &mut un, ews);
                         self.recompute_steps += 1;
                         std::mem::swap(&mut u, &mut un);
                     }
-                    erk_step(self.tab, rhs, self.t_of(mid), h, &u, &mut ks, &mut un, ews, None);
-                    self.recompute_steps += 1;
-                    self.store.insert(StepCheckpoint {
-                        step: mid,
-                        t: self.t_of(mid),
-                        h,
-                        u,
-                        ks: Some(ks),
-                    });
+                    let (tm, hm) = self.steps[mid];
+                    let stored_ks = if needs_stages {
+                        // one extra execution for the stages of step `mid`
+                        self.scheme.step(rhs, tm, hm, &u, &mut ks, &mut un, ews);
+                        self.recompute_steps += 1;
+                        Some(ks)
+                    } else {
+                        None
+                    };
+                    self.store
+                        .insert(StepCheckpoint { step: mid, t: tm, h: hm, u, ks: stored_ks });
                 }
                 // right block first (backward order), then left
                 self.binomial_block(rhs, mid, hi, c - 1, fwd, lambda, grad_theta, aws, ews);
                 self.binomial_block(rhs, lo, mid, c, false, lambda, grad_theta, aws, ews);
             }
         }
-    }
-}
-
-/// Gradient run for the implicit theta-methods: solution-only checkpoints
-/// over an arbitrary (possibly log-spaced) time grid, stored through the
-/// same [`CheckpointBackend`] abstraction as the ERK run — so long stiff
-/// trajectories can run under a RAM budget with disk spill + prefetch
-/// ([`ImplicitAdjointRun::tiered`]).
-pub struct ImplicitAdjointRun {
-    pub scheme: ThetaScheme,
-    pub ts: Vec<f64>,
-    pub gmres_opts: GmresOptions,
-    /// u_n at every grid index (solutions only — no stages for implicit)
-    store: Box<dyn CheckpointBackend>,
-}
-
-impl ImplicitAdjointRun {
-    pub fn new(scheme: ThetaScheme, ts: Vec<f64>) -> Self {
-        Self::with_backend(scheme, ts, Box::new(CheckpointStore::new()))
-    }
-
-    /// Tiered storage: at most `cfg.budget` bytes of trajectory resident,
-    /// the rest spilled under `cfg.dir` and prefetched back in reverse
-    /// order during the backward sweep.
-    pub fn tiered(
-        scheme: ThetaScheme,
-        ts: Vec<f64>,
-        cfg: TieredConfig,
-    ) -> std::io::Result<Self> {
-        Ok(Self::with_backend(scheme, ts, Box::new(TieredStore::create(cfg)?)))
-    }
-
-    fn with_backend(scheme: ThetaScheme, ts: Vec<f64>, store: Box<dyn CheckpointBackend>) -> Self {
-        ImplicitAdjointRun { scheme, ts, gmres_opts: GmresOptions::default(), store }
-    }
-
-    /// Forward integration storing every solution; returns u(t_F).
-    pub fn forward(&mut self, rhs: &dyn OdeRhs, u0: &[f32]) -> Vec<f32> {
-        self.store.clear();
-        let ts = &self.ts;
-        let step_h = |i: usize| if i + 1 < ts.len() { ts[i + 1] - ts[i] } else { 0.0 };
-        self.store.insert(StepCheckpoint {
-            step: 0,
-            t: ts[0],
-            h: step_h(0),
-            u: u0.to_vec(),
-            ks: None,
-        });
-        let store = &mut self.store;
-        let mut idx = 0usize;
-        integrate_implicit_grid(self.scheme, rhs, ts, u0, |_, _, _, _, un| {
-            idx += 1;
-            store.insert(StepCheckpoint {
-                step: idx,
-                t: ts[idx],
-                h: step_h(idx),
-                u: un.to_vec(),
-                ks: None,
-            });
-        })
-    }
-
-    /// State at grid index i (0 = initial).  Promotes the record from the
-    /// cold tier if it was spilled — hence `&mut`.
-    pub fn state(&mut self, i: usize) -> &[f32] {
-        &self.store.get(i).expect("state stored").u
-    }
-
-    /// Trajectory bytes currently resident in RAM.
-    pub fn checkpoint_bytes(&self) -> u64 {
-        self.store.hot_bytes()
-    }
-
-    /// Storage-tier counters (zeros beyond the hot fields in-memory).
-    pub fn tier_stats(&self) -> TierStats {
-        self.store.stats()
-    }
-
-    /// Backward sweep over all steps; λ and θ-gradient as in the ERK run.
-    pub fn backward(&mut self, rhs: &dyn OdeRhs, lambda: &mut [f32], grad_theta: &mut [f32]) {
-        self.backward_range_impl(rhs, 0, self.ts.len() - 1, lambda, grad_theta, true);
-    }
-
-    /// Backward over a sub-range [i, j) of grid steps (multi-observation
-    /// losses add λ jumps between ranges — see tasks/stiff.rs).  Consumes
-    /// the states in (i, j]; state `i` stays stored so the next (lower)
-    /// range can use it as its right boundary.
-    pub fn backward_range(
-        &mut self,
-        rhs: &dyn OdeRhs,
-        i: usize,
-        j: usize,
-        lambda: &mut [f32],
-        grad_theta: &mut [f32],
-    ) {
-        self.backward_range_impl(rhs, i, j, lambda, grad_theta, false);
-    }
-
-    fn backward_range_impl(
-        &mut self,
-        rhs: &dyn OdeRhs,
-        i: usize,
-        j: usize,
-        lambda: &mut [f32],
-        grad_theta: &mut [f32],
-        check_convergence: bool,
-    ) {
-        if i >= j {
-            return;
-        }
-        self.store.begin_reverse_sweep();
-        // pairs (step, step+1) walk down from j; each state's last use is
-        // as the pair's lower end, so carry it over instead of re-reading
-        let mut upper = self.store.take(j).expect("state stored").u;
-        for step in (i..j).rev() {
-            let t = self.ts[step];
-            let h = self.ts[step + 1] - self.ts[step];
-            let lower = if step == i {
-                // boundary: a later backward_range call still needs it
-                self.store.get(step).expect("state stored").u.clone()
-            } else {
-                self.store.take(step).expect("state stored").u
-            };
-            let res = adjoint_theta_step(
-                self.scheme,
-                rhs,
-                t,
-                h,
-                &lower,
-                &upper,
-                lambda,
-                grad_theta,
-                &self.gmres_opts,
-            );
-            if check_convergence {
-                debug_assert!(res.converged, "transposed solve stalled at step {step}");
-            }
-            let _ = res;
-            upper = lower;
-        }
-        self.store.finish();
     }
 }
 
@@ -481,7 +635,7 @@ mod tests {
         MlpRhs::new(dims, Act::Tanh, true, 2, theta)
     }
 
-    /// gradient of L = <w, u(tF)> via a run with the given policy
+    /// gradient of L = <w, u(tF)> via an ERK run with the given policy
     fn grad_with_policy(
         policy: CheckpointPolicy,
         rhs: &MlpRhs,
@@ -489,7 +643,8 @@ mod tests {
         w: &[f32],
         nt: usize,
     ) -> (Vec<f32>, Vec<f32>, u64) {
-        let mut run = ErkAdjointRun::new(&tableau::RK4, policy, 0.0, 1.0, nt);
+        let mut run =
+            ErkDriver::erk(&tableau::RK4, policy, 0.0, 1.0, TimeGrid::Uniform { nt });
         run.forward(rhs, u0);
         let mut lambda = w.to_vec();
         let mut gtheta = vec![0.0f32; rhs.param_len()];
@@ -549,6 +704,158 @@ mod tests {
         }
     }
 
+    #[test]
+    fn explicit_grid_reproduces_uniform_bitwise() {
+        let rhs = mk_rhs(111);
+        let n = rhs.state_len();
+        let mut rng = Rng::new(112);
+        let u0 = prop::vec_uniform(&mut rng, n, 0.5);
+        let w = prop::vec_uniform(&mut rng, n, 1.0);
+        let nt = 10;
+
+        let grad = |grid: TimeGrid| {
+            let mut run =
+                ErkDriver::erk(&tableau::DOPRI5, CheckpointPolicy::All, 0.0, 1.0, grid);
+            run.forward(&rhs, &u0);
+            let mut l = w.clone();
+            let mut g = vec![0.0f32; rhs.param_len()];
+            run.backward(&rhs, &mut l, &mut g);
+            (l, g, run.grid_steps().to_vec())
+        };
+        let (l_u, g_u, steps) = grad(TimeGrid::Uniform { nt });
+        let (l_e, g_e, steps_e) = grad(TimeGrid::Explicit(steps.clone()));
+        assert_eq!(steps, steps_e);
+        assert_eq!(l_u, l_e, "explicit copy of the uniform grid is the same map");
+        assert_eq!(g_u, g_e);
+    }
+
+    #[test]
+    fn nonuniform_explicit_grid_gradients_agree_across_policies() {
+        let rhs = mk_rhs(121);
+        let n = rhs.state_len();
+        let mut rng = Rng::new(122);
+        let u0 = prop::vec_uniform(&mut rng, n, 0.5);
+        let w = prop::vec_uniform(&mut rng, n, 1.0);
+        let steps =
+            vec![(0.0, 0.05), (0.05, 0.1), (0.15, 0.2), (0.35, 0.3), (0.65, 0.35)];
+
+        let grad = |policy: CheckpointPolicy| {
+            let mut run = ErkDriver::erk(
+                &tableau::RK4, policy, 0.0, 1.0, TimeGrid::Explicit(steps.clone()),
+            );
+            run.forward(&rhs, &u0);
+            let mut l = w.clone();
+            let mut g = vec![0.0f32; rhs.param_len()];
+            run.backward(&rhs, &mut l, &mut g);
+            (l, g)
+        };
+        let (l_all, g_all) = grad(CheckpointPolicy::All);
+        for policy in [
+            CheckpointPolicy::SolutionOnly,
+            CheckpointPolicy::Binomial { n_checkpoints: 2 },
+        ] {
+            let (l, g) = grad(policy.clone());
+            assert_eq!(l, l_all, "{}: λ bitwise on a nonuniform grid", policy.name());
+            assert_eq!(g, g_all, "{}: θ̄ bitwise on a nonuniform grid", policy.name());
+        }
+    }
+
+    #[test]
+    fn adaptive_grid_policies_and_tiers_bitwise_identical() {
+        let rhs = mk_rhs(101);
+        let n = rhs.state_len();
+        let mut rng = Rng::new(102);
+        let u0 = prop::vec_uniform(&mut rng, n, 0.5);
+        let w = prop::vec_uniform(&mut rng, n, 1.0);
+        let grid = TimeGrid::Adaptive { atol: 1e-5, rtol: 1e-5, h0: Some(0.25) };
+
+        let grad = |policy: CheckpointPolicy| {
+            let mut run = ErkDriver::erk(&tableau::DOPRI5, policy, 0.0, 1.0, grid.clone());
+            run.forward(&rhs, &u0);
+            let mut l = w.clone();
+            let mut g = vec![0.0f32; rhs.param_len()];
+            run.backward(&rhs, &mut l, &mut g);
+            let st = run.tier_stats();
+            (l, g, run.n_accepted(), run.n_rejected(), st, run.recompute_steps)
+        };
+        let (l_all, g_all, acc, rej, _, r_all) = grad(CheckpointPolicy::All);
+        assert!(acc > 1, "controller must accept multiple steps");
+        assert_eq!(r_all, 0, "All placement never recomputes");
+        let (l_bin, g_bin, acc_b, rej_b, _, r_bin) =
+            grad(CheckpointPolicy::Binomial { n_checkpoints: 3 });
+        assert_eq!((acc, rej), (acc_b, rej_b), "deterministic accepted grid");
+        assert!(r_bin > 0, "recompute-mode schedule must replay steps");
+        assert_eq!(l_bin, l_all, "binomial λ bitwise on the same accepted grid");
+        assert_eq!(g_bin, g_all, "binomial θ̄ bitwise on the same accepted grid");
+
+        let dir = tmp_spill_dir("adaptive");
+        let policy = CheckpointPolicy::Tiered {
+            budget_bytes: 300,
+            dir: dir.clone(),
+            compress_f16: false,
+            inner: Box::new(CheckpointPolicy::Binomial { n_checkpoints: 3 }),
+        };
+        let (l_t, g_t, acc_t, _, st, _) = grad(policy);
+        assert_eq!(acc_t, acc);
+        assert_eq!(l_t, l_all, "tiered binomial λ bitwise under adaptive stepping");
+        assert_eq!(g_t, g_all, "tiered binomial θ̄ bitwise under adaptive stepping");
+        assert!(st.spills > 0, "300 B budget must force spills: {st:?}");
+        let _ = std::fs::remove_dir_all(std::path::Path::new(&dir));
+    }
+
+    #[test]
+    fn adaptive_rejections_never_touch_the_store_or_backward() {
+        // a moderately stiff problem with a generous trial step forces
+        // rejected trials; they must cost forward NFE only (paper §4)
+        use crate::ode::rhs::LinearRhs;
+        let rhs = LinearRhs::new(2, vec![-40.0, 0.0, 0.0, -1.0]);
+        let u0 = vec![1.0f32, 1.0];
+        let w = vec![1.0f32, 1.0];
+        for policy in [CheckpointPolicy::All, CheckpointPolicy::SolutionOnly] {
+            let grad = |grid: TimeGrid| {
+                rhs.reset_nfe();
+                let mut run =
+                    ErkDriver::erk(&tableau::DOPRI5, policy.clone(), 0.0, 1.0, grid);
+                run.forward(&rhs, &u0);
+                let fwd_nfe = rhs.nfe().forward;
+                let mut l = w.clone();
+                let mut g = vec![0.0f32; rhs.param_len()];
+                run.backward(&rhs, &mut l, &mut g);
+                let bwd = rhs.nfe();
+                (
+                    run.grid_steps().to_vec(),
+                    run.n_rejected(),
+                    fwd_nfe,
+                    bwd.backward + (bwd.forward - fwd_nfe),
+                    run.peak_checkpoint_bytes(),
+                    run.recompute_steps,
+                    l,
+                    g,
+                )
+            };
+            let ada = TimeGrid::Adaptive { atol: 1e-6, rtol: 1e-6, h0: Some(0.5) };
+            let (steps, rejected, nfe_f_ada, nfe_b_ada, bytes_ada, rec_ada, l_a, g_a) =
+                grad(ada);
+            assert!(rejected > 0, "h0=0.5 on a stiff axis must reject trials");
+            // replay the frozen accepted grid: same adjoint, same memory,
+            // same recompute schedule, strictly fewer forward evaluations
+            let (steps2, rej2, nfe_f_ex, nfe_b_ex, bytes_ex, rec_ex, l_e, g_e) =
+                grad(TimeGrid::Explicit(steps.clone()));
+            let tag = policy.name();
+            assert_eq!(steps, steps2);
+            assert_eq!(rej2, 0);
+            assert_eq!(nfe_b_ada, nfe_b_ex, "{tag}: rejections add zero backward NFE");
+            assert_eq!(bytes_ada, bytes_ex, "{tag}: rejections add zero checkpoint bytes");
+            assert_eq!(rec_ada, rec_ex, "{tag}: rejections never enter the schedule");
+            assert!(
+                nfe_f_ada > nfe_f_ex,
+                "{tag}: rejected trials must cost forward NFE: {nfe_f_ada} vs {nfe_f_ex}"
+            );
+            assert_eq!(l_a, l_e, "{tag}: gradients differentiate the accepted map only");
+            assert_eq!(g_a, g_e, "{tag}");
+        }
+    }
+
     fn tmp_spill_dir(tag: &str) -> String {
         let d = std::env::temp_dir()
             .join(format!("pnode-driver-tiered-{}-{tag}", std::process::id()));
@@ -575,7 +882,8 @@ mod tests {
             compress_f16: false,
             inner: Box::new(CheckpointPolicy::All),
         };
-        let mut run = ErkAdjointRun::new(&tableau::RK4, policy, 0.0, 1.0, nt);
+        let mut run =
+            ErkDriver::erk(&tableau::RK4, policy, 0.0, 1.0, TimeGrid::Uniform { nt });
         run.forward(&rhs, &u0);
         let mut l_t = w.to_vec();
         let mut g_t = vec![0.0f32; rhs.param_len()];
@@ -646,7 +954,8 @@ mod tests {
             compress_f16: true,
             inner: Box::new(CheckpointPolicy::All),
         };
-        let mut run = ErkAdjointRun::new(&tableau::RK4, policy, 0.0, 1.0, nt);
+        let mut run =
+            ErkDriver::erk(&tableau::RK4, policy, 0.0, 1.0, TimeGrid::Uniform { nt });
         run.forward(&rhs, &u0);
         let mut l = w.to_vec();
         let mut g = vec![0.0f32; rhs.param_len()];
@@ -711,37 +1020,46 @@ mod tests {
         }
     }
 
+    fn mk_implicit_rhs(seed: u64) -> MlpRhs {
+        let dims = vec![3, 8, 3];
+        let mut rng = Rng::new(seed);
+        let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+        MlpRhs::new(dims, Act::Gelu, false, 1, theta)
+    }
+
     #[test]
     fn implicit_tiered_matches_in_memory_bitwise() {
-        use crate::checkpoint::tiered::TieredConfig;
-        let rhs = {
-            let dims = vec![3, 8, 3];
-            let mut rng = Rng::new(63);
-            let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-            MlpRhs::new(dims, crate::nn::Act::Gelu, false, 1, theta)
-        };
+        let rhs = mk_implicit_rhs(63);
         let ts: Vec<f64> = (0..=12).map(|i| i as f64 / 12.0).collect();
         let u0 = vec![0.5f32, -0.2, 0.1];
         let w = vec![1.0f32, -0.5, 0.25];
 
-        let grad = |run: &mut ImplicitAdjointRun| {
+        let grad = |run: &mut ThetaDriver| {
             run.forward(&rhs, &u0);
             let mut l = w.clone();
             let mut g = vec![0.0f32; rhs.param_len()];
             run.backward(&rhs, &mut l, &mut g);
             (l, g)
         };
-        let mut mem = ImplicitAdjointRun::new(ThetaScheme::crank_nicolson(), ts.clone());
+        let mut mem = ThetaDriver::theta(
+            ThetaScheme::crank_nicolson(),
+            CheckpointPolicy::SolutionOnly,
+            &ts,
+        );
         let (l_mem, g_mem) = grad(&mut mem);
 
         let dir = tmp_spill_dir("implicit");
-        // each state record is 3*4+48 = 60 B; 13 states ≈ 780 B total
-        let mut tr = ImplicitAdjointRun::tiered(
+        // each state record is 3*4+48 = 60 B; 12 stored states ≈ 720 B
+        let mut tr = ThetaDriver::theta(
             ThetaScheme::crank_nicolson(),
-            ts,
-            TieredConfig::new(150, &dir),
-        )
-        .expect("tiered store");
+            CheckpointPolicy::Tiered {
+                budget_bytes: 150,
+                dir: dir.clone(),
+                compress_f16: false,
+                inner: Box::new(CheckpointPolicy::SolutionOnly),
+            },
+            &ts,
+        );
         let (l_t, g_t) = grad(&mut tr);
         let st = tr.tier_stats();
 
@@ -753,18 +1071,47 @@ mod tests {
     }
 
     #[test]
-    fn implicit_run_gradient_matches_fd() {
-        let mut rhs = {
-            let dims = vec![3, 8, 3];
-            let mut rng = Rng::new(61);
-            let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-            MlpRhs::new(dims, Act::Gelu, false, 1, theta)
+    fn theta_binomial_schedule_matches_linear_sweep() {
+        // binomial placement on a stage-free scheme runs in the DP's
+        // recompute mode; replayed Newton walks are deterministic, so the
+        // gradient is bitwise identical to the stored-trajectory sweep
+        let rhs = mk_implicit_rhs(67);
+        let ts = vec![0.0, 0.05, 0.15, 0.3, 0.55, 1.0];
+        let u0 = vec![0.4f32, -0.1, 0.3];
+        let w = vec![1.0f32, 0.5, -0.3];
+
+        let grad = |policy: CheckpointPolicy| {
+            let mut run =
+                ThetaDriver::theta(ThetaScheme::crank_nicolson(), policy, &ts);
+            run.forward(&rhs, &u0);
+            let mut l = w.clone();
+            let mut g = vec![0.0f32; rhs.param_len()];
+            run.backward(&rhs, &mut l, &mut g);
+            (l, g, run.recompute_steps, run.peak_checkpoint_bytes())
         };
+        let (l_lin, g_lin, r_lin, bytes_lin) = grad(CheckpointPolicy::SolutionOnly);
+        assert_eq!(r_lin, 0, "the carried-upper sweep never re-runs Newton");
+        let (l_bin, g_bin, r_bin, bytes_bin) =
+            grad(CheckpointPolicy::Binomial { n_checkpoints: 2 });
+        assert!(r_bin > 0, "two slots over five steps must replay");
+        assert!(bytes_bin < bytes_lin, "binomial stores less than the full trajectory");
+        assert_eq!(l_bin, l_lin, "θ-scheme λ bitwise across schedules");
+        assert_eq!(g_bin, g_lin, "θ-scheme θ̄ bitwise across schedules");
+    }
+
+    #[test]
+    fn implicit_run_gradient_matches_fd() {
+        use crate::ode::implicit::integrate_implicit_grid;
+        let mut rhs = mk_implicit_rhs(61);
         let ts = vec![0.0, 0.1, 0.25, 0.5, 1.0];
         let u0 = vec![0.5f32, -0.2, 0.1];
         let w = vec![1.0f32, -0.5, 0.25];
 
-        let mut run = ImplicitAdjointRun::new(ThetaScheme::crank_nicolson(), ts.clone());
+        let mut run = ThetaDriver::theta(
+            ThetaScheme::crank_nicolson(),
+            CheckpointPolicy::SolutionOnly,
+            &ts,
+        );
         run.forward(&rhs, &u0);
         let mut lambda = w.clone();
         let mut gtheta = vec![0.0f32; rhs.param_len()];

@@ -1,14 +1,17 @@
 //! Adjoint engines: discrete adjoints of the explicit RK family and of the
 //! implicit theta-methods (reverse-accurate to machine precision), the
-//! continuous-adjoint baseline (the vanilla neural ODE's gradient), and the
-//! checkpoint-policy-aware backward driver.
+//! continuous-adjoint baseline (the vanilla neural ODE's gradient), the
+//! step-scheme abstraction, and the checkpoint-policy-aware,
+//! time-grid-generic backward driver.
 
 pub mod continuous;
 pub mod discrete_erk;
 pub mod discrete_implicit;
 pub mod driver;
+pub mod scheme;
 
-pub use continuous::continuous_adjoint_erk;
+pub use continuous::{continuous_adjoint_erk, continuous_adjoint_erk_grid};
 pub use discrete_erk::{adjoint_erk_step, AdjointErkWorkspace};
 pub use discrete_implicit::adjoint_theta_step;
-pub use driver::{ErkAdjointRun, ImplicitAdjointRun};
+pub use driver::{AdjointDriver, ErkDriver, ThetaDriver};
+pub use scheme::{ErkStep, StepScheme, ThetaStep};

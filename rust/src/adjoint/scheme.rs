@@ -1,0 +1,364 @@
+//! Step schemes for the unified adjoint driver.
+//!
+//! A [`StepScheme`] packages everything the policy-aware driver needs to
+//! run one time-stepping family forward and in reverse over an arbitrary
+//! [`crate::ode::grid::TimeGrid`]:
+//!
+//! * [`ErkStep`] — explicit Runge–Kutta over a Butcher tableau.  Steps
+//!   record stage derivatives; the adjoint of a step consumes `(u_n, ks)`
+//!   and never reads the arrival state.
+//! * [`ThetaStep`] — implicit θ-methods (backward Euler, Crank–Nicolson)
+//!   via Newton–GMRES.  Steps record nothing beyond the solution; the
+//!   adjoint of a step consumes `(u_n, u_{n+1})` and solves the transposed
+//!   linearized step operator.
+//!
+//! Contract: when [`StepScheme::needs_stages`] is true, `adjoint_step`
+//! must not read `u_next` (the driver may pass an empty slice when the
+//! arrival state is not cheaply available); when it is false, `ks` is
+//! always empty and `u_next` carries the arrival state.
+
+use crate::adjoint::discrete_erk::{adjoint_erk_step, AdjointErkWorkspace};
+use crate::adjoint::discrete_implicit::adjoint_theta_step;
+use crate::linalg::gmres::GmresOptions;
+use crate::ode::adaptive::{integrate_adaptive, AdaptiveController, AdaptiveResult};
+use crate::ode::erk::{erk_step, integrate_grid, ErkWorkspace};
+use crate::ode::implicit::{ImplicitStepper, ThetaScheme};
+use crate::ode::rhs::OdeRhs;
+use crate::ode::tableau::Tableau;
+
+/// Per-accepted-step sink: `(step, t, h, u_n, ks, u_{n+1})`.
+pub type StepSink<'a> = &'a mut dyn FnMut(usize, f64, f64, &[f32], &[Vec<f32>], &[f32]);
+
+/// A time-stepping family the adjoint driver can run forward and reverse.
+pub trait StepScheme {
+    /// Reusable forward-step workspace.
+    type Fwd;
+    /// Reusable adjoint-step workspace.
+    type Adj;
+
+    fn name(&self) -> &'static str;
+
+    /// Stage vectors recorded per step (0 for schemes whose adjoint needs
+    /// no stages).
+    fn n_stages(&self) -> usize;
+
+    /// Whether the adjoint of a step consumes recorded stage derivatives
+    /// (true for ERK) as opposed to the arrival state (implicit θ).
+    fn needs_stages(&self) -> bool {
+        self.n_stages() > 0
+    }
+
+    fn fwd_workspace(&self, n: usize) -> Self::Fwd;
+
+    fn adj_workspace(&self, n: usize) -> Self::Adj;
+
+    /// Execute one forward step from `(t, h, u)`, filling `ks` (must hold
+    /// `n_stages()` vectors) and `u_next`.
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &self,
+        rhs: &dyn OdeRhs,
+        t: f64,
+        h: f64,
+        u: &[f32],
+        ks: &mut [Vec<f32>],
+        u_next: &mut [f32],
+        ws: &mut Self::Fwd,
+    );
+
+    /// Reverse one step: `lambda` enters as λ_{n+1}, leaves as λ_n;
+    /// `grad_theta` accumulates θ̄.  See the module docs for the
+    /// `ks`/`u_next` contract.
+    #[allow(clippy::too_many_arguments)]
+    fn adjoint_step(
+        &self,
+        rhs: &dyn OdeRhs,
+        t: f64,
+        h: f64,
+        u: &[f32],
+        ks: &[Vec<f32>],
+        u_next: &[f32],
+        lambda: &mut [f32],
+        grad_theta: &mut [f32],
+        ws: &mut Self::Adj,
+    );
+
+    /// Drive a whole contiguous step list (FSAL-aware where applicable).
+    /// Returns the final state.
+    fn integrate(
+        &self,
+        rhs: &dyn OdeRhs,
+        steps: &[(f64, f64)],
+        u0: &[f32],
+        sink: StepSink,
+    ) -> Vec<f32>;
+
+    /// PI-controlled adaptive pass generating the grid as it goes; `sink`
+    /// fires on accepted steps only.  `None` if the scheme has no embedded
+    /// error estimate.
+    #[allow(clippy::too_many_arguments)]
+    fn integrate_adaptive(
+        &self,
+        rhs: &dyn OdeRhs,
+        t0: f64,
+        tf: f64,
+        atol: f64,
+        rtol: f64,
+        h0: f64,
+        u0: &[f32],
+        sink: StepSink,
+    ) -> Option<AdaptiveResult>;
+}
+
+/// Explicit Runge–Kutta stepping over a Butcher tableau.
+#[derive(Clone, Copy, Debug)]
+pub struct ErkStep<'t> {
+    pub tab: &'t Tableau,
+}
+
+impl StepScheme for ErkStep<'_> {
+    type Fwd = ErkWorkspace;
+    type Adj = AdjointErkWorkspace;
+
+    fn name(&self) -> &'static str {
+        self.tab.name
+    }
+
+    fn n_stages(&self) -> usize {
+        self.tab.s
+    }
+
+    fn fwd_workspace(&self, n: usize) -> ErkWorkspace {
+        ErkWorkspace::new(n)
+    }
+
+    fn adj_workspace(&self, n: usize) -> AdjointErkWorkspace {
+        AdjointErkWorkspace::new(self.tab.s, n)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &self,
+        rhs: &dyn OdeRhs,
+        t: f64,
+        h: f64,
+        u: &[f32],
+        ks: &mut [Vec<f32>],
+        u_next: &mut [f32],
+        ws: &mut ErkWorkspace,
+    ) {
+        erk_step(self.tab, rhs, t, h, u, ks, u_next, ws, None);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn adjoint_step(
+        &self,
+        rhs: &dyn OdeRhs,
+        t: f64,
+        h: f64,
+        u: &[f32],
+        ks: &[Vec<f32>],
+        _u_next: &[f32],
+        lambda: &mut [f32],
+        grad_theta: &mut [f32],
+        ws: &mut AdjointErkWorkspace,
+    ) {
+        adjoint_erk_step(self.tab, rhs, t, h, u, ks, lambda, grad_theta, ws);
+    }
+
+    fn integrate(
+        &self,
+        rhs: &dyn OdeRhs,
+        steps: &[(f64, f64)],
+        u0: &[f32],
+        sink: StepSink,
+    ) -> Vec<f32> {
+        integrate_grid(self.tab, rhs, steps, u0, sink)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn integrate_adaptive(
+        &self,
+        rhs: &dyn OdeRhs,
+        t0: f64,
+        tf: f64,
+        atol: f64,
+        rtol: f64,
+        h0: f64,
+        u0: &[f32],
+        sink: StepSink,
+    ) -> Option<AdaptiveResult> {
+        if self.tab.b_err.is_none() {
+            return None;
+        }
+        let ctrl = AdaptiveController::for_tableau(self.tab, atol, rtol);
+        Some(integrate_adaptive(self.tab, rhs, t0, tf, h0, &ctrl, u0, sink))
+    }
+}
+
+/// Implicit θ-method stepping (backward Euler θ=1, Crank–Nicolson θ=½)
+/// with Newton–GMRES forward steps and transposed-GMRES adjoint steps.
+#[derive(Clone, Debug)]
+pub struct ThetaStep {
+    pub scheme: ThetaScheme,
+    /// options for the transposed adjoint solves
+    pub gmres_opts: GmresOptions,
+}
+
+impl ThetaStep {
+    pub fn new(scheme: ThetaScheme) -> Self {
+        ThetaStep { scheme, gmres_opts: GmresOptions::default() }
+    }
+}
+
+impl StepScheme for ThetaStep {
+    type Fwd = ImplicitStepper;
+    type Adj = ();
+
+    fn name(&self) -> &'static str {
+        self.scheme.name
+    }
+
+    fn n_stages(&self) -> usize {
+        0
+    }
+
+    fn fwd_workspace(&self, n: usize) -> ImplicitStepper {
+        ImplicitStepper::new(self.scheme, n)
+    }
+
+    fn adj_workspace(&self, _n: usize) {}
+
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &self,
+        rhs: &dyn OdeRhs,
+        t: f64,
+        h: f64,
+        u: &[f32],
+        _ks: &mut [Vec<f32>],
+        u_next: &mut [f32],
+        ws: &mut ImplicitStepper,
+    ) {
+        ws.step(rhs, t, h, u, u_next);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn adjoint_step(
+        &self,
+        rhs: &dyn OdeRhs,
+        t: f64,
+        h: f64,
+        u: &[f32],
+        _ks: &[Vec<f32>],
+        u_next: &[f32],
+        lambda: &mut [f32],
+        grad_theta: &mut [f32],
+        _ws: &mut (),
+    ) {
+        // A stalled transposed solve is diagnosed but not fatal: the
+        // stiff task's λ-jump ranges tolerate occasional stalls by design
+        // (the old driver only asserted on its direct backward path), and
+        // the solve warm-starts from λ, so a stall leaves λ at the best
+        // available iterate.
+        let res = adjoint_theta_step(
+            self.scheme,
+            rhs,
+            t,
+            h,
+            u,
+            u_next,
+            lambda,
+            grad_theta,
+            &self.gmres_opts,
+        );
+        if cfg!(debug_assertions) && !res.converged {
+            eprintln!(
+                "warning: transposed {} solve stalled at t = {t:.6e} (h = {h:.3e})",
+                self.scheme.name
+            );
+        }
+    }
+
+    fn integrate(
+        &self,
+        rhs: &dyn OdeRhs,
+        steps: &[(f64, f64)],
+        u0: &[f32],
+        sink: StepSink,
+    ) -> Vec<f32> {
+        let n = u0.len();
+        let mut stepper = ImplicitStepper::new(self.scheme, n);
+        let mut u = u0.to_vec();
+        let mut u_next = vec![0.0f32; n];
+        for (step, &(t, h)) in steps.iter().enumerate() {
+            stepper.step(rhs, t, h, &u, &mut u_next);
+            sink(step, t, h, &u, &[], &u_next);
+            std::mem::swap(&mut u, &mut u_next);
+        }
+        u
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn integrate_adaptive(
+        &self,
+        _rhs: &dyn OdeRhs,
+        _t0: f64,
+        _tf: f64,
+        _atol: f64,
+        _rtol: f64,
+        _h0: f64,
+        _u0: &[f32],
+        _sink: StepSink,
+    ) -> Option<AdaptiveResult> {
+        None // θ-methods carry no embedded error estimate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::grid::uniform_steps;
+    use crate::ode::implicit::integrate_implicit_grid;
+    use crate::ode::rhs::LinearRhs;
+    use crate::ode::tableau;
+
+    #[test]
+    fn erk_scheme_integrate_matches_free_function() {
+        let rhs = LinearRhs::new(2, vec![0.0, 1.0, -1.0, 0.0]);
+        let scheme = ErkStep { tab: &tableau::RK4 };
+        let steps = uniform_steps(0.0, 1.0, 8);
+        let u0 = [1.0f32, 0.0];
+        let a = scheme.integrate(&rhs, &steps, &u0, &mut |_, _, _, _, _, _| {});
+        let b = integrate_grid(&tableau::RK4, &rhs, &steps, &u0, |_, _, _, _, _, _| {});
+        assert_eq!(a, b);
+        assert!(scheme.needs_stages() && scheme.n_stages() == 4);
+    }
+
+    #[test]
+    fn theta_scheme_integrate_matches_implicit_grid() {
+        let rhs = LinearRhs::new(1, vec![-2.0]);
+        let scheme = ThetaStep::new(ThetaScheme::crank_nicolson());
+        let ts: Vec<f64> = vec![0.0, 0.2, 0.5, 1.0];
+        let steps: Vec<(f64, f64)> = ts.windows(2).map(|w| (w[0], w[1] - w[0])).collect();
+        let u0 = [1.0f32];
+        let mut seen = 0usize;
+        let a = scheme.integrate(&rhs, &steps, &u0, &mut |_, _, _, _, ks, _| {
+            assert!(ks.is_empty(), "implicit steps record no stages");
+            seen += 1;
+        });
+        let b = integrate_implicit_grid(
+            ThetaScheme::crank_nicolson(),
+            &rhs,
+            &ts,
+            &u0,
+            |_, _, _, _, _| {},
+        );
+        assert_eq!(a, b);
+        assert_eq!(seen, steps.len());
+        assert!(!scheme.needs_stages());
+        assert!(scheme
+            .integrate_adaptive(&rhs, 0.0, 1.0, 1e-6, 1e-6, 0.1, &u0, &mut |_, _, _, _, _, _| {})
+            .is_none());
+    }
+}

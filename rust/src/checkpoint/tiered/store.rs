@@ -247,7 +247,7 @@ impl CheckpointBackend for TieredStore {
 
     fn clear(&mut self) {
         // a cleared store starts a fresh run: counters and peaks reset so
-        // reused runs (ErkAdjointRun::forward calls clear first) report
+        // reused runs (AdjointDriver::forward calls clear first) report
         // per-run numbers, not lifetime totals
         self.stop_prefetcher();
         self.hot.clear();

@@ -32,6 +32,14 @@ pub struct ExperimentRow {
     pub prefetch_hits: u64,
     /// cold lookups that fell back to synchronous reads
     pub cold_reads: u64,
+    /// executed (accepted) steps of the forward pass
+    pub n_accepted: u64,
+    /// rejected adaptive trials (0 for static grids)
+    pub n_rejected: u64,
+    /// smallest executed step size
+    pub h_min: f64,
+    /// largest executed step size
+    pub h_max: f64,
     pub extra: Vec<(String, String)>,
 }
 
@@ -62,6 +70,10 @@ impl ExperimentRow {
             spill_count: report.tier.spills,
             prefetch_hits: report.tier.prefetch_hits,
             cold_reads: report.tier.cold_reads,
+            n_accepted: report.n_accepted,
+            n_rejected: report.n_rejected,
+            h_min: report.h_min,
+            h_max: report.h_max,
             extra: Vec::new(),
         }
     }
@@ -86,6 +98,10 @@ impl ExperimentRow {
             ("spill_count".to_string(), Json::num(self.spill_count as f64)),
             ("prefetch_hits".to_string(), Json::num(self.prefetch_hits as f64)),
             ("cold_reads".to_string(), Json::num(self.cold_reads as f64)),
+            ("n_accepted".to_string(), Json::num(self.n_accepted as f64)),
+            ("n_rejected".to_string(), Json::num(self.n_rejected as f64)),
+            ("h_min".to_string(), Json::num(self.h_min)),
+            ("h_max".to_string(), Json::num(self.h_max)),
         ];
         for (k, v) in &self.extra {
             kv.push((k.clone(), Json::str(v.clone())));
@@ -155,18 +171,28 @@ mod tests {
     #[test]
     fn runner_collects_and_serializes() {
         let mut r = Runner::new("unit_test");
-        r.run_job("ds", "pnode", "rk4", 10, 123, || MethodReport {
-            nfe_forward: 40,
-            nfe_backward: 40,
-            ..Default::default()
+        r.run_job("ds", "pnode", "rk4", 10, 123, || {
+            let mut rep = MethodReport {
+                nfe_forward: 40,
+                nfe_backward: 40,
+                ..Default::default()
+            };
+            rep.note_grid(&[(0.0, 0.25), (0.25, 0.75)], 3);
+            rep
         });
         assert_eq!(r.rows.len(), 1);
         assert_eq!(r.rows[0].nfe_forward, 40);
+        assert_eq!(r.rows[0].n_accepted, 2);
+        assert_eq!(r.rows[0].n_rejected, 3);
+        assert_eq!(r.rows[0].h_min, 0.25);
+        assert_eq!(r.rows[0].h_max, 0.75);
         let j = r.rows[0].to_json().to_string_compact();
         assert!(j.contains("\"pnode\""));
         assert!(j.contains("\"nt\":10"));
         assert!(j.contains("\"spill_count\""), "tier columns serialized: {j}");
         assert!(j.contains("\"prefetch_hits\""));
         assert!(j.contains("\"ckpt_cold_bytes\""));
+        assert!(j.contains("\"n_rejected\":3"), "grid columns serialized: {j}");
+        assert!(j.contains("\"h_max\":0.75"));
     }
 }

@@ -3,7 +3,9 @@
 //! Subcommands:
 //!   info                      — artifact/platform info
 //!   gradcheck                 — XLA-vs-Rust cross-check on quick_d8
-//!   train-clf [--method ...]  — classification training (spiral surrogate)
+//!   train-clf [--method ...]  — classification training (spiral surrogate);
+//!                               `--grid adaptive:1e-6` switches the ODE
+//!                               blocks to PI-controlled Dopri5 stepping
 //!   train-stiff [--scheme cn] — stiff Robertson training
 //!   bench <table2|prop2>      — analytic tables (full benches live in
 //!                               `cargo bench` targets)
@@ -113,6 +115,9 @@ fn cmd_train_clf(args: &Args) -> Result<()> {
     let method_name = args.get_or("method", "pnode").to_string();
     let scheme = Scheme::parse(args.get_or("scheme", "dopri5")).expect("unknown scheme");
     let nt = args.get_usize("nt", 4);
+    // --grid uniform | uniform:<nt> | adaptive:<atol>[:<rtol>[:<h0>]]
+    let grid = pnode::ode::grid::TimeGrid::parse(args.get_or("grid", "uniform"), nt)
+        .unwrap_or_else(|e| panic!("--grid: {e}"));
     let steps = args.get_usize("steps", 100);
     let n_blocks = args.get_usize("blocks", 4);
     let seed = args.get_u64("seed", 42);
@@ -125,10 +130,11 @@ fn cmd_train_clf(args: &Args) -> Result<()> {
     let per_block = pnode::nn::param_count(&dims);
     let dims_init = dims.clone();
 
+    let grid_name = grid.name();
     let mut task = ClassificationTask::new(
         &mut rng,
         n_blocks,
-        BlockSpec { scheme, t0: 0.0, tf: 1.0, nt },
+        BlockSpec { scheme, t0: 0.0, tf: 1.0, grid },
         per_block,
         D,
         10,
@@ -136,10 +142,11 @@ fn cmd_train_clf(args: &Args) -> Result<()> {
         || method_by_name(&method_name).expect("unknown method"),
     );
     println!(
-        "classification: {} blocks x {} params = {} total (paper: 199,800)",
+        "classification: {} blocks x {} params = {} total (paper: 199,800), grid {}",
         n_blocks,
         per_block,
-        per_block * n_blocks
+        per_block * n_blocks,
+        grid_name
     );
 
     let mut rhs: Box<dyn OdeRhs> = if use_xla {
@@ -180,8 +187,14 @@ fn cmd_train_clf(args: &Args) -> Result<()> {
         );
         if step % 10 == 0 || step + 1 == steps {
             println!(
-                "step {step:4}  loss {:.4}  acc {:.3}  |g| {:.2e}  nfe {}/{}",
-                res.loss, res.accuracy, gn, res.report.nfe_forward, res.report.nfe_backward
+                "step {step:4}  loss {:.4}  acc {:.3}  |g| {:.2e}  nfe {}/{}  steps {}+{}rej",
+                res.loss,
+                res.accuracy,
+                gn,
+                res.report.nfe_forward,
+                res.report.nfe_backward,
+                res.report.n_accepted,
+                res.report.n_rejected
             );
         }
     }
@@ -249,11 +262,13 @@ fn cmd_train_stiff(args: &Args) -> Result<()> {
         rhs.set_params(&theta);
         if epoch % 20 == 0 || epoch + 1 == epochs {
             println!(
-                "epoch {epoch:4}  MAE {:.5}  |g| {:.2e}  nfe {}/{}{}",
+                "epoch {epoch:4}  MAE {:.5}  |g| {:.2e}  nfe {}/{}  steps {}+{}rej{}",
                 step.loss,
                 gn,
                 step.nfe_forward,
                 step.nfe_backward,
+                step.n_accepted,
+                step.n_rejected,
                 if stats.exploded { "  [EXPLODED]" } else { "" }
             );
         }

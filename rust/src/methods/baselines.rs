@@ -4,11 +4,19 @@
 //! accounted analytically via `activation_bytes_per_eval`, since our
 //! backward passes run VJPs through the AOT artifacts rather than a real
 //! autograd tape.
+//!
+//! All baselines run over the spec's [`TimeGrid`].  For adaptive grids
+//! the forward pass generates the grid with the PI controller (rejected
+//! trials burn forward NFE); recompute-based backward passes (ANODE,
+//! ACA) replay the *frozen accepted grid*, which preserves reverse
+//! accuracy and the method's memory pattern without re-running the
+//! step-size search.
 
-use crate::adjoint::continuous::continuous_adjoint_erk;
+use crate::adjoint::continuous::{continuous_adjoint_erk, continuous_adjoint_erk_grid};
 use crate::adjoint::discrete_erk::{adjoint_erk_step, AdjointErkWorkspace};
 use crate::methods::{BlockSpec, GradientMethod, MethodReport};
-use crate::ode::erk::{erk_step, integrate_fixed, ErkWorkspace};
+use crate::ode::erk::{erk_step, integrate_grid, ErkWorkspace};
+use crate::ode::grid::{integrate_erk_over, TimeGrid};
 use crate::ode::rhs::OdeRhs;
 
 // ---------------------------------------------------------------------------
@@ -17,12 +25,13 @@ use crate::ode::rhs::OdeRhs;
 
 pub struct NodeCont {
     u_final: Vec<f32>,
+    steps: Vec<(f64, f64)>,
     report: MethodReport,
 }
 
 impl NodeCont {
     pub fn new() -> Self {
-        NodeCont { u_final: Vec::new(), report: MethodReport::default() }
+        NodeCont { u_final: Vec::new(), steps: Vec::new(), report: MethodReport::default() }
     }
 }
 
@@ -44,9 +53,13 @@ impl GradientMethod for NodeCont {
     fn forward(&mut self, rhs: &dyn OdeRhs, spec: &BlockSpec, u0: &[f32]) -> Vec<f32> {
         rhs.reset_nfe();
         let tab = spec.scheme.tableau();
-        self.u_final =
-            integrate_fixed(tab, rhs, spec.t0, spec.tf, spec.nt, u0, |_, _, _, _, _, _| {});
+        let run = integrate_erk_over(
+            tab, rhs, spec.t0, spec.tf, &spec.grid, u0, |_, _, _, _, _, _| {},
+        );
+        self.u_final = run.final_state;
+        self.steps = run.steps;
         self.report = MethodReport { nfe_forward: rhs.nfe().forward, ..Default::default() };
+        self.report.note_grid(&self.steps, run.n_rejected);
         self.u_final.clone()
     }
 
@@ -59,9 +72,18 @@ impl GradientMethod for NodeCont {
     ) {
         rhs.reset_nfe();
         let tab = spec.scheme.tableau();
-        continuous_adjoint_erk(
-            tab, rhs, spec.t0, spec.tf, spec.nt, &self.u_final, lambda, grad_theta,
-        );
+        match &spec.grid {
+            // the uniform branch keeps the legacy backward time points
+            // bit-for-bit (t = tf − k·h vs the grid variant's t_n + h_n,
+            // which differ in rounding); nonuniform/adaptive grids retrace
+            // the recorded steps in reverse
+            TimeGrid::Uniform { nt } => continuous_adjoint_erk(
+                tab, rhs, spec.t0, spec.tf, *nt, &self.u_final, lambda, grad_theta,
+            ),
+            _ => continuous_adjoint_erk_grid(
+                tab, rhs, &self.steps, &self.u_final, lambda, grad_theta,
+            ),
+        }
         let nfe = rhs.nfe();
         self.report.nfe_backward = nfe.forward.max(nfe.backward);
         // no checkpoints; graph is one f eval deep
@@ -79,7 +101,7 @@ impl GradientMethod for NodeCont {
 // ---------------------------------------------------------------------------
 
 pub struct NodeNaive {
-    tape: Vec<(f64, Vec<f32>, Vec<Vec<f32>>)>, // (t, u_n, ks) per step
+    tape: Vec<(f64, f64, Vec<f32>, Vec<Vec<f32>>)>, // (t, h, u_n, ks) per step
     report: MethodReport,
 }
 
@@ -109,16 +131,23 @@ impl GradientMethod for NodeNaive {
         self.tape.clear();
         let tab = spec.scheme.tableau();
         let tape = &mut self.tape;
-        let uf = integrate_fixed(tab, rhs, spec.t0, spec.tf, spec.nt, u0, |_, t, _, u, ks, _| {
-            tape.push((t, u.to_vec(), ks.to_vec()));
-        });
-        // graph memory: every stage of every step keeps its activations live
+        let run = integrate_erk_over(
+            tab, rhs, spec.t0, spec.tf, &spec.grid, u0,
+            |_, t, h, u, ks, _| {
+                tape.push((t, h, u.to_vec(), ks.to_vec()));
+            },
+        );
+        // graph memory: every stage of every executed step keeps its
+        // activations live
         self.report = MethodReport {
             nfe_forward: rhs.nfe().forward,
-            graph_bytes: spec.nt as u64 * tab.s as u64 * rhs.activation_bytes_per_eval(),
+            graph_bytes: self.tape.len() as u64
+                * tab.s as u64
+                * rhs.activation_bytes_per_eval(),
             ..Default::default()
         };
-        uf
+        self.report.note_grid(&run.steps, run.n_rejected);
+        run.final_state
     }
 
     fn backward(
@@ -132,8 +161,8 @@ impl GradientMethod for NodeNaive {
         let tab = spec.scheme.tableau();
         let n = lambda.len();
         let mut aws = AdjointErkWorkspace::new(tab.s, n);
-        for (t, u, ks) in self.tape.iter().rev() {
-            adjoint_erk_step(tab, rhs, *t, (spec.tf - spec.t0) / spec.nt as f64, u, ks, lambda, grad_theta, &mut aws);
+        for (t, h, u, ks) in self.tape.iter().rev() {
+            adjoint_erk_step(tab, rhs, *t, *h, u, ks, lambda, grad_theta, &mut aws);
         }
         // paper semantics: backprop through the stored graph costs no f
         // re-evaluations -> NFE-B = 0
@@ -141,7 +170,7 @@ impl GradientMethod for NodeNaive {
         self.report.ckpt_bytes = self
             .tape
             .iter()
-            .map(|(_, u, ks)| ((u.len() + ks.iter().map(|k| k.len()).sum::<usize>()) * 4) as u64)
+            .map(|(_, _, u, ks)| ((u.len() + ks.iter().map(|k| k.len()).sum::<usize>()) * 4) as u64)
             .sum();
     }
 
@@ -157,12 +186,13 @@ impl GradientMethod for NodeNaive {
 
 pub struct Anode {
     u0: Vec<f32>,
+    steps: Vec<(f64, f64)>,
     report: MethodReport,
 }
 
 impl Anode {
     pub fn new() -> Self {
-        Anode { u0: Vec::new(), report: MethodReport::default() }
+        Anode { u0: Vec::new(), steps: Vec::new(), report: MethodReport::default() }
     }
 }
 
@@ -185,13 +215,17 @@ impl GradientMethod for Anode {
         rhs.reset_nfe();
         self.u0 = u0.to_vec(); // the only checkpoint: the block input
         let tab = spec.scheme.tableau();
-        let uf = integrate_fixed(tab, rhs, spec.t0, spec.tf, spec.nt, u0, |_, _, _, _, _, _| {});
+        let run = integrate_erk_over(
+            tab, rhs, spec.t0, spec.tf, &spec.grid, u0, |_, _, _, _, _, _| {},
+        );
+        self.steps = run.steps;
         self.report = MethodReport {
             nfe_forward: rhs.nfe().forward,
             ckpt_bytes: (u0.len() * 4) as u64,
             ..Default::default()
         };
-        uf
+        self.report.note_grid(&self.steps, run.n_rejected);
+        run.final_state
     }
 
     fn backward(
@@ -204,25 +238,25 @@ impl GradientMethod for Anode {
         rhs.reset_nfe();
         let tab = spec.scheme.tableau();
         let n = lambda.len();
-        // recompute the whole block, storing the full tape
-        let mut tape: Vec<(f64, Vec<f32>, Vec<Vec<f32>>)> = Vec::with_capacity(spec.nt);
-        integrate_fixed(tab, rhs, spec.t0, spec.tf, spec.nt, &self.u0, |_, t, _, u, ks, _| {
-            tape.push((t, u.to_vec(), ks.to_vec()));
+        let nt = self.steps.len();
+        // recompute the whole block over the frozen grid, storing the tape
+        let mut tape: Vec<(f64, f64, Vec<f32>, Vec<Vec<f32>>)> = Vec::with_capacity(nt);
+        integrate_grid(tab, rhs, &self.steps, &self.u0, |_, t, h, u, ks, _| {
+            tape.push((t, h, u.to_vec(), ks.to_vec()));
         });
         let recompute_evals = rhs.nfe().forward;
         let mut aws = AdjointErkWorkspace::new(tab.s, n);
-        let h = (spec.tf - spec.t0) / spec.nt as f64;
-        for (t, u, ks) in tape.iter().rev() {
-            adjoint_erk_step(tab, rhs, *t, h, u, ks, lambda, grad_theta, &mut aws);
+        for (t, h, u, ks) in tape.iter().rev() {
+            adjoint_erk_step(tab, rhs, *t, *h, u, ks, lambda, grad_theta, &mut aws);
         }
         self.report.nfe_backward = recompute_evals; // the recompute is the cost
-        self.report.recompute_steps = spec.nt as u64;
+        self.report.recompute_steps = nt as u64;
         // tape lives during backward: graph = N_t * N_s activations
         self.report.graph_bytes =
-            spec.nt as u64 * tab.s as u64 * rhs.activation_bytes_per_eval();
+            nt as u64 * tab.s as u64 * rhs.activation_bytes_per_eval();
         self.report.ckpt_bytes += tape
             .iter()
-            .map(|(_, u, ks)| ((u.len() + ks.iter().map(|k| k.len()).sum::<usize>()) * 4) as u64)
+            .map(|(_, _, u, ks)| ((u.len() + ks.iter().map(|k| k.len()).sum::<usize>()) * 4) as u64)
             .sum::<u64>();
     }
 
@@ -238,12 +272,13 @@ impl GradientMethod for Anode {
 
 pub struct Aca {
     u0: Vec<f32>,
+    steps: Vec<(f64, f64)>,
     report: MethodReport,
 }
 
 impl Aca {
     pub fn new() -> Self {
-        Aca { u0: Vec::new(), report: MethodReport::default() }
+        Aca { u0: Vec::new(), steps: Vec::new(), report: MethodReport::default() }
     }
 }
 
@@ -266,9 +301,13 @@ impl GradientMethod for Aca {
         rhs.reset_nfe();
         self.u0 = u0.to_vec();
         let tab = spec.scheme.tableau();
-        let uf = integrate_fixed(tab, rhs, spec.t0, spec.tf, spec.nt, u0, |_, _, _, _, _, _| {});
+        let run = integrate_erk_over(
+            tab, rhs, spec.t0, spec.tf, &spec.grid, u0, |_, _, _, _, _, _| {},
+        );
+        self.steps = run.steps;
         self.report = MethodReport { nfe_forward: rhs.nfe().forward, ..Default::default() };
-        uf
+        self.report.note_grid(&self.steps, run.n_rejected);
+        run.final_state
     }
 
     fn backward(
@@ -281,26 +320,28 @@ impl GradientMethod for Aca {
         rhs.reset_nfe();
         let tab = spec.scheme.tableau();
         let n = lambda.len();
-        let h = (spec.tf - spec.t0) / spec.nt as f64;
-        // ACA's extra forward pass: store the solution at every step
-        let mut solutions: Vec<(f64, Vec<f32>)> = Vec::with_capacity(spec.nt);
-        integrate_fixed(tab, rhs, spec.t0, spec.tf, spec.nt, &self.u0, |_, t, _, u, _, _| {
-            solutions.push((t, u.to_vec()));
+        let nt = self.steps.len();
+        // ACA's extra forward pass over the accepted grid: store the
+        // solution at every step (this is exactly ACA's trick — the
+        // step-size search is not repeated)
+        let mut solutions: Vec<(f64, f64, Vec<f32>)> = Vec::with_capacity(nt);
+        integrate_grid(tab, rhs, &self.steps, &self.u0, |_, t, h, u, _, _| {
+            solutions.push((t, h, u.to_vec()));
         });
         // per-step: recompute the local graph (the step's stages), backprop it
         let mut aws = AdjointErkWorkspace::new(tab.s, n);
         let mut ews = ErkWorkspace::new(n);
         let mut ks: Vec<Vec<f32>> = (0..tab.s).map(|_| vec![0.0f32; n]).collect();
         let mut un = vec![0.0f32; n];
-        for (t, u) in solutions.iter().rev() {
-            erk_step(tab, rhs, *t, h, u, &mut ks, &mut un, &mut ews, None);
-            adjoint_erk_step(tab, rhs, *t, h, u, &ks, lambda, grad_theta, &mut aws);
+        for (t, h, u) in solutions.iter().rev() {
+            erk_step(tab, rhs, *t, *h, u, &mut ks, &mut un, &mut ews, None);
+            adjoint_erk_step(tab, rhs, *t, *h, u, &ks, lambda, grad_theta, &mut aws);
         }
         // NFE-B: extra forward + per-step recompute (≈ 2 N_t N_s, paper §4)
         self.report.nfe_backward = rhs.nfe().forward;
-        self.report.recompute_steps = 2 * spec.nt as u64;
+        self.report.recompute_steps = 2 * nt as u64;
         self.report.ckpt_bytes =
-            solutions.iter().map(|(_, u)| (u.len() * 4) as u64).sum::<u64>();
+            solutions.iter().map(|(_, _, u)| (u.len() * 4) as u64).sum::<u64>();
         // local graph: one step's stages = N_s activations deep
         self.report.graph_bytes = tab.s as u64 * rhs.activation_bytes_per_eval();
     }
@@ -313,8 +354,8 @@ impl GradientMethod for Aca {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::methods::pnode::Pnode;
     use crate::checkpoint::CheckpointPolicy;
+    use crate::methods::pnode::Pnode;
     use crate::nn::Act;
     use crate::ode::rhs::MlpRhs;
     use crate::ode::tableau::Scheme;
@@ -363,6 +404,42 @@ mod tests {
             crate::testing::assert_allclose(&g, &g_ref, 1e-6, 1e-7, m.name());
             assert!(m.reverse_accurate());
         }
+    }
+
+    #[test]
+    fn reverse_accurate_methods_agree_under_adaptive_grids() {
+        // all reverse-accurate methods differentiate the same accepted
+        // discrete map, so they agree on adaptive grids too
+        let rhs = mk_rhs(171);
+        let spec = BlockSpec::adaptive(Scheme::Dopri5, 1e-5);
+        let mut rng = Rng::new(172);
+        let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
+        let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
+
+        let mut pnode = Pnode::new(CheckpointPolicy::All);
+        let (l_ref, g_ref) = grad_of(&mut pnode, &rhs, &spec, &u0, &w);
+        let r_ref = pnode.report();
+        assert!(r_ref.n_accepted > 1, "{r_ref:?}");
+
+        for mut m in [
+            Box::new(NodeNaive::new()) as Box<dyn GradientMethod>,
+            Box::new(Anode::new()),
+            Box::new(Aca::new()),
+        ] {
+            let (l, g) = grad_of(m.as_mut(), &rhs, &spec, &u0, &w);
+            crate::testing::assert_allclose(&l, &l_ref, 1e-6, 1e-7, m.name());
+            crate::testing::assert_allclose(&g, &g_ref, 1e-6, 1e-7, m.name());
+            let r = m.report();
+            assert_eq!(r.n_accepted, r_ref.n_accepted, "{}: same accepted grid", m.name());
+            assert_eq!(r.n_rejected, r_ref.n_rejected, "{}", m.name());
+        }
+
+        // the continuous adjoint retraces the accepted grid in reverse:
+        // close, but not reverse-accurate
+        let mut cont = NodeCont::new();
+        let (l_cont, _) = grad_of(&mut cont, &rhs, &spec, &u0, &w);
+        let err = crate::testing::rel_l2(&l_cont, &l_ref);
+        assert!(err < 0.2, "continuous adjoint should be close: {err}");
     }
 
     #[test]

@@ -13,21 +13,37 @@ pub use memmodel::MemModel;
 pub use pnode::Pnode;
 
 use crate::checkpoint::{CheckpointPolicy, TierStats};
+use crate::ode::grid::TimeGrid;
 use crate::ode::rhs::OdeRhs;
 use crate::ode::tableau::Scheme;
 
-/// Integration window of one ODE block.
-#[derive(Clone, Copy, Debug)]
+/// Integration window of one ODE block: scheme + `[t0, tf]` + the time
+/// grid (uniform, explicit nonuniform, or adaptive — see [`TimeGrid`]).
+#[derive(Clone, Debug)]
 pub struct BlockSpec {
     pub scheme: Scheme,
     pub t0: f64,
     pub tf: f64,
-    pub nt: usize,
+    pub grid: TimeGrid,
 }
 
 impl BlockSpec {
+    /// Uniform grid with `nt` steps over `[0, 1]`.
     pub fn new(scheme: Scheme, nt: usize) -> Self {
-        BlockSpec { scheme, t0: 0.0, tf: 1.0, nt }
+        BlockSpec { scheme, t0: 0.0, tf: 1.0, grid: TimeGrid::Uniform { nt } }
+    }
+
+    /// Adaptive grid with `atol = rtol = tol` over `[0, 1]`.
+    pub fn adaptive(scheme: Scheme, tol: f64) -> Self {
+        BlockSpec { scheme, t0: 0.0, tf: 1.0, grid: TimeGrid::adaptive(tol) }
+    }
+
+    /// Planned step count.  Panics for adaptive grids (the count is only
+    /// known once a forward pass has run — see `MethodReport::n_accepted`).
+    pub fn nt(&self) -> usize {
+        self.grid
+            .planned_nt()
+            .expect("adaptive grids have no planned step count; read MethodReport::n_accepted")
     }
 }
 
@@ -46,6 +62,15 @@ pub struct MethodReport {
     pub ckpt_bytes: u64,
     /// modeled AD-graph residency (tape emulation, Table-2 semantics)
     pub graph_bytes: u64,
+    /// executed (accepted) steps of the forward pass
+    pub n_accepted: u64,
+    /// rejected adaptive trials (0 for static grids); these cost forward
+    /// NFE but contribute zero backward NFE and zero checkpoint bytes
+    pub n_rejected: u64,
+    /// smallest executed step size
+    pub h_min: f64,
+    /// largest executed step size
+    pub h_max: f64,
     /// storage-tier counters (hot/cold bytes, spills, prefetch hits);
     /// zeros beyond the hot fields for purely in-memory checkpointing
     pub tier: TierStats,
@@ -54,6 +79,34 @@ pub struct MethodReport {
 impl MethodReport {
     pub fn total_model_bytes(&self) -> u64 {
         self.ckpt_bytes + self.graph_bytes
+    }
+
+    /// Record the executed grid (accepted steps + rejected trial count).
+    pub fn note_grid(&mut self, steps: &[(f64, f64)], n_rejected: usize) {
+        self.n_accepted = steps.len() as u64;
+        self.n_rejected = n_rejected as u64;
+        self.h_min = if steps.is_empty() {
+            0.0
+        } else {
+            steps.iter().map(|s| s.1).fold(f64::INFINITY, f64::min)
+        };
+        self.h_max = steps.iter().map(|s| s.1).fold(0.0, f64::max);
+    }
+
+    /// Fold another block's grid stats into this aggregate (multi-block
+    /// tasks): step counts accumulate, step-size extremes widen.  `h_min
+    /// == 0.0` is the "no steps recorded" sentinel on both sides.
+    pub fn merge_grid(&mut self, other: &MethodReport) {
+        self.n_accepted += other.n_accepted;
+        self.n_rejected += other.n_rejected;
+        self.h_max = self.h_max.max(other.h_max);
+        self.h_min = if self.h_min == 0.0 {
+            other.h_min
+        } else if other.h_min == 0.0 {
+            self.h_min
+        } else {
+            self.h_min.min(other.h_min)
+        };
     }
 }
 

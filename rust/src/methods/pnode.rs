@@ -1,22 +1,30 @@
 //! PNODE: high-level discrete adjoint with checkpointing (the paper's
 //! contribution).  `CheckpointPolicy::All` is the paper's default "PNODE"
 //! configuration; `SolutionOnly` is "PNODE2"; `Binomial{n}` exposes the
-//! full memory/compute trade-off of Prop. 2.
+//! full memory/compute trade-off of Prop. 2.  Runs on any [`TimeGrid`]
+//! the spec carries — including adaptive Dopri5, where gradients are
+//! reverse-accurate with respect to the accepted discrete map.
 
-use crate::adjoint::driver::ErkAdjointRun;
+use crate::adjoint::driver::ErkDriver;
 use crate::checkpoint::CheckpointPolicy;
 use crate::methods::{BlockSpec, GradientMethod, MethodReport};
 use crate::ode::rhs::OdeRhs;
 
 pub struct Pnode {
     pub policy: CheckpointPolicy,
-    run: Option<ErkAdjointRun<'static>>,
+    run: Option<ErkDriver<'static>>,
     report: MethodReport,
 }
 
 impl Pnode {
     pub fn new(policy: CheckpointPolicy) -> Self {
         Pnode { policy, run: None, report: MethodReport::default() }
+    }
+
+    /// The executed (accepted) `(t_n, h_n)` grid of the latest forward
+    /// pass — for adaptive specs, the grid the PI controller generated.
+    pub fn grid_steps(&self) -> Option<&[(f64, f64)]> {
+        self.run.as_ref().map(|r| r.grid_steps())
     }
 }
 
@@ -37,12 +45,14 @@ impl GradientMethod for Pnode {
     fn forward(&mut self, rhs: &dyn OdeRhs, spec: &BlockSpec, u0: &[f32]) -> Vec<f32> {
         rhs.reset_nfe();
         let tab = spec.scheme.tableau();
-        let mut run = ErkAdjointRun::new(tab, self.policy.clone(), spec.t0, spec.tf, spec.nt);
+        let mut run =
+            ErkDriver::erk(tab, self.policy.clone(), spec.t0, spec.tf, spec.grid.clone());
         let uf = run.forward(rhs, u0);
         self.report = MethodReport {
             nfe_forward: rhs.nfe().forward,
             ..MethodReport::default()
         };
+        self.report.note_grid(run.grid_steps(), run.n_rejected());
         self.run = Some(run);
         uf
     }
@@ -70,5 +80,65 @@ impl GradientMethod for Pnode {
 
     fn report(&self) -> MethodReport {
         self.report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::grid::TimeGrid;
+    use crate::ode::rhs::LinearRhs;
+    use crate::ode::tableau::Scheme;
+
+    /// The paper's §4 claim, asserted via MethodReport: rejected adaptive
+    /// trials count toward forward NFE but contribute zero backward NFE
+    /// and zero checkpoint bytes.
+    #[test]
+    fn rejected_steps_cost_forward_nfe_only() {
+        // a stiff axis plus a generous trial step guarantees rejections
+        let rhs = LinearRhs::new(2, vec![-40.0, 0.0, 0.0, -1.0]);
+        let u0 = vec![1.0f32, 1.0];
+        let w = vec![1.0f32, 1.0];
+
+        let report_of = |spec: &BlockSpec| -> (MethodReport, Option<Vec<(f64, f64)>>) {
+            let mut m = Pnode::new(CheckpointPolicy::All);
+            m.forward(&rhs, spec, &u0);
+            let mut l = w.clone();
+            let mut g = vec![0.0f32; rhs.param_len()];
+            m.backward(&rhs, spec, &mut l, &mut g);
+            let steps = m.grid_steps().map(|s| s.to_vec());
+            (m.report(), steps)
+        };
+
+        let ada_spec = BlockSpec {
+            scheme: Scheme::Dopri5,
+            t0: 0.0,
+            tf: 1.0,
+            grid: TimeGrid::Adaptive { atol: 1e-6, rtol: 1e-6, h0: Some(0.5) },
+        };
+        let (r_ada, steps) = report_of(&ada_spec);
+        let steps = steps.expect("forward recorded the accepted grid");
+        assert!(r_ada.n_rejected > 0, "expected rejected trials: {r_ada:?}");
+        assert_eq!(r_ada.n_accepted as usize, steps.len());
+        assert!(r_ada.h_min > 0.0 && r_ada.h_max >= r_ada.h_min, "{r_ada:?}");
+
+        // the same accepted grid replayed as an explicit spec: identical
+        // backward NFE and checkpoint bytes, strictly fewer forward NFE
+        let ex_spec = BlockSpec {
+            scheme: Scheme::Dopri5,
+            t0: 0.0,
+            tf: 1.0,
+            grid: TimeGrid::Explicit(steps),
+        };
+        let (r_ex, _) = report_of(&ex_spec);
+        assert_eq!(r_ex.n_rejected, 0);
+        assert_eq!(r_ada.nfe_backward, r_ex.nfe_backward, "zero backward NFE from rejects");
+        assert_eq!(r_ada.ckpt_bytes, r_ex.ckpt_bytes, "zero checkpoint bytes from rejects");
+        assert!(
+            r_ada.nfe_forward > r_ex.nfe_forward,
+            "rejects cost forward NFE: {} vs {}",
+            r_ada.nfe_forward,
+            r_ex.nfe_forward
+        );
     }
 }

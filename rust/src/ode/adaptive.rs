@@ -10,7 +10,10 @@ use crate::ode::rhs::OdeRhs;
 use crate::ode::tableau::Tableau;
 use crate::tensor;
 
-/// PI step-size controller.
+/// PI step-size controller.  Construct with [`AdaptiveController::for_tableau`]
+/// (or [`for_order`](AdaptiveController::for_order)): the PI exponents are
+/// derived from the method order at construction, so the controller is
+/// always fully specified.
 #[derive(Clone, Debug)]
 pub struct AdaptiveController {
     pub atol: f64,
@@ -18,24 +21,36 @@ pub struct AdaptiveController {
     pub safety: f64,
     pub min_factor: f64,
     pub max_factor: f64,
-    /// PI exponents (set from the method order at run time)
+    /// PI exponents (derived from the method order at construction)
     pub alpha: f64,
     pub beta: f64,
+    /// method order (drives the rejection shrink factor)
+    pub order: f64,
     pub max_steps: usize,
 }
 
 impl AdaptiveController {
-    pub fn new(atol: f64, rtol: f64) -> Self {
+    /// Controller for an embedded pair of the given `order`:
+    /// `alpha = 0.7 / p`, `beta = 0.04 / p` (Gustafsson-style PI control).
+    pub fn for_order(order: usize, atol: f64, rtol: f64) -> Self {
+        assert!(order >= 1, "method order must be at least 1");
+        let p = order as f64;
         AdaptiveController {
             atol,
             rtol,
             safety: 0.9,
             min_factor: 0.2,
             max_factor: 10.0,
-            alpha: 0.0, // filled per-order
-            beta: 0.04,
+            alpha: 0.7 / p,
+            beta: 0.04 / p,
+            order: p,
             max_steps: 100_000,
         }
+    }
+
+    /// Controller with PI exponents derived from `tab.order`.
+    pub fn for_tableau(tab: &Tableau, atol: f64, rtol: f64) -> Self {
+        Self::for_order(tab.order, atol, rtol)
     }
 }
 
@@ -64,10 +79,12 @@ where
     F: FnMut(usize, f64, f64, &[f32], &[Vec<f32>], &[f32]),
 {
     assert!(tab.b_err.is_some(), "{} has no embedded pair", tab.name);
+    debug_assert!(
+        ctrl.alpha > 0.0 && ctrl.order >= 1.0,
+        "controller must be built via AdaptiveController::for_tableau/for_order"
+    );
     let n = u0.len();
-    let order = tab.order as f64;
-    let alpha = if ctrl.alpha > 0.0 { ctrl.alpha } else { 0.7 / order };
-    let beta = ctrl.beta / order;
+    let (alpha, beta) = (ctrl.alpha, ctrl.beta);
 
     let mut u = u0.to_vec();
     let mut u_next = vec![0.0f32; n];
@@ -120,7 +137,7 @@ where
             // since u didn't change, but keep it simple and correct)
             rejected += 1;
             fsal = None;
-            let factor = ctrl.safety * err_norm.powf(-1.0 / order);
+            let factor = ctrl.safety * err_norm.powf(-1.0 / ctrl.order);
             h *= factor.clamp(ctrl.min_factor, 1.0);
         }
     }
@@ -135,9 +152,19 @@ mod tests {
     use crate::ode::tableau;
 
     #[test]
+    fn pi_exponents_derive_from_order() {
+        let c = AdaptiveController::for_tableau(&tableau::DOPRI5, 1e-6, 1e-6);
+        assert!((c.alpha - 0.7 / 5.0).abs() < 1e-12);
+        assert!((c.beta - 0.04 / 5.0).abs() < 1e-12);
+        assert_eq!(c.order, 5.0);
+        let c3 = AdaptiveController::for_tableau(&tableau::BOSH3, 1e-6, 1e-6);
+        assert!(c3.alpha > c.alpha, "lower order => larger exponent");
+    }
+
+    #[test]
     fn adaptive_dopri5_hits_tolerance() {
         let rhs = LinearRhs::new(2, vec![0.0, 1.0, -1.0, 0.0]);
-        let ctrl = AdaptiveController::new(1e-8, 1e-8);
+        let ctrl = AdaptiveController::for_tableau(&tableau::DOPRI5, 1e-8, 1e-8);
         let res = integrate_adaptive(
             &tableau::DOPRI5,
             &rhs,
@@ -166,7 +193,7 @@ mod tests {
             0.0,
             5.0,
             0.5,
-            &AdaptiveController::new(1e-3, 1e-3),
+            &AdaptiveController::for_tableau(&tableau::DOPRI5, 1e-3, 1e-3),
             &[1.0, 0.0],
             |_, _, _, _, _, _| {},
         );
@@ -176,7 +203,7 @@ mod tests {
             0.0,
             5.0,
             0.5,
-            &AdaptiveController::new(1e-10, 1e-10),
+            &AdaptiveController::for_tableau(&tableau::DOPRI5, 1e-10, 1e-10),
             &[1.0, 0.0],
             |_, _, _, _, _, _| {},
         );
@@ -193,7 +220,7 @@ mod tests {
             0.0,
             1.0,
             0.5,
-            &AdaptiveController::new(1e-6, 1e-6),
+            &AdaptiveController::for_tableau(&tableau::DOPRI5, 1e-6, 1e-6),
             &[1.0],
             |_, _, _, _, _, _| {},
         );

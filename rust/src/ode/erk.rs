@@ -100,16 +100,15 @@ pub fn error_estimate(tab: &Tableau, h: f64, ks: &[Vec<f32>], out: &mut [f32]) {
     }
 }
 
-/// Integrate with fixed steps from `t0` to `tf` in `nt` steps, calling
-/// `sink` after every step with `(step_index, t_n, h, u_n, ks, u_{n+1})`.
-/// Returns the final state.
-#[allow(clippy::too_many_arguments)]
-pub fn integrate_fixed<F>(
+/// Integrate over an explicit list of contiguous `(t_n, h_n)` steps,
+/// calling `sink` after every step with `(step_index, t_n, h_n, u_n, ks,
+/// u_{n+1})`.  Returns the final state.  The FSAL cache carries across
+/// steps regardless of step size (FSAL validity only needs `t_{n+1} =
+/// t_n + h_n`, which contiguous grids guarantee).
+pub fn integrate_grid<F>(
     tab: &Tableau,
     rhs: &dyn OdeRhs,
-    t0: f64,
-    tf: f64,
-    nt: usize,
+    steps: &[(f64, f64)],
     u0: &[f32],
     mut sink: F,
 ) -> Vec<f32>
@@ -117,14 +116,23 @@ where
     F: FnMut(usize, f64, f64, &[f32], &[Vec<f32>], &[f32]),
 {
     let n = u0.len();
-    let h = (tf - t0) / nt as f64;
     let mut u = u0.to_vec();
     let mut u_next = vec![0.0f32; n];
     let mut ks: Vec<Vec<f32>> = (0..tab.s).map(|_| vec![0.0f32; n]).collect();
     let mut ws = ErkWorkspace::new(n);
     let mut fsal: Option<Vec<f32>> = None;
-    for step in 0..nt {
-        let t = t0 + step as f64 * h;
+    for (step, &(t, h)) in steps.iter().enumerate() {
+        // contiguity is what makes the FSAL reuse (and the composed map)
+        // valid; a gapped "grid" would silently integrate the wrong ODE
+        debug_assert!(
+            step == 0 || {
+                let (tp, hp) = steps[step - 1];
+                (t - (tp + hp)).abs() <= 1e-12 * (1.0 + t.abs())
+            },
+            "integrate_grid needs contiguous steps: step {step} starts at {t}, \
+             previous step ends at {}",
+            steps[step - 1].0 + steps[step - 1].1
+        );
         erk_step(tab, rhs, t, h, &u, &mut ks, &mut u_next, &mut ws, fsal.as_deref());
         sink(step, t, h, &u, &ks, &u_next);
         if tab.fsal {
@@ -137,6 +145,26 @@ where
         std::mem::swap(&mut u, &mut u_next);
     }
     u
+}
+
+/// Integrate with fixed steps from `t0` to `tf` in `nt` steps, calling
+/// `sink` after every step with `(step_index, t_n, h, u_n, ks, u_{n+1})`.
+/// Returns the final state.
+#[allow(clippy::too_many_arguments)]
+pub fn integrate_fixed<F>(
+    tab: &Tableau,
+    rhs: &dyn OdeRhs,
+    t0: f64,
+    tf: f64,
+    nt: usize,
+    u0: &[f32],
+    sink: F,
+) -> Vec<f32>
+where
+    F: FnMut(usize, f64, f64, &[f32], &[Vec<f32>], &[f32]),
+{
+    let steps = crate::ode::grid::uniform_steps(t0, tf, nt);
+    integrate_grid(tab, rhs, &steps, u0, sink)
 }
 
 #[cfg(test)]
@@ -206,6 +234,28 @@ mod tests {
             rhs.f(t + tab.c[i] * h, &ui, &mut fi);
             crate::testing::assert_allclose(&fi, &ks[i], 1e-6, 1e-7, "stage recon");
         }
+    }
+
+    #[test]
+    fn nonuniform_grid_matches_manual_step_composition() {
+        let rhs = rotation();
+        let tab = &tableau::BOSH3; // FSAL: exercises the cache across sizes
+        let steps = [(0.0, 0.1), (0.1, 0.3), (0.4, 0.25), (0.65, 0.35)];
+        let u0 = vec![0.8f32, -0.4];
+        let via_grid = integrate_grid(tab, &rhs, &steps, &u0, |_, _, _, _, _, _| {});
+
+        let n = 2;
+        let mut u = u0.clone();
+        let mut un = vec![0.0f32; n];
+        let mut ks: Vec<Vec<f32>> = (0..tab.s).map(|_| vec![0.0f32; n]).collect();
+        let mut ws = ErkWorkspace::new(n);
+        let mut fsal: Option<Vec<f32>> = None;
+        for &(t, h) in &steps {
+            erk_step(tab, &rhs, t, h, &u, &mut ks, &mut un, &mut ws, fsal.as_deref());
+            fsal = Some(ks[tab.s - 1].clone());
+            std::mem::swap(&mut u, &mut un);
+        }
+        assert_eq!(via_grid, u, "grid integration is the literal composition");
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! Time grids for the integrators and the adjoint driver.
+//!
+//! A [`TimeGrid`] says how the forward pass obtains its step sequence:
+//! fixed uniform steps, an explicit (possibly nonuniform) list of
+//! `(t_n, h_n)` records, or *adaptive* — the PI controller generates the
+//! grid at run time and only the **accepted** steps are recorded (the
+//! paper's §4 rule: rejected trials cost forward NFE but never enter the
+//! adjoint or the checkpoint store).
+
+use crate::ode::adaptive::{integrate_adaptive, AdaptiveController};
+use crate::ode::erk::integrate_grid;
+use crate::ode::rhs::OdeRhs;
+use crate::ode::tableau::Tableau;
+
+/// How the forward pass obtains its `(t_n, h_n)` step sequence.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TimeGrid {
+    /// `nt` equal steps over `[t0, tf]`.
+    Uniform { nt: usize },
+    /// An explicit list of `(t_n, h_n)` records (e.g. log-spaced
+    /// observation grids, or a frozen accepted grid from a previous
+    /// adaptive run).
+    Explicit(Vec<(f64, f64)>),
+    /// PI-controlled step-size adaptation with an embedded ERK pair.
+    /// `h0 = None` picks `(tf - t0) / 16` as the trial step.
+    Adaptive { atol: f64, rtol: f64, h0: Option<f64> },
+}
+
+impl TimeGrid {
+    pub fn uniform(nt: usize) -> TimeGrid {
+        TimeGrid::Uniform { nt }
+    }
+
+    /// Adaptive grid with `atol = rtol = tol` (the paper's §5.3.2 setup).
+    pub fn adaptive(tol: f64) -> TimeGrid {
+        TimeGrid::Adaptive { atol: tol, rtol: tol, h0: None }
+    }
+
+    /// Explicit grid from a list of time points (`ts` must be strictly
+    /// monotone and have at least two entries).
+    pub fn from_times(ts: &[f64]) -> TimeGrid {
+        assert!(ts.len() >= 2, "a time grid needs at least two points");
+        TimeGrid::Explicit(ts.windows(2).map(|w| (w[0], w[1] - w[0])).collect())
+    }
+
+    /// Parse a grid spec.  Grammar:
+    ///
+    /// ```text
+    /// uniform | uniform:<nt>
+    /// adaptive:<atol>[:<rtol>[:<h0>]]
+    /// ```
+    ///
+    /// `default_nt` fills the bare `uniform` form (the CLI's `--nt`).
+    pub fn parse(s: &str, default_nt: usize) -> Result<TimeGrid, String> {
+        if s == "uniform" {
+            if default_nt == 0 {
+                return Err("uniform grid needs nt >= 1".into());
+            }
+            return Ok(TimeGrid::Uniform { nt: default_nt });
+        }
+        if let Some(rest) = s.strip_prefix("uniform:") {
+            let nt: usize = rest
+                .parse()
+                .map_err(|_| format!("bad step count {rest:?} in grid spec {s:?}"))?;
+            if nt == 0 {
+                return Err(format!("{s:?}: uniform grid needs nt >= 1"));
+            }
+            return Ok(TimeGrid::Uniform { nt });
+        }
+        if let Some(rest) = s.strip_prefix("adaptive:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            if parts.len() > 3 || parts[0].is_empty() {
+                return Err(format!(
+                    "bad adaptive grid spec {s:?} (want adaptive:<atol>[:<rtol>[:<h0>]])"
+                ));
+            }
+            let num = |p: &str| -> Result<f64, String> {
+                let v: f64 = p
+                    .parse()
+                    .map_err(|_| format!("bad number {p:?} in grid spec {s:?}"))?;
+                if !(v.is_finite() && v > 0.0) {
+                    return Err(format!("{s:?}: tolerances/steps must be positive, got {p:?}"));
+                }
+                Ok(v)
+            };
+            let atol = num(parts[0])?;
+            let rtol = if parts.len() > 1 { num(parts[1])? } else { atol };
+            let h0 = if parts.len() > 2 { Some(num(parts[2])?) } else { None };
+            return Ok(TimeGrid::Adaptive { atol, rtol, h0 });
+        }
+        Err(format!(
+            "unknown grid spec {s:?} \
+             (want uniform | uniform:<nt> | adaptive:<atol>[:<rtol>[:<h0>]])"
+        ))
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            TimeGrid::Uniform { nt } => format!("uniform:{nt}"),
+            TimeGrid::Explicit(steps) => format!("explicit:{}", steps.len()),
+            TimeGrid::Adaptive { atol, rtol, h0 } => match h0 {
+                Some(h0) => format!("adaptive:{atol}:{rtol}:{h0}"),
+                None => format!("adaptive:{atol}:{rtol}"),
+            },
+        }
+    }
+
+    /// Whether the step sequence is known before the forward pass runs.
+    pub fn is_static(&self) -> bool {
+        !matches!(self, TimeGrid::Adaptive { .. })
+    }
+
+    /// Planned step count; `None` for adaptive grids (unknown until the
+    /// forward pass has run).
+    pub fn planned_nt(&self) -> Option<usize> {
+        match self {
+            TimeGrid::Uniform { nt } => Some(*nt),
+            TimeGrid::Explicit(steps) => Some(steps.len()),
+            TimeGrid::Adaptive { .. } => None,
+        }
+    }
+}
+
+/// Default adaptive trial step when a grid spec carries `h0: None`.
+/// Single source of truth: the adjoint driver and [`integrate_erk_over`]
+/// must agree, or different methods would generate different accepted
+/// grids from the same spec.
+pub fn default_adaptive_h0(t0: f64, tf: f64) -> f64 {
+    (tf - t0) / 16.0
+}
+
+/// The `(t_n, h_n)` records of `nt` equal steps over `[t0, tf]`.
+pub fn uniform_steps(t0: f64, tf: f64, nt: usize) -> Vec<(f64, f64)> {
+    let h = (tf - t0) / nt as f64;
+    (0..nt).map(|i| (t0 + i as f64 * h, h)).collect()
+}
+
+/// Outcome of [`integrate_erk_over`]: the executed (accepted) grid plus
+/// the number of rejected adaptive trials.
+#[derive(Clone, Debug)]
+pub struct GridRun {
+    pub final_state: Vec<f32>,
+    /// accepted `(t_n, h_n)` records, in order
+    pub steps: Vec<(f64, f64)>,
+    pub n_rejected: usize,
+}
+
+/// Integrate an explicit RK scheme over `grid`, firing `sink` on every
+/// executed (accepted) step with `(step, t, h, u_n, ks, u_{n+1})`.
+/// Rejected adaptive trials burn forward NFE but never reach the sink.
+pub fn integrate_erk_over<F>(
+    tab: &Tableau,
+    rhs: &dyn OdeRhs,
+    t0: f64,
+    tf: f64,
+    grid: &TimeGrid,
+    u0: &[f32],
+    sink: F,
+) -> GridRun
+where
+    F: FnMut(usize, f64, f64, &[f32], &[Vec<f32>], &[f32]),
+{
+    match grid {
+        TimeGrid::Uniform { nt } => {
+            let steps = uniform_steps(t0, tf, *nt);
+            let final_state = integrate_grid(tab, rhs, &steps, u0, sink);
+            GridRun { final_state, steps, n_rejected: 0 }
+        }
+        TimeGrid::Explicit(steps) => {
+            let final_state = integrate_grid(tab, rhs, steps, u0, sink);
+            GridRun { final_state, steps: steps.clone(), n_rejected: 0 }
+        }
+        TimeGrid::Adaptive { atol, rtol, h0 } => {
+            let ctrl = AdaptiveController::for_tableau(tab, *atol, *rtol);
+            let h0 = h0.unwrap_or_else(|| default_adaptive_h0(t0, tf));
+            let res = integrate_adaptive(tab, rhs, t0, tf, h0, &ctrl, u0, sink);
+            GridRun {
+                final_state: res.final_state,
+                steps: res.steps,
+                n_rejected: res.rejected,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::rhs::LinearRhs;
+    use crate::ode::tableau;
+
+    #[test]
+    fn parse_roundtrip_and_errors() {
+        assert_eq!(TimeGrid::parse("uniform", 8), Ok(TimeGrid::Uniform { nt: 8 }));
+        assert_eq!(TimeGrid::parse("uniform:12", 8), Ok(TimeGrid::Uniform { nt: 12 }));
+        assert_eq!(
+            TimeGrid::parse("adaptive:1e-6", 8),
+            Ok(TimeGrid::Adaptive { atol: 1e-6, rtol: 1e-6, h0: None })
+        );
+        assert_eq!(
+            TimeGrid::parse("adaptive:1e-6:1e-8:0.25", 8),
+            Ok(TimeGrid::Adaptive { atol: 1e-6, rtol: 1e-8, h0: Some(0.25) })
+        );
+        for bad in [
+            "uniform:0",
+            "uniform:x",
+            "adaptive:",
+            "adaptive:-1",
+            "adaptive:1e-6:1e-6:0.1:9",
+            "bogus",
+        ] {
+            assert!(TimeGrid::parse(bad, 8).is_err(), "{bad}");
+        }
+        for g in [
+            TimeGrid::Uniform { nt: 7 },
+            TimeGrid::Adaptive { atol: 1e-6, rtol: 1e-6, h0: None },
+            TimeGrid::Adaptive { atol: 1e-5, rtol: 1e-7, h0: Some(0.5) },
+        ] {
+            assert_eq!(TimeGrid::parse(&g.name(), 1), Ok(g.clone()), "{}", g.name());
+        }
+    }
+
+    #[test]
+    fn uniform_steps_tile_the_interval() {
+        let steps = uniform_steps(0.0, 1.0, 4);
+        assert_eq!(steps.len(), 4);
+        assert_eq!(steps[0], (0.0, 0.25));
+        let total: f64 = steps.iter().map(|(_, h)| h).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_times_matches_windows() {
+        let g = TimeGrid::from_times(&[0.0, 0.1, 0.4, 1.0]);
+        match &g {
+            TimeGrid::Explicit(steps) => {
+                assert_eq!(steps.len(), 3);
+                assert!((steps[1].1 - 0.3).abs() < 1e-12);
+            }
+            _ => panic!("wrong variant"),
+        }
+        assert_eq!(g.planned_nt(), Some(3));
+        assert!(g.is_static());
+        assert!(!TimeGrid::adaptive(1e-6).is_static());
+    }
+
+    #[test]
+    fn integrate_over_all_grid_kinds_agrees_on_smooth_problem() {
+        let rhs = LinearRhs::new(2, vec![0.0, 1.0, -1.0, 0.0]);
+        let exact = [2.0f64.cos() as f32, -(2.0f64.sin()) as f32];
+        let u0 = [1.0f32, 0.0];
+        let sink = |_: usize, _: f64, _: f64, _: &[f32], _: &[Vec<f32>], _: &[f32]| {};
+        let uni = integrate_erk_over(
+            &tableau::DOPRI5, &rhs, 0.0, 2.0, &TimeGrid::Uniform { nt: 40 }, &u0, sink,
+        );
+        let expl = integrate_erk_over(
+            &tableau::DOPRI5,
+            &rhs,
+            0.0,
+            2.0,
+            &TimeGrid::Explicit(uniform_steps(0.0, 2.0, 40)),
+            &u0,
+            sink,
+        );
+        let ada = integrate_erk_over(
+            &tableau::DOPRI5, &rhs, 0.0, 2.0, &TimeGrid::adaptive(1e-8), &u0, sink,
+        );
+        // explicit copy of the uniform grid is the same computation, bitwise
+        assert_eq!(uni.final_state, expl.final_state);
+        assert_eq!(uni.steps, expl.steps);
+        assert_eq!(uni.n_rejected, 0);
+        assert!(crate::testing::rel_l2(&ada.final_state, &exact) < 1e-6);
+        assert!(!ada.steps.is_empty());
+        let total: f64 = ada.steps.iter().map(|(_, h)| h).sum();
+        assert!((total - 2.0).abs() < 1e-9, "accepted steps tile the interval");
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod adaptive;
 pub mod erk;
+pub mod grid;
 pub mod implicit;
 pub mod rhs;
 pub mod rhs_xla;
@@ -12,6 +13,7 @@ pub mod tableau;
 
 pub use adaptive::{AdaptiveController, AdaptiveResult};
 pub use erk::{erk_step, ErkWorkspace};
+pub use grid::{integrate_erk_over, uniform_steps, GridRun, TimeGrid};
 pub use implicit::{ImplicitStepper, ThetaScheme};
 pub use rhs::{LinearRhs, MlpRhs, Nfe, OdeRhs, RobertsonRhs};
 pub use rhs_xla::{XlaCnfRhs, XlaRhs};

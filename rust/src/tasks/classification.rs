@@ -112,6 +112,7 @@ impl ClassificationTask {
             // graph memory is a high-water mark, not a sum: blocks backprop
             // one at a time
             report.graph_bytes = report.graph_bytes.max(r.graph_bytes);
+            report.merge_grid(&r);
         }
         self.readout.apply_grads(readout_lr, &ro);
         StepResult { loss: ro.loss, accuracy: ro.accuracy, grad, report }

@@ -114,6 +114,7 @@ impl CnfTask {
             report.recompute_steps += r.recompute_steps;
             report.ckpt_bytes += r.ckpt_bytes;
             report.graph_bytes = report.graph_bytes.max(r.graph_bytes);
+            report.merge_grid(&r);
         }
         CnfStep { nll, grad, report }
     }

@@ -3,12 +3,18 @@
 //! PNODE) and compare against adaptive Dopri5, whose gradients explode
 //! (Fig. 5).  Loss = MAE over 40 log-spaced observations (eq. 15), with
 //! min–max feature scaling (eq. 16).
+//!
+//! Both gradient paths run through the unified [`AdjointDriver`]: the
+//! implicit path as a θ-scheme over the explicit log-spaced grid (with
+//! λ jumps via `backward_range`), the explicit path as per-segment
+//! adaptive Dopri5 runs whose accepted grids feed the checkpointed
+//! discrete adjoint.
 
-use crate::adjoint::driver::ImplicitAdjointRun;
+use crate::adjoint::driver::{ErkDriver, ThetaDriver};
+use crate::checkpoint::CheckpointPolicy;
 use crate::data::robertson::RobertsonData;
 use crate::linalg::gmres::GmresOptions;
-use crate::ode::adaptive::{integrate_adaptive, AdaptiveController};
-use crate::adjoint::discrete_erk::AdjointErkWorkspace;
+use crate::ode::grid::TimeGrid;
 use crate::ode::implicit::ThetaScheme;
 use crate::ode::rhs::OdeRhs;
 use crate::ode::tableau;
@@ -24,6 +30,10 @@ pub struct StiffStep {
     pub grad: Vec<f32>,
     pub nfe_forward: u64,
     pub nfe_backward: u64,
+    /// executed (accepted) steps of the forward pass
+    pub n_accepted: u64,
+    /// rejected adaptive trials (0 for the implicit fixed-grid path)
+    pub n_rejected: u64,
     /// predictions at the observation times [n_obs, 3]
     pub pred: Vec<f32>,
 }
@@ -73,11 +83,13 @@ impl StiffTask {
     pub fn grad_implicit(&self, rhs: &dyn OdeRhs, scheme: ThetaScheme) -> StiffStep {
         rhs.reset_nfe();
         let (grid, obs_idx) = self.grid();
-        let mut run = ImplicitAdjointRun::new(scheme, grid);
-        run.gmres_opts = GmresOptions { rtol: 1e-8, ..Default::default() };
+        let mut run =
+            ThetaDriver::theta(scheme, CheckpointPolicy::SolutionOnly, &grid);
+        run.scheme.gmres_opts = GmresOptions { rtol: 1e-8, ..Default::default() };
         let u0 = self.data.u0();
         run.forward(rhs, &u0);
         let nfe_f = rhs.nfe().forward;
+        let n_accepted = run.n_accepted() as u64;
 
         // predictions at observation indices (obs 0 is the initial state)
         let preds: Vec<Vec<f32>> = obs_idx.iter().map(|&gi| run.state(gi).to_vec()).collect();
@@ -105,40 +117,39 @@ impl StiffTask {
             grad,
             nfe_forward: nfe_f,
             nfe_backward: nfe.backward + (nfe.forward - nfe_f),
+            n_accepted,
+            n_rejected: 0,
             pred: pred_flat,
         }
     }
 
-    /// Gradient via adaptive Dopri5 + discrete adjoint per segment (the
-    /// explicit baseline of Fig. 5 / Table 8).
+    /// Gradient via adaptive Dopri5 + checkpointed discrete adjoint per
+    /// segment (the explicit baseline of Fig. 5 / Table 8).  Each segment
+    /// runs the PI controller, records its accepted grid, and adjoints it
+    /// through the same driver as every other PNODE configuration.
     pub fn grad_explicit_adaptive(&self, rhs: &dyn OdeRhs, tol: f64) -> StiffStep {
         rhs.reset_nfe();
         let tab = &tableau::DOPRI5;
-        let ctrl = AdaptiveController::new(tol, tol);
         let u0 = self.data.u0();
         let n_obs = self.data.n_obs();
 
         // forward per segment, recording all accepted steps (policy All)
-        let mut seg_steps: Vec<Vec<(f64, f64, Vec<f32>, Vec<Vec<f32>>)>> = Vec::new();
+        let mut seg_runs: Vec<ErkDriver> = Vec::with_capacity(n_obs - 1);
         let mut preds = vec![u0.clone()];
         let mut u = u0.clone();
+        let (mut n_accepted, mut n_rejected) = (0u64, 0u64);
         for w in self.data.ts.windows(2) {
-            let mut steps = Vec::new();
-            let res = integrate_adaptive(
-                tab,
-                rhs,
-                w[0],
-                w[1],
-                (w[1] - w[0]) / 4.0,
-                &ctrl,
-                &u,
-                |_, t, h, u_n, ks, _| {
-                    steps.push((t, h, u_n.to_vec(), ks.to_vec()));
-                },
-            );
-            u = res.final_state.clone();
+            let grid = TimeGrid::Adaptive {
+                atol: tol,
+                rtol: tol,
+                h0: Some((w[1] - w[0]) / 4.0),
+            };
+            let mut run = ErkDriver::erk(tab, CheckpointPolicy::All, w[0], w[1], grid);
+            u = run.forward(rhs, &u);
             preds.push(u.clone());
-            seg_steps.push(steps);
+            n_accepted += run.n_accepted() as u64;
+            n_rejected += run.n_rejected() as u64;
+            seg_runs.push(run);
         }
         let nfe_f = rhs.nfe().forward;
         let (loss, obs_grads) = self.mae(&preds);
@@ -150,16 +161,11 @@ impl StiffTask {
         // discrete adjoint over accepted steps, with λ jumps at observations
         let mut lambda = vec![0.0f32; 3];
         let mut grad = vec![0.0f32; rhs.param_len()];
-        let mut aws = AdjointErkWorkspace::new(tab.s, 3);
         for seg in (0..n_obs - 1).rev() {
             for c in 0..3 {
                 lambda[c] += obs_grads[seg + 1][c];
             }
-            for (t, h, u_n, ks) in seg_steps[seg].iter().rev() {
-                crate::adjoint::discrete_erk::adjoint_erk_step(
-                    tab, rhs, *t, *h, u_n, ks, &mut lambda, &mut grad, &mut aws,
-                );
-            }
+            seg_runs[seg].backward(rhs, &mut lambda, &mut grad);
         }
         let nfe = rhs.nfe();
         StiffStep {
@@ -167,6 +173,8 @@ impl StiffTask {
             grad,
             nfe_forward: nfe_f,
             nfe_backward: nfe.backward + (nfe.forward - nfe_f),
+            n_accepted,
+            n_rejected,
             pred: pred_flat,
         }
     }
@@ -199,6 +207,7 @@ mod tests {
         let task = small_task();
         let step = task.grad_implicit(&rhs, ThetaScheme::crank_nicolson());
         assert!(step.loss.is_finite());
+        assert!(step.n_accepted > 0 && step.n_rejected == 0);
 
         let h = 1e-3f32;
         let theta0 = rhs.params().to_vec();
@@ -246,6 +255,38 @@ mod tests {
         let step = task.grad_explicit_adaptive(&rhs, 1e-5);
         assert!(step.loss.is_finite());
         assert!(step.nfe_forward > 0);
+        assert!(step.n_accepted > 0, "accepted grid recorded");
         assert_eq!(step.grad.len(), rhs.param_len());
+    }
+
+    #[test]
+    fn explicit_adaptive_gradient_matches_finite_differences() {
+        // reverse accuracy wrt the accepted discrete map survives the λ
+        // jumps: FD over the *same task loss* (the grid re-adapts under
+        // perturbation, so compare with a tolerance, not bitwise)
+        let mut rhs = mk_rhs(431);
+        let task = small_task();
+        let step = task.grad_explicit_adaptive(&rhs, 1e-6);
+        assert!(step.loss.is_finite());
+
+        let h = 1e-3f32;
+        let theta0 = rhs.params().to_vec();
+        for &idx in &[0usize, theta0.len() / 2] {
+            let mut tp = theta0.clone();
+            tp[idx] += h;
+            rhs.set_params(&tp);
+            let lp = task.grad_explicit_adaptive(&rhs, 1e-6).loss;
+            let mut tm = theta0.clone();
+            tm[idx] -= h;
+            rhs.set_params(&tm);
+            let lm = task.grad_explicit_adaptive(&rhs, 1e-6).loss;
+            rhs.set_params(&theta0);
+            let fd = (lp - lm) / (2.0 * h as f64);
+            assert!(
+                (fd - step.grad[idx] as f64).abs() < 5e-2 * (1.0 + fd.abs()),
+                "grad[{idx}] {} vs fd {fd}",
+                step.grad[idx]
+            );
+        }
     }
 }

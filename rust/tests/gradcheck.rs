@@ -44,7 +44,7 @@ fn fd_check_every_scheme_and_policy() {
                     rhs,
                     spec.t0,
                     spec.tf,
-                    spec.nt,
+                    spec.nt(),
                     &u0,
                     |_, _, _, _, _, _| {},
                 );
@@ -89,9 +89,12 @@ fn fd_check_implicit_multistep() {
         let w = vec![1.0f32, 0.5, -0.3];
         let (t0, tf, nt) = (0.0, 1.0, 6);
 
-        let mut run = pnode::adjoint::driver::ImplicitAdjointRun::new(
+        let ts: Vec<f64> =
+            (0..=nt).map(|i| t0 + (tf - t0) * i as f64 / nt as f64).collect();
+        let mut run = pnode::adjoint::driver::ThetaDriver::theta(
             scheme,
-            (0..=nt).map(|i| t0 + (tf - t0) * i as f64 / nt as f64).collect(),
+            CheckpointPolicy::SolutionOnly,
+            &ts,
         );
         run.forward(&rhs, &u0);
         let mut lambda = w.clone();
@@ -125,6 +128,134 @@ fn fd_check_implicit_multistep() {
     }
 }
 
+/// Adaptive-grid reverse accuracy: the PNODE gradient under
+/// `TimeGrid::Adaptive` must match central finite differences of the *same
+/// accepted discrete map* (the grid is frozen for the FD oracle), under
+/// both the All and binomial:4 policies.
+#[test]
+fn fd_check_adaptive_grid_policies() {
+    use pnode::adjoint::driver::ErkDriver;
+    use pnode::ode::grid::TimeGrid;
+    let tab = &pnode::ode::tableau::DOPRI5;
+    for policy in [
+        CheckpointPolicy::All,
+        CheckpointPolicy::Binomial { n_checkpoints: 4 },
+    ] {
+        let mut rhs = mk_rhs(77);
+        let mut rng = Rng::new(78);
+        let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
+        let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
+        let grid = TimeGrid::Adaptive { atol: 1e-6, rtol: 1e-6, h0: None };
+
+        let mut run = ErkDriver::erk(tab, policy.clone(), 0.0, 1.0, grid);
+        run.forward(&rhs, &u0);
+        let frozen: Vec<(f64, f64)> = run.grid_steps().to_vec();
+        assert!(frozen.len() > 1, "controller must accept multiple steps");
+        let mut lambda = w.clone();
+        let mut g = vec![0.0f32; rhs.param_len()];
+        run.backward(&rhs, &mut lambda, &mut g);
+
+        let loss = |rhs: &dyn OdeRhs, u0: &[f32]| {
+            let uf =
+                pnode::ode::erk::integrate_grid(tab, rhs, &frozen, u0, |_, _, _, _, _, _| {});
+            pnode::tensor::dot(&w, &uf)
+        };
+        let h = 1e-3f32;
+        for idx in 0..rhs.state_len().min(4) {
+            let mut up = u0.clone();
+            up[idx] += h;
+            let mut um = u0.clone();
+            um[idx] -= h;
+            let fd = (loss(&rhs, &up) - loss(&rhs, &um)) / (2.0 * h as f64);
+            assert!(
+                (fd - lambda[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                "{}: dL/du[{idx}] {} vs fd {fd}",
+                policy.name(),
+                lambda[idx]
+            );
+        }
+        let h = 1e-2f32;
+        let theta0 = rhs.params().to_vec();
+        let p = theta0.len();
+        for idx in [0usize, p / 2, p - 1] {
+            let mut tp = theta0.clone();
+            tp[idx] += h;
+            rhs.set_params(&tp);
+            let lp = loss(&rhs, &u0);
+            let mut tm = theta0.clone();
+            tm[idx] -= h;
+            rhs.set_params(&tm);
+            let lm = loss(&rhs, &u0);
+            rhs.set_params(&theta0);
+            let fd = (lp - lm) / (2.0 * h as f64);
+            assert!(
+                (fd - g[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                "{}: dθ[{idx}] {} vs fd {fd}",
+                policy.name(),
+                g[idx]
+            );
+        }
+    }
+}
+
+/// Explicit-nonuniform-grid reverse accuracy, through the Pnode method
+/// surface (BlockSpec carries the grid).
+#[test]
+fn fd_check_explicit_nonuniform_grid() {
+    use pnode::ode::grid::TimeGrid;
+    let steps = vec![(0.0, 0.04), (0.04, 0.08), (0.12, 0.18), (0.3, 0.3), (0.6, 0.4)];
+    for policy in [CheckpointPolicy::All, CheckpointPolicy::SolutionOnly] {
+        let mut rhs = mk_rhs(88);
+        let mut rng = Rng::new(89);
+        let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
+        let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
+        let spec = BlockSpec {
+            scheme: pnode::ode::tableau::Scheme::Rk4,
+            t0: 0.0,
+            tf: 1.0,
+            grid: TimeGrid::Explicit(steps.clone()),
+        };
+
+        let mut m = Pnode::new(policy.clone());
+        m.forward(&rhs, &spec, &u0);
+        let mut lambda = w.clone();
+        let mut g = vec![0.0f32; rhs.param_len()];
+        m.backward(&rhs, &spec, &mut lambda, &mut g);
+
+        let loss = |rhs: &dyn OdeRhs| {
+            let uf = pnode::ode::erk::integrate_grid(
+                spec.scheme.tableau(),
+                rhs,
+                &steps,
+                &u0,
+                |_, _, _, _, _, _| {},
+            );
+            pnode::tensor::dot(&w, &uf)
+        };
+        let h = 1e-2f32;
+        let theta0 = rhs.params().to_vec();
+        let p = theta0.len();
+        for idx in [0usize, p / 3, p - 1] {
+            let mut tp = theta0.clone();
+            tp[idx] += h;
+            rhs.set_params(&tp);
+            let lp = loss(&rhs);
+            let mut tm = theta0.clone();
+            tm[idx] -= h;
+            rhs.set_params(&tm);
+            let lm = loss(&rhs);
+            rhs.set_params(&theta0);
+            let fd = (lp - lm) / (2.0 * h as f64);
+            assert!(
+                (fd - g[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                "{}: dθ[{idx}] {} vs fd {fd}",
+                policy.name(),
+                g[idx]
+            );
+        }
+    }
+}
+
 /// Property: for random seeds, discrete-adjoint λ equals the FD directional
 /// derivative along a random direction.
 #[test]
@@ -150,7 +281,7 @@ fn fd_directional_derivative_property() {
                 &rhs,
                 spec.t0,
                 spec.tf,
-                spec.nt,
+                spec.nt(),
                 u0,
                 |_, _, _, _, _, _| {},
             );

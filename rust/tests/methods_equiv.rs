@@ -100,9 +100,9 @@ fn recompute_overhead_ordering() {
     let anode = report_of("anode");
     let aca = report_of("aca");
     assert_eq!(pnode.recompute_steps, 0);
-    assert_eq!(pnode2.recompute_steps, (spec.nt - 1) as u64);
-    assert_eq!(anode.recompute_steps, spec.nt as u64);
-    assert_eq!(aca.recompute_steps, 2 * spec.nt as u64);
+    assert_eq!(pnode2.recompute_steps, (spec.nt() - 1) as u64);
+    assert_eq!(anode.recompute_steps, spec.nt() as u64);
+    assert_eq!(aca.recompute_steps, 2 * spec.nt() as u64);
     // NFE-B ordering: aca > anode ≈ pnode > naive(0)
     assert!(aca.nfe_backward > anode.nfe_backward);
     assert_eq!(report_of("naive").nfe_backward, 0);
