@@ -37,10 +37,13 @@
 //! are identical across placements and storage backends on the same
 //! accepted grid.
 
+use std::sync::Arc;
+
 use crate::adjoint::scheme::{ErkStep, StepScheme, ThetaStep};
 use crate::checkpoint::binomial::{Anchor, BinomialPlanner, BlockDecision};
 use crate::checkpoint::tiered::{CheckpointBackend, TierStats, TieredConfig, TieredStore};
 use crate::checkpoint::{CheckpointPolicy, CheckpointStore, MemoryBudget, StepCheckpoint};
+use crate::exec::arbiter::BudgetArbiter;
 use crate::ode::grid::{default_adaptive_h0, uniform_steps, TimeGrid};
 use crate::ode::implicit::ThetaScheme;
 use crate::ode::rhs::OdeRhs;
@@ -88,24 +91,64 @@ impl<'t> ErkDriver<'t> {
     ) -> Self {
         AdjointDriver::new(ErkStep { tab }, policy, t0, tf, grid)
     }
+
+    /// Like [`ErkDriver::erk`], but a `Tiered` policy draws its hot-tier
+    /// allowance from the shared `arbiter` pool (fleet mode) instead of
+    /// owning the whole budget.
+    pub fn erk_with_arbiter(
+        tab: &'t Tableau,
+        policy: CheckpointPolicy,
+        t0: f64,
+        tf: f64,
+        grid: TimeGrid,
+        arbiter: Option<Arc<BudgetArbiter>>,
+    ) -> Self {
+        AdjointDriver::new_with_arbiter(ErkStep { tab }, policy, t0, tf, grid, arbiter)
+    }
 }
 
 impl ThetaDriver {
     /// Driver for an implicit θ-scheme over the time points `ts`
     /// (arbitrary, e.g. log-spaced).
     pub fn theta(scheme: ThetaScheme, policy: CheckpointPolicy, ts: &[f64]) -> Self {
-        AdjointDriver::new(
+        Self::theta_with_arbiter(scheme, policy, ts, None)
+    }
+
+    /// Like [`ThetaDriver::theta`], but a `Tiered` policy leases its
+    /// hot-tier bytes from the shared `arbiter` pool.
+    pub fn theta_with_arbiter(
+        scheme: ThetaScheme,
+        policy: CheckpointPolicy,
+        ts: &[f64],
+        arbiter: Option<Arc<BudgetArbiter>>,
+    ) -> Self {
+        AdjointDriver::new_with_arbiter(
             ThetaStep::new(scheme),
             policy,
             ts[0],
             *ts.last().expect("nonempty time grid"),
             TimeGrid::from_times(ts),
+            arbiter,
         )
     }
 }
 
 impl<S: StepScheme> AdjointDriver<S> {
     pub fn new(scheme: S, policy: CheckpointPolicy, t0: f64, tf: f64, grid: TimeGrid) -> Self {
+        Self::new_with_arbiter(scheme, policy, t0, tf, grid, None)
+    }
+
+    /// Full constructor: a `Tiered` policy with `arbiter: Some(..)` joins
+    /// the shared checkpoint-memory pool (its `budget_bytes` is the pool's
+    /// display size; the actual allowance is leased per use).
+    pub fn new_with_arbiter(
+        scheme: S,
+        policy: CheckpointPolicy,
+        t0: f64,
+        tf: f64,
+        grid: TimeGrid,
+        arbiter: Option<Arc<BudgetArbiter>>,
+    ) -> Self {
         let store: Box<dyn CheckpointBackend> = match &policy {
             CheckpointPolicy::Tiered { budget_bytes, dir, compress_f16, .. } => Box::new(
                 TieredStore::create(TieredConfig {
@@ -113,6 +156,7 @@ impl<S: StepScheme> AdjointDriver<S> {
                     dir: dir.into(),
                     compress_f16: *compress_f16,
                     prefetch_window: 4,
+                    arbiter,
                 })
                 .expect("creating tiered checkpoint store (spill dir writable?)"),
             ),

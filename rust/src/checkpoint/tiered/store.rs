@@ -4,17 +4,21 @@
 use std::collections::BTreeMap;
 use std::io;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use super::budget::MemoryBudget;
 use super::cold::ColdStore;
 use super::prefetch::Prefetcher;
 use super::{CheckpointBackend, TierStats};
 use crate::checkpoint::store::StepCheckpoint;
+use crate::exec::arbiter::{BudgetArbiter, Lease};
 
 /// Construction parameters for [`TieredStore`].
 #[derive(Clone, Debug)]
 pub struct TieredConfig {
-    /// RAM allowance for the hot tier (prefetch buffer included)
+    /// RAM allowance for the hot tier (prefetch buffer included).  When
+    /// `arbiter` is set this is the *global* pool size for display; the
+    /// store's actual allowance is whatever its lease covers.
     pub budget: MemoryBudget,
     /// directory for the spill file (created if absent, file deleted on drop)
     pub dir: PathBuf,
@@ -22,6 +26,10 @@ pub struct TieredConfig {
     pub compress_f16: bool,
     /// prefetch read-ahead window, in records
     pub prefetch_window: usize,
+    /// shared checkpoint-memory arbiter: when set, the hot tier draws its
+    /// allowance from the arbiter's global pool (fleet mode) instead of
+    /// the fixed per-store `budget`
+    pub arbiter: Option<Arc<BudgetArbiter>>,
 }
 
 impl TieredConfig {
@@ -31,6 +39,7 @@ impl TieredConfig {
             dir: dir.into(),
             compress_f16: false,
             prefetch_window: 4,
+            arbiter: None,
         }
     }
 }
@@ -46,6 +55,9 @@ pub struct TieredStore {
     hot_bytes: u64,
     peak_hot_bytes: u64,
     budget: MemoryBudget,
+    /// fleet mode: the allowance comes from this lease on the shared
+    /// arbiter pool rather than from the fixed `budget`
+    lease: Option<Lease>,
     cold: ColdStore,
     /// prefetched-but-not-yet-consumed records (step -> checkpoint)
     prefetched: BTreeMap<usize, StepCheckpoint>,
@@ -65,6 +77,7 @@ impl TieredStore {
             hot_bytes: 0,
             peak_hot_bytes: 0,
             budget: cfg.budget,
+            lease: cfg.arbiter.as_ref().map(|a| a.lease()),
             cold,
             prefetched: BTreeMap::new(),
             prefetched_bytes: 0,
@@ -84,12 +97,38 @@ impl TieredStore {
         self.peak_hot_bytes = self.peak_hot_bytes.max(self.ram_bytes());
     }
 
+    /// The RAM this store may use right now: its lease's coverage in
+    /// fleet mode, the fixed budget otherwise.  Passive — growing the
+    /// allowance goes through `ask`/`settle` on the lease.
+    fn allowance(&self) -> u64 {
+        match &self.lease {
+            Some(l) => l.held(),
+            None => self.budget.bytes,
+        }
+    }
+
+    /// Record the actual RAM footprint with the arbiter (release on
+    /// shrink; mandatory floor — counted, never refused — when eviction
+    /// cannot get below one resident record).
+    fn sync_lease(&mut self) {
+        let now = self.ram_bytes();
+        if let Some(l) = &mut self.lease {
+            l.settle(now);
+        }
+    }
+
     /// Evict least-soon-needed (smallest-step) hot entries until the RAM
-    /// footprint fits the budget.  `protect` is never evicted and at least
+    /// footprint fits the allowance (asking the arbiter for coverage
+    /// first in fleet mode).  `protect` is never evicted and at least
     /// one entry always stays resident (spilling the sole checkpoint just
     /// to re-read it immediately would thrash).
     fn enforce_budget(&mut self, protect: Option<usize>) {
-        while self.ram_bytes() > self.budget.bytes && self.hot.len() > 1 {
+        let want = self.ram_bytes();
+        let allowed = match &mut self.lease {
+            Some(l) => l.ask(want),
+            None => self.budget.bytes,
+        };
+        while self.ram_bytes() > allowed && self.hot.len() > 1 {
             let victim = match self.hot.keys().copied().find(|s| Some(*s) != protect) {
                 Some(v) => v,
                 None => break,
@@ -100,6 +139,7 @@ impl TieredStore {
                 .append(&cp)
                 .expect("checkpoint spill failed (disk full or spill dir gone?)");
         }
+        self.sync_lease();
     }
 
     fn hot_insert(&mut self, cp: StepCheckpoint, protect: Option<usize>) {
@@ -123,25 +163,43 @@ impl TieredStore {
         self.enforce_budget(protect);
     }
 
-    /// Drain whatever the prefetcher has ready, respecting the budget
+    /// Whether a record of `incoming` bytes may be buffered in RAM right
+    /// now.  Fleet mode asks the arbiter to extend the lease first, so
+    /// prefetch buffering also draws from the global pool.
+    fn can_buffer(&mut self, incoming: u64) -> bool {
+        let want = self.ram_bytes() + incoming;
+        match &mut self.lease {
+            Some(l) => l.ask(want) >= want,
+            None => want <= self.budget.bytes,
+        }
+    }
+
+    /// Drain whatever the prefetcher has ready, respecting the allowance
     /// (entries left in the channel keep back-pressuring the reader
     /// thread).  Records whose index entry vanished (consumed through
-    /// another path) are dropped.
+    /// another path) are dropped; in fleet mode a record the pool cannot
+    /// cover is dropped too (its cold entry remains — a later lookup
+    /// falls back to a synchronous read) so the fleet never overdraws.
     fn drain_prefetch(&mut self) {
         loop {
-            if self.ram_bytes() >= self.budget.bytes && !self.prefetched.is_empty() {
+            if self.ram_bytes() >= self.allowance() && !self.prefetched.is_empty() {
                 break;
             }
             let cp = match self.prefetcher.as_mut().and_then(|pf| pf.try_recv()) {
                 Some(cp) => cp,
                 None => break,
             };
-            if self.cold.contains(cp.step) {
-                self.prefetched_bytes += cp.bytes();
-                self.prefetched.insert(cp.step, cp);
-                self.note_peak();
+            if !self.cold.contains(cp.step) {
+                continue;
             }
+            if self.lease.is_some() && !self.can_buffer(cp.bytes()) {
+                break; // drop cp: pool exhausted
+            }
+            self.prefetched_bytes += cp.bytes();
+            self.prefetched.insert(cp.step, cp);
+            self.note_peak();
         }
+        self.sync_lease();
     }
 
     /// Pull `step` out of the cold tier (prefetched buffer, in-flight
@@ -155,6 +213,7 @@ impl TieredStore {
             self.prefetched_bytes -= cp.bytes();
             self.cold.remove(step);
             self.stats_prefetch_hits += 1;
+            self.sync_lease();
             return Some(cp);
         }
         // If the record is still ahead in the prefetch stream, wait for it:
@@ -168,11 +227,10 @@ impl TieredStore {
                 if cp.step == step {
                     self.cold.remove(step);
                     self.stats_prefetch_hits += 1;
+                    self.sync_lease();
                     return Some(cp);
                 }
-                if self.cold.contains(cp.step)
-                    && self.ram_bytes() + cp.bytes() <= self.budget.bytes
-                {
+                if self.cold.contains(cp.step) && self.can_buffer(cp.bytes()) {
                     self.prefetched_bytes += cp.bytes();
                     self.prefetched.insert(cp.step, cp);
                     self.note_peak();
@@ -192,6 +250,7 @@ impl TieredStore {
             pf.invalidate(step);
         }
         self.stats_cold_reads += 1;
+        self.sync_lease();
         Some(cp)
     }
 
@@ -210,6 +269,7 @@ impl CheckpointBackend for TieredStore {
         if let Some(cp) = self.hot.remove(&step) {
             self.hot_bytes -= cp.bytes();
             self.stats_hot_hits += 1;
+            self.sync_lease();
             return Some(cp);
         }
         self.fetch_cold(step)
@@ -259,6 +319,7 @@ impl CheckpointBackend for TieredStore {
         self.stats_prefetch_hits = 0;
         self.stats_cold_reads = 0;
         self.cold.clear();
+        self.sync_lease();
     }
 
     fn begin_reverse_sweep(&mut self) {
@@ -488,6 +549,74 @@ mod tests {
         }
         store.finish();
         assert!(store.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fleet_of_stores_shares_one_arbiter_pool() {
+        use crate::exec::arbiter::BudgetArbiter;
+        let per = cp(0, 64, 2, 0).bytes();
+        let arb = BudgetArbiter::new(4 * per);
+        let dir = tmp_dir("fleet");
+        let mk_leased = |tag: usize| {
+            let mut cfg = TieredConfig::new(4 * per, dir.join(format!("s{tag}")));
+            cfg.arbiter = Some(arb.clone());
+            TieredStore::create(cfg).unwrap()
+        };
+        let mut a = mk_leased(0);
+        let mut b = mk_leased(1);
+        let originals: Vec<StepCheckpoint> =
+            (0..8).map(|s| cp(s, 64, 2, s as u64)).collect();
+        for c in &originals {
+            a.insert(c.clone());
+            b.insert(c.clone());
+        }
+        // combined demand is 16 records against a 4-record pool: the fleet
+        // degrades by spilling, and the concurrent hot footprint never
+        // exceeds the pool
+        assert!(a.stats().spills > 0 && b.stats().spills > 0);
+        let st = arb.stats();
+        assert!(st.peak_leased <= 4 * per, "{st:?}");
+        assert!(st.lease_waits > 0, "an over-subscribed fleet must contend: {st:?}");
+        assert_eq!(st.over_grant_bytes, 0, "floors fit the pool here: {st:?}");
+
+        a.begin_reverse_sweep();
+        b.begin_reverse_sweep();
+        for c in originals.iter().rev() {
+            assert_eq!(a.take(c.step).expect("in a").u, c.u, "step {} a", c.step);
+            assert_eq!(b.take(c.step).expect("in b").u, c.u, "step {} b", c.step);
+        }
+        a.finish();
+        b.finish();
+        assert!(a.is_empty() && b.is_empty());
+        assert_eq!(arb.stats().leased, 0, "all bytes returned: {:?}", arb.stats());
+        assert!(arb.stats().peak_leased <= 4 * per);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mandatory_floor_keeps_one_record_and_counts_overdraw() {
+        use crate::exec::arbiter::BudgetArbiter;
+        let per = cp(0, 32, 0, 0).bytes();
+        // a pool smaller than a single record: the store must still keep
+        // its working record resident (degrade, don't deadlock)
+        let arb = BudgetArbiter::new(per / 2);
+        let dir = tmp_dir("floor");
+        let mut cfg = TieredConfig::new(per / 2, &dir);
+        cfg.arbiter = Some(arb.clone());
+        let mut store = TieredStore::create(cfg).unwrap();
+        for s in 0..4 {
+            store.insert(cp(s, 32, 0, s as u64));
+        }
+        assert_eq!(store.hot.len(), 1, "everything but the working record spills");
+        let st = arb.stats();
+        assert!(st.over_grant_bytes >= per - per / 2, "overdraw counted: {st:?}");
+        store.begin_reverse_sweep();
+        for s in (0..4).rev() {
+            assert!(store.take(s).is_some(), "step {s}");
+        }
+        store.finish();
+        assert_eq!(arb.stats().leased, 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,9 +1,11 @@
 //! Experiment coordinator: a job matrix runner that executes
 //! (method × scheme × N_t) sweeps, collects rows, and writes results —
-//! the "leader" of the benchmark harness.  Pure-Rust jobs can run on a
-//! thread pool; PJRT-backed jobs run on the leader thread (the PJRT CPU
-//! client is not Sync).
+//! the "leader" of the benchmark harness.  Pure-Rust jobs run on the
+//! execution engine's worker pool via [`Runner::run_jobs_parallel`]
+//! (rows stay in submission order); PJRT-backed jobs run one at a time
+//! on the leader thread via [`Runner::run_job`] (the PJRT CPU client is
+//! not Sync), which is also the mode for precise per-job wall times.
 
 pub mod runner;
 
-pub use runner::{ExperimentRow, Runner};
+pub use runner::{ExperimentRow, JobBody, JobMeta, Runner};

@@ -1,9 +1,15 @@
 //! Sweep runner: executes a matrix of experiment jobs, collects uniform
 //! result rows, and persists them as JSON under `target/bench_results/`.
+//!
+//! Jobs run either one at a time ([`Runner::run_job`], precise per-job
+//! wall times) or concurrently on the execution engine's worker pool
+//! ([`Runner::run_jobs_parallel`], throughput mode — rows still land in
+//! submission order, so output files are deterministic).
 
 use std::path::PathBuf;
 use std::time::Instant;
 
+use crate::exec::pool;
 use crate::methods::MethodReport;
 use crate::util::json::Json;
 
@@ -40,6 +46,20 @@ pub struct ExperimentRow {
     pub h_min: f64,
     /// largest executed step size
     pub h_max: f64,
+    /// worker threads of the data-parallel engine (0 = not data-parallel)
+    pub workers: u64,
+    /// batch rows per second over the forward+backward pair
+    pub samples_per_sec: f64,
+    /// global hot-tier pool size when an arbiter governed the run
+    pub lease_pool_bytes: u64,
+    /// arbiter peak leased bytes (fleet concurrent hot footprint)
+    pub peak_leased_bytes: u64,
+    /// clipped lease asks (arbiter contention events)
+    pub lease_waits: u64,
+    /// bytes of clipped grant across contended asks
+    pub lease_denied_bytes: u64,
+    /// peak mandatory-floor overdraw beyond the pool (0 = budget held)
+    pub over_grant_bytes: u64,
     pub extra: Vec<(String, String)>,
 }
 
@@ -74,6 +94,13 @@ impl ExperimentRow {
             n_rejected: report.n_rejected,
             h_min: report.h_min,
             h_max: report.h_max,
+            workers: report.exec.workers,
+            samples_per_sec: report.exec.samples_per_sec,
+            lease_pool_bytes: report.exec.lease_pool_bytes,
+            peak_leased_bytes: report.exec.peak_leased_bytes,
+            lease_waits: report.exec.lease_waits,
+            lease_denied_bytes: report.exec.lease_denied_bytes,
+            over_grant_bytes: report.exec.over_grant_bytes,
             extra: Vec::new(),
         }
     }
@@ -102,12 +129,34 @@ impl ExperimentRow {
             ("n_rejected".to_string(), Json::num(self.n_rejected as f64)),
             ("h_min".to_string(), Json::num(self.h_min)),
             ("h_max".to_string(), Json::num(self.h_max)),
+            ("workers".to_string(), Json::num(self.workers as f64)),
+            ("samples_per_sec".to_string(), Json::num(self.samples_per_sec)),
+            ("lease_pool_bytes".to_string(), Json::num(self.lease_pool_bytes as f64)),
+            ("peak_leased_bytes".to_string(), Json::num(self.peak_leased_bytes as f64)),
+            ("lease_waits".to_string(), Json::num(self.lease_waits as f64)),
+            ("lease_denied_bytes".to_string(), Json::num(self.lease_denied_bytes as f64)),
+            ("over_grant_bytes".to_string(), Json::num(self.over_grant_bytes as f64)),
         ];
         for (k, v) in &self.extra {
             kv.push((k.clone(), Json::str(v.clone())));
         }
         Json::Obj(kv)
     }
+}
+
+/// One pure-Rust job body for the parallel matrix: builds its own state,
+/// runs a gradient, returns the accounting.
+pub type JobBody = Box<dyn FnOnce() -> MethodReport + Send>;
+
+/// Identity of one job in a parallel matrix (see
+/// [`Runner::run_jobs_parallel`]).
+#[derive(Clone, Debug)]
+pub struct JobMeta {
+    pub dataset: String,
+    pub method: String,
+    pub scheme: String,
+    pub nt: usize,
+    pub model_mem_bytes: u64,
 }
 
 /// Collects rows, times jobs, writes JSON.
@@ -147,6 +196,49 @@ impl Runner {
             model_mem_bytes,
         ));
         self.rows.last().unwrap()
+    }
+
+    /// Run a batch of independent pure-Rust jobs concurrently on the
+    /// execution engine's worker pool and collect one row per job, in
+    /// submission order (the pool's result slots are index-addressed, so
+    /// the output is deterministic regardless of completion order).
+    ///
+    /// Each job is timed individually; under concurrency these times
+    /// measure *occupancy*, not isolated latency — use [`Runner::run_job`]
+    /// for precise per-job timing.
+    pub fn run_jobs_parallel(
+        &mut self,
+        workers: usize,
+        jobs: Vec<(JobMeta, JobBody)>,
+    ) -> &[ExperimentRow] {
+        let first = self.rows.len();
+        let (metas, bodies): (Vec<JobMeta>, Vec<_>) = jobs.into_iter().unzip();
+        let outs = pool::run_once_jobs(
+            workers,
+            bodies
+                .into_iter()
+                .map(|body| {
+                    move || {
+                        let t = Instant::now();
+                        let report = body();
+                        (report, t.elapsed().as_secs_f64())
+                    }
+                })
+                .collect(),
+        );
+        for (meta, (report, secs)) in metas.into_iter().zip(outs) {
+            self.rows.push(ExperimentRow::from_report(
+                &self.experiment,
+                &meta.dataset,
+                &meta.method,
+                &meta.scheme,
+                meta.nt,
+                &report,
+                secs,
+                meta.model_mem_bytes,
+            ));
+        }
+        &self.rows[first..]
     }
 
     pub fn elapsed_secs(&self) -> f64 {
@@ -194,5 +286,38 @@ mod tests {
         assert!(j.contains("\"ckpt_cold_bytes\""));
         assert!(j.contains("\"n_rejected\":3"), "grid columns serialized: {j}");
         assert!(j.contains("\"h_max\":0.75"));
+        assert!(j.contains("\"workers\""), "exec columns serialized: {j}");
+        assert!(j.contains("\"samples_per_sec\""));
+        assert!(j.contains("\"peak_leased_bytes\""));
+        assert!(j.contains("\"lease_waits\""));
+    }
+
+    #[test]
+    fn parallel_job_matrix_keeps_submission_order() {
+        let mut r = Runner::new("unit_par");
+        let jobs: Vec<(JobMeta, JobBody)> = (0..9)
+            .map(|i| {
+                let meta = JobMeta {
+                    dataset: format!("ds{i}"),
+                    method: "pnode".into(),
+                    scheme: "rk4".into(),
+                    nt: i,
+                    model_mem_bytes: 0,
+                };
+                let body: JobBody = Box::new(move || {
+                    // uneven job durations scramble completion order
+                    std::thread::sleep(std::time::Duration::from_millis(((9 - i) % 4) as u64));
+                    MethodReport { nfe_forward: i as u64, ..Default::default() }
+                });
+                (meta, body)
+            })
+            .collect();
+        let rows = r.run_jobs_parallel(4, jobs);
+        assert_eq!(rows.len(), 9);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.dataset, format!("ds{i}"), "row order is submission order");
+            assert_eq!(row.nfe_forward, i as u64);
+            assert_eq!(row.nt, i);
+        }
     }
 }

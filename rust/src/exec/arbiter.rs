@@ -1,0 +1,285 @@
+//! The shared checkpoint-memory arbiter: one global hot-tier byte pool
+//! leased to concurrent per-worker tiered stores.
+//!
+//! [`crate::checkpoint::MemoryBudget`] caps one store; a data-parallel
+//! fleet needs the *sum* of its hot tiers capped.  [`BudgetArbiter`]
+//! lifts the budget to a thread-safe pool: each store holds a [`Lease`]
+//! and, before growing its RAM footprint, *asks* for coverage.  Grants
+//! are clipped to what the pool has left, so an over-subscribed fleet
+//! degrades by spilling to its cold tiers instead of exceeding the
+//! budget — the paper's memory/compute trade-off at fleet level.
+//!
+//! Protocol (all calls non-blocking; no ordering between workers):
+//!
+//! 1. `lease()` — open a zero-byte account.
+//! 2. `ask(want)` — request coverage for `want` bytes total.  Returns the
+//!    granted total `min(want, held + pool-remaining, fair share)`.  A
+//!    clipped grant bumps the `lease_waits` / `denied_bytes` contention
+//!    counters; the caller must evict down to the grant.
+//! 3. `settle(bytes)` — unconditionally record actual holdings (shrink
+//!    after eviction/consumption, or a *mandatory floor*: a store must
+//!    keep its one working record resident even when the pool is empty —
+//!    overdraw is counted in `over_grant_bytes`, never refused, so the
+//!    fleet cannot deadlock).
+//! 4. Dropping the lease releases everything.
+//!
+//! **Fair share** ([`BudgetArbiter::set_parties`]): grants are capped at
+//! `total / parties`.  Without the cap a store that runs first would
+//! hoard the whole pool (its checkpoints stay resident between its
+//! forward and backward sweeps), and every later store's mandatory floor
+//! would overdraw the budget.  With `parties =` the fleet size, floors
+//! fit by construction whenever one checkpoint record fits the share, so
+//! `peak_leased <= total` holds.  Parties defaults to 1 (cap = whole
+//! pool).
+//!
+//! Determinism: grants influence *where* checkpoints live (hot vs cold),
+//! never their payloads, and tiered storage is value-preserving — so
+//! worker-count-dependent lease interleavings cannot change gradients.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Aggregate pool counters (see [`BudgetArbiter::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArbiterStats {
+    /// pool size in bytes
+    pub total: u64,
+    /// bytes currently leased out
+    pub leased: u64,
+    /// peak bytes ever leased out (includes mandatory-floor overdraw)
+    pub peak_leased: u64,
+    /// asks that could not be granted in full (contention events)
+    pub lease_waits: u64,
+    /// total bytes of clipped grant across all contended asks
+    pub denied_bytes: u64,
+    /// peak bytes leased *beyond* the pool via mandatory floors
+    pub over_grant_bytes: u64,
+}
+
+#[derive(Debug, Default)]
+struct ArbState {
+    leased: u64,
+    peak_leased: u64,
+    lease_waits: u64,
+    denied_bytes: u64,
+    over_grant_bytes: u64,
+}
+
+/// Thread-safe global hot-tier byte pool.
+#[derive(Debug)]
+pub struct BudgetArbiter {
+    total: u64,
+    /// fleet size for the fair-share grant cap (`total / parties`)
+    parties: AtomicUsize,
+    state: Mutex<ArbState>,
+}
+
+impl BudgetArbiter {
+    pub fn new(total_bytes: u64) -> Arc<BudgetArbiter> {
+        Arc::new(BudgetArbiter {
+            total: total_bytes,
+            parties: AtomicUsize::new(1),
+            state: Mutex::new(ArbState::default()),
+        })
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Declare how many accounts will share the pool; each account's
+    /// grant is capped at `total / parties` (see the module docs).
+    pub fn set_parties(&self, n: usize) {
+        self.parties.store(n.max(1), Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> ArbiterStats {
+        let st = self.state.lock().expect("arbiter lock");
+        ArbiterStats {
+            total: self.total,
+            leased: st.leased,
+            peak_leased: st.peak_leased,
+            lease_waits: st.lease_waits,
+            denied_bytes: st.denied_bytes,
+            over_grant_bytes: st.over_grant_bytes,
+        }
+    }
+
+    /// Open a zero-byte lease account on this pool.
+    pub fn lease(self: &Arc<Self>) -> Lease {
+        Lease { arb: self.clone(), held: 0 }
+    }
+}
+
+/// One store's account with the arbiter.  Releases its holdings on drop.
+#[derive(Debug)]
+pub struct Lease {
+    arb: Arc<BudgetArbiter>,
+    held: u64,
+}
+
+impl Lease {
+    /// Bytes currently covered by this lease.
+    pub fn held(&self) -> u64 {
+        self.held
+    }
+
+    /// Ask for coverage of `want` bytes total; returns the granted total
+    /// (never below the current holdings — use [`Lease::settle`] to
+    /// shrink).  Grants are capped at the pool remainder AND the fair
+    /// share (`total / parties`); clipped grants count as contention.
+    pub fn ask(&mut self, want: u64) -> u64 {
+        if want <= self.held {
+            return self.held;
+        }
+        let parties = self.arb.parties.load(Ordering::Relaxed).max(1) as u64;
+        let share = self.arb.total / parties;
+        let target = want.min(self.held.max(share));
+        let mut st = self.arb.state.lock().expect("arbiter lock");
+        let avail = self.arb.total.saturating_sub(st.leased);
+        let grant = self.held + avail.min(target.saturating_sub(self.held));
+        if grant < want {
+            st.lease_waits += 1;
+            st.denied_bytes += want - grant;
+        }
+        st.leased += grant - self.held;
+        st.peak_leased = st.peak_leased.max(st.leased);
+        self.held = grant;
+        grant
+    }
+
+    /// Record actual holdings of `bytes` — shrink after eviction or
+    /// consumption, or grow unconditionally for a mandatory floor (the
+    /// overdraw beyond the pool is counted, never refused).
+    pub fn settle(&mut self, bytes: u64) {
+        if bytes == self.held {
+            return;
+        }
+        let mut st = self.arb.state.lock().expect("arbiter lock");
+        if bytes >= self.held {
+            st.leased += bytes - self.held;
+        } else {
+            st.leased -= self.held - bytes;
+        }
+        self.held = bytes;
+        if st.leased > self.arb.total {
+            st.over_grant_bytes = st.over_grant_bytes.max(st.leased - self.arb.total);
+        }
+        st.peak_leased = st.peak_leased.max(st.leased);
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        self.settle(0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grants_are_clipped_to_the_pool() {
+        let arb = BudgetArbiter::new(1000);
+        let mut a = arb.lease();
+        let mut b = arb.lease();
+        assert_eq!(a.ask(600), 600);
+        assert_eq!(b.ask(600), 400, "second lease gets the remainder");
+        let st = arb.stats();
+        assert_eq!(st.leased, 1000);
+        assert_eq!(st.lease_waits, 1);
+        assert_eq!(st.denied_bytes, 200);
+        assert_eq!(st.peak_leased, 1000);
+        assert_eq!(st.over_grant_bytes, 0);
+    }
+
+    #[test]
+    fn settle_shrinks_and_frees_room_for_others() {
+        let arb = BudgetArbiter::new(1000);
+        let mut a = arb.lease();
+        let mut b = arb.lease();
+        a.ask(1000);
+        assert_eq!(b.ask(100), 0, "pool exhausted");
+        a.settle(300);
+        assert_eq!(b.ask(100), 100, "released bytes become grantable");
+        assert_eq!(arb.stats().leased, 400);
+    }
+
+    #[test]
+    fn ask_never_shrinks_and_is_idempotent_when_covered() {
+        let arb = BudgetArbiter::new(500);
+        let mut a = arb.lease();
+        assert_eq!(a.ask(400), 400);
+        assert_eq!(a.ask(200), 400, "already covered");
+        assert_eq!(arb.stats().leased, 400);
+    }
+
+    #[test]
+    fn mandatory_floor_overdraws_and_is_counted() {
+        let arb = BudgetArbiter::new(100);
+        let mut a = arb.lease();
+        let mut b = arb.lease();
+        a.ask(100);
+        assert_eq!(b.ask(80), 0);
+        // b must keep one 80-byte record resident regardless
+        b.settle(80);
+        let st = arb.stats();
+        assert_eq!(st.leased, 180);
+        assert_eq!(st.over_grant_bytes, 80);
+        assert_eq!(st.peak_leased, 180);
+    }
+
+    #[test]
+    fn parties_cap_prevents_sequential_hoarding() {
+        // without the fair-share cap, a store that runs first would lease
+        // the whole pool; every later store's mandatory floor would then
+        // overdraw the budget
+        let arb = BudgetArbiter::new(900);
+        arb.set_parties(3);
+        let mut a = arb.lease();
+        assert_eq!(a.ask(900), 300, "capped at total/parties");
+        assert_eq!(a.ask(901), 300, "repeat asks stay capped");
+        let mut b = arb.lease();
+        assert_eq!(b.ask(500), 300);
+        let mut c = arb.lease();
+        assert_eq!(c.ask(100), 100, "under-share asks granted in full");
+        let st = arb.stats();
+        assert!(st.peak_leased <= 900, "{st:?}");
+        assert_eq!(st.over_grant_bytes, 0);
+    }
+
+    #[test]
+    fn drop_releases_everything() {
+        let arb = BudgetArbiter::new(256);
+        {
+            let mut a = arb.lease();
+            a.ask(256);
+            assert_eq!(arb.stats().leased, 256);
+        }
+        assert_eq!(arb.stats().leased, 0);
+        assert_eq!(arb.stats().peak_leased, 256, "peak is a high-water mark");
+    }
+
+    #[test]
+    fn concurrent_asks_never_exceed_the_pool() {
+        let arb = BudgetArbiter::new(10_000);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let arb = arb.clone();
+                s.spawn(move || {
+                    let mut l = arb.lease();
+                    for want in [100u64, 900, 2500, 400] {
+                        l.ask(want);
+                        assert!(arb.stats().leased <= 10_000);
+                        l.settle(want.min(l.held()));
+                    }
+                });
+            }
+        });
+        assert_eq!(arb.stats().leased, 0);
+        let st = arb.stats();
+        assert!(st.peak_leased <= 10_000, "{st:?}");
+        assert_eq!(st.over_grant_bytes, 0, "no floors used: {st:?}");
+    }
+}

@@ -1,0 +1,177 @@
+//! Data-parallel adjoint execution engine (DESIGN.md §8).
+//!
+//! Three independent pieces compose into the fleet-level system:
+//!
+//! * [`pool`] — a scoped worker pool draining an indexed job list
+//!   (results always in job order);
+//! * [`reduce`] — fixed-shape tree reduction, so combined shard
+//!   gradients are bitwise identical for `workers = 1, 2, N`;
+//! * [`arbiter`] — the shared checkpoint-memory arbiter leasing one
+//!   global hot-tier byte pool to concurrent tiered stores.
+//!
+//! The determinism contract: *sharding* is a pure function of the batch
+//! size and [`ExecConfig::shard_rows`] (never of the worker count), each
+//! shard's computation is self-contained, and the reduction shape is
+//! fixed by the shard count — so the worker count only changes wall
+//! clock, never bits.  See [`crate::methods::ParallelAdjoint`] for the
+//! end-to-end wrapper.
+
+pub mod arbiter;
+pub mod pool;
+pub mod reduce;
+
+pub use arbiter::{ArbiterStats, BudgetArbiter, Lease};
+
+/// Default rows per shard: small enough that a typical minibatch yields
+/// more shards than cores (load balancing), large enough that per-shard
+/// GEMMs stay efficient.
+pub const DEFAULT_SHARD_ROWS: usize = 16;
+
+/// Worker-pool configuration for data-parallel gradient execution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecConfig {
+    /// concurrent worker threads (wall-clock knob; never changes bits)
+    pub workers: usize,
+    /// rows per shard (determinism knob: fixes the shard decomposition
+    /// and therefore the reduction shape)
+    pub shard_rows: usize,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig { workers: default_workers(), shard_rows: DEFAULT_SHARD_ROWS }
+    }
+}
+
+impl ExecConfig {
+    pub fn with_workers(workers: usize) -> Self {
+        ExecConfig { workers, shard_rows: DEFAULT_SHARD_ROWS }
+    }
+}
+
+/// Default worker count: `PNODE_WORKERS` if set (>= 1), else the
+/// machine's available parallelism.
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("PNODE_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Decompose `rows` batch rows into contiguous shards of (at most)
+/// `shard_rows` rows.  Depends only on its arguments — in particular not
+/// on the worker count — which is what makes shard-order concatenation
+/// and tree reduction worker-count independent.
+pub fn shard_ranges(rows: usize, shard_rows: usize) -> Vec<std::ops::Range<usize>> {
+    let sr = shard_rows.max(1);
+    (0..rows).step_by(sr).map(|lo| lo..(lo + sr).min(rows)).collect()
+}
+
+/// Execution counters for one data-parallel gradient, reported through
+/// `MethodReport::exec` into `ExperimentRow`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ExecStats {
+    /// worker threads used
+    pub workers: u64,
+    /// shards the batch was decomposed into
+    pub shards: u64,
+    /// batch rows per second over the forward+backward pair
+    pub samples_per_sec: f64,
+    /// global hot-tier pool size (0 when no arbiter governs the run)
+    pub lease_pool_bytes: u64,
+    /// arbiter peak leased bytes (the fleet's concurrent hot footprint)
+    pub peak_leased_bytes: u64,
+    /// clipped lease asks during this gradient (contention events)
+    pub lease_waits: u64,
+    /// bytes of clipped grant during this gradient
+    pub lease_denied_bytes: u64,
+    /// peak mandatory-floor overdraw beyond the pool
+    pub over_grant_bytes: u64,
+}
+
+impl ExecStats {
+    /// Fold another block's execution stats into this aggregate
+    /// (multi-block tasks run their blocks sequentially): contention
+    /// counters accumulate, peaks widen, and the reported throughput is
+    /// the slowest block's (conservative).
+    pub fn merge(&mut self, other: &ExecStats) {
+        self.workers = self.workers.max(other.workers);
+        self.shards = self.shards.max(other.shards);
+        self.samples_per_sec = if self.samples_per_sec == 0.0 {
+            other.samples_per_sec
+        } else if other.samples_per_sec == 0.0 {
+            self.samples_per_sec
+        } else {
+            self.samples_per_sec.min(other.samples_per_sec)
+        };
+        self.lease_pool_bytes = self.lease_pool_bytes.max(other.lease_pool_bytes);
+        self.peak_leased_bytes = self.peak_leased_bytes.max(other.peak_leased_bytes);
+        self.lease_waits += other.lease_waits;
+        self.lease_denied_bytes += other.lease_denied_bytes;
+        self.over_grant_bytes = self.over_grant_bytes.max(other.over_grant_bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_tile_exactly_and_ignore_worker_count() {
+        let r = shard_ranges(40, 16);
+        assert_eq!(r, vec![0..16, 16..32, 32..40]);
+        assert_eq!(shard_ranges(16, 16), vec![0..16]);
+        assert_eq!(shard_ranges(5, 2), vec![0..2, 2..4, 4..5]);
+        assert_eq!(shard_ranges(0, 8), Vec::<std::ops::Range<usize>>::new());
+        assert_eq!(shard_ranges(3, 0), vec![0..1, 1..2, 2..3], "shard_rows clamps to 1");
+        // coverage is a partition
+        let r = shard_ranges(101, 7);
+        let total: usize = r.iter().map(|x| x.len()).sum();
+        assert_eq!(total, 101);
+        for w in r.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+    }
+
+    #[test]
+    fn default_workers_is_at_least_one() {
+        assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn exec_stats_merge_semantics() {
+        let mut a = ExecStats {
+            workers: 4,
+            shards: 8,
+            samples_per_sec: 100.0,
+            lease_pool_bytes: 1024,
+            peak_leased_bytes: 900,
+            lease_waits: 2,
+            lease_denied_bytes: 64,
+            over_grant_bytes: 0,
+        };
+        let b = ExecStats {
+            workers: 4,
+            shards: 8,
+            samples_per_sec: 80.0,
+            lease_pool_bytes: 1024,
+            peak_leased_bytes: 1000,
+            lease_waits: 1,
+            lease_denied_bytes: 16,
+            over_grant_bytes: 8,
+        };
+        a.merge(&b);
+        assert_eq!(a.samples_per_sec, 80.0, "slowest block wins");
+        assert_eq!(a.peak_leased_bytes, 1000);
+        assert_eq!(a.lease_waits, 3);
+        assert_eq!(a.lease_denied_bytes, 80);
+        assert_eq!(a.over_grant_bytes, 8);
+        let mut c = ExecStats::default();
+        c.merge(&a);
+        assert_eq!(c.samples_per_sec, 80.0, "zero treated as unset");
+    }
+}

@@ -1,0 +1,99 @@
+//! Scoped worker pool: a fixed job list drained by `workers` threads
+//! claiming indices from an atomic counter (dynamic load balancing — a
+//! slow shard never serializes the fast ones behind it).
+//!
+//! Results land in per-index slots, so the returned `Vec` is in job
+//! order regardless of which worker ran what — callers downstream (the
+//! deterministic tree reduction, row concatenation) see a worker-count-
+//! independent ordering by construction.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `job(0..n_jobs)` on up to `workers` threads; results in job order.
+///
+/// `workers <= 1` (or a single job) runs inline on the caller's thread.
+/// A panicking job propagates the panic to the caller once the scope
+/// joins.
+pub fn run_indexed<T, F>(workers: usize, n_jobs: usize, job: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n_jobs == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n_jobs);
+    if workers == 1 {
+        return (0..n_jobs).map(job).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n_jobs).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_jobs {
+                    break;
+                }
+                let out = job(i);
+                *slots[i].lock().expect("result slot") = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().expect("result slot").expect("job completed"))
+        .collect()
+}
+
+/// [`run_indexed`] over owned one-shot jobs (each consumed exactly once).
+pub fn run_once_jobs<T, J>(workers: usize, jobs: Vec<J>) -> Vec<T>
+where
+    T: Send,
+    J: FnOnce() -> T + Send,
+{
+    let jobs: Vec<Mutex<Option<J>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    run_indexed(workers, jobs.len(), |i| {
+        let job = jobs[i].lock().expect("job slot").take().expect("job taken once");
+        job()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn results_are_in_job_order_for_any_worker_count() {
+        for workers in [1usize, 2, 3, 8, 64] {
+            let out = run_indexed(workers, 17, |i| i * i);
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>(), "workers={workers}");
+        }
+        assert!(run_indexed(4, 0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        let hits = AtomicU64::new(0);
+        let out = run_indexed(5, 100, |i| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+        assert_eq!(out.len(), 100);
+    }
+
+    #[test]
+    fn once_jobs_move_their_captures() {
+        let jobs: Vec<_> = (0..6)
+            .map(|i| {
+                let owned = vec![i as f32; 4];
+                move || owned.iter().sum::<f32>()
+            })
+            .collect();
+        let out = run_once_jobs(3, jobs);
+        assert_eq!(out, vec![0.0, 4.0, 8.0, 12.0, 16.0, 20.0]);
+    }
+}

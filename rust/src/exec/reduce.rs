@@ -1,0 +1,105 @@
+//! Fixed-order tree reduction for shard results.
+//!
+//! Floating-point addition is not associative, so the *shape* of the
+//! reduction is part of the result.  These combiners always pair
+//! neighbours `(0,1), (2,3), …` round by round over the shard-ordered
+//! input — the shape depends only on the number of shards, never on how
+//! many workers computed them or in what order they finished.  That is
+//! the second half of the engine's determinism argument (the first half
+//! is worker-count-independent sharding).
+
+/// Fold `items` with `combine` over a fixed-shape binary tree.
+/// Returns `None` for an empty input.
+pub fn tree_fold<T>(mut items: Vec<T>, combine: impl Fn(T, T) -> T) -> Option<T> {
+    while items.len() > 1 {
+        let mut next = Vec::with_capacity(items.len().div_ceil(2));
+        let mut it = items.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(combine(a, b)),
+                None => next.push(a), // odd tail passes through unchanged
+            }
+        }
+        items = next;
+    }
+    items.pop()
+}
+
+/// Elementwise tree-sum of equal-length vectors.
+pub fn tree_sum(parts: Vec<Vec<f32>>) -> Option<Vec<f32>> {
+    tree_fold(parts, |mut a, b| {
+        debug_assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter_mut().zip(&b) {
+            *x += *y;
+        }
+        a
+    })
+}
+
+/// `acc += tree_sum(parts)` (no-op for empty `parts`).
+pub fn tree_sum_into(acc: &mut [f32], parts: Vec<Vec<f32>>) {
+    if let Some(total) = tree_sum(parts) {
+        assert_eq!(total.len(), acc.len(), "shard gradient length mismatch");
+        for (x, y) in acc.iter_mut().zip(&total) {
+            *x += *y;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tree_shape_is_the_documented_pairing() {
+        // strings make the reduction shape observable
+        let parts: Vec<String> = ["a", "b", "c", "d", "e"].iter().map(|s| s.to_string()).collect();
+        let folded = tree_fold(parts, |a, b| format!("({a}+{b})"));
+        assert_eq!(folded.as_deref(), Some("(((a+b)+(c+d))+e)"));
+        assert_eq!(tree_fold(Vec::<u32>::new(), |a, b| a + b), None);
+        assert_eq!(tree_fold(vec![7u32], |a, b| a + b), Some(7));
+    }
+
+    #[test]
+    fn tree_sum_is_reproducible_and_shape_dependent() {
+        let mut rng = Rng::new(9);
+        let parts: Vec<Vec<f32>> = (0..7)
+            .map(|_| {
+                let mut v = vec![0.0f32; 33];
+                rng.fill_normal(&mut v);
+                // widen the dynamic range so fold order visibly matters
+                for (i, x) in v.iter_mut().enumerate() {
+                    *x *= 10f32.powi((i % 7) as i32 - 3);
+                }
+                v
+            })
+            .collect();
+        let a = tree_sum(parts.clone()).unwrap();
+        let b = tree_sum(parts.clone()).unwrap();
+        assert_eq!(a, b, "same shards, same shape, same bits");
+        // a left fold is a different shape; it may (and generally does)
+        // differ in the last bits — the point of fixing the tree
+        let left = parts
+            .clone()
+            .into_iter()
+            .reduce(|mut x, y| {
+                for (p, q) in x.iter_mut().zip(&y) {
+                    *p += *q;
+                }
+                x
+            })
+            .unwrap();
+        let close = a.iter().zip(&left).all(|(x, y)| (x - y).abs() <= 1e-3 * (1.0 + y.abs()));
+        assert!(close, "shapes agree to rounding");
+    }
+
+    #[test]
+    fn tree_sum_into_accumulates() {
+        let mut acc = vec![1.0f32, 2.0];
+        tree_sum_into(&mut acc, vec![vec![0.5, 0.5], vec![0.25, 0.25], vec![0.25, 0.25]]);
+        assert_eq!(acc, vec![2.0, 3.0]);
+        tree_sum_into(&mut acc, Vec::new());
+        assert_eq!(acc, vec![2.0, 3.0]);
+    }
+}

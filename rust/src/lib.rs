@@ -27,6 +27,7 @@ pub mod bench;
 pub mod checkpoint;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod linalg;
 pub mod methods;
 pub mod nn;

@@ -5,7 +5,11 @@
 //!   gradcheck                 — XLA-vs-Rust cross-check on quick_d8
 //!   train-clf [--method ...]  — classification training (spiral surrogate);
 //!                               `--grid adaptive:1e-6` switches the ODE
-//!                               blocks to PI-controlled Dopri5 stepping
+//!                               blocks to PI-controlled Dopri5 stepping;
+//!                               `--workers N` runs gradients on the
+//!                               data-parallel execution engine (default:
+//!                               PNODE_WORKERS or available parallelism —
+//!                               bitwise identical for any N)
 //!   train-stiff [--scheme cn] — stiff Robertson training
 //!   bench <table2|prop2>      — analytic tables (full benches live in
 //!                               `cargo bench` targets)
@@ -105,7 +109,8 @@ fn cmd_gradcheck() -> Result<()> {
 
 fn cmd_train_clf(args: &Args) -> Result<()> {
     use pnode::data::spiral::SpiralDataset;
-    use pnode::methods::{method_by_name, BlockSpec};
+    use pnode::exec::ExecConfig;
+    use pnode::methods::{method_by_name, parallel_method_by_name, BlockSpec};
     use pnode::nn::{Act, Optimizer};
     use pnode::ode::rhs::OdeRhs;
     use pnode::ode::tableau::Scheme;
@@ -122,6 +127,16 @@ fn cmd_train_clf(args: &Args) -> Result<()> {
     let n_blocks = args.get_usize("blocks", 4);
     let seed = args.get_u64("seed", 42);
     let use_xla = !args.flag("no-xla");
+    // --workers: data-parallel execution engine size.  Purely a wall-clock
+    // knob — sharding and reduction order are worker-count independent,
+    // so gradients (and the whole training trajectory) are bitwise
+    // identical for any N.
+    let workers = args.get_usize("workers", pnode::exec::default_workers());
+    let shard_rows = args.get_usize("shard-rows", pnode::exec::DEFAULT_SHARD_ROWS);
+    let exec_cfg = ExecConfig { workers, shard_rows };
+    pnode::tensor::gemm::set_gemm_workers(workers);
+    // validate the method spec up front (the factory below asserts)
+    method_by_name(&method_name).unwrap_or_else(|| panic!("unknown method {method_name:?}"));
 
     let mut rng = Rng::new(seed);
     const D: usize = 64;
@@ -139,14 +154,17 @@ fn cmd_train_clf(args: &Args) -> Result<()> {
         D,
         10,
         move |r| pnode::nn::init::kaiming_uniform(r, &dims_init, 1.0),
-        || method_by_name(&method_name).expect("unknown method"),
+        || parallel_method_by_name(&method_name, exec_cfg).expect("method validated above"),
     );
     println!(
-        "classification: {} blocks x {} params = {} total (paper: 199,800), grid {}",
+        "classification: {} blocks x {} params = {} total (paper: 199,800), grid {}, \
+         engine {} workers x {}-row shards (XLA RHS is not shardable: falls back to 1)",
         n_blocks,
         per_block,
         per_block * n_blocks,
-        grid_name
+        grid_name,
+        workers,
+        shard_rows
     );
 
     let mut rhs: Box<dyn OdeRhs> = if use_xla {
@@ -187,14 +205,16 @@ fn cmd_train_clf(args: &Args) -> Result<()> {
         );
         if step % 10 == 0 || step + 1 == steps {
             println!(
-                "step {step:4}  loss {:.4}  acc {:.3}  |g| {:.2e}  nfe {}/{}  steps {}+{}rej",
+                "step {step:4}  loss {:.4}  acc {:.3}  |g| {:.2e}  nfe {}/{}  steps {}+{}rej  \
+                 {:.0} samp/s",
                 res.loss,
                 res.accuracy,
                 gn,
                 res.report.nfe_forward,
                 res.report.nfe_backward,
                 res.report.n_accepted,
-                res.report.n_rejected
+                res.report.n_rejected,
+                res.report.exec.samples_per_sec
             );
         }
     }

@@ -6,13 +6,16 @@
 
 pub mod baselines;
 pub mod memmodel;
+pub mod parallel;
 pub mod pnode;
 
 pub use baselines::{Aca, Anode, NodeCont, NodeNaive};
 pub use memmodel::MemModel;
+pub use parallel::ParallelAdjoint;
 pub use pnode::Pnode;
 
 use crate::checkpoint::{CheckpointPolicy, TierStats};
+use crate::exec::{ExecConfig, ExecStats};
 use crate::ode::grid::TimeGrid;
 use crate::ode::rhs::OdeRhs;
 use crate::ode::tableau::Scheme;
@@ -74,6 +77,9 @@ pub struct MethodReport {
     /// storage-tier counters (hot/cold bytes, spills, prefetch hits);
     /// zeros beyond the hot fields for purely in-memory checkpointing
     pub tier: TierStats,
+    /// data-parallel execution counters (workers, shards, throughput,
+    /// arbiter lease contention); zeros for single-threaded methods
+    pub exec: ExecStats,
 }
 
 impl MethodReport {
@@ -111,7 +117,10 @@ impl MethodReport {
 }
 
 /// A gradient engine for one ODE block.
-pub trait GradientMethod {
+///
+/// `Send` so engines (with their checkpoint state between `forward` and
+/// `backward`) can move across the execution engine's worker threads.
+pub trait GradientMethod: Send {
     fn name(&self) -> &'static str;
 
     /// Whether gradients are exact to machine precision wrt the discrete map.
@@ -146,6 +155,33 @@ pub fn method_by_name(name: &str) -> Option<Box<dyn GradientMethod>> {
     })
 }
 
+/// The PNODE checkpoint policy a method name denotes, if any (`pnode`,
+/// `pnode2`, `pnode:<policy>`).
+pub fn pnode_policy_of_name(name: &str) -> Option<CheckpointPolicy> {
+    match name {
+        "pnode" => Some(CheckpointPolicy::All),
+        "pnode2" => Some(CheckpointPolicy::SolutionOnly),
+        _ => CheckpointPolicy::parse(name.strip_prefix("pnode:")?).ok(),
+    }
+}
+
+/// Data-parallel wrapper over [`method_by_name`]: the named method runs
+/// one instance per batch shard on the `cfg` worker pool (falling back to
+/// a single instance for non-shardable RHSs).  `pnode:tiered:*` specs get
+/// their budget lifted into a shared [`crate::exec::BudgetArbiter`], so
+/// the whole shard fleet draws from ONE global hot-tier pool.
+pub fn parallel_method_by_name(name: &str, cfg: ExecConfig) -> Option<Box<dyn GradientMethod>> {
+    if let Some(policy) = pnode_policy_of_name(name) {
+        return Some(Box::new(ParallelAdjoint::pnode(policy, cfg)));
+    }
+    method_by_name(name)?; // validate before capturing the name
+    let name = name.to_string();
+    Some(Box::new(ParallelAdjoint::new(
+        Box::new(move || method_by_name(&name).expect("name validated above")),
+        cfg,
+    )))
+}
+
 /// All method names in the paper's table order.
 pub static METHOD_NAMES: &[&str] = &["naive", "cont", "anode", "aca", "pnode", "pnode2"];
 
@@ -163,5 +199,23 @@ mod tests {
         assert!(method_by_name("pnode:tiered:8m:/tmp/pnode-spill:binomial:4").is_some());
         assert!(method_by_name("pnode:binomial:0").is_none(), "degenerate policy rejected");
         assert!(method_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn parallel_factory_wraps_every_name() {
+        let cfg = ExecConfig { workers: 2, shard_rows: 4 };
+        for name in METHOD_NAMES {
+            assert!(parallel_method_by_name(name, cfg).is_some(), "{name}");
+        }
+        assert!(parallel_method_by_name("pnode:binomial:4", cfg).is_some());
+        assert!(parallel_method_by_name("nope", cfg).is_none());
+        assert_eq!(pnode_policy_of_name("pnode"), Some(CheckpointPolicy::All));
+        assert_eq!(pnode_policy_of_name("pnode2"), Some(CheckpointPolicy::SolutionOnly));
+        assert_eq!(
+            pnode_policy_of_name("pnode:binomial:3"),
+            Some(CheckpointPolicy::Binomial { n_checkpoints: 3 })
+        );
+        assert_eq!(pnode_policy_of_name("cont"), None);
+        assert_eq!(pnode_policy_of_name("pnode:bogus"), None);
     }
 }

@@ -1,0 +1,465 @@
+//! `ParallelAdjoint` — the data-parallel adjoint execution engine's
+//! [`GradientMethod`] face (DESIGN.md §8).
+//!
+//! The wrapper shards a minibatch into worker-count-*independent* row
+//! shards ([`crate::exec::shard_ranges`]), runs one independent inner
+//! gradient engine per shard on the worker pool (each shard owns its RHS
+//! clone and its checkpoint backend), and combines results
+//! deterministically: final states and λ are pure row concatenations,
+//! and the per-shard θ̄ contributions are summed through a fixed-shape
+//! tree ([`crate::exec::reduce`]).  Consequence: gradients are **bitwise
+//! identical for `workers = 1, 2, N`** — the worker count is purely a
+//! wall-clock knob.
+//!
+//! Adaptive grids: the PI controller's error norm couples batch rows, so
+//! per-shard adaptation would give every shard (and therefore every
+//! `shard_rows` choice) its own grid.  Instead the forward pass generates
+//! the accepted grid ONCE on the full batch and every shard replays it as
+//! a frozen explicit grid — one extra forward integration, charged to
+//! `nfe_forward`, in exchange for a single shared time discretization.
+//!
+//! Memory: with a `Tiered` policy (see [`ParallelAdjoint::pnode`]) the
+//! policy's budget becomes one global pool behind a
+//! [`crate::exec::BudgetArbiter`]; the shard fleet's stores lease their
+//! hot-tier bytes from it and degrade by spilling — never by exceeding
+//! the budget.  Arbiter counters flow out through `MethodReport::exec`.
+//!
+//! Determinism caveat: the bitwise-across-workers guarantee requires
+//! value-preserving storage.  Exact (f32) spills qualify; `+f16` spills
+//! are lossy, and under the shared pool *which* records spill depends on
+//! timing-dependent lease grants — so tiered`+f16` fleets are
+//! approximate (as f16 already is vs. in-memory), not bitwise across
+//! worker counts.
+
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::checkpoint::{CheckpointPolicy, TierStats};
+use crate::exec::arbiter::{ArbiterStats, BudgetArbiter};
+use crate::exec::{pool, reduce, shard_ranges, ExecConfig, ExecStats};
+use crate::methods::{BlockSpec, GradientMethod, MethodReport, Pnode};
+use crate::ode::grid::{integrate_erk_over, TimeGrid};
+use crate::ode::rhs::OdeRhs;
+
+/// Factory for per-shard inner gradient engines (one independent
+/// instance per shard per forward pass).
+pub type MethodFactory = Box<dyn Fn() -> Box<dyn GradientMethod> + Send + Sync>;
+
+/// One shard's engine state, retained between `forward` and `backward`.
+struct Shard {
+    rows: Range<usize>,
+    rhs: Box<dyn OdeRhs + Send>,
+    method: Box<dyn GradientMethod>,
+}
+
+pub struct ParallelAdjoint {
+    make: MethodFactory,
+    pub cfg: ExecConfig,
+    arbiter: Option<Arc<BudgetArbiter>>,
+    /// arbiter snapshot at forward start, for per-gradient deltas
+    arb_base: ArbiterStats,
+    shards: Vec<Shard>,
+    /// the spec shards actually ran (adaptive grids frozen to explicit)
+    shard_spec: Option<BlockSpec>,
+    /// single-engine path for non-shardable RHSs
+    fallback: Option<Box<dyn GradientMethod>>,
+    inner_reverse_accurate: bool,
+    batch_rows: usize,
+    row_len: usize,
+    /// forward NFE + rejected trials of the grid-generation pre-pass
+    pre_nfe: u64,
+    pre_rejected: usize,
+    fwd_secs: f64,
+    report: MethodReport,
+}
+
+impl ParallelAdjoint {
+    pub fn new(make: MethodFactory, cfg: ExecConfig) -> Self {
+        let inner_reverse_accurate = make().reverse_accurate();
+        ParallelAdjoint {
+            make,
+            cfg,
+            arbiter: None,
+            arb_base: ArbiterStats::default(),
+            shards: Vec::new(),
+            shard_spec: None,
+            fallback: None,
+            inner_reverse_accurate,
+            batch_rows: 0,
+            row_len: 0,
+            pre_nfe: 0,
+            pre_rejected: 0,
+            fwd_secs: 0.0,
+            report: MethodReport::default(),
+        }
+    }
+
+    /// Report this arbiter's counters through `MethodReport::exec` (set
+    /// automatically by [`ParallelAdjoint::pnode`] for tiered policies).
+    pub fn with_arbiter(mut self, arbiter: Arc<BudgetArbiter>) -> Self {
+        self.arbiter = Some(arbiter);
+        self
+    }
+
+    /// Data-parallel PNODE with the given checkpoint policy.  A `Tiered`
+    /// policy's `budget_bytes` becomes ONE global hot-tier pool shared by
+    /// every shard's store through a [`BudgetArbiter`] — the fleet-level
+    /// memory/compute trade-off.
+    pub fn pnode(policy: CheckpointPolicy, cfg: ExecConfig) -> Self {
+        match &policy {
+            CheckpointPolicy::Tiered { budget_bytes, .. } => {
+                let arbiter = BudgetArbiter::new(*budget_bytes);
+                let arb = arbiter.clone();
+                ParallelAdjoint::new(
+                    Box::new(move || Box::new(Pnode::with_arbiter(policy.clone(), arb.clone()))),
+                    cfg,
+                )
+                .with_arbiter(arbiter)
+            }
+            _ => ParallelAdjoint::new(Box::new(move || Box::new(Pnode::new(policy.clone()))), cfg),
+        }
+    }
+
+    /// The arbiter's live counters, when a shared pool governs this engine.
+    pub fn arbiter_stats(&self) -> Option<ArbiterStats> {
+        self.arbiter.as_ref().map(|a| a.stats())
+    }
+}
+
+/// Sum tier counters across shards (traffic totals; note the summed
+/// per-store `peak_hot_bytes` is an upper bound on the fleet's concurrent
+/// footprint — the arbiter's `peak_leased_bytes` is the concurrent truth).
+fn combine_tier(acc: &mut TierStats, t: &TierStats) {
+    acc.hot_bytes += t.hot_bytes;
+    acc.peak_hot_bytes += t.peak_hot_bytes;
+    acc.cold_bytes_written += t.cold_bytes_written;
+    acc.cold_bytes_live += t.cold_bytes_live;
+    acc.spills += t.spills;
+    acc.hot_hits += t.hot_hits;
+    acc.prefetch_hits += t.prefetch_hits;
+    acc.cold_reads += t.cold_reads;
+    acc.compressed_elems += t.compressed_elems;
+    acc.compress_max_abs_err = acc.compress_max_abs_err.max(t.compress_max_abs_err);
+}
+
+impl GradientMethod for ParallelAdjoint {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn reverse_accurate(&self) -> bool {
+        self.inner_reverse_accurate
+    }
+
+    fn forward(&mut self, rhs: &dyn OdeRhs, spec: &BlockSpec, u0: &[f32]) -> Vec<f32> {
+        let started = Instant::now();
+        self.shards.clear();
+        self.shard_spec = None;
+        self.fallback = None;
+        self.pre_nfe = 0;
+        self.pre_rejected = 0;
+        self.report = MethodReport::default();
+        if let Some(arb) = &self.arbiter {
+            self.arb_base = arb.stats();
+        }
+
+        let rows = rhs.batch_rows();
+        let ranges = shard_ranges(rows, self.cfg.shard_rows);
+        // the probe doubles as shard 0's RHS below — never a wasted clone
+        let mut probe = if ranges.len() > 1 { rhs.make_shard(ranges[0].len()) } else { None };
+        if probe.is_none() {
+            let mut m = (self.make)();
+            let uf = m.forward(rhs, spec, u0);
+            self.fallback = Some(m);
+            self.batch_rows = rows;
+            self.fwd_secs = started.elapsed().as_secs_f64();
+            return uf;
+        }
+        self.batch_rows = rows;
+        self.row_len = rhs.state_len() / rows;
+        // fair-share the global pool across the fleet: every shard's
+        // store coexists from its forward until its backward, whatever
+        // the worker count, so the partition is over shards, not workers
+        if let Some(arb) = &self.arbiter {
+            arb.set_parties(ranges.len());
+        }
+
+        // Adaptive grids: one grid-generation pass on the full batch; all
+        // shards replay the frozen accepted grid (see module docs).
+        let grid = match &spec.grid {
+            TimeGrid::Adaptive { .. } => {
+                rhs.reset_nfe();
+                let run = integrate_erk_over(
+                    spec.scheme.tableau(),
+                    rhs,
+                    spec.t0,
+                    spec.tf,
+                    &spec.grid,
+                    u0,
+                    |_, _, _, _, _, _| {},
+                );
+                self.pre_nfe = rhs.nfe().forward;
+                self.pre_rejected = run.n_rejected;
+                TimeGrid::Explicit(run.steps)
+            }
+            g => g.clone(),
+        };
+        let shard_spec = BlockSpec { scheme: spec.scheme, t0: spec.t0, tf: spec.tf, grid };
+
+        let rl = self.row_len;
+        let jobs: Vec<_> = ranges
+            .iter()
+            .map(|r| {
+                let r = r.clone();
+                let srhs = probe
+                    .take()
+                    .unwrap_or_else(|| rhs.make_shard(r.len()).expect("shardability probed"));
+                let mut method = (self.make)();
+                let sub_u0 = u0[r.start * rl..r.end * rl].to_vec();
+                let sspec = shard_spec.clone();
+                move || {
+                    let uf = method.forward(srhs.as_ref(), &sspec, &sub_u0);
+                    (r, srhs, method, uf)
+                }
+            })
+            .collect();
+        let done = pool::run_once_jobs(self.cfg.workers, jobs);
+
+        let mut uf_full = vec![0.0f32; rows * rl];
+        for (r, srhs, method, uf) in done {
+            uf_full[r.start * rl..r.end * rl].copy_from_slice(&uf);
+            self.shards.push(Shard { rows: r, rhs: srhs, method });
+        }
+        self.shard_spec = Some(shard_spec);
+        self.fwd_secs = started.elapsed().as_secs_f64();
+        uf_full
+    }
+
+    fn backward(
+        &mut self,
+        rhs: &dyn OdeRhs,
+        spec: &BlockSpec,
+        lambda: &mut [f32],
+        grad_theta: &mut [f32],
+    ) {
+        let started = Instant::now();
+        if let Some(m) = &mut self.fallback {
+            m.backward(rhs, spec, lambda, grad_theta);
+            self.report = m.report();
+            let total = self.fwd_secs + started.elapsed().as_secs_f64();
+            let mut exec = ExecStats {
+                workers: 1,
+                shards: 1,
+                samples_per_sec: if total > 0.0 { self.batch_rows as f64 / total } else { 0.0 },
+                ..ExecStats::default()
+            };
+            // a tiered fallback still leased from the pool: report it, so
+            // the budget invariant stays checkable on non-sharded runs
+            if let Some(arb) = &self.arbiter {
+                let st = arb.stats();
+                exec.lease_pool_bytes = st.total;
+                exec.peak_leased_bytes = st.peak_leased;
+                exec.lease_waits = st.lease_waits - self.arb_base.lease_waits;
+                exec.lease_denied_bytes = st.denied_bytes - self.arb_base.denied_bytes;
+                exec.over_grant_bytes = st.over_grant_bytes;
+            }
+            self.report.exec = exec;
+            return;
+        }
+
+        let rl = self.row_len;
+        let p = grad_theta.len();
+        // shards carry the parameters of their own forward pass; re-sync
+        // to the caller's RHS so multi-block training (set_params between
+        // blocks) stays correct
+        let theta = rhs.params().to_vec();
+        let sspec = self.shard_spec.clone().expect("forward before backward");
+        let shards = std::mem::take(&mut self.shards);
+        let n_shards = shards.len();
+        let jobs: Vec<_> = shards
+            .into_iter()
+            .map(|mut sh| {
+                let mut lam = lambda[sh.rows.start * rl..sh.rows.end * rl].to_vec();
+                let sspec = sspec.clone();
+                let theta = theta.clone();
+                move || {
+                    sh.rhs.set_params(&theta);
+                    let mut g = vec![0.0f32; p];
+                    sh.method.backward(sh.rhs.as_ref(), &sspec, &mut lam, &mut g);
+                    let rep = sh.method.report();
+                    (sh.rows, lam, g, rep)
+                }
+            })
+            .collect();
+        let done = pool::run_once_jobs(self.cfg.workers, jobs);
+
+        // λ rows are shard-local: scatter back in place.  θ̄ contributions
+        // sum through the fixed-shape tree (shard order), then into the
+        // caller's accumulator.
+        let mut parts = Vec::with_capacity(n_shards);
+        let mut agg = MethodReport::default();
+        for (r, lam, g, rep) in done {
+            lambda[r.start * rl..r.end * rl].copy_from_slice(&lam);
+            parts.push(g);
+            // NFE / recompute counts are per-trajectory (grid-determined
+            // and equal across shards): keep the max so the columns stay
+            // comparable with unsharded runs.  Byte and tier counters are
+            // fleet totals: sum.
+            agg.nfe_forward = agg.nfe_forward.max(rep.nfe_forward);
+            agg.nfe_backward = agg.nfe_backward.max(rep.nfe_backward);
+            agg.recompute_steps = agg.recompute_steps.max(rep.recompute_steps);
+            agg.ckpt_bytes += rep.ckpt_bytes;
+            agg.graph_bytes = agg.graph_bytes.max(rep.graph_bytes);
+            combine_tier(&mut agg.tier, &rep.tier);
+            if agg.n_accepted == 0 {
+                agg.n_accepted = rep.n_accepted;
+                agg.h_min = rep.h_min;
+                agg.h_max = rep.h_max;
+            }
+        }
+        reduce::tree_sum_into(grad_theta, parts);
+
+        agg.nfe_forward += self.pre_nfe;
+        agg.n_rejected = self.pre_rejected as u64;
+        let total = self.fwd_secs + started.elapsed().as_secs_f64();
+        let mut exec = ExecStats {
+            // the pool clamps concurrency to the job count: report the
+            // parallelism that actually ran, not the configured ceiling
+            workers: self.cfg.workers.min(n_shards) as u64,
+            shards: n_shards as u64,
+            samples_per_sec: if total > 0.0 { self.batch_rows as f64 / total } else { 0.0 },
+            ..ExecStats::default()
+        };
+        if let Some(arb) = &self.arbiter {
+            let st = arb.stats();
+            exec.lease_pool_bytes = st.total;
+            exec.peak_leased_bytes = st.peak_leased;
+            exec.lease_waits = st.lease_waits - self.arb_base.lease_waits;
+            exec.lease_denied_bytes = st.denied_bytes - self.arb_base.denied_bytes;
+            exec.over_grant_bytes = st.over_grant_bytes;
+        }
+        agg.exec = exec;
+        self.report = agg;
+    }
+
+    fn report(&self) -> MethodReport {
+        self.report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Act;
+    use crate::ode::rhs::{LinearRhs, MlpRhs};
+    use crate::ode::tableau::Scheme;
+    use crate::testing::prop;
+    use crate::util::rng::Rng;
+
+    const B: usize = 20;
+    const D: usize = 6;
+
+    fn mk_rhs(seed: u64, batch: usize) -> MlpRhs {
+        let dims = vec![D + 1, 14, D];
+        let mut rng = Rng::new(seed);
+        let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+        MlpRhs::new(dims, Act::Tanh, true, batch, theta)
+    }
+
+    fn grad(
+        method: &mut dyn GradientMethod,
+        rhs: &MlpRhs,
+        spec: &BlockSpec,
+        u0: &[f32],
+        w: &[f32],
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, MethodReport) {
+        let uf = method.forward(rhs, spec, u0);
+        let mut lam = w.to_vec();
+        let mut g = vec![0.0f32; rhs.param_len()];
+        method.backward(rhs, spec, &mut lam, &mut g);
+        (uf, lam, g, method.report())
+    }
+
+    #[test]
+    fn sharded_gradient_matches_unsharded_rows_and_sums() {
+        // λ rows must equal the unsharded run's bitwise (row-independent
+        // paths); θ̄ differs only by summation shape, so compare to the
+        // tree-sum of per-shard analytic runs — and to the unsharded θ̄
+        // within rounding
+        let rhs = mk_rhs(3, B);
+        let mut rng = Rng::new(4);
+        let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
+        let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
+        let spec = BlockSpec::new(Scheme::Rk4, 6);
+
+        let mut single = Pnode::new(CheckpointPolicy::All);
+        let (uf_s, lam_s, g_s, _) = grad(&mut single, &rhs, &spec, &u0, &w);
+
+        let cfg = ExecConfig { workers: 3, shard_rows: 8 };
+        let mut par = ParallelAdjoint::pnode(CheckpointPolicy::All, cfg);
+        let (uf_p, lam_p, g_p, rep) = grad(&mut par, &rhs, &spec, &u0, &w);
+
+        assert_eq!(uf_p, uf_s, "final states are row concatenations");
+        assert_eq!(lam_p, lam_s, "λ rows are shard-local");
+        crate::testing::assert_allclose(&g_p, &g_s, 1e-4, 1e-5, "θ̄ reduction shape");
+        assert_eq!(rep.exec.shards, 3, "20 rows / 8 per shard");
+        assert_eq!(rep.exec.workers, 3);
+        assert!(rep.exec.samples_per_sec > 0.0);
+        assert_eq!(rep.nfe_forward, 6 * 4, "per-trajectory NFE semantics");
+    }
+
+    #[test]
+    fn non_shardable_rhs_falls_back_to_the_inner_method() {
+        let rhs = LinearRhs::new(3, vec![-0.4, 0.1, 0.0, 0.0, -0.2, 0.05, 0.0, 0.0, -0.1]);
+        let u0 = vec![1.0f32, 0.5, -0.5];
+        let w = vec![1.0f32, 1.0, 1.0];
+        let spec = BlockSpec::new(Scheme::Rk4, 5);
+
+        let run = |method: &mut dyn GradientMethod| {
+            let uf = method.forward(&rhs, &spec, &u0);
+            let mut lam = w.clone();
+            let mut g = vec![0.0f32; rhs.param_len()];
+            method.backward(&rhs, &spec, &mut lam, &mut g);
+            (uf, lam, g, method.report())
+        };
+        let mut single = Pnode::new(CheckpointPolicy::All);
+        let (uf_s, lam_s, g_s, _) = run(&mut single);
+        let mut par =
+            ParallelAdjoint::pnode(CheckpointPolicy::All, ExecConfig { workers: 4, shard_rows: 2 });
+        let (uf_p, lam_p, g_p, rep) = run(&mut par);
+        assert_eq!(uf_p, uf_s);
+        assert_eq!(lam_p, lam_s, "fallback is the plain method, bitwise");
+        assert_eq!(g_p, g_s);
+        assert_eq!(rep.exec.shards, 1);
+        assert_eq!(rep.exec.workers, 1);
+    }
+
+    #[test]
+    fn multi_block_param_resync_uses_the_callers_rhs() {
+        // backward must push the caller's CURRENT params into the shard
+        // RHSs (multi-block training mutates them between blocks)
+        let mut rng = Rng::new(12);
+        let u0 = prop::vec_uniform(&mut rng, B * D, 0.5);
+        let w = prop::vec_uniform(&mut rng, B * D, 1.0);
+        let spec = BlockSpec::new(Scheme::Rk4, 4);
+        let cfg = ExecConfig { workers: 2, shard_rows: 8 };
+
+        // reference: forward and backward both under θ_b
+        let mut rhs_b = mk_rhs(13, B);
+        let theta_b = rhs_b.params().to_vec();
+        let mut reference = ParallelAdjoint::pnode(CheckpointPolicy::All, cfg);
+        let (_, lam_ref, g_ref, _) = grad(&mut reference, &rhs_b, &spec, &u0, &w);
+
+        // same engine, forward under θ_b, backward handed an RHS carrying
+        // θ_b again (emulating the task's set_params choreography)
+        let mut par = ParallelAdjoint::pnode(CheckpointPolicy::All, cfg);
+        par.forward(&rhs_b, &spec, &u0);
+        rhs_b.set_params(&theta_b);
+        let mut lam = w.clone();
+        let mut g = vec![0.0f32; rhs_b.param_len()];
+        par.backward(&rhs_b, &spec, &mut lam, &mut g);
+        assert_eq!(lam, lam_ref);
+        assert_eq!(g, g_ref);
+    }
+}

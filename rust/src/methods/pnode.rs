@@ -5,20 +5,32 @@
 //! the spec carries — including adaptive Dopri5, where gradients are
 //! reverse-accurate with respect to the accepted discrete map.
 
+use std::sync::Arc;
+
 use crate::adjoint::driver::ErkDriver;
 use crate::checkpoint::CheckpointPolicy;
+use crate::exec::arbiter::BudgetArbiter;
 use crate::methods::{BlockSpec, GradientMethod, MethodReport};
 use crate::ode::rhs::OdeRhs;
 
 pub struct Pnode {
     pub policy: CheckpointPolicy,
+    /// fleet mode: a `Tiered` policy leases hot-tier bytes from this
+    /// shared pool instead of owning its whole budget
+    arbiter: Option<Arc<BudgetArbiter>>,
     run: Option<ErkDriver<'static>>,
     report: MethodReport,
 }
 
 impl Pnode {
     pub fn new(policy: CheckpointPolicy) -> Self {
-        Pnode { policy, run: None, report: MethodReport::default() }
+        Pnode { policy, arbiter: None, run: None, report: MethodReport::default() }
+    }
+
+    /// PNODE whose tiered checkpoint store draws from the shared
+    /// checkpoint-memory `arbiter` (see `crate::exec::BudgetArbiter`).
+    pub fn with_arbiter(policy: CheckpointPolicy, arbiter: Arc<BudgetArbiter>) -> Self {
+        Pnode { policy, arbiter: Some(arbiter), run: None, report: MethodReport::default() }
     }
 
     /// The executed (accepted) `(t_n, h_n)` grid of the latest forward
@@ -45,8 +57,14 @@ impl GradientMethod for Pnode {
     fn forward(&mut self, rhs: &dyn OdeRhs, spec: &BlockSpec, u0: &[f32]) -> Vec<f32> {
         rhs.reset_nfe();
         let tab = spec.scheme.tableau();
-        let mut run =
-            ErkDriver::erk(tab, self.policy.clone(), spec.t0, spec.tf, spec.grid.clone());
+        let mut run = ErkDriver::erk_with_arbiter(
+            tab,
+            self.policy.clone(),
+            spec.t0,
+            spec.tf,
+            spec.grid.clone(),
+            self.arbiter.clone(),
+        );
         let uf = run.forward(rhs, u0);
         self.report = MethodReport {
             nfe_forward: rhs.nfe().forward,

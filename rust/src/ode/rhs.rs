@@ -55,6 +55,24 @@ pub trait OdeRhs {
     fn activation_bytes_per_eval(&self) -> u64 {
         0
     }
+
+    /// Independent batch rows in the state (`state_len() / batch_rows()`
+    /// entries per row); 1 when the state is a single coupled system.
+    fn batch_rows(&self) -> usize {
+        1
+    }
+
+    /// Build an independent RHS of the same model over `rows` batch rows,
+    /// carrying a copy of the current parameters — `None` when the RHS is
+    /// not row-shardable.  Contract for `Some`: rows evolve independently
+    /// under `f`/`vjp`/`jvp` with identical per-row arithmetic at any
+    /// batch size, so integrating a shard reproduces the corresponding
+    /// rows of the full-batch run bitwise.  This is the basis of the
+    /// data-parallel execution engine (`crate::exec`).
+    fn make_shard(&self, rows: usize) -> Option<Box<dyn OdeRhs + Send>> {
+        let _ = rows;
+        None
+    }
 }
 
 /// Shared counter plumbing for implementations.
@@ -388,6 +406,26 @@ impl OdeRhs for MlpRhs {
     fn activation_bytes_per_eval(&self) -> u64 {
         self.mlp.activation_bytes(self.batch)
     }
+
+    fn batch_rows(&self) -> usize {
+        self.batch
+    }
+
+    fn make_shard(&self, rows: usize) -> Option<Box<dyn OdeRhs + Send>> {
+        if rows == 0 {
+            return None;
+        }
+        // per-row arithmetic is batch-size independent (each GEMM output
+        // row reads only its own input row), so a shard reproduces its
+        // rows of the full-batch run bitwise
+        Some(Box::new(MlpRhs::new(
+            self.mlp.dims.clone(),
+            self.mlp.act,
+            self.time_dep,
+            rows,
+            self.mlp.params().to_vec(),
+        )))
+    }
 }
 
 #[cfg(test)]
@@ -476,6 +514,42 @@ mod tests {
         rhs.f(0.1, &u, &mut out);
         rhs.vjp_u(0.0, &u, &out.clone(), &mut out);
         assert_eq!(rhs.nfe(), Nfe { forward: 2, backward: 1 });
+    }
+
+    #[test]
+    fn shards_reproduce_full_batch_rows_bitwise() {
+        let rhs = mk_mlp(21); // batch 3, state_dim 4
+        let d = rhs.state_dim;
+        let b = rhs.batch_rows();
+        assert_eq!(b, 3);
+        let mut rng = Rng::new(22);
+        let u = prop::vec_normal(&mut rng, rhs.state_len());
+        let v = prop::vec_normal(&mut rng, rhs.state_len());
+        let mut full_f = vec![0.0f32; rhs.state_len()];
+        rhs.f(0.4, &u, &mut full_f);
+        let mut full_vjp = vec![0.0f32; rhs.state_len()];
+        rhs.vjp_u(0.4, &u, &v, &mut full_vjp);
+
+        // single-row shards
+        let one = rhs.make_shard(1).expect("MlpRhs is shardable");
+        assert_eq!(one.batch_rows(), 1);
+        assert_eq!(one.param_len(), rhs.param_len());
+        for r in 0..b {
+            let mut out = vec![0.0f32; d];
+            one.f(0.4, &u[r * d..(r + 1) * d], &mut out);
+            assert_eq!(out, &full_f[r * d..(r + 1) * d], "f row {r} bitwise");
+            let mut gv = vec![0.0f32; d];
+            one.vjp_u(0.4, &u[r * d..(r + 1) * d], &v[r * d..(r + 1) * d], &mut gv);
+            assert_eq!(gv, &full_vjp[r * d..(r + 1) * d], "vjp row {r} bitwise");
+        }
+        // a two-row shard over rows 0..2
+        let two = rhs.make_shard(2).expect("shardable");
+        let mut out = vec![0.0f32; 2 * d];
+        two.f(0.4, &u[..2 * d], &mut out);
+        assert_eq!(out, &full_f[..2 * d], "two-row shard bitwise");
+        assert!(rhs.make_shard(0).is_none());
+        // non-batched RHSs opt out
+        assert!(LinearRhs::new(2, vec![0.0; 4]).make_shard(1).is_none());
     }
 
     #[test]

@@ -113,6 +113,7 @@ impl ClassificationTask {
             // one at a time
             report.graph_bytes = report.graph_bytes.max(r.graph_bytes);
             report.merge_grid(&r);
+            report.exec.merge(&r.exec);
         }
         self.readout.apply_grads(readout_lr, &ro);
         StepResult { loss: ro.loss, accuracy: ro.accuracy, grad, report }

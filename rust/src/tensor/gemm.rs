@@ -1,6 +1,73 @@
 //! Small blocked SGEMM for the pure-Rust MLP (cross-check path and
 //! XLA-free tests).  The production hot path runs GEMMs inside the AOT HLO;
 //! this one only needs to be correct and reasonably fast.
+//!
+//! Two performance features, both value-preserving:
+//!
+//! * a zero-skip fast path (`a` entries that are exactly 0 skip their `b`
+//!   row), guarded so it only fires when `b` is entirely finite —
+//!   `0 * NaN = NaN` and `0 * Inf = NaN` must poison the output, not be
+//!   silently dropped.  The finiteness scan runs lazily on the first
+//!   zero encountered, so zero-free GEMMs pay nothing for the guard;
+//! * row-blocked parallelism for large outputs ([`set_gemm_workers`]):
+//!   each worker computes a disjoint block of `c` rows with the *same*
+//!   per-row arithmetic as the serial loop, so the result is bitwise
+//!   identical for any worker count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker threads [`sgemm`] may use for large outputs (process-wide; set
+/// from `--workers` / `PNODE_WORKERS`).  1 disables parallelism.
+static GEMM_WORKERS: AtomicUsize = AtomicUsize::new(1);
+
+pub fn set_gemm_workers(n: usize) {
+    GEMM_WORKERS.store(n.max(1), Ordering::Relaxed);
+}
+
+pub fn gemm_workers() -> usize {
+    GEMM_WORKERS.load(Ordering::Relaxed)
+}
+
+/// Row-blocking only pays above this many output rows...
+const PAR_MIN_ROWS: usize = 64;
+/// ...and this many multiply-adds (thread spawn is a few tens of µs).
+const PAR_MIN_MULADDS: u64 = 1 << 21;
+
+/// Lazily computed "is `b` entirely finite" — the zero-skip gate.  The
+/// scan costs O(k·n), so it only runs if a zero in `a` is actually
+/// encountered; GEMMs whose `a` has no exact zeros pay nothing.
+#[derive(Clone, Copy, Default)]
+struct BFinite(Option<bool>);
+
+impl BFinite {
+    #[inline]
+    fn check(&mut self, b: &[f32]) -> bool {
+        *self.0.get_or_insert_with(|| b.iter().all(|x| x.is_finite()))
+    }
+}
+
+/// The serial ikj kernel over output rows `[i0, i0 + rows)` of c.
+fn sgemm_rows(i0: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    if n == 0 {
+        return;
+    }
+    let mut b_finite = BFinite::default();
+    let rows = c.len() / n;
+    for r in 0..rows {
+        let i = i0 + r;
+        let crow = &mut c[r * n..(r + 1) * n];
+        for p in 0..k {
+            let aval = a[i * k + p];
+            if aval == 0.0 && b_finite.check(b) {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += aval * brow[j];
+            }
+        }
+    }
+}
 
 /// c[m,n] (+)= a[m,k] @ b[k,n];  row-major, `beta` scales existing c.
 pub fn sgemm(
@@ -22,20 +89,19 @@ pub fn sgemm(
             *x *= beta;
         }
     }
-    // ikj loop order: unit-stride inner loop over b and c rows.
-    for i in 0..m {
-        let crow = &mut c[i * n..(i + 1) * n];
-        for p in 0..k {
-            let aval = a[i * k + p];
-            if aval == 0.0 {
-                continue;
+    let workers = gemm_workers();
+    if workers > 1 && m >= PAR_MIN_ROWS && (m as u64) * (k as u64) * (n as u64) >= PAR_MIN_MULADDS
+    {
+        // row-blocked: disjoint c row blocks, identical per-row arithmetic
+        let rows_per = m.div_ceil(workers);
+        std::thread::scope(|s| {
+            for (bi, cblock) in c.chunks_mut(rows_per * n).enumerate() {
+                s.spawn(move || sgemm_rows(bi * rows_per, k, n, a, b, cblock));
             }
-            let brow = &b[p * n..(p + 1) * n];
-            for j in 0..n {
-                crow[j] += aval * brow[j];
-            }
-        }
+        });
+        return;
     }
+    sgemm_rows(0, k, n, a, b, c);
 }
 
 /// c[m,n] (+)= a^T[m,k] @ b[k,n] where a is stored [k,m] row-major.
@@ -58,12 +124,13 @@ pub fn sgemm_at(
             *x *= beta;
         }
     }
+    let mut b_finite = BFinite::default();
     for p in 0..k {
         let arow = &a[p * m..(p + 1) * m];
         let brow = &b[p * n..(p + 1) * n];
         for i in 0..m {
             let aval = arow[i];
-            if aval == 0.0 {
+            if aval == 0.0 && b_finite.check(b) {
                 continue;
             }
             let crow = &mut c[i * n..(i + 1) * n];
@@ -150,6 +217,52 @@ mod tests {
             *w += 1.0;
         }
         assert_eq!(c, want);
+    }
+
+    #[test]
+    fn zero_skip_does_not_swallow_non_finite_b() {
+        // regression: `a` entries that are exactly 0 used to skip their
+        // `b` row unconditionally, silently dropping 0·NaN / 0·Inf
+        for poison in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            // c[0,0] = 0·poison + 1·3, c[0,1] = 0·2 + 1·4
+            let a = vec![0.0f32, 1.0];
+            let b = vec![poison, 2.0, 3.0, 4.0];
+            let mut c = vec![0.0f32; 2];
+            sgemm(1, 2, 2, &a, &b, &mut c, 0.0);
+            assert!(c[0].is_nan(), "0·{poison} must poison the output, got {}", c[0]);
+            assert_eq!(c[1], 4.0, "finite columns are unaffected");
+
+            // a^T variant: same contraction, a stored [k=2, m=1]
+            let at = vec![0.0f32, 1.0];
+            let mut c2 = vec![0.0f32; 2];
+            sgemm_at(1, 2, 2, &at, &b, &mut c2, 0.0);
+            assert!(c2[0].is_nan(), "sgemm_at 0·{poison} must poison");
+            assert_eq!(c2[1], 4.0);
+        }
+        // the skip still fires on finite inputs: -0.0 + 0·x keeps its sign
+        // only when skipped, which pins the fast path as actually taken
+        let a = vec![0.0f32];
+        let b = vec![5.0f32];
+        let mut c = vec![-0.0f32];
+        sgemm(1, 1, 1, &a, &b, &mut c, 1.0);
+        assert!(c[0] == 0.0 && c[0].is_sign_negative(), "skip taken for finite b");
+    }
+
+    #[test]
+    fn parallel_rows_are_bitwise_identical_to_serial() {
+        // above both thresholds: 256 rows, 256·96·96 ≈ 2.4M mul-adds
+        let (m, k, n) = (256, 96, 96);
+        let a = fill(5, m * k);
+        let b = fill(6, k * n);
+        let mut serial = vec![0.0f32; m * n];
+        sgemm(m, k, n, &a, &b, &mut serial, 0.0);
+        for workers in [2usize, 3, 4] {
+            set_gemm_workers(workers);
+            let mut par = vec![0.5f32; m * n];
+            sgemm(m, k, n, &a, &b, &mut par, 0.0);
+            set_gemm_workers(1);
+            assert_eq!(par, serial, "workers={workers}: row blocks must not change bits");
+        }
     }
 
     #[test]

@@ -11,6 +11,13 @@ pub struct LogRow {
     pub grad_norm: f64,
     pub nfe_forward: u64,
     pub nfe_backward: u64,
+    /// wall-clock seconds since the previous `push` (or since the last
+    /// `reset_clock`/`new` for the first row)
+    pub wall_delta_secs: f64,
+    /// cumulative sum of the per-push deltas.  Deliberately NOT "elapsed
+    /// since log construction": that measurement silently absorbed any
+    /// warmup/setup phase between construction and the first push into
+    /// every row, over-reporting all of them.
     pub wall_secs: f64,
 }
 
@@ -18,12 +25,19 @@ pub struct LogRow {
 #[derive(Debug, Default)]
 pub struct TrainLog {
     pub rows: Vec<LogRow>,
-    started: Option<Instant>,
+    last_push: Option<Instant>,
+    cum_secs: f64,
 }
 
 impl TrainLog {
     pub fn new() -> Self {
-        TrainLog { rows: Vec::new(), started: Some(Instant::now()) }
+        TrainLog { rows: Vec::new(), last_push: Some(Instant::now()), cum_secs: 0.0 }
+    }
+
+    /// Restart the per-push clock — call after a warmup/setup phase so
+    /// the first row's delta measures training work only.
+    pub fn reset_clock(&mut self) {
+        self.last_push = Some(Instant::now());
     }
 
     pub fn push(
@@ -35,7 +49,9 @@ impl TrainLog {
         nfe_forward: u64,
         nfe_backward: u64,
     ) {
-        let wall = self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let delta = self.last_push.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        self.last_push = Some(Instant::now());
+        self.cum_secs += delta;
         self.rows.push(LogRow {
             step,
             loss,
@@ -43,7 +59,8 @@ impl TrainLog {
             grad_norm,
             nfe_forward,
             nfe_backward,
-            wall_secs: wall,
+            wall_delta_secs: delta,
+            wall_secs: self.cum_secs,
         });
     }
 
@@ -56,17 +73,19 @@ impl TrainLog {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut s =
-            String::from("step,loss,accuracy,grad_norm,nfe_forward,nfe_backward,wall_secs\n");
+        let mut s = String::from(
+            "step,loss,accuracy,grad_norm,nfe_forward,nfe_backward,wall_delta_secs,wall_secs\n",
+        );
         for r in &self.rows {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{:.3}\n",
+                "{},{},{},{},{},{},{:.4},{:.3}\n",
                 r.step,
                 r.loss,
                 r.accuracy.map(|a| a.to_string()).unwrap_or_default(),
                 r.grad_norm,
                 r.nfe_forward,
                 r.nfe_backward,
+                r.wall_delta_secs,
                 r.wall_secs
             ));
         }
@@ -104,6 +123,32 @@ mod tests {
         let csv = log.to_csv();
         assert!(csv.lines().count() == 3);
         assert!(csv.contains("0.5"));
+        assert!(csv.starts_with("step,"), "{csv}");
+        assert!(csv.contains("wall_delta_secs,wall_secs"), "{csv}");
+    }
+
+    #[test]
+    fn wall_clock_is_per_push_deltas_not_elapsed_since_construction() {
+        let mut log = TrainLog::new();
+        // emulate a warmup phase between construction and the first push
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        log.reset_clock();
+        log.push(0, 1.0, None, 0.5, 1, 1);
+        log.push(1, 0.9, None, 0.5, 1, 1);
+        let (r0, r1) = (&log.rows[0], &log.rows[1]);
+        assert!(
+            r0.wall_delta_secs < 0.025,
+            "warmup must not leak into the first row: {}",
+            r0.wall_delta_secs
+        );
+        assert!(r1.wall_secs >= r1.wall_delta_secs);
+        let sum = r0.wall_delta_secs + r1.wall_delta_secs;
+        assert!(
+            (sum - r1.wall_secs).abs() < 1e-9,
+            "cumulative column is the sum of deltas: {sum} vs {}",
+            r1.wall_secs
+        );
+        assert!(r1.wall_secs >= r0.wall_secs, "cumulative is monotone");
     }
 
     #[test]
