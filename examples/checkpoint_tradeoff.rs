@@ -1,15 +1,15 @@
 //! The Prop-2 memory/compute trade-off, measured: sweep the binomial
 //! checkpoint budget N_c and report recomputed steps (executed vs DP
 //! prediction vs the paper's closed form) and measured checkpoint bytes.
+//! Each budget is the same facade spec with a different policy.
 //!
 //!     cargo run --release --example checkpoint_tradeoff [-- --nt 32]
 
+use pnode::api::SolverBuilder;
 use pnode::bench::Table;
 use pnode::checkpoint::{prop2_extra_steps, BinomialPlanner, CheckpointPolicy};
-use pnode::methods::{BlockSpec, GradientMethod, Pnode};
 use pnode::nn::Act;
 use pnode::ode::rhs::{MlpRhs, OdeRhs};
-use pnode::ode::tableau::Scheme;
 use pnode::util::cli::Args;
 use pnode::util::rng::Rng;
 
@@ -24,7 +24,6 @@ fn main() {
     let mut u0 = vec![0.0f32; rhs.state_len()];
     rng.fill_normal(&mut u0);
     let lambda0 = vec![1.0f32; rhs.state_len()];
-    let spec = BlockSpec::new(Scheme::Rk4, nt);
 
     let mut table = Table::new(
         &format!("Checkpoint budget trade-off (RK4, N_t={nt})"),
@@ -32,20 +31,21 @@ fn main() {
     );
     let mut planner = BinomialPlanner::new();
     for nc in [1usize, 2, 3, 4, 6, 8, 12, 16, nt - 1] {
-        let mut m = Pnode::new(CheckpointPolicy::Binomial { n_checkpoints: nc });
+        let mut session = SolverBuilder::new()
+            .policy(CheckpointPolicy::Binomial { n_checkpoints: nc })
+            .scheme_str("rk4")
+            .uniform(nt)
+            .session()
+            .expect("valid binomial spec");
         let t = std::time::Instant::now();
-        m.forward(&rhs, &spec, &u0);
-        let mut lambda = lambda0.clone();
-        let mut grad = vec![0.0f32; rhs.param_len()];
-        m.backward(&rhs, &spec, &mut lambda, &mut grad);
+        let out = session.grad(&rhs, &u0, &lambda0);
         let ms = t.elapsed().as_secs_f64() * 1e3;
-        let r = m.report();
         table.row(vec![
             nc.to_string(),
-            r.recompute_steps.to_string(),
+            out.report.recompute_steps.to_string(),
             planner.optimal_cost(nt, nc).to_string(),
             prop2_extra_steps(nt, nc).map(|v| v.to_string()).unwrap_or("-".into()),
-            r.ckpt_bytes.to_string(),
+            out.report.ckpt_bytes.to_string(),
             format!("{ms:.2}"),
         ]);
     }

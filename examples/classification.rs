@@ -1,16 +1,16 @@
 //! Classification demo (paper §5.1 surrogate): 4 ODE blocks + readout on
 //! the spiral dataset, comparing the gradient methods' speed/memory and
 //! the continuous-adjoint accuracy gap with ReLU dynamics (Fig. 2's
-//! phenomenon, at laptop scale).
+//! phenomenon, at laptop scale).  Each method is one `RunSpec` built
+//! through the facade.
 //!
-//!     cargo run --release --example classification [-- --steps 60 --xla]
+//!     cargo run --release --example classification [-- --steps 60]
 
-use pnode::methods::{method_by_name, BlockSpec};
+use pnode::api::SolverBuilder;
 use pnode::bench::Table;
 use pnode::data::spiral::SpiralDataset;
 use pnode::nn::{Act, Adam, Optimizer};
 use pnode::ode::rhs::MlpRhs;
-use pnode::ode::tableau::Scheme;
 use pnode::tasks::ClassificationTask;
 use pnode::util::cli::Args;
 use pnode::util::rng::Rng;
@@ -23,17 +23,15 @@ fn run(method: &str, steps: usize, seed: u64) -> (f64, f64, f64) {
     let dims = vec![D + 1, 32, D];
     let p = pnode::nn::param_count(&dims);
     let dims_i = dims.clone();
-    let name = method.to_string();
-    let mut task = ClassificationTask::new(
-        &mut rng,
-        4,
-        BlockSpec::new(Scheme::Rk4, 4),
-        p,
-        D,
-        4,
-        move |r| pnode::nn::init::kaiming_uniform(r, &dims_i, 1.0),
-        move || method_by_name(&name).unwrap(),
-    );
+    let spec = SolverBuilder::new()
+        .method_str(method)
+        .scheme_str("rk4")
+        .uniform(4)
+        .build()
+        .unwrap_or_else(|e| panic!("{method}: {e}"));
+    let mut task = ClassificationTask::new(&mut rng, 4, &spec, p, D, 4, move |r| {
+        pnode::nn::init::kaiming_uniform(r, &dims_i, 1.0)
+    });
     // ReLU dynamics: the irreversibility that breaks the continuous adjoint
     let mut rhs = MlpRhs::new(dims, Act::Relu, true, B, task.block_theta(0).to_vec());
     let ds = SpiralDataset::generate(&mut rng, 300, 4, D);

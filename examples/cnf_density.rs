@@ -5,12 +5,10 @@
 //!
 //!     make artifacts && cargo run --release --example cnf_density [-- --iters 20]
 
-use pnode::checkpoint::CheckpointPolicy;
-use pnode::methods::{BlockSpec, Pnode};
-use pnode::ode::rhs_xla::XlaCnfRhs;
-use pnode::ode::tableau::Scheme;
+use pnode::api::SolverBuilder;
 use pnode::data::tabular::TabularDataset;
 use pnode::nn::{Adam, Optimizer};
+use pnode::ode::rhs_xla::XlaCnfRhs;
 use pnode::tasks::CnfTask;
 use pnode::util::cli::Args;
 use pnode::util::rng::Rng;
@@ -39,16 +37,14 @@ fn main() -> anyhow::Result<()> {
 
     let n_flows = 1usize;
     let theta0_clone = theta0.clone();
-    let mut task = CnfTask::new(
-        &mut rng,
-        n_flows,
-        BlockSpec::new(Scheme::Dopri5, 4),
-        b,
-        d,
-        p,
-        move |_r| theta0_clone.clone(),
-        || Box::new(Pnode::new(CheckpointPolicy::All)),
-    );
+    let spec = SolverBuilder::new()
+        .scheme_str("dopri5")
+        .uniform(4)
+        .build()
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let mut task = CnfTask::new(&mut rng, n_flows, &spec, b, d, p, move |_r| {
+        theta0_clone.clone()
+    });
     let mut opt = Adam::new(task.theta.len(), 1e-3);
 
     let mut x = vec![0.0f32; b * d];

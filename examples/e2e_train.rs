@@ -9,11 +9,10 @@
 //!     make artifacts && cargo run --release --example e2e_train
 //!     (add `-- --no-xla` to run on the pure-Rust mirror instead)
 
-use pnode::methods::{method_by_name, BlockSpec};
+use pnode::api::SolverBuilder;
 use pnode::data::spiral::SpiralDataset;
 use pnode::nn::{Act, Adam, Optimizer};
 use pnode::ode::rhs::{MlpRhs, OdeRhs};
-use pnode::ode::tableau::Scheme;
 use pnode::tasks::ClassificationTask;
 use pnode::util::cli::Args;
 use pnode::util::rng::Rng;
@@ -31,16 +30,15 @@ fn main() -> anyhow::Result<()> {
     let dims = vec![D + 1, 168, 168, D];
     let per_block = pnode::nn::param_count(&dims);
     let dims_i = dims.clone();
-    let mut task = ClassificationTask::new(
-        &mut rng,
-        4,
-        BlockSpec::new(Scheme::Dopri5, nt),
-        per_block,
-        D,
-        10,
-        move |r| pnode::nn::init::kaiming_uniform(r, &dims_i, 1.0),
-        || method_by_name("pnode").unwrap(),
-    );
+    let spec = SolverBuilder::new()
+        .method_str("pnode")
+        .scheme_str("dopri5")
+        .uniform(nt)
+        .build()
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let mut task = ClassificationTask::new(&mut rng, 4, &spec, per_block, D, 10, move |r| {
+        pnode::nn::init::kaiming_uniform(r, &dims_i, 1.0)
+    });
     println!(
         "e2e: 4 ODE blocks x {per_block} = {} params (paper: 199,800), \
          Dopri5 N_t={nt}, batch {B}",

@@ -1,69 +1,47 @@
-//! Quickstart: the smallest end-to-end PNODE gradient.
+//! Quickstart: the smallest end-to-end PNODE gradient, through the typed
+//! `SolverBuilder` → `RunSpec` → `Session` facade.  This file matches the
+//! README quickstart verbatim.
 //!
-//!     make artifacts && cargo run --release --example quickstart
-//!
-//! Loads the `quick_d8` AOT artifacts (Pallas dense kernel inside), runs an
-//! RK4 forward pass through the PJRT runtime, and computes the discrete-
-//! adjoint gradient of a scalar loss — then cross-checks against the pure-
-//! Rust mirror. Falls back to the pure-Rust RHS when artifacts are missing.
+//!     cargo run --release --example quickstart
 
-use pnode::checkpoint::CheckpointPolicy;
-use pnode::methods::{BlockSpec, GradientMethod, Pnode};
+use pnode::api::{Session, SolverBuilder};
 use pnode::nn::Act;
 use pnode::ode::rhs::{MlpRhs, OdeRhs};
-use pnode::ode::tableau::Scheme;
 use pnode::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
+    // the RHS: a small MLP vector field f(u, θ, t), batch 4
     let mut rng = Rng::new(42);
     let dims = vec![9, 16, 8];
     let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+    let rhs = MlpRhs::new(dims, Act::Tanh, true, 4, theta);
 
-    // production path: AOT artifacts through PJRT
-    let xla_rhs: Option<Box<dyn OdeRhs>> = (|| {
-        let client = pnode::runtime::Client::cpu().ok()?;
-        let manifest = pnode::runtime::Manifest::load_default().ok()?;
-        let arts = pnode::runtime::ModelArtifacts::load(&client, &manifest, "quick_d8").ok()?;
-        Some(Box::new(pnode::ode::XlaRhs::new(arts, theta.clone()).ok()?) as Box<dyn OdeRhs>)
-    })();
-    let rust_rhs = MlpRhs::new(dims, Act::Tanh, true, 4, theta);
+    // one typed, serializable description of the gradient run
+    let spec = SolverBuilder::new()
+        .method_str("pnode") // discrete adjoint, checkpoint every step
+        .scheme_str("rk4")
+        .uniform(8) // 8 fixed steps over [0, 1]
+        .build()
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!("spec:\n{}\n", spec.to_json().to_string_pretty());
 
-    let n = rust_rhs.state_len();
-    let mut u0 = vec![0.0f32; n];
+    // a long-lived session: owns the engine and reusable workspaces
+    let mut session = Session::new(spec).map_err(|e| anyhow::anyhow!(e))?;
+
+    // loss L = Σ u(T)  =>  seed λ_T = 1
+    let mut u0 = vec![0.0f32; rhs.state_len()];
     rng.fill_normal(&mut u0);
-    // loss L = Σ u(T): λ_T = 1
-    let lambda0 = vec![1.0f32; n];
-    let spec = BlockSpec::new(Scheme::Rk4, 8);
+    let lambda_t = vec![1.0f32; rhs.state_len()];
 
-    let gradient = |rhs: &dyn OdeRhs| {
-        let mut method = Pnode::new(CheckpointPolicy::All);
-        let uf = method.forward(rhs, &spec, &u0);
-        let mut lambda = lambda0.clone();
-        let mut grad = vec![0.0f32; rhs.param_len()];
-        method.backward(rhs, &spec, &mut lambda, &mut grad);
-        (uf, lambda, grad, method.report())
-    };
-
-    let (uf, lam, grad, report) = gradient(&rust_rhs);
-    println!("u(T)[0..4]        = {:?}", &uf[..4]);
-    println!("dL/du0[0..4]      = {:?}", &lam[..4]);
-    println!("|dL/dθ|           = {:.4}", pnode::tensor::nrm2(&grad));
+    let out = session.grad(&rhs, &u0, &lambda_t);
+    println!("u(T)[0..4]   = {:?}", &out.u_f[..4]);
+    println!("dL/du0[0..4] = {:?}", &session.lambda0()[..4]);
+    println!("|dL/dθ|      = {:.4}", pnode::tensor::nrm2(session.grad_theta()));
     println!(
-        "NFE fwd/bwd       = {}/{},  ckpt {}",
-        report.nfe_forward,
-        report.nfe_backward,
-        pnode::util::human_bytes(report.ckpt_bytes)
+        "NFE fwd/bwd  = {}/{},  ckpt {}",
+        out.report.nfe_forward,
+        out.report.nfe_backward,
+        pnode::util::human_bytes(out.report.ckpt_bytes)
     );
-
-    if let Some(xrhs) = xla_rhs {
-        let (_, lam_x, grad_x, _) = gradient(xrhs.as_ref());
-        println!(
-            "XLA-vs-Rust agreement: λ rel-l2 {:.2e}, θ̄ rel-l2 {:.2e}",
-            pnode::testing::rel_l2(&lam_x, &lam),
-            pnode::testing::rel_l2(&grad_x, &grad)
-        );
-    } else {
-        println!("(artifacts not built — ran pure-Rust mirror only)");
-    }
     Ok(())
 }

@@ -6,8 +6,8 @@
 
 use pnode::data::robertson::RobertsonData;
 use pnode::nn::{Act, AdamW, Optimizer};
-use pnode::ode::implicit::ThetaScheme;
 use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::tableau::Scheme;
 use pnode::tasks::StiffTask;
 use pnode::train::GradStats;
 use pnode::util::cli::Args;
@@ -28,7 +28,7 @@ fn train(task: &StiffTask, explicit: bool, epochs: usize) -> (f64, GradStats, f6
         let step = if explicit {
             task.grad_explicit_adaptive(&rhs, 1e-6)
         } else {
-            task.grad_implicit(&rhs, ThetaScheme::crank_nicolson())
+            task.grad_implicit(&rhs, Scheme::CrankNicolson)
         };
         loss = step.loss;
         nfe_f += step.nfe_forward as f64;

@@ -5,12 +5,11 @@
 //!
 //!     cargo run --release --example tiered_spill [-- --nt 1024 --budget 1m]
 
+use pnode::api::SolverBuilder;
 use pnode::bench::Table;
 use pnode::checkpoint::CheckpointPolicy;
-use pnode::methods::{BlockSpec, GradientMethod, Pnode};
 use pnode::nn::Act;
 use pnode::ode::rhs::{MlpRhs, OdeRhs};
-use pnode::ode::tableau::Scheme;
 use pnode::util::cli::Args;
 use pnode::util::rng::Rng;
 
@@ -28,24 +27,26 @@ fn main() {
     let mut u0 = vec![0.0f32; rhs.state_len()];
     rng.fill_normal(&mut u0);
     let lambda0 = vec![1.0f32; rhs.state_len()];
-    let spec = BlockSpec {
-        scheme: Scheme::Rk4,
-        t0: 0.0,
-        tf: 1.0,
-        grid: pnode::ode::grid::TimeGrid::Uniform { nt },
-    };
 
     let spill_dir = std::env::temp_dir().join(format!("pnode-tiered-spill-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&spill_dir);
 
+    // every configuration is the same spec with a different policy
     let run = |policy: CheckpointPolicy| {
-        let mut m = Pnode::new(policy);
+        let mut session = SolverBuilder::new()
+            .policy(policy)
+            .scheme_str("rk4")
+            .uniform(nt)
+            .session()
+            .expect("valid tiered spec");
         let t = std::time::Instant::now();
-        m.forward(&rhs, &spec, &u0);
-        let mut lambda = lambda0.clone();
-        let mut grad = vec![0.0f32; rhs.param_len()];
-        m.backward(&rhs, &spec, &mut lambda, &mut grad);
-        (m.report(), t.elapsed().as_secs_f64(), lambda, grad)
+        let out = session.grad(&rhs, &u0, &lambda0);
+        (
+            out.report,
+            t.elapsed().as_secs_f64(),
+            session.lambda0().to_vec(),
+            session.grad_theta().to_vec(),
+        )
     };
 
     let (r_mem, t_mem, l_mem, g_mem) = run(CheckpointPolicy::All);

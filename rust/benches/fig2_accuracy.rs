@@ -2,11 +2,11 @@
 //! classifier with discrete vs continuous adjoint across schemes, with
 //! ReLU dynamics (the irreversibility that breaks the continuous adjoint).
 //! Also prints the Prop.-1 discrepancy decay table (`--prop1` content).
+//! All gradient runs are facade specs/sessions.
 
+use pnode::api::{Session, SolverBuilder};
 use pnode::bench::Table;
-use pnode::checkpoint::CheckpointPolicy;
 use pnode::data::spiral::SpiralDataset;
-use pnode::methods::{method_by_name, BlockSpec, GradientMethod, Pnode};
 use pnode::nn::{Act, Adam, Optimizer};
 use pnode::ode::rhs::{MlpRhs, OdeRhs};
 use pnode::ode::tableau::Scheme;
@@ -22,17 +22,15 @@ fn train_once(method: &str, scheme: Scheme, steps: usize) -> (f64, f64) {
     let dims = vec![D + 1, 32, D];
     let p = pnode::nn::param_count(&dims);
     let dims_i = dims.clone();
-    let name = method.to_string();
-    let mut task = ClassificationTask::new(
-        &mut rng,
-        2,
-        BlockSpec::new(scheme, 1), // paper Fig. 2: one time step
-        p,
-        D,
-        4,
-        move |r| pnode::nn::init::kaiming_uniform(r, &dims_i, 1.0),
-        move || method_by_name(&name).unwrap(),
-    );
+    let spec = SolverBuilder::new()
+        .method_str(method)
+        .scheme(scheme)
+        .uniform(1) // paper Fig. 2: one time step
+        .build()
+        .unwrap_or_else(|e| panic!("{method}: {e}"));
+    let mut task = ClassificationTask::new(&mut rng, 2, &spec, p, D, 4, move |r| {
+        pnode::nn::init::kaiming_uniform(r, &dims_i, 1.0)
+    });
     let mut rhs = MlpRhs::new(dims, Act::Relu, true, B, task.block_theta(0).to_vec());
     let ds = SpiralDataset::generate(&mut rng, 300, 4, D);
     let (train, test) = ds.split(0.9);
@@ -87,17 +85,18 @@ fn main() {
     let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
     let mut prev = f64::INFINITY;
     for nt in [4usize, 8, 16, 32, 64] {
-        let spec = BlockSpec::new(Scheme::Euler, nt);
-        let mut disc = Pnode::new(CheckpointPolicy::All);
-        disc.forward(&rhs, &spec, &u0);
-        let mut l_d = w.clone();
-        let mut g = vec![0.0f32; rhs.param_len()];
-        disc.backward(&rhs, &spec, &mut l_d, &mut g);
-        let mut cont = method_by_name("cont").unwrap();
-        cont.forward(&rhs, &spec, &u0);
-        let mut l_c = w.clone();
-        let mut g2 = vec![0.0f32; rhs.param_len()];
-        cont.backward(&rhs, &spec, &mut l_c, &mut g2);
+        let lambda0_of = |method: &str| -> Vec<f32> {
+            let mut session: Session = SolverBuilder::new()
+                .method_str(method)
+                .scheme(Scheme::Euler)
+                .uniform(nt)
+                .session()
+                .unwrap_or_else(|e| panic!("{method}: {e}"));
+            let _ = session.grad(&rhs, &u0, &w);
+            session.lambda0().to_vec()
+        };
+        let l_d = lambda0_of("pnode");
+        let l_c = lambda0_of("cont");
         let gap = pnode::testing::rel_l2(&l_c, &l_d);
         t2.row(vec![nt.to_string(), format!("{gap:.3e}")]);
         assert!(gap < prev * 1.05, "discrepancy must decay");

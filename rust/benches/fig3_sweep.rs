@@ -4,9 +4,10 @@
 //! model (V100 semantics, +0.4 GB CUDA constant); time is measured on this
 //! testbed.  `PNODE_BENCH_FULL=1` widens the sweep.
 
+use pnode::api::{Session, SolverBuilder};
 use pnode::bench::Table;
 use pnode::coordinator::Runner;
-use pnode::methods::{method_by_name, BlockSpec, MemModel};
+use pnode::methods::MemModel;
 use pnode::nn::Act;
 use pnode::ode::rhs::{MlpRhs, OdeRhs};
 use pnode::ode::tableau::Scheme;
@@ -53,22 +54,17 @@ fn main() {
             };
             for method in methods {
                 let model_mem = mm.by_method(method).unwrap();
-                let spec = BlockSpec::new(scheme, nt);
-                let row = runner.run_job(
-                    "spiral_clf",
-                    method,
-                    scheme.name(),
-                    nt,
-                    model_mem,
-                    || {
-                        let mut m = method_by_name(method).unwrap();
-                        m.forward(&rhs, &spec, &u0);
-                        let mut l = lambda0.clone();
-                        let mut g = vec![0.0f32; rhs.param_len()];
-                        m.backward(&rhs, &spec, &mut l, &mut g);
-                        m.report()
-                    },
-                );
+                let spec = SolverBuilder::new()
+                    .method_str(method)
+                    .scheme(scheme)
+                    .uniform(nt)
+                    .build()
+                    .unwrap_or_else(|e| panic!("{method}: {e}"));
+                let row = runner.run_spec_job("spiral_clf", &spec, model_mem, || {
+                    let mut session =
+                        Session::new(spec.clone()).expect("spec validated at build");
+                    session.grad(&rhs, &u0, &lambda0).report
+                });
                 let oom = model_mem > 32 * (1u64 << 30);
                 table.row(vec![
                     scheme.name().into(),

@@ -85,6 +85,23 @@ fn main() {
         }
     }).summary());
 
+    // facade hot path: one Session reused across iterations (workspace
+    // reuse is what the serving path pays for)
+    {
+        use pnode::api::SolverBuilder;
+        let spec = SolverBuilder::new()
+            .scheme_str("dopri5")
+            .uniform(4)
+            .build()
+            .expect("valid micro spec");
+        let lam = vec![1.0f32; n];
+        println!(
+            "{}",
+            pnode::bench::bench_grad("session.grad (dopri5, nt=4)", &spec, &rhs, &u, &lam, 1, 5)
+                .summary()
+        );
+    }
+
     // XLA artifact path (if built)
     if let (Ok(client), Ok(manifest)) =
         (pnode::runtime::Client::cpu(), pnode::runtime::Manifest::load_default())

@@ -17,15 +17,13 @@
 
 use std::time::Instant;
 
+use pnode::api::{Session, SolverBuilder};
 use pnode::bench::Table;
 use pnode::checkpoint::CheckpointPolicy;
 use pnode::coordinator::{JobBody, JobMeta, Runner};
-use pnode::exec::ExecConfig;
-use pnode::methods::{BlockSpec, GradientMethod, MethodReport, ParallelAdjoint, Pnode};
+use pnode::methods::MethodReport;
 use pnode::nn::Act;
-use pnode::ode::grid::TimeGrid;
 use pnode::ode::rhs::{MlpRhs, OdeRhs};
-use pnode::ode::tableau::Scheme;
 use pnode::util::rng::Rng;
 
 const SHARD_ROWS: usize = 16;
@@ -52,7 +50,6 @@ fn main() {
     rng.fill_normal(&mut u0);
     let mut w = vec![0.0f32; rhs.state_len()];
     rng.fill_normal(&mut w);
-    let spec = BlockSpec { scheme: Scheme::Rk4, t0: 0.0, tf: 1.0, grid: TimeGrid::Uniform { nt } };
 
     let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut sweep = vec![1usize, 2, 4];
@@ -66,6 +63,17 @@ fn main() {
         batch.div_ceil(SHARD_ROWS),
     );
 
+    // the whole sweep is one spec family: policy × workers
+    let spec_with = |policy: CheckpointPolicy, workers: usize| {
+        SolverBuilder::new()
+            .policy(policy)
+            .scheme_str("rk4")
+            .uniform(nt)
+            .workers(workers)
+            .shard_rows(SHARD_ROWS)
+            .build()
+            .expect("valid parallel spec")
+    };
     // one full gradient; returns (λ, θ̄, report, best seconds over reps)
     let grad_with = |policy: CheckpointPolicy,
                      workers: usize|
@@ -73,17 +81,14 @@ fn main() {
         let mut best = f64::INFINITY;
         let mut out = None;
         for _ in 0..reps {
-            let mut m =
-                ParallelAdjoint::pnode(policy.clone(), ExecConfig { workers, shard_rows: SHARD_ROWS });
+            let mut session =
+                Session::new(spec_with(policy.clone(), workers)).expect("valid spec");
             let t = Instant::now();
-            m.forward(&rhs, &spec, &u0);
-            let mut lam = w.clone();
-            let mut g = vec![0.0f32; rhs.param_len()];
-            m.backward(&rhs, &spec, &mut lam, &mut g);
+            let rep = session.grad(&rhs, &u0, &w).report;
             let secs = t.elapsed().as_secs_f64();
             if secs < best {
                 best = secs;
-                out = Some((lam, g, m.report()));
+                out = Some((session.lambda0().to_vec(), session.grad_theta().to_vec(), rep));
             }
         }
         let (lam, g, rep) = out.expect("reps >= 1");
@@ -172,13 +177,13 @@ fn main() {
         .iter()
         .flat_map(|&nt| {
             [CheckpointPolicy::All, CheckpointPolicy::SolutionOnly].map(|policy| {
-                let meta = JobMeta {
-                    dataset: "mlp_9_32_8".into(),
-                    method: format!("pnode:{}", policy.name()),
-                    scheme: "rk4".into(),
-                    nt,
-                    model_mem_bytes: 0,
-                };
+                let spec = SolverBuilder::new()
+                    .policy(policy)
+                    .scheme_str("rk4")
+                    .uniform(nt)
+                    .build()
+                    .expect("valid matrix spec");
+                let meta = JobMeta::from_spec("mlp_9_32_8", &spec, 0);
                 let body: JobBody = Box::new(move || {
                     let dims = vec![9, 32, 8];
                     let mut rng = Rng::new(nt as u64);
@@ -186,18 +191,9 @@ fn main() {
                     let rhs = MlpRhs::new(dims, Act::Tanh, true, 8, theta);
                     let mut u0 = vec![0.0f32; rhs.state_len()];
                     rng.fill_normal(&mut u0);
-                    let spec = BlockSpec {
-                        scheme: Scheme::Rk4,
-                        t0: 0.0,
-                        tf: 1.0,
-                        grid: TimeGrid::Uniform { nt },
-                    };
-                    let mut m = Pnode::new(policy);
-                    m.forward(&rhs, &spec, &u0);
-                    let mut lam = vec![1.0f32; rhs.state_len()];
-                    let mut g = vec![0.0f32; rhs.param_len()];
-                    m.backward(&rhs, &spec, &mut lam, &mut g);
-                    m.report()
+                    let lam = vec![1.0f32; rhs.state_len()];
+                    let mut session = Session::new(spec).expect("spec validated at build");
+                    session.grad(&rhs, &u0, &lam).report
                 });
                 (meta, body)
             })

@@ -7,10 +7,11 @@
 //! N_t values follow the paper (scaled down under the default quick mode —
 //! set PNODE_BENCH_FULL=1 for the paper's step counts).
 
+use pnode::api::{Session, SolverBuilder};
 use pnode::bench::Table;
 use pnode::coordinator::Runner;
 use pnode::data::tabular::TabularDataset;
-use pnode::methods::{method_by_name, BlockSpec, MemModel};
+use pnode::methods::MemModel;
 use pnode::ode::rhs::OdeRhs;
 use pnode::ode::rhs_xla::XlaCnfRhs;
 use pnode::ode::tableau::Scheme;
@@ -79,7 +80,6 @@ fn main() {
         for &scheme in &schemes {
             let nt_paper = paper_nt(scheme)[*idx];
             let nt = if full { nt_paper } else { (nt_paper / 4).max(2) };
-            let spec = BlockSpec::new(scheme, nt);
             let s = scheme.tableau().s as u64;
             let mm = MemModel {
                 act_bytes: rhs.activation_bytes_per_eval(),
@@ -91,13 +91,16 @@ fn main() {
             };
             for method in methods {
                 let model_mem = mm.by_method(method).unwrap();
-                let row = runner.run_job(ds_name, method, scheme.name(), nt, model_mem, || {
-                    let mut m = method_by_name(method).unwrap();
-                    m.forward(&rhs, &spec, &z0);
-                    let mut l = lambda0.clone();
-                    let mut g = vec![0.0f32; rhs.param_len()];
-                    m.backward(&rhs, &spec, &mut l, &mut g);
-                    m.report()
+                let spec = SolverBuilder::new()
+                    .method_str(method)
+                    .scheme(scheme)
+                    .uniform(nt)
+                    .build()
+                    .unwrap_or_else(|e| panic!("{method}: {e}"));
+                let row = runner.run_spec_job(ds_name, &spec, model_mem, || {
+                    let mut session =
+                        Session::new(spec.clone()).expect("spec validated at build");
+                    session.grad(&rhs, &z0, &lambda0).report
                 });
                 let oom = model_mem > 32 * (1u64 << 30);
                 table.row(vec![

@@ -7,8 +7,8 @@
 use pnode::bench::Table;
 use pnode::data::robertson::RobertsonData;
 use pnode::nn::{Act, AdamW, Optimizer};
-use pnode::ode::implicit::ThetaScheme;
 use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::tableau::Scheme;
 use pnode::tasks::StiffTask;
 use pnode::train::GradStats;
 use pnode::util::rng::Rng;
@@ -39,8 +39,8 @@ fn train(task: &StiffTask, mode: &str, epochs: usize) -> Outcome {
     for _ in 0..epochs {
         let t = std::time::Instant::now();
         let step = match mode {
-            "cn" => task.grad_implicit(&rhs, ThetaScheme::crank_nicolson()),
-            "beuler" => task.grad_implicit(&rhs, ThetaScheme::backward_euler()),
+            "cn" => task.grad_implicit(&rhs, Scheme::CrankNicolson),
+            "beuler" => task.grad_implicit(&rhs, Scheme::BackwardEuler),
             _ => task.grad_explicit_adaptive(&rhs, 1e-6),
         };
         secs.push(t.elapsed().as_secs_f64());

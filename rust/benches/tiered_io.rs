@@ -4,14 +4,12 @@
 //! in `target/bench_results/tiered_io.json` with the spill/prefetch
 //! counters per row.  `PNODE_BENCH_FULL=1` widens the sweep.
 
+use pnode::api::{Session, SolverBuilder};
 use pnode::bench::Table;
 use pnode::checkpoint::CheckpointPolicy;
 use pnode::coordinator::Runner;
-use pnode::methods::{BlockSpec, GradientMethod, Pnode};
 use pnode::nn::Act;
-use pnode::ode::grid::TimeGrid;
 use pnode::ode::rhs::{MlpRhs, OdeRhs};
-use pnode::ode::tableau::Scheme;
 use pnode::util::rng::Rng;
 
 fn main() {
@@ -25,11 +23,13 @@ fn main() {
     let mut u0 = vec![0.0f32; rhs.state_len()];
     rng.fill_normal(&mut u0);
     let lambda0 = vec![1.0f32; rhs.state_len()];
-    let spec = BlockSpec {
-        scheme: Scheme::Dopri5,
-        t0: 0.0,
-        tf: 1.0,
-        grid: TimeGrid::Uniform { nt },
+    let spec_of = |policy: CheckpointPolicy| {
+        SolverBuilder::new()
+            .policy(policy)
+            .scheme_str("dopri5")
+            .uniform(nt)
+            .build()
+            .expect("valid tiered-io spec")
     };
 
     let spill_dir =
@@ -38,12 +38,9 @@ fn main() {
 
     // footprint of the all-resident run, to express budgets as fractions
     let footprint = {
-        let mut m = Pnode::new(CheckpointPolicy::All);
-        m.forward(&rhs, &spec, &u0);
-        let mut l = lambda0.clone();
-        let mut g = vec![0.0f32; rhs.param_len()];
-        m.backward(&rhs, &spec, &mut l, &mut g);
-        m.report().ckpt_bytes
+        let mut session =
+            Session::new(spec_of(CheckpointPolicy::All)).expect("valid spec");
+        session.grad(&rhs, &u0, &lambda0).report.ckpt_bytes
     };
     println!(
         "all-resident checkpoint footprint: {} (N_t = {nt}, Dopri5)",
@@ -57,13 +54,10 @@ fn main() {
     );
 
     let mut job = |label: &str, policy: CheckpointPolicy, budget_label: &str| {
-        let row = runner.run_job("mlp_33_64_32", label, "dopri5", nt, 0, || {
-            let mut m = Pnode::new(policy.clone());
-            m.forward(&rhs, &spec, &u0);
-            let mut l = lambda0.clone();
-            let mut g = vec![0.0f32; rhs.param_len()];
-            m.backward(&rhs, &spec, &mut l, &mut g);
-            m.report()
+        let spec = spec_of(policy);
+        let row = runner.run_spec_job("mlp_33_64_32", &spec, 0, || {
+            let mut session = Session::new(spec.clone()).expect("spec validated at build");
+            session.grad(&rhs, &u0, &lambda0).report
         });
         table.row(vec![
             label.into(),

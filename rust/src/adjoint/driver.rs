@@ -94,8 +94,9 @@ impl<'t> ErkDriver<'t> {
 
     /// Like [`ErkDriver::erk`], but a `Tiered` policy draws its hot-tier
     /// allowance from the shared `arbiter` pool (fleet mode) instead of
-    /// owning the whole budget.
-    pub fn erk_with_arbiter(
+    /// owning the whole budget.  Crate-internal: fleets are configured
+    /// through a parallel `crate::api::RunSpec`.
+    pub(crate) fn erk_with_arbiter(
         tab: &'t Tableau,
         policy: CheckpointPolicy,
         t0: f64,
@@ -115,8 +116,9 @@ impl ThetaDriver {
     }
 
     /// Like [`ThetaDriver::theta`], but a `Tiered` policy leases its
-    /// hot-tier bytes from the shared `arbiter` pool.
-    pub fn theta_with_arbiter(
+    /// hot-tier bytes from the shared `arbiter` pool (crate-internal
+    /// fleet plumbing).
+    pub(crate) fn theta_with_arbiter(
         scheme: ThetaScheme,
         policy: CheckpointPolicy,
         ts: &[f64],
@@ -141,7 +143,9 @@ impl<S: StepScheme> AdjointDriver<S> {
     /// Full constructor: a `Tiered` policy with `arbiter: Some(..)` joins
     /// the shared checkpoint-memory pool (its `budget_bytes` is the pool's
     /// display size; the actual allowance is leased per use).
-    pub fn new_with_arbiter(
+    /// Crate-internal: fleets are configured through a parallel
+    /// `crate::api::RunSpec`.
+    pub(crate) fn new_with_arbiter(
         scheme: S,
         policy: CheckpointPolicy,
         t0: f64,

@@ -1,0 +1,278 @@
+//! `SolverBuilder` — the fluent constructor for [`RunSpec`]s.
+//!
+//! Every knob has a typed setter and (where a CLI-facing string grammar
+//! exists) a `_str` twin that defers parse errors to [`SolverBuilder::build`],
+//! so call chains stay fluent and the first error — parse or validation —
+//! comes back as one `Result` with the underlying message intact.
+
+use crate::api::session::Session;
+use crate::api::spec::{MethodSpec, RunSpec};
+use crate::checkpoint::CheckpointPolicy;
+use crate::exec::{default_workers, ExecConfig, DEFAULT_SHARD_ROWS};
+use crate::ode::grid::TimeGrid;
+use crate::ode::tableau::Scheme;
+
+/// Builds a validated [`RunSpec`].  Defaults: `pnode` (checkpoint
+/// everything), RK4, 8 uniform steps over `[0, 1]`, single-engine
+/// execution.
+pub struct SolverBuilder {
+    method: MethodSpec,
+    scheme: Scheme,
+    t0: f64,
+    tf: f64,
+    grid: TimeGrid,
+    exec: Option<ExecConfig>,
+    /// first deferred `_str` parse error; reported by `build`
+    err: Option<String>,
+}
+
+impl Default for SolverBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SolverBuilder {
+    pub fn new() -> Self {
+        SolverBuilder {
+            method: MethodSpec::Pnode { policy: CheckpointPolicy::All },
+            scheme: Scheme::Rk4,
+            t0: 0.0,
+            tf: 1.0,
+            grid: TimeGrid::Uniform { nt: 8 },
+            exec: None,
+            err: None,
+        }
+    }
+
+    /// Start from an existing spec (tweak-and-rebuild).
+    pub fn from_spec(spec: RunSpec) -> Self {
+        SolverBuilder {
+            method: spec.method,
+            scheme: spec.scheme,
+            t0: spec.t0,
+            tf: spec.tf,
+            grid: spec.grid,
+            exec: spec.exec,
+            err: None,
+        }
+    }
+
+    fn fail(mut self, e: String) -> Self {
+        if self.err.is_none() {
+            self.err = Some(e);
+        }
+        self
+    }
+
+    // ---------------- method ----------------
+
+    pub fn method(mut self, method: MethodSpec) -> Self {
+        self.method = method;
+        self
+    }
+
+    /// Method from the CLI grammar (`pnode`, `pnode2`, `pnode:<policy>`,
+    /// `cont`, `naive`, `anode`, `aca`).
+    pub fn method_str(self, s: &str) -> Self {
+        match MethodSpec::parse(s) {
+            Ok(m) => self.method(m),
+            Err(e) => self.fail(e),
+        }
+    }
+
+    /// Shorthand: the PNODE family with this checkpoint policy.
+    pub fn policy(self, policy: CheckpointPolicy) -> Self {
+        self.method(MethodSpec::Pnode { policy })
+    }
+
+    /// Shorthand: the PNODE family with a parsed checkpoint policy.
+    pub fn policy_str(self, s: &str) -> Self {
+        match CheckpointPolicy::parse(s) {
+            Ok(p) => self.policy(p),
+            Err(e) => self.fail(e),
+        }
+    }
+
+    // ---------------- scheme / span / grid ----------------
+
+    pub fn scheme(mut self, scheme: Scheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    pub fn scheme_str(self, s: &str) -> Self {
+        match Scheme::parse(s) {
+            Some(sc) => self.scheme(sc),
+            None => {
+                let e = format!("unknown scheme {s:?}");
+                self.fail(e)
+            }
+        }
+    }
+
+    /// Integration window `[t0, tf]`.
+    pub fn span(mut self, t0: f64, tf: f64) -> Self {
+        self.t0 = t0;
+        self.tf = tf;
+        self
+    }
+
+    pub fn grid(mut self, grid: TimeGrid) -> Self {
+        self.grid = grid;
+        self
+    }
+
+    /// Grid from the CLI grammar (`uniform`, `uniform:<nt>`,
+    /// `adaptive:<atol>[:<rtol>[:<h0>]]`); `default_nt` fills the bare
+    /// `uniform` form.
+    pub fn grid_str(self, s: &str, default_nt: usize) -> Self {
+        match TimeGrid::parse(s, default_nt) {
+            Ok(g) => self.grid(g),
+            Err(e) => self.fail(e),
+        }
+    }
+
+    /// `nt` equal steps.
+    pub fn uniform(self, nt: usize) -> Self {
+        self.grid(TimeGrid::Uniform { nt })
+    }
+
+    /// PI-controlled adaptation with `atol = rtol = tol`.
+    pub fn adaptive(self, tol: f64) -> Self {
+        self.grid(TimeGrid::adaptive(tol))
+    }
+
+    // ---------------- execution ----------------
+
+    /// Run on the data-parallel execution engine with this config.
+    pub fn parallel(mut self, cfg: ExecConfig) -> Self {
+        self.exec = Some(cfg);
+        self
+    }
+
+    /// Data-parallel with `workers` threads (keeps any configured shard
+    /// size, else the default).
+    pub fn workers(mut self, workers: usize) -> Self {
+        let shard_rows = self.exec.map(|c| c.shard_rows).unwrap_or(DEFAULT_SHARD_ROWS);
+        self.exec = Some(ExecConfig { workers, shard_rows });
+        self
+    }
+
+    /// Rows per shard of the data-parallel engine (the determinism knob).
+    pub fn shard_rows(mut self, shard_rows: usize) -> Self {
+        let workers = self.exec.map(|c| c.workers).unwrap_or_else(default_workers);
+        self.exec = Some(ExecConfig { workers, shard_rows });
+        self
+    }
+
+    /// Back to the single in-thread engine.
+    pub fn single(mut self) -> Self {
+        self.exec = None;
+        self
+    }
+
+    // ---------------- terminal ----------------
+
+    /// Validate and produce the spec: the first deferred parse error or
+    /// degenerate-combination violation comes back here.
+    pub fn build(self) -> Result<RunSpec, String> {
+        if let Some(e) = self.err {
+            return Err(e);
+        }
+        let spec = RunSpec {
+            method: self.method,
+            scheme: self.scheme,
+            t0: self.t0,
+            tf: self.tf,
+            grid: self.grid,
+            exec: self.exec,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Build and open a [`Session`] in one call.
+    pub fn session(self) -> Result<Session, String> {
+        Session::new(self.build()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_build_and_setters_stick() {
+        let spec = SolverBuilder::new().build().unwrap();
+        assert_eq!(spec.method.name(), "pnode");
+        assert_eq!(spec.scheme, Scheme::Rk4);
+        assert_eq!(spec.grid, TimeGrid::Uniform { nt: 8 });
+        assert!(spec.exec.is_none());
+
+        let spec = SolverBuilder::new()
+            .method_str("pnode:binomial:3")
+            .scheme_str("dopri5")
+            .span(0.0, 2.0)
+            .adaptive(1e-6)
+            .workers(4)
+            .shard_rows(8)
+            .build()
+            .unwrap();
+        assert_eq!(spec.method.name(), "pnode:binomial:3");
+        assert_eq!(spec.scheme, Scheme::Dopri5);
+        assert_eq!(spec.tf, 2.0);
+        assert_eq!(spec.exec, Some(ExecConfig { workers: 4, shard_rows: 8 }));
+        assert_eq!(SolverBuilder::from_spec(spec.clone()).build(), Ok(spec));
+    }
+
+    #[test]
+    fn first_error_wins_and_carries_the_message() {
+        let e = SolverBuilder::new()
+            .method_str("pnode:binomial:0")
+            .scheme_str("nope")
+            .build()
+            .unwrap_err();
+        assert!(e.contains("binomial:0"), "deferred parse error first: {e}");
+
+        let e = SolverBuilder::new().scheme_str("nope").build().unwrap_err();
+        assert!(e.contains("nope"), "{e}");
+        let e = SolverBuilder::new().grid_str("uniform:0", 8).build().unwrap_err();
+        assert!(e.contains("nt >= 1"), "{e}");
+    }
+
+    #[test]
+    fn degenerate_combinations_are_rejected_at_build() {
+        // workers = 0
+        let e = SolverBuilder::new().workers(0).build().unwrap_err();
+        assert!(e.contains("workers"), "{e}");
+        // adaptive grid on a scheme without an embedded pair
+        let e = SolverBuilder::new()
+            .scheme(Scheme::Rk4)
+            .adaptive(1e-6)
+            .build()
+            .unwrap_err();
+        assert!(e.contains("embedded"), "{e}");
+        // implicit scheme under a baseline method
+        let e = SolverBuilder::new()
+            .method_str("aca")
+            .scheme(Scheme::CrankNicolson)
+            .build()
+            .unwrap_err();
+        assert!(e.contains("implicit"), "{e}");
+        // inverted span
+        let e = SolverBuilder::new().span(1.0, 0.0).build().unwrap_err();
+        assert!(e.contains("t0 < tf"), "{e}");
+        // zero tier budget (programmatic; the string parser also rejects)
+        let e = SolverBuilder::new()
+            .policy(CheckpointPolicy::Tiered {
+                budget_bytes: 0,
+                dir: "/tmp/x".into(),
+                compress_f16: false,
+                inner: Box::new(CheckpointPolicy::All),
+            })
+            .build()
+            .unwrap_err();
+        assert!(e.contains("nonzero"), "{e}");
+    }
+}

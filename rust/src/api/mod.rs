@@ -1,0 +1,32 @@
+//! The unified solver facade (DESIGN.md §9): one typed, serializable
+//! entry point for every gradient run.
+//!
+//! ```text
+//! SolverBuilder ──build()──▶ RunSpec ──Session::new──▶ Session::grad(rhs, u0, λ_F)
+//!      (fluent, validated)   (JSON ⇄)   (registry-resolved engine,
+//!                                        reusable workspaces, pool/arbiter)
+//! ```
+//!
+//! * [`RunSpec`] / [`MethodSpec`] — the typed description of a run
+//!   (method family × checkpoint policy × scheme × span × grid ×
+//!   execution engine), serializable to/from JSON so a run is a
+//!   reviewable artifact (`pnode run --spec spec.json`, and every
+//!   [`crate::coordinator::ExperimentRow`] embeds the spec that produced
+//!   it).
+//! * [`SolverBuilder`] — fluent construction with build-time validation
+//!   of every degenerate combination.
+//! * [`MethodRegistry`] — engine factories keyed by method family; the
+//!   data-parallel wrapper and the shared checkpoint-memory arbiter
+//!   compose here, behind the spec's `exec` field.
+//! * [`Session`] — the long-lived handle that owns the engine and the
+//!   reusable gradient workspaces (the serving hot path).
+
+pub mod builder;
+pub mod registry;
+pub mod session;
+pub mod spec;
+
+pub use builder::SolverBuilder;
+pub use registry::MethodRegistry;
+pub use session::{GradReport, Session};
+pub use spec::{MethodSpec, RunSpec, METHOD_NAMES};

@@ -1,0 +1,204 @@
+//! `MethodRegistry` — gradient-engine factories keyed by method family.
+//!
+//! The registry is the single place where a validated [`RunSpec`] becomes
+//! a concrete [`GradientMethod`]: the five paper methods register here,
+//! and the data-parallel wrapper composes on top of any of them when the
+//! spec carries an [`crate::exec::ExecConfig`].  Tasks, benches, the CLI,
+//! and the examples never name engine types — they go through
+//! [`crate::api::Session`] (or [`RunSpec::make_engine`]), which resolves
+//! against the [`global`] registry.
+//!
+//! Fleet memory: a parallel `pnode` spec with a `Tiered` policy routes
+//! through [`ParallelAdjoint::pnode`], which lifts the policy's budget
+//! into ONE shared [`crate::exec::BudgetArbiter`] pool for the whole
+//! shard fleet — the special arbiter constructors are crate-internal
+//! plumbing behind this one entry point.
+
+use std::sync::{Arc, OnceLock};
+
+use crate::api::spec::{MethodSpec, RunSpec};
+use crate::methods::theta::ImplicitAdjoint;
+use crate::methods::{Aca, Anode, GradientMethod, NodeCont, NodeNaive, ParallelAdjoint, Pnode};
+
+/// An engine factory: a validated spec in, a fresh gradient engine out.
+pub type EngineFn = dyn Fn(&RunSpec) -> Box<dyn GradientMethod> + Send + Sync;
+
+pub struct MethodRegistry {
+    entries: Vec<(String, Arc<EngineFn>)>,
+    /// index of the built-in `pnode` factory: only *its* parallel form
+    /// takes the `ParallelAdjoint::pnode` arbiter-sharing shortcut — a
+    /// custom `pnode` registration shadows the built-in on every path,
+    /// including parallel specs (which then get the generic wrapper)
+    builtin_pnode: Option<usize>,
+}
+
+impl MethodRegistry {
+    /// A registry with no entries (extension/test baseline).
+    pub fn empty() -> Self {
+        MethodRegistry { entries: Vec::new(), builtin_pnode: None }
+    }
+
+    /// The five paper methods.  `pnode` dispatches on the spec's scheme:
+    /// explicit RK runs [`Pnode`], implicit θ-schemes run
+    /// [`ImplicitAdjoint`].
+    pub fn with_builtins() -> Self {
+        let mut r = MethodRegistry::empty();
+        r.register("pnode", |spec: &RunSpec| {
+            let policy = spec
+                .method
+                .pnode_policy()
+                .cloned()
+                .unwrap_or(crate::checkpoint::CheckpointPolicy::All);
+            if spec.scheme.is_implicit() {
+                Box::new(ImplicitAdjoint::new(policy))
+            } else {
+                Box::new(Pnode::new(policy))
+            }
+        });
+        r.builtin_pnode = Some(r.entries.len() - 1);
+        r.register("cont", |_spec: &RunSpec| Box::new(NodeCont::new()));
+        r.register("naive", |_spec: &RunSpec| Box::new(NodeNaive::new()));
+        r.register("anode", |_spec: &RunSpec| Box::new(Anode::new()));
+        r.register("aca", |_spec: &RunSpec| Box::new(Aca::new()));
+        r
+    }
+
+    /// Register a factory for `family` (later registrations shadow
+    /// earlier ones, so built-ins can be overridden).
+    pub fn register<F>(&mut self, family: &str, f: F)
+    where
+        F: Fn(&RunSpec) -> Box<dyn GradientMethod> + Send + Sync + 'static,
+    {
+        self.entries.push((family.to_string(), Arc::new(f)));
+    }
+
+    /// Registered family keys, registration order.
+    pub fn families(&self) -> Vec<&str> {
+        self.entries.iter().map(|(k, _)| k.as_str()).collect()
+    }
+
+    /// Construct the engine a spec describes: the family's factory, with
+    /// the data-parallel wrapper composed on top when `spec.exec` is set.
+    pub fn make(&self, spec: &RunSpec) -> Result<Box<dyn GradientMethod>, String> {
+        let family = spec.method.family();
+        let idx = self
+            .entries
+            .iter()
+            .rposition(|(k, _)| k == family)
+            .ok_or_else(|| {
+                format!(
+                    "no engine registered for method family {family:?} (registered: {:?})",
+                    self.families()
+                )
+            })?;
+        let f = Arc::clone(&self.entries[idx].1);
+        match spec.exec {
+            None => Ok(f(spec)),
+            Some(cfg) => {
+                if Some(idx) == self.builtin_pnode {
+                    if let MethodSpec::Pnode { policy } = &spec.method {
+                        // fleet mode: a Tiered policy's budget becomes one
+                        // global arbiter pool shared by every shard's store
+                        return Ok(Box::new(ParallelAdjoint::pnode(policy.clone(), cfg)));
+                    }
+                }
+                let mut single = spec.clone();
+                single.exec = None;
+                Ok(Box::new(ParallelAdjoint::new(
+                    Box::new(move || f(&single)),
+                    cfg,
+                )))
+            }
+        }
+    }
+}
+
+static GLOBAL: OnceLock<MethodRegistry> = OnceLock::new();
+
+/// The process-wide registry with the built-in factories.
+pub fn global() -> &'static MethodRegistry {
+    GLOBAL.get_or_init(MethodRegistry::with_builtins)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::spec::METHOD_NAMES;
+    use crate::api::SolverBuilder;
+    use crate::exec::ExecConfig;
+    use crate::ode::tableau::Scheme;
+
+    #[test]
+    fn builtins_cover_every_paper_method() {
+        for name in METHOD_NAMES {
+            let spec = SolverBuilder::new().method_str(name).build().unwrap();
+            let engine = global().make(&spec).unwrap();
+            assert_eq!(
+                engine.reverse_accurate(),
+                spec.method.reverse_accurate(),
+                "{name}"
+            );
+        }
+        let spec = SolverBuilder::new()
+            .method_str("pnode:binomial:4")
+            .build()
+            .unwrap();
+        assert!(global().make(&spec).is_ok());
+    }
+
+    #[test]
+    fn parallel_specs_wrap_every_family() {
+        for name in METHOD_NAMES {
+            let spec = SolverBuilder::new()
+                .method_str(name)
+                .parallel(ExecConfig { workers: 2, shard_rows: 4 })
+                .build()
+                .unwrap();
+            let engine = global().make(&spec).unwrap();
+            assert_eq!(engine.name(), "parallel", "{name}");
+        }
+    }
+
+    #[test]
+    fn implicit_schemes_dispatch_to_the_theta_engine() {
+        let spec = SolverBuilder::new()
+            .method_str("pnode2")
+            .scheme(Scheme::CrankNicolson)
+            .uniform(4)
+            .build()
+            .unwrap();
+        let engine = global().make(&spec).unwrap();
+        assert_eq!(engine.name(), "pnode-implicit");
+    }
+
+    #[test]
+    fn unknown_family_is_reported_and_registration_shadows() {
+        let mut r = MethodRegistry::empty();
+        let spec = SolverBuilder::new().build().unwrap();
+        let e = r.make(&spec).unwrap_err();
+        assert!(e.contains("pnode"), "{e}");
+        r.register("pnode", |_s| Box::new(NodeNaive::new()));
+        assert_eq!(r.make(&spec).unwrap().name(), "naive", "custom factory wins");
+    }
+
+    #[test]
+    fn custom_pnode_factory_shadows_on_the_parallel_path_too() {
+        // a custom "pnode" registration must win even when exec is set:
+        // the arbiter-sharing shortcut is reserved for the built-in
+        // NodeCont is the one non-reverse-accurate engine: if the
+        // built-in shortcut ran instead of the custom factory, the
+        // wrapper's probe would report reverse_accurate = true
+        let mut r = MethodRegistry::with_builtins();
+        r.register("pnode", |_s| Box::new(NodeCont::new()));
+        let spec = SolverBuilder::new()
+            .parallel(ExecConfig { workers: 2, shard_rows: 4 })
+            .build()
+            .unwrap();
+        let engine = r.make(&spec).unwrap();
+        assert_eq!(engine.name(), "parallel", "wrapped generically");
+        assert!(!engine.reverse_accurate(), "probe ran the custom factory");
+        // single-engine path shadows as before
+        let single = SolverBuilder::new().build().unwrap();
+        assert_eq!(r.make(&single).unwrap().name(), "cont");
+    }
+}

@@ -1,0 +1,202 @@
+//! `Session` — the long-lived execution handle behind the facade.
+//!
+//! A session is built once from a validated [`RunSpec`] and then reused
+//! across gradient calls: it owns the gradient engine the registry
+//! resolved (including, for parallel tiered specs, the engine's shared
+//! [`crate::exec::BudgetArbiter`] and checkpoint backends) plus the λ and
+//! θ̄ workspaces of the [`Session::grad`] hot path.  Repeated `grad` calls
+//! with stable shapes reuse those buffers and the engine instead of
+//! re-allocating per step — observable through
+//! [`Session::workspace_allocs`], which the serving-path tests pin to 1.
+//!
+//! Two call styles:
+//!
+//! * [`Session::grad`] — one-shot `(u0, λ_F) → (u_F, report)` with the
+//!   gradients left in the session workspace ([`Session::lambda0`],
+//!   [`Session::grad_theta`]): the serving hot path.
+//! * [`Session::forward`] / [`Session::backward`] — split halves for
+//!   callers that chain blocks or inject λ jumps between them (the tasks
+//!   layer: one session per ODE block / observation segment).
+
+use crate::api::registry::{global, MethodRegistry};
+use crate::api::spec::RunSpec;
+use crate::methods::{BlockSpec, GradientMethod, MethodReport};
+use crate::ode::rhs::OdeRhs;
+
+/// Outcome of one [`Session::grad`] call.  `u_f` is owned; the gradient
+/// buffers live in the session's reusable workspace — read them via
+/// [`Session::lambda0`] / [`Session::grad_theta`] (or copy out) before
+/// the next call overwrites them.
+pub struct GradReport {
+    /// final state `u(t_F)`
+    pub u_f: Vec<f32>,
+    /// resource accounting of this forward+backward
+    pub report: MethodReport,
+}
+
+pub struct Session {
+    spec: RunSpec,
+    block: BlockSpec,
+    engine: Box<dyn GradientMethod>,
+    /// reusable λ workspace: seeded with ∂L/∂u_F, left holding ∂L/∂u_0
+    lambda: Vec<f32>,
+    /// reusable θ̄ accumulation workspace
+    grad: Vec<f32>,
+    workspace_allocs: u64,
+    grads_run: u64,
+}
+
+impl Session {
+    /// Validate the spec and resolve its engine from the global registry.
+    pub fn new(spec: RunSpec) -> Result<Session, String> {
+        Session::with_registry(spec, global())
+    }
+
+    /// Like [`Session::new`] against a custom registry.
+    pub fn with_registry(spec: RunSpec, registry: &MethodRegistry) -> Result<Session, String> {
+        spec.validate()?;
+        let engine = registry.make(&spec)?;
+        let block = spec.block_spec();
+        Ok(Session {
+            spec,
+            block,
+            engine,
+            lambda: Vec::new(),
+            grad: Vec::new(),
+            workspace_allocs: 0,
+            grads_run: 0,
+        })
+    }
+
+    pub fn spec(&self) -> &RunSpec {
+        &self.spec
+    }
+
+    pub fn block_spec(&self) -> &BlockSpec {
+        &self.block
+    }
+
+    /// Integrate forward; must precede [`Session::backward`].
+    pub fn forward(&mut self, rhs: &dyn OdeRhs, u0: &[f32]) -> Vec<f32> {
+        self.engine.forward(rhs, &self.block, u0)
+    }
+
+    /// Propagate `lambda` (∂L/∂u_F → ∂L/∂u_0) through the latest forward
+    /// pass, accumulating into `grad_theta` (caller-owned buffers — the
+    /// blocks/λ-jumps call style).
+    pub fn backward(&mut self, rhs: &dyn OdeRhs, lambda: &mut [f32], grad_theta: &mut [f32]) {
+        self.engine.backward(rhs, &self.block, lambda, grad_theta);
+    }
+
+    /// One full gradient on the reusable workspace: forward from `u0`,
+    /// backward from `lambda_f = ∂L/∂u_F`.  Afterwards
+    /// [`Session::lambda0`] holds ∂L/∂u_0 and [`Session::grad_theta`]
+    /// holds ∂L/∂θ.
+    pub fn grad(&mut self, rhs: &dyn OdeRhs, u0: &[f32], lambda_f: &[f32]) -> GradReport {
+        let param_len = rhs.param_len();
+        if self.lambda.len() != lambda_f.len() || self.grad.len() != param_len {
+            self.lambda = vec![0.0; lambda_f.len()];
+            self.grad = vec![0.0; param_len];
+            self.workspace_allocs += 1;
+        }
+        self.lambda.copy_from_slice(lambda_f);
+        self.grad.fill(0.0);
+        let u_f = self.engine.forward(rhs, &self.block, u0);
+        self.engine
+            .backward(rhs, &self.block, &mut self.lambda, &mut self.grad);
+        self.grads_run += 1;
+        GradReport { u_f, report: self.engine.report() }
+    }
+
+    /// ∂L/∂u_0 of the latest [`Session::grad`] call.
+    pub fn lambda0(&self) -> &[f32] {
+        &self.lambda
+    }
+
+    /// ∂L/∂θ of the latest [`Session::grad`] call.
+    pub fn grad_theta(&self) -> &[f32] {
+        &self.grad
+    }
+
+    /// Accounting of the latest forward+backward (either call style).
+    pub fn report(&self) -> MethodReport {
+        self.engine.report()
+    }
+
+    /// How many times the `grad` workspace was (re)allocated.  Stable
+    /// shapes keep this at 1 across any number of calls — the serving
+    /// hot-path invariant.
+    pub fn workspace_allocs(&self) -> u64 {
+        self.workspace_allocs
+    }
+
+    /// Completed [`Session::grad`] calls.
+    pub fn grads_run(&self) -> u64 {
+        self.grads_run
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::SolverBuilder;
+    use crate::nn::Act;
+    use crate::ode::rhs::MlpRhs;
+    use crate::util::rng::Rng;
+
+    fn mk_rhs(seed: u64) -> MlpRhs {
+        let dims = vec![5, 9, 4];
+        let mut rng = Rng::new(seed);
+        let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+        MlpRhs::new(dims, Act::Tanh, true, 2, theta)
+    }
+
+    #[test]
+    fn grad_matches_split_forward_backward_bitwise() {
+        let rhs = mk_rhs(601);
+        let mut rng = Rng::new(602);
+        let mut u0 = vec![0.0f32; rhs.state_len()];
+        rng.fill_normal(&mut u0);
+        let w = vec![1.0f32; rhs.state_len()];
+
+        let spec = SolverBuilder::new().uniform(6).build().unwrap();
+        let mut one = Session::new(spec.clone()).unwrap();
+        let out = one.grad(&rhs, &u0, &w);
+
+        let mut two = Session::new(spec).unwrap();
+        let uf = two.forward(&rhs, &u0);
+        let mut lam = w.clone();
+        let mut g = vec![0.0f32; rhs.param_len()];
+        two.backward(&rhs, &mut lam, &mut g);
+
+        assert_eq!(out.u_f, uf);
+        assert_eq!(one.lambda0(), &lam[..]);
+        assert_eq!(one.grad_theta(), &g[..]);
+        assert_eq!(one.grads_run(), 1);
+        assert!(out.report.nfe_forward > 0);
+    }
+
+    #[test]
+    fn workspaces_allocate_once_across_repeated_grads() {
+        let rhs = mk_rhs(611);
+        let mut rng = Rng::new(612);
+        let mut u0 = vec![0.0f32; rhs.state_len()];
+        rng.fill_normal(&mut u0);
+        let w = vec![1.0f32; rhs.state_len()];
+
+        let mut s = SolverBuilder::new().uniform(5).session().unwrap();
+        for _ in 0..4 {
+            let _ = s.grad(&rhs, &u0, &w);
+        }
+        assert_eq!(s.workspace_allocs(), 1, "stable shapes never re-allocate");
+        assert_eq!(s.grads_run(), 4);
+    }
+
+    #[test]
+    fn invalid_specs_never_open_a_session() {
+        let spec = SolverBuilder::new().build().unwrap();
+        let mut bad = spec.clone();
+        bad.exec = Some(crate::exec::ExecConfig { workers: 0, shard_rows: 4 });
+        assert!(Session::new(bad).is_err(), "post-build mutation is re-validated");
+    }
+}

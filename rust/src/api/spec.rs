@@ -1,0 +1,462 @@
+//! `MethodSpec` / `RunSpec` — the typed, serializable description of one
+//! gradient run (DESIGN.md §9).
+//!
+//! A [`RunSpec`] pins everything that determines a gradient computation:
+//! the method family and its checkpoint policy ([`MethodSpec`]), the
+//! integration scheme, the time span and [`TimeGrid`], and the optional
+//! data-parallel [`ExecConfig`].  It serializes to/from JSON via
+//! [`crate::util::json`], so a run is a reviewable artifact: the CLI's
+//! `pnode run --spec spec.json` consumes the same document that
+//! [`crate::coordinator::ExperimentRow`] embeds in every result row.
+//!
+//! Specs are *validated*, not trusted: [`RunSpec::validate`] rejects every
+//! degenerate combination (zero step counts, `binomial:0`, zero tier
+//! budgets, implicit schemes under baselines or adaptive grids,
+//! `workers = 0`) with a message naming the offending part — the checks
+//! that previously lived scattered across parse functions and task code.
+
+use crate::checkpoint::CheckpointPolicy;
+use crate::exec::{ExecConfig, DEFAULT_SHARD_ROWS};
+use crate::methods::BlockSpec;
+use crate::ode::grid::TimeGrid;
+use crate::ode::tableau::Scheme;
+use crate::util::json::Json;
+
+/// All method names in the paper's table order (the bench-matrix axis).
+pub static METHOD_NAMES: &[&str] = &["naive", "cont", "anode", "aca", "pnode", "pnode2"];
+
+/// The gradient method family of a run: PNODE (the paper's discrete
+/// adjoint, parameterized by its [`CheckpointPolicy`]) or one of the four
+/// baselines it is compared against.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MethodSpec {
+    /// High-level discrete adjoint with checkpointing (the paper's
+    /// method).  `All` is "PNODE", `SolutionOnly` is "PNODE2"; with an
+    /// implicit [`Scheme`] this runs the θ-method adjoint.
+    Pnode { policy: CheckpointPolicy },
+    /// Continuous adjoint baseline (not reverse-accurate).
+    NodeCont,
+    /// Full-tape baseline.
+    NodeNaive,
+    /// Block-checkpointing baseline.
+    Anode,
+    /// Adaptive checkpoint adjoint baseline.
+    Aca,
+}
+
+impl MethodSpec {
+    /// Parse a method spec.  Grammar:
+    ///
+    /// ```text
+    /// naive | cont | anode | aca | pnode | pnode2
+    /// pnode:<checkpoint-policy>     (see CheckpointPolicy::parse)
+    /// ```
+    ///
+    /// Unlike the old `method_by_name` string dispatch, errors carry the
+    /// underlying message (e.g. *why* `pnode:binomial:0` is degenerate).
+    pub fn parse(s: &str) -> Result<MethodSpec, String> {
+        match s {
+            "pnode" => Ok(MethodSpec::Pnode { policy: CheckpointPolicy::All }),
+            "pnode2" => Ok(MethodSpec::Pnode { policy: CheckpointPolicy::SolutionOnly }),
+            "cont" | "node_cont" => Ok(MethodSpec::NodeCont),
+            "naive" | "node_naive" => Ok(MethodSpec::NodeNaive),
+            "anode" => Ok(MethodSpec::Anode),
+            "aca" => Ok(MethodSpec::Aca),
+            _ => {
+                if let Some(rest) = s.strip_prefix("pnode:") {
+                    let policy = CheckpointPolicy::parse(rest)?;
+                    return Ok(MethodSpec::Pnode { policy });
+                }
+                Err(format!(
+                    "unknown method {s:?} (want naive | cont | anode | aca | pnode | pnode2 | \
+                     pnode:<policy>)"
+                ))
+            }
+        }
+    }
+
+    /// Canonical name; `parse(name())` round-trips.
+    pub fn name(&self) -> String {
+        match self {
+            MethodSpec::Pnode { policy: CheckpointPolicy::All } => "pnode".into(),
+            MethodSpec::Pnode { policy: CheckpointPolicy::SolutionOnly } => "pnode2".into(),
+            MethodSpec::Pnode { policy } => format!("pnode:{}", policy.name()),
+            MethodSpec::NodeCont => "cont".into(),
+            MethodSpec::NodeNaive => "naive".into(),
+            MethodSpec::Anode => "anode".into(),
+            MethodSpec::Aca => "aca".into(),
+        }
+    }
+
+    /// Registry key: the method family, independent of policy details.
+    pub fn family(&self) -> &'static str {
+        match self {
+            MethodSpec::Pnode { .. } => "pnode",
+            MethodSpec::NodeCont => "cont",
+            MethodSpec::NodeNaive => "naive",
+            MethodSpec::Anode => "anode",
+            MethodSpec::Aca => "aca",
+        }
+    }
+
+    /// Whether gradients are exact to machine precision wrt the discrete
+    /// forward map (everything except the continuous adjoint).
+    pub fn reverse_accurate(&self) -> bool {
+        !matches!(self, MethodSpec::NodeCont)
+    }
+
+    /// The PNODE checkpoint policy, if this is the PNODE family.
+    pub fn pnode_policy(&self) -> Option<&CheckpointPolicy> {
+        match self {
+            MethodSpec::Pnode { policy } => Some(policy),
+            _ => None,
+        }
+    }
+
+    /// Reject degenerate policies that the string parser already refuses
+    /// but programmatic construction can still produce (one source of
+    /// truth: [`CheckpointPolicy::validate`]).
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            MethodSpec::Pnode { policy } => policy.validate(),
+            _ => Ok(()),
+        }
+    }
+}
+
+/// One typed description of a gradient run: method × scheme × span ×
+/// grid × execution engine.  Build via [`crate::api::SolverBuilder`] (which
+/// validates), serialize via [`RunSpec::to_json`], execute via
+/// [`crate::api::Session`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSpec {
+    pub method: MethodSpec,
+    pub scheme: Scheme,
+    pub t0: f64,
+    pub tf: f64,
+    pub grid: TimeGrid,
+    /// data-parallel execution engine; `None` runs the single in-thread
+    /// engine (no worker pool, no batch sharding)
+    pub exec: Option<ExecConfig>,
+}
+
+impl RunSpec {
+    /// The integration window this spec describes.
+    pub fn block_spec(&self) -> BlockSpec {
+        BlockSpec { scheme: self.scheme, t0: self.t0, tf: self.tf, grid: self.grid.clone() }
+    }
+
+    /// Construct a gradient engine for this spec from the global
+    /// [`crate::api::MethodRegistry`].
+    pub fn make_engine(&self) -> Result<Box<dyn crate::methods::GradientMethod>, String> {
+        crate::api::registry::global().make(self)
+    }
+
+    /// Open a long-lived [`crate::api::Session`] on this spec.
+    pub fn session(self) -> Result<crate::api::Session, String> {
+        crate::api::Session::new(self)
+    }
+
+    /// Reject every degenerate combination with a message naming the
+    /// offending part (the single chokepoint behind the builder, the JSON
+    /// loader, and `Session::new`).
+    pub fn validate(&self) -> Result<(), String> {
+        self.method.validate()?;
+        if !(self.t0.is_finite() && self.tf.is_finite() && self.tf > self.t0) {
+            return Err(format!(
+                "integration span must be finite with t0 < tf (got [{}, {}])",
+                self.t0, self.tf
+            ));
+        }
+        match &self.grid {
+            TimeGrid::Uniform { nt } => {
+                if *nt == 0 {
+                    return Err("uniform grid needs nt >= 1".into());
+                }
+            }
+            TimeGrid::Explicit(steps) => {
+                if steps.is_empty() {
+                    return Err("explicit grid needs at least one step".into());
+                }
+                if steps.iter().any(|(t, h)| !t.is_finite() || !h.is_finite() || *h <= 0.0) {
+                    return Err("explicit grid steps must have finite t and h > 0".into());
+                }
+                if let Some(w) = steps.windows(2).find(|w| w[1].0 <= w[0].0) {
+                    return Err(format!(
+                        "explicit grid times must be strictly increasing \
+                         (step at t = {} follows t = {})",
+                        w[1].0, w[0].0
+                    ));
+                }
+            }
+            TimeGrid::Adaptive { atol, rtol, h0 } => {
+                let pos = |v: f64| v.is_finite() && v > 0.0;
+                let h0_ok = match h0 {
+                    Some(h) => pos(*h),
+                    None => true,
+                };
+                if !pos(*atol) || !pos(*rtol) || !h0_ok {
+                    return Err(
+                        "adaptive grid tolerances and h0 must be positive and finite".into()
+                    );
+                }
+            }
+        }
+        if self.scheme.is_implicit() {
+            if !matches!(self.method, MethodSpec::Pnode { .. }) {
+                return Err(format!(
+                    "{} is an implicit θ-scheme: only the pnode family runs the implicit \
+                     discrete adjoint (got method {:?})",
+                    self.scheme.name(),
+                    self.method.name()
+                ));
+            }
+            if !self.grid.is_static() {
+                return Err(format!(
+                    "implicit θ-schemes have no embedded error estimate: run {} on a \
+                     static (uniform or explicit) grid",
+                    self.scheme.name()
+                ));
+            }
+            if self.exec.is_some() {
+                return Err(
+                    "the data-parallel execution engine supports explicit schemes only \
+                     (drop exec, or use an explicit scheme)"
+                        .into(),
+                );
+            }
+        } else if matches!(self.grid, TimeGrid::Adaptive { .. })
+            && self.scheme.tableau().b_err.is_none()
+        {
+            return Err(format!(
+                "{} carries no embedded error estimate: adaptive grids need an \
+                 embedded explicit pair (bosh3 or dopri5)",
+                self.scheme.name()
+            ));
+        }
+        if let Some(cfg) = &self.exec {
+            if cfg.workers == 0 {
+                return Err(
+                    "exec.workers must be >= 1 (omit exec for the single-engine path)".into()
+                );
+            }
+            if cfg.shard_rows == 0 {
+                return Err("exec.shard_rows must be >= 1".into());
+            }
+        }
+        Ok(())
+    }
+
+    // ---------------- JSON ----------------
+
+    /// Serialize to the reviewable spec document.  Unknown keys on the
+    /// way in are ignored, so the same file can carry side-channel
+    /// sections (the CLI's optional `"task"` block).
+    pub fn to_json(&self) -> Json {
+        let exec = match &self.exec {
+            None => Json::Null,
+            Some(cfg) => Json::obj(vec![
+                ("workers", Json::num(cfg.workers as f64)),
+                ("shard_rows", Json::num(cfg.shard_rows as f64)),
+            ]),
+        };
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("method", Json::str(self.method.name())),
+            ("scheme", Json::str(self.scheme.name())),
+            ("t0", Json::num(self.t0)),
+            ("tf", Json::num(self.tf)),
+            ("grid", grid_to_json(&self.grid)),
+            ("exec", exec),
+        ])
+    }
+
+    /// Parse and validate a spec document (the inverse of
+    /// [`RunSpec::to_json`]; see the format there).
+    pub fn from_json(v: &Json) -> Result<RunSpec, String> {
+        if let Some(ver) = v.get("version") {
+            if ver.as_usize() != Some(1) {
+                return Err(format!("unsupported spec version {ver:?} (want 1)"));
+            }
+        }
+        let method_name = v
+            .get("method")
+            .and_then(|m| m.as_str())
+            .ok_or("spec is missing the \"method\" string")?;
+        let method = MethodSpec::parse(method_name)?;
+        let scheme_name = v
+            .get("scheme")
+            .and_then(|s| s.as_str())
+            .ok_or("spec is missing the \"scheme\" string")?;
+        let scheme = Scheme::parse(scheme_name)
+            .ok_or_else(|| format!("unknown scheme {scheme_name:?}"))?;
+        // absent span keys take the [0, 1] defaults, but a key that is
+        // present and not a number is an error, never a silent default
+        let span_field = |key: &str, default: f64| -> Result<f64, String> {
+            match v.get(key) {
+                None => Ok(default),
+                Some(x) => x
+                    .as_f64()
+                    .ok_or_else(|| format!("spec field {key:?} must be a number (got {x:?})")),
+            }
+        };
+        let t0 = span_field("t0", 0.0)?;
+        let tf = span_field("tf", 1.0)?;
+        let grid = match v.get("grid") {
+            Some(g) => grid_from_json(g)?,
+            None => return Err("spec is missing the \"grid\" object".into()),
+        };
+        let exec = match v.get("exec") {
+            None | Some(Json::Null) => None,
+            Some(e) => {
+                let workers = e
+                    .get("workers")
+                    .and_then(|w| w.as_usize())
+                    .ok_or("exec needs a \"workers\" count")?;
+                // absent takes the default; present-but-not-a-number is
+                // an error, never a silent default (same rule as t0/tf)
+                let shard_rows = match e.get("shard_rows") {
+                    None => DEFAULT_SHARD_ROWS,
+                    Some(r) => r.as_usize().ok_or_else(|| {
+                        format!("exec field \"shard_rows\" must be a number (got {r:?})")
+                    })?,
+                };
+                Some(ExecConfig { workers, shard_rows })
+            }
+        };
+        let spec = RunSpec { method, scheme, t0, tf, grid, exec };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a spec from JSON text (file contents).
+    pub fn parse_json(text: &str) -> Result<RunSpec, String> {
+        let v = crate::util::json::parse(text).map_err(|e| e.to_string())?;
+        RunSpec::from_json(&v)
+    }
+}
+
+fn grid_to_json(grid: &TimeGrid) -> Json {
+    match grid {
+        TimeGrid::Uniform { nt } => Json::obj(vec![
+            ("kind", Json::str("uniform")),
+            ("nt", Json::num(*nt as f64)),
+        ]),
+        TimeGrid::Explicit(steps) => Json::obj(vec![
+            ("kind", Json::str("explicit")),
+            (
+                "steps",
+                Json::Arr(
+                    steps
+                        .iter()
+                        .map(|(t, h)| Json::Arr(vec![Json::num(*t), Json::num(*h)]))
+                        .collect(),
+                ),
+            ),
+        ]),
+        TimeGrid::Adaptive { atol, rtol, h0 } => {
+            let mut kv = vec![
+                ("kind", Json::str("adaptive")),
+                ("atol", Json::num(*atol)),
+                ("rtol", Json::num(*rtol)),
+            ];
+            if let Some(h0) = h0 {
+                kv.push(("h0", Json::num(*h0)));
+            }
+            Json::obj(kv)
+        }
+    }
+}
+
+fn grid_from_json(g: &Json) -> Result<TimeGrid, String> {
+    let kind = g
+        .get("kind")
+        .and_then(|k| k.as_str())
+        .ok_or("grid needs a \"kind\" string (uniform | explicit | adaptive)")?;
+    match kind {
+        "uniform" => {
+            let nt = g
+                .get("nt")
+                .and_then(|n| n.as_usize())
+                .ok_or("uniform grid needs an \"nt\" count")?;
+            Ok(TimeGrid::Uniform { nt })
+        }
+        "explicit" => {
+            let steps = g
+                .get("steps")
+                .and_then(|s| s.as_arr())
+                .ok_or("explicit grid needs a \"steps\" array of [t, h] pairs")?;
+            let mut out = Vec::with_capacity(steps.len());
+            for s in steps {
+                let pair = s.as_arr().filter(|p| p.len() == 2);
+                let (t, h) = match pair {
+                    Some(p) => (p[0].as_f64(), p[1].as_f64()),
+                    None => (None, None),
+                };
+                match (t, h) {
+                    (Some(t), Some(h)) => out.push((t, h)),
+                    _ => return Err(format!("bad explicit grid step {s:?} (want [t, h])")),
+                }
+            }
+            Ok(TimeGrid::Explicit(out))
+        }
+        "adaptive" => {
+            let atol = g
+                .get("atol")
+                .and_then(|x| x.as_f64())
+                .ok_or("adaptive grid needs \"atol\"")?;
+            let rtol = g.get("rtol").and_then(|x| x.as_f64()).unwrap_or(atol);
+            let h0 = g.get("h0").and_then(|x| x.as_f64());
+            Ok(TimeGrid::Adaptive { atol, rtol, h0 })
+        }
+        k => Err(format!("unknown grid kind {k:?} (want uniform | explicit | adaptive)")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_spec_parse_roundtrip_and_errors() {
+        for name in METHOD_NAMES {
+            let m = MethodSpec::parse(name).unwrap();
+            assert_eq!(m.name(), *name, "canonical name round-trips");
+            assert_eq!(MethodSpec::parse(&m.name()), Ok(m));
+        }
+        let m = MethodSpec::parse("pnode:binomial:4").unwrap();
+        assert_eq!(
+            m.pnode_policy(),
+            Some(&CheckpointPolicy::Binomial { n_checkpoints: 4 })
+        );
+        assert_eq!(m.family(), "pnode");
+        assert!(!MethodSpec::NodeCont.reverse_accurate());
+        assert!(m.reverse_accurate());
+
+        // the underlying policy-parse message survives (the old
+        // method_by_name swallowed it via ok()?)
+        let e = MethodSpec::parse("pnode:binomial:0").unwrap_err();
+        assert!(e.contains("binomial:0") && e.contains("at least one"), "{e}");
+        let e = MethodSpec::parse("pnode:tiered:8m").unwrap_err();
+        assert!(e.contains("spill dir"), "{e}");
+        let e = MethodSpec::parse("nope").unwrap_err();
+        assert!(e.contains("nope"), "{e}");
+    }
+
+    #[test]
+    fn programmatic_degenerate_policies_are_rejected() {
+        let bad = MethodSpec::Pnode {
+            policy: CheckpointPolicy::Binomial { n_checkpoints: 0 },
+        };
+        assert!(bad.validate().unwrap_err().contains("binomial"));
+        let bad = MethodSpec::Pnode {
+            policy: CheckpointPolicy::Tiered {
+                budget_bytes: 0,
+                dir: "/tmp/x".into(),
+                compress_f16: false,
+                inner: Box::new(CheckpointPolicy::All),
+            },
+        };
+        assert!(bad.validate().unwrap_err().contains("nonzero"));
+    }
+}

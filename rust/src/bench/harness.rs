@@ -1,8 +1,12 @@
 //! Minimal timing harness + table printer used by every `cargo bench`
-//! target (`[[bench]] harness = false`).
+//! target (`[[bench]] harness = false`), plus the facade-level gradient
+//! timer [`bench_grad`] (one [`crate::api::Session`] reused across
+//! iterations — the serving hot path, measured).
 
 use std::time::Instant;
 
+use crate::api::RunSpec;
+use crate::ode::rhs::OdeRhs;
 use crate::util::stats::Stream;
 
 /// Timing statistics of a benchmarked closure.
@@ -49,6 +53,26 @@ pub fn bench_fn(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) ->
         min_secs: s.min(),
         max_secs: s.max(),
     }
+}
+
+/// Time full forward+backward gradients of `spec` on `rhs`: one session
+/// opened up front, its workspaces reused every iteration (λ re-seeded
+/// from `lambda_f` by `Session::grad` itself).  Panics on an invalid
+/// spec — build it with `SolverBuilder`.
+pub fn bench_grad(
+    name: &str,
+    spec: &RunSpec,
+    rhs: &dyn OdeRhs,
+    u0: &[f32],
+    lambda_f: &[f32],
+    warmup: usize,
+    iters: usize,
+) -> BenchResult {
+    let mut session = crate::api::Session::new(spec.clone())
+        .unwrap_or_else(|e| panic!("bench_grad: invalid spec: {e}"));
+    bench_fn(name, warmup, iters, move || {
+        let _ = session.grad(rhs, u0, lambda_f);
+    })
 }
 
 /// Aligned-column table printer (paper-style output).
@@ -142,6 +166,25 @@ mod tests {
         assert!(r.min_secs <= r.mean_secs + 1e-12);
         assert_eq!(r.iters, 5);
         assert!(r.summary().contains("spin"));
+    }
+
+    #[test]
+    fn bench_grad_drives_a_facade_session() {
+        use crate::api::SolverBuilder;
+        use crate::nn::Act;
+        use crate::ode::rhs::MlpRhs;
+        use crate::util::rng::Rng;
+        let dims = vec![4, 6, 3];
+        let mut rng = Rng::new(5);
+        let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+        let rhs = MlpRhs::new(dims, Act::Tanh, true, 2, theta);
+        let mut u0 = vec![0.0f32; rhs.state_len()];
+        rng.fill_normal(&mut u0);
+        let w = vec![1.0f32; rhs.state_len()];
+        let spec = SolverBuilder::new().uniform(3).build().unwrap();
+        let r = bench_grad("facade grad", &spec, &rhs, &u0, &w, 1, 3);
+        assert_eq!(r.iters, 3);
+        assert!(r.mean_secs >= 0.0);
     }
 
     #[test]

@@ -4,4 +4,4 @@
 
 pub mod harness;
 
-pub use harness::{bench_fn, BenchResult, Table};
+pub use harness::{bench_fn, bench_grad, BenchResult, Table};

@@ -54,13 +54,9 @@ impl CheckpointPolicy {
             let n: usize = rest
                 .parse()
                 .map_err(|_| format!("bad binomial checkpoint count {rest:?} in {s:?}"))?;
-            if n == 0 {
-                return Err(format!(
-                    "binomial:0 is degenerate: the Revolve schedule needs at least one \
-                     checkpoint slot (got {s:?}; use n >= 1, or `solution_only`)"
-                ));
-            }
-            return Ok(CheckpointPolicy::Binomial { n_checkpoints: n });
+            let p = CheckpointPolicy::Binomial { n_checkpoints: n };
+            p.validate().map_err(|e| format!("{s:?}: {e}"))?;
+            return Ok(p);
         }
         if let Some(rest) = s.strip_prefix("tiered:") {
             let (budget_part, rest) = rest
@@ -85,15 +81,14 @@ impl CheckpointPolicy {
                 }
                 None => (rest, CheckpointPolicy::All),
             };
-            if dir.is_empty() {
-                return Err(format!("{s:?}: empty spill dir"));
-            }
-            return Ok(CheckpointPolicy::Tiered {
+            let p = CheckpointPolicy::Tiered {
                 budget_bytes: budget.bytes,
                 dir: dir.to_string(),
                 compress_f16,
                 inner: Box::new(inner),
-            });
+            };
+            p.validate().map_err(|e| format!("{s:?}: {e}"))?;
+            return Ok(p);
         }
         match s {
             "all" => Ok(CheckpointPolicy::All),
@@ -102,6 +97,36 @@ impl CheckpointPolicy {
                 "unknown checkpoint policy {s:?} (want all | solution_only | binomial:<n> | \
                  tiered:<budget>:<dir>[:<inner>])"
             )),
+        }
+    }
+
+    /// Reject degenerate policies with a message naming the offending
+    /// part.  The single source of truth for these rules: [`parse`]
+    /// funnels through it (so string specs inherit them), and the typed
+    /// facade path (`crate::api::MethodSpec::validate`) calls it for
+    /// programmatic constructions the parser never sees.
+    ///
+    /// [`parse`]: CheckpointPolicy::parse
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            CheckpointPolicy::Binomial { n_checkpoints: 0 } => Err(
+                "binomial:0 is degenerate: the Revolve schedule needs at least one \
+                 checkpoint slot (use n >= 1, or `solution_only`)"
+                    .into(),
+            ),
+            CheckpointPolicy::Tiered { budget_bytes, dir, inner, .. } => {
+                if *budget_bytes == 0 {
+                    return Err("tiered hot-tier budget must be nonzero".into());
+                }
+                if dir.is_empty() {
+                    return Err("tiered spill dir must be nonempty".into());
+                }
+                if matches!(inner.as_ref(), CheckpointPolicy::Tiered { .. }) {
+                    return Err("tiered policies cannot nest".into());
+                }
+                inner.validate()
+            }
+            _ => Ok(()),
         }
     }
 

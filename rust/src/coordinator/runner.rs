@@ -9,6 +9,7 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
+use crate::api::RunSpec;
 use crate::exec::pool;
 use crate::methods::MethodReport;
 use crate::util::json::Json;
@@ -60,6 +61,9 @@ pub struct ExperimentRow {
     pub lease_denied_bytes: u64,
     /// peak mandatory-floor overdraw beyond the pool (0 = budget held)
     pub over_grant_bytes: u64,
+    /// the full serialized [`RunSpec`] that produced this row (rows from
+    /// facade-driven jobs are reproducible artifacts)
+    pub run_spec: Option<Json>,
     pub extra: Vec<(String, String)>,
 }
 
@@ -101,8 +105,34 @@ impl ExperimentRow {
             lease_waits: report.exec.lease_waits,
             lease_denied_bytes: report.exec.lease_denied_bytes,
             over_grant_bytes: report.exec.over_grant_bytes,
+            run_spec: None,
             extra: Vec::new(),
         }
+    }
+
+    /// Row identity and embedded spec derived from a [`RunSpec`] (the
+    /// method/scheme/nt columns come from the spec; `nt` is 0 for
+    /// adaptive grids, whose executed count is `n_accepted`).
+    pub fn from_spec_report(
+        experiment: &str,
+        dataset: &str,
+        spec: &RunSpec,
+        report: &MethodReport,
+        time_secs: f64,
+        model_mem_bytes: u64,
+    ) -> Self {
+        let mut row = ExperimentRow::from_report(
+            experiment,
+            dataset,
+            &spec.method.name(),
+            spec.scheme.name(),
+            spec.grid.planned_nt().unwrap_or(0),
+            report,
+            time_secs,
+            model_mem_bytes,
+        );
+        row.run_spec = Some(spec.to_json());
+        row
     }
 
     pub fn to_json(&self) -> Json {
@@ -137,6 +167,9 @@ impl ExperimentRow {
             ("lease_denied_bytes".to_string(), Json::num(self.lease_denied_bytes as f64)),
             ("over_grant_bytes".to_string(), Json::num(self.over_grant_bytes as f64)),
         ];
+        if let Some(spec) = &self.run_spec {
+            kv.push(("run_spec".to_string(), spec.clone()));
+        }
         for (k, v) in &self.extra {
             kv.push((k.clone(), Json::str(v.clone())));
         }
@@ -157,6 +190,23 @@ pub struct JobMeta {
     pub scheme: String,
     pub nt: usize,
     pub model_mem_bytes: u64,
+    /// serialized spec to embed in the row (facade-driven jobs)
+    pub spec: Option<Json>,
+}
+
+impl JobMeta {
+    /// Meta whose identity columns and embedded spec come from a
+    /// [`RunSpec`].
+    pub fn from_spec(dataset: &str, spec: &RunSpec, model_mem_bytes: u64) -> Self {
+        JobMeta {
+            dataset: dataset.into(),
+            method: spec.method.name(),
+            scheme: spec.scheme.name().into(),
+            nt: spec.grid.planned_nt().unwrap_or(0),
+            model_mem_bytes,
+            spec: Some(spec.to_json()),
+        }
+    }
 }
 
 /// Collects rows, times jobs, writes JSON.
@@ -198,6 +248,29 @@ impl Runner {
         self.rows.last().unwrap()
     }
 
+    /// Time a facade-driven job and push its row with the [`RunSpec`]
+    /// embedded, so every result row carries the spec that produced it.
+    pub fn run_spec_job(
+        &mut self,
+        dataset: &str,
+        spec: &RunSpec,
+        model_mem_bytes: u64,
+        job: impl FnOnce() -> MethodReport,
+    ) -> &ExperimentRow {
+        let t = Instant::now();
+        let report = job();
+        let secs = t.elapsed().as_secs_f64();
+        self.rows.push(ExperimentRow::from_spec_report(
+            &self.experiment,
+            dataset,
+            spec,
+            &report,
+            secs,
+            model_mem_bytes,
+        ));
+        self.rows.last().unwrap()
+    }
+
     /// Run a batch of independent pure-Rust jobs concurrently on the
     /// execution engine's worker pool and collect one row per job, in
     /// submission order (the pool's result slots are index-addressed, so
@@ -227,7 +300,7 @@ impl Runner {
                 .collect(),
         );
         for (meta, (report, secs)) in metas.into_iter().zip(outs) {
-            self.rows.push(ExperimentRow::from_report(
+            let mut row = ExperimentRow::from_report(
                 &self.experiment,
                 &meta.dataset,
                 &meta.method,
@@ -236,7 +309,9 @@ impl Runner {
                 &report,
                 secs,
                 meta.model_mem_bytes,
-            ));
+            );
+            row.run_spec = meta.spec;
+            self.rows.push(row);
         }
         &self.rows[first..]
     }
@@ -293,6 +368,27 @@ mod tests {
     }
 
     #[test]
+    fn spec_jobs_embed_the_run_spec_losslessly() {
+        use crate::api::SolverBuilder;
+        let spec = SolverBuilder::new()
+            .method_str("pnode:binomial:3")
+            .scheme_str("dopri5")
+            .uniform(10)
+            .build()
+            .unwrap();
+        let mut r = Runner::new("unit_spec");
+        let row = r.run_spec_job("ds", &spec, 0, MethodReport::default);
+        assert_eq!(row.method, "pnode:binomial:3");
+        assert_eq!(row.scheme, "dopri5");
+        assert_eq!(row.nt, 10);
+        let embedded = row.run_spec.as_ref().expect("spec embedded");
+        let back = crate::api::RunSpec::from_json(embedded).unwrap();
+        assert_eq!(back, spec, "the row's spec re-parses to the producing spec");
+        let j = row.to_json().to_string_compact();
+        assert!(j.contains("\"run_spec\""), "{j}");
+    }
+
+    #[test]
     fn parallel_job_matrix_keeps_submission_order() {
         let mut r = Runner::new("unit_par");
         let jobs: Vec<(JobMeta, JobBody)> = (0..9)
@@ -303,6 +399,7 @@ mod tests {
                     scheme: "rk4".into(),
                     nt: i,
                     model_mem_bytes: 0,
+                    spec: None,
                 };
                 let body: JobBody = Box::new(move || {
                     // uneven job durations scramble completion order

@@ -18,11 +18,15 @@
 //!   backend with reverse-order prefetch), the five gradient methods from
 //!   the paper (PNODE, NODE-cont, NODE-naive, ANODE, ACA), Newton–GMRES
 //!   implicit solvers, the training loop, datasets, and the benchmark
-//!   harness that regenerates every table and figure.
+//!   harness that regenerates every table and figure — all behind the
+//!   typed [`api`] facade (`SolverBuilder` → `RunSpec` → `Session`),
+//!   which every task, bench, example, and the CLI construct runs
+//!   through.
 //!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
 
 pub mod adjoint;
+pub mod api;
 pub mod bench;
 pub mod checkpoint;
 pub mod coordinator;

@@ -1,6 +1,11 @@
 //! `pnode` — CLI entrypoint of the PNODE-RS framework.
 //!
 //! Subcommands:
+//!   run --spec <file.json>    — execute a serialized RunSpec (the typed
+//!                               facade artifact; see DESIGN.md §9 and
+//!                               examples/specs/); an optional "task"
+//!                               block in the same file picks what the
+//!                               spec drives (gradient | classification)
 //!   info                      — artifact/platform info
 //!   gradcheck                 — XLA-vs-Rust cross-check on quick_d8
 //!   train-clf [--method ...]  — classification training (spiral surrogate);
@@ -13,6 +18,10 @@
 //!   train-stiff [--scheme cn] — stiff Robertson training
 //!   bench <table2|prop2>      — analytic tables (full benches live in
 //!                               `cargo bench` targets)
+//!
+//! Every gradient run is constructed through the `SolverBuilder` →
+//! `RunSpec` → `Session` facade; invalid configurations fail up front
+//! with the underlying parse/validation message.
 
 use anyhow::Result;
 
@@ -21,6 +30,7 @@ use pnode::util::cli::Args;
 fn main() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
         Some("info") => cmd_info(),
         Some("gradcheck") => cmd_gradcheck(),
         Some("train-clf") => cmd_train_clf(&args),
@@ -28,12 +38,212 @@ fn main() -> Result<()> {
         Some("bench") => cmd_bench(&args),
         _ => {
             eprintln!(
-                "usage: pnode <info|gradcheck|train-clf|train-stiff|bench> [options]\n\
+                "usage: pnode <run|info|gradcheck|train-clf|train-stiff|bench> [options]\n\
                  see README.md for details"
             );
             Ok(())
         }
     }
+}
+
+/// Execute a serialized `RunSpec`.  The file is the spec document itself
+/// (see `RunSpec::to_json`); an optional extra `"task"` object selects
+/// the workload:
+///
+/// ```text
+/// "task": {"kind": "gradient", "dim": 16, "hidden": 32, "batch": 8, "seed": 7}
+/// "task": {"kind": "classification", "steps": 20, "blocks": 2, "dim": 16,
+///          "hidden": 32, "classes": 4, "batch": 64, "seed": 7, "lr": 3e-3}
+/// ```
+fn cmd_run(args: &Args) -> Result<()> {
+    use pnode::api::RunSpec;
+    use pnode::util::json;
+
+    let path = args
+        .get("spec")
+        .ok_or_else(|| anyhow::anyhow!("run needs --spec <file.json> (see examples/specs/)"))?;
+    let text = std::fs::read_to_string(path)?;
+    let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let spec = RunSpec::from_json(&doc).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    println!("spec ({path}):\n{}", spec.to_json().to_string_pretty());
+
+    // the "task" block is fully ours, so hold it to the spec's standard:
+    // unknown keys are typos, and present-but-mistyped values are errors,
+    // never silent defaults — the saved row must reproduce the document
+    let task = doc.get("task");
+    if let Some(t) = task {
+        const KNOWN: &[&str] = &[
+            "kind", "steps", "blocks", "dim", "hidden", "classes", "batch", "seed", "lr",
+        ];
+        let obj = t
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("{path}: \"task\" must be an object"))?;
+        for (k, _) in obj {
+            anyhow::ensure!(
+                KNOWN.contains(&k.as_str()),
+                "{path}: unknown task key {k:?} (known: {KNOWN:?})"
+            );
+        }
+    }
+    let get_usize = |key: &str, default: usize| -> Result<usize> {
+        match task.and_then(|t| t.get(key)) {
+            None => Ok(default),
+            Some(v) => v.as_usize().ok_or_else(|| {
+                anyhow::anyhow!("{path}: task field {key:?} must be a number (got {v:?})")
+            }),
+        }
+    };
+    let get_f64 = |key: &str, default: f64| -> Result<f64> {
+        match task.and_then(|t| t.get(key)) {
+            None => Ok(default),
+            Some(v) => v.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("{path}: task field {key:?} must be a number (got {v:?})")
+            }),
+        }
+    };
+    let kind = match task.and_then(|t| t.get("kind")) {
+        None => "gradient",
+        Some(k) => k.as_str().ok_or_else(|| {
+            anyhow::anyhow!("{path}: task field \"kind\" must be a string (got {k:?})")
+        })?,
+    };
+    match kind {
+        "gradient" => run_spec_gradient(
+            &spec,
+            get_usize("dim", 16)?,
+            get_usize("hidden", 32)?,
+            get_usize("batch", 8)?,
+            get_usize("seed", 7)? as u64,
+        ),
+        "classification" => run_spec_classification(
+            &spec,
+            get_usize("steps", 20)?,
+            get_usize("blocks", 2)?,
+            get_usize("dim", 16)?,
+            get_usize("hidden", 32)?,
+            get_usize("classes", 4)?,
+            get_usize("batch", 64)?,
+            get_usize("seed", 7)? as u64,
+            get_f64("lr", 3e-3)?,
+        ),
+        k => Err(anyhow::anyhow!(
+            "{path}: unknown task kind {k:?} (want gradient | classification)"
+        )),
+    }
+}
+
+/// One gradient of L = Σ u(T) on a synthetic MLP RHS — the zero-to-aha
+/// path for a spec file: run it, print the report, persist the row.
+fn run_spec_gradient(
+    spec: &pnode::api::RunSpec,
+    dim: usize,
+    hidden: usize,
+    batch: usize,
+    seed: u64,
+) -> Result<()> {
+    use pnode::nn::Act;
+    use pnode::ode::rhs::{MlpRhs, OdeRhs};
+    use pnode::util::rng::Rng;
+
+    if let Some(cfg) = spec.exec {
+        pnode::tensor::gemm::set_gemm_workers(cfg.workers);
+    }
+    let dims = vec![dim + 1, hidden, dim];
+    let mut rng = Rng::new(seed);
+    let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+    let rhs = MlpRhs::new(dims, Act::Tanh, true, batch, theta);
+    let mut u0 = vec![0.0f32; rhs.state_len()];
+    rng.fill_normal(&mut u0);
+    let lambda = vec![1.0f32; rhs.state_len()];
+
+    let mut session = pnode::api::Session::new(spec.clone())
+        .map_err(|e| anyhow::anyhow!("invalid spec: {e}"))?;
+    let mut runner = pnode::coordinator::Runner::new("run_spec");
+    let row = runner.run_spec_job("synthetic_mlp", spec, 0, || {
+        let out = session.grad(&rhs, &u0, &lambda);
+        out.report
+    });
+    println!(
+        "gradient: NFE {}/{}  steps {}+{}rej  ckpt {}  spills {}  workers {}  {:.3}s",
+        row.nfe_forward,
+        row.nfe_backward,
+        row.n_accepted,
+        row.n_rejected,
+        pnode::util::human_bytes(row.measured_ckpt_bytes),
+        row.spill_count,
+        row.workers,
+        row.time_secs
+    );
+    println!("|dL/dθ| = {:.4}", pnode::tensor::nrm2(session.grad_theta()));
+    let path = runner.save()?;
+    println!("row (with embedded run_spec) saved to {path:?}");
+    Ok(())
+}
+
+/// Spiral-classification training driven entirely by the spec (the CI
+/// smoke workload; pure-Rust RHS, no artifacts needed).
+#[allow(clippy::too_many_arguments)]
+fn run_spec_classification(
+    spec: &pnode::api::RunSpec,
+    steps: usize,
+    blocks: usize,
+    dim: usize,
+    hidden: usize,
+    classes: usize,
+    batch: usize,
+    seed: u64,
+    lr: f64,
+) -> Result<()> {
+    use pnode::data::spiral::SpiralDataset;
+    use pnode::nn::{Act, Optimizer};
+    use pnode::ode::rhs::MlpRhs;
+    use pnode::tasks::ClassificationTask;
+    use pnode::util::rng::Rng;
+
+    if let Some(cfg) = spec.exec {
+        pnode::tensor::gemm::set_gemm_workers(cfg.workers);
+    }
+    let mut rng = Rng::new(seed);
+    let dims = vec![dim + 1, hidden, dim];
+    let per_block = pnode::nn::param_count(&dims);
+    let dims_init = dims.clone();
+    let mut task = ClassificationTask::new(
+        &mut rng,
+        blocks,
+        spec,
+        per_block,
+        dim,
+        classes,
+        move |r| pnode::nn::init::kaiming_uniform(r, &dims_init, 1.0),
+    );
+    let mut rhs = MlpRhs::new(dims, Act::Relu, true, batch, task.block_theta(0).to_vec());
+    let ds = SpiralDataset::generate(&mut rng, batch * 5, classes, dim);
+    let (train, test) = ds.split(0.9);
+    let mut opt = pnode::nn::Adam::new(task.theta.len(), lr);
+    let mut x = vec![0.0f32; batch * dim];
+    let mut y = vec![0usize; batch];
+    for step in 0..steps {
+        train.fill_batch(step * batch, batch, &mut x, &mut y);
+        let res = task.grad_step(&mut rhs, batch, &x, &y, 0.05);
+        task.apply_grad(&mut opt as &mut dyn Optimizer, &res.grad);
+        if step % 5 == 0 || step + 1 == steps {
+            println!(
+                "step {step:3}  loss {:.4}  acc {:.3}  nfe {}/{}  {:.0} samp/s",
+                res.loss,
+                res.accuracy,
+                res.report.nfe_forward,
+                res.report.nfe_backward,
+                res.report.exec.samples_per_sec
+            );
+        }
+    }
+    let mut xt = vec![0.0f32; batch * dim];
+    let mut yt = vec![0usize; batch];
+    test.fill_batch(0, batch, &mut xt, &mut yt);
+    let (tl, ta) = task.evaluate(&mut rhs, batch, &xt, &yt);
+    println!("test: loss {tl:.4} acc {ta:.3}");
+    anyhow::ensure!(tl.is_finite(), "training diverged");
+    Ok(())
 }
 
 fn cmd_info() -> Result<()> {
@@ -108,21 +318,14 @@ fn cmd_gradcheck() -> Result<()> {
 }
 
 fn cmd_train_clf(args: &Args) -> Result<()> {
+    use pnode::api::SolverBuilder;
     use pnode::data::spiral::SpiralDataset;
-    use pnode::exec::ExecConfig;
-    use pnode::methods::{method_by_name, parallel_method_by_name, BlockSpec};
     use pnode::nn::{Act, Optimizer};
     use pnode::ode::rhs::OdeRhs;
-    use pnode::ode::tableau::Scheme;
     use pnode::tasks::ClassificationTask;
     use pnode::util::rng::Rng;
 
-    let method_name = args.get_or("method", "pnode").to_string();
-    let scheme = Scheme::parse(args.get_or("scheme", "dopri5")).expect("unknown scheme");
     let nt = args.get_usize("nt", 4);
-    // --grid uniform | uniform:<nt> | adaptive:<atol>[:<rtol>[:<h0>]]
-    let grid = pnode::ode::grid::TimeGrid::parse(args.get_or("grid", "uniform"), nt)
-        .unwrap_or_else(|e| panic!("--grid: {e}"));
     let steps = args.get_usize("steps", 100);
     let n_blocks = args.get_usize("blocks", 4);
     let seed = args.get_u64("seed", 42);
@@ -133,10 +336,19 @@ fn cmd_train_clf(args: &Args) -> Result<()> {
     // identical for any N.
     let workers = args.get_usize("workers", pnode::exec::default_workers());
     let shard_rows = args.get_usize("shard-rows", pnode::exec::DEFAULT_SHARD_ROWS);
-    let exec_cfg = ExecConfig { workers, shard_rows };
     pnode::tensor::gemm::set_gemm_workers(workers);
-    // validate the method spec up front (the factory below asserts)
-    method_by_name(&method_name).unwrap_or_else(|| panic!("unknown method {method_name:?}"));
+
+    // the whole gradient configuration is ONE validated, typed spec; any
+    // parse error (method, scheme, grid) or degenerate combination comes
+    // back with the underlying message
+    let spec = SolverBuilder::new()
+        .method_str(args.get_or("method", "pnode"))
+        .scheme_str(args.get_or("scheme", "dopri5"))
+        .grid_str(args.get_or("grid", "uniform"), nt)
+        .workers(workers)
+        .shard_rows(shard_rows)
+        .build()
+        .map_err(|e| anyhow::anyhow!("invalid solver configuration: {e}"))?;
 
     let mut rng = Rng::new(seed);
     const D: usize = 64;
@@ -145,16 +357,15 @@ fn cmd_train_clf(args: &Args) -> Result<()> {
     let per_block = pnode::nn::param_count(&dims);
     let dims_init = dims.clone();
 
-    let grid_name = grid.name();
+    let grid_name = spec.grid.name();
     let mut task = ClassificationTask::new(
         &mut rng,
         n_blocks,
-        BlockSpec { scheme, t0: 0.0, tf: 1.0, grid },
+        &spec,
         per_block,
         D,
         10,
         move |r| pnode::nn::init::kaiming_uniform(r, &dims_init, 1.0),
-        || parallel_method_by_name(&method_name, exec_cfg).expect("method validated above"),
     );
     println!(
         "classification: {} blocks x {} params = {} total (paper: 199,800), grid {}, \
@@ -233,13 +444,22 @@ fn cmd_train_clf(args: &Args) -> Result<()> {
 fn cmd_train_stiff(args: &Args) -> Result<()> {
     use pnode::data::robertson::RobertsonData;
     use pnode::nn::{Act, Optimizer};
-    use pnode::ode::implicit::ThetaScheme;
     use pnode::ode::rhs::OdeRhs;
+    use pnode::ode::tableau::Scheme;
     use pnode::tasks::StiffTask;
     use pnode::util::rng::Rng;
 
     let epochs = args.get_usize("epochs", 300);
-    let scheme = args.get_or("scheme", "cn").to_string();
+    let scheme_name = args.get_or("scheme", "cn").to_string();
+    let scheme = Scheme::parse(&scheme_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown scheme {scheme_name:?}"))?;
+    // the explicit baseline is specifically adaptive Dopri5 (Fig. 5);
+    // don't silently substitute it for other explicit scheme names
+    anyhow::ensure!(
+        scheme.is_implicit() || scheme == Scheme::Dopri5,
+        "train-stiff supports cn | beuler (implicit θ-adjoint) or dopri5 \
+         (the adaptive explicit baseline), got {scheme_name:?}"
+    );
     let scaled = !args.flag("raw");
     let use_xla = !args.flag("no-xla");
     let seed = args.get_u64("seed", 3);
@@ -264,15 +484,10 @@ fn cmd_train_stiff(args: &Args) -> Result<()> {
     let mut theta = theta0;
     let mut stats = pnode::train::GradStats::default();
     for epoch in 0..epochs {
-        let step = if scheme == "dopri5" {
-            task.grad_explicit_adaptive(rhs.as_ref(), 1e-6)
+        let step = if scheme.is_implicit() {
+            task.grad_implicit(rhs.as_ref(), scheme)
         } else {
-            let s = if scheme == "beuler" {
-                ThetaScheme::backward_euler()
-            } else {
-                ThetaScheme::crank_nicolson()
-            };
-            task.grad_implicit(rhs.as_ref(), s)
+            task.grad_explicit_adaptive(rhs.as_ref(), 1e-6)
         };
         let gn = pnode::train::grad_norm(&step.grad);
         stats.observe(gn, 1e6);

@@ -144,7 +144,7 @@ mod tests {
     #[test]
     fn by_method_covers_table() {
         let m = model();
-        for name in crate::methods::METHOD_NAMES {
+        for name in crate::api::METHOD_NAMES {
             assert!(m.by_method(name).is_some(), "{name}");
         }
     }

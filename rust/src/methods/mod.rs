@@ -1,21 +1,30 @@
 //! The five neural-ODE gradient methods the paper compares (Table 2):
-//! PNODE (ours, discrete adjoint + checkpoint policies), NODE-cont
+//! PNODE (ours, discrete adjoint + checkpoint policies; explicit RK via
+//! [`Pnode`], implicit θ-schemes via [`ImplicitAdjoint`]), NODE-cont
 //! (continuous adjoint), NODE-naive (full tape), ANODE (block
 //! checkpointing), and ACA (adaptive checkpoint adjoint).  All expose the
 //! same [`GradientMethod`] interface so tasks and benches are generic.
+//!
+//! Construction goes through the facade: a [`crate::api::RunSpec`] names
+//! a method as a typed [`crate::api::MethodSpec`], and the
+//! [`crate::api::MethodRegistry`] resolves it to an engine (composing
+//! [`ParallelAdjoint`] on top when the spec carries an `ExecConfig`).
+//! The old `method_by_name` string dispatch is gone.
 
 pub mod baselines;
 pub mod memmodel;
 pub mod parallel;
 pub mod pnode;
+pub mod theta;
 
 pub use baselines::{Aca, Anode, NodeCont, NodeNaive};
 pub use memmodel::MemModel;
 pub use parallel::ParallelAdjoint;
 pub use pnode::Pnode;
+pub use theta::ImplicitAdjoint;
 
-use crate::checkpoint::{CheckpointPolicy, TierStats};
-use crate::exec::{ExecConfig, ExecStats};
+use crate::checkpoint::TierStats;
+use crate::exec::ExecStats;
 use crate::ode::grid::TimeGrid;
 use crate::ode::rhs::OdeRhs;
 use crate::ode::tableau::Scheme;
@@ -136,86 +145,3 @@ pub trait GradientMethod: Send {
     fn report(&self) -> MethodReport;
 }
 
-/// Construct a method by name (CLI / bench matrix).
-pub fn method_by_name(name: &str) -> Option<Box<dyn GradientMethod>> {
-    Some(match name {
-        "pnode" => Box::new(Pnode::new(CheckpointPolicy::All)),
-        "pnode2" => Box::new(Pnode::new(CheckpointPolicy::SolutionOnly)),
-        "node_cont" | "cont" => Box::new(NodeCont::new()),
-        "node_naive" | "naive" => Box::new(NodeNaive::new()),
-        "anode" => Box::new(Anode::new()),
-        "aca" => Box::new(Aca::new()),
-        _ => {
-            if let Some(rest) = name.strip_prefix("pnode:") {
-                let policy = CheckpointPolicy::parse(rest).ok()?;
-                return Some(Box::new(Pnode::new(policy)));
-            }
-            return None;
-        }
-    })
-}
-
-/// The PNODE checkpoint policy a method name denotes, if any (`pnode`,
-/// `pnode2`, `pnode:<policy>`).
-pub fn pnode_policy_of_name(name: &str) -> Option<CheckpointPolicy> {
-    match name {
-        "pnode" => Some(CheckpointPolicy::All),
-        "pnode2" => Some(CheckpointPolicy::SolutionOnly),
-        _ => CheckpointPolicy::parse(name.strip_prefix("pnode:")?).ok(),
-    }
-}
-
-/// Data-parallel wrapper over [`method_by_name`]: the named method runs
-/// one instance per batch shard on the `cfg` worker pool (falling back to
-/// a single instance for non-shardable RHSs).  `pnode:tiered:*` specs get
-/// their budget lifted into a shared [`crate::exec::BudgetArbiter`], so
-/// the whole shard fleet draws from ONE global hot-tier pool.
-pub fn parallel_method_by_name(name: &str, cfg: ExecConfig) -> Option<Box<dyn GradientMethod>> {
-    if let Some(policy) = pnode_policy_of_name(name) {
-        return Some(Box::new(ParallelAdjoint::pnode(policy, cfg)));
-    }
-    method_by_name(name)?; // validate before capturing the name
-    let name = name.to_string();
-    Some(Box::new(ParallelAdjoint::new(
-        Box::new(move || method_by_name(&name).expect("name validated above")),
-        cfg,
-    )))
-}
-
-/// All method names in the paper's table order.
-pub static METHOD_NAMES: &[&str] = &["naive", "cont", "anode", "aca", "pnode", "pnode2"];
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn method_factory_knows_all_names() {
-        for name in METHOD_NAMES {
-            assert!(method_by_name(name).is_some(), "{name}");
-        }
-        assert!(method_by_name("pnode:binomial:4").is_some());
-        assert!(method_by_name("pnode:tiered:8m:/tmp/pnode-spill").is_some());
-        assert!(method_by_name("pnode:tiered:8m:/tmp/pnode-spill:binomial:4").is_some());
-        assert!(method_by_name("pnode:binomial:0").is_none(), "degenerate policy rejected");
-        assert!(method_by_name("nope").is_none());
-    }
-
-    #[test]
-    fn parallel_factory_wraps_every_name() {
-        let cfg = ExecConfig { workers: 2, shard_rows: 4 };
-        for name in METHOD_NAMES {
-            assert!(parallel_method_by_name(name, cfg).is_some(), "{name}");
-        }
-        assert!(parallel_method_by_name("pnode:binomial:4", cfg).is_some());
-        assert!(parallel_method_by_name("nope", cfg).is_none());
-        assert_eq!(pnode_policy_of_name("pnode"), Some(CheckpointPolicy::All));
-        assert_eq!(pnode_policy_of_name("pnode2"), Some(CheckpointPolicy::SolutionOnly));
-        assert_eq!(
-            pnode_policy_of_name("pnode:binomial:3"),
-            Some(CheckpointPolicy::Binomial { n_checkpoints: 3 })
-        );
-        assert_eq!(pnode_policy_of_name("cont"), None);
-        assert_eq!(pnode_policy_of_name("pnode:bogus"), None);
-    }
-}

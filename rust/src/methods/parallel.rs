@@ -97,7 +97,7 @@ impl ParallelAdjoint {
 
     /// Report this arbiter's counters through `MethodReport::exec` (set
     /// automatically by [`ParallelAdjoint::pnode`] for tiered policies).
-    pub fn with_arbiter(mut self, arbiter: Arc<BudgetArbiter>) -> Self {
+    pub(crate) fn with_arbiter(mut self, arbiter: Arc<BudgetArbiter>) -> Self {
         self.arbiter = Some(arbiter);
         self
     }

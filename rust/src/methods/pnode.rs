@@ -28,8 +28,10 @@ impl Pnode {
     }
 
     /// PNODE whose tiered checkpoint store draws from the shared
-    /// checkpoint-memory `arbiter` (see `crate::exec::BudgetArbiter`).
-    pub fn with_arbiter(policy: CheckpointPolicy, arbiter: Arc<BudgetArbiter>) -> Self {
+    /// checkpoint-memory `arbiter` — fleet plumbing behind
+    /// [`crate::methods::ParallelAdjoint::pnode`]; public callers reach it
+    /// through a parallel tiered `crate::api::RunSpec`.
+    pub(crate) fn with_arbiter(policy: CheckpointPolicy, arbiter: Arc<BudgetArbiter>) -> Self {
         Pnode { policy, arbiter: Some(arbiter), run: None, report: MethodReport::default() }
     }
 

@@ -1,0 +1,178 @@
+//! `ImplicitAdjoint` — the implicit θ-scheme face of the PNODE discrete
+//! adjoint, behind the same [`GradientMethod`] interface as the explicit
+//! methods so the facade registry can serve `RunSpec`s with
+//! `Scheme::BackwardEuler` / `Scheme::CrankNicolson` uniformly.
+//!
+//! Forward steps are Newton–GMRES solves; the adjoint solves the
+//! transposed linearized step operator per step (solution-recording —
+//! there are no stages to store), all through the unified
+//! [`crate::adjoint::driver::AdjointDriver`].  Grids must be static
+//! (uniform or explicit): θ-methods carry no embedded error estimate,
+//! which [`crate::api::RunSpec::validate`] enforces at build time.
+
+use crate::adjoint::driver::{AdjointDriver, ThetaDriver};
+use crate::adjoint::scheme::ThetaStep;
+use crate::checkpoint::CheckpointPolicy;
+use crate::linalg::gmres::GmresOptions;
+use crate::methods::{BlockSpec, GradientMethod, MethodReport};
+use crate::ode::implicit::ThetaScheme;
+use crate::ode::rhs::OdeRhs;
+use crate::ode::tableau::Scheme;
+
+pub struct ImplicitAdjoint {
+    pub policy: CheckpointPolicy,
+    /// rtol of the transposed adjoint GMRES solves (tight by default: the
+    /// stiff task's λ jumps compound per-step solve error)
+    pub gmres_rtol: f64,
+    run: Option<ThetaDriver>,
+    report: MethodReport,
+}
+
+impl ImplicitAdjoint {
+    pub fn new(policy: CheckpointPolicy) -> Self {
+        ImplicitAdjoint { policy, gmres_rtol: 1e-8, run: None, report: MethodReport::default() }
+    }
+}
+
+fn theta_of(scheme: Scheme) -> ThetaScheme {
+    match scheme {
+        Scheme::BackwardEuler => ThetaScheme::backward_euler(),
+        Scheme::CrankNicolson => ThetaScheme::crank_nicolson(),
+        s => panic!("ImplicitAdjoint drives θ-schemes; {} is explicit (use Pnode)", s.name()),
+    }
+}
+
+impl GradientMethod for ImplicitAdjoint {
+    fn name(&self) -> &'static str {
+        "pnode-implicit"
+    }
+
+    fn reverse_accurate(&self) -> bool {
+        true
+    }
+
+    fn forward(&mut self, rhs: &dyn OdeRhs, spec: &BlockSpec, u0: &[f32]) -> Vec<f32> {
+        rhs.reset_nfe();
+        let mut run = AdjointDriver::new(
+            ThetaStep::new(theta_of(spec.scheme)),
+            self.policy.clone(),
+            spec.t0,
+            spec.tf,
+            spec.grid.clone(),
+        );
+        run.scheme.gmres_opts = GmresOptions { rtol: self.gmres_rtol, ..Default::default() };
+        let uf = run.forward(rhs, u0);
+        self.report = MethodReport {
+            nfe_forward: rhs.nfe().forward,
+            ..MethodReport::default()
+        };
+        self.report.note_grid(run.grid_steps(), run.n_rejected());
+        self.run = Some(run);
+        uf
+    }
+
+    fn backward(
+        &mut self,
+        rhs: &dyn OdeRhs,
+        _spec: &BlockSpec,
+        lambda: &mut [f32],
+        grad_theta: &mut [f32],
+    ) {
+        let run = self.run.as_mut().expect("forward before backward");
+        rhs.reset_nfe();
+        run.backward(rhs, lambda, grad_theta);
+        let nfe = rhs.nfe();
+        // NFE-B: transposed products + any re-run Newton solves
+        self.report.nfe_backward = nfe.backward + nfe.forward;
+        self.report.recompute_steps = run.recompute_steps;
+        self.report.ckpt_bytes = run.peak_checkpoint_bytes();
+        self.report.tier = run.tier_stats();
+        self.report.graph_bytes = rhs.activation_bytes_per_eval();
+    }
+
+    fn report(&self) -> MethodReport {
+        self.report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Act;
+    use crate::ode::grid::TimeGrid;
+    use crate::ode::rhs::MlpRhs;
+    use crate::util::rng::Rng;
+
+    fn mk_rhs(seed: u64) -> MlpRhs {
+        let dims = vec![3, 10, 3];
+        let mut rng = Rng::new(seed);
+        let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 0.8);
+        MlpRhs::new(dims, Act::Gelu, false, 1, theta)
+    }
+
+    #[test]
+    fn matches_theta_driver_bitwise() {
+        // the method face is plumbing, not math: same driver, same bits
+        let rhs = mk_rhs(501);
+        let u0 = vec![0.4f32, -0.1, 0.3];
+        let w = vec![1.0f32, 0.5, -0.3];
+        let ts: Vec<f64> = (0..=6).map(|i| i as f64 / 6.0).collect();
+
+        let mut direct = ThetaDriver::theta(
+            ThetaScheme::crank_nicolson(),
+            CheckpointPolicy::SolutionOnly,
+            &ts,
+        );
+        direct.scheme.gmres_opts = GmresOptions { rtol: 1e-8, ..Default::default() };
+        direct.forward(&rhs, &u0);
+        let mut l_ref = w.clone();
+        let mut g_ref = vec![0.0f32; rhs.param_len()];
+        direct.backward(&rhs, &mut l_ref, &mut g_ref);
+
+        let spec = BlockSpec {
+            scheme: Scheme::CrankNicolson,
+            t0: 0.0,
+            tf: 1.0,
+            grid: TimeGrid::from_times(&ts),
+        };
+        let mut m = ImplicitAdjoint::new(CheckpointPolicy::SolutionOnly);
+        let uf = m.forward(&rhs, &spec, &u0);
+        let mut l = w.clone();
+        let mut g = vec![0.0f32; rhs.param_len()];
+        m.backward(&rhs, &spec, &mut l, &mut g);
+
+        assert_eq!(uf, direct.final_state().to_vec());
+        assert_eq!(l, l_ref, "λ bitwise vs the bare driver");
+        assert_eq!(g, g_ref, "θ̄ bitwise vs the bare driver");
+        let r = m.report();
+        assert!(r.nfe_forward > 0 && r.nfe_backward > 0);
+        assert_eq!(r.n_accepted, 6);
+        assert_eq!(r.recompute_steps, 0, "SolutionOnly θ sweep re-runs nothing");
+    }
+
+    #[test]
+    fn uniform_grid_matches_explicit_times() {
+        let rhs = mk_rhs(511);
+        let u0 = vec![0.2f32, 0.1, -0.3];
+        let w = vec![1.0f32, 1.0, 1.0];
+        // power-of-two step count: the uniform and windowed-difference
+        // grids are then the same floats, so the runs are the same bits
+        let nt = 4usize;
+        let ts: Vec<f64> = (0..=nt).map(|i| i as f64 / nt as f64).collect();
+
+        let grad = |grid: TimeGrid| {
+            let spec =
+                BlockSpec { scheme: Scheme::BackwardEuler, t0: 0.0, tf: 1.0, grid };
+            let mut m = ImplicitAdjoint::new(CheckpointPolicy::SolutionOnly);
+            m.forward(&rhs, &spec, &u0);
+            let mut l = w.clone();
+            let mut g = vec![0.0f32; rhs.param_len()];
+            m.backward(&rhs, &spec, &mut l, &mut g);
+            (l, g)
+        };
+        let (l_u, g_u) = grad(TimeGrid::Uniform { nt });
+        let (l_e, g_e) = grad(TimeGrid::from_times(&ts));
+        assert_eq!(l_u, l_e, "uniform and equivalent explicit grids are the same map");
+        assert_eq!(g_u, g_e);
+    }
+}

@@ -3,20 +3,25 @@
 //! DESIGN.md §2).  `n_blocks` ODE blocks share one architecture but own
 //! separate parameter slices (paper: 4 blocks, 199,800 params total; ours:
 //! 4 × 50,296 = 201,184 with the `clf_d64` artifact config).
+//!
+//! Gradient execution goes through the facade: the task holds one
+//! [`Session`] per block (each owns its engine and forward state between
+//! the forward chain and the reverse λ sweep), all opened from one
+//! [`RunSpec`] — the task never names concrete method types.
 
-use crate::methods::{BlockSpec, GradientMethod, MethodReport};
+use crate::api::{RunSpec, Session};
+use crate::methods::MethodReport;
 use crate::nn::readout::Readout;
 use crate::ode::rhs::OdeRhs;
 use crate::util::rng::Rng;
 
 pub struct ClassificationTask {
     pub n_blocks: usize,
-    pub spec: BlockSpec,
     /// concatenated per-block parameters
     pub theta: Vec<f32>,
     pub readout: Readout,
-    /// per-block gradient engines (each holds its forward state)
-    methods: Vec<Box<dyn GradientMethod>>,
+    /// per-block facade sessions (each holds its forward state)
+    sessions: Vec<Session>,
 }
 
 /// Outcome of one training step.
@@ -28,18 +33,19 @@ pub struct StepResult {
 }
 
 impl ClassificationTask {
-    /// `make_method` constructs one gradient engine per block (they must
-    /// be independent instances).
+    /// Open one session per block on `spec` (each block needs an
+    /// independent engine instance).  Panics on an invalid spec — build
+    /// it with [`crate::api::SolverBuilder`], which validates.
     pub fn new(
         rng: &mut Rng,
         n_blocks: usize,
-        spec: BlockSpec,
+        spec: &RunSpec,
         per_block_params: usize,
         state_dim: usize,
         n_classes: usize,
         init: impl Fn(&mut Rng) -> Vec<f32>,
-        make_method: impl Fn() -> Box<dyn GradientMethod>,
     ) -> Self {
+        assert!(n_blocks > 0, "classification task needs at least one ODE block");
         let mut theta = Vec::with_capacity(n_blocks * per_block_params);
         for _ in 0..n_blocks {
             let t = init(rng);
@@ -47,8 +53,18 @@ impl ClassificationTask {
             theta.extend_from_slice(&t);
         }
         let readout = Readout::new(rng, state_dim, n_classes);
-        let methods = (0..n_blocks).map(|_| make_method()).collect();
-        ClassificationTask { n_blocks, spec, theta, readout, methods }
+        let sessions = (0..n_blocks)
+            .map(|_| {
+                Session::new(spec.clone())
+                    .unwrap_or_else(|e| panic!("classification task: invalid RunSpec: {e}"))
+            })
+            .collect();
+        ClassificationTask { n_blocks, theta, readout, sessions }
+    }
+
+    /// The spec every block runs.
+    pub fn spec(&self) -> &RunSpec {
+        self.sessions[0].spec()
     }
 
     pub fn per_block(&self) -> usize {
@@ -65,7 +81,7 @@ impl ClassificationTask {
         let mut u = x.to_vec();
         for b in 0..self.n_blocks {
             rhs.set_params(self.block_theta(b));
-            u = self.methods[b].forward(rhs, &self.spec, &u);
+            u = self.sessions[b].forward(rhs, &u);
         }
         u
     }
@@ -103,8 +119,8 @@ impl ClassificationTask {
         let mut report = MethodReport::default();
         for b in (0..self.n_blocks).rev() {
             rhs.set_params(self.block_theta(b));
-            self.methods[b].backward(rhs, &self.spec, &mut lambda, &mut grad[b * p..(b + 1) * p]);
-            let r = self.methods[b].report();
+            self.sessions[b].backward(rhs, &mut lambda, &mut grad[b * p..(b + 1) * p]);
+            let r = self.sessions[b].report();
             report.nfe_forward += r.nfe_forward;
             report.nfe_backward += r.nfe_backward;
             report.recompute_steps += r.recompute_steps;
@@ -128,12 +144,10 @@ impl ClassificationTask {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::checkpoint::CheckpointPolicy;
-    use crate::methods::pnode::Pnode;
+    use crate::api::SolverBuilder;
+    use crate::data::spiral::SpiralDataset;
     use crate::nn::{Act, Adam, Optimizer};
     use crate::ode::rhs::MlpRhs;
-    use crate::ode::tableau::Scheme;
-    use crate::data::spiral::SpiralDataset;
 
     const D: usize = 8;
     const B: usize = 16;
@@ -142,16 +156,14 @@ mod tests {
         let dims = vec![D + 1, 16, D];
         let p = crate::nn::param_count(&dims);
         let dims2 = dims.clone();
-        let task = ClassificationTask::new(
-            rng,
-            n_blocks,
-            BlockSpec::new(Scheme::Rk4, 4),
-            p,
-            D,
-            3,
-            move |r| crate::nn::init::kaiming_uniform(r, &dims2, 1.0),
-            || Box::new(Pnode::new(CheckpointPolicy::All)),
-        );
+        let spec = SolverBuilder::new()
+            .scheme_str("rk4")
+            .uniform(4)
+            .build()
+            .expect("valid spec");
+        let task = ClassificationTask::new(rng, n_blocks, &spec, p, D, 3, move |r| {
+            crate::nn::init::kaiming_uniform(r, &dims2, 1.0)
+        });
         let theta0 = task.block_theta(0).to_vec();
         let rhs = MlpRhs::new(dims, Act::Tanh, true, B, theta0);
         (task, rhs)

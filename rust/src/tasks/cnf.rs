@@ -7,7 +7,8 @@
 //!     L = −mean_b [ log N(z_b(T)) + Δlogp_b(T) ]
 //! whose gradient seeds the adjoint: ∂L/∂z = z/B, ∂L/∂Δlogp = −1/B.
 
-use crate::methods::{BlockSpec, GradientMethod, MethodReport};
+use crate::api::{RunSpec, Session};
+use crate::methods::MethodReport;
 use crate::ode::rhs::{Nfe, NfeCounter, OdeRhs};
 use crate::util::rng::Rng;
 
@@ -15,12 +16,12 @@ const LOG_2PI: f64 = 1.8378770664093453;
 
 pub struct CnfTask {
     pub n_flows: usize,
-    pub spec: BlockSpec,
     pub batch: usize,
     pub dim: usize,
     /// concatenated per-flow parameters
     pub theta: Vec<f32>,
-    methods: Vec<Box<dyn GradientMethod>>,
+    /// per-flow facade sessions (each holds its forward state)
+    sessions: Vec<Session>,
 }
 
 pub struct CnfStep {
@@ -30,30 +31,36 @@ pub struct CnfStep {
 }
 
 impl CnfTask {
+    /// Open one session per flow on `spec`.  Panics on an invalid spec —
+    /// build it with [`crate::api::SolverBuilder`], which validates.
     pub fn new(
         rng: &mut Rng,
         n_flows: usize,
-        spec: BlockSpec,
+        spec: &RunSpec,
         batch: usize,
         dim: usize,
         per_flow_params: usize,
         init: impl Fn(&mut Rng) -> Vec<f32>,
-        make_method: impl Fn() -> Box<dyn GradientMethod>,
     ) -> Self {
+        assert!(n_flows > 0, "cnf task needs at least one flow");
         let mut theta = Vec::with_capacity(n_flows * per_flow_params);
         for _ in 0..n_flows {
             let t = init(rng);
             assert_eq!(t.len(), per_flow_params);
             theta.extend_from_slice(&t);
         }
-        CnfTask {
-            n_flows,
-            spec,
-            batch,
-            dim,
-            theta,
-            methods: (0..n_flows).map(|_| make_method()).collect(),
-        }
+        let sessions = (0..n_flows)
+            .map(|_| {
+                Session::new(spec.clone())
+                    .unwrap_or_else(|e| panic!("cnf task: invalid RunSpec: {e}"))
+            })
+            .collect();
+        CnfTask { n_flows, batch, dim, theta, sessions }
+    }
+
+    /// The spec every flow runs.
+    pub fn spec(&self) -> &RunSpec {
+        self.sessions[0].spec()
     }
 
     pub fn per_flow(&self) -> usize {
@@ -99,7 +106,7 @@ impl CnfTask {
         z[..b * d].copy_from_slice(x);
         for f in 0..self.n_flows {
             rhs.set_params(&self.theta[f * p..(f + 1) * p]);
-            z = self.methods[f].forward(rhs, &self.spec, &z);
+            z = self.sessions[f].forward(rhs, &z);
         }
         let nll = self.nll(&z);
         let mut lambda = self.nll_grad(&z);
@@ -107,8 +114,8 @@ impl CnfTask {
         let mut report = MethodReport::default();
         for f in (0..self.n_flows).rev() {
             rhs.set_params(&self.theta[f * p..(f + 1) * p]);
-            self.methods[f].backward(rhs, &self.spec, &mut lambda, &mut grad[f * p..(f + 1) * p]);
-            let r = self.methods[f].report();
+            self.sessions[f].backward(rhs, &mut lambda, &mut grad[f * p..(f + 1) * p]);
+            let r = self.sessions[f].report();
             report.nfe_forward += r.nfe_forward;
             report.nfe_backward += r.nfe_backward;
             report.recompute_steps += r.recompute_steps;
@@ -235,9 +242,7 @@ impl OdeRhs for LinearCnfRhs {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::checkpoint::CheckpointPolicy;
-    use crate::methods::pnode::Pnode;
-    use crate::ode::tableau::Scheme;
+    use crate::api::SolverBuilder;
 
     const B: usize = 8;
     const D: usize = 3;
@@ -250,16 +255,12 @@ mod tests {
             0.0, -0.4, 0.05, //
             0.1, 0.0, -0.6,
         ];
-        let task = CnfTask::new(
-            &mut rng,
-            1,
-            BlockSpec::new(Scheme::Rk4, 8),
-            B,
-            D,
-            D * D,
-            |_r| a.clone(),
-            || Box::new(Pnode::new(CheckpointPolicy::All)),
-        );
+        let spec = SolverBuilder::new()
+            .scheme_str("rk4")
+            .uniform(8)
+            .build()
+            .expect("valid spec");
+        let task = CnfTask::new(&mut rng, 1, &spec, B, D, D * D, |_r| a.clone());
         let rhs = LinearCnfRhs::new(B, D, a.clone(), &mut rng);
         let mut x = vec![0.0f32; B * D];
         rng.fill_normal(&mut x);
@@ -291,19 +292,18 @@ mod tests {
         assert!(res.nll.is_finite());
 
         let h = 1e-3f32;
+        let mut probe = crate::api::Session::new(task.spec().clone()).unwrap();
         for &idx in &[0usize, 4, 8] {
             let orig = task.theta[idx];
             task.theta[idx] = orig + h;
             let mut z = vec![0.0f32; B * D + B];
             z[..B * D].copy_from_slice(&x);
             rhs.set_params(&task.theta);
-            let mut m = Pnode::new(CheckpointPolicy::All);
-            use crate::methods::GradientMethod;
-            let zf = m.forward(&rhs, &task.spec, &z);
+            let zf = probe.forward(&rhs, &z);
             let lp = task.nll(&zf);
             task.theta[idx] = orig - h;
             rhs.set_params(&task.theta);
-            let zf = m.forward(&rhs, &task.spec, &z);
+            let zf = probe.forward(&rhs, &z);
             let lm = task.nll(&zf);
             task.theta[idx] = orig;
             let fd = (lp - lm) / (2.0 * h as f64);

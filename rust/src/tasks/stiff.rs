@@ -4,20 +4,19 @@
 //! (Fig. 5).  Loss = MAE over 40 log-spaced observations (eq. 15), with
 //! min–max feature scaling (eq. 16).
 //!
-//! Both gradient paths run through the unified [`AdjointDriver`]: the
-//! implicit path as a θ-scheme over the explicit log-spaced grid (with
-//! λ jumps via `backward_range`), the explicit path as per-segment
-//! adaptive Dopri5 runs whose accepted grids feed the checkpointed
-//! discrete adjoint.
+//! Both gradient paths run through the facade: one [`Session`] per
+//! observation segment (implicit path: a θ-scheme over the densified
+//! explicit segment grid; explicit path: a per-segment adaptive Dopri5
+//! spec).  Forward chains the segments; backward walks them in reverse
+//! with the λ jumps added at each observation — the task never names a
+//! driver or engine type.
 
-use crate::adjoint::driver::{ErkDriver, ThetaDriver};
+use crate::api::{Session, SolverBuilder};
 use crate::checkpoint::CheckpointPolicy;
 use crate::data::robertson::RobertsonData;
-use crate::linalg::gmres::GmresOptions;
 use crate::ode::grid::TimeGrid;
-use crate::ode::implicit::ThetaScheme;
 use crate::ode::rhs::OdeRhs;
-use crate::ode::tableau;
+use crate::ode::tableau::Scheme;
 
 pub struct StiffTask {
     pub data: RobertsonData,
@@ -43,22 +42,6 @@ impl StiffTask {
         StiffTask { data, substeps }
     }
 
-    /// Full integration grid: obs times densified by `substeps`.
-    fn grid(&self) -> (Vec<f64>, Vec<usize>) {
-        let mut grid = Vec::new();
-        let mut obs_idx = Vec::new(); // grid index of each observation
-        grid.push(self.data.ts[0]);
-        obs_idx.push(0usize);
-        for w in self.data.ts.windows(2) {
-            let (a, b) = (w[0], w[1]);
-            for s in 1..=self.substeps {
-                grid.push(a + (b - a) * s as f64 / self.substeps as f64);
-            }
-            obs_idx.push(grid.len() - 1);
-        }
-        (grid, obs_idx)
-    }
-
     /// MAE loss and its per-observation gradients.
     fn mae(&self, preds: &[Vec<f32>]) -> (f64, Vec<Vec<f32>>) {
         let n = preds.len();
@@ -78,105 +61,114 @@ impl StiffTask {
         (loss, grads)
     }
 
-    /// Gradient via the Crank–Nicolson (or BE) discrete adjoint with
-    /// observation-time λ jumps.
-    pub fn grad_implicit(&self, rhs: &dyn OdeRhs, scheme: ThetaScheme) -> StiffStep {
-        rhs.reset_nfe();
-        let (grid, obs_idx) = self.grid();
-        let mut run =
-            ThetaDriver::theta(scheme, CheckpointPolicy::SolutionOnly, &grid);
-        run.scheme.gmres_opts = GmresOptions { rtol: 1e-8, ..Default::default() };
+    /// Run the segment sessions: forward chained over all observation
+    /// windows, then backward in reverse with the λ jump for each
+    /// observation added at its segment's right edge; the gradient wrt
+    /// `u_0` is discarded (u0 is data).
+    fn grad_over_segments(
+        &self,
+        rhs: &dyn OdeRhs,
+        mut sessions: Vec<Session>,
+    ) -> StiffStep {
         let u0 = self.data.u0();
-        run.forward(rhs, &u0);
-        let nfe_f = rhs.nfe().forward;
-        let n_accepted = run.n_accepted() as u64;
-
-        // predictions at observation indices (obs 0 is the initial state)
-        let preds: Vec<Vec<f32>> = obs_idx.iter().map(|&gi| run.state(gi).to_vec()).collect();
+        let mut preds = vec![u0.clone()];
+        let mut u = u0;
+        for s in sessions.iter_mut() {
+            u = s.forward(rhs, &u);
+            preds.push(u.clone());
+        }
         let (loss, obs_grads) = self.mae(&preds);
         let mut pred_flat = Vec::with_capacity(preds.len() * 3);
         for p in &preds {
             pred_flat.extend_from_slice(p);
         }
 
-        // backward with λ jumps at each observation
         let mut lambda = vec![0.0f32; 3];
         let mut grad = vec![0.0f32; rhs.param_len()];
-        for seg in (0..obs_idx.len() - 1).rev() {
-            // jump for the observation at the segment's right edge
+        for seg in (0..sessions.len()).rev() {
             let right_obs = seg + 1;
             for c in 0..3 {
                 lambda[c] += obs_grads[right_obs][c];
             }
-            run.backward_range(rhs, obs_idx[seg], obs_idx[right_obs], &mut lambda, &mut grad);
+            sessions[seg].backward(rhs, &mut lambda, &mut grad);
         }
-        // (gradient wrt u0 is discarded: u0 is data)
-        let nfe = rhs.nfe();
+
+        let (mut nfe_f, mut nfe_b) = (0u64, 0u64);
+        let (mut n_accepted, mut n_rejected) = (0u64, 0u64);
+        for s in &sessions {
+            let r = s.report();
+            nfe_f += r.nfe_forward;
+            nfe_b += r.nfe_backward;
+            n_accepted += r.n_accepted;
+            n_rejected += r.n_rejected;
+        }
         StiffStep {
             loss,
             grad,
             nfe_forward: nfe_f,
-            nfe_backward: nfe.backward + (nfe.forward - nfe_f),
+            nfe_backward: nfe_b,
             n_accepted,
-            n_rejected: 0,
+            n_rejected,
             pred: pred_flat,
         }
+    }
+
+    /// Gradient via the implicit θ-scheme discrete adjoint
+    /// (`Scheme::CrankNicolson` or `Scheme::BackwardEuler`) with
+    /// observation-time λ jumps.
+    pub fn grad_implicit(&self, rhs: &dyn OdeRhs, scheme: Scheme) -> StiffStep {
+        assert!(
+            scheme.is_implicit(),
+            "grad_implicit needs an implicit θ-scheme (cn | beuler), got {}",
+            scheme.name()
+        );
+        rhs.reset_nfe();
+        let sessions: Vec<Session> = self
+            .data
+            .ts
+            .windows(2)
+            .map(|w| {
+                // densify the observation window by `substeps`
+                let ts: Vec<f64> = (0..=self.substeps)
+                    .map(|s| w[0] + (w[1] - w[0]) * s as f64 / self.substeps as f64)
+                    .collect();
+                SolverBuilder::new()
+                    .policy(CheckpointPolicy::SolutionOnly)
+                    .scheme(scheme)
+                    .span(w[0], w[1])
+                    .grid(TimeGrid::from_times(&ts))
+                    .session()
+                    .expect("valid stiff segment spec")
+            })
+            .collect();
+        self.grad_over_segments(rhs, sessions)
     }
 
     /// Gradient via adaptive Dopri5 + checkpointed discrete adjoint per
     /// segment (the explicit baseline of Fig. 5 / Table 8).  Each segment
     /// runs the PI controller, records its accepted grid, and adjoints it
-    /// through the same driver as every other PNODE configuration.
+    /// through the same facade as every other PNODE configuration.
     pub fn grad_explicit_adaptive(&self, rhs: &dyn OdeRhs, tol: f64) -> StiffStep {
         rhs.reset_nfe();
-        let tab = &tableau::DOPRI5;
-        let u0 = self.data.u0();
-        let n_obs = self.data.n_obs();
-
-        // forward per segment, recording all accepted steps (policy All)
-        let mut seg_runs: Vec<ErkDriver> = Vec::with_capacity(n_obs - 1);
-        let mut preds = vec![u0.clone()];
-        let mut u = u0.clone();
-        let (mut n_accepted, mut n_rejected) = (0u64, 0u64);
-        for w in self.data.ts.windows(2) {
-            let grid = TimeGrid::Adaptive {
-                atol: tol,
-                rtol: tol,
-                h0: Some((w[1] - w[0]) / 4.0),
-            };
-            let mut run = ErkDriver::erk(tab, CheckpointPolicy::All, w[0], w[1], grid);
-            u = run.forward(rhs, &u);
-            preds.push(u.clone());
-            n_accepted += run.n_accepted() as u64;
-            n_rejected += run.n_rejected() as u64;
-            seg_runs.push(run);
-        }
-        let nfe_f = rhs.nfe().forward;
-        let (loss, obs_grads) = self.mae(&preds);
-        let mut pred_flat = Vec::with_capacity(preds.len() * 3);
-        for p in &preds {
-            pred_flat.extend_from_slice(p);
-        }
-
-        // discrete adjoint over accepted steps, with λ jumps at observations
-        let mut lambda = vec![0.0f32; 3];
-        let mut grad = vec![0.0f32; rhs.param_len()];
-        for seg in (0..n_obs - 1).rev() {
-            for c in 0..3 {
-                lambda[c] += obs_grads[seg + 1][c];
-            }
-            seg_runs[seg].backward(rhs, &mut lambda, &mut grad);
-        }
-        let nfe = rhs.nfe();
-        StiffStep {
-            loss,
-            grad,
-            nfe_forward: nfe_f,
-            nfe_backward: nfe.backward + (nfe.forward - nfe_f),
-            n_accepted,
-            n_rejected,
-            pred: pred_flat,
-        }
+        let sessions: Vec<Session> = self
+            .data
+            .ts
+            .windows(2)
+            .map(|w| {
+                SolverBuilder::new()
+                    .policy(CheckpointPolicy::All)
+                    .scheme(Scheme::Dopri5)
+                    .span(w[0], w[1])
+                    .grid(TimeGrid::Adaptive {
+                        atol: tol,
+                        rtol: tol,
+                        h0: Some((w[1] - w[0]) / 4.0),
+                    })
+                    .session()
+                    .expect("valid stiff segment spec")
+            })
+            .collect();
+        self.grad_over_segments(rhs, sessions)
     }
 }
 
@@ -205,7 +197,7 @@ mod tests {
     fn implicit_gradient_matches_finite_differences() {
         let mut rhs = mk_rhs(401);
         let task = small_task();
-        let step = task.grad_implicit(&rhs, ThetaScheme::crank_nicolson());
+        let step = task.grad_implicit(&rhs, Scheme::CrankNicolson);
         assert!(step.loss.is_finite());
         assert!(step.n_accepted > 0 && step.n_rejected == 0);
 
@@ -215,11 +207,11 @@ mod tests {
             let mut tp = theta0.clone();
             tp[idx] += h;
             rhs.set_params(&tp);
-            let lp = task.grad_implicit(&rhs, ThetaScheme::crank_nicolson()).loss;
+            let lp = task.grad_implicit(&rhs, Scheme::CrankNicolson).loss;
             let mut tm = theta0.clone();
             tm[idx] -= h;
             rhs.set_params(&tm);
-            let lm = task.grad_implicit(&rhs, ThetaScheme::crank_nicolson()).loss;
+            let lm = task.grad_implicit(&rhs, Scheme::CrankNicolson).loss;
             rhs.set_params(&theta0);
             let fd = (lp - lm) / (2.0 * h as f64);
             assert!(
@@ -236,11 +228,11 @@ mod tests {
         let task = small_task();
         let mut opt = crate::nn::AdamW::new(rhs.param_len(), 5e-3, 1e-4);
         use crate::nn::Optimizer;
-        let first = task.grad_implicit(&rhs, ThetaScheme::crank_nicolson()).loss;
+        let first = task.grad_implicit(&rhs, Scheme::CrankNicolson).loss;
         let mut theta = rhs.params().to_vec();
         let mut last = first;
         for _ in 0..60 {
-            let step = task.grad_implicit(&rhs, ThetaScheme::crank_nicolson());
+            let step = task.grad_implicit(&rhs, Scheme::CrankNicolson);
             last = step.loss;
             opt.step(&mut theta, &step.grad);
             rhs.set_params(&theta);
@@ -288,5 +280,13 @@ mod tests {
                 step.grad[idx]
             );
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "θ-scheme")]
+    fn explicit_scheme_is_rejected_by_the_implicit_path() {
+        let rhs = mk_rhs(441);
+        let task = small_task();
+        let _ = task.grad_implicit(&rhs, Scheme::Dopri5);
     }
 }

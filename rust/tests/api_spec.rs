@@ -1,0 +1,186 @@
+//! `RunSpec` JSON round-trip and builder-validation tests (the facade's
+//! serialization contract): serialize → parse → identical spec across
+//! every grid and policy variant, and degenerate specs rejected at build
+//! time with the underlying message.
+
+use pnode::api::{MethodSpec, RunSpec, SolverBuilder, METHOD_NAMES};
+use pnode::checkpoint::CheckpointPolicy;
+use pnode::exec::ExecConfig;
+use pnode::ode::grid::TimeGrid;
+use pnode::ode::tableau::Scheme;
+
+fn roundtrip(spec: &RunSpec) {
+    // pretty and compact text both re-parse to the identical spec
+    let pretty = spec.to_json().to_string_pretty();
+    let back = RunSpec::parse_json(&pretty)
+        .unwrap_or_else(|e| panic!("pretty re-parse failed: {e}\n{pretty}"));
+    assert_eq!(&back, spec, "pretty round-trip\n{pretty}");
+    let compact = spec.to_json().to_string_compact();
+    let back = RunSpec::parse_json(&compact)
+        .unwrap_or_else(|e| panic!("compact re-parse failed: {e}\n{compact}"));
+    assert_eq!(&back, spec, "compact round-trip\n{compact}");
+}
+
+#[test]
+fn every_method_name_roundtrips() {
+    for name in METHOD_NAMES {
+        let spec = SolverBuilder::new().method_str(name).build().unwrap();
+        assert_eq!(spec.method.name(), *name);
+        roundtrip(&spec);
+    }
+}
+
+#[test]
+fn tiered_policy_and_adaptive_grid_roundtrip() {
+    // tiered policy (composed with binomial placement) over an adaptive
+    // grid with explicit h0, plus a nonunit span — the maximal variant
+    let spec = SolverBuilder::new()
+        .method_str("pnode:tiered:8m+f16:/tmp/pnode-spec-spill:binomial:4")
+        .scheme(Scheme::Dopri5)
+        .span(0.25, 2.5)
+        .grid(TimeGrid::Adaptive { atol: 1e-6, rtol: 1e-8, h0: Some(0.125) })
+        .build()
+        .unwrap();
+    match spec.method.pnode_policy().unwrap() {
+        CheckpointPolicy::Tiered { budget_bytes, compress_f16, inner, .. } => {
+            assert_eq!(*budget_bytes, 8 << 20);
+            assert!(compress_f16);
+            assert_eq!(**inner, CheckpointPolicy::Binomial { n_checkpoints: 4 });
+        }
+        p => panic!("wrong policy {p:?}"),
+    }
+    roundtrip(&spec);
+
+    // adaptive without h0 serializes without the key and still round-trips
+    let spec = SolverBuilder::new()
+        .scheme(Scheme::Bosh3)
+        .adaptive(1e-5)
+        .build()
+        .unwrap();
+    roundtrip(&spec);
+}
+
+#[test]
+fn explicit_grids_and_exec_roundtrip() {
+    // nonuniform explicit steps survive exactly (f64 shortest-round-trip
+    // printing), with and without the execution engine
+    let steps = vec![(0.0, 0.05), (0.05, 0.1), (0.15000000000000002, 0.85)];
+    let spec = SolverBuilder::new()
+        .method_str("pnode2")
+        .grid(TimeGrid::Explicit(steps))
+        .parallel(ExecConfig { workers: 3, shard_rows: 8 })
+        .build()
+        .unwrap();
+    roundtrip(&spec);
+
+    let spec = SolverBuilder::new()
+        .method_str("aca")
+        .uniform(12)
+        .workers(2)
+        .build()
+        .unwrap();
+    assert_eq!(spec.exec.map(|c| c.workers), Some(2));
+    roundtrip(&spec);
+}
+
+#[test]
+fn implicit_scheme_specs_roundtrip() {
+    let ts = [0.0, 0.1, 0.3, 0.7, 1.5];
+    let spec = SolverBuilder::new()
+        .policy(CheckpointPolicy::SolutionOnly)
+        .scheme(Scheme::CrankNicolson)
+        .span(0.0, 1.5)
+        .grid(TimeGrid::from_times(&ts))
+        .build()
+        .unwrap();
+    roundtrip(&spec);
+}
+
+#[test]
+fn builder_rejects_degenerate_specs_with_messages() {
+    // the satellite contract: the *underlying* message survives, never a
+    // bare "unknown method"
+    let e = SolverBuilder::new().method_str("pnode:binomial:0").build().unwrap_err();
+    assert!(e.contains("binomial:0") && e.contains("at least one"), "{e}");
+    let e = SolverBuilder::new().method_str("pnode:tiered:0:/tmp/x").build().unwrap_err();
+    assert!(e.contains("zero"), "{e}");
+    let e = SolverBuilder::new().workers(0).build().unwrap_err();
+    assert!(e.contains("workers"), "{e}");
+    let e = SolverBuilder::new().shard_rows(0).build().unwrap_err();
+    assert!(e.contains("shard_rows"), "{e}");
+    let e = SolverBuilder::new().uniform(0).build().unwrap_err();
+    assert!(e.contains("nt >= 1"), "{e}");
+    let e = SolverBuilder::new().grid(TimeGrid::Explicit(vec![])).build().unwrap_err();
+    assert!(e.contains("at least one step"), "{e}");
+    let e = SolverBuilder::new()
+        .grid(TimeGrid::Explicit(vec![(0.9, 0.1), (0.0, 0.5)]))
+        .build()
+        .unwrap_err();
+    assert!(e.contains("strictly increasing"), "{e}");
+    let e = SolverBuilder::new()
+        .grid(TimeGrid::Adaptive { atol: -1.0, rtol: 1e-6, h0: None })
+        .scheme(Scheme::Dopri5)
+        .build()
+        .unwrap_err();
+    assert!(e.contains("positive"), "{e}");
+    // adaptive grid on schemes without an embedded pair
+    for scheme in [Scheme::Euler, Scheme::Rk4, Scheme::CrankNicolson] {
+        let e = SolverBuilder::new()
+            .scheme(scheme)
+            .adaptive(1e-6)
+            .build()
+            .unwrap_err();
+        assert!(e.contains("embedded"), "{}: {e}", scheme.name());
+    }
+    // implicit θ-schemes: pnode family only, single-engine only
+    let e = SolverBuilder::new()
+        .method_str("cont")
+        .scheme(Scheme::BackwardEuler)
+        .build()
+        .unwrap_err();
+    assert!(e.contains("implicit"), "{e}");
+    let e = SolverBuilder::new()
+        .scheme(Scheme::CrankNicolson)
+        .workers(2)
+        .build()
+        .unwrap_err();
+    assert!(e.contains("explicit schemes only"), "{e}");
+}
+
+#[test]
+fn parse_json_rejects_bad_documents_with_context() {
+    let e = RunSpec::parse_json("{").unwrap_err();
+    assert!(e.contains("parse error"), "{e}");
+    let e = RunSpec::parse_json(r#"{"scheme": "rk4"}"#).unwrap_err();
+    assert!(e.contains("method"), "{e}");
+    let e = RunSpec::parse_json(
+        r#"{"method": "pnode", "scheme": "rk4", "grid": {"kind": "warped"}}"#,
+    )
+    .unwrap_err();
+    assert!(e.contains("warped"), "{e}");
+    // degenerate content fails validation even when well-formed JSON
+    let e = RunSpec::parse_json(
+        r#"{"method": "pnode", "scheme": "rk4", "grid": {"kind": "uniform", "nt": 0}}"#,
+    )
+    .unwrap_err();
+    assert!(e.contains("nt >= 1"), "{e}");
+    // unknown sibling keys (e.g. the CLI's "task" block) are ignored
+    let spec = RunSpec::parse_json(
+        r#"{"method": "pnode", "scheme": "rk4",
+            "grid": {"kind": "uniform", "nt": 4},
+            "task": {"kind": "classification"}}"#,
+    )
+    .unwrap();
+    assert_eq!(spec.grid, TimeGrid::Uniform { nt: 4 });
+    assert_eq!(spec.method, MethodSpec::Pnode { policy: CheckpointPolicy::All });
+}
+
+#[test]
+fn checked_in_exemplar_specs_parse_and_roundtrip() {
+    for path in ["examples/specs/clf_small.json", "examples/specs/tiered_adaptive.json"] {
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("{path}: {e} (run tests from the repo root)"));
+        let spec = RunSpec::parse_json(&text).unwrap_or_else(|e| panic!("{path}: {e}"));
+        roundtrip(&spec);
+    }
+}

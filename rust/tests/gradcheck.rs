@@ -30,7 +30,10 @@ fn fd_check_every_scheme_and_policy() {
             let mut rng = Rng::new(34);
             let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
             let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
-            let spec = BlockSpec::new(scheme, 7);
+            // nt is a checked invariant of this uniform grid; keep the
+            // literal local rather than the panicking BlockSpec::nt()
+            let nt = 7;
+            let spec = BlockSpec::new(scheme, nt);
 
             let mut m = Pnode::new(policy.clone());
             m.forward(&rhs, &spec, &u0);
@@ -44,7 +47,7 @@ fn fd_check_every_scheme_and_policy() {
                     rhs,
                     spec.t0,
                     spec.tf,
-                    spec.nt(),
+                    nt,
                     &u0,
                     |_, _, _, _, _, _| {},
                 );
@@ -266,7 +269,8 @@ fn fd_directional_derivative_property() {
         let u0 = prop::vec_uniform(rng, n, 0.5);
         let w = prop::vec_uniform(rng, n, 1.0);
         let dir = prop::vec_normal(rng, n);
-        let spec = BlockSpec::new(pnode::ode::tableau::Scheme::Midpoint, 5);
+        let nt = 5;
+        let spec = BlockSpec::new(pnode::ode::tableau::Scheme::Midpoint, nt);
 
         let mut m = Pnode::new(CheckpointPolicy::All);
         m.forward(&rhs, &spec, &u0);
@@ -281,7 +285,7 @@ fn fd_directional_derivative_property() {
                 &rhs,
                 spec.t0,
                 spec.tf,
-                spec.nt(),
+                nt,
                 u0,
                 |_, _, _, _, _, _| {},
             );

@@ -1,9 +1,11 @@
 //! Cross-module integration tests (XLA-free: the pure-Rust MLP mirror
-//! drives the full integrator → adjoint → checkpoint → optimizer stack).
+//! drives the full integrator → adjoint → checkpoint → optimizer stack),
+//! with every gradient run constructed through the facade
+//! (`SolverBuilder` → `RunSpec` → `Session`).
 
+use pnode::api::SolverBuilder;
 use pnode::checkpoint::CheckpointPolicy;
 use pnode::data::spiral::SpiralDataset;
-use pnode::methods::{method_by_name, BlockSpec, GradientMethod, Pnode};
 use pnode::nn::{Act, Adam, Optimizer};
 use pnode::ode::rhs::{MlpRhs, OdeRhs};
 use pnode::ode::tableau::{Scheme, EXPLICIT_SCHEMES};
@@ -17,6 +19,25 @@ fn mk_rhs(dims: &[usize], batch: usize, seed: u64) -> MlpRhs {
     MlpRhs::new(dims.to_vec(), Act::Tanh, true, batch, theta)
 }
 
+/// One session-driven gradient; returns (λ₀, θ̄).
+fn grad_of(
+    method: &str,
+    scheme: Scheme,
+    nt: usize,
+    rhs: &dyn OdeRhs,
+    u0: &[f32],
+    w: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let mut session = SolverBuilder::new()
+        .method_str(method)
+        .scheme(scheme)
+        .uniform(nt)
+        .session()
+        .unwrap_or_else(|e| panic!("{method}: {e}"));
+    let _ = session.grad(rhs, u0, w);
+    (session.lambda0().to_vec(), session.grad_theta().to_vec())
+}
+
 /// Every (scheme × method) combination produces a gradient that agrees
 /// with PNODE-All for reverse-accurate methods.
 #[test]
@@ -27,19 +48,9 @@ fn all_schemes_times_all_methods_agree() {
     let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
 
     for &scheme in EXPLICIT_SCHEMES {
-        let spec = BlockSpec::new(scheme, 6);
-        let mut reference = Pnode::new(CheckpointPolicy::All);
-        reference.forward(&rhs, &spec, &u0);
-        let mut l_ref = w.clone();
-        let mut g_ref = vec![0.0f32; rhs.param_len()];
-        reference.backward(&rhs, &spec, &mut l_ref, &mut g_ref);
-
+        let (l_ref, g_ref) = grad_of("pnode", scheme, 6, &rhs, &u0, &w);
         for name in ["naive", "anode", "aca", "pnode2", "pnode:binomial:3"] {
-            let mut m = method_by_name(name).unwrap();
-            m.forward(&rhs, &spec, &u0);
-            let mut l = w.clone();
-            let mut g = vec![0.0f32; rhs.param_len()];
-            m.backward(&rhs, &spec, &mut l, &mut g);
+            let (l, g) = grad_of(name, scheme, 6, &rhs, &u0, &w);
             pnode::testing::assert_allclose(
                 &l,
                 &l_ref,
@@ -67,18 +78,8 @@ fn prop1_continuous_adjoint_discrepancy_order() {
     let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
 
     let gap = |nt: usize| -> f64 {
-        let spec = BlockSpec::new(Scheme::Euler, nt);
-        let mut pnode = Pnode::new(CheckpointPolicy::All);
-        pnode.forward(&rhs, &spec, &u0);
-        let mut l_d = w.clone();
-        let mut g_d = vec![0.0f32; rhs.param_len()];
-        pnode.backward(&rhs, &spec, &mut l_d, &mut g_d);
-
-        let mut cont = method_by_name("cont").unwrap();
-        cont.forward(&rhs, &spec, &u0);
-        let mut l_c = w.clone();
-        let mut g_c = vec![0.0f32; rhs.param_len()];
-        cont.backward(&rhs, &spec, &mut l_c, &mut g_c);
+        let (l_d, _) = grad_of("pnode", Scheme::Euler, nt, &rhs, &u0, &w);
+        let (l_c, _) = grad_of("cont", Scheme::Euler, nt, &rhs, &u0, &w);
         pnode::testing::rel_l2(&l_c, &l_d)
     };
     let g1 = gap(8);
@@ -96,17 +97,17 @@ fn checkpoint_budget_tradeoff_curve() {
     let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
     let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
     let nt = 16;
-    let spec = BlockSpec::new(Scheme::Rk4, nt);
 
     let mut prev_recompute = u64::MAX;
     let mut prev_bytes = 0u64;
     for nc in [1usize, 2, 4, 8, 15] {
-        let mut m = Pnode::new(CheckpointPolicy::Binomial { n_checkpoints: nc });
-        m.forward(&rhs, &spec, &u0);
-        let mut l = w.clone();
-        let mut g = vec![0.0f32; rhs.param_len()];
-        m.backward(&rhs, &spec, &mut l, &mut g);
-        let r = m.report();
+        let mut session = SolverBuilder::new()
+            .policy(CheckpointPolicy::Binomial { n_checkpoints: nc })
+            .scheme(Scheme::Rk4)
+            .uniform(nt)
+            .session()
+            .unwrap();
+        let r = session.grad(&rhs, &u0, &w).report;
         assert!(
             r.recompute_steps <= prev_recompute,
             "recompute not monotone at nc={nc}"
@@ -120,7 +121,7 @@ fn checkpoint_budget_tradeoff_curve() {
     }
 }
 
-/// End-to-end: a 2-block classifier trains to >90% train accuracy on an
+/// End-to-end: a 2-block classifier trains to >85% train accuracy on an
 /// easy spiral with every reverse-accurate method.
 #[test]
 fn classification_trains_with_each_method() {
@@ -131,17 +132,15 @@ fn classification_trains_with_each_method() {
         let dims = vec![D + 1, 24, D];
         let p = pnode::nn::param_count(&dims);
         let dims_i = dims.clone();
-        let name_owned = name.to_string();
-        let mut task = ClassificationTask::new(
-            &mut rng,
-            2,
-            BlockSpec::new(Scheme::Bosh3, 3),
-            p,
-            D,
-            2,
-            move |r| pnode::nn::init::kaiming_uniform(r, &dims_i, 1.0),
-            move || method_by_name(&name_owned).unwrap(),
-        );
+        let spec = SolverBuilder::new()
+            .method_str(name)
+            .scheme(Scheme::Bosh3)
+            .uniform(3)
+            .build()
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let mut task = ClassificationTask::new(&mut rng, 2, &spec, p, D, 2, move |r| {
+            pnode::nn::init::kaiming_uniform(r, &dims_i, 1.0)
+        });
         let mut rhs = MlpRhs::new(dims, Act::Tanh, true, B, task.block_theta(0).to_vec());
         let ds = SpiralDataset::generate(&mut rng, 100, 2, D);
         let (train, _) = ds.split(1.0);
@@ -160,43 +159,44 @@ fn classification_trains_with_each_method() {
     }
 }
 
-/// The tiered storage backend, addressed through the method-factory string
-/// form, spills past its RAM budget and still reproduces the in-memory
-/// gradients bit-for-bit (uncompressed cold tier).
+/// The tiered storage backend, addressed through the facade's method
+/// string form, spills past its RAM budget and still reproduces the
+/// in-memory gradients bit-for-bit (uncompressed cold tier).
 #[test]
 fn tiered_method_spec_spills_and_matches_in_memory() {
     let rhs = mk_rhs(&[5, 8, 4], 2, 31);
     let mut rng = Rng::new(32);
     let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
     let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
-    let spec = BlockSpec::new(Scheme::Dopri5, 24);
 
-    let mut reference = Pnode::new(CheckpointPolicy::All);
-    reference.forward(&rhs, &spec, &u0);
-    let mut l_ref = w.clone();
-    let mut g_ref = vec![0.0f32; rhs.param_len()];
-    reference.backward(&rhs, &spec, &mut l_ref, &mut g_ref);
+    let mut reference = SolverBuilder::new()
+        .method_str("pnode")
+        .scheme(Scheme::Dopri5)
+        .uniform(24)
+        .session()
+        .unwrap();
+    let ref_bytes = reference.grad(&rhs, &u0, &w).report.ckpt_bytes;
 
     let dir = std::env::temp_dir().join(format!("pnode-int-tiered-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
     let name = format!("pnode:tiered:2k:{}", dir.to_string_lossy());
-    let mut m = method_by_name(&name).expect("tiered method spec parses");
-    m.forward(&rhs, &spec, &u0);
-    let mut l = w.clone();
-    let mut g = vec![0.0f32; rhs.param_len()];
-    m.backward(&rhs, &spec, &mut l, &mut g);
-    let r = m.report();
+    let mut session = SolverBuilder::new()
+        .method_str(&name)
+        .scheme(Scheme::Dopri5)
+        .uniform(24)
+        .session()
+        .expect("tiered method spec parses");
+    let r = session.grad(&rhs, &u0, &w).report;
 
-    assert_eq!(l, l_ref, "tiered λ is bitwise identical");
-    assert_eq!(g, g_ref, "tiered θ̄ is bitwise identical");
+    assert_eq!(session.lambda0(), reference.lambda0(), "tiered λ is bitwise identical");
+    assert_eq!(session.grad_theta(), reference.grad_theta(), "tiered θ̄ is bitwise identical");
     assert!(r.tier.spills > 0, "2 KiB budget must spill: {:?}", r.tier);
     assert!(r.tier.cold_bytes_written > 0);
     assert!(r.tier.prefetch_hits > 0, "backward sweep prefetches: {:?}", r.tier);
     assert!(
-        r.ckpt_bytes < reference.report().ckpt_bytes,
-        "hot-tier peak ({}) must undercut the all-resident peak ({})",
-        r.ckpt_bytes,
-        reference.report().ckpt_bytes
+        r.ckpt_bytes < ref_bytes,
+        "hot-tier peak ({}) must undercut the all-resident peak ({ref_bytes})",
+        r.ckpt_bytes
     );
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -205,17 +205,17 @@ fn tiered_method_spec_spills_and_matches_in_memory() {
 #[test]
 fn nfe_accounting_is_consistent() {
     let rhs = mk_rhs(&[5, 8, 4], 2, 21);
-    let spec = BlockSpec::new(Scheme::Dopri5, 10);
     let mut rng = Rng::new(22);
     let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
     let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
 
-    let mut m = Pnode::new(CheckpointPolicy::All);
-    m.forward(&rhs, &spec, &u0);
-    let mut l = w.clone();
-    let mut g = vec![0.0f32; rhs.param_len()];
-    m.backward(&rhs, &spec, &mut l, &mut g);
-    let r = m.report();
+    let mut session = SolverBuilder::new()
+        .method_str("pnode")
+        .scheme(Scheme::Dopri5)
+        .uniform(10)
+        .session()
+        .unwrap();
+    let r = session.grad(&rhs, &u0, &w).report;
     // FSAL: 7 + 6*(nt-1) forward evals
     assert_eq!(r.nfe_forward, 7 + 6 * 9);
     // backward: ≤ s vjps per step (zero-cotangent stages are skipped)

@@ -1,0 +1,150 @@
+//! The facade's serving-path contract: a long-lived `Session` reused
+//! across gradients is (a) bitwise identical to fresh per-call sessions,
+//! (b) allocation-stable (one workspace allocation for any N calls), and
+//! (c) still budget-safe — a parallel tiered fleet's concurrent hot
+//! footprint stays within the arbiter pool across reuse.
+
+use pnode::api::{Session, SolverBuilder};
+use pnode::exec::ExecConfig;
+use pnode::nn::Act;
+use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::util::rng::Rng;
+
+const B: usize = 24;
+const D: usize = 6;
+
+fn mk_rhs(seed: u64) -> MlpRhs {
+    let dims = vec![D + 1, 16, D];
+    let mut rng = Rng::new(seed);
+    let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+    MlpRhs::new(dims, Act::Tanh, true, B, theta)
+}
+
+fn probe_vectors(seed: u64, n: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut u0 = vec![0.0f32; n];
+    rng.fill_normal(&mut u0);
+    for x in u0.iter_mut() {
+        *x *= 0.4;
+    }
+    let mut w = vec![0.0f32; n];
+    rng.fill_normal(&mut w);
+    (u0, w)
+}
+
+#[test]
+fn reused_session_matches_fresh_sessions_bitwise() {
+    let rhs = mk_rhs(21);
+    let (u0, w) = probe_vectors(22, rhs.state_len());
+    let spec = SolverBuilder::new()
+        .method_str("pnode")
+        .scheme_str("dopri5")
+        .uniform(7)
+        .build()
+        .unwrap();
+
+    const N: usize = 5;
+    let mut reused = Session::new(spec.clone()).unwrap();
+    let mut reused_grads = Vec::with_capacity(N);
+    let mut reused_lams = Vec::with_capacity(N);
+    for _ in 0..N {
+        let _ = reused.grad(&rhs, &u0, &w);
+        reused_grads.push(reused.grad_theta().to_vec());
+        reused_lams.push(reused.lambda0().to_vec());
+    }
+    assert_eq!(reused.grads_run(), N as u64);
+    assert_eq!(
+        reused.workspace_allocs(),
+        1,
+        "N grads with stable shapes allocate the workspace exactly once"
+    );
+
+    for i in 0..N {
+        let mut fresh = Session::new(spec.clone()).unwrap();
+        let _ = fresh.grad(&rhs, &u0, &w);
+        assert_eq!(reused_grads[i], fresh.grad_theta(), "θ̄ call {i} bitwise");
+        assert_eq!(reused_lams[i], fresh.lambda0(), "λ call {i} bitwise");
+    }
+}
+
+#[test]
+fn parallel_session_reuse_is_bitwise_and_allocation_stable() {
+    let rhs = mk_rhs(31);
+    let (u0, w) = probe_vectors(32, rhs.state_len());
+    let spec = SolverBuilder::new()
+        .method_str("pnode")
+        .scheme_str("rk4")
+        .uniform(6)
+        .parallel(ExecConfig { workers: 3, shard_rows: 8 })
+        .build()
+        .unwrap();
+
+    let mut reused = Session::new(spec.clone()).unwrap();
+    let mut grads = Vec::new();
+    for _ in 0..3 {
+        let out = reused.grad(&rhs, &u0, &w);
+        assert_eq!(out.report.exec.shards, 3, "24 rows / 8 per shard");
+        grads.push(reused.grad_theta().to_vec());
+    }
+    assert_eq!(reused.workspace_allocs(), 1);
+    assert_eq!(grads[0], grads[1]);
+    assert_eq!(grads[1], grads[2]);
+
+    let mut fresh = Session::new(spec).unwrap();
+    let _ = fresh.grad(&rhs, &u0, &w);
+    assert_eq!(grads[0], fresh.grad_theta(), "reuse never changes bits");
+}
+
+#[test]
+fn tiered_fleet_budget_holds_under_reuse() {
+    // an over-subscribed shard fleet leasing from ONE arbiter pool: every
+    // reused-gradient call must spill rather than exceed the budget
+    let rhs = mk_rhs(41);
+    let (u0, w) = probe_vectors(42, rhs.state_len());
+
+    // reference: the same fleet, all-resident — measures the footprint
+    // and pins the gradient bits the tiered fleet must reproduce (same
+    // shard decomposition, same tree-reduction shape)
+    let cfg = ExecConfig { workers: 4, shard_rows: 8 };
+    let mut probe = SolverBuilder::new()
+        .method_str("pnode")
+        .scheme_str("rk4")
+        .uniform(24)
+        .parallel(cfg)
+        .session()
+        .unwrap();
+    let footprint = probe.grad(&rhs, &u0, &w).report.ckpt_bytes;
+    let budget = (footprint / 4).max(1);
+
+    let dir = std::env::temp_dir().join(format!("pnode-session-reuse-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = SolverBuilder::new()
+        .method_str(&format!(
+            "pnode:tiered:{budget}:{}",
+            dir.to_string_lossy()
+        ))
+        .scheme_str("rk4")
+        .uniform(24)
+        .parallel(cfg)
+        .build()
+        .unwrap();
+
+    let mut session = Session::new(spec).unwrap();
+    for call in 0..3 {
+        let out = session.grad(&rhs, &u0, &w);
+        let exec = out.report.exec;
+        assert_eq!(exec.lease_pool_bytes, budget, "call {call}");
+        assert!(
+            exec.peak_leased_bytes <= budget,
+            "call {call}: fleet hot tier exceeded the budget: {} > {budget}",
+            exec.peak_leased_bytes
+        );
+        assert_eq!(exec.over_grant_bytes, 0, "call {call}: {exec:?}");
+        assert!(out.report.tier.spills > 0, "call {call}: quarter budget must spill");
+        // spilling must never change the gradient (f32 cold tier)
+        assert_eq!(session.grad_theta(), probe.grad_theta(), "call {call}: θ̄ bitwise");
+        assert_eq!(session.lambda0(), probe.lambda0(), "call {call}: λ bitwise");
+    }
+    assert_eq!(session.workspace_allocs(), 1, "reuse holds under tiering too");
+    let _ = std::fs::remove_dir_all(&dir);
+}
