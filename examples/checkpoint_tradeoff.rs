@@ -9,7 +9,8 @@ use pnode::api::SolverBuilder;
 use pnode::bench::Table;
 use pnode::checkpoint::{prop2_extra_steps, BinomialPlanner, CheckpointPolicy};
 use pnode::nn::Act;
-use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::ModuleRhs;
+use pnode::ode::rhs::OdeRhs;
 use pnode::util::cli::Args;
 use pnode::util::rng::Rng;
 
@@ -20,7 +21,7 @@ fn main() {
     let dims = vec![9, 24, 8];
     let mut rng = Rng::new(9);
     let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-    let rhs = MlpRhs::new(dims, Act::Tanh, true, 16, theta);
+    let rhs = ModuleRhs::mlp(dims, Act::Tanh, true, 16, theta);
     let mut u0 = vec![0.0f32; rhs.state_len()];
     rng.fill_normal(&mut u0);
     let lambda0 = vec![1.0f32; rhs.state_len()];

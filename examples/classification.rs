@@ -10,7 +10,7 @@ use pnode::api::SolverBuilder;
 use pnode::bench::Table;
 use pnode::data::spiral::SpiralDataset;
 use pnode::nn::{Act, Adam, Optimizer};
-use pnode::ode::rhs::MlpRhs;
+use pnode::ode::ModuleRhs;
 use pnode::tasks::ClassificationTask;
 use pnode::util::cli::Args;
 use pnode::util::rng::Rng;
@@ -33,7 +33,7 @@ fn run(method: &str, steps: usize, seed: u64) -> (f64, f64, f64) {
         pnode::nn::init::kaiming_uniform(r, &dims_i, 1.0)
     });
     // ReLU dynamics: the irreversibility that breaks the continuous adjoint
-    let mut rhs = MlpRhs::new(dims, Act::Relu, true, B, task.block_theta(0).to_vec());
+    let mut rhs = ModuleRhs::mlp(dims, Act::Relu, true, B, task.block_theta(0).to_vec());
     let ds = SpiralDataset::generate(&mut rng, 300, 4, D);
     let (train, test) = ds.split(0.9);
     let mut opt = Adam::new(task.theta.len(), 3e-3);

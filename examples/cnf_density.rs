@@ -1,60 +1,47 @@
-//! CNF density estimation (paper §5.2): FFJORD on the POWER surrogate
-//! through the AOT `cnf_power` artifacts (Hutchinson-trace augmented
-//! dynamics).  Falls back to the analytic linear CNF when artifacts are
-//! missing.
+//! CNF density estimation (paper §5.2): FFJORD on the POWER surrogate —
+//! through the AOT `cnf_power` artifacts when built, otherwise through
+//! the XLA-free concatsquash module path (`ArchSpec::ConcatSquashMlp` →
+//! `HutchinsonCnfRhs`, with the trace adjoint exact via the module
+//! system's second-order pass).
 //!
-//!     make artifacts && cargo run --release --example cnf_density [-- --iters 20]
+//!     cargo run --release --example cnf_density [-- --iters 20]
+//!     make artifacts  # to exercise the XLA path instead
 
-use pnode::api::SolverBuilder;
+use pnode::api::{ArchSpec, SolverBuilder};
 use pnode::data::tabular::TabularDataset;
-use pnode::nn::{Adam, Optimizer};
+use pnode::nn::{Act, Adam, Optimizer};
+use pnode::ode::rhs::OdeRhs;
 use pnode::ode::rhs_xla::XlaCnfRhs;
-use pnode::tasks::CnfTask;
+use pnode::tasks::{CnfTask, HutchinsonCnfRhs};
 use pnode::util::cli::Args;
 use pnode::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::from_env();
-    let iters = args.get_usize("iters", 15);
-    let mut rng = Rng::new(17);
-
-    let client = pnode::runtime::Client::cpu()?;
-    let manifest = match pnode::runtime::Manifest::load_default() {
-        Ok(m) => m,
-        Err(e) => {
-            eprintln!("artifacts missing ({e}); run `make artifacts`");
-            return Ok(());
-        }
-    };
-    let arts = pnode::runtime::ModelArtifacts::load(&client, &manifest, "cnf_power")?;
-    let entry = arts.entry.clone();
-    let (b, d, p) = (entry.batch, entry.state_dim, entry.param_count);
-    println!("FFJORD on POWER surrogate: d={d}, batch={b}, {p} params/flow");
-
-    let theta0 = pnode::nn::init::kaiming_uniform(&mut rng, &entry.dims, 0.5);
-    let mut rhs = XlaCnfRhs::new(arts, theta0.clone())?;
-    let ds = TabularDataset::from_preset(&mut rng, "power").unwrap();
-
-    let n_flows = 1usize;
-    let theta0_clone = theta0.clone();
+#[allow(clippy::too_many_arguments)]
+fn train<R: OdeRhs>(
+    rng: &mut Rng,
+    rhs: &mut R,
+    mut reseed_eps: impl FnMut(&mut Rng, &mut R),
+    b: usize,
+    d: usize,
+    p: usize,
+    theta0: Vec<f32>,
+    iters: usize,
+) -> anyhow::Result<()> {
+    let ds = TabularDataset::from_preset(rng, "power").unwrap();
     let spec = SolverBuilder::new()
         .scheme_str("dopri5")
         .uniform(4)
         .build()
         .map_err(|e| anyhow::anyhow!(e))?;
-    let mut task = CnfTask::new(&mut rng, n_flows, &spec, b, d, p, move |_r| {
-        theta0_clone.clone()
-    });
+    let mut task = CnfTask::new(rng, 1, &spec, b, d, p, move |_r| theta0.clone());
     let mut opt = Adam::new(task.theta.len(), 1e-3);
 
     let mut x = vec![0.0f32; b * d];
-    let mut eps = vec![0.0f32; b * d];
     let mut first = None;
     for it in 0..iters {
         ds.fill_batch(it * b, b, &mut x);
-        rng.fill_rademacher(&mut eps);
-        rhs.set_eps(&eps);
-        let res = task.grad_step(&mut rhs, &x);
+        reseed_eps(rng, rhs);
+        let res = task.grad_step(rhs, &x);
         if first.is_none() {
             first = Some(res.nll);
         }
@@ -73,4 +60,46 @@ fn main() -> anyhow::Result<()> {
         iters
     );
     Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let iters = args.get_usize("iters", 15);
+    let mut rng = Rng::new(17);
+
+    // XLA path when artifacts exist
+    if let Ok(client) = pnode::runtime::Client::cpu() {
+        if let Ok(manifest) = pnode::runtime::Manifest::load_default() {
+            let arts = pnode::runtime::ModelArtifacts::load(&client, &manifest, "cnf_power")?;
+            let entry = arts.entry.clone();
+            let (b, d, p) = (entry.batch, entry.state_dim, entry.param_count);
+            println!("FFJORD on POWER surrogate (XLA): d={d}, batch={b}, {p} params/flow");
+            let theta0 = pnode::nn::init::kaiming_uniform(&mut rng, &entry.dims, 0.5);
+            let mut rhs = XlaCnfRhs::new(arts, theta0.clone())?;
+            let mut eps = vec![0.0f32; b * d];
+            return train(
+                &mut rng,
+                &mut rhs,
+                move |r, rhs: &mut XlaCnfRhs| {
+                    r.fill_rademacher(&mut eps);
+                    rhs.set_eps(&eps);
+                },
+                b,
+                d,
+                p,
+                theta0,
+                iters,
+            );
+        }
+        eprintln!("artifacts missing: running the XLA-free concatsquash module path");
+    }
+
+    // module path: concatsquash dynamics at the dataset's dim
+    let (b, d) = (64usize, 6usize); // POWER preset dim
+    let arch = ArchSpec::ConcatSquashMlp { hidden: vec![32, 32], act: Act::Tanh };
+    let p = arch.param_count(d);
+    println!("FFJORD on POWER surrogate: arch {} — d={d}, batch={b}, {p} params/flow", arch.name());
+    let theta0 = arch.init(&mut rng, d);
+    let mut rhs = HutchinsonCnfRhs::new(&arch, b, d, theta0.clone(), &mut rng);
+    train(&mut rng, &mut rhs, |_r, _rhs| {}, b, d, p, theta0, iters)
 }

@@ -12,7 +12,8 @@
 use pnode::api::SolverBuilder;
 use pnode::data::spiral::SpiralDataset;
 use pnode::nn::{Act, Adam, Optimizer};
-use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::ModuleRhs;
+use pnode::ode::rhs::OdeRhs;
 use pnode::tasks::ClassificationTask;
 use pnode::util::cli::Args;
 use pnode::util::rng::Rng;
@@ -53,7 +54,7 @@ fn main() -> anyhow::Result<()> {
         Box::new(pnode::ode::XlaRhs::new(arts, task.block_theta(0).to_vec())?)
     } else {
         println!("backend: pure-Rust mirror");
-        Box::new(MlpRhs::new(dims, Act::Relu, true, B, task.block_theta(0).to_vec()))
+        Box::new(ModuleRhs::mlp(dims, Act::Relu, true, B, task.block_theta(0).to_vec()))
     };
 
     let ds = SpiralDataset::generate(&mut rng, 800, 10, D);

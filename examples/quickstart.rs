@@ -4,26 +4,27 @@
 //!
 //!     cargo run --release --example quickstart
 
-use pnode::api::{Session, SolverBuilder};
+use pnode::api::{ArchSpec, Session, SolverBuilder};
 use pnode::nn::Act;
-use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::rhs::OdeRhs;
 use pnode::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    // the RHS: a small MLP vector field f(u, θ, t), batch 4
-    let mut rng = Rng::new(42);
-    let dims = vec![9, 16, 8];
-    let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-    let rhs = MlpRhs::new(dims, Act::Tanh, true, 4, theta);
-
-    // one typed, serializable description of the gradient run
+    // one typed, serializable description of the run: solver AND dynamics
     let spec = SolverBuilder::new()
         .method_str("pnode") // discrete adjoint, checkpoint every step
         .scheme_str("rk4")
         .uniform(8) // 8 fixed steps over [0, 1]
+        .arch(ArchSpec::ConcatMlp { hidden: vec![16], act: Act::Tanh }) // f(u, θ, t)
         .build()
         .map_err(|e| anyhow::anyhow!(e))?;
     println!("spec:\n{}\n", spec.to_json().to_string_pretty());
+
+    // the dynamics the spec declares: a time-conditioned MLP vector field
+    // over batch 4 of 8-channel states
+    let mut rng = Rng::new(42);
+    let theta = spec.init_theta(&mut rng, 8).map_err(|e| anyhow::anyhow!(e))?;
+    let rhs = spec.make_rhs(8, 4, theta).map_err(|e| anyhow::anyhow!(e))?;
 
     // a long-lived session: owns the engine and reusable workspaces
     let mut session = Session::new(spec).map_err(|e| anyhow::anyhow!(e))?;

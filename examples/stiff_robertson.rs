@@ -6,7 +6,8 @@
 
 use pnode::data::robertson::RobertsonData;
 use pnode::nn::{Act, AdamW, Optimizer};
-use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::ModuleRhs;
+use pnode::ode::rhs::OdeRhs;
 use pnode::ode::tableau::Scheme;
 use pnode::tasks::StiffTask;
 use pnode::train::GradStats;
@@ -17,7 +18,7 @@ fn train(task: &StiffTask, explicit: bool, epochs: usize) -> (f64, GradStats, f6
     let dims = vec![3, 24, 24, 24, 3];
     let mut rng = Rng::new(5);
     let mut theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 0.05);
-    let mut rhs = MlpRhs::new(dims, Act::Gelu, false, 1, theta.clone());
+    let mut rhs = ModuleRhs::mlp(dims, Act::Gelu, false, 1, theta.clone());
     let mut opt = AdamW::new(theta.len(), 5e-3, 1e-4);
     let mut stats = GradStats::default();
     let mut loss = f64::NAN;

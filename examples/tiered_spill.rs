@@ -9,7 +9,8 @@ use pnode::api::SolverBuilder;
 use pnode::bench::Table;
 use pnode::checkpoint::CheckpointPolicy;
 use pnode::nn::Act;
-use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::ModuleRhs;
+use pnode::ode::rhs::OdeRhs;
 use pnode::util::cli::Args;
 use pnode::util::rng::Rng;
 
@@ -23,7 +24,7 @@ fn main() {
     let dims = vec![17, 32, 16];
     let mut rng = Rng::new(7);
     let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-    let rhs = MlpRhs::new(dims, Act::Tanh, true, 8, theta);
+    let rhs = ModuleRhs::mlp(dims, Act::Tanh, true, 8, theta);
     let mut u0 = vec![0.0f32; rhs.state_len()];
     rng.fill_normal(&mut u0);
     let lambda0 = vec![1.0f32; rhs.state_len()];

@@ -8,7 +8,8 @@ use pnode::api::{Session, SolverBuilder};
 use pnode::bench::Table;
 use pnode::data::spiral::SpiralDataset;
 use pnode::nn::{Act, Adam, Optimizer};
-use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::ModuleRhs;
+use pnode::ode::rhs::OdeRhs;
 use pnode::ode::tableau::Scheme;
 use pnode::tasks::ClassificationTask;
 use pnode::testing::prop;
@@ -31,7 +32,7 @@ fn train_once(method: &str, scheme: Scheme, steps: usize) -> (f64, f64) {
     let mut task = ClassificationTask::new(&mut rng, 2, &spec, p, D, 4, move |r| {
         pnode::nn::init::kaiming_uniform(r, &dims_i, 1.0)
     });
-    let mut rhs = MlpRhs::new(dims, Act::Relu, true, B, task.block_theta(0).to_vec());
+    let mut rhs = ModuleRhs::mlp(dims, Act::Relu, true, B, task.block_theta(0).to_vec());
     let ds = SpiralDataset::generate(&mut rng, 300, 4, D);
     let (train, test) = ds.split(0.9);
     let mut opt = Adam::new(task.theta.len(), 3e-3);
@@ -80,7 +81,7 @@ fn main() {
     let dims = vec![5, 12, 4];
     let mut rng = Rng::new(99);
     let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.5);
-    let rhs = MlpRhs::new(dims, Act::Tanh, true, 2, theta);
+    let rhs = ModuleRhs::mlp(dims, Act::Tanh, true, 2, theta);
     let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
     let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
     let mut prev = f64::INFINITY;

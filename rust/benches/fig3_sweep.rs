@@ -9,7 +9,8 @@ use pnode::bench::Table;
 use pnode::coordinator::Runner;
 use pnode::methods::MemModel;
 use pnode::nn::Act;
-use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::ModuleRhs;
+use pnode::ode::rhs::OdeRhs;
 use pnode::ode::tableau::Scheme;
 use pnode::util::rng::Rng;
 
@@ -28,13 +29,12 @@ fn main() {
     let dims = vec![D + 1, 168, 168, D];
     let mut rng = Rng::new(3);
     let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-    let rhs = MlpRhs::new(dims.clone(), Act::Relu, true, B, theta);
+    let rhs = ModuleRhs::mlp(dims.clone(), Act::Relu, true, B, theta);
     let mut u0 = vec![0.0f32; rhs.state_len()];
     rng.fill_normal(&mut u0);
     let lambda0 = vec![1.0f32; rhs.state_len()];
     let nb = 4u64; // paper: 4 ODE blocks
 
-    let act_bytes = rhs.activation_bytes_per_eval();
     let mut runner = Runner::new("fig3_sweep");
     let mut table = Table::new(
         "Fig. 3 — memory & time vs N_t (4 blocks modeled, 1 block measured)",
@@ -44,14 +44,9 @@ fn main() {
     for &scheme in &schemes {
         let s = scheme.tableau().s as u64;
         for &nt in &nts {
-            let mm = MemModel {
-                act_bytes,
-                state_bytes: (B * D * 4) as u64,
-                param_bytes: (rhs.param_len() * 4) as u64,
-                n_stages: s,
-                nt: nt as u64,
-                nb,
-            };
+            // problem sizes measured off the module graph itself (summed
+            // per-module activation bytes — Table-2 semantics)
+            let mm = MemModel::for_rhs(&rhs, s, nt as u64, nb);
             for method in methods {
                 let model_mem = mm.by_method(method).unwrap();
                 let spec = SolverBuilder::new()

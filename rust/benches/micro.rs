@@ -7,7 +7,8 @@ use pnode::bench::bench_fn;
 use pnode::linalg::gmres::{gmres, GmresOptions};
 use pnode::nn::Act;
 use pnode::ode::erk::{erk_step, ErkWorkspace};
-use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::ModuleRhs;
+use pnode::ode::rhs::OdeRhs;
 use pnode::ode::tableau;
 use pnode::util::rng::Rng;
 
@@ -16,7 +17,7 @@ fn main() {
     // paper-scale RHS: 65-168-168-64, batch 128
     let dims = vec![65, 168, 168, 64];
     let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-    let rhs = MlpRhs::new(dims, Act::Relu, true, 128, theta);
+    let rhs = ModuleRhs::mlp(dims, Act::Relu, true, 128, theta);
     let n = rhs.state_len();
     let mut u = vec![0.0f32; n];
     rng.fill_normal(&mut u);

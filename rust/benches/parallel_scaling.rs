@@ -23,7 +23,8 @@ use pnode::checkpoint::CheckpointPolicy;
 use pnode::coordinator::{JobBody, JobMeta, Runner};
 use pnode::methods::MethodReport;
 use pnode::nn::Act;
-use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::ModuleRhs;
+use pnode::ode::rhs::OdeRhs;
 use pnode::util::rng::Rng;
 
 const SHARD_ROWS: usize = 16;
@@ -45,7 +46,7 @@ fn main() {
     let dims = vec![d + 1, 96, 96, d];
     let mut rng = Rng::new(17);
     let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-    let rhs = MlpRhs::new(dims, Act::Tanh, true, batch, theta);
+    let rhs = ModuleRhs::mlp(dims, Act::Tanh, true, batch, theta);
     let mut u0 = vec![0.0f32; rhs.state_len()];
     rng.fill_normal(&mut u0);
     let mut w = vec![0.0f32; rhs.state_len()];
@@ -188,7 +189,7 @@ fn main() {
                     let dims = vec![9, 32, 8];
                     let mut rng = Rng::new(nt as u64);
                     let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-                    let rhs = MlpRhs::new(dims, Act::Tanh, true, 8, theta);
+                    let rhs = ModuleRhs::mlp(dims, Act::Tanh, true, 8, theta);
                     let mut u0 = vec![0.0f32; rhs.state_len()];
                     rng.fill_normal(&mut u0);
                     let lam = vec![1.0f32; rhs.state_len()];

@@ -3,19 +3,24 @@
 //! (Euler, Midpoint, Bosh3, RK4, Dopri5) × dataset surrogate (POWER,
 //! MINIBOONE, BSDS300) × framework (naive, cont, anode, aca, pnode).
 //!
-//! Uses the AOT `cnf_*` artifacts when available (`make artifacts`);
+//! Dynamics: the AOT `cnf_*` artifacts when available (`make artifacts`);
+//! otherwise the XLA-free concatsquash module path
+//! (`HutchinsonCnfRhs` over `ArchSpec::ConcatSquashMlp`, whose trace
+//! adjoint is exact through the module system's second-order pass).
 //! N_t values follow the paper (scaled down under the default quick mode —
 //! set PNODE_BENCH_FULL=1 for the paper's step counts).
 
-use pnode::api::{Session, SolverBuilder};
+use pnode::api::{ArchSpec, Session, SolverBuilder};
 use pnode::bench::Table;
 use pnode::coordinator::Runner;
 use pnode::data::tabular::TabularDataset;
 use pnode::methods::MemModel;
+use pnode::nn::Act;
 use pnode::ode::rhs::OdeRhs;
 use pnode::ode::rhs_xla::XlaCnfRhs;
 use pnode::ode::tableau::Scheme;
 use pnode::runtime::{Client, Manifest, ModelArtifacts};
+use pnode::tasks::HutchinsonCnfRhs;
 use pnode::util::rng::Rng;
 
 // paper N_t per (scheme, dataset): POWER / MINIBOONE / BSDS300
@@ -30,95 +35,115 @@ fn paper_nt(scheme: Scheme) -> [usize; 3] {
     }
 }
 
-fn main() {
-    let full = std::env::var("PNODE_BENCH_FULL").is_ok();
-    let client = Client::cpu().expect("PJRT client");
-    let manifest = match Manifest::load_default() {
-        Ok(m) => m,
-        Err(e) => {
-            eprintln!("artifacts missing ({e}); run `make artifacts` first");
-            return;
-        }
-    };
-
-    let datasets = [("power", "cnf_power", 0usize), ("miniboone", "cnf_miniboone", 1),
-                    ("bsds300", "cnf_bsds300", 2)];
+#[allow(clippy::too_many_arguments)]
+fn bench_dataset(
+    runner: &mut Runner,
+    ds_name: &str,
+    idx: usize,
+    nb: u64,
+    rhs: &dyn OdeRhs,
+    x: &[f32],
+    b: usize,
+    d: usize,
+    full: bool,
+) {
     let schemes = [Scheme::Euler, Scheme::Midpoint, Scheme::Bosh3, Scheme::Rk4, Scheme::Dopri5];
     let methods = ["naive", "cont", "anode", "aca", "pnode"];
+    let mut z0 = vec![0.0f32; rhs.state_len()];
+    z0[..b * d].copy_from_slice(x);
+    let lambda0 = vec![1.0f32; rhs.state_len()];
+
+    let mut table = Table::new(
+        &format!("Tables 3–7 — {ds_name} (d={d}, batch={b})"),
+        &["scheme", "N_t", "framework", "NFE-F", "NFE-B", "time/iter (s)", "model GB"],
+    );
+    for &scheme in &schemes {
+        let nt_paper = paper_nt(scheme)[idx];
+        let nt = if full { nt_paper } else { (nt_paper / 4).max(2) };
+        let s = scheme.tableau().s as u64;
+        // problem sizes off the RHS itself: summed per-module activation
+        // bytes for the module path, artifact accounting for XLA
+        let mm = MemModel::for_rhs(rhs, s, nt as u64, nb);
+        for method in methods {
+            let model_mem = mm.by_method(method).unwrap();
+            let spec = SolverBuilder::new()
+                .method_str(method)
+                .scheme(scheme)
+                .uniform(nt)
+                .build()
+                .unwrap_or_else(|e| panic!("{method}: {e}"));
+            let row = runner.run_spec_job(ds_name, &spec, model_mem, || {
+                let mut session = Session::new(spec.clone()).expect("spec validated at build");
+                session.grad(rhs, &z0, &lambda0).report
+            });
+            let oom = model_mem > 32 * (1u64 << 30);
+            table.row(vec![
+                scheme.name().into(),
+                nt.to_string(),
+                method.into(),
+                (row.nfe_forward * nb).to_string(),
+                (row.nfe_backward * nb).to_string(),
+                format!("{:.3}", row.time_secs * nb as f64),
+                if oom {
+                    format!("OOM ({:.1})", MemModel::gb(model_mem))
+                } else {
+                    format!("{:.3}", MemModel::gb(model_mem))
+                },
+            ]);
+        }
+    }
+    table.print();
+}
+
+fn main() {
+    let full = std::env::var("PNODE_BENCH_FULL").is_ok();
+    let datasets = [
+        ("power", "cnf_power", 0usize),
+        ("miniboone", "cnf_miniboone", 1),
+        ("bsds300", "cnf_bsds300", 2),
+    ];
     // paper: 5/1/2 flow steps; we model nb per dataset
     let nb_of = [5u64, 1, 2];
+
+    let artifacts = Client::cpu().ok().and_then(|client| {
+        Manifest::load_default().ok().map(|manifest| (client, manifest))
+    });
+    if artifacts.is_none() {
+        eprintln!("artifacts not built: running the XLA-free concatsquash module path");
+    }
 
     let mut runner = Runner::new("tables3_7_cnf");
     let mut rng = Rng::new(11);
 
     for (di, (ds_name, cfg_name, idx)) in datasets.iter().enumerate() {
-        let arts = match ModelArtifacts::load(&client, &manifest, cfg_name) {
-            Ok(a) => a,
-            Err(e) => {
-                eprintln!("skipping {ds_name}: {e}");
-                continue;
-            }
-        };
-        let entry = arts.entry.clone();
-        let (b, d) = (entry.batch, entry.state_dim);
-        let theta = pnode::nn::init::kaiming_uniform(&mut rng, &entry.dims, 0.5);
-        let mut rhs = XlaCnfRhs::new(arts, theta).expect("cnf rhs");
         let data = TabularDataset::from_preset(&mut rng, ds_name).unwrap();
-        let mut x = vec![0.0f32; b * d];
-        data.fill_batch(0, b, &mut x);
-        let mut eps = vec![0.0f32; b * d];
-        rng.fill_rademacher(&mut eps);
-        rhs.set_eps(&eps);
-        let mut z0 = vec![0.0f32; rhs.state_len()];
-        z0[..b * d].copy_from_slice(&x);
-        let lambda0 = vec![1.0f32; rhs.state_len()];
-
-        let mut table = Table::new(
-            &format!("Tables 3–7 — {ds_name} (d={d}, batch={b})"),
-            &["scheme", "N_t", "framework", "NFE-F", "NFE-B", "time/iter (s)", "model GB"],
-        );
-        for &scheme in &schemes {
-            let nt_paper = paper_nt(scheme)[*idx];
-            let nt = if full { nt_paper } else { (nt_paper / 4).max(2) };
-            let s = scheme.tableau().s as u64;
-            let mm = MemModel {
-                act_bytes: rhs.activation_bytes_per_eval(),
-                state_bytes: ((b * d + b) * 4) as u64,
-                param_bytes: (rhs.param_len() * 4) as u64,
-                n_stages: s,
-                nt: nt as u64,
-                nb: nb_of[di],
-            };
-            for method in methods {
-                let model_mem = mm.by_method(method).unwrap();
-                let spec = SolverBuilder::new()
-                    .method_str(method)
-                    .scheme(scheme)
-                    .uniform(nt)
-                    .build()
-                    .unwrap_or_else(|e| panic!("{method}: {e}"));
-                let row = runner.run_spec_job(ds_name, &spec, model_mem, || {
-                    let mut session =
-                        Session::new(spec.clone()).expect("spec validated at build");
-                    session.grad(&rhs, &z0, &lambda0).report
-                });
-                let oom = model_mem > 32 * (1u64 << 30);
-                table.row(vec![
-                    scheme.name().into(),
-                    nt.to_string(),
-                    method.into(),
-                    (row.nfe_forward * nb_of[di]).to_string(),
-                    (row.nfe_backward * nb_of[di]).to_string(),
-                    format!("{:.3}", row.time_secs * nb_of[di] as f64),
-                    if oom {
-                        format!("OOM ({:.1})", MemModel::gb(model_mem))
-                    } else {
-                        format!("{:.3}", MemModel::gb(model_mem))
-                    },
-                ]);
+        if let Some((client, manifest)) = &artifacts {
+            match ModelArtifacts::load(client, manifest, cfg_name) {
+                Ok(arts) => {
+                    let entry = arts.entry.clone();
+                    let (b, d) = (entry.batch, entry.state_dim);
+                    let theta = pnode::nn::init::kaiming_uniform(&mut rng, &entry.dims, 0.5);
+                    let mut rhs = XlaCnfRhs::new(arts, theta).expect("cnf rhs");
+                    let mut x = vec![0.0f32; b * d];
+                    data.fill_batch(0, b, &mut x);
+                    let mut eps = vec![0.0f32; b * d];
+                    rng.fill_rademacher(&mut eps);
+                    rhs.set_eps(&eps);
+                    bench_dataset(&mut runner, ds_name, *idx, nb_of[di], &rhs, &x, b, d, full);
+                    continue;
+                }
+                Err(e) => eprintln!("{ds_name}: artifacts unusable ({e}); module path"),
             }
         }
-        table.print();
+        // XLA-free path: concatsquash dynamics at the dataset's dim
+        let d = data.dim;
+        let b = if full { 128 } else { 32 };
+        let arch = ArchSpec::ConcatSquashMlp { hidden: vec![2 * d], act: Act::Tanh };
+        let theta = arch.init(&mut rng, d);
+        let rhs = HutchinsonCnfRhs::new(&arch, b, d, theta, &mut rng);
+        let mut x = vec![0.0f32; b * d];
+        data.fill_batch(0, b, &mut x);
+        bench_dataset(&mut runner, ds_name, *idx, nb_of[di], &rhs, &x, b, d, full);
     }
     let path = runner.save().expect("save");
     println!("\nrows saved to {path:?} (total {:.1}s)", runner.elapsed_secs());

@@ -7,7 +7,8 @@
 use pnode::bench::Table;
 use pnode::data::robertson::RobertsonData;
 use pnode::nn::{Act, AdamW, Optimizer};
-use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::ModuleRhs;
+use pnode::ode::rhs::OdeRhs;
 use pnode::ode::tableau::Scheme;
 use pnode::tasks::StiffTask;
 use pnode::train::GradStats;
@@ -29,7 +30,7 @@ fn train(task: &StiffTask, mode: &str, epochs: usize) -> Outcome {
     let dims = vec![3, 24, 24, 24, 3];
     let mut rng = Rng::new(5);
     let mut theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 0.05);
-    let mut rhs = MlpRhs::new(dims, Act::Gelu, false, 1, theta.clone());
+    let mut rhs = ModuleRhs::mlp(dims, Act::Gelu, false, 1, theta.clone());
     let mut opt = AdamW::new(theta.len(), 5e-3, 1e-4);
     let mut stats = GradStats::default();
     let (mut nfe_f, mut nfe_b) = (Stream::new(), Stream::new());

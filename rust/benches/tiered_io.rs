@@ -9,7 +9,8 @@ use pnode::bench::Table;
 use pnode::checkpoint::CheckpointPolicy;
 use pnode::coordinator::Runner;
 use pnode::nn::Act;
-use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::ModuleRhs;
+use pnode::ode::rhs::OdeRhs;
 use pnode::util::rng::Rng;
 
 fn main() {
@@ -19,7 +20,7 @@ fn main() {
     let dims = vec![33, 64, 32];
     let mut rng = Rng::new(11);
     let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-    let rhs = MlpRhs::new(dims, Act::Tanh, true, 16, theta);
+    let rhs = ModuleRhs::mlp(dims, Act::Tanh, true, 16, theta);
     let mut u0 = vec![0.0f32; rhs.state_len()];
     rng.fill_normal(&mut u0);
     let lambda0 = vec![1.0f32; rhs.state_len()];

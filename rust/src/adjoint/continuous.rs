@@ -142,7 +142,8 @@ mod tests {
     use super::*;
     use crate::nn::Act;
     use crate::ode::erk::integrate_fixed;
-    use crate::ode::rhs::{LinearRhs, MlpRhs};
+    use crate::ode::ModuleRhs;
+    use crate::ode::rhs::LinearRhs;
     use crate::ode::tableau;
     use crate::testing::prop;
     use crate::util::rng::Rng;
@@ -192,7 +193,7 @@ mod tests {
         let dims = vec![3, 8, 3];
         let mut rng = Rng::new(21);
         let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-        let rhs = MlpRhs::new(dims, Act::Tanh, false, 1, theta);
+        let rhs = ModuleRhs::mlp(dims, Act::Tanh, false, 1, theta);
         let u0 = vec![0.3f32, -0.2, 0.5];
         let w = vec![1.0f32, 0.5, -0.25];
         let tab = &tableau::RK4;
@@ -219,7 +220,7 @@ mod tests {
         let dims = vec![2, 6, 2];
         let mut rng = Rng::new(11);
         let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.5);
-        let rhs = MlpRhs::new(dims, Act::Tanh, false, 1, theta);
+        let rhs = ModuleRhs::mlp(dims, Act::Tanh, false, 1, theta);
         let u0 = vec![0.4f32, -0.3];
         let w = vec![1.0f32, 0.5];
         let tab = &tableau::EULER;

@@ -92,7 +92,8 @@ mod tests {
     use super::*;
     use crate::nn::Act;
     use crate::ode::erk::{erk_step, ErkWorkspace};
-    use crate::ode::rhs::{LinearRhs, MlpRhs};
+    use crate::ode::ModuleRhs;
+    use crate::ode::rhs::LinearRhs;
     use crate::ode::tableau;
     use crate::testing::prop;
     use crate::util::rng::Rng;
@@ -167,7 +168,7 @@ mod tests {
                 let dims = vec![4, 6, 3];
                 let theta =
                     crate::nn::init::kaiming_uniform(&mut rng.fork(1), &dims, 1.0);
-                let mut rhs = MlpRhs::new(dims, Act::Tanh, true, 2, theta);
+                let mut rhs = ModuleRhs::mlp(dims, Act::Tanh, true, 2, theta);
                 one_step_check(tab, &mut rhs, rng.next_u64())
             });
         }

@@ -71,15 +71,15 @@ mod tests {
     use super::*;
     use crate::nn::Act;
     use crate::ode::implicit::{ImplicitStepper, ThetaScheme};
-    use crate::ode::rhs::MlpRhs;
+    use crate::ode::ModuleRhs;
     use crate::testing::prop;
     use crate::util::rng::Rng;
 
-    fn mk_rhs(seed: u64) -> MlpRhs {
+    fn mk_rhs(seed: u64) -> ModuleRhs {
         let dims = vec![3, 8, 3];
         let mut rng = Rng::new(seed);
         let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-        MlpRhs::new(dims, Act::Tanh, false, 1, theta)
+        ModuleRhs::mlp(dims, Act::Tanh, false, 1, theta)
     }
 
     fn one_step_check(scheme: ThetaScheme, seed: u64) -> Result<(), String> {

@@ -671,22 +671,22 @@ impl<S: StepScheme> AdjointDriver<S> {
 mod tests {
     use super::*;
     use crate::nn::Act;
-    use crate::ode::rhs::MlpRhs;
+    use crate::ode::ModuleRhs;
     use crate::ode::tableau;
     use crate::testing::prop;
     use crate::util::rng::Rng;
 
-    fn mk_rhs(seed: u64) -> MlpRhs {
+    fn mk_rhs(seed: u64) -> ModuleRhs {
         let dims = vec![4, 7, 3];
         let mut rng = Rng::new(seed);
         let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.2);
-        MlpRhs::new(dims, Act::Tanh, true, 2, theta)
+        ModuleRhs::mlp(dims, Act::Tanh, true, 2, theta)
     }
 
     /// gradient of L = <w, u(tF)> via an ERK run with the given policy
     fn grad_with_policy(
         policy: CheckpointPolicy,
-        rhs: &MlpRhs,
+        rhs: &ModuleRhs,
         u0: &[f32],
         w: &[f32],
         nt: usize,
@@ -1068,11 +1068,11 @@ mod tests {
         }
     }
 
-    fn mk_implicit_rhs(seed: u64) -> MlpRhs {
+    fn mk_implicit_rhs(seed: u64) -> ModuleRhs {
         let dims = vec![3, 8, 3];
         let mut rng = Rng::new(seed);
         let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-        MlpRhs::new(dims, Act::Gelu, false, 1, theta)
+        ModuleRhs::mlp(dims, Act::Gelu, false, 1, theta)
     }
 
     #[test]

@@ -9,6 +9,7 @@ use crate::api::session::Session;
 use crate::api::spec::{MethodSpec, RunSpec};
 use crate::checkpoint::CheckpointPolicy;
 use crate::exec::{default_workers, ExecConfig, DEFAULT_SHARD_ROWS};
+use crate::nn::module::ArchSpec;
 use crate::ode::grid::TimeGrid;
 use crate::ode::tableau::Scheme;
 
@@ -22,6 +23,7 @@ pub struct SolverBuilder {
     tf: f64,
     grid: TimeGrid,
     exec: Option<ExecConfig>,
+    arch: Option<ArchSpec>,
     /// first deferred `_str` parse error; reported by `build`
     err: Option<String>,
 }
@@ -41,6 +43,7 @@ impl SolverBuilder {
             tf: 1.0,
             grid: TimeGrid::Uniform { nt: 8 },
             exec: None,
+            arch: None,
             err: None,
         }
     }
@@ -54,6 +57,7 @@ impl SolverBuilder {
             tf: spec.tf,
             grid: spec.grid,
             exec: spec.exec,
+            arch: spec.arch,
             err: None,
         }
     }
@@ -143,6 +147,25 @@ impl SolverBuilder {
         self.grid(TimeGrid::adaptive(tol))
     }
 
+    // ---------------- architecture ----------------
+
+    /// Declare the dynamics architecture the run executes
+    /// (serialized with the spec; tasks build their RHS from it).
+    pub fn arch(mut self, arch: ArchSpec) -> Self {
+        self.arch = Some(arch);
+        self
+    }
+
+    /// Architecture from the CLI grammar (`mlp:…`, `concat:…`,
+    /// `concatsquash:…`, `residual:…`, `augment:…` — see
+    /// [`ArchSpec::parse`]).
+    pub fn arch_str(self, s: &str) -> Self {
+        match ArchSpec::parse(s) {
+            Ok(a) => self.arch(a),
+            Err(e) => self.fail(e),
+        }
+    }
+
     // ---------------- execution ----------------
 
     /// Run on the data-parallel execution engine with this config.
@@ -187,6 +210,7 @@ impl SolverBuilder {
             tf: self.tf,
             grid: self.grid,
             exec: self.exec,
+            arch: self.arch,
         };
         spec.validate()?;
         Ok(spec)

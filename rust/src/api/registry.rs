@@ -172,6 +172,33 @@ mod tests {
     }
 
     #[test]
+    fn arch_specs_resolve_engines_and_dynamics() {
+        // a spec that declares its architecture still resolves engines by
+        // method family, and the same document builds shardable dynamics
+        use crate::nn::Act;
+        use crate::nn::module::ArchSpec;
+        use crate::ode::rhs::OdeRhs;
+        let spec = SolverBuilder::new()
+            .arch(ArchSpec::ConcatSquashMlp { hidden: vec![6], act: Act::Tanh })
+            .uniform(4)
+            .build()
+            .unwrap();
+        let engine = global().make(&spec).unwrap();
+        assert!(engine.reverse_accurate());
+        let mut rng = crate::util::rng::Rng::new(5);
+        let theta = spec.init_theta(&mut rng, 3).unwrap();
+        let rhs = spec.make_rhs(3, 4, theta).unwrap();
+        assert_eq!(rhs.state_len(), 12);
+        assert!(
+            rhs.make_shard(2).is_some(),
+            "arch-built dynamics must shard for the parallel wrapper"
+        );
+        // no arch → make_rhs is a clear error, not a panic
+        let bare = SolverBuilder::new().build().unwrap();
+        assert!(bare.make_rhs(3, 4, Vec::new()).unwrap_err().contains("arch"));
+    }
+
+    #[test]
     fn unknown_family_is_reported_and_registration_shadows() {
         let mut r = MethodRegistry::empty();
         let spec = SolverBuilder::new().build().unwrap();

@@ -76,6 +76,17 @@ impl Session {
         &self.block
     }
 
+    /// Build the dynamics the spec declares over `batch` rows
+    /// (see [`RunSpec::make_rhs`]; errors when the spec has no `"arch"`).
+    pub fn make_rhs(
+        &self,
+        data_dim: usize,
+        batch: usize,
+        theta: Vec<f32>,
+    ) -> Result<crate::ode::ModuleRhs, String> {
+        self.spec.make_rhs(data_dim, batch, theta)
+    }
+
     /// Integrate forward; must precede [`Session::backward`].
     pub fn forward(&mut self, rhs: &dyn OdeRhs, u0: &[f32]) -> Vec<f32> {
         self.engine.forward(rhs, &self.block, u0)
@@ -141,14 +152,14 @@ mod tests {
     use super::*;
     use crate::api::SolverBuilder;
     use crate::nn::Act;
-    use crate::ode::rhs::MlpRhs;
+    use crate::ode::ModuleRhs;
     use crate::util::rng::Rng;
 
-    fn mk_rhs(seed: u64) -> MlpRhs {
+    fn mk_rhs(seed: u64) -> ModuleRhs {
         let dims = vec![5, 9, 4];
         let mut rng = Rng::new(seed);
         let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-        MlpRhs::new(dims, Act::Tanh, true, 2, theta)
+        ModuleRhs::mlp(dims, Act::Tanh, true, 2, theta)
     }
 
     #[test]

@@ -18,6 +18,7 @@
 use crate::checkpoint::CheckpointPolicy;
 use crate::exec::{ExecConfig, DEFAULT_SHARD_ROWS};
 use crate::methods::BlockSpec;
+use crate::nn::module::ArchSpec;
 use crate::ode::grid::TimeGrid;
 use crate::ode::tableau::Scheme;
 use crate::util::json::Json;
@@ -138,12 +139,52 @@ pub struct RunSpec {
     /// data-parallel execution engine; `None` runs the single in-thread
     /// engine (no worker pool, no batch sharding)
     pub exec: Option<ExecConfig>,
+    /// dynamics architecture ([`ArchSpec`]); `None` when the caller
+    /// supplies its own `OdeRhs` (analytic RHSs, XLA artifacts)
+    pub arch: Option<ArchSpec>,
 }
 
 impl RunSpec {
     /// The integration window this spec describes.
     pub fn block_spec(&self) -> BlockSpec {
         BlockSpec { scheme: self.scheme, t0: self.t0, tf: self.tf, grid: self.grid.clone() }
+    }
+
+    /// Build the dynamics this spec declares: the declared [`ArchSpec`]
+    /// instantiated over `batch` rows of `data_dim`-channel samples with
+    /// parameters `theta`.  Errors when the spec carries no `"arch"`.
+    pub fn make_rhs(
+        &self,
+        data_dim: usize,
+        batch: usize,
+        theta: Vec<f32>,
+    ) -> Result<crate::ode::ModuleRhs, String> {
+        let arch = self
+            .arch
+            .as_ref()
+            .ok_or("spec declares no \"arch\": supply an architecture (or pass your own OdeRhs)")?;
+        if theta.len() != arch.param_count(data_dim) {
+            return Err(format!(
+                "arch {} wants {} parameters at data_dim {data_dim} (got {})",
+                arch.name(),
+                arch.param_count(data_dim),
+                theta.len()
+            ));
+        }
+        Ok(crate::ode::ModuleRhs::from_arch(arch, data_dim, batch, theta))
+    }
+
+    /// Draw an initial parameter vector for the declared [`ArchSpec`].
+    pub fn init_theta(
+        &self,
+        rng: &mut crate::util::rng::Rng,
+        data_dim: usize,
+    ) -> Result<Vec<f32>, String> {
+        let arch = self
+            .arch
+            .as_ref()
+            .ok_or("spec declares no \"arch\": supply an architecture (or pass your own OdeRhs)")?;
+        Ok(arch.init(rng, data_dim))
     }
 
     /// Construct a gradient engine for this spec from the global
@@ -162,6 +203,9 @@ impl RunSpec {
     /// loader, and `Session::new`).
     pub fn validate(&self) -> Result<(), String> {
         self.method.validate()?;
+        if let Some(arch) = &self.arch {
+            arch.validate()?;
+        }
         if !(self.t0.is_finite() && self.tf.is_finite() && self.tf > self.t0) {
             return Err(format!(
                 "integration span must be finite with t0 < tf (got [{}, {}])",
@@ -260,6 +304,10 @@ impl RunSpec {
                 ("shard_rows", Json::num(cfg.shard_rows as f64)),
             ]),
         };
+        let arch = match &self.arch {
+            None => Json::Null,
+            Some(a) => a.to_json(),
+        };
         Json::obj(vec![
             ("version", Json::num(1.0)),
             ("method", Json::str(self.method.name())),
@@ -268,6 +316,7 @@ impl RunSpec {
             ("tf", Json::num(self.tf)),
             ("grid", grid_to_json(&self.grid)),
             ("exec", exec),
+            ("arch", arch),
         ])
     }
 
@@ -324,7 +373,11 @@ impl RunSpec {
                 Some(ExecConfig { workers, shard_rows })
             }
         };
-        let spec = RunSpec { method, scheme, t0, tf, grid, exec };
+        let arch = match v.get("arch") {
+            None | Some(Json::Null) => None,
+            Some(a) => Some(ArchSpec::from_json(a)?),
+        };
+        let spec = RunSpec { method, scheme, t0, tf, grid, exec, arch };
         spec.validate()?;
         Ok(spec)
     }

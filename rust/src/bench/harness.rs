@@ -172,12 +172,12 @@ mod tests {
     fn bench_grad_drives_a_facade_session() {
         use crate::api::SolverBuilder;
         use crate::nn::Act;
-        use crate::ode::rhs::MlpRhs;
+        use crate::ode::ModuleRhs;
         use crate::util::rng::Rng;
         let dims = vec![4, 6, 3];
         let mut rng = Rng::new(5);
         let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-        let rhs = MlpRhs::new(dims, Act::Tanh, true, 2, theta);
+        let rhs = ModuleRhs::mlp(dims, Act::Tanh, true, 2, theta);
         let mut u0 = vec![0.0f32; rhs.state_len()];
         rng.fill_normal(&mut u0);
         let w = vec![1.0f32; rhs.state_len()];

@@ -5,10 +5,16 @@
 //!                               facade artifact; see DESIGN.md §9 and
 //!                               examples/specs/); an optional "task"
 //!                               block in the same file picks what the
-//!                               spec drives (gradient | classification)
+//!                               spec drives (gradient | classification |
+//!                               cnf), and the spec's "arch" block picks
+//!                               the dynamics architecture (DESIGN.md §10)
 //!   info                      — artifact/platform info
 //!   gradcheck                 — XLA-vs-Rust cross-check on quick_d8
 //!   train-clf [--method ...]  — classification training (spiral surrogate);
+//!                               `--arch concatsquash:64:tanh` or any other
+//!                               ArchSpec picks the block dynamics, and
+//!                               `--augment K` wraps it in ANODE zero
+//!                               channels (needs --no-xla);
 //!                               `--grid adaptive:1e-6` switches the ODE
 //!                               blocks to PI-controlled Dopri5 stepping;
 //!                               `--workers N` runs gradients on the
@@ -54,7 +60,13 @@ fn main() -> Result<()> {
 /// "task": {"kind": "gradient", "dim": 16, "hidden": 32, "batch": 8, "seed": 7}
 /// "task": {"kind": "classification", "steps": 20, "blocks": 2, "dim": 16,
 ///          "hidden": 32, "classes": 4, "batch": 64, "seed": 7, "lr": 3e-3}
+/// "task": {"kind": "cnf", "steps": 10, "blocks": 1, "dim": 3, "hidden": 16,
+///          "batch": 32, "seed": 7, "lr": 2e-2}
 /// ```
+///
+/// The spec's own `"arch"` block (an `ArchSpec`) picks the dynamics
+/// architecture; without one each task falls back to its legacy default
+/// (`concat` MLP for gradient/classification, `concatsquash` for cnf).
 fn cmd_run(args: &Args) -> Result<()> {
     use pnode::api::RunSpec;
     use pnode::util::json;
@@ -126,8 +138,18 @@ fn cmd_run(args: &Args) -> Result<()> {
             get_usize("seed", 7)? as u64,
             get_f64("lr", 3e-3)?,
         ),
+        "cnf" => run_spec_cnf(
+            &spec,
+            get_usize("steps", 10)?,
+            get_usize("blocks", 1)?,
+            get_usize("dim", 3)?,
+            get_usize("hidden", 16)?,
+            get_usize("batch", 32)?,
+            get_usize("seed", 7)? as u64,
+            get_f64("lr", 2e-2)?,
+        ),
         k => Err(anyhow::anyhow!(
-            "{path}: unknown task kind {k:?} (want gradient | classification)"
+            "{path}: unknown task kind {k:?} (want gradient | classification | cnf)"
         )),
     }
 }
@@ -141,17 +163,23 @@ fn run_spec_gradient(
     batch: usize,
     seed: u64,
 ) -> Result<()> {
+    use pnode::api::ArchSpec;
     use pnode::nn::Act;
-    use pnode::ode::rhs::{MlpRhs, OdeRhs};
+    use pnode::ode::ModuleRhs;
+    use pnode::ode::rhs::OdeRhs;
     use pnode::util::rng::Rng;
 
     if let Some(cfg) = spec.exec {
         pnode::tensor::gemm::set_gemm_workers(cfg.workers);
     }
-    let dims = vec![dim + 1, hidden, dim];
+    let arch = spec
+        .arch
+        .clone()
+        .unwrap_or(ArchSpec::ConcatMlp { hidden: vec![hidden], act: Act::Tanh });
+    println!("arch: {}", arch.name());
     let mut rng = Rng::new(seed);
-    let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-    let rhs = MlpRhs::new(dims, Act::Tanh, true, batch, theta);
+    let theta = arch.init(&mut rng, dim);
+    let rhs = ModuleRhs::from_arch(&arch, dim, batch, theta);
     let mut u0 = vec![0.0f32; rhs.state_len()];
     rng.fill_normal(&mut u0);
     let lambda = vec![1.0f32; rhs.state_len()];
@@ -194,9 +222,10 @@ fn run_spec_classification(
     seed: u64,
     lr: f64,
 ) -> Result<()> {
+    use pnode::api::ArchSpec;
     use pnode::data::spiral::SpiralDataset;
     use pnode::nn::{Act, Optimizer};
-    use pnode::ode::rhs::MlpRhs;
+    use pnode::ode::ModuleRhs;
     use pnode::tasks::ClassificationTask;
     use pnode::util::rng::Rng;
 
@@ -204,19 +233,21 @@ fn run_spec_classification(
         pnode::tensor::gemm::set_gemm_workers(cfg.workers);
     }
     let mut rng = Rng::new(seed);
-    let dims = vec![dim + 1, hidden, dim];
-    let per_block = pnode::nn::param_count(&dims);
-    let dims_init = dims.clone();
-    let mut task = ClassificationTask::new(
-        &mut rng,
-        blocks,
-        spec,
-        per_block,
-        dim,
-        classes,
-        move |r| pnode::nn::init::kaiming_uniform(r, &dims_init, 1.0),
-    );
-    let mut rhs = MlpRhs::new(dims, Act::Relu, true, batch, task.block_theta(0).to_vec());
+    let arch = spec
+        .arch
+        .clone()
+        .unwrap_or(ArchSpec::ConcatMlp { hidden: vec![hidden], act: Act::Relu });
+    let extra = arch.augment_extra();
+    println!("arch: {} (augment +{extra})", arch.name());
+    let per_block = arch.param_count(dim);
+    let arch_init = arch.clone();
+    let init = move |r: &mut Rng| arch_init.init(r, dim);
+    let mut task = if extra > 0 {
+        ClassificationTask::augmented(&mut rng, blocks, spec, per_block, dim, extra, classes, init)
+    } else {
+        ClassificationTask::new(&mut rng, blocks, spec, per_block, dim, classes, init)
+    };
+    let mut rhs = ModuleRhs::from_arch(&arch, dim, batch, task.block_theta(0).to_vec());
     let ds = SpiralDataset::generate(&mut rng, batch * 5, classes, dim);
     let (train, test) = ds.split(0.9);
     let mut opt = pnode::nn::Adam::new(task.theta.len(), lr);
@@ -243,6 +274,77 @@ fn run_spec_classification(
     let (tl, ta) = task.evaluate(&mut rhs, batch, &xt, &yt);
     println!("test: loss {tl:.4} acc {ta:.3}");
     anyhow::ensure!(tl.is_finite(), "training diverged");
+    Ok(())
+}
+
+/// Concatsquash CNF density estimation driven by the spec: Hutchinson
+/// trace dynamics with the exact second-order adjoint (the §5.2 workload,
+/// XLA-free).
+#[allow(clippy::too_many_arguments)]
+fn run_spec_cnf(
+    spec: &pnode::api::RunSpec,
+    steps: usize,
+    flows: usize,
+    dim: usize,
+    hidden: usize,
+    batch: usize,
+    seed: u64,
+    lr: f64,
+) -> Result<()> {
+    use pnode::api::ArchSpec;
+    use pnode::nn::{Act, Optimizer};
+    use pnode::tasks::cnf::{CnfTask, HutchinsonCnfRhs};
+    use pnode::util::rng::Rng;
+
+    if let Some(cfg) = spec.exec {
+        pnode::tensor::gemm::set_gemm_workers(cfg.workers);
+    }
+    let arch = spec
+        .arch
+        .clone()
+        .unwrap_or(ArchSpec::ConcatSquashMlp { hidden: vec![hidden], act: Act::Tanh });
+    anyhow::ensure!(
+        arch.augment_extra() == 0,
+        "cnf tasks take a non-augmented arch (got {})",
+        arch.name()
+    );
+    println!("arch: {}", arch.name());
+    let mut rng = Rng::new(seed);
+    let per_flow = arch.param_count(dim);
+    let arch_init = arch.clone();
+    let mut task = CnfTask::new(&mut rng, flows, spec, batch, dim, per_flow, move |r| {
+        arch_init.init(r, dim)
+    });
+    let mut rhs =
+        HutchinsonCnfRhs::new(&arch, batch, dim, task.theta[..per_flow].to_vec(), &mut rng);
+    // over-dispersed normal data: the flow should contract it toward the base
+    let mut x = vec![0.0f32; batch * dim];
+    rng.fill_normal(&mut x);
+    for v in x.iter_mut() {
+        *v *= 2.0;
+    }
+    let mut opt = pnode::nn::Adam::new(task.theta.len(), lr);
+    let mut first = f64::NAN;
+    let mut last = f64::NAN;
+    for step in 0..steps {
+        let res = task.grad_step(&mut rhs, &x);
+        if step == 0 {
+            first = res.nll;
+        }
+        last = res.nll;
+        opt.step(&mut task.theta, &res.grad);
+        if step % 5 == 0 || step + 1 == steps {
+            println!(
+                "step {step:3}  nll {:.4}  nfe {}/{}  ckpt {}",
+                res.nll,
+                res.report.nfe_forward,
+                res.report.nfe_backward,
+                pnode::util::human_bytes(res.report.ckpt_bytes)
+            );
+        }
+    }
+    anyhow::ensure!(last.is_finite(), "CNF training diverged");
+    println!("nll {first:.4} -> {last:.4}");
     Ok(())
 }
 
@@ -277,7 +379,7 @@ fn cmd_gradcheck() -> Result<()> {
     let theta = pnode::nn::init::kaiming_uniform(&mut rng, &entry.dims, 1.0);
 
     let xla = pnode::ode::XlaRhs::new(arts, theta.clone())?;
-    let rust = pnode::ode::MlpRhs::new(
+    let rust = pnode::ode::ModuleRhs::mlp(
         entry.dims.clone(),
         Act::parse(&entry.act).unwrap(),
         entry.time_dep,
@@ -320,7 +422,7 @@ fn cmd_gradcheck() -> Result<()> {
 fn cmd_train_clf(args: &Args) -> Result<()> {
     use pnode::api::SolverBuilder;
     use pnode::data::spiral::SpiralDataset;
-    use pnode::nn::{Act, Optimizer};
+    use pnode::nn::Optimizer;
     use pnode::ode::rhs::OdeRhs;
     use pnode::tasks::ClassificationTask;
     use pnode::util::rng::Rng;
@@ -330,6 +432,9 @@ fn cmd_train_clf(args: &Args) -> Result<()> {
     let n_blocks = args.get_usize("blocks", 4);
     let seed = args.get_u64("seed", 42);
     let use_xla = !args.flag("no-xla");
+    // --arch picks the block dynamics (ArchSpec grammar); --augment K is
+    // shorthand for wrapping it in ANODE zero channels
+    let augment = args.get_usize("augment", 0);
     // --workers: data-parallel execution engine size.  Purely a wall-clock
     // knob — sharding and reduction order are worker-count independent,
     // so gradients (and the whole training trajectory) are bitwise
@@ -341,35 +446,49 @@ fn cmd_train_clf(args: &Args) -> Result<()> {
     // the whole gradient configuration is ONE validated, typed spec; any
     // parse error (method, scheme, grid) or degenerate combination comes
     // back with the underlying message
-    let spec = SolverBuilder::new()
+    let mut builder = SolverBuilder::new()
         .method_str(args.get_or("method", "pnode"))
         .scheme_str(args.get_or("scheme", "dopri5"))
         .grid_str(args.get_or("grid", "uniform"), nt)
         .workers(workers)
         .shard_rows(shard_rows)
+        .arch_str(args.get_or("arch", "concat:168,168:relu"));
+    if augment > 0 {
+        // wrap whatever arch was picked in ANODE zero channels
+        builder = builder.arch_str(&format!(
+            "augment:{augment}:{}",
+            args.get_or("arch", "concat:168,168:relu")
+        ));
+    }
+    let spec = builder
         .build()
         .map_err(|e| anyhow::anyhow!("invalid solver configuration: {e}"))?;
+    let arch = spec.arch.clone().expect("train-clf always declares an arch");
+    let extra = arch.augment_extra();
+    // the AOT artifacts are compiled for the default concat-MLP layout
+    // only: ANY custom architecture needs the pure-Rust module path
+    anyhow::ensure!(
+        !use_xla || (args.get("arch").is_none() && extra == 0),
+        "custom architectures have no XLA artifacts: add --no-xla"
+    );
 
     let mut rng = Rng::new(seed);
     const D: usize = 64;
     const B: usize = 128;
-    let dims = vec![D + 1, 168, 168, D];
-    let per_block = pnode::nn::param_count(&dims);
-    let dims_init = dims.clone();
+    let per_block = arch.param_count(D);
 
     let grid_name = spec.grid.name();
-    let mut task = ClassificationTask::new(
-        &mut rng,
-        n_blocks,
-        &spec,
-        per_block,
-        D,
-        10,
-        move |r| pnode::nn::init::kaiming_uniform(r, &dims_init, 1.0),
-    );
+    let arch_init = arch.clone();
+    let init = move |r: &mut Rng| arch_init.init(r, D);
+    let mut task = if extra > 0 {
+        ClassificationTask::augmented(&mut rng, n_blocks, &spec, per_block, D, extra, 10, init)
+    } else {
+        ClassificationTask::new(&mut rng, n_blocks, &spec, per_block, D, 10, init)
+    };
     println!(
-        "classification: {} blocks x {} params = {} total (paper: 199,800), grid {}, \
+        "classification: arch {} | {} blocks x {} params = {} total (paper: 199,800), grid {}, \
          engine {} workers x {}-row shards (XLA RHS is not shardable: falls back to 1)",
+        arch.name(),
         n_blocks,
         per_block,
         per_block * n_blocks,
@@ -385,10 +504,9 @@ fn cmd_train_clf(args: &Args) -> Result<()> {
         let arts = pnode::runtime::ModelArtifacts::load(&client, &manifest, cfg)?;
         Box::new(pnode::ode::XlaRhs::new(arts, task.block_theta(0).to_vec())?)
     } else {
-        Box::new(pnode::ode::MlpRhs::new(
-            dims,
-            Act::Relu,
-            true,
+        Box::new(pnode::ode::ModuleRhs::from_arch(
+            &arch,
+            D,
             B,
             task.block_theta(0).to_vec(),
         ))
@@ -477,7 +595,7 @@ fn cmd_train_stiff(args: &Args) -> Result<()> {
         let arts = pnode::runtime::ModelArtifacts::load(&client, &manifest, "stiff_d3")?;
         Box::new(pnode::ode::XlaRhs::new(arts, theta0.clone())?)
     } else {
-        Box::new(pnode::ode::MlpRhs::new(dims, Act::Gelu, false, 1, theta0.clone()))
+        Box::new(pnode::ode::ModuleRhs::mlp(dims, Act::Gelu, false, 1, theta0.clone()))
     };
 
     let mut opt = pnode::nn::AdamW::new(rhs.param_len(), args.get_f64("lr", 5e-3), 1e-4);
@@ -532,14 +650,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
             t.print();
         }
         Some("table2") => {
-            let mm = pnode::methods::MemModel {
-                act_bytes: 128 * (65 + 168 + 168 + 168 + 168 + 64) * 4,
-                state_bytes: 128 * 64 * 4,
-                param_bytes: 50_296 * 4,
-                n_stages: 6,
-                nt: 10,
-                nb: 4,
+            // size the model off the real module graph: summed per-module
+            // activation bytes of the clf_d64 architecture at B = 128
+            // (Σ_l B·(d_l + d_{l+1}) = 128·801 floats — the same total the
+            // old hand-maintained constant encoded)
+            let arch = pnode::api::ArchSpec::ConcatMlp {
+                hidden: vec![168, 168],
+                act: pnode::nn::Act::Relu,
             };
+            let theta = vec![0.0f32; arch.param_count(64)];
+            let rhs = pnode::ode::ModuleRhs::from_arch(&arch, 64, 128, theta);
+            let mm = pnode::methods::MemModel::for_rhs(&rhs, 6, 10, 4);
             let mut t = pnode::bench::Table::new(
                 "Table 2 — modeled memory (clf_d64, Dopri5, N_t=10, N_b=4)",
                 &["method", "model GB", "reverse-accurate", "implicit"],

@@ -357,21 +357,21 @@ mod tests {
     use crate::checkpoint::CheckpointPolicy;
     use crate::methods::pnode::Pnode;
     use crate::nn::Act;
-    use crate::ode::rhs::MlpRhs;
+    use crate::ode::ModuleRhs;
     use crate::ode::tableau::Scheme;
     use crate::testing::prop;
     use crate::util::rng::Rng;
 
-    fn mk_rhs(seed: u64) -> MlpRhs {
+    fn mk_rhs(seed: u64) -> ModuleRhs {
         let dims = vec![4, 6, 3];
         let mut rng = Rng::new(seed);
         let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-        MlpRhs::new(dims, Act::Tanh, true, 2, theta)
+        ModuleRhs::mlp(dims, Act::Tanh, true, 2, theta)
     }
 
     fn grad_of(
         method: &mut dyn GradientMethod,
-        rhs: &MlpRhs,
+        rhs: &ModuleRhs,
         spec: &BlockSpec,
         u0: &[f32],
         w: &[f32],

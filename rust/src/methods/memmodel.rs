@@ -25,6 +25,24 @@ pub struct MemModel {
 }
 
 impl MemModel {
+    /// Problem-size inputs measured off a live RHS: `act_bytes` is the
+    /// *summed per-module* accounting
+    /// ([`crate::ode::rhs::OdeRhs::activation_bytes_per_eval`], which a
+    /// module graph reports as the sum of its children's scratch plans),
+    /// state/param bytes follow from the RHS dimensions.  This is how the
+    /// Table-2/Fig-3 benches and `pnode bench table2` size the model now —
+    /// no hand-maintained closed forms per architecture.
+    pub fn for_rhs(rhs: &dyn crate::ode::rhs::OdeRhs, n_stages: u64, nt: u64, nb: u64) -> MemModel {
+        MemModel {
+            act_bytes: rhs.activation_bytes_per_eval(),
+            state_bytes: (rhs.state_len() * 4) as u64,
+            param_bytes: (rhs.param_len() * 4) as u64,
+            n_stages,
+            nt,
+            nb,
+        }
+    }
+
     /// Fixed cost every method pays: runtime + params/optimizer + one batch.
     fn base(&self) -> u64 {
         CUDA_RUNTIME_BYTES + 4 * self.param_bytes + 2 * self.state_bytes
@@ -146,6 +164,40 @@ mod tests {
         let m = model();
         for name in crate::api::METHOD_NAMES {
             assert!(m.by_method(name).is_some(), "{name}");
+        }
+    }
+
+    #[test]
+    fn per_module_accounting_reproduces_the_mlp_closed_form() {
+        // Table-2 regression: the summed per-module activation bytes of a
+        // module-graph RHS must equal the legacy Mlp closed form
+        // Σ_l B·(d_l + d_{l+1})·4 on the same dims, so memory numbers
+        // derived from `for_rhs` don't drift from the historical tables.
+        use crate::nn::Act;
+        use crate::ode::rhs::OdeRhs;
+        use crate::ode::ModuleRhs;
+        for (dims, time_dep) in [
+            (vec![9usize, 16, 8], true),
+            (vec![65, 168, 168, 64], true),
+            (vec![3, 50, 50, 3], false),
+        ] {
+            for bsz in [1usize, 4, 128] {
+                let theta = vec![0.0f32; crate::nn::param_count(&dims)];
+                let rhs = ModuleRhs::mlp(dims.clone(), Act::Relu, time_dep, bsz, theta);
+                let closed: u64 = dims
+                    .windows(2)
+                    .map(|w| (bsz * (w[0] + w[1]) * 4) as u64)
+                    .sum();
+                assert_eq!(
+                    rhs.activation_bytes_per_eval(),
+                    closed,
+                    "{dims:?} at B={bsz}"
+                );
+                let mm = MemModel::for_rhs(&rhs, 6, 10, 4);
+                assert_eq!(mm.act_bytes, closed);
+                assert_eq!(mm.state_bytes, (rhs.state_len() * 4) as u64);
+                assert_eq!(mm.param_bytes, (rhs.param_len() * 4) as u64);
+            }
         }
     }
 }

@@ -352,7 +352,8 @@ impl GradientMethod for ParallelAdjoint {
 mod tests {
     use super::*;
     use crate::nn::Act;
-    use crate::ode::rhs::{LinearRhs, MlpRhs};
+    use crate::ode::ModuleRhs;
+    use crate::ode::rhs::LinearRhs;
     use crate::ode::tableau::Scheme;
     use crate::testing::prop;
     use crate::util::rng::Rng;
@@ -360,16 +361,16 @@ mod tests {
     const B: usize = 20;
     const D: usize = 6;
 
-    fn mk_rhs(seed: u64, batch: usize) -> MlpRhs {
+    fn mk_rhs(seed: u64, batch: usize) -> ModuleRhs {
         let dims = vec![D + 1, 14, D];
         let mut rng = Rng::new(seed);
         let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-        MlpRhs::new(dims, Act::Tanh, true, batch, theta)
+        ModuleRhs::mlp(dims, Act::Tanh, true, batch, theta)
     }
 
     fn grad(
         method: &mut dyn GradientMethod,
-        rhs: &MlpRhs,
+        rhs: &ModuleRhs,
         spec: &BlockSpec,
         u0: &[f32],
         w: &[f32],

@@ -100,14 +100,14 @@ mod tests {
     use super::*;
     use crate::nn::Act;
     use crate::ode::grid::TimeGrid;
-    use crate::ode::rhs::MlpRhs;
+    use crate::ode::ModuleRhs;
     use crate::util::rng::Rng;
 
-    fn mk_rhs(seed: u64) -> MlpRhs {
+    fn mk_rhs(seed: u64) -> ModuleRhs {
         let dims = vec![3, 10, 3];
         let mut rng = Rng::new(seed);
         let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 0.8);
-        MlpRhs::new(dims, Act::Gelu, false, 1, theta)
+        ModuleRhs::mlp(dims, Act::Gelu, false, 1, theta)
     }
 
     #[test]

@@ -27,6 +27,17 @@ impl Act {
         })
     }
 
+    /// Canonical name; `parse(name())` round-trips.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Act::Identity => "identity",
+            Act::Relu => "relu",
+            Act::Tanh => "tanh",
+            Act::Gelu => "gelu",
+            Act::Sigmoid => "sigmoid",
+        }
+    }
+
     /// y = act(x)
     #[inline]
     pub fn apply(&self, x: f32) -> f32 {
@@ -74,6 +85,35 @@ impl Act {
         }
     }
 
+    /// d² act / d x² at the pre-activation x (the curvature term of the
+    /// directional second-order adjoint `Module::sovjp`; ReLU's kink
+    /// contributes 0 almost everywhere, matching the subgradient choice
+    /// in [`Act::grad`]).
+    #[inline]
+    pub fn grad2(&self, x: f32) -> f32 {
+        match self {
+            Act::Identity | Act::Relu => 0.0,
+            Act::Tanh => {
+                let y = x.tanh();
+                -2.0 * y * (1.0 - y * y)
+            }
+            Act::Gelu => {
+                const C: f32 = 0.7978845608028654;
+                const K: f32 = 0.044715;
+                let inner = C * (x + K * x * x * x);
+                let th = inner.tanh();
+                let sech2 = 1.0 - th * th;
+                let di = C * (1.0 + 3.0 * K * x * x);
+                let ddi = C * 6.0 * K * x;
+                sech2 * di + 0.5 * x * sech2 * (ddi - 2.0 * th * di * di)
+            }
+            Act::Sigmoid => {
+                let y = 1.0 / (1.0 + (-x).exp());
+                y * (1.0 - y) * (1.0 - 2.0 * y)
+            }
+        }
+    }
+
     /// Apply elementwise in place.
     pub fn apply_slice(&self, xs: &mut [f32]) {
         for x in xs {
@@ -114,6 +154,32 @@ mod tests {
         assert!((Act::Gelu.apply(0.0)).abs() < 1e-7);
         // gelu(x) -> x for large x
         assert!((Act::Gelu.apply(6.0) - 6.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn second_derivatives_match_finite_differences() {
+        let h = 1e-3f64;
+        for act in [Act::Identity, Act::Tanh, Act::Gelu, Act::Sigmoid] {
+            for &x in &[-2.0f32, -0.5, 0.1, 0.9, 3.0] {
+                let fd =
+                    (act.grad(x + h as f32) as f64 - act.grad(x - h as f32) as f64) / (2.0 * h);
+                let g2 = act.grad2(x) as f64;
+                assert!(
+                    (fd - g2).abs() < 5e-3 * (1.0 + fd.abs()),
+                    "{act:?} at {x}: fd {fd} vs grad2 {g2}"
+                );
+            }
+        }
+        // relu is piecewise linear away from the kink
+        assert_eq!(Act::Relu.grad2(1.0), 0.0);
+        assert_eq!(Act::Relu.grad2(-1.0), 0.0);
+    }
+
+    #[test]
+    fn name_roundtrips() {
+        for a in [Act::Identity, Act::Relu, Act::Tanh, Act::Gelu, Act::Sigmoid] {
+            assert_eq!(Act::parse(a.name()), Some(a));
+        }
     }
 
     #[test]

@@ -2,28 +2,36 @@
 //! and architecture (not bit-for-bit in floating point — GEMM orders
 //! differ — but to ~1e-5 relative, which the cross-check test asserts).
 //!
-//! Used (a) as an XLA-free `OdeRhs` so the whole adjoint/checkpoint stack
-//! is testable without artifacts, and (b) as the oracle the XLA artifacts
-//! are validated against from the Rust side.
+//! Since the module refactor this type is a thin facade over the
+//! composable module graph: a [`crate::nn::module::Sequential`] of
+//! `Linear`/`Activation` pairs (identity epilogue) whose arithmetic is
+//! call-for-call identical to the historical hand-rolled implementation —
+//! the `legacy` oracle in the tests below pins that equality *bitwise*.
+//! Forward/VJP/JVP all route through the scratch plan (one cache arena +
+//! reused work buffers), so the hot loop performs no per-call
+//! allocations — including the forward path, which historically allocated
+//! fresh per-layer buffers on every call.
 
 use std::cell::RefCell;
 
 use crate::nn::activations::Act;
-use crate::nn::init::layer_offsets;
-use crate::tensor::gemm::{sgemm, sgemm_at, sgemm_bt};
+use crate::nn::module::arch::dense_stack;
+use crate::nn::module::{Module, Sequential};
 
-/// Reusable per-layer buffers: the VJP/JVP paths are called N_t·N_s times
-/// per gradient, so the hot loop must not allocate (§Perf: reusing these
-/// buffers cut `vjp_both` by ~25% on the benchmark model).
+/// Reusable buffers sized by the module scratch plan: the VJP/JVP paths
+/// are called N_t·N_s times per gradient, so the hot loop must not
+/// allocate (§Perf: reusing these buffers cut `vjp_both` by ~25% on the
+/// benchmark model).
 #[derive(Clone, Debug, Default)]
 struct Scratch {
-    /// layer inputs x_l
-    xs: Vec<Vec<f32>>,
-    /// pre-activations z_l
-    pres: Vec<Vec<f32>>,
-    /// cotangent ping-pong buffers
-    g_a: Vec<f32>,
-    g_b: Vec<f32>,
+    /// forward-cache arena (layer inputs + pre-activations)
+    cache: Vec<f32>,
+    /// forward output staging
+    y: Vec<f32>,
+    /// gradient/tangent staging
+    g: Vec<f32>,
+    /// batch size the buffers are sized for (0 = unsized)
+    bsz: usize,
 }
 
 /// MLP with flat parameters and manual forward/VJP/JVP.
@@ -31,29 +39,36 @@ struct Scratch {
 pub struct Mlp {
     pub dims: Vec<usize>,
     pub act: Act,
-    pub out_act: Act,
     theta: Vec<f32>,
+    seq: Sequential,
     scratch: RefCell<Scratch>,
 }
 
 impl Mlp {
     pub fn new(dims: Vec<usize>, act: Act, theta: Vec<f32>) -> Self {
+        // guard the degenerate 0-layer case up front: the old scratch
+        // sizing indexed its first per-layer buffer unconditionally and
+        // panicked obscurely on `dims.len() < 2`
+        assert!(
+            dims.len() >= 2,
+            "an MLP needs at least [in, out] dims (got {dims:?})"
+        );
         assert_eq!(theta.len(), crate::nn::param_count(&dims));
-        Mlp { dims, act, out_act: Act::Identity, theta, scratch: RefCell::default() }
+        let seq = dense_stack(&dims, act);
+        Mlp { dims, act, theta, seq, scratch: RefCell::default() }
     }
 
     /// Size the scratch buffers for batch `bsz` (no-op when already sized).
     fn ensure_scratch(&self, bsz: usize) {
         let mut s = self.scratch.borrow_mut();
-        let nl = self.n_layers();
-        if s.xs.len() == nl && s.xs[0].len() == bsz * self.dims[0] {
+        if s.bsz == bsz {
             return;
         }
-        s.xs = (0..nl).map(|l| vec![0.0f32; bsz * self.dims[l]]).collect();
-        s.pres = (0..nl).map(|l| vec![0.0f32; bsz * self.dims[l + 1]]).collect();
-        let widest = bsz * self.dims.iter().copied().max().unwrap();
-        s.g_a = vec![0.0f32; widest];
-        s.g_b = vec![0.0f32; widest];
+        s.cache.resize(self.seq.cache_len(bsz), 0.0);
+        let widest = bsz * self.seq.max_width();
+        s.y.resize(widest, 0.0);
+        s.g.resize(widest, 0.0);
+        s.bsz = bsz;
     }
 
     pub fn n_layers(&self) -> usize {
@@ -77,71 +92,36 @@ impl Mlp {
         self.theta.copy_from_slice(theta);
     }
 
+    /// The underlying module graph (for composition with other modules).
+    pub fn module(&self) -> &Sequential {
+        &self.seq
+    }
+
+    /// (test oracles only: the live paths run through `seq`)
+    #[cfg(test)]
     fn layer_act(&self, l: usize) -> Act {
-        if l + 1 < self.n_layers() + 1 && l < self.n_layers() - 1 {
+        if l < self.n_layers() - 1 {
             self.act
         } else {
-            self.out_act
+            Act::Identity
         }
     }
 
+    #[cfg(test)]
     fn weights(&self, l: usize) -> (&[f32], &[f32]) {
-        let (w_off, b_off, end) = layer_offsets(&self.dims, l);
+        let (w_off, b_off, end) = crate::nn::init::layer_offsets(&self.dims, l);
         (&self.theta[w_off..b_off], &self.theta[b_off..end])
     }
 
     /// Forward pass: x [B, in] -> y [B, out].
     pub fn forward(&self, b: usize, x: &[f32], y: &mut Vec<f32>) {
-        let mut h = x.to_vec();
-        for l in 0..self.n_layers() {
-            h = self.layer_forward(b, l, &h).0;
-        }
+        self.ensure_scratch(b);
+        let mut s = self.scratch.borrow_mut();
+        let s = &mut *s;
+        let n_out = b * self.out_dim();
+        self.seq.forward(b, 0.0, &self.theta, x, &mut s.y[..n_out], &mut s.cache);
         y.clear();
-        y.extend_from_slice(&h);
-    }
-
-    /// One layer: returns (post-activation, pre-activation).
-    fn layer_forward(&self, bsz: usize, l: usize, x: &[f32]) -> (Vec<f32>, Vec<f32>) {
-        let (din, dout) = (self.dims[l], self.dims[l + 1]);
-        let (w, b) = self.weights(l);
-        let mut pre = vec![0.0f32; bsz * dout];
-        sgemm(bsz, din, dout, x, w, &mut pre, 0.0);
-        for row in 0..bsz {
-            for j in 0..dout {
-                pre[row * dout + j] += b[j];
-            }
-        }
-        let act = self.layer_act(l);
-        let mut post = pre.clone();
-        act.apply_slice(&mut post);
-        (post, pre)
-    }
-
-    /// Forward into the scratch caches (per-layer inputs + pre-activations).
-    /// Allocation-free after the first call at a given batch size.
-    fn forward_cached(&self, bsz: usize, x: &[f32], s: &mut Scratch) {
-        s.xs[0].copy_from_slice(x);
-        for l in 0..self.n_layers() {
-            let (din, dout) = (self.dims[l], self.dims[l + 1]);
-            let (w, b) = self.weights(l);
-            // split borrows: input lives in xs[l], pre in pres[l]
-            let (xs_head, xs_tail) = s.xs.split_at_mut(l + 1);
-            let xin = &xs_head[l];
-            let pre = &mut s.pres[l];
-            sgemm(bsz, din, dout, xin, w, pre, 0.0);
-            for row in 0..bsz {
-                for j in 0..dout {
-                    pre[row * dout + j] += b[j];
-                }
-            }
-            if l + 1 < self.n_layers() {
-                let act = self.layer_act(l);
-                let nxt = &mut xs_tail[0];
-                for i in 0..pre.len() {
-                    nxt[i] = act.apply(pre[i]);
-                }
-            }
-        }
+        y.extend_from_slice(&s.y[..n_out]);
     }
 
     /// VJP: given cotangent v [B, out], compute
@@ -153,43 +133,17 @@ impl Mlp {
         x: &[f32],
         v: &[f32],
         gx: &mut Vec<f32>,
-        mut grad_theta: Option<&mut [f32]>,
+        grad_theta: Option<&mut [f32]>,
     ) {
         self.ensure_scratch(bsz);
         let mut s = self.scratch.borrow_mut();
         let s = &mut *s;
-        self.forward_cached(bsz, x, s);
-        // ping-pong cotangent buffers (g_a holds gpre, g_b the next g)
-        let cur_len = bsz * self.dims[self.n_layers()];
-        s.g_b[..cur_len].copy_from_slice(v);
-        for l in (0..self.n_layers()).rev() {
-            let (din, dout) = (self.dims[l], self.dims[l + 1]);
-            let act = self.layer_act(l);
-            // gpre = g * act'(pre)
-            let pre = &s.pres[l];
-            let n_out = bsz * dout;
-            for i in 0..n_out {
-                s.g_a[i] = s.g_b[i] * act.grad(pre[i]);
-            }
-            let gpre = &s.g_a[..n_out];
-            if let Some(gt) = grad_theta.as_deref_mut() {
-                let (w_off, b_off, end) = layer_offsets(&self.dims, l);
-                // gW += x^T gpre  (x is [B,din] so x^T is din×B stored [B,din])
-                sgemm_at(din, bsz, dout, &s.xs[l], gpre, &mut gt[w_off..b_off], 1.0);
-                // gb += column sums of gpre
-                let gb = &mut gt[b_off..end];
-                for row in 0..bsz {
-                    for j in 0..dout {
-                        gb[j] += gpre[row * dout + j];
-                    }
-                }
-            }
-            // g = gpre @ W^T (W stored [din,dout] row-major)
-            let (w, _) = self.weights(l);
-            sgemm_bt(bsz, dout, din, gpre, w, &mut s.g_b[..bsz * din], 0.0);
-        }
+        let n_out = bsz * self.out_dim();
+        let n_in = bsz * self.in_dim();
+        self.seq.forward(bsz, 0.0, &self.theta, x, &mut s.y[..n_out], &mut s.cache);
+        self.seq.vjp(bsz, 0.0, &self.theta, v, &mut s.g[..n_in], grad_theta, &s.cache);
         gx.clear();
-        gx.extend_from_slice(&s.g_b[..bsz * self.dims[0]]);
+        gx.extend_from_slice(&s.g[..n_in]);
     }
 
     /// JVP wrt the input: dy = (dy/dx) dx.
@@ -197,24 +151,17 @@ impl Mlp {
         self.ensure_scratch(bsz);
         let mut s = self.scratch.borrow_mut();
         let s = &mut *s;
-        self.forward_cached(bsz, x, s);
-        s.g_b[..bsz * self.dims[0]].copy_from_slice(dx);
-        for l in 0..self.n_layers() {
-            let (din, dout) = (self.dims[l], self.dims[l + 1]);
-            let (w, _) = self.weights(l);
-            sgemm(bsz, din, dout, &s.g_b[..bsz * din], w, &mut s.g_a[..bsz * dout], 0.0);
-            let act = self.layer_act(l);
-            let pre = &s.pres[l];
-            for i in 0..bsz * dout {
-                s.g_b[i] = s.g_a[i] * act.grad(pre[i]);
-            }
-        }
+        let n_out = bsz * self.out_dim();
+        self.seq.forward(bsz, 0.0, &self.theta, x, &mut s.y[..n_out], &mut s.cache);
+        self.seq.jvp(bsz, 0.0, &self.theta, dx, &mut s.g[..n_out], &s.cache);
         dy.clear();
-        dy.extend_from_slice(&s.g_b[..bsz * self.dims[self.n_layers()]]);
+        dy.extend_from_slice(&s.g[..n_out]);
     }
 
     /// Bytes of activations one forward eval materialises (batch included);
-    /// the unit the memory model multiplies by graph depth.
+    /// the unit the memory model multiplies by graph depth.  Closed form —
+    /// the per-module accounting of the underlying graph reproduces it
+    /// exactly (asserted in the tests and in `methods::memmodel`).
     pub fn activation_bytes(&self, bsz: usize) -> u64 {
         // inputs to each layer + pre-activations kept for backward
         let mut elems = 0usize;
@@ -223,6 +170,11 @@ impl Mlp {
             elems += bsz * self.dims[l + 1]; // pre-activation
         }
         (elems * 4) as u64
+    }
+
+    /// The same quantity, summed from the per-module scratch plans.
+    pub fn module_activation_bytes(&self, bsz: usize) -> u64 {
+        self.seq.activation_bytes(bsz)
     }
 }
 
@@ -360,5 +312,201 @@ mod tests {
         let m = mk(&[5, 8, 4], Act::Tanh, 1);
         // inputs: 5+8, pres: 8+4 per sample -> 25 floats * B=2 * 4 bytes
         assert_eq!(m.activation_bytes(2), (2 * (5 + 8 + 8 + 4) * 4) as u64);
+    }
+
+    #[test]
+    fn per_module_accounting_reproduces_closed_form() {
+        for dims in [vec![5usize, 8, 4], vec![3, 50, 50, 3], vec![9, 16, 8], vec![7, 2]] {
+            let m = mk(&dims, Act::Gelu, 5);
+            for bsz in [1usize, 2, 16] {
+                assert_eq!(
+                    m.module_activation_bytes(bsz),
+                    m.activation_bytes(bsz),
+                    "{dims:?} at B={bsz}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least [in, out]")]
+    fn degenerate_dims_are_rejected_up_front() {
+        let _ = Mlp::new(vec![4], Act::Tanh, Vec::new());
+    }
+
+    /// The pre-refactor hand-rolled implementation, kept verbatim as the
+    /// bitwise oracle: the module recomposition must reproduce it exactly
+    /// (same sgemm calls in the same order on the same buffers).
+    mod legacy {
+        use crate::nn::init::layer_offsets;
+        use crate::nn::Act;
+        use crate::tensor::gemm::{sgemm, sgemm_at, sgemm_bt};
+
+        pub struct LegacyMlp {
+            pub dims: Vec<usize>,
+            pub act: Act,
+            pub theta: Vec<f32>,
+        }
+
+        impl LegacyMlp {
+            fn n_layers(&self) -> usize {
+                self.dims.len() - 1
+            }
+
+            fn layer_act(&self, l: usize) -> Act {
+                if l < self.n_layers() - 1 {
+                    self.act
+                } else {
+                    Act::Identity
+                }
+            }
+
+            fn weights(&self, l: usize) -> (&[f32], &[f32]) {
+                let (w_off, b_off, end) = layer_offsets(&self.dims, l);
+                (&self.theta[w_off..b_off], &self.theta[b_off..end])
+            }
+
+            fn forward_cached(
+                &self,
+                bsz: usize,
+                x: &[f32],
+                xs: &mut Vec<Vec<f32>>,
+                pres: &mut Vec<Vec<f32>>,
+            ) {
+                xs.clear();
+                pres.clear();
+                xs.push(x.to_vec());
+                for l in 0..self.n_layers() {
+                    let (din, dout) = (self.dims[l], self.dims[l + 1]);
+                    let (w, b) = self.weights(l);
+                    let mut pre = vec![0.0f32; bsz * dout];
+                    sgemm(bsz, din, dout, &xs[l], w, &mut pre, 0.0);
+                    for row in 0..bsz {
+                        for j in 0..dout {
+                            pre[row * dout + j] += b[j];
+                        }
+                    }
+                    if l + 1 < self.n_layers() {
+                        let act = self.layer_act(l);
+                        let mut nxt = vec![0.0f32; bsz * dout];
+                        for i in 0..pre.len() {
+                            nxt[i] = act.apply(pre[i]);
+                        }
+                        xs.push(nxt);
+                    }
+                    pres.push(pre);
+                }
+            }
+
+            pub fn forward(&self, bsz: usize, x: &[f32]) -> Vec<f32> {
+                let (mut xs, mut pres) = (Vec::new(), Vec::new());
+                self.forward_cached(bsz, x, &mut xs, &mut pres);
+                let last = pres.last().unwrap();
+                let act = self.layer_act(self.n_layers() - 1);
+                last.iter().map(|&p| act.apply(p)).collect()
+            }
+
+            pub fn vjp(
+                &self,
+                bsz: usize,
+                x: &[f32],
+                v: &[f32],
+                grad_theta: Option<&mut [f32]>,
+            ) -> Vec<f32> {
+                let (mut xs, mut pres) = (Vec::new(), Vec::new());
+                self.forward_cached(bsz, x, &mut xs, &mut pres);
+                let widest = bsz * self.dims.iter().copied().max().unwrap();
+                let mut g_a = vec![0.0f32; widest];
+                let mut g_b = vec![0.0f32; widest];
+                let cur_len = bsz * self.dims[self.n_layers()];
+                g_b[..cur_len].copy_from_slice(v);
+                let mut grad_theta = grad_theta;
+                for l in (0..self.n_layers()).rev() {
+                    let (din, dout) = (self.dims[l], self.dims[l + 1]);
+                    let act = self.layer_act(l);
+                    let pre = &pres[l];
+                    let n_out = bsz * dout;
+                    for i in 0..n_out {
+                        g_a[i] = g_b[i] * act.grad(pre[i]);
+                    }
+                    let gpre = &g_a[..n_out];
+                    if let Some(gt) = grad_theta.as_deref_mut() {
+                        let (w_off, b_off, end) = layer_offsets(&self.dims, l);
+                        sgemm_at(din, bsz, dout, &xs[l], gpre, &mut gt[w_off..b_off], 1.0);
+                        let gb = &mut gt[b_off..end];
+                        for row in 0..bsz {
+                            for j in 0..dout {
+                                gb[j] += gpre[row * dout + j];
+                            }
+                        }
+                    }
+                    let (w, _) = self.weights(l);
+                    sgemm_bt(bsz, dout, din, gpre, w, &mut g_b[..bsz * din], 0.0);
+                }
+                g_b[..bsz * self.dims[0]].to_vec()
+            }
+
+            pub fn jvp(&self, bsz: usize, x: &[f32], dx: &[f32]) -> Vec<f32> {
+                let (mut xs, mut pres) = (Vec::new(), Vec::new());
+                self.forward_cached(bsz, x, &mut xs, &mut pres);
+                let widest = bsz * self.dims.iter().copied().max().unwrap();
+                let mut g_a = vec![0.0f32; widest];
+                let mut g_b = vec![0.0f32; widest];
+                g_b[..bsz * self.dims[0]].copy_from_slice(dx);
+                for l in 0..self.n_layers() {
+                    let (din, dout) = (self.dims[l], self.dims[l + 1]);
+                    let (w, _) = self.weights(l);
+                    sgemm(bsz, din, dout, &g_b[..bsz * din], w, &mut g_a[..bsz * dout], 0.0);
+                    let act = self.layer_act(l);
+                    let pre = &pres[l];
+                    for i in 0..bsz * dout {
+                        g_b[i] = g_a[i] * act.grad(pre[i]);
+                    }
+                }
+                g_b[..bsz * self.dims[self.n_layers()]].to_vec()
+            }
+        }
+    }
+
+    #[test]
+    fn module_recomposition_is_bitwise_equal_to_legacy() {
+        prop::check("mlp-vs-legacy-bitwise", 13, 10, |rng| {
+            let dims = vec![5usize, 9, 7, 4];
+            let theta = crate::nn::init::kaiming_uniform(rng, &dims, 1.0);
+            let act = match rng.below(3) {
+                0 => Act::Tanh,
+                1 => Act::Gelu,
+                _ => Act::Sigmoid,
+            };
+            let new = Mlp::new(dims.clone(), act, theta.clone());
+            let old = legacy::LegacyMlp { dims, act, theta };
+            let bsz = 3;
+            let x = prop::vec_normal(rng, bsz * 5);
+            let v = prop::vec_normal(rng, bsz * 4);
+            let w = prop::vec_normal(rng, bsz * 5);
+
+            let mut y = Vec::new();
+            new.forward(bsz, &x, &mut y);
+            if y != old.forward(bsz, &x) {
+                return Err("forward differs bitwise".into());
+            }
+            let mut gx = Vec::new();
+            let mut gt_new = vec![0.0f32; new.params().len()];
+            new.vjp(bsz, &x, &v, &mut gx, Some(&mut gt_new));
+            let mut gt_old = vec![0.0f32; old.theta.len()];
+            let gx_old = old.vjp(bsz, &x, &v, Some(&mut gt_old));
+            if gx != gx_old {
+                return Err("vjp gx differs bitwise".into());
+            }
+            if gt_new != gt_old {
+                return Err("vjp gθ differs bitwise".into());
+            }
+            let mut dy = Vec::new();
+            new.jvp(bsz, &x, &w, &mut dy);
+            if dy != old.jvp(bsz, &x, &w) {
+                return Err("jvp differs bitwise".into());
+            }
+            Ok(())
+        });
     }
 }

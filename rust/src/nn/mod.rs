@@ -7,12 +7,14 @@
 pub mod activations;
 pub mod init;
 pub mod mlp;
+pub mod module;
 pub mod optimizer;
 pub mod readout;
 
 pub use activations::Act;
 pub use init::kaiming_uniform;
 pub use mlp::Mlp;
+pub use module::{ArchSpec, Module};
 pub use optimizer::{Adam, AdamW, Optimizer, Sgd};
 pub use readout::Readout;
 

@@ -1,0 +1,107 @@
+//! Elementwise activation module `y_i = act(x_i)`, caching its input
+//! (the pre-activation) for the derivative passes — exactly what the
+//! legacy `Mlp` kept in its `pres` buffers.
+
+use crate::nn::Act;
+use crate::nn::module::Module;
+
+#[derive(Clone, Debug)]
+pub struct Activation {
+    act: Act,
+    d: usize,
+}
+
+impl Activation {
+    pub fn new(act: Act, d: usize) -> Self {
+        assert!(d > 0, "activation width must be nonzero");
+        Activation { act, d }
+    }
+
+    pub fn act(&self) -> Act {
+        self.act
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+impl Module for Activation {
+    fn in_dim(&self) -> usize {
+        self.d
+    }
+
+    fn out_dim(&self) -> usize {
+        self.d
+    }
+
+    fn param_len(&self) -> usize {
+        0
+    }
+
+    fn cache_len(&self, bsz: usize) -> usize {
+        bsz * self.d
+    }
+
+    fn max_width(&self) -> usize {
+        self.d
+    }
+
+    fn forward(
+        &self,
+        bsz: usize,
+        _t: f64,
+        _theta: &[f32],
+        x: &[f32],
+        y: &mut [f32],
+        cache: &mut [f32],
+    ) {
+        let n = bsz * self.d;
+        cache[..n].copy_from_slice(x);
+        for i in 0..n {
+            y[i] = self.act.apply(x[i]);
+        }
+    }
+
+    fn vjp(
+        &self,
+        bsz: usize,
+        _t: f64,
+        _theta: &[f32],
+        v: &[f32],
+        gx: &mut [f32],
+        _grad_theta: Option<&mut [f32]>,
+        cache: &[f32],
+    ) {
+        for i in 0..bsz * self.d {
+            gx[i] = v[i] * self.act.grad(cache[i]);
+        }
+    }
+
+    fn jvp(&self, bsz: usize, _t: f64, _theta: &[f32], dx: &[f32], dy: &mut [f32], cache: &[f32]) {
+        for i in 0..bsz * self.d {
+            dy[i] = dx[i] * self.act.grad(cache[i]);
+        }
+    }
+
+    fn sovjp(
+        &self,
+        bsz: usize,
+        _t: f64,
+        _theta: &[f32],
+        x: &[f32],
+        w: &[f32],
+        u: &[f32],
+        gx: &mut [f32],
+        _grad_theta: Option<&mut [f32]>,
+        cache: &mut [f32],
+    ) {
+        // ⟨u, a'(x) ⊙ w⟩  ⇒  gx_i = u_i w_i a''(x_i)
+        let n = bsz * self.d;
+        cache[..n].copy_from_slice(x);
+        for i in 0..n {
+            gx[i] = u[i] * w[i] * self.act.grad2(x[i]);
+        }
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
+    }
+}

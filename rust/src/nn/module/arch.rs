@@ -1,0 +1,442 @@
+//! `ArchSpec` — the serializable, spec-addressable description of a
+//! dynamics architecture (DESIGN.md §10).
+//!
+//! An `ArchSpec` is to the module graph what
+//! [`crate::api::MethodSpec`] is to the gradient engine: a typed value
+//! with a string grammar and a lossless JSON form that `RunSpec`
+//! documents embed (`"arch": {...}`), so a reviewable spec file pins the
+//! *architecture* of a run end-to-end, not just its solver.
+//!
+//! `build` instantiates the module graph at a given data dimension;
+//! `init` draws a parameter vector in the graph's flat layout (Kaiming
+//! for dense layers — identical streams to the legacy
+//! `nn::init::kaiming_uniform` on the same dims — and zeros for the
+//! concatsquash gate/shift hypernetworks, which start as a constant
+//! ½-gate).
+
+use crate::nn::Act;
+use crate::nn::module::{
+    Activation, Augment, ConcatSquash, ConcatTime, Linear, Module, Residual, Sequential,
+};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ArchSpec {
+    /// Time-independent MLP over the state: dims `[d, hidden…, d]`.
+    Mlp { hidden: Vec<usize>, act: Act },
+    /// MLP over `[x, t]` (a [`ConcatTime`] wrapper): dims `[d+1, hidden…, d]`.
+    ConcatMlp { hidden: Vec<usize>, act: Act },
+    /// FFJORD concatsquash stack: [`ConcatSquash`] layers `[d, hidden…, d]`
+    /// with `act` between them.
+    ConcatSquashMlp { hidden: Vec<usize>, act: Act },
+    /// `y = x + inner(x)`.
+    Residual(Box<ArchSpec>),
+    /// ANODE: run `inner` over `d + extra` channels; the task lifts the
+    /// data state with zero channels (the [`Augment`] module).
+    Augment { extra: usize, inner: Box<ArchSpec> },
+}
+
+/// `[d0, …, dn]` layer widths of an MLP-shaped stack.
+fn mlp_dims(d_in: usize, hidden: &[usize], d_out: usize) -> Vec<usize> {
+    let mut dims = Vec::with_capacity(hidden.len() + 2);
+    dims.push(d_in);
+    dims.extend_from_slice(hidden);
+    dims.push(d_out);
+    dims
+}
+
+/// `Linear`/`Activation` chain over `dims` with `act` between layers and
+/// an identity epilogue — the exact legacy `Mlp` composition (the
+/// trailing identity keeps the per-module activation accounting equal to
+/// the closed-form `Mlp::activation_bytes`).  Public because
+/// [`crate::nn::Mlp`] is itself this composition over possibly
+/// non-square dims.
+pub fn dense_stack(dims: &[usize], act: Act) -> Sequential {
+    let n_layers = dims.len() - 1;
+    let mut children: Vec<Box<dyn Module>> = Vec::with_capacity(2 * n_layers);
+    for l in 0..n_layers {
+        children.push(Box::new(Linear::new(dims[l], dims[l + 1])));
+        let a = if l + 1 < n_layers { act } else { Act::Identity };
+        children.push(Box::new(Activation::new(a, dims[l + 1])));
+    }
+    Sequential::new(children)
+}
+
+fn squash_stack(dims: &[usize], act: Act) -> Sequential {
+    let n_layers = dims.len() - 1;
+    let mut children: Vec<Box<dyn Module>> = Vec::with_capacity(2 * n_layers - 1);
+    for l in 0..n_layers {
+        children.push(Box::new(ConcatSquash::new(dims[l], dims[l + 1])));
+        if l + 1 < n_layers {
+            children.push(Box::new(Activation::new(act, dims[l + 1])));
+        }
+    }
+    Sequential::new(children)
+}
+
+impl ArchSpec {
+    /// ODE state dimension when the data has `data_dim` channels (equal
+    /// for all architectures except the augmented ones).
+    pub fn state_dim(&self, data_dim: usize) -> usize {
+        match self {
+            ArchSpec::Mlp { .. }
+            | ArchSpec::ConcatMlp { .. }
+            | ArchSpec::ConcatSquashMlp { .. } => data_dim,
+            ArchSpec::Residual(inner) => inner.state_dim(data_dim),
+            ArchSpec::Augment { extra, inner } => inner.state_dim(data_dim + extra),
+        }
+    }
+
+    /// Zero channels the task must lift the data state by (0 unless the
+    /// spec carries `Augment` nodes).
+    pub fn augment_extra(&self) -> usize {
+        match self {
+            ArchSpec::Mlp { .. }
+            | ArchSpec::ConcatMlp { .. }
+            | ArchSpec::ConcatSquashMlp { .. } => 0,
+            ArchSpec::Residual(inner) => inner.augment_extra(),
+            ArchSpec::Augment { extra, inner } => extra + inner.augment_extra(),
+        }
+    }
+
+    /// Flat parameter count at `data_dim`.
+    pub fn param_count(&self, data_dim: usize) -> usize {
+        match self {
+            ArchSpec::Mlp { hidden, .. } => {
+                crate::nn::param_count(&mlp_dims(data_dim, hidden, data_dim))
+            }
+            ArchSpec::ConcatMlp { hidden, .. } => {
+                crate::nn::param_count(&mlp_dims(data_dim + 1, hidden, data_dim))
+            }
+            ArchSpec::ConcatSquashMlp { hidden, .. } => {
+                mlp_dims(data_dim, hidden, data_dim)
+                    .windows(2)
+                    .map(|w| w[0] * w[1] + 4 * w[1])
+                    .sum()
+            }
+            ArchSpec::Residual(inner) => inner.param_count(data_dim),
+            ArchSpec::Augment { extra, inner } => inner.param_count(data_dim + extra),
+        }
+    }
+
+    /// Instantiate the module graph at `data_dim`; the result is square
+    /// over [`ArchSpec::state_dim`] (time conditioning stays internal).
+    pub fn build(&self, data_dim: usize) -> Box<dyn Module> {
+        match self {
+            ArchSpec::Mlp { hidden, act } => {
+                Box::new(dense_stack(&mlp_dims(data_dim, hidden, data_dim), *act))
+            }
+            ArchSpec::ConcatMlp { hidden, act } => Box::new(ConcatTime::new(
+                data_dim,
+                Box::new(dense_stack(&mlp_dims(data_dim + 1, hidden, data_dim), *act)),
+            )),
+            ArchSpec::ConcatSquashMlp { hidden, act } => {
+                Box::new(squash_stack(&mlp_dims(data_dim, hidden, data_dim), *act))
+            }
+            ArchSpec::Residual(inner) => Box::new(Residual::new(inner.build(data_dim))),
+            ArchSpec::Augment { extra, inner } => inner.build(data_dim + extra),
+        }
+    }
+
+    /// The [`Augment`] lift module for this spec, when it is augmented.
+    pub fn lift(&self, data_dim: usize) -> Option<Augment> {
+        let extra = self.augment_extra();
+        (extra > 0).then(|| Augment::new(data_dim, extra))
+    }
+
+    /// Draw an initial flat parameter vector in the graph's layout.
+    pub fn init(&self, rng: &mut Rng, data_dim: usize) -> Vec<f32> {
+        fn kaiming_layer(rng: &mut Rng, din: usize, dout: usize, out: &mut Vec<f32>) {
+            let bound = 1.0 / (din as f32).sqrt();
+            for _ in 0..din * dout + dout {
+                out.push(rng.uniform(-bound as f64, bound as f64) as f32);
+            }
+        }
+        match self {
+            ArchSpec::Mlp { hidden, act: _ } => {
+                crate::nn::init::kaiming_uniform(rng, &mlp_dims(data_dim, hidden, data_dim), 1.0)
+            }
+            ArchSpec::ConcatMlp { hidden, act: _ } => crate::nn::init::kaiming_uniform(
+                rng,
+                &mlp_dims(data_dim + 1, hidden, data_dim),
+                1.0,
+            ),
+            ArchSpec::ConcatSquashMlp { hidden, act: _ } => {
+                let dims = mlp_dims(data_dim, hidden, data_dim);
+                let mut theta = Vec::with_capacity(self.param_count(data_dim));
+                for w in dims.windows(2) {
+                    kaiming_layer(rng, w[0], w[1], &mut theta);
+                    // gate/shift hypernets start at zero: σ(0) = ½ gate, 0 shift
+                    theta.resize(theta.len() + 3 * w[1], 0.0);
+                }
+                theta
+            }
+            ArchSpec::Residual(inner) => inner.init(rng, data_dim),
+            ArchSpec::Augment { extra, inner } => inner.init(rng, data_dim + extra),
+        }
+    }
+
+    /// Reject degenerate specs with a message naming the offending part.
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            ArchSpec::Mlp { hidden, .. }
+            | ArchSpec::ConcatMlp { hidden, .. }
+            | ArchSpec::ConcatSquashMlp { hidden, .. } => {
+                if hidden.contains(&0) {
+                    return Err(format!("arch hidden widths must be nonzero (got {hidden:?})"));
+                }
+                Ok(())
+            }
+            ArchSpec::Residual(inner) => inner.validate(),
+            ArchSpec::Augment { extra, inner } => {
+                if *extra == 0 {
+                    return Err("augment needs extra >= 1 (0 channels is the identity)".into());
+                }
+                inner.validate()
+            }
+        }
+    }
+
+    // ---------------- string grammar ----------------
+
+    /// Canonical name; `parse(name())` round-trips.  Grammar:
+    ///
+    /// ```text
+    /// mlp:<h1,h2,…>:<act>
+    /// concat:<h1,h2,…>:<act>
+    /// concatsquash:<h1,h2,…>:<act>
+    /// residual:<inner>
+    /// augment:<extra>:<inner>
+    /// ```
+    pub fn name(&self) -> String {
+        fn csv(hidden: &[usize]) -> String {
+            hidden.iter().map(|h| h.to_string()).collect::<Vec<_>>().join(",")
+        }
+        match self {
+            ArchSpec::Mlp { hidden, act } => format!("mlp:{}:{}", csv(hidden), act.name()),
+            ArchSpec::ConcatMlp { hidden, act } => {
+                format!("concat:{}:{}", csv(hidden), act.name())
+            }
+            ArchSpec::ConcatSquashMlp { hidden, act } => {
+                format!("concatsquash:{}:{}", csv(hidden), act.name())
+            }
+            ArchSpec::Residual(inner) => format!("residual:{}", inner.name()),
+            ArchSpec::Augment { extra, inner } => format!("augment:{extra}:{}", inner.name()),
+        }
+    }
+
+    /// Parse the CLI grammar of [`ArchSpec::name`].
+    pub fn parse(s: &str) -> Result<ArchSpec, String> {
+        fn hidden_csv(s: &str) -> Result<Vec<usize>, String> {
+            if s.is_empty() {
+                return Ok(Vec::new());
+            }
+            s.split(',')
+                .map(|h| h.parse::<usize>().map_err(|_| format!("bad hidden width {h:?}")))
+                .collect()
+        }
+        fn mlp_like(
+            rest: &str,
+            mk: impl Fn(Vec<usize>, Act) -> ArchSpec,
+            what: &str,
+        ) -> Result<ArchSpec, String> {
+            let (hs, act_s) = rest
+                .rsplit_once(':')
+                .ok_or_else(|| format!("{what} wants <hidden,…>:<act> (got {rest:?})"))?;
+            let act = Act::parse(act_s).ok_or_else(|| format!("unknown activation {act_s:?}"))?;
+            let spec = mk(hidden_csv(hs)?, act);
+            spec.validate()?;
+            Ok(spec)
+        }
+        let (head, rest) = s.split_once(':').ok_or_else(|| {
+            format!("unknown arch {s:?} (want mlp | concat | concatsquash | residual | augment …)")
+        })?;
+        match head {
+            "mlp" => mlp_like(rest, |hidden, act| ArchSpec::Mlp { hidden, act }, "mlp"),
+            "concat" => mlp_like(rest, |hidden, act| ArchSpec::ConcatMlp { hidden, act }, "concat"),
+            "concatsquash" => mlp_like(
+                rest,
+                |hidden, act| ArchSpec::ConcatSquashMlp { hidden, act },
+                "concatsquash",
+            ),
+            "residual" => Ok(ArchSpec::Residual(Box::new(ArchSpec::parse(rest)?))),
+            "augment" => {
+                let (extra_s, inner_s) = rest
+                    .split_once(':')
+                    .ok_or_else(|| format!("augment wants <extra>:<inner> (got {rest:?})"))?;
+                let extra = extra_s
+                    .parse::<usize>()
+                    .map_err(|_| format!("bad augment channel count {extra_s:?}"))?;
+                let spec =
+                    ArchSpec::Augment { extra, inner: Box::new(ArchSpec::parse(inner_s)?) };
+                spec.validate()?;
+                Ok(spec)
+            }
+            _ => Err(format!(
+                "unknown arch {head:?} (want mlp | concat | concatsquash | residual | augment)"
+            )),
+        }
+    }
+
+    // ---------------- JSON ----------------
+
+    pub fn to_json(&self) -> Json {
+        fn mlp_like(kind: &str, hidden: &[usize], act: Act) -> Json {
+            Json::obj(vec![
+                ("kind", Json::str(kind)),
+                ("hidden", Json::arr(hidden.iter().map(|h| Json::num(*h as f64)).collect())),
+                ("act", Json::str(act.name())),
+            ])
+        }
+        match self {
+            ArchSpec::Mlp { hidden, act } => mlp_like("mlp", hidden, *act),
+            ArchSpec::ConcatMlp { hidden, act } => mlp_like("concat_mlp", hidden, *act),
+            ArchSpec::ConcatSquashMlp { hidden, act } => {
+                mlp_like("concatsquash_mlp", hidden, *act)
+            }
+            ArchSpec::Residual(inner) => Json::obj(vec![
+                ("kind", Json::str("residual")),
+                ("inner", inner.to_json()),
+            ]),
+            ArchSpec::Augment { extra, inner } => Json::obj(vec![
+                ("kind", Json::str("augment")),
+                ("extra", Json::num(*extra as f64)),
+                ("inner", inner.to_json()),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<ArchSpec, String> {
+        let kind = v
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .ok_or("arch needs a \"kind\" string")?;
+        let mlp_like = |mk: &dyn Fn(Vec<usize>, Act) -> ArchSpec| -> Result<ArchSpec, String> {
+            let hidden = v
+                .get("hidden")
+                .and_then(|h| h.as_usize_vec())
+                .ok_or_else(|| format!("arch {kind:?} needs a \"hidden\" width array"))?;
+            let act_s = v
+                .get("act")
+                .and_then(|a| a.as_str())
+                .ok_or_else(|| format!("arch {kind:?} needs an \"act\" string"))?;
+            let act = Act::parse(act_s).ok_or_else(|| format!("unknown activation {act_s:?}"))?;
+            Ok(mk(hidden, act))
+        };
+        let spec = match kind {
+            "mlp" => mlp_like(&|hidden, act| ArchSpec::Mlp { hidden, act })?,
+            "concat_mlp" => mlp_like(&|hidden, act| ArchSpec::ConcatMlp { hidden, act })?,
+            "concatsquash_mlp" => {
+                mlp_like(&|hidden, act| ArchSpec::ConcatSquashMlp { hidden, act })?
+            }
+            "residual" => {
+                let inner = v.get("inner").ok_or("residual arch needs an \"inner\" object")?;
+                ArchSpec::Residual(Box::new(ArchSpec::from_json(inner)?))
+            }
+            "augment" => {
+                let extra = v
+                    .get("extra")
+                    .and_then(|e| e.as_usize())
+                    .ok_or("augment arch needs an \"extra\" count")?;
+                let inner = v.get("inner").ok_or("augment arch needs an \"inner\" object")?;
+                ArchSpec::Augment { extra, inner: Box::new(ArchSpec::from_json(inner)?) }
+            }
+            k => {
+                return Err(format!(
+                    "unknown arch kind {k:?} (want mlp | concat_mlp | concatsquash_mlp | \
+                     residual | augment)"
+                ))
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roster() -> Vec<ArchSpec> {
+        vec![
+            ArchSpec::Mlp { hidden: vec![8, 6], act: Act::Tanh },
+            ArchSpec::ConcatMlp { hidden: vec![7], act: Act::Gelu },
+            ArchSpec::ConcatSquashMlp { hidden: vec![6, 6], act: Act::Tanh },
+            ArchSpec::Residual(Box::new(ArchSpec::Mlp { hidden: vec![5], act: Act::Sigmoid })),
+            ArchSpec::Augment {
+                extra: 2,
+                inner: Box::new(ArchSpec::ConcatMlp { hidden: vec![9], act: Act::Relu }),
+            },
+        ]
+    }
+
+    #[test]
+    fn name_and_json_roundtrip() {
+        for spec in roster() {
+            assert_eq!(ArchSpec::parse(&spec.name()), Ok(spec.clone()), "{}", spec.name());
+            let j = spec.to_json();
+            assert_eq!(ArchSpec::from_json(&j), Ok(spec.clone()), "{}", spec.name());
+            // through text, too
+            let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+            assert_eq!(ArchSpec::from_json(&parsed), Ok(spec));
+        }
+    }
+
+    #[test]
+    fn built_graphs_are_square_with_consistent_params() {
+        let d = 4;
+        for spec in roster() {
+            let m = spec.build(d);
+            let sd = spec.state_dim(d);
+            assert_eq!(m.in_dim(), sd, "{}", spec.name());
+            assert_eq!(m.out_dim(), sd, "{}", spec.name());
+            assert_eq!(m.param_len(), spec.param_count(d), "{}", spec.name());
+            let mut rng = Rng::new(9);
+            assert_eq!(spec.init(&mut rng, d).len(), spec.param_count(d), "{}", spec.name());
+        }
+    }
+
+    #[test]
+    fn concat_mlp_matches_legacy_mlp_layout() {
+        // ConcatMlp's flat layout is the legacy [d+1, hidden…, d] layout
+        let spec = ArchSpec::ConcatMlp { hidden: vec![16], act: Act::Tanh };
+        assert_eq!(spec.param_count(8), crate::nn::param_count(&[9, 16, 8]));
+        let mut a = Rng::new(4);
+        let mut b = Rng::new(4);
+        let theta = spec.init(&mut a, 8);
+        let legacy = crate::nn::init::kaiming_uniform(&mut b, &[9, 16, 8], 1.0);
+        assert_eq!(theta, legacy, "identical init stream on the same dims");
+    }
+
+    #[test]
+    fn augment_changes_state_dim_and_reports_lift() {
+        let spec = ArchSpec::Augment {
+            extra: 3,
+            inner: Box::new(ArchSpec::Mlp { hidden: vec![6], act: Act::Tanh }),
+        };
+        assert_eq!(spec.state_dim(4), 7);
+        assert_eq!(spec.augment_extra(), 3);
+        let lift = spec.lift(4).expect("augmented");
+        assert_eq!(lift.in_dim(), 4);
+        assert_eq!(lift.out_dim(), 7);
+        assert!(ArchSpec::Mlp { hidden: vec![6], act: Act::Tanh }.lift(4).is_none());
+    }
+
+    #[test]
+    fn degenerate_specs_are_rejected() {
+        let e = ArchSpec::Mlp { hidden: vec![8, 0], act: Act::Tanh }.validate().unwrap_err();
+        assert!(e.contains("nonzero"), "{e}");
+        let e = ArchSpec::Augment {
+            extra: 0,
+            inner: Box::new(ArchSpec::Mlp { hidden: vec![4], act: Act::Tanh }),
+        }
+        .validate()
+        .unwrap_err();
+        assert!(e.contains("extra"), "{e}");
+        assert!(ArchSpec::parse("mlp:8,x:tanh").is_err());
+        assert!(ArchSpec::parse("mlp:8:swish").is_err());
+        assert!(ArchSpec::parse("nope:1:tanh").is_err());
+        assert!(ArchSpec::parse("augment:0:mlp:4:tanh").is_err());
+    }
+}

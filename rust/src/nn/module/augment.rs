@@ -1,0 +1,107 @@
+//! ANODE zero-channel augmentation (Gholami et al., 2019): lift
+//! `[B, d] → [B, d + extra]` by appending zero channels per sample.
+//! Used by the tasks layer to lift data into an augmented ODE state; the
+//! map is linear and constant, so every derivative pass is a pure
+//! copy/truncate.
+
+use crate::nn::module::Module;
+
+#[derive(Clone, Debug)]
+pub struct Augment {
+    d: usize,
+    extra: usize,
+}
+
+impl Augment {
+    pub fn new(d: usize, extra: usize) -> Self {
+        assert!(d > 0, "augment needs a nonzero base dim");
+        assert!(extra > 0, "augment with 0 extra channels is the identity — drop it");
+        Augment { d, extra }
+    }
+
+    pub fn extra(&self) -> usize {
+        self.extra
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+impl Module for Augment {
+    fn in_dim(&self) -> usize {
+        self.d
+    }
+
+    fn out_dim(&self) -> usize {
+        self.d + self.extra
+    }
+
+    fn param_len(&self) -> usize {
+        0
+    }
+
+    fn cache_len(&self, _bsz: usize) -> usize {
+        0
+    }
+
+    fn max_width(&self) -> usize {
+        self.d + self.extra
+    }
+
+    fn forward(
+        &self,
+        bsz: usize,
+        _t: f64,
+        _theta: &[f32],
+        x: &[f32],
+        y: &mut [f32],
+        _cache: &mut [f32],
+    ) {
+        let (d, dd) = (self.d, self.d + self.extra);
+        for r in 0..bsz {
+            y[r * dd..r * dd + d].copy_from_slice(&x[r * d..(r + 1) * d]);
+            y[r * dd + d..(r + 1) * dd].fill(0.0);
+        }
+    }
+
+    fn vjp(
+        &self,
+        bsz: usize,
+        _t: f64,
+        _theta: &[f32],
+        v: &[f32],
+        gx: &mut [f32],
+        _grad_theta: Option<&mut [f32]>,
+        _cache: &[f32],
+    ) {
+        let (d, dd) = (self.d, self.d + self.extra);
+        for r in 0..bsz {
+            gx[r * d..(r + 1) * d].copy_from_slice(&v[r * dd..r * dd + d]);
+        }
+    }
+
+    fn jvp(&self, bsz: usize, t: f64, theta: &[f32], dx: &[f32], dy: &mut [f32], cache: &[f32]) {
+        // the pushforward of a constant linear map is the map itself
+        let _ = cache;
+        let mut dummy: [f32; 0] = [];
+        self.forward(bsz, t, theta, dx, dy, &mut dummy);
+    }
+
+    fn sovjp(
+        &self,
+        bsz: usize,
+        _t: f64,
+        _theta: &[f32],
+        _x: &[f32],
+        _w: &[f32],
+        _u: &[f32],
+        gx: &mut [f32],
+        _grad_theta: Option<&mut [f32]>,
+        _cache: &mut [f32],
+    ) {
+        // J is constant: zero curvature
+        gx[..bsz * self.d].fill(0.0);
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
+    }
+}

@@ -1,0 +1,128 @@
+//! Dense layer `y = x W + b` with the legacy flat layout
+//! (`W ∈ R^{din×dout}` row-major, then `b ∈ R^{dout}` — the contract of
+//! `nn::init::layer_offsets`).  Arithmetic is kept call-for-call
+//! identical to the pre-module `Mlp` layer loops (same sgemm variants,
+//! same bias/column-sum loop order), which is what makes the
+//! `Sequential`-of-modules recomposition bitwise equal to the legacy
+//! implementation.
+
+use crate::nn::module::Module;
+use crate::tensor::gemm::{sgemm, sgemm_at, sgemm_bt};
+
+#[derive(Clone, Debug)]
+pub struct Linear {
+    din: usize,
+    dout: usize,
+}
+
+impl Linear {
+    pub fn new(din: usize, dout: usize) -> Self {
+        assert!(din > 0 && dout > 0, "linear dims must be nonzero ({din}x{dout})");
+        Linear { din, dout }
+    }
+
+    fn split<'a>(&self, theta: &'a [f32]) -> (&'a [f32], &'a [f32]) {
+        debug_assert_eq!(theta.len(), self.param_len());
+        theta.split_at(self.din * self.dout)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+impl Module for Linear {
+    fn in_dim(&self) -> usize {
+        self.din
+    }
+
+    fn out_dim(&self) -> usize {
+        self.dout
+    }
+
+    fn param_len(&self) -> usize {
+        self.din * self.dout + self.dout
+    }
+
+    fn cache_len(&self, bsz: usize) -> usize {
+        // the layer input, needed for gW = xᵀ gpre
+        bsz * self.din
+    }
+
+    fn max_width(&self) -> usize {
+        self.din.max(self.dout)
+    }
+
+    fn forward(
+        &self,
+        bsz: usize,
+        _t: f64,
+        theta: &[f32],
+        x: &[f32],
+        y: &mut [f32],
+        cache: &mut [f32],
+    ) {
+        let (w, b) = self.split(theta);
+        cache[..bsz * self.din].copy_from_slice(x);
+        sgemm(bsz, self.din, self.dout, x, w, y, 0.0);
+        for row in 0..bsz {
+            for j in 0..self.dout {
+                y[row * self.dout + j] += b[j];
+            }
+        }
+    }
+
+    fn vjp(
+        &self,
+        bsz: usize,
+        _t: f64,
+        theta: &[f32],
+        v: &[f32],
+        gx: &mut [f32],
+        grad_theta: Option<&mut [f32]>,
+        cache: &[f32],
+    ) {
+        let (w, _) = self.split(theta);
+        if let Some(gt) = grad_theta {
+            let (gw, gb) = gt.split_at_mut(self.din * self.dout);
+            // gW += xᵀ v  (x is [B,din] so xᵀ is din×B stored [B,din])
+            sgemm_at(self.din, bsz, self.dout, &cache[..bsz * self.din], v, gw, 1.0);
+            // gb += column sums of v
+            for row in 0..bsz {
+                for j in 0..self.dout {
+                    gb[j] += v[row * self.dout + j];
+                }
+            }
+        }
+        // gx = v @ Wᵀ (W stored [din,dout] row-major)
+        sgemm_bt(bsz, self.dout, self.din, v, w, gx, 0.0);
+    }
+
+    fn jvp(&self, bsz: usize, _t: f64, theta: &[f32], dx: &[f32], dy: &mut [f32], _cache: &[f32]) {
+        let (w, _) = self.split(theta);
+        sgemm(bsz, self.din, self.dout, dx, w, dy, 0.0);
+    }
+
+    fn sovjp(
+        &self,
+        bsz: usize,
+        _t: f64,
+        _theta: &[f32],
+        _x: &[f32],
+        w: &[f32],
+        u: &[f32],
+        gx: &mut [f32],
+        grad_theta: Option<&mut [f32]>,
+        _cache: &mut [f32],
+    ) {
+        // J = W is x-independent: ∇_x ⟨u, Ww⟩ = 0.
+        gx[..bsz * self.din].fill(0.0);
+        if let Some(gt) = grad_theta {
+            // ⟨u, wW⟩ = Σ_{r,i,j} w[r,i] W_ij u[r,j]  ⇒  gW_ij += Σ_r w[r,i] u[r,j]
+            let gw = &mut gt[..self.din * self.dout];
+            sgemm_at(self.din, bsz, self.dout, w, u, gw, 1.0);
+            // the bias drops out of J: gb contribution is zero
+        }
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
+    }
+}

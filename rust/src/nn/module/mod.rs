@@ -1,0 +1,248 @@
+//! Composable dynamics modules (DESIGN.md §10).
+//!
+//! A [`Module`] is a differentiable map `y = f(x, θ, t)` over flat f32
+//! buffers: `x` is `[B, in_dim]` row-major, `θ` a flat parameter slice in
+//! a layout the module defines, and `t` the scalar time every
+//! time-conditioned module may read.  Modules are *stateless with respect
+//! to parameters* — θ is always passed in — which makes a module graph
+//! cheap to clone for batch sharding ([`Module::boxed_clone`]) and lets
+//! one flat θ vector drive an arbitrary composition via parameter
+//! slicing ([`Sequential`]).
+//!
+//! Derivative surface (everything the adjoint stack needs):
+//!
+//! * [`Module::forward`] — evaluate, writing the *forward cache* (layer
+//!   inputs / pre-activations) into a caller-provided arena sized by
+//!   [`Module::cache_len`] (the scratch plan — no per-call allocation);
+//! * [`Module::vjp`] — cotangent pullback `gx = (∂y/∂x)ᵀ v`, accumulating
+//!   `gθ += (∂y/∂θ)ᵀ v`, reading the cache of the latest `forward`;
+//! * [`Module::jvp`] — tangent pushforward `dy = (∂y/∂x) dx` (same cache);
+//! * [`Module::sovjp`] — the directional second-order adjoint
+//!   `∇_{x,θ} ⟨u, J(x)·w⟩` (a Hessian-vector product along tangent `w`
+//!   with output cotangent `u`).  This is what makes Hutchinson-trace CNF
+//!   dynamics exactly differentiable: the adjoint of the trace estimate
+//!   `εᵀ J ε` is `∇⟨·, Jε⟩`, a second-order quantity no first-order
+//!   vjp/jvp pair can produce (see `tasks::cnf::HutchinsonCnfRhs`).
+//!
+//! Memory accounting: [`Module::activation_bytes`] is the summed
+//! per-module cache footprint of one forward evaluation — the unit the
+//! Table-2 memory model multiplies by AD-graph depth
+//! ([`crate::methods::MemModel`]).  For the MLP composition it reproduces
+//! the legacy closed form exactly (regression-tested in
+//! `nn::mlp` and `methods::memmodel`).
+//!
+//! Implementations: [`Linear`], [`Activation`], [`Sequential`],
+//! [`Residual`], [`ConcatTime`] / [`ConcatSquash`] (time-conditioned),
+//! [`Augment`] (ANODE zero-channels).  Architectures are addressed by the
+//! serializable [`ArchSpec`] and executed as an ODE right-hand side by
+//! [`crate::ode::ModuleRhs`].
+
+pub mod activation;
+pub mod arch;
+pub mod augment;
+pub mod linear;
+pub mod residual;
+pub mod sequential;
+pub mod time;
+
+pub use activation::Activation;
+pub use arch::ArchSpec;
+pub use augment::Augment;
+pub use linear::Linear;
+pub use residual::Residual;
+pub use sequential::Sequential;
+pub use time::{ConcatSquash, ConcatTime};
+
+/// A differentiable flat-buffer map `y = f(x, θ, t)`; see the module docs
+/// for the buffer/caching contract shared by all methods.
+///
+/// `Send` (supertrait) so module graphs can move to the data-parallel
+/// execution engine's worker threads inside their owning RHS; interior
+/// scratch (RefCell) keeps them intentionally not `Sync` — a graph is
+/// owned by exactly one shard.
+#[allow(clippy::too_many_arguments)]
+pub trait Module: Send {
+    /// Input channels per sample.
+    fn in_dim(&self) -> usize;
+
+    /// Output channels per sample.
+    fn out_dim(&self) -> usize;
+
+    /// Flat parameter count (θ slice length this module consumes).
+    fn param_len(&self) -> usize;
+
+    /// Scratch plan: f32 slots of forward cache this module writes at
+    /// batch `bsz` (what `vjp`/`jvp` read back).
+    fn cache_len(&self, bsz: usize) -> usize;
+
+    /// Widest per-sample boundary this module materialises anywhere in
+    /// its graph (≥ `max(in_dim, out_dim)`); composites size their
+    /// ping-pong work buffers as `bsz * max_width`.
+    fn max_width(&self) -> usize;
+
+    /// `y = f(x, θ, t)`, writing the forward cache.
+    /// `x` is `[B, in_dim]`, `y` `[B, out_dim]`, `cache` exactly
+    /// `cache_len(bsz)` long.
+    fn forward(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        x: &[f32],
+        y: &mut [f32],
+        cache: &mut [f32],
+    );
+
+    /// `gx = (∂y/∂x)ᵀ v` (overwritten); `gθ += (∂y/∂θ)ᵀ v` when `Some`.
+    /// Reads the cache written by the latest `forward` at the same
+    /// `(bsz, t, θ, x)`.
+    fn vjp(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        v: &[f32],
+        gx: &mut [f32],
+        grad_theta: Option<&mut [f32]>,
+        cache: &[f32],
+    );
+
+    /// `dy = (∂y/∂x) dx` (overwritten); reads the cache like [`Module::vjp`].
+    fn jvp(&self, bsz: usize, t: f64, theta: &[f32], dx: &[f32], dy: &mut [f32], cache: &[f32]);
+
+    /// Directional second-order adjoint:
+    /// `gx = ∇_x ⟨u, J(x)·w⟩` (overwritten), `gθ += ∇_θ ⟨u, J(x)·w⟩`,
+    /// where `J = ∂f/∂x` at `(x, θ, t)`, `w` is an input tangent
+    /// `[B, in_dim]` and `u` an output cotangent `[B, out_dim]`.
+    ///
+    /// Self-contained: runs its own forward sweep and may clobber
+    /// `cache` (with values identical to a plain `forward` at the same
+    /// arguments, so first-order pullbacks stay valid afterwards).
+    fn sovjp(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        x: &[f32],
+        w: &[f32],
+        u: &[f32],
+        gx: &mut [f32],
+        grad_theta: Option<&mut [f32]>,
+        cache: &mut [f32],
+    );
+
+    /// Fresh clone of the graph (scratch not shared) — the basis of
+    /// [`crate::ode::OdeRhs::make_shard`] row sharding.
+    fn boxed_clone(&self) -> Box<dyn Module>;
+
+    /// Bytes of activations one forward eval materialises (batch
+    /// included): the per-module unit of the Table-2 memory model.
+    fn activation_bytes(&self, bsz: usize) -> u64 {
+        (self.cache_len(bsz) * 4) as u64
+    }
+}
+
+impl Clone for Box<dyn Module> {
+    fn clone(&self) -> Self {
+        self.boxed_clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Act;
+    use crate::testing::prop;
+    use crate::util::rng::Rng;
+
+    /// One of every module kind (composites built through `ArchSpec`, the
+    /// way tasks address them).
+    fn roster() -> Vec<(&'static str, Box<dyn Module>)> {
+        vec![
+            ("linear", Box::new(Linear::new(4, 3)) as Box<dyn Module>),
+            ("act-tanh", Box::new(Activation::new(Act::Tanh, 5))),
+            ("act-gelu", Box::new(Activation::new(Act::Gelu, 4))),
+            ("act-sigmoid", Box::new(Activation::new(Act::Sigmoid, 3))),
+            ("augment", Box::new(Augment::new(3, 2))),
+            ("mlp-seq", ArchSpec::Mlp { hidden: vec![7, 5], act: Act::Tanh }.build(4)),
+            (
+                "concat-time",
+                ArchSpec::ConcatMlp { hidden: vec![6], act: Act::Gelu }.build(3),
+            ),
+            (
+                "concatsquash",
+                ArchSpec::ConcatSquashMlp { hidden: vec![6, 5], act: Act::Tanh }.build(3),
+            ),
+            (
+                "residual",
+                ArchSpec::Residual(Box::new(ArchSpec::Mlp { hidden: vec![6], act: Act::Sigmoid }))
+                    .build(4),
+            ),
+        ]
+    }
+
+    fn theta_for(m: &dyn Module, rng: &mut Rng) -> Vec<f32> {
+        let mut theta = prop::vec_normal(rng, m.param_len());
+        for v in theta.iter_mut() {
+            *v *= 0.5;
+        }
+        theta
+    }
+
+    #[test]
+    fn every_module_satisfies_vjp_jvp_duality() {
+        for (name, m) in roster() {
+            prop::check(&format!("module-duality-{name}"), 101, 8, |rng| {
+                let theta = theta_for(m.as_ref(), rng);
+                let t = rng.uniform(0.0, 1.0);
+                prop::module_duality(m.as_ref(), 3, t, &theta, rng)
+            });
+        }
+    }
+
+    #[test]
+    fn every_module_matches_finite_differences() {
+        for (name, m) in roster() {
+            prop::check(&format!("module-fd-{name}"), 103, 4, |rng| {
+                let theta = theta_for(m.as_ref(), rng);
+                let t = rng.uniform(0.0, 1.0);
+                prop::module_fd(m.as_ref(), 2, t, &theta, rng)
+            });
+        }
+    }
+
+    #[test]
+    fn every_module_second_order_matches_finite_differences() {
+        for (name, m) in roster() {
+            prop::check(&format!("module-sovjp-{name}"), 107, 4, |rng| {
+                let theta = theta_for(m.as_ref(), rng);
+                let t = rng.uniform(0.0, 1.0);
+                prop::module_sovjp_fd(m.as_ref(), 2, t, &theta, rng)
+            });
+        }
+    }
+
+    #[test]
+    fn boxed_clones_are_independent_but_identical() {
+        let m = ArchSpec::ConcatSquashMlp { hidden: vec![5], act: Act::Tanh }.build(3);
+        let c = m.clone();
+        let mut rng = Rng::new(11);
+        let theta = theta_for(m.as_ref(), &mut rng);
+        let x = prop::vec_normal(&mut rng, 2 * m.in_dim());
+        let (y1, _) = prop::module_eval(m.as_ref(), 2, 0.4, &theta, &x);
+        let (y2, _) = prop::module_eval(c.as_ref(), 2, 0.4, &theta, &x);
+        assert_eq!(y1, y2, "clone reproduces the graph bitwise");
+    }
+
+    #[test]
+    fn sequential_cache_is_the_sum_of_children() {
+        let spec = ArchSpec::Mlp { hidden: vec![8, 6], act: Act::Tanh };
+        let m = spec.build(5);
+        // Linear caches its input, Activation its pre-activation:
+        // Σ_l B·(d_l + d_{l+1}) — the legacy Mlp closed form
+        let dims = [5usize, 8, 6, 5];
+        let want: usize = dims.windows(2).map(|w| 3 * (w[0] + w[1])).sum();
+        assert_eq!(m.cache_len(3), want);
+        assert_eq!(m.activation_bytes(3), (want * 4) as u64);
+    }
+}

@@ -1,0 +1,134 @@
+//! Residual wrapper `y = x + f(x)` (requires `f` to map `d → d`).
+//! The identity path has zero parameters and zero curvature, so every
+//! derivative pass is the inner module's plus the corresponding
+//! passthrough term.
+
+use std::cell::RefCell;
+
+use crate::nn::module::Module;
+
+pub struct Residual {
+    inner: Box<dyn Module>,
+    tmp: RefCell<Vec<f32>>,
+}
+
+impl Clone for Residual {
+    fn clone(&self) -> Self {
+        Residual { inner: self.inner.clone(), tmp: RefCell::default() }
+    }
+}
+
+impl std::fmt::Debug for Residual {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Residual").field("dim", &self.in_dim()).finish()
+    }
+}
+
+impl Residual {
+    pub fn new(inner: Box<dyn Module>) -> Self {
+        assert_eq!(
+            inner.in_dim(),
+            inner.out_dim(),
+            "residual needs a square inner module (in == out)"
+        );
+        Residual { inner, tmp: RefCell::default() }
+    }
+
+    fn ensure_tmp(&self, n: usize) {
+        let mut t = self.tmp.borrow_mut();
+        if t.len() < n {
+            t.resize(n, 0.0);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+impl Module for Residual {
+    fn in_dim(&self) -> usize {
+        self.inner.in_dim()
+    }
+
+    fn out_dim(&self) -> usize {
+        self.inner.out_dim()
+    }
+
+    fn param_len(&self) -> usize {
+        self.inner.param_len()
+    }
+
+    fn cache_len(&self, bsz: usize) -> usize {
+        self.inner.cache_len(bsz)
+    }
+
+    fn max_width(&self) -> usize {
+        self.inner.max_width()
+    }
+
+    fn forward(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        x: &[f32],
+        y: &mut [f32],
+        cache: &mut [f32],
+    ) {
+        let n = bsz * self.in_dim();
+        self.ensure_tmp(n);
+        let mut tmp = self.tmp.borrow_mut();
+        self.inner.forward(bsz, t, theta, x, &mut tmp[..n], cache);
+        for i in 0..n {
+            y[i] = x[i] + tmp[i];
+        }
+    }
+
+    fn vjp(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        v: &[f32],
+        gx: &mut [f32],
+        grad_theta: Option<&mut [f32]>,
+        cache: &[f32],
+    ) {
+        let n = bsz * self.in_dim();
+        self.ensure_tmp(n);
+        let mut tmp = self.tmp.borrow_mut();
+        self.inner.vjp(bsz, t, theta, v, &mut tmp[..n], grad_theta, cache);
+        for i in 0..n {
+            gx[i] = v[i] + tmp[i];
+        }
+    }
+
+    fn jvp(&self, bsz: usize, t: f64, theta: &[f32], dx: &[f32], dy: &mut [f32], cache: &[f32]) {
+        let n = bsz * self.in_dim();
+        self.ensure_tmp(n);
+        let mut tmp = self.tmp.borrow_mut();
+        self.inner.jvp(bsz, t, theta, dx, &mut tmp[..n], cache);
+        for i in 0..n {
+            dy[i] = dx[i] + tmp[i];
+        }
+    }
+
+    fn sovjp(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        x: &[f32],
+        w: &[f32],
+        u: &[f32],
+        gx: &mut [f32],
+        grad_theta: Option<&mut [f32]>,
+        cache: &mut [f32],
+    ) {
+        // J = I + J_inner; the identity part is constant, so the whole
+        // second-order term is the inner module's
+        self.inner.sovjp(bsz, t, theta, x, w, u, gx, grad_theta, cache);
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
+    }
+}

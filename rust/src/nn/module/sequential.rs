@@ -1,0 +1,391 @@
+//! Composition `y = f_{K-1}(… f_1(f_0(x)))` with flat-parameter slicing
+//! and a single shared cache arena.
+//!
+//! * θ layout: children's parameter slices concatenated in order (for a
+//!   `Linear`/`Activation` chain this is exactly the legacy `Mlp` layout
+//!   of `nn::init::layer_offsets`).
+//! * cache layout: children's caches concatenated in order; the arena is
+//!   carved with running offsets, no per-call allocation.
+//! * work buffers: two ping-pong buffers of `bsz · max_width` floats in
+//!   interior scratch carry the boundary values / cotangents between
+//!   children.
+//!
+//! The second-order pass ([`Module::sovjp`]) runs the standard
+//! Hessian-vector recursion over the chain: with boundaries
+//! `b_{k+1} = f_k(b_k)`, tangents `w_{k+1} = J_k w_k` and the cotangent
+//! chain `c_k = J_kᵀ c_{k+1}` (seeded `c_K = u`),
+//!
+//! ```text
+//! ∇⟨u, J_{K-1}···J_0 w⟩ = Σ_k  (J_0ᵀ···J_{k-1}ᵀ) ∇_{b_k}⟨c_{k+1}, J_k w_k⟩
+//! ```
+//!
+//! evaluated in one reverse sweep: each child contributes its direct
+//! `sovjp` term, and the accumulated cotangent is pulled back through the
+//! child's first-order `vjp` — which also collects the θ-gradients of the
+//! earlier children the pullback passes through.
+
+use std::cell::RefCell;
+
+use crate::nn::module::Module;
+
+#[derive(Clone, Debug, Default)]
+struct SeqScratch {
+    /// first-order ping-pong boundary buffers
+    buf_a: Vec<f32>,
+    buf_b: Vec<f32>,
+    /// sovjp: all boundary values b_k, concatenated
+    bounds: Vec<f32>,
+    /// sovjp: all boundary tangents w_k, concatenated
+    tans: Vec<f32>,
+    /// sovjp: cotangent-chain ping-pong
+    c_a: Vec<f32>,
+    c_b: Vec<f32>,
+    /// sovjp: accumulated second-order cotangent ping-pong
+    acc_a: Vec<f32>,
+    acc_b: Vec<f32>,
+    /// sovjp: per-child direct term
+    g_tmp: Vec<f32>,
+    /// float offsets of boundary k inside `bounds`/`tans` (len K+2)
+    b_off: Vec<usize>,
+}
+
+impl SeqScratch {
+    fn ensure_work(&mut self, work: usize) {
+        if self.buf_a.len() < work {
+            self.buf_a.resize(work, 0.0);
+            self.buf_b.resize(work, 0.0);
+        }
+    }
+
+    fn ensure_sovjp(&mut self, work: usize, bounds_total: usize) {
+        if self.c_a.len() < work {
+            self.c_a.resize(work, 0.0);
+            self.c_b.resize(work, 0.0);
+            self.acc_a.resize(work, 0.0);
+            self.acc_b.resize(work, 0.0);
+            self.g_tmp.resize(work, 0.0);
+        }
+        if self.bounds.len() < bounds_total {
+            self.bounds.resize(bounds_total, 0.0);
+            self.tans.resize(bounds_total, 0.0);
+        }
+    }
+}
+
+pub struct Sequential {
+    children: Vec<Box<dyn Module>>,
+    /// θ offsets: child k owns `theta[theta_off[k]..theta_off[k+1]]`
+    theta_off: Vec<usize>,
+    max_width: usize,
+    scratch: RefCell<SeqScratch>,
+}
+
+impl Clone for Sequential {
+    fn clone(&self) -> Self {
+        Sequential {
+            children: self.children.clone(),
+            theta_off: self.theta_off.clone(),
+            max_width: self.max_width,
+            scratch: RefCell::default(),
+        }
+    }
+}
+
+impl std::fmt::Debug for Sequential {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Sequential")
+            .field("children", &self.children.len())
+            .field("in_dim", &self.in_dim())
+            .field("out_dim", &self.out_dim())
+            .finish()
+    }
+}
+
+impl Sequential {
+    pub fn new(children: Vec<Box<dyn Module>>) -> Self {
+        assert!(!children.is_empty(), "sequential needs at least one module");
+        for pair in children.windows(2) {
+            assert_eq!(
+                pair[0].out_dim(),
+                pair[1].in_dim(),
+                "sequential dim mismatch between adjacent modules"
+            );
+        }
+        let mut theta_off = Vec::with_capacity(children.len() + 1);
+        theta_off.push(0);
+        let mut acc = 0;
+        let mut max_width = 0;
+        for c in &children {
+            acc += c.param_len();
+            theta_off.push(acc);
+            max_width = max_width.max(c.max_width());
+        }
+        Sequential { children, theta_off, max_width, scratch: RefCell::default() }
+    }
+
+    pub fn n_children(&self) -> usize {
+        self.children.len()
+    }
+
+    fn theta_slice<'a>(&self, theta: &'a [f32], k: usize) -> &'a [f32] {
+        &theta[self.theta_off[k]..self.theta_off[k + 1]]
+    }
+
+    /// Boundary float offsets at batch `bsz` written into `b_off`
+    /// (boundary 0 = the input, boundary k+1 = child k's output).
+    fn boundary_offsets(&self, bsz: usize, b_off: &mut Vec<usize>) -> usize {
+        b_off.clear();
+        b_off.push(0);
+        let mut acc = bsz * self.in_dim();
+        b_off.push(acc);
+        for c in &self.children {
+            acc += bsz * c.out_dim();
+            b_off.push(acc);
+        }
+        acc
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+impl Module for Sequential {
+    fn in_dim(&self) -> usize {
+        self.children[0].in_dim()
+    }
+
+    fn out_dim(&self) -> usize {
+        self.children[self.children.len() - 1].out_dim()
+    }
+
+    fn param_len(&self) -> usize {
+        self.theta_off[self.children.len()]
+    }
+
+    fn cache_len(&self, bsz: usize) -> usize {
+        self.children.iter().map(|c| c.cache_len(bsz)).sum()
+    }
+
+    fn max_width(&self) -> usize {
+        self.max_width
+    }
+
+    fn forward(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        x: &[f32],
+        y: &mut [f32],
+        cache: &mut [f32],
+    ) {
+        let k_n = self.children.len();
+        if k_n == 1 {
+            self.children[0].forward(bsz, t, self.theta_slice(theta, 0), x, y, cache);
+            return;
+        }
+        let mut s = self.scratch.borrow_mut();
+        s.ensure_work(bsz * self.max_width);
+        let s = &mut *s;
+        let (mut cur, mut nxt) = (&mut s.buf_a[..], &mut s.buf_b[..]);
+        let mut c_off = 0;
+        for (k, child) in self.children.iter().enumerate() {
+            let cl = child.cache_len(bsz);
+            let ck = &mut cache[c_off..c_off + cl];
+            c_off += cl;
+            let th = self.theta_slice(theta, k);
+            let din = bsz * child.in_dim();
+            let dout = bsz * child.out_dim();
+            if k == 0 {
+                child.forward(bsz, t, th, x, &mut nxt[..dout], ck);
+            } else if k + 1 == k_n {
+                child.forward(bsz, t, th, &cur[..din], y, ck);
+                return;
+            } else {
+                child.forward(bsz, t, th, &cur[..din], &mut nxt[..dout], ck);
+            }
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+    }
+
+    fn vjp(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        v: &[f32],
+        gx: &mut [f32],
+        mut grad_theta: Option<&mut [f32]>,
+        cache: &[f32],
+    ) {
+        let k_n = self.children.len();
+        if k_n == 1 {
+            self.children[0].vjp(bsz, t, self.theta_slice(theta, 0), v, gx, grad_theta, cache);
+            return;
+        }
+        let mut s = self.scratch.borrow_mut();
+        s.ensure_work(bsz * self.max_width);
+        let s = &mut *s;
+        let (mut cur, mut nxt) = (&mut s.buf_a[..], &mut s.buf_b[..]);
+        let mut c_end = self.cache_len(bsz);
+        for k in (0..k_n).rev() {
+            let child = &self.children[k];
+            let cl = child.cache_len(bsz);
+            let ck = &cache[c_end - cl..c_end];
+            c_end -= cl;
+            let th = self.theta_slice(theta, k);
+            let gt = grad_theta
+                .as_deref_mut()
+                .map(|g| &mut g[self.theta_off[k]..self.theta_off[k + 1]]);
+            let din = bsz * child.in_dim();
+            let dout = bsz * child.out_dim();
+            let vin: &[f32] = if k + 1 == k_n { v } else { &cur[..dout] };
+            if k == 0 {
+                child.vjp(bsz, t, th, vin, gx, gt, ck);
+            } else {
+                child.vjp(bsz, t, th, vin, &mut nxt[..din], gt, ck);
+                std::mem::swap(&mut cur, &mut nxt);
+            }
+        }
+    }
+
+    fn jvp(&self, bsz: usize, t: f64, theta: &[f32], dx: &[f32], dy: &mut [f32], cache: &[f32]) {
+        let k_n = self.children.len();
+        if k_n == 1 {
+            self.children[0].jvp(bsz, t, self.theta_slice(theta, 0), dx, dy, cache);
+            return;
+        }
+        let mut s = self.scratch.borrow_mut();
+        s.ensure_work(bsz * self.max_width);
+        let s = &mut *s;
+        let (mut cur, mut nxt) = (&mut s.buf_a[..], &mut s.buf_b[..]);
+        let mut c_off = 0;
+        for (k, child) in self.children.iter().enumerate() {
+            let cl = child.cache_len(bsz);
+            let ck = &cache[c_off..c_off + cl];
+            c_off += cl;
+            let th = self.theta_slice(theta, k);
+            let din = bsz * child.in_dim();
+            let dout = bsz * child.out_dim();
+            if k == 0 {
+                child.jvp(bsz, t, th, dx, &mut nxt[..dout], ck);
+            } else if k + 1 == k_n {
+                child.jvp(bsz, t, th, &cur[..din], dy, ck);
+                return;
+            } else {
+                child.jvp(bsz, t, th, &cur[..din], &mut nxt[..dout], ck);
+            }
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+    }
+
+    fn sovjp(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        x: &[f32],
+        w: &[f32],
+        u: &[f32],
+        gx: &mut [f32],
+        mut grad_theta: Option<&mut [f32]>,
+        cache: &mut [f32],
+    ) {
+        let k_n = self.children.len();
+        if k_n == 1 {
+            self.children[0]
+                .sovjp(bsz, t, self.theta_slice(theta, 0), x, w, u, gx, grad_theta, cache);
+            return;
+        }
+        let mut s = self.scratch.borrow_mut();
+        let s = &mut *s;
+        let bounds_total = self.boundary_offsets(bsz, &mut s.b_off);
+        s.ensure_sovjp(bsz * self.max_width, bounds_total);
+        let SeqScratch { bounds, tans, c_a, c_b, acc_a, acc_b, g_tmp, b_off, .. } = s;
+
+        // 1. forward sweep: boundaries b_k (children write their caches)
+        bounds[b_off[0]..b_off[1]].copy_from_slice(x);
+        let mut c_off = 0;
+        for (k, child) in self.children.iter().enumerate() {
+            let cl = child.cache_len(bsz);
+            let th = self.theta_slice(theta, k);
+            let (head, tail) = bounds.split_at_mut(b_off[k + 1]);
+            let out_len = b_off[k + 2] - b_off[k + 1];
+            child.forward(
+                bsz,
+                t,
+                th,
+                &head[b_off[k]..],
+                &mut tail[..out_len],
+                &mut cache[c_off..c_off + cl],
+            );
+            c_off += cl;
+        }
+
+        // 2. tangent sweep: w_k = J_{k-1} w_{k-1}
+        tans[b_off[0]..b_off[1]].copy_from_slice(w);
+        let mut c_off = 0;
+        for (k, child) in self.children.iter().enumerate() {
+            let cl = child.cache_len(bsz);
+            let th = self.theta_slice(theta, k);
+            let (head, tail) = tans.split_at_mut(b_off[k + 1]);
+            let out_len = b_off[k + 2] - b_off[k + 1];
+            let ck = &cache[c_off..c_off + cl];
+            child.jvp(bsz, t, th, &head[b_off[k]..], &mut tail[..out_len], ck);
+            c_off += cl;
+        }
+
+        // 3. reverse sweep: direct sovjp terms + first-order pullbacks
+        let u_len = bsz * self.out_dim();
+        c_a[..u_len].copy_from_slice(u);
+        acc_a[..u_len].fill(0.0);
+        let (mut c_cur, mut c_nxt) = (&mut c_a[..], &mut c_b[..]);
+        let (mut a_cur, mut a_nxt) = (&mut acc_a[..], &mut acc_b[..]);
+        let mut c_end = self.cache_len(bsz);
+        for k in (0..k_n).rev() {
+            let child = &self.children[k];
+            let cl = child.cache_len(bsz);
+            let c_lo = c_end - cl;
+            c_end = c_lo;
+            let th = self.theta_slice(theta, k);
+            let din = bsz * child.in_dim();
+            let dout = bsz * child.out_dim();
+            let bk = &bounds[b_off[k]..b_off[k] + din];
+            let wk = &tans[b_off[k]..b_off[k] + din];
+            // direct term: ∇_{b_k}⟨c_{k+1}, J_k w_k⟩ (+ its θ grads)
+            let gt = grad_theta
+                .as_deref_mut()
+                .map(|g| &mut g[self.theta_off[k]..self.theta_off[k + 1]]);
+            child.sovjp(
+                bsz,
+                t,
+                th,
+                bk,
+                wk,
+                &c_cur[..dout],
+                &mut g_tmp[..din],
+                gt,
+                &mut cache[c_lo..c_lo + cl],
+            );
+            // pull the accumulated cotangent back through J_kᵀ, collecting
+            // this child's θ grads of the pullback
+            let gt = grad_theta
+                .as_deref_mut()
+                .map(|g| &mut g[self.theta_off[k]..self.theta_off[k + 1]]);
+            child.vjp(bsz, t, th, &a_cur[..dout], &mut a_nxt[..din], gt, &cache[c_lo..c_lo + cl]);
+            for i in 0..din {
+                a_nxt[i] += g_tmp[i];
+            }
+            std::mem::swap(&mut a_cur, &mut a_nxt);
+            // cotangent chain for the next (earlier) child
+            if k > 0 {
+                let ck = &cache[c_lo..c_lo + cl];
+                child.vjp(bsz, t, th, &c_cur[..dout], &mut c_nxt[..din], None, ck);
+                std::mem::swap(&mut c_cur, &mut c_nxt);
+            }
+        }
+        gx[..bsz * self.in_dim()].copy_from_slice(&a_cur[..bsz * self.in_dim()]);
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
+    }
+}

@@ -1,0 +1,442 @@
+//! Time-conditioned modules — what the paper's CNF experiments (§5.2)
+//! need that a time-independent MLP cannot express.
+//!
+//! * [`ConcatTime`]: appends the scalar `t` as one extra input channel
+//!   per sample and runs an inner module over `[x, t]` — arithmetic
+//!   identical to the legacy `MlpRhs { time_dep: true }` augment/strip
+//!   path (`model.py::_augment_time` on the Python side).
+//! * [`ConcatSquash`]: the FFJORD concatsquash layer
+//!   `y = (x W + b) ⊙ σ(t·w_g + b_g) + t·w_s` — a dense layer whose gate
+//!   and shift are hypernetworks in `t`.  θ layout:
+//!   `[W (din·dout) | b | w_g | b_g | w_s]` (each tail block `dout`).
+
+use std::cell::RefCell;
+
+use crate::nn::Act;
+use crate::nn::module::Module;
+use crate::tensor::gemm::{sgemm, sgemm_at, sgemm_bt};
+
+// ---------------------------------------------------------------------------
+// ConcatTime
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, Default)]
+struct TimeScratch {
+    /// augmented input `[x | t]` rows
+    xt: Vec<f32>,
+    /// augmented cotangent/tangent rows
+    pad: Vec<f32>,
+    /// augmented second-order gradient rows
+    gpad: Vec<f32>,
+}
+
+pub struct ConcatTime {
+    d: usize,
+    inner: Box<dyn Module>,
+    scratch: RefCell<TimeScratch>,
+}
+
+impl Clone for ConcatTime {
+    fn clone(&self) -> Self {
+        ConcatTime { d: self.d, inner: self.inner.clone(), scratch: RefCell::default() }
+    }
+}
+
+impl std::fmt::Debug for ConcatTime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ConcatTime").field("d", &self.d).finish()
+    }
+}
+
+impl ConcatTime {
+    /// Wrap `inner` (which must take `d + 1` input channels).
+    pub fn new(d: usize, inner: Box<dyn Module>) -> Self {
+        assert_eq!(inner.in_dim(), d + 1, "ConcatTime inner must take d+1 channels");
+        ConcatTime { d, inner, scratch: RefCell::default() }
+    }
+
+    fn ensure(&self, bsz: usize) {
+        let n = bsz * (self.d + 1);
+        let mut s = self.scratch.borrow_mut();
+        if s.xt.len() < n {
+            s.xt.resize(n, 0.0);
+            s.pad.resize(n, 0.0);
+            s.gpad.resize(n, 0.0);
+        }
+    }
+
+    /// Build `[x_r, t]` rows into `xt` (the legacy augment loop).
+    fn augment(&self, bsz: usize, t: f64, x: &[f32], xt: &mut [f32]) {
+        let d = self.d;
+        for r in 0..bsz {
+            xt[r * (d + 1)..r * (d + 1) + d].copy_from_slice(&x[r * d..(r + 1) * d]);
+            xt[r * (d + 1) + d] = t as f32;
+        }
+    }
+
+    /// Drop the `t` column of an augmented per-row gradient.
+    fn strip(&self, bsz: usize, gpad: &[f32], out: &mut [f32]) {
+        let d = self.d;
+        for r in 0..bsz {
+            out[r * d..(r + 1) * d].copy_from_slice(&gpad[r * (d + 1)..r * (d + 1) + d]);
+        }
+    }
+
+    /// Zero-pad a per-row tangent with a zero `t` column.
+    fn pad_tangent(&self, bsz: usize, w: &[f32], pad: &mut [f32]) {
+        let d = self.d;
+        pad[..bsz * (d + 1)].fill(0.0);
+        for r in 0..bsz {
+            pad[r * (d + 1)..r * (d + 1) + d].copy_from_slice(&w[r * d..(r + 1) * d]);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+impl Module for ConcatTime {
+    fn in_dim(&self) -> usize {
+        self.d
+    }
+
+    fn out_dim(&self) -> usize {
+        self.inner.out_dim()
+    }
+
+    fn param_len(&self) -> usize {
+        self.inner.param_len()
+    }
+
+    fn cache_len(&self, bsz: usize) -> usize {
+        self.inner.cache_len(bsz)
+    }
+
+    fn max_width(&self) -> usize {
+        self.inner.max_width().max(self.d)
+    }
+
+    fn forward(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        x: &[f32],
+        y: &mut [f32],
+        cache: &mut [f32],
+    ) {
+        self.ensure(bsz);
+        let mut s = self.scratch.borrow_mut();
+        let s = &mut *s;
+        self.augment(bsz, t, x, &mut s.xt);
+        self.inner.forward(bsz, t, theta, &s.xt[..bsz * (self.d + 1)], y, cache);
+    }
+
+    fn vjp(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        v: &[f32],
+        gx: &mut [f32],
+        grad_theta: Option<&mut [f32]>,
+        cache: &[f32],
+    ) {
+        self.ensure(bsz);
+        let mut s = self.scratch.borrow_mut();
+        let s = &mut *s;
+        self.inner.vjp(bsz, t, theta, v, &mut s.pad[..bsz * (self.d + 1)], grad_theta, cache);
+        self.strip(bsz, &s.pad, gx);
+    }
+
+    fn jvp(&self, bsz: usize, t: f64, theta: &[f32], dx: &[f32], dy: &mut [f32], cache: &[f32]) {
+        self.ensure(bsz);
+        let mut s = self.scratch.borrow_mut();
+        let s = &mut *s;
+        // the tangent of the appended t column is 0: state motion leaves t fixed
+        self.pad_tangent(bsz, dx, &mut s.pad);
+        self.inner.jvp(bsz, t, theta, &s.pad[..bsz * (self.d + 1)], dy, cache);
+    }
+
+    fn sovjp(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        x: &[f32],
+        w: &[f32],
+        u: &[f32],
+        gx: &mut [f32],
+        grad_theta: Option<&mut [f32]>,
+        cache: &mut [f32],
+    ) {
+        self.ensure(bsz);
+        let mut s = self.scratch.borrow_mut();
+        let s = &mut *s;
+        self.augment(bsz, t, x, &mut s.xt);
+        self.pad_tangent(bsz, w, &mut s.pad);
+        let n_pad = bsz * (self.d + 1);
+        self.inner.sovjp(
+            bsz,
+            t,
+            theta,
+            &s.xt[..n_pad],
+            &s.pad[..n_pad],
+            u,
+            &mut s.gpad[..n_pad],
+            grad_theta,
+            cache,
+        );
+        self.strip(bsz, &s.gpad, gx);
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ConcatSquash
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, Default)]
+struct SquashScratch {
+    /// per-channel gate σ(t·w_g + b_g)
+    gate: Vec<f32>,
+    /// [B, dout] work buffer (gated cotangent / tangent image)
+    buf: Vec<f32>,
+    /// second [B, dout] work buffer for the second-order pass
+    buf2: Vec<f32>,
+}
+
+pub struct ConcatSquash {
+    din: usize,
+    dout: usize,
+    scratch: RefCell<SquashScratch>,
+}
+
+impl Clone for ConcatSquash {
+    fn clone(&self) -> Self {
+        ConcatSquash { din: self.din, dout: self.dout, scratch: RefCell::default() }
+    }
+}
+
+impl std::fmt::Debug for ConcatSquash {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ConcatSquash").field("din", &self.din).field("dout", &self.dout).finish()
+    }
+}
+
+impl ConcatSquash {
+    pub fn new(din: usize, dout: usize) -> Self {
+        assert!(din > 0 && dout > 0, "concatsquash dims must be nonzero ({din}x{dout})");
+        ConcatSquash { din, dout, scratch: RefCell::default() }
+    }
+
+    /// θ = [W | b | w_g | b_g | w_s].
+    #[allow(clippy::type_complexity)]
+    fn split<'a>(
+        &self,
+        theta: &'a [f32],
+    ) -> (&'a [f32], &'a [f32], &'a [f32], &'a [f32], &'a [f32]) {
+        debug_assert_eq!(theta.len(), self.param_len());
+        let (w, rest) = theta.split_at(self.din * self.dout);
+        let (b, rest) = rest.split_at(self.dout);
+        let (wg, rest) = rest.split_at(self.dout);
+        let (bg, ws) = rest.split_at(self.dout);
+        (w, b, wg, bg, ws)
+    }
+
+    fn ensure(&self, bsz: usize) {
+        let mut s = self.scratch.borrow_mut();
+        if s.gate.len() < self.dout {
+            s.gate.resize(self.dout, 0.0);
+        }
+        if s.buf.len() < bsz * self.dout {
+            s.buf.resize(bsz * self.dout, 0.0);
+            s.buf2.resize(bsz * self.dout, 0.0);
+        }
+    }
+
+    fn gates(&self, t: f64, wg: &[f32], bg: &[f32], gate: &mut [f32]) {
+        let tt = t as f32;
+        for j in 0..self.dout {
+            gate[j] = Act::Sigmoid.apply(tt * wg[j] + bg[j]);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+impl Module for ConcatSquash {
+    fn in_dim(&self) -> usize {
+        self.din
+    }
+
+    fn out_dim(&self) -> usize {
+        self.dout
+    }
+
+    fn param_len(&self) -> usize {
+        self.din * self.dout + 4 * self.dout
+    }
+
+    fn cache_len(&self, bsz: usize) -> usize {
+        // input x (for gW) + the pre-gate linear map (for gate-parameter grads)
+        bsz * (self.din + self.dout)
+    }
+
+    fn max_width(&self) -> usize {
+        self.din.max(self.dout)
+    }
+
+    fn forward(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        x: &[f32],
+        y: &mut [f32],
+        cache: &mut [f32],
+    ) {
+        let (w, b, wg, bg, ws) = self.split(theta);
+        self.ensure(bsz);
+        let mut s = self.scratch.borrow_mut();
+        let s = &mut *s;
+        let (cx, clin) = cache.split_at_mut(bsz * self.din);
+        cx.copy_from_slice(x);
+        let lin = &mut clin[..bsz * self.dout];
+        sgemm(bsz, self.din, self.dout, x, w, lin, 0.0);
+        for row in 0..bsz {
+            for j in 0..self.dout {
+                lin[row * self.dout + j] += b[j];
+            }
+        }
+        self.gates(t, wg, bg, &mut s.gate);
+        let tt = t as f32;
+        for row in 0..bsz {
+            for j in 0..self.dout {
+                y[row * self.dout + j] = lin[row * self.dout + j] * s.gate[j] + tt * ws[j];
+            }
+        }
+    }
+
+    fn vjp(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        v: &[f32],
+        gx: &mut [f32],
+        grad_theta: Option<&mut [f32]>,
+        cache: &[f32],
+    ) {
+        let (w, _b, wg, bg, _ws) = self.split(theta);
+        self.ensure(bsz);
+        let mut s = self.scratch.borrow_mut();
+        let s = &mut *s;
+        self.gates(t, wg, bg, &mut s.gate);
+        let (cx, clin) = cache.split_at(bsz * self.din);
+        let lin = &clin[..bsz * self.dout];
+        // vg = v ⊙ gate (broadcast over rows)
+        let vg = &mut s.buf[..bsz * self.dout];
+        for row in 0..bsz {
+            for j in 0..self.dout {
+                vg[row * self.dout + j] = v[row * self.dout + j] * s.gate[j];
+            }
+        }
+        if let Some(gt) = grad_theta {
+            let tt = t as f32;
+            let (gw, rest) = gt.split_at_mut(self.din * self.dout);
+            let (gb, rest) = rest.split_at_mut(self.dout);
+            let (gwg, rest) = rest.split_at_mut(self.dout);
+            let (gbg, gws) = rest.split_at_mut(self.dout);
+            sgemm_at(self.din, bsz, self.dout, cx, vg, gw, 1.0);
+            for row in 0..bsz {
+                for j in 0..self.dout {
+                    gb[j] += vg[row * self.dout + j];
+                }
+            }
+            for j in 0..self.dout {
+                // s_j = Σ_r v[r,j]·lin[r,j] drives the gate-parameter grads
+                let mut sj = 0.0f32;
+                let mut vsum = 0.0f32;
+                for row in 0..bsz {
+                    sj += v[row * self.dout + j] * lin[row * self.dout + j];
+                    vsum += v[row * self.dout + j];
+                }
+                let gp = s.gate[j] * (1.0 - s.gate[j]);
+                gwg[j] += sj * gp * tt;
+                gbg[j] += sj * gp;
+                gws[j] += tt * vsum;
+            }
+        }
+        sgemm_bt(bsz, self.dout, self.din, vg, w, gx, 0.0);
+    }
+
+    fn jvp(&self, bsz: usize, t: f64, theta: &[f32], dx: &[f32], dy: &mut [f32], _cache: &[f32]) {
+        let (w, _b, wg, bg, _ws) = self.split(theta);
+        self.ensure(bsz);
+        let mut s = self.scratch.borrow_mut();
+        let s = &mut *s;
+        self.gates(t, wg, bg, &mut s.gate);
+        let lin_d = &mut s.buf[..bsz * self.dout];
+        sgemm(bsz, self.din, self.dout, dx, w, lin_d, 0.0);
+        for row in 0..bsz {
+            for j in 0..self.dout {
+                dy[row * self.dout + j] = lin_d[row * self.dout + j] * s.gate[j];
+            }
+        }
+    }
+
+    fn sovjp(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        _x: &[f32],
+        w_tan: &[f32],
+        u: &[f32],
+        gx: &mut [f32],
+        grad_theta: Option<&mut [f32]>,
+        _cache: &mut [f32],
+    ) {
+        // J_x = diag(gate) ∘ W is x-independent: ∇_x ⟨u, Jw⟩ = 0.
+        let (w, _b, wg, bg, _ws) = self.split(theta);
+        gx[..bsz * self.din].fill(0.0);
+        let Some(gt) = grad_theta else { return };
+        self.ensure(bsz);
+        let mut s = self.scratch.borrow_mut();
+        let s = &mut *s;
+        self.gates(t, wg, bg, &mut s.gate);
+        let tt = t as f32;
+        // linw = w_tan W (the tangent image before gating)
+        let linw = &mut s.buf[..bsz * self.dout];
+        sgemm(bsz, self.din, self.dout, w_tan, w, linw, 0.0);
+        // ug = u ⊙ gate
+        let ug = &mut s.buf2[..bsz * self.dout];
+        for row in 0..bsz {
+            for j in 0..self.dout {
+                ug[row * self.dout + j] = u[row * self.dout + j] * s.gate[j];
+            }
+        }
+        let (gw, rest) = gt.split_at_mut(self.din * self.dout);
+        let (_gb, rest) = rest.split_at_mut(self.dout);
+        let (gwg, rest) = rest.split_at_mut(self.dout);
+        let (gbg, _gws) = rest.split_at_mut(self.dout);
+        // ⟨u, (wW)⊙g⟩: ∇W_ij = Σ_r w[r,i]·u[r,j]·g_j
+        sgemm_at(self.din, bsz, self.dout, w_tan, ug, gw, 1.0);
+        // gate-parameter grads through g'_j = g_j(1−g_j)
+        for j in 0..self.dout {
+            let mut sj = 0.0f32;
+            for row in 0..bsz {
+                sj += u[row * self.dout + j] * linw[row * self.dout + j];
+            }
+            let gp = s.gate[j] * (1.0 - s.gate[j]);
+            gwg[j] += sj * gp * tt;
+            gbg[j] += sj * gp;
+            // b and w_s drop out of J entirely
+        }
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Module> {
+        Box::new(self.clone())
+    }
+}

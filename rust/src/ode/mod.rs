@@ -7,6 +7,7 @@ pub mod adaptive;
 pub mod erk;
 pub mod grid;
 pub mod implicit;
+pub mod module_rhs;
 pub mod rhs;
 pub mod rhs_xla;
 pub mod tableau;
@@ -15,6 +16,7 @@ pub use adaptive::{AdaptiveController, AdaptiveResult};
 pub use erk::{erk_step, ErkWorkspace};
 pub use grid::{integrate_erk_over, uniform_steps, GridRun, TimeGrid};
 pub use implicit::{ImplicitStepper, ThetaScheme};
-pub use rhs::{LinearRhs, MlpRhs, Nfe, OdeRhs, RobertsonRhs};
+pub use module_rhs::ModuleRhs;
+pub use rhs::{LinearRhs, Nfe, OdeRhs, RobertsonRhs};
 pub use rhs_xla::{XlaCnfRhs, XlaRhs};
 pub use tableau::{Scheme, Tableau};

@@ -1,0 +1,383 @@
+//! `ModuleRhs` — the neural ODE right-hand side over a composable module
+//! graph (the successor of the old hard-wired `MlpRhs`).
+//!
+//! The RHS owns a [`Module`] graph built from an [`ArchSpec`] plus the
+//! flat parameter vector, and implements the full [`OdeRhs`] contract:
+//! time-conditioning stays *inside* the graph ([`ConcatTime`] /
+//! [`ConcatSquash`] read `t` directly), so the state dimension equals the
+//! module's in/out dimension and no augment/strip plumbing leaks out.
+//!
+//! Row sharding ([`OdeRhs::make_shard`]) rebuilds the same architecture
+//! at the shard's row count from the stored spec: every provided module
+//! is row-independent (per-sample loops + per-row GEMMs), so a shard
+//! reproduces its rows of the full-batch run bitwise — the contract the
+//! data-parallel execution engine (`crate::exec`) relies on.
+//!
+//! [`ArchSpec`]: crate::nn::module::ArchSpec
+//! [`ConcatTime`]: crate::nn::module::ConcatTime
+//! [`ConcatSquash`]: crate::nn::module::ConcatSquash
+
+use std::cell::RefCell;
+
+use crate::nn::Act;
+use crate::nn::module::{ArchSpec, Module};
+use crate::ode::rhs::{Nfe, NfeCounter, OdeRhs};
+
+#[derive(Clone, Debug, Default)]
+struct RhsScratch {
+    /// module forward-cache arena
+    cache: Vec<f32>,
+    /// staging for forward outputs the caller does not want
+    y: Vec<f32>,
+}
+
+/// Neural RHS backed by a module graph; construct via
+/// [`ModuleRhs::from_arch`] (or the [`ModuleRhs::mlp`] shorthand for the
+/// legacy flat-MLP layout).
+pub struct ModuleRhs {
+    module: Box<dyn Module>,
+    /// the spec that built `module` — shards rebuild from it
+    arch: ArchSpec,
+    /// data channels per sample before any augmentation
+    data_dim: usize,
+    batch: usize,
+    state_dim: usize,
+    theta: Vec<f32>,
+    nfe: NfeCounter,
+    scratch: RefCell<RhsScratch>,
+}
+
+impl ModuleRhs {
+    /// Instantiate `arch` at `data_dim` over `batch` rows with parameters
+    /// `theta` (layout: the arch's flat layout, see [`ArchSpec::init`]).
+    pub fn from_arch(arch: &ArchSpec, data_dim: usize, batch: usize, theta: Vec<f32>) -> Self {
+        arch.validate().unwrap_or_else(|e| panic!("invalid arch {:?}: {e}", arch.name()));
+        assert!(batch > 0, "ModuleRhs needs at least one batch row");
+        let module = arch.build(data_dim);
+        let state_dim = arch.state_dim(data_dim);
+        debug_assert_eq!(module.in_dim(), state_dim);
+        debug_assert_eq!(module.out_dim(), state_dim);
+        assert_eq!(
+            theta.len(),
+            module.param_len(),
+            "theta length mismatch for arch {}",
+            arch.name()
+        );
+        ModuleRhs {
+            module,
+            arch: arch.clone(),
+            data_dim,
+            batch,
+            state_dim,
+            theta,
+            nfe: NfeCounter::default(),
+            scratch: RefCell::default(),
+        }
+    }
+
+    /// The legacy flat-MLP constructor: `dims` are the layer widths of
+    /// the network *input included* (`[d(+1), hidden…, d]`), `time_dep`
+    /// appends `t` as an input column — exactly the old `MlpRhs::new`
+    /// signature, with the identical parameter layout, so existing θ
+    /// vectors (and RNG init streams) carry over unchanged.
+    pub fn mlp(dims: Vec<usize>, act: Act, time_dep: bool, batch: usize, theta: Vec<f32>) -> Self {
+        assert!(dims.len() >= 2, "an MLP RHS needs at least [in, out] dims (got {dims:?})");
+        let state_dim = *dims.last().unwrap();
+        let expect_in = if time_dep { state_dim + 1 } else { state_dim };
+        assert_eq!(dims[0], expect_in, "in dim mismatch for time_dep={time_dep}");
+        let hidden = dims[1..dims.len() - 1].to_vec();
+        let arch = if time_dep {
+            ArchSpec::ConcatMlp { hidden, act }
+        } else {
+            ArchSpec::Mlp { hidden, act }
+        };
+        ModuleRhs::from_arch(&arch, state_dim, batch, theta)
+    }
+
+    /// The architecture this RHS executes.
+    pub fn arch(&self) -> &ArchSpec {
+        &self.arch
+    }
+
+    /// State channels per sample (after any augmentation).
+    pub fn state_dim(&self) -> usize {
+        self.state_dim
+    }
+
+    /// Batch rows.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// The underlying module graph.
+    pub fn module(&self) -> &dyn Module {
+        self.module.as_ref()
+    }
+
+    fn ensure_scratch(&self) {
+        let mut s = self.scratch.borrow_mut();
+        let cl = self.module.cache_len(self.batch);
+        if s.cache.len() < cl {
+            s.cache.resize(cl, 0.0);
+        }
+        let n = self.batch * self.state_dim;
+        if s.y.len() < n {
+            s.y.resize(n, 0.0);
+        }
+    }
+}
+
+impl OdeRhs for ModuleRhs {
+    fn state_len(&self) -> usize {
+        self.batch * self.state_dim
+    }
+
+    fn param_len(&self) -> usize {
+        self.theta.len()
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.theta
+    }
+
+    fn set_params(&mut self, theta: &[f32]) {
+        assert_eq!(theta.len(), self.theta.len());
+        self.theta.copy_from_slice(theta);
+    }
+
+    fn f(&self, t: f64, u: &[f32], out: &mut [f32]) {
+        self.nfe.hit_forward();
+        self.ensure_scratch();
+        let mut s = self.scratch.borrow_mut();
+        self.module.forward(self.batch, t, &self.theta, u, out, &mut s.cache);
+    }
+
+    fn vjp_u(&self, t: f64, u: &[f32], v: &[f32], out: &mut [f32]) {
+        self.nfe.hit_backward();
+        self.ensure_scratch();
+        let mut s = self.scratch.borrow_mut();
+        let s = &mut *s;
+        let n = self.state_len();
+        self.module.forward(self.batch, t, &self.theta, u, &mut s.y[..n], &mut s.cache);
+        self.module.vjp(self.batch, t, &self.theta, v, out, None, &s.cache);
+    }
+
+    fn vjp_both(&self, t: f64, u: &[f32], v: &[f32], out_u: &mut [f32], grad_theta: &mut [f32]) {
+        self.nfe.hit_backward();
+        self.ensure_scratch();
+        let mut s = self.scratch.borrow_mut();
+        let s = &mut *s;
+        let n = self.state_len();
+        self.module.forward(self.batch, t, &self.theta, u, &mut s.y[..n], &mut s.cache);
+        self.module.vjp(self.batch, t, &self.theta, v, out_u, Some(grad_theta), &s.cache);
+    }
+
+    fn jvp(&self, t: f64, u: &[f32], w: &[f32], out: &mut [f32]) {
+        self.nfe.hit_forward();
+        self.ensure_scratch();
+        let mut s = self.scratch.borrow_mut();
+        let s = &mut *s;
+        let n = self.state_len();
+        self.module.forward(self.batch, t, &self.theta, u, &mut s.y[..n], &mut s.cache);
+        self.module.jvp(self.batch, t, &self.theta, w, out, &s.cache);
+    }
+
+    fn nfe(&self) -> Nfe {
+        self.nfe.get()
+    }
+
+    fn reset_nfe(&self) {
+        self.nfe.reset();
+    }
+
+    fn activation_bytes_per_eval(&self) -> u64 {
+        // summed per-module accounting (what Table 2 consumes)
+        self.module.activation_bytes(self.batch)
+    }
+
+    fn batch_rows(&self) -> usize {
+        self.batch
+    }
+
+    fn make_shard(&self, rows: usize) -> Option<Box<dyn OdeRhs + Send>> {
+        if rows == 0 {
+            return None;
+        }
+        // every provided module is row-independent (per-sample loops and
+        // per-row GEMM arithmetic), so a shard reproduces its rows of the
+        // full-batch run bitwise
+        Some(Box::new(ModuleRhs::from_arch(
+            &self.arch,
+            self.data_dim,
+            rows,
+            self.theta.clone(),
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::rhs::LinearRhs;
+    use crate::testing::prop;
+    use crate::util::rng::Rng;
+
+    fn mk_mlp(seed: u64) -> ModuleRhs {
+        let dims = vec![5, 8, 4];
+        let mut rng = Rng::new(seed);
+        let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+        ModuleRhs::mlp(dims, Act::Tanh, true, 3, theta)
+    }
+
+    fn arch_roster() -> Vec<ArchSpec> {
+        vec![
+            ArchSpec::Mlp { hidden: vec![7], act: Act::Tanh },
+            ArchSpec::ConcatMlp { hidden: vec![6], act: Act::Gelu },
+            ArchSpec::ConcatSquashMlp { hidden: vec![6, 5], act: Act::Tanh },
+            ArchSpec::Residual(Box::new(ArchSpec::ConcatMlp { hidden: vec![5], act: Act::Tanh })),
+            ArchSpec::Augment {
+                extra: 2,
+                inner: Box::new(ArchSpec::Mlp { hidden: vec![6], act: Act::Sigmoid }),
+            },
+        ]
+    }
+
+    #[test]
+    fn mlp_rhs_duality_and_nfe() {
+        prop::check("module-rhs-duality", 11, 10, |rng| {
+            let rhs = mk_mlp(rng.next_u64());
+            let n = rhs.state_len();
+            let u = prop::vec_normal(rng, n);
+            let w = prop::vec_normal(rng, n);
+            let v = prop::vec_normal(rng, n);
+            let mut jw = vec![0.0f32; n];
+            rhs.jvp(0.3, &u, &w, &mut jw);
+            let mut jtv = vec![0.0f32; n];
+            rhs.vjp_u(0.3, &u, &v, &mut jtv);
+            let lhs = crate::tensor::dot(&v, &jw);
+            let rhsv = crate::tensor::dot(&jtv, &w);
+            if (lhs - rhsv).abs() > 1e-4 * (1.0 + lhs.abs()) {
+                return Err(format!("duality broken: {lhs} vs {rhsv}"));
+            }
+            Ok(())
+        });
+        let rhs = mk_mlp(1);
+        rhs.reset_nfe();
+        let u = vec![0.1f32; rhs.state_len()];
+        let mut out = vec![0.0f32; rhs.state_len()];
+        rhs.f(0.0, &u, &mut out);
+        rhs.f(0.1, &u, &mut out);
+        rhs.vjp_u(0.0, &u, &out.clone(), &mut out);
+        assert_eq!(rhs.nfe(), Nfe { forward: 2, backward: 1 });
+    }
+
+    #[test]
+    fn every_arch_satisfies_rhs_duality() {
+        for arch in arch_roster() {
+            prop::check(&format!("arch-rhs-duality-{}", arch.name()), 17, 5, |rng| {
+                let theta = {
+                    let mut t = prop::vec_normal(rng, arch.param_count(3));
+                    for v in t.iter_mut() {
+                        *v *= 0.5;
+                    }
+                    t
+                };
+                let rhs = ModuleRhs::from_arch(&arch, 3, 2, theta);
+                let n = rhs.state_len();
+                let u = prop::vec_normal(rng, n);
+                let w = prop::vec_normal(rng, n);
+                let v = prop::vec_normal(rng, n);
+                let mut jw = vec![0.0f32; n];
+                rhs.jvp(0.4, &u, &w, &mut jw);
+                let mut jtv = vec![0.0f32; n];
+                rhs.vjp_u(0.4, &u, &v, &mut jtv);
+                let lhs = crate::tensor::dot(&v, &jw);
+                let rhsv = crate::tensor::dot(&jtv, &w);
+                if (lhs - rhsv).abs() > 1e-4 * (1.0 + lhs.abs()) {
+                    return Err(format!("duality broken: {lhs} vs {rhsv}"));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn shards_reproduce_full_batch_rows_bitwise() {
+        let rhs = mk_mlp(21); // batch 3, state_dim 4
+        let d = rhs.state_dim();
+        let b = rhs.batch_rows();
+        assert_eq!(b, 3);
+        let mut rng = Rng::new(22);
+        let u = prop::vec_normal(&mut rng, rhs.state_len());
+        let v = prop::vec_normal(&mut rng, rhs.state_len());
+        let mut full_f = vec![0.0f32; rhs.state_len()];
+        rhs.f(0.4, &u, &mut full_f);
+        let mut full_vjp = vec![0.0f32; rhs.state_len()];
+        rhs.vjp_u(0.4, &u, &v, &mut full_vjp);
+
+        // single-row shards
+        let one = rhs.make_shard(1).expect("ModuleRhs is shardable");
+        assert_eq!(one.batch_rows(), 1);
+        assert_eq!(one.param_len(), rhs.param_len());
+        for r in 0..b {
+            let mut out = vec![0.0f32; d];
+            one.f(0.4, &u[r * d..(r + 1) * d], &mut out);
+            assert_eq!(out, &full_f[r * d..(r + 1) * d], "f row {r} bitwise");
+            let mut gv = vec![0.0f32; d];
+            one.vjp_u(0.4, &u[r * d..(r + 1) * d], &v[r * d..(r + 1) * d], &mut gv);
+            assert_eq!(gv, &full_vjp[r * d..(r + 1) * d], "vjp row {r} bitwise");
+        }
+        // a two-row shard over rows 0..2
+        let two = rhs.make_shard(2).expect("shardable");
+        let mut out = vec![0.0f32; 2 * d];
+        two.f(0.4, &u[..2 * d], &mut out);
+        assert_eq!(out, &full_f[..2 * d], "two-row shard bitwise");
+        assert!(rhs.make_shard(0).is_none());
+        // non-batched RHSs opt out
+        assert!(LinearRhs::new(2, vec![0.0; 4]).make_shard(1).is_none());
+    }
+
+    #[test]
+    fn concatsquash_shards_are_bitwise_too() {
+        // the time-conditioned architecture the CNF task runs must hold
+        // the same shard contract as the dense MLP
+        let arch = ArchSpec::ConcatSquashMlp { hidden: vec![6], act: Act::Tanh };
+        let mut rng = Rng::new(31);
+        let theta = arch.init(&mut rng, 3);
+        let rhs = ModuleRhs::from_arch(&arch, 3, 4, theta);
+        let d = rhs.state_dim();
+        let u = prop::vec_normal(&mut rng, rhs.state_len());
+        let mut full = vec![0.0f32; rhs.state_len()];
+        rhs.f(0.7, &u, &mut full);
+        let one = rhs.make_shard(1).unwrap();
+        for r in 0..rhs.batch_rows() {
+            let mut out = vec![0.0f32; d];
+            one.f(0.7, &u[r * d..(r + 1) * d], &mut out);
+            assert_eq!(out, &full[r * d..(r + 1) * d], "row {r}");
+        }
+    }
+
+    #[test]
+    fn time_dependence_is_real() {
+        let rhs = mk_mlp(5);
+        let u = vec![0.3f32; rhs.state_len()];
+        let mut a = vec![0.0f32; rhs.state_len()];
+        let mut b = vec![0.0f32; rhs.state_len()];
+        rhs.f(0.0, &u, &mut a);
+        rhs.f(0.9, &u, &mut b);
+        assert!(crate::tensor::max_abs_diff(&a, &b) > 1e-6);
+    }
+
+    #[test]
+    fn augmented_arch_integrates_over_the_lifted_state() {
+        let arch = ArchSpec::Augment {
+            extra: 2,
+            inner: Box::new(ArchSpec::Mlp { hidden: vec![6], act: Act::Tanh }),
+        };
+        let mut rng = Rng::new(41);
+        let theta = arch.init(&mut rng, 3);
+        let rhs = ModuleRhs::from_arch(&arch, 3, 2, theta);
+        assert_eq!(rhs.state_dim(), 5, "3 data + 2 zero channels");
+        assert_eq!(rhs.state_len(), 10);
+    }
+}

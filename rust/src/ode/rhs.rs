@@ -6,14 +6,14 @@
 //!
 //! * [`crate::ode::rhs_xla::XlaRhs`] — the production path, executing the
 //!   AOT-compiled Pallas/JAX artifacts through PJRT,
-//! * [`MlpRhs`] — the pure-Rust mirror (XLA-free tests + cross-checks),
+//! * [`crate::ode::ModuleRhs`] — the pure-Rust composable-module mirror
+//!   (XLA-free tests + cross-checks), built from an
+//!   [`crate::nn::module::ArchSpec`],
 //! * [`LinearRhs`] — analytic `du/dt = A u` with exact Jacobians,
 //! * [`RobertsonRhs`] — the true stiff chemistry of Section 5.3, used to
 //!   generate ground-truth data and to exercise the implicit solvers.
 
 use std::cell::Cell;
-
-use crate::nn::{Act, Mlp};
 
 /// Forward/backward function-evaluation counters (NFE-F / NFE-B in the
 /// paper's tables).  Forward = `f` and `jvp`; backward = `vjp_*`.
@@ -279,167 +279,9 @@ impl OdeRhs for RobertsonRhs {
     }
 }
 
-// ---------------------------------------------------------------------------
-// MlpRhs: pure-Rust neural RHS (mirror of the XLA artifacts)
-// ---------------------------------------------------------------------------
-
-/// Neural RHS backed by the pure-Rust [`Mlp`].
-///
-/// If `time_dep`, the MLP input is `concat([u, t])` per sample (matching
-/// `model.py::_augment_time`); gradients wrt the appended `t` column are
-/// dropped.
-pub struct MlpRhs {
-    mlp: Mlp,
-    pub batch: usize,
-    pub state_dim: usize,
-    pub time_dep: bool,
-    nfe: NfeCounter,
-}
-
-impl MlpRhs {
-    pub fn new(dims: Vec<usize>, act: Act, time_dep: bool, batch: usize, theta: Vec<f32>) -> Self {
-        let state_dim = *dims.last().unwrap();
-        let expect_in = if time_dep { state_dim + 1 } else { state_dim };
-        assert_eq!(dims[0], expect_in, "in dim mismatch for time_dep={time_dep}");
-        MlpRhs {
-            mlp: Mlp::new(dims, act, theta),
-            batch,
-            state_dim,
-            time_dep,
-            nfe: NfeCounter::default(),
-        }
-    }
-
-    fn augment(&self, t: f64, u: &[f32]) -> Vec<f32> {
-        if !self.time_dep {
-            return u.to_vec();
-        }
-        let d = self.state_dim;
-        let mut x = vec![0.0f32; self.batch * (d + 1)];
-        for r in 0..self.batch {
-            x[r * (d + 1)..r * (d + 1) + d].copy_from_slice(&u[r * d..(r + 1) * d]);
-            x[r * (d + 1) + d] = t as f32;
-        }
-        x
-    }
-
-    fn strip(&self, gx: &[f32], out: &mut [f32]) {
-        if !self.time_dep {
-            out.copy_from_slice(gx);
-            return;
-        }
-        let d = self.state_dim;
-        for r in 0..self.batch {
-            out[r * d..(r + 1) * d].copy_from_slice(&gx[r * (d + 1)..r * (d + 1) + d]);
-        }
-    }
-}
-
-impl OdeRhs for MlpRhs {
-    fn state_len(&self) -> usize {
-        self.batch * self.state_dim
-    }
-
-    fn param_len(&self) -> usize {
-        self.mlp.params().len()
-    }
-
-    fn params(&self) -> &[f32] {
-        self.mlp.params()
-    }
-
-    fn set_params(&mut self, theta: &[f32]) {
-        self.mlp.set_params(theta);
-    }
-
-    fn f(&self, t: f64, u: &[f32], out: &mut [f32]) {
-        self.nfe.hit_forward();
-        let x = self.augment(t, u);
-        let mut y = Vec::new();
-        self.mlp.forward(self.batch, &x, &mut y);
-        out.copy_from_slice(&y);
-    }
-
-    fn vjp_u(&self, t: f64, u: &[f32], v: &[f32], out: &mut [f32]) {
-        self.nfe.hit_backward();
-        let x = self.augment(t, u);
-        let mut gx = Vec::new();
-        self.mlp.vjp(self.batch, &x, v, &mut gx, None);
-        self.strip(&gx, out);
-    }
-
-    fn vjp_both(&self, t: f64, u: &[f32], v: &[f32], out_u: &mut [f32], grad_theta: &mut [f32]) {
-        self.nfe.hit_backward();
-        let x = self.augment(t, u);
-        let mut gx = Vec::new();
-        self.mlp.vjp(self.batch, &x, v, &mut gx, Some(grad_theta));
-        self.strip(&gx, out_u);
-    }
-
-    fn jvp(&self, t: f64, u: &[f32], w: &[f32], out: &mut [f32]) {
-        self.nfe.hit_forward();
-        let x = self.augment(t, u);
-        // tangent of the augmented input: dt column is 0
-        let dx = if self.time_dep {
-            let d = self.state_dim;
-            let mut dx = vec![0.0f32; self.batch * (d + 1)];
-            for r in 0..self.batch {
-                dx[r * (d + 1)..r * (d + 1) + d].copy_from_slice(&w[r * d..(r + 1) * d]);
-            }
-            dx
-        } else {
-            w.to_vec()
-        };
-        let mut dy = Vec::new();
-        self.mlp.jvp(self.batch, &x, &dx, &mut dy);
-        out.copy_from_slice(&dy);
-    }
-
-    fn nfe(&self) -> Nfe {
-        self.nfe.get()
-    }
-
-    fn reset_nfe(&self) {
-        self.nfe.reset();
-    }
-
-    fn activation_bytes_per_eval(&self) -> u64 {
-        self.mlp.activation_bytes(self.batch)
-    }
-
-    fn batch_rows(&self) -> usize {
-        self.batch
-    }
-
-    fn make_shard(&self, rows: usize) -> Option<Box<dyn OdeRhs + Send>> {
-        if rows == 0 {
-            return None;
-        }
-        // per-row arithmetic is batch-size independent (each GEMM output
-        // row reads only its own input row), so a shard reproduces its
-        // rows of the full-batch run bitwise
-        Some(Box::new(MlpRhs::new(
-            self.mlp.dims.clone(),
-            self.mlp.act,
-            self.time_dep,
-            rows,
-            self.mlp.params().to_vec(),
-        )))
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::testing::prop;
-    use crate::util::rng::Rng;
-
-    fn mk_mlp(seed: u64) -> MlpRhs {
-        let dims = vec![5, 8, 4];
-        let mut rng = Rng::new(seed);
-        let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-        MlpRhs::new(dims, Act::Tanh, true, 3, theta)
-    }
 
     #[test]
     fn linear_rhs_exact() {
@@ -487,79 +329,4 @@ mod tests {
         }
     }
 
-    #[test]
-    fn mlp_rhs_duality_and_nfe() {
-        prop::check("mlp-rhs-duality", 11, 10, |rng| {
-            let rhs = mk_mlp(rng.next_u64());
-            let n = rhs.state_len();
-            let u = prop::vec_normal(rng, n);
-            let w = prop::vec_normal(rng, n);
-            let v = prop::vec_normal(rng, n);
-            let mut jw = vec![0.0f32; n];
-            rhs.jvp(0.3, &u, &w, &mut jw);
-            let mut jtv = vec![0.0f32; n];
-            rhs.vjp_u(0.3, &u, &v, &mut jtv);
-            let lhs = crate::tensor::dot(&v, &jw);
-            let rhsv = crate::tensor::dot(&jtv, &w);
-            if (lhs - rhsv).abs() > 1e-4 * (1.0 + lhs.abs()) {
-                return Err(format!("duality broken: {lhs} vs {rhsv}"));
-            }
-            Ok(())
-        });
-        let rhs = mk_mlp(1);
-        rhs.reset_nfe();
-        let u = vec![0.1f32; rhs.state_len()];
-        let mut out = vec![0.0f32; rhs.state_len()];
-        rhs.f(0.0, &u, &mut out);
-        rhs.f(0.1, &u, &mut out);
-        rhs.vjp_u(0.0, &u, &out.clone(), &mut out);
-        assert_eq!(rhs.nfe(), Nfe { forward: 2, backward: 1 });
-    }
-
-    #[test]
-    fn shards_reproduce_full_batch_rows_bitwise() {
-        let rhs = mk_mlp(21); // batch 3, state_dim 4
-        let d = rhs.state_dim;
-        let b = rhs.batch_rows();
-        assert_eq!(b, 3);
-        let mut rng = Rng::new(22);
-        let u = prop::vec_normal(&mut rng, rhs.state_len());
-        let v = prop::vec_normal(&mut rng, rhs.state_len());
-        let mut full_f = vec![0.0f32; rhs.state_len()];
-        rhs.f(0.4, &u, &mut full_f);
-        let mut full_vjp = vec![0.0f32; rhs.state_len()];
-        rhs.vjp_u(0.4, &u, &v, &mut full_vjp);
-
-        // single-row shards
-        let one = rhs.make_shard(1).expect("MlpRhs is shardable");
-        assert_eq!(one.batch_rows(), 1);
-        assert_eq!(one.param_len(), rhs.param_len());
-        for r in 0..b {
-            let mut out = vec![0.0f32; d];
-            one.f(0.4, &u[r * d..(r + 1) * d], &mut out);
-            assert_eq!(out, &full_f[r * d..(r + 1) * d], "f row {r} bitwise");
-            let mut gv = vec![0.0f32; d];
-            one.vjp_u(0.4, &u[r * d..(r + 1) * d], &v[r * d..(r + 1) * d], &mut gv);
-            assert_eq!(gv, &full_vjp[r * d..(r + 1) * d], "vjp row {r} bitwise");
-        }
-        // a two-row shard over rows 0..2
-        let two = rhs.make_shard(2).expect("shardable");
-        let mut out = vec![0.0f32; 2 * d];
-        two.f(0.4, &u[..2 * d], &mut out);
-        assert_eq!(out, &full_f[..2 * d], "two-row shard bitwise");
-        assert!(rhs.make_shard(0).is_none());
-        // non-batched RHSs opt out
-        assert!(LinearRhs::new(2, vec![0.0; 4]).make_shard(1).is_none());
-    }
-
-    #[test]
-    fn time_dependence_is_real() {
-        let rhs = mk_mlp(5);
-        let u = vec![0.3f32; rhs.state_len()];
-        let mut a = vec![0.0f32; rhs.state_len()];
-        let mut b = vec![0.0f32; rhs.state_len()];
-        rhs.f(0.0, &u, &mut a);
-        rhs.f(0.9, &u, &mut b);
-        assert!(crate::tensor::max_abs_diff(&a, &b) > 1e-6);
-    }
 }

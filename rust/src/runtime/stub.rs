@@ -5,7 +5,7 @@
 //! fails with a clear message, so every artifact-gated code path — the
 //! `xla_runtime` tests, the PJRT micro-benches, `pnode info` — degrades to
 //! its documented "artifacts not available" behaviour.  The pure-Rust
-//! `MlpRhs` mirror covers the full algorithmic surface without it.
+//! `ModuleRhs` mirror covers the full algorithmic surface without it.
 
 use anyhow::{bail, Result};
 

@@ -11,6 +11,7 @@
 
 use crate::api::{RunSpec, Session};
 use crate::methods::MethodReport;
+use crate::nn::module::{Augment, Module};
 use crate::nn::readout::Readout;
 use crate::ode::rhs::OdeRhs;
 use crate::util::rng::Rng;
@@ -22,6 +23,9 @@ pub struct ClassificationTask {
     pub readout: Readout,
     /// per-block facade sessions (each holds its forward state)
     sessions: Vec<Session>,
+    /// ANODE lift (Gholami et al., 2019): data rows are zero-padded into
+    /// the augmented ODE state before the first block
+    lift: Option<Augment>,
 }
 
 /// Outcome of one training step.
@@ -59,7 +63,53 @@ impl ClassificationTask {
                     .unwrap_or_else(|e| panic!("classification task: invalid RunSpec: {e}"))
             })
             .collect();
-        ClassificationTask { n_blocks, theta, readout, sessions }
+        ClassificationTask { n_blocks, theta, readout, sessions, lift: None }
+    }
+
+    /// The ANODE variant: ODE blocks run over `data_dim + extra` channels,
+    /// data rows are lifted with zero channels before the first block, and
+    /// the readout sees the full augmented state.
+    #[allow(clippy::too_many_arguments)]
+    pub fn augmented(
+        rng: &mut Rng,
+        n_blocks: usize,
+        spec: &RunSpec,
+        per_block_params: usize,
+        data_dim: usize,
+        extra: usize,
+        n_classes: usize,
+        init: impl Fn(&mut Rng) -> Vec<f32>,
+    ) -> Self {
+        let mut task = ClassificationTask::new(
+            rng,
+            n_blocks,
+            spec,
+            per_block_params,
+            data_dim + extra,
+            n_classes,
+            init,
+        );
+        task.lift = Some(Augment::new(data_dim, extra));
+        task
+    }
+
+    /// Zero channels of the ANODE lift (0 for the plain task).
+    pub fn augment_extra(&self) -> usize {
+        self.lift.as_ref().map(|l| l.extra()).unwrap_or(0)
+    }
+
+    /// Lift a data batch into the ODE state (identity unless augmented).
+    fn lifted(&self, x: &[f32]) -> Vec<f32> {
+        match &self.lift {
+            None => x.to_vec(),
+            Some(l) => {
+                let rows = x.len() / l.in_dim();
+                let mut out = vec![0.0f32; rows * l.out_dim()];
+                let mut cache: [f32; 0] = [];
+                l.forward(rows, 0.0, &[], x, &mut out, &mut cache);
+                out
+            }
+        }
     }
 
     /// The spec every block runs.
@@ -77,8 +127,10 @@ impl ClassificationTask {
     }
 
     /// Forward through all blocks; returns the final features.
+    /// `x` is the *data* batch — the ANODE variant lifts it into the
+    /// augmented state first.
     pub fn forward(&mut self, rhs: &mut dyn OdeRhs, x: &[f32]) -> Vec<f32> {
-        let mut u = x.to_vec();
+        let mut u = self.lifted(x);
         for b in 0..self.n_blocks {
             rhs.set_params(self.block_theta(b));
             u = self.sessions[b].forward(rhs, &u);
@@ -146,26 +198,27 @@ mod tests {
     use super::*;
     use crate::api::SolverBuilder;
     use crate::data::spiral::SpiralDataset;
+    use crate::nn::module::ArchSpec;
     use crate::nn::{Act, Adam, Optimizer};
-    use crate::ode::rhs::MlpRhs;
+    use crate::ode::ModuleRhs;
 
     const D: usize = 8;
     const B: usize = 16;
 
-    fn mk_task(rng: &mut Rng, n_blocks: usize) -> (ClassificationTask, MlpRhs) {
-        let dims = vec![D + 1, 16, D];
-        let p = crate::nn::param_count(&dims);
-        let dims2 = dims.clone();
+    fn mk_task(rng: &mut Rng, n_blocks: usize) -> (ClassificationTask, ModuleRhs) {
+        let arch = ArchSpec::ConcatMlp { hidden: vec![16], act: Act::Tanh };
+        let p = arch.param_count(D);
         let spec = SolverBuilder::new()
             .scheme_str("rk4")
             .uniform(4)
+            .arch(arch.clone())
             .build()
             .expect("valid spec");
+        let arch_init = arch.clone();
         let task = ClassificationTask::new(rng, n_blocks, &spec, p, D, 3, move |r| {
-            crate::nn::init::kaiming_uniform(r, &dims2, 1.0)
+            arch_init.init(r, D)
         });
-        let theta0 = task.block_theta(0).to_vec();
-        let rhs = MlpRhs::new(dims, Act::Tanh, true, B, theta0);
+        let rhs = spec.make_rhs(D, B, task.block_theta(0).to_vec()).unwrap();
         (task, rhs)
     }
 
@@ -208,11 +261,63 @@ mod tests {
         let res = task.grad_step(&mut rhs, B, &x, &y, 0.0);
         // FD on a few entries of each block's θ (readout frozen: lr=0)
         let h = 1e-2f32;
-        let loss_at = |task: &mut ClassificationTask, rhs: &mut MlpRhs| -> f64 {
+        let loss_at = |task: &mut ClassificationTask, rhs: &mut ModuleRhs| -> f64 {
             let u = task.forward(rhs, &x);
             task.readout.loss_and_grads(B, &u, &y).loss
         };
         for &idx in &[0usize, 7, task.theta.len() - 1] {
+            let orig = task.theta[idx];
+            task.theta[idx] = orig + h;
+            let lp = loss_at(&mut task, &mut rhs);
+            task.theta[idx] = orig - h;
+            let lm = loss_at(&mut task, &mut rhs);
+            task.theta[idx] = orig;
+            let fd = (lp - lm) / (2.0 * h as f64);
+            assert!(
+                (fd - res.grad[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                "grad[{idx}] {} vs fd {fd}",
+                res.grad[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn augmented_task_gradients_match_finite_differences() {
+        // ANODE workload: blocks integrate D+EXTRA channels, data is
+        // lifted with zeros, readout reads the augmented state
+        const EXTRA: usize = 3;
+        let mut rng = Rng::new(221);
+        let arch = ArchSpec::Augment {
+            extra: EXTRA,
+            inner: Box::new(ArchSpec::ConcatMlp { hidden: vec![16], act: Act::Tanh }),
+        };
+        let p = arch.param_count(D);
+        let spec = SolverBuilder::new()
+            .scheme_str("rk4")
+            .uniform(4)
+            .arch(arch.clone())
+            .build()
+            .expect("valid spec");
+        let arch_init = arch.clone();
+        let mut task = ClassificationTask::augmented(&mut rng, 2, &spec, p, D, EXTRA, 3, move |r| {
+            arch_init.init(r, D)
+        });
+        assert_eq!(task.augment_extra(), EXTRA);
+        let mut rhs = spec.make_rhs(D, B, task.block_theta(0).to_vec()).unwrap();
+        assert_eq!(rhs.state_dim(), D + EXTRA);
+
+        let mut x = vec![0.0f32; B * D];
+        rng.fill_normal(&mut x);
+        let y: Vec<usize> = (0..B).map(|_| rng.below(3)).collect();
+        let res = task.grad_step(&mut rhs, B, &x, &y, 0.0);
+        assert!(res.loss.is_finite());
+
+        let h = 1e-2f32;
+        let loss_at = |task: &mut ClassificationTask, rhs: &mut ModuleRhs| -> f64 {
+            let u = task.forward(rhs, &x);
+            task.readout.loss_and_grads(B, &u, &y).loss
+        };
+        for &idx in &[0usize, 11, task.theta.len() - 1] {
             let orig = task.theta[idx];
             task.theta[idx] = orig + h;
             let lp = loss_at(&mut task, &mut rhs);

@@ -8,5 +8,5 @@ pub mod cnf;
 pub mod stiff;
 
 pub use classification::ClassificationTask;
-pub use cnf::{CnfTask, LinearCnfRhs};
+pub use cnf::{CnfTask, HutchinsonCnfRhs, LinearCnfRhs};
 pub use stiff::StiffTask;

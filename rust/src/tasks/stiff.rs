@@ -176,17 +176,17 @@ impl StiffTask {
 mod tests {
     use super::*;
     use crate::nn::Act;
-    use crate::ode::rhs::MlpRhs;
+    use crate::ode::ModuleRhs;
     use crate::util::rng::Rng;
 
-    fn mk_rhs(seed: u64) -> MlpRhs {
+    fn mk_rhs(seed: u64) -> ModuleRhs {
         // small net for tests (paper uses 5×50 GELU); init small so the
         // untrained vector field does not blow up over the long [1e-5, 100]
         // horizon (the paper's min–max scaling serves the same purpose)
         let dims = vec![3, 16, 16, 3];
         let mut rng = Rng::new(seed);
         let theta = crate::nn::init::kaiming_uniform(&mut rng, &dims, 0.05);
-        MlpRhs::new(dims, Act::Gelu, false, 1, theta)
+        ModuleRhs::mlp(dims, Act::Gelu, false, 1, theta)
     }
 
     fn small_task() -> StiffTask {

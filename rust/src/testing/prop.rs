@@ -59,6 +59,159 @@ pub fn size_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
     lo + rng.below(hi - lo + 1)
 }
 
+// ---------- per-module derivative properties ----------
+//
+// Shared by the nn::module unit tests and the gradcheck integration suite:
+// every module must satisfy vjp/jvp duality, match finite differences of
+// its forward map, and (for the second-order pass) match finite
+// differences of its *jvp* map.
+
+use crate::nn::module::Module;
+
+/// Evaluate `m` at `(bsz, t, θ, x)` with fresh buffers; returns `y` and
+/// leaves the forward cache in the returned arena.
+pub fn module_eval(
+    m: &dyn Module,
+    bsz: usize,
+    t: f64,
+    theta: &[f32],
+    x: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let mut y = vec![0.0f32; bsz * m.out_dim()];
+    let mut cache = vec![0.0f32; m.cache_len(bsz)];
+    m.forward(bsz, t, theta, x, &mut y, &mut cache);
+    (y, cache)
+}
+
+/// Adjoint consistency `⟨v, J w⟩ == ⟨Jᵀ v, w⟩` at a random point.
+pub fn module_duality(
+    m: &dyn Module,
+    bsz: usize,
+    t: f64,
+    theta: &[f32],
+    rng: &mut Rng,
+) -> Result<(), String> {
+    let x = vec_normal(rng, bsz * m.in_dim());
+    let w = vec_normal(rng, bsz * m.in_dim());
+    let v = vec_normal(rng, bsz * m.out_dim());
+    let (_y, cache) = module_eval(m, bsz, t, theta, &x);
+    let mut jw = vec![0.0f32; bsz * m.out_dim()];
+    m.jvp(bsz, t, theta, &w, &mut jw, &cache);
+    let mut jtv = vec![0.0f32; bsz * m.in_dim()];
+    m.vjp(bsz, t, theta, &v, &mut jtv, None, &cache);
+    let lhs = crate::tensor::dot(&v, &jw);
+    let rhs = crate::tensor::dot(&jtv, &w);
+    if (lhs - rhs).abs() > 1e-4 * (1.0 + lhs.abs()) {
+        return Err(format!("duality broken: <v,Jw> {lhs} != <J^T v,w> {rhs}"));
+    }
+    Ok(())
+}
+
+/// Central-difference check of `vjp` — both the input gradient and the
+/// parameter gradient of `L = ⟨v, f(x, θ, t)⟩`.
+pub fn module_fd(
+    m: &dyn Module,
+    bsz: usize,
+    t: f64,
+    theta: &[f32],
+    rng: &mut Rng,
+) -> Result<(), String> {
+    let x = vec_normal(rng, bsz * m.in_dim());
+    let v = vec_normal(rng, bsz * m.out_dim());
+    let (_y, cache) = module_eval(m, bsz, t, theta, &x);
+    let mut gx = vec![0.0f32; bsz * m.in_dim()];
+    let mut gt = vec![0.0f32; m.param_len()];
+    m.vjp(bsz, t, theta, &v, &mut gx, Some(&mut gt), &cache);
+
+    let loss = |theta: &[f32], x: &[f32]| -> f64 {
+        let (y, _) = module_eval(m, bsz, t, theta, x);
+        crate::tensor::dot(&v, &y)
+    };
+    let h = 1e-3f32;
+    for idx in 0..x.len() {
+        let mut xp = x.clone();
+        xp[idx] += h;
+        let mut xm = x.clone();
+        xm[idx] -= h;
+        let fd = (loss(theta, &xp) - loss(theta, &xm)) / (2.0 * h as f64);
+        if (fd - gx[idx] as f64).abs() > 2e-2 * (1.0 + fd.abs()) {
+            return Err(format!("gx[{idx}] {} vs fd {fd}", gx[idx]));
+        }
+    }
+    for idx in theta_probe_indices(theta.len()) {
+        let mut tp = theta.to_vec();
+        tp[idx] += h;
+        let mut tm = theta.to_vec();
+        tm[idx] -= h;
+        let fd = (loss(&tp, &x) - loss(&tm, &x)) / (2.0 * h as f64);
+        if (fd - gt[idx] as f64).abs() > 2e-2 * (1.0 + fd.abs()) {
+            return Err(format!("gθ[{idx}] {} vs fd {fd}", gt[idx]));
+        }
+    }
+    Ok(())
+}
+
+/// Central-difference check of the directional second-order adjoint:
+/// `sovjp` must match finite differences of `S(x, θ) = ⟨u, J(x, θ)·w⟩`
+/// (with `Jw` evaluated through `jvp`).
+pub fn module_sovjp_fd(
+    m: &dyn Module,
+    bsz: usize,
+    t: f64,
+    theta: &[f32],
+    rng: &mut Rng,
+) -> Result<(), String> {
+    let x = vec_normal(rng, bsz * m.in_dim());
+    let w = vec_normal(rng, bsz * m.in_dim());
+    let u = vec_normal(rng, bsz * m.out_dim());
+    let mut gx = vec![0.0f32; bsz * m.in_dim()];
+    let mut gt = vec![0.0f32; m.param_len()];
+    let mut cache = vec![0.0f32; m.cache_len(bsz)];
+    m.sovjp(bsz, t, theta, &x, &w, &u, &mut gx, Some(&mut gt), &mut cache);
+
+    let pairing = |theta: &[f32], x: &[f32]| -> f64 {
+        let (_y, cache) = module_eval(m, bsz, t, theta, x);
+        let mut jw = vec![0.0f32; bsz * m.out_dim()];
+        m.jvp(bsz, t, theta, &w, &mut jw, &cache);
+        crate::tensor::dot(&u, &jw)
+    };
+    let h = 1e-3f32;
+    for idx in 0..x.len() {
+        let mut xp = x.clone();
+        xp[idx] += h;
+        let mut xm = x.clone();
+        xm[idx] -= h;
+        let fd = (pairing(theta, &xp) - pairing(theta, &xm)) / (2.0 * h as f64);
+        if (fd - gx[idx] as f64).abs() > 5e-2 * (1.0 + fd.abs()) {
+            return Err(format!("sovjp gx[{idx}] {} vs fd {fd}", gx[idx]));
+        }
+    }
+    for idx in theta_probe_indices(theta.len()) {
+        let mut tp = theta.to_vec();
+        tp[idx] += h;
+        let mut tm = theta.to_vec();
+        tm[idx] -= h;
+        let fd = (pairing(&tp, &x) - pairing(&tm, &x)) / (2.0 * h as f64);
+        if (fd - gt[idx] as f64).abs() > 5e-2 * (1.0 + fd.abs()) {
+            return Err(format!("sovjp gθ[{idx}] {} vs fd {fd}", gt[idx]));
+        }
+    }
+    Ok(())
+}
+
+/// Up to 8 probe indices spread over a parameter vector (empty when the
+/// module has no parameters).
+fn theta_probe_indices(p: usize) -> Vec<usize> {
+    if p == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..8.min(p)).map(|i| i * p / 8.min(p)).collect();
+    idx.push(p - 1);
+    idx.sort_unstable();
+    idx.dedup();
+    idx
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -3,9 +3,10 @@
 //! every grid and policy variant, and degenerate specs rejected at build
 //! time with the underlying message.
 
-use pnode::api::{MethodSpec, RunSpec, SolverBuilder, METHOD_NAMES};
+use pnode::api::{ArchSpec, MethodSpec, RunSpec, SolverBuilder, METHOD_NAMES};
 use pnode::checkpoint::CheckpointPolicy;
 use pnode::exec::ExecConfig;
+use pnode::nn::Act;
 use pnode::ode::grid::TimeGrid;
 use pnode::ode::tableau::Scheme;
 
@@ -97,6 +98,86 @@ fn implicit_scheme_specs_roundtrip() {
 }
 
 #[test]
+fn arch_specs_roundtrip_end_to_end() {
+    // the acceptance matrix: at minimum concatsquash (time-conditioned)
+    // and augmented architectures survive serialize → parse → identical,
+    // via both the typed setter and the CLI grammar
+    let squash = ArchSpec::ConcatSquashMlp { hidden: vec![64, 64], act: Act::Tanh };
+    let spec = SolverBuilder::new()
+        .scheme(Scheme::Dopri5)
+        .uniform(10)
+        .arch(squash.clone())
+        .build()
+        .unwrap();
+    assert_eq!(spec.arch, Some(squash));
+    roundtrip(&spec);
+
+    let augmented = ArchSpec::Augment {
+        extra: 4,
+        inner: Box::new(ArchSpec::ConcatMlp { hidden: vec![32], act: Act::Relu }),
+    };
+    let spec = SolverBuilder::new()
+        .method_str("pnode:binomial:3")
+        .uniform(6)
+        .arch(augmented.clone())
+        .build()
+        .unwrap();
+    assert_eq!(spec.arch.as_ref().map(|a| a.augment_extra()), Some(4));
+    roundtrip(&spec);
+
+    // the whole roster, through the string grammar and with exec composed
+    for arch in [
+        "mlp:16,16:tanh",
+        "concat:32:gelu",
+        "concatsquash:64:tanh",
+        "residual:mlp:24:sigmoid",
+        "augment:2:concatsquash:16:tanh",
+    ] {
+        let spec = SolverBuilder::new()
+            .arch_str(arch)
+            .workers(2)
+            .uniform(4)
+            .build()
+            .unwrap_or_else(|e| panic!("{arch}: {e}"));
+        assert_eq!(spec.arch.as_ref().map(|a| a.name()), Some(arch.to_string()));
+        roundtrip(&spec);
+    }
+
+    // arch-less specs keep serializing with an explicit null (legacy docs
+    // without the key also parse)
+    let spec = SolverBuilder::new().build().unwrap();
+    assert_eq!(spec.arch, None);
+    roundtrip(&spec);
+    let spec = RunSpec::parse_json(
+        r#"{"method": "pnode", "scheme": "rk4", "grid": {"kind": "uniform", "nt": 4}}"#,
+    )
+    .unwrap();
+    assert_eq!(spec.arch, None);
+}
+
+#[test]
+fn bad_arch_documents_are_rejected_with_context() {
+    let e = SolverBuilder::new().arch_str("mlp:16,0:tanh").build().unwrap_err();
+    assert!(e.contains("nonzero"), "{e}");
+    let e = SolverBuilder::new().arch_str("augment:0:mlp:4:tanh").build().unwrap_err();
+    assert!(e.contains("extra"), "{e}");
+    let e = RunSpec::parse_json(
+        r#"{"method": "pnode", "scheme": "rk4",
+            "grid": {"kind": "uniform", "nt": 4},
+            "arch": {"kind": "warp_core"}}"#,
+    )
+    .unwrap_err();
+    assert!(e.contains("warp_core"), "{e}");
+    let e = RunSpec::parse_json(
+        r#"{"method": "pnode", "scheme": "rk4",
+            "grid": {"kind": "uniform", "nt": 4},
+            "arch": {"kind": "concatsquash_mlp", "hidden": [16]}}"#,
+    )
+    .unwrap_err();
+    assert!(e.contains("act"), "{e}");
+}
+
+#[test]
 fn builder_rejects_degenerate_specs_with_messages() {
     // the satellite contract: the *underlying* message survives, never a
     // bare "unknown method"
@@ -177,10 +258,30 @@ fn parse_json_rejects_bad_documents_with_context() {
 
 #[test]
 fn checked_in_exemplar_specs_parse_and_roundtrip() {
-    for path in ["examples/specs/clf_small.json", "examples/specs/tiered_adaptive.json"] {
+    for path in [
+        "examples/specs/clf_small.json",
+        "examples/specs/tiered_adaptive.json",
+        "examples/specs/cnf_concatsquash.json",
+        "examples/specs/clf_augmented.json",
+    ] {
         let text = std::fs::read_to_string(path)
             .unwrap_or_else(|e| panic!("{path}: {e} (run tests from the repo root)"));
         let spec = RunSpec::parse_json(&text).unwrap_or_else(|e| panic!("{path}: {e}"));
         roundtrip(&spec);
     }
+    // the two new exemplars carry the architectures the module system adds
+    let squash = RunSpec::parse_json(
+        &std::fs::read_to_string("examples/specs/cnf_concatsquash.json").unwrap(),
+    )
+    .unwrap();
+    assert!(
+        matches!(squash.arch, Some(ArchSpec::ConcatSquashMlp { .. })),
+        "{:?}",
+        squash.arch
+    );
+    let aug = RunSpec::parse_json(
+        &std::fs::read_to_string("examples/specs/clf_augmented.json").unwrap(),
+    )
+    .unwrap();
+    assert!(aug.arch.as_ref().map(|a| a.augment_extra()).unwrap_or(0) > 0, "{:?}", aug.arch);
 }

@@ -6,16 +6,17 @@ use pnode::checkpoint::CheckpointPolicy;
 use pnode::methods::{BlockSpec, GradientMethod, Pnode};
 use pnode::nn::Act;
 use pnode::ode::implicit::{integrate_implicit, ThetaScheme};
-use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::ModuleRhs;
+use pnode::ode::rhs::OdeRhs;
 use pnode::ode::tableau::EXPLICIT_SCHEMES;
 use pnode::testing::prop;
 use pnode::util::rng::Rng;
 
-fn mk_rhs(seed: u64) -> MlpRhs {
+fn mk_rhs(seed: u64) -> ModuleRhs {
     let dims = vec![4, 9, 3];
     let mut rng = Rng::new(seed);
     let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.2);
-    MlpRhs::new(dims, Act::Tanh, true, 2, theta)
+    ModuleRhs::mlp(dims, Act::Tanh, true, 2, theta)
 }
 
 #[test]
@@ -86,7 +87,7 @@ fn fd_check_implicit_multistep() {
             let dims = vec![3, 12, 3];
             let mut rng = Rng::new(44);
             let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 0.8);
-            MlpRhs::new(dims, Act::Gelu, false, 1, theta)
+            ModuleRhs::mlp(dims, Act::Gelu, false, 1, theta)
         };
         let u0 = vec![0.4f32, -0.1, 0.3];
         let w = vec![1.0f32, 0.5, -0.3];
@@ -257,6 +258,136 @@ fn fd_check_explicit_nonuniform_grid() {
             );
         }
     }
+}
+
+/// Every spec-addressable architecture, end to end through the discrete
+/// adjoint: PNODE θ-gradients over a `ModuleRhs` must match central finite
+/// differences of the frozen forward map — dense, time-conditioned
+/// (concat + concatsquash), residual, and augmented graphs alike.
+#[test]
+fn fd_check_every_architecture() {
+    use pnode::api::ArchSpec;
+    use pnode::ode::ModuleRhs;
+    let archs = [
+        ArchSpec::Mlp { hidden: vec![8], act: Act::Tanh },
+        ArchSpec::ConcatMlp { hidden: vec![8], act: Act::Gelu },
+        ArchSpec::ConcatSquashMlp { hidden: vec![8], act: Act::Tanh },
+        ArchSpec::Residual(Box::new(ArchSpec::ConcatMlp { hidden: vec![6], act: Act::Tanh })),
+        ArchSpec::Augment {
+            extra: 2,
+            inner: Box::new(ArchSpec::Mlp { hidden: vec![6], act: Act::Sigmoid }),
+        },
+    ];
+    for arch in archs {
+        let mut rng = Rng::new(91);
+        let theta0 = arch.init(&mut rng, 3);
+        let mut rhs = ModuleRhs::from_arch(&arch, 3, 2, theta0.clone());
+        let u0 = prop::vec_uniform(&mut rng, rhs.state_len(), 0.5);
+        let w = prop::vec_uniform(&mut rng, rhs.state_len(), 1.0);
+        let nt = 6;
+        let spec = BlockSpec::new(pnode::ode::tableau::Scheme::Rk4, nt);
+
+        let mut m = Pnode::new(CheckpointPolicy::All);
+        m.forward(&rhs, &spec, &u0);
+        let mut lambda = w.clone();
+        let mut g = vec![0.0f32; rhs.param_len()];
+        m.backward(&rhs, &spec, &mut lambda, &mut g);
+
+        let loss = |rhs: &dyn OdeRhs| {
+            let uf = pnode::ode::erk::integrate_fixed(
+                spec.scheme.tableau(),
+                rhs,
+                spec.t0,
+                spec.tf,
+                nt,
+                &u0,
+                |_, _, _, _, _, _| {},
+            );
+            pnode::tensor::dot(&w, &uf)
+        };
+        let h = 1e-2f32;
+        let p = theta0.len();
+        for idx in [0usize, p / 3, p / 2, p - 1] {
+            let mut tp = theta0.clone();
+            tp[idx] += h;
+            rhs.set_params(&tp);
+            let lp = loss(&rhs);
+            let mut tm = theta0.clone();
+            tm[idx] -= h;
+            rhs.set_params(&tm);
+            let lm = loss(&rhs);
+            rhs.set_params(&theta0);
+            let fd = (lp - lm) / (2.0 * h as f64);
+            assert!(
+                (fd - g[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                "{}: dθ[{idx}] {} vs fd {fd}",
+                arch.name(),
+                g[idx]
+            );
+        }
+    }
+}
+
+/// The per-module derivative contract, exercised through the shared
+/// property helpers: vjp/jvp duality, first-order FD, and the directional
+/// second-order FD for every module kind.
+#[test]
+fn per_module_adjoint_consistency_and_fd() {
+    use pnode::api::ArchSpec;
+    use pnode::nn::module::{Activation, Augment, Linear, Module};
+    let roster: Vec<(&str, Box<dyn Module>)> = vec![
+        ("linear", Box::new(Linear::new(4, 3))),
+        ("act-tanh", Box::new(Activation::new(Act::Tanh, 5))),
+        ("act-gelu", Box::new(Activation::new(Act::Gelu, 4))),
+        ("augment", Box::new(Augment::new(3, 2))),
+        ("mlp-seq", ArchSpec::Mlp { hidden: vec![7, 5], act: Act::Tanh }.build(4)),
+        ("concat-time", ArchSpec::ConcatMlp { hidden: vec![6], act: Act::Gelu }.build(3)),
+        (
+            "concatsquash",
+            ArchSpec::ConcatSquashMlp { hidden: vec![6], act: Act::Tanh }.build(3),
+        ),
+        (
+            "residual",
+            ArchSpec::Residual(Box::new(ArchSpec::Mlp { hidden: vec![6], act: Act::Sigmoid }))
+                .build(4),
+        ),
+    ];
+    for (name, m) in roster {
+        prop::check(&format!("gradcheck-module-{name}"), 211, 4, |rng| {
+            let mut theta = prop::vec_normal(rng, m.param_len());
+            for v in theta.iter_mut() {
+                *v *= 0.5;
+            }
+            let t = rng.uniform(0.0, 1.0);
+            prop::module_duality(m.as_ref(), 2, t, &theta, rng)?;
+            prop::module_fd(m.as_ref(), 2, t, &theta, rng)?;
+            prop::module_sovjp_fd(m.as_ref(), 2, t, &theta, rng)
+        });
+    }
+}
+
+/// The stiff task's analytic RHS is outside the module system and must be
+/// byte-for-byte unaffected by it: golden values pinned exactly.
+#[test]
+fn robertson_analytic_rhs_is_bitwise_pinned() {
+    use pnode::ode::rhs::RobertsonRhs;
+    let rhs = RobertsonRhs::default();
+    let mut du = [0.0f32; 3];
+    rhs.f(0.0, &[1.0, 0.0, 0.0], &mut du);
+    assert_eq!(du, [-0.04, 0.04, 0.0]);
+    let u = [0.5f32, 2e-5, 0.25];
+    rhs.f(0.0, &u, &mut du);
+    // the exact f32 roundings of the f64 arithmetic, pinned bit-for-bit
+    let want = [
+        ((-0.04 * 0.5f64) + 1e4 * (2e-5f32 as f64) * 0.25) as f32,
+        ((0.04 * 0.5f64) - 3e7 * (2e-5f32 as f64) * (2e-5f32 as f64)
+            - 1e4 * (2e-5f32 as f64) * 0.25) as f32,
+        (3e7 * (2e-5f32 as f64) * (2e-5f32 as f64)) as f32,
+    ];
+    assert_eq!(du, want);
+    let mut vj = [0.0f32; 3];
+    rhs.vjp_u(0.0, &u, &[1.0, 0.0, 0.0], &mut vj);
+    assert_eq!(vj[0], -0.04f64 as f32);
 }
 
 /// Property: for random seeds, discrete-adjoint λ equals the FD directional

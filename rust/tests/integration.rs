@@ -7,16 +7,17 @@ use pnode::api::SolverBuilder;
 use pnode::checkpoint::CheckpointPolicy;
 use pnode::data::spiral::SpiralDataset;
 use pnode::nn::{Act, Adam, Optimizer};
-use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::ModuleRhs;
+use pnode::ode::rhs::OdeRhs;
 use pnode::ode::tableau::{Scheme, EXPLICIT_SCHEMES};
 use pnode::tasks::ClassificationTask;
 use pnode::testing::prop;
 use pnode::util::rng::Rng;
 
-fn mk_rhs(dims: &[usize], batch: usize, seed: u64) -> MlpRhs {
+fn mk_rhs(dims: &[usize], batch: usize, seed: u64) -> ModuleRhs {
     let mut rng = Rng::new(seed);
     let theta = pnode::nn::init::kaiming_uniform(&mut rng, dims, 1.0);
-    MlpRhs::new(dims.to_vec(), Act::Tanh, true, batch, theta)
+    ModuleRhs::mlp(dims.to_vec(), Act::Tanh, true, batch, theta)
 }
 
 /// One session-driven gradient; returns (λ₀, θ̄).
@@ -141,7 +142,7 @@ fn classification_trains_with_each_method() {
         let mut task = ClassificationTask::new(&mut rng, 2, &spec, p, D, 2, move |r| {
             pnode::nn::init::kaiming_uniform(r, &dims_i, 1.0)
         });
-        let mut rhs = MlpRhs::new(dims, Act::Tanh, true, B, task.block_theta(0).to_vec());
+        let mut rhs = ModuleRhs::mlp(dims, Act::Tanh, true, B, task.block_theta(0).to_vec());
         let ds = SpiralDataset::generate(&mut rng, 100, 2, D);
         let (train, _) = ds.split(1.0);
         let mut opt = Adam::new(task.theta.len(), 1e-2);

@@ -5,16 +5,17 @@
 use pnode::api::{Session, SolverBuilder};
 use pnode::methods::{MemModel, MethodReport};
 use pnode::nn::Act;
-use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::ModuleRhs;
+use pnode::ode::rhs::OdeRhs;
 use pnode::ode::tableau::Scheme;
 use pnode::testing::prop;
 use pnode::util::rng::Rng;
 
-fn big_rhs(seed: u64) -> MlpRhs {
+fn big_rhs(seed: u64) -> ModuleRhs {
     let dims = vec![17, 32, 32, 16];
     let mut rng = Rng::new(seed);
     let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-    MlpRhs::new(dims, Act::Tanh, true, 8, theta)
+    ModuleRhs::mlp(dims, Act::Tanh, true, 8, theta)
 }
 
 fn session_of(method: &str, scheme: Scheme, nt: usize) -> Session {
@@ -53,18 +54,19 @@ fn gradients_identical_at_scale() {
 
 #[test]
 fn table2_shape_at_benchmark_scale() {
-    // clf_d64-like instantiation of the memory model: orderings and
+    // clf_d64 instantiation of the memory model, sized off the real
+    // module graph (summed per-module activation bytes): orderings and
     // crossovers the paper reports in Fig. 3 must hold.
-    let act_bytes = 128u64 * (65 + 168 + 168 + 168 + 168 + 64) * 4;
+    let theta = vec![0.0f32; pnode::nn::param_count(&[65, 168, 168, 64])];
+    let clf = ModuleRhs::mlp(vec![65, 168, 168, 64], Act::Relu, true, 128, theta);
+    let act_bytes = clf.activation_bytes_per_eval();
+    assert_eq!(
+        act_bytes,
+        128 * ((65 + 168) + (168 + 168) + (168 + 64)) * 4,
+        "per-module accounting equals the closed form on clf_d64"
+    );
     for nt in [2u64, 5, 11, 20] {
-        let m = MemModel {
-            act_bytes,
-            state_bytes: 128 * 64 * 4,
-            param_bytes: 50_296 * 4,
-            n_stages: 6,
-            nt,
-            nb: 4,
-        };
+        let m = MemModel::for_rhs(&clf, 6, nt, 4);
         assert!(m.node_naive() > m.anode(), "nt={nt}");
         assert!(m.anode() > m.aca(), "nt={nt}");
         assert!(m.aca() > m.node_cont(), "nt={nt}");

@@ -12,7 +12,8 @@ use pnode::methods::{BlockSpec, GradientMethod, MethodReport, ParallelAdjoint};
 use pnode::nn::Act;
 use pnode::ode::grid::TimeGrid;
 use pnode::ode::implicit::ThetaScheme;
-use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::ModuleRhs;
+use pnode::ode::rhs::OdeRhs;
 use pnode::ode::tableau::Scheme;
 use pnode::util::rng::Rng;
 
@@ -20,11 +21,11 @@ const B: usize = 24;
 const D: usize = 6;
 const SHARD_ROWS: usize = 8;
 
-fn mk_rhs(seed: u64) -> MlpRhs {
+fn mk_rhs(seed: u64) -> ModuleRhs {
     let dims = vec![D + 1, 16, D];
     let mut rng = Rng::new(seed);
     let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-    MlpRhs::new(dims, Act::Tanh, true, B, theta)
+    ModuleRhs::mlp(dims, Act::Tanh, true, B, theta)
 }
 
 fn vecs(seed: u64, n: usize) -> (Vec<f32>, Vec<f32>) {
@@ -72,6 +73,46 @@ fn erk_gradients_bitwise_identical_across_worker_counts() {
             assert_eq!(r.nfe_forward, r1.nfe_forward);
             assert_eq!(r.recompute_steps, r1.recompute_steps);
         }
+    }
+}
+
+#[test]
+fn time_conditioned_module_gradients_bitwise_across_worker_counts() {
+    // the acceptance contract of the module refactor: a *time-conditioned*
+    // architecture (FFJORD concatsquash — gates and shifts are functions
+    // of t) shards exactly like the dense MLP, so gradients stay bitwise
+    // identical for workers = 1, 2, N
+    use pnode::api::ArchSpec;
+    let arch = ArchSpec::ConcatSquashMlp { hidden: vec![12], act: Act::Tanh };
+    let mut rng = Rng::new(51);
+    let theta = arch.init(&mut rng, D);
+    let rhs = ModuleRhs::from_arch(&arch, D, B, theta);
+    let (u0, w) = vecs(52, rhs.state_len());
+
+    let grad = |workers: usize| -> (Vec<f32>, Vec<f32>, Vec<f32>, MethodReport) {
+        let spec = BlockSpec {
+            scheme: Scheme::Dopri5,
+            t0: 0.0,
+            tf: 1.0,
+            grid: TimeGrid::Uniform { nt: 10 },
+        };
+        let mut m = ParallelAdjoint::pnode(
+            CheckpointPolicy::All,
+            ExecConfig { workers, shard_rows: SHARD_ROWS },
+        );
+        let uf = m.forward(&rhs, &spec, &u0);
+        let mut lam = w.clone();
+        let mut g = vec![0.0f32; rhs.param_len()];
+        m.backward(&rhs, &spec, &mut lam, &mut g);
+        (uf, lam, g, m.report())
+    };
+    let (uf1, l1, g1, r1) = grad(1);
+    assert_eq!(r1.exec.shards, 3);
+    for workers in [2usize, 4] {
+        let (uf, l, g, _r) = grad(workers);
+        assert_eq!(uf, uf1, "concatsquash u(t_F) bitwise, workers={workers}");
+        assert_eq!(l, l1, "concatsquash λ bitwise, workers={workers}");
+        assert_eq!(g, g1, "concatsquash θ̄ bitwise, workers={workers}");
     }
 }
 
@@ -132,7 +173,7 @@ fn theta_scheme_shard_fleet_is_bitwise_across_worker_counts() {
     let dims = vec![d, 12, d];
     let mut rng = Rng::new(31);
     let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-    let rhs = MlpRhs::new(dims, Act::Gelu, false, rows, theta);
+    let rhs = ModuleRhs::mlp(dims, Act::Gelu, false, rows, theta);
     let (u0, w) = vecs(32, rhs.state_len());
     let ts = vec![0.0, 0.1, 0.3, 0.6, 1.0];
 
@@ -145,7 +186,7 @@ fn theta_scheme_shard_fleet_is_bitwise_across_worker_counts() {
             let jobs: Vec<_> = shards
                 .iter()
                 .map(|r| {
-                    let srhs = rhs.make_shard(r.len()).expect("MlpRhs shards");
+                    let srhs = rhs.make_shard(r.len()).expect("ModuleRhs shards");
                     let su0 = u0[r.start * d..r.end * d].to_vec();
                     let sw = w[r.start * d..r.end * d].to_vec();
                     let ts = ts.clone();

@@ -7,17 +7,18 @@
 use pnode::api::{Session, SolverBuilder};
 use pnode::exec::ExecConfig;
 use pnode::nn::Act;
-use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::ModuleRhs;
+use pnode::ode::rhs::OdeRhs;
 use pnode::util::rng::Rng;
 
 const B: usize = 24;
 const D: usize = 6;
 
-fn mk_rhs(seed: u64) -> MlpRhs {
+fn mk_rhs(seed: u64) -> ModuleRhs {
     let dims = vec![D + 1, 16, D];
     let mut rng = Rng::new(seed);
     let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
-    MlpRhs::new(dims, Act::Tanh, true, B, theta)
+    ModuleRhs::mlp(dims, Act::Tanh, true, B, theta)
 }
 
 fn probe_vectors(seed: u64, n: usize) -> (Vec<f32>, Vec<f32>) {

@@ -6,7 +6,8 @@
 use pnode::methods::{BlockSpec, GradientMethod, Pnode};
 use pnode::checkpoint::CheckpointPolicy;
 use pnode::nn::Act;
-use pnode::ode::rhs::{MlpRhs, OdeRhs};
+use pnode::ode::ModuleRhs;
+use pnode::ode::rhs::OdeRhs;
 use pnode::ode::rhs_xla::{XlaCnfRhs, XlaRhs};
 use pnode::ode::tableau::Scheme;
 use pnode::runtime::{Client, Manifest, ModelArtifacts};
@@ -16,7 +17,7 @@ fn manifest() -> Option<Manifest> {
     Manifest::load_default().ok()
 }
 
-fn quick_pair(seed: u64) -> Option<(XlaRhs, MlpRhs)> {
+fn quick_pair(seed: u64) -> Option<(XlaRhs, ModuleRhs)> {
     let m = manifest()?;
     let client = Client::cpu().ok()?;
     let arts = ModelArtifacts::load(&client, &m, "quick_d8").ok()?;
@@ -24,7 +25,7 @@ fn quick_pair(seed: u64) -> Option<(XlaRhs, MlpRhs)> {
     let mut rng = Rng::new(seed);
     let theta = pnode::nn::init::kaiming_uniform(&mut rng, &entry.dims, 1.0);
     let xla = XlaRhs::new(arts, theta.clone()).ok()?;
-    let rust = MlpRhs::new(
+    let rust = ModuleRhs::mlp(
         entry.dims.clone(),
         Act::parse(&entry.act).unwrap(),
         entry.time_dep,
