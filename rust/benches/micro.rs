@@ -1,9 +1,13 @@
 //! Hot-path microbenchmarks (the §Perf profile base): ERK step, adjoint
 //! step, VJP through the pure-Rust MLP and (if built) the XLA artifacts,
 //! GMRES iteration, checkpoint store ops.
+//!
+//! Besides the human-readable summaries, every result is appended to
+//! `BENCH_micro.json` at the repo root (cargo runs benches from the
+//! workspace root) so perf trends are machine-diffable across commits.
 
 use pnode::adjoint::discrete_erk::{adjoint_erk_step, AdjointErkWorkspace};
-use pnode::bench::bench_fn;
+use pnode::bench::{bench_fn, BenchResult};
 use pnode::linalg::gmres::{gmres, GmresOptions};
 use pnode::nn::Act;
 use pnode::ode::erk::{erk_step, ErkWorkspace};
@@ -13,6 +17,12 @@ use pnode::ode::tableau;
 use pnode::util::rng::Rng;
 
 fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut record = |r: BenchResult, results: &mut Vec<BenchResult>| {
+        println!("{}", r.summary());
+        results.push(r);
+    };
+
     let mut rng = Rng::new(1);
     // paper-scale RHS: 65-168-168-64, batch 128
     let dims = vec![65, 168, 168, 64];
@@ -26,34 +36,39 @@ fn main() {
     let mut out = vec![0.0f32; n];
     let mut gt = vec![0.0f32; rhs.param_len()];
 
-    println!("{}", bench_fn("mlp.f (B=128, 65-168-168-64)", 2, 10, || {
+    let r = bench_fn("mlp.f (B=128, 65-168-168-64)", 2, 10, || {
         rhs.f(0.3, &u, &mut out);
-    }).summary());
-    println!("{}", bench_fn("mlp.vjp_both", 2, 10, || {
+    });
+    record(r, &mut results);
+    let r = bench_fn("mlp.vjp_both", 2, 10, || {
         rhs.vjp_both(0.3, &u, &v, &mut out, &mut gt);
-    }).summary());
-    println!("{}", bench_fn("mlp.jvp", 2, 10, || {
+    });
+    record(r, &mut results);
+    let r = bench_fn("mlp.jvp", 2, 10, || {
         rhs.jvp(0.3, &u, &v, &mut out);
-    }).summary());
+    });
+    record(r, &mut results);
 
     let tab = &tableau::DOPRI5;
     let mut ks: Vec<Vec<f32>> = (0..tab.s).map(|_| vec![0.0f32; n]).collect();
     let mut un = vec![0.0f32; n];
     let mut ews = ErkWorkspace::new(n);
-    println!("{}", bench_fn("erk_step dopri5", 2, 10, || {
+    let r = bench_fn("erk_step dopri5", 2, 10, || {
         erk_step(tab, &rhs, 0.0, 0.1, &u, &mut ks, &mut un, &mut ews, None);
-    }).summary());
+    });
+    record(r, &mut results);
 
     let mut aws = AdjointErkWorkspace::new(tab.s, n);
     let mut lambda = v.clone();
-    println!("{}", bench_fn("adjoint_erk_step dopri5", 1, 5, || {
+    let r = bench_fn("adjoint_erk_step dopri5", 1, 5, || {
         adjoint_erk_step(tab, &rhs, 0.0, 0.1, &u, &ks, &mut lambda, &mut gt, &mut aws);
-    }).summary());
+    });
+    record(r, &mut results);
 
     // GMRES on the implicit-step operator
     let mut x = vec![0.0f32; n];
     let mut jw = vec![0.0f32; n];
-    println!("{}", bench_fn("gmres (I - h/2 J) solve", 1, 5, || {
+    let r = bench_fn("gmres (I - h/2 J) solve", 1, 5, || {
         x.fill(0.0);
         gmres(
             |w, out| {
@@ -66,11 +81,12 @@ fn main() {
             &mut x,
             &GmresOptions::default(),
         );
-    }).summary());
+    });
+    record(r, &mut results);
 
     // checkpoint store ops
     use pnode::checkpoint::{CheckpointStore, StepCheckpoint};
-    println!("{}", bench_fn("checkpoint insert+remove (6 stages)", 5, 20, || {
+    let r = bench_fn("checkpoint insert+remove (6 stages)", 5, 20, || {
         let mut store = CheckpointStore::new();
         for step in 0..16 {
             store.insert(StepCheckpoint {
@@ -84,7 +100,8 @@ fn main() {
         for step in (0..16).rev() {
             store.remove(step);
         }
-    }).summary());
+    });
+    record(r, &mut results);
 
     // facade hot path: one Session reused across iterations (workspace
     // reuse is what the serving path pays for)
@@ -96,11 +113,16 @@ fn main() {
             .build()
             .expect("valid micro spec");
         let lam = vec![1.0f32; n];
-        println!(
-            "{}",
-            pnode::bench::bench_grad("session.grad (dopri5, nt=4)", &spec, &rhs, &u, &lam, 1, 5)
-                .summary()
+        let r = pnode::bench::bench_grad(
+            "session.grad (dopri5, nt=4)",
+            &spec,
+            &rhs,
+            &u,
+            &lam,
+            1,
+            5,
         );
+        record(r, &mut results);
     }
 
     // XLA artifact path (if built)
@@ -119,15 +141,24 @@ fn main() {
             rng2.fill_normal(&mut ux);
             let mut ox = vec![0.0f32; nx];
             let mut gx = vec![0.0f32; xrhs.param_len()];
-            println!("{}", bench_fn("XLA clf_d64 f", 2, 10, || {
+            let r = bench_fn("XLA clf_d64 f", 2, 10, || {
                 xrhs.f(0.3, &ux, &mut ox);
-            }).summary());
+            });
+            record(r, &mut results);
             let vx = ox.clone();
-            println!("{}", bench_fn("XLA clf_d64 vjp_both", 2, 10, || {
+            let r = bench_fn("XLA clf_d64 vjp_both", 2, 10, || {
                 xrhs.vjp_both(0.3, &ux, &vx, &mut ox, &mut gx);
-            }).summary());
+            });
+            record(r, &mut results);
         }
     } else {
         println!("(XLA artifacts not available; skipped PJRT micro-benches)");
+    }
+
+    let json =
+        pnode::util::json::Json::Arr(results.iter().map(|r| r.to_json()).collect());
+    match std::fs::write("BENCH_micro.json", json.to_string_pretty()) {
+        Ok(()) => println!("wrote BENCH_micro.json ({} entries)", results.len()),
+        Err(e) => println!("(could not write BENCH_micro.json: {e})"),
     }
 }

@@ -44,6 +44,7 @@ use crate::checkpoint::binomial::{Anchor, BinomialPlanner, BlockDecision};
 use crate::checkpoint::tiered::{CheckpointBackend, TierStats, TieredConfig, TieredStore};
 use crate::checkpoint::{CheckpointPolicy, CheckpointStore, MemoryBudget, StepCheckpoint};
 use crate::exec::arbiter::BudgetArbiter;
+use crate::obs;
 use crate::ode::grid::{default_adaptive_h0, uniform_steps, TimeGrid};
 use crate::ode::implicit::ThetaScheme;
 use crate::ode::rhs::OdeRhs;
@@ -188,6 +189,7 @@ impl<S: StepScheme> AdjointDriver<S> {
     /// Forward pass: integrates per the grid (generating it for
     /// [`TimeGrid::Adaptive`]), checkpoints per policy; returns `u(t_F)`.
     pub fn forward(&mut self, rhs: &dyn OdeRhs, u0: &[f32]) -> Vec<f32> {
+        let _sp = obs::span("forward");
         self.store.clear();
         self.transient_last = None;
         self.recompute_steps = 0;
@@ -251,6 +253,7 @@ impl<S: StepScheme> AdjointDriver<S> {
         let transient = &mut self.transient_last;
         let uf = scheme.integrate(rhs, steps, u0, &mut |step, t, h, u, ks, _un| {
             if store_positions.binary_search(&step).is_ok() {
+                let _sp = obs::span("store");
                 store.insert(StepCheckpoint {
                     step,
                     t,
@@ -258,6 +261,9 @@ impl<S: StepScheme> AdjointDriver<S> {
                     u: u.to_vec(),
                     ks: with_stages.then(|| ks.to_vec()),
                 });
+                if obs::enabled() {
+                    obs::gauge("ckpt.hot_bytes", store.stats().hot_bytes as f64);
+                }
             }
             if step + 1 == nt {
                 *transient = Some((u.to_vec(), ks.to_vec()));
@@ -298,13 +304,19 @@ impl<S: StepScheme> AdjointDriver<S> {
             scheme.integrate_adaptive(
                 rhs, self.t0, self.tf, atol, rtol, h0, u0,
                 &mut |step, t, h, u, ks, _un| {
-                    store.insert(StepCheckpoint {
-                        step,
-                        t,
-                        h,
-                        u: u.to_vec(),
-                        ks: with_stages.then(|| ks.to_vec()),
-                    });
+                    {
+                        let _sp = obs::span("store");
+                        store.insert(StepCheckpoint {
+                            step,
+                            t,
+                            h,
+                            u: u.to_vec(),
+                            ks: with_stages.then(|| ks.to_vec()),
+                        });
+                        if obs::enabled() {
+                            obs::gauge("ckpt.hot_bytes", store.stats().hot_bytes as f64);
+                        }
+                    }
                     // which step is last is unknown until the controller
                     // stops, so keep the latest (u, ks) as the transient —
                     // overwriting in place so the per-step cost is a copy,
@@ -394,6 +406,7 @@ impl<S: StepScheme> AdjointDriver<S> {
     /// Backward pass: `lambda` enters as ∂L/∂u(t_F), leaves as ∂L/∂u_0;
     /// `grad_theta` accumulates ∂L/∂θ.
     pub fn backward(&mut self, rhs: &dyn OdeRhs, lambda: &mut [f32], grad_theta: &mut [f32]) {
+        let _sp = obs::span("backward");
         let nt = self.steps.len();
         if nt == 0 {
             return;
@@ -481,29 +494,39 @@ impl<S: StepScheme> AdjointDriver<S> {
             if step + 1 == nt && !keep && self.transient_last.is_some() {
                 let (u, tks) = self.transient_last.take().expect("transient last step");
                 let _ = self.store.take(step); // consume the slot if stored
+                let _sp = obs::span("vjp");
                 self.scheme
                     .adjoint_step(rhs, t, h, &u, &tks, &upper, lambda, grad_theta, &mut aws);
                 upper = u;
                 continue;
             }
-            let cp = if keep {
-                self.store.get(step).expect("state stored").clone()
-            } else {
-                self.store.take(step).expect("state stored")
+            let cp = {
+                let _sp = obs::span("restore");
+                if keep {
+                    self.store.get(step).expect("state stored").clone()
+                } else {
+                    self.store.take(step).expect("state stored")
+                }
             };
             if needs_stages {
                 if let Some(ks) = cp.ks.as_ref() {
+                    let _sp = obs::span("vjp");
                     self.scheme
                         .adjoint_step(rhs, t, h, &cp.u, ks, &upper, lambda, grad_theta, &mut aws);
                 } else {
                     // recompute this step's stages (one step execution)
-                    self.scheme.step(rhs, t, h, &cp.u, &mut ks_buf, &mut un_buf, &mut fws);
+                    {
+                        let _sp = obs::span("recompute");
+                        self.scheme.step(rhs, t, h, &cp.u, &mut ks_buf, &mut un_buf, &mut fws);
+                    }
                     self.recompute_steps += 1;
+                    let _sp = obs::span("vjp");
                     self.scheme.adjoint_step(
                         rhs, t, h, &cp.u, &ks_buf, &upper, lambda, grad_theta, &mut aws,
                     );
                 }
             } else {
+                let _sp = obs::span("vjp");
                 self.scheme
                     .adjoint_step(rhs, t, h, &cp.u, &[], &upper, lambda, grad_theta, &mut aws);
             }
@@ -550,16 +573,20 @@ impl<S: StepScheme> AdjointDriver<S> {
             if lo + 1 == nt && self.transient_last.is_some() {
                 let (u, tks) = self.transient_last.take().expect("transient last step");
                 let u_next = self.final_state.clone();
+                let _sp = obs::span("vjp");
                 self.scheme
                     .adjoint_step(rhs, t, h, &u, &tks, &u_next, lambda, grad_theta, aws);
             } else {
-                let cp = self
-                    .store
-                    .get(lo)
-                    .unwrap_or_else(|| panic!("binomial executor: no anchor at step {lo}"))
-                    .clone();
+                let cp = {
+                    let _sp = obs::span("restore");
+                    self.store
+                        .get(lo)
+                        .unwrap_or_else(|| panic!("binomial executor: no anchor at step {lo}"))
+                        .clone()
+                };
                 match (needs_stages, cp.ks.as_ref()) {
                     (true, Some(ks)) => {
+                        let _sp = obs::span("vjp");
                         self.scheme
                             .adjoint_step(rhs, t, h, &cp.u, ks, &[], lambda, grad_theta, aws);
                     }
@@ -576,8 +603,12 @@ impl<S: StepScheme> AdjointDriver<S> {
                         let mut ks: Vec<Vec<f32>> =
                             (0..self.scheme.n_stages()).map(|_| vec![0.0f32; n]).collect();
                         let mut un = vec![0.0f32; n];
-                        self.scheme.step(rhs, t, h, &cp.u, &mut ks, &mut un, ews);
+                        {
+                            let _sp = obs::span("recompute");
+                            self.scheme.step(rhs, t, h, &cp.u, &mut ks, &mut un, ews);
+                        }
                         self.recompute_steps += 1;
+                        let _sp = obs::span("vjp");
                         self.scheme
                             .adjoint_step(rhs, t, h, &cp.u, &ks, &un, lambda, grad_theta, aws);
                     }
@@ -595,22 +626,30 @@ impl<S: StepScheme> AdjointDriver<S> {
                 if last + 1 == nt && self.transient_last.is_some() {
                     let (u, tks) = self.transient_last.take().expect("transient last step");
                     let u_next = self.final_state.clone();
+                    let _sp = obs::span("vjp");
                     self.scheme
                         .adjoint_step(rhs, tl, hl, &u, &tks, &u_next, lambda, grad_theta, aws);
                 } else {
-                    let mut u = self.store.get(lo).expect("anchor checkpoint").u.clone();
+                    let mut u = {
+                        let _sp = obs::span("restore");
+                        self.store.get(lo).expect("anchor checkpoint").u.clone()
+                    };
                     let mut un = vec![0.0f32; n];
                     let mut ks: Vec<Vec<f32>> =
                         (0..self.scheme.n_stages()).map(|_| vec![0.0f32; n]).collect();
-                    for s in lo..last {
-                        let (t, h) = self.steps[s];
-                        self.scheme.step(rhs, t, h, &u, &mut ks, &mut un, ews);
+                    {
+                        let _sp = obs::span("recompute");
+                        for s in lo..last {
+                            let (t, h) = self.steps[s];
+                            self.scheme.step(rhs, t, h, &u, &mut ks, &mut un, ews);
+                            self.recompute_steps += 1;
+                            std::mem::swap(&mut u, &mut un);
+                        }
+                        // one more execution for step `last` itself
+                        self.scheme.step(rhs, tl, hl, &u, &mut ks, &mut un, ews);
                         self.recompute_steps += 1;
-                        std::mem::swap(&mut u, &mut un);
                     }
-                    // one more execution for step `last` itself
-                    self.scheme.step(rhs, tl, hl, &u, &mut ks, &mut un, ews);
-                    self.recompute_steps += 1;
+                    let _sp = obs::span("vjp");
                     self.scheme
                         .adjoint_step(rhs, tl, hl, &u, &ks, &un, lambda, grad_theta, aws);
                 }
@@ -621,13 +660,20 @@ impl<S: StepScheme> AdjointDriver<S> {
                     // upgrade the bare anchor at `lo` to full (only ever
                     // decided for stage-recording schemes)
                     if anchor_kind == Anchor::Bare && !fwd {
-                        let cp = self.store.get(lo).expect("anchor").clone();
+                        let cp = {
+                            let _sp = obs::span("restore");
+                            self.store.get(lo).expect("anchor").clone()
+                        };
                         let (t, h) = self.steps[lo];
                         let mut ks: Vec<Vec<f32>> =
                             (0..self.scheme.n_stages()).map(|_| vec![0.0f32; n]).collect();
                         let mut un = vec![0.0f32; n];
-                        self.scheme.step(rhs, t, h, &cp.u, &mut ks, &mut un, ews);
+                        {
+                            let _sp = obs::span("recompute");
+                            self.scheme.step(rhs, t, h, &cp.u, &mut ks, &mut un, ews);
+                        }
                         self.recompute_steps += 1;
+                        let _sp = obs::span("store");
                         self.store.insert(StepCheckpoint { ks: Some(ks), ..cp });
                     }
                     // fwd case: the forward pass already stored it full
@@ -637,27 +683,37 @@ impl<S: StepScheme> AdjointDriver<S> {
                 let mid = lo + offset;
                 if !fwd && self.store.get(mid).is_none() {
                     // create the checkpoint by walking from the anchor
-                    let mut u = self.store.get(lo).expect("anchor checkpoint").u.clone();
+                    let mut u = {
+                        let _sp = obs::span("restore");
+                        self.store.get(lo).expect("anchor checkpoint").u.clone()
+                    };
                     let mut un = vec![0.0f32; n];
                     let mut ks: Vec<Vec<f32>> =
                         (0..self.scheme.n_stages()).map(|_| vec![0.0f32; n]).collect();
-                    for s in lo..mid {
-                        let (t, h) = self.steps[s];
-                        self.scheme.step(rhs, t, h, &u, &mut ks, &mut un, ews);
-                        self.recompute_steps += 1;
-                        std::mem::swap(&mut u, &mut un);
-                    }
                     let (tm, hm) = self.steps[mid];
-                    let stored_ks = if needs_stages {
-                        // one extra execution for the stages of step `mid`
-                        self.scheme.step(rhs, tm, hm, &u, &mut ks, &mut un, ews);
-                        self.recompute_steps += 1;
-                        Some(ks)
-                    } else {
-                        None
+                    let stored_ks = {
+                        let _sp = obs::span("recompute");
+                        for s in lo..mid {
+                            let (t, h) = self.steps[s];
+                            self.scheme.step(rhs, t, h, &u, &mut ks, &mut un, ews);
+                            self.recompute_steps += 1;
+                            std::mem::swap(&mut u, &mut un);
+                        }
+                        if needs_stages {
+                            // one extra execution for the stages of step `mid`
+                            self.scheme.step(rhs, tm, hm, &u, &mut ks, &mut un, ews);
+                            self.recompute_steps += 1;
+                            Some(ks)
+                        } else {
+                            None
+                        }
                     };
+                    let _sp = obs::span("store");
                     self.store
                         .insert(StepCheckpoint { step: mid, t: tm, h: hm, u, ks: stored_ks });
+                    if obs::enabled() {
+                        obs::gauge("ckpt.hot_bytes", self.store.stats().hot_bytes as f64);
+                    }
                 }
                 // right block first (backward order), then left
                 self.binomial_block(rhs, mid, hi, c - 1, fwd, lambda, grad_theta, aws, ews);

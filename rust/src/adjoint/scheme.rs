@@ -20,6 +20,7 @@
 use crate::adjoint::discrete_erk::{adjoint_erk_step, AdjointErkWorkspace};
 use crate::adjoint::discrete_implicit::adjoint_theta_step;
 use crate::linalg::gmres::GmresOptions;
+use crate::obs;
 use crate::ode::adaptive::{integrate_adaptive, AdaptiveController, AdaptiveResult};
 use crate::ode::erk::{erk_step, integrate_grid, ErkWorkspace};
 use crate::ode::implicit::{ImplicitStepper, ThetaScheme};
@@ -240,7 +241,11 @@ impl StepScheme for ThetaStep {
         u_next: &mut [f32],
         ws: &mut ImplicitStepper,
     ) {
-        ws.step(rhs, t, h, u, u_next);
+        let rec = ws.step(rhs, t, h, u, u_next);
+        if obs::enabled() {
+            obs::counter("newton.iters", rec.newton.iters as f64);
+            obs::counter("newton.linear_iters", rec.newton.linear_iters as f64);
+        }
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -272,11 +277,18 @@ impl StepScheme for ThetaStep {
             grad_theta,
             &self.gmres_opts,
         );
-        if cfg!(debug_assertions) && !res.converged {
-            eprintln!(
-                "warning: transposed {} solve stalled at t = {t:.6e} (h = {h:.3e})",
-                self.scheme.name
-            );
+        if obs::enabled() {
+            obs::counter("gmres.transposed_iters", res.iters as f64);
+        }
+        if !res.converged {
+            // diagnosed through the obs event path (no stderr noise): the
+            // warning lands in the trace with its solve coordinates
+            obs::warn("warn.theta_stall", || {
+                format!(
+                    "transposed {} solve stalled at t = {t:.6e} (h = {h:.3e}, residual = {:.3e})",
+                    self.scheme.name, res.residual
+                )
+            });
         }
     }
 
@@ -292,7 +304,11 @@ impl StepScheme for ThetaStep {
         let mut u = u0.to_vec();
         let mut u_next = vec![0.0f32; n];
         for (step, &(t, h)) in steps.iter().enumerate() {
-            stepper.step(rhs, t, h, &u, &mut u_next);
+            let rec = stepper.step(rhs, t, h, &u, &mut u_next);
+            if obs::enabled() {
+                obs::counter("newton.iters", rec.newton.iters as f64);
+                obs::counter("newton.linear_iters", rec.newton.linear_iters as f64);
+            }
             sink(step, t, h, &u, &[], &u_next);
             std::mem::swap(&mut u, &mut u_next);
         }

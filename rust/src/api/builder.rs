@@ -6,7 +6,7 @@
 //! comes back as one `Result` with the underlying message intact.
 
 use crate::api::session::Session;
-use crate::api::spec::{MethodSpec, RunSpec};
+use crate::api::spec::{MethodSpec, ObsSpec, RunSpec};
 use crate::checkpoint::CheckpointPolicy;
 use crate::exec::{default_workers, ExecConfig, DEFAULT_SHARD_ROWS};
 use crate::nn::module::ArchSpec;
@@ -24,6 +24,7 @@ pub struct SolverBuilder {
     grid: TimeGrid,
     exec: Option<ExecConfig>,
     arch: Option<ArchSpec>,
+    obs: Option<ObsSpec>,
     /// first deferred `_str` parse error; reported by `build`
     err: Option<String>,
 }
@@ -44,6 +45,7 @@ impl SolverBuilder {
             grid: TimeGrid::Uniform { nt: 8 },
             exec: None,
             arch: None,
+            obs: None,
             err: None,
         }
     }
@@ -58,6 +60,7 @@ impl SolverBuilder {
             grid: spec.grid,
             exec: spec.exec,
             arch: spec.arch,
+            obs: spec.obs,
             err: None,
         }
     }
@@ -195,6 +198,16 @@ impl SolverBuilder {
         self
     }
 
+    // ---------------- observability ----------------
+
+    /// Record trace events and metrics for runs on this spec
+    /// (DESIGN.md §11).  Opening a [`Session`] on the built spec switches
+    /// on the process-global obs sink; recording never changes gradients.
+    pub fn observe(mut self, enabled: bool) -> Self {
+        self.obs = Some(ObsSpec { enabled });
+        self
+    }
+
     // ---------------- terminal ----------------
 
     /// Validate and produce the spec: the first deferred parse error or
@@ -211,6 +224,7 @@ impl SolverBuilder {
             grid: self.grid,
             exec: self.exec,
             arch: self.arch,
+            obs: self.obs,
         };
         spec.validate()?;
         Ok(spec)

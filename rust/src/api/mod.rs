@@ -29,7 +29,7 @@ pub mod spec;
 pub use builder::SolverBuilder;
 pub use registry::MethodRegistry;
 pub use session::{GradReport, Session};
-pub use spec::{MethodSpec, RunSpec, METHOD_NAMES};
+pub use spec::{MethodSpec, ObsSpec, RunSpec, METHOD_NAMES};
 
 // the architecture half of a spec document lives in the nn layer; re-export
 // it here so facade users address runs and dynamics from one import

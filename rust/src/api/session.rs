@@ -21,6 +21,7 @@
 use crate::api::registry::{global, MethodRegistry};
 use crate::api::spec::RunSpec;
 use crate::methods::{BlockSpec, GradientMethod, MethodReport};
+use crate::obs;
 use crate::ode::rhs::OdeRhs;
 
 /// Outcome of one [`Session::grad`] call.  `u_f` is owned; the gradient
@@ -55,6 +56,12 @@ impl Session {
     /// Like [`Session::new`] against a custom registry.
     pub fn with_registry(spec: RunSpec, registry: &MethodRegistry) -> Result<Session, String> {
         spec.validate()?;
+        // the sink is process-global: a spec that asks for observability
+        // switches it on for the process; sessions never switch it off
+        // (another live session may want it)
+        if spec.obs.map_or(false, |o| o.enabled) {
+            obs::enable();
+        }
         let engine = registry.make(&spec)?;
         let block = spec.block_spec();
         Ok(Session {
@@ -89,6 +96,7 @@ impl Session {
 
     /// Integrate forward; must precede [`Session::backward`].
     pub fn forward(&mut self, rhs: &dyn OdeRhs, u0: &[f32]) -> Vec<f32> {
+        let _sp = obs::span("session.forward");
         self.engine.forward(rhs, &self.block, u0)
     }
 
@@ -96,6 +104,7 @@ impl Session {
     /// pass, accumulating into `grad_theta` (caller-owned buffers — the
     /// blocks/λ-jumps call style).
     pub fn backward(&mut self, rhs: &dyn OdeRhs, lambda: &mut [f32], grad_theta: &mut [f32]) {
+        let _sp = obs::span("session.backward");
         self.engine.backward(rhs, &self.block, lambda, grad_theta);
     }
 
@@ -104,6 +113,7 @@ impl Session {
     /// [`Session::lambda0`] holds ∂L/∂u_0 and [`Session::grad_theta`]
     /// holds ∂L/∂θ.
     pub fn grad(&mut self, rhs: &dyn OdeRhs, u0: &[f32], lambda_f: &[f32]) -> GradReport {
+        let _sp = obs::span("session.grad");
         let param_len = rhs.param_len();
         if self.lambda.len() != lambda_f.len() || self.grad.len() != param_len {
             self.lambda = vec![0.0; lambda_f.len()];

@@ -125,6 +125,18 @@ impl MethodSpec {
     }
 }
 
+/// Observability controls for a run (DESIGN.md §11).  Off by default;
+/// when enabled, [`crate::api::Session`] switches on the process-global
+/// [`crate::obs`] sink so the run records phase spans, tier/arbiter
+/// events, and solver counters.  Recording is observation-only — it
+/// never feeds back into computed values — so gradients are bitwise
+/// identical with obs on or off.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ObsSpec {
+    /// record trace events and metrics for runs opened on this spec
+    pub enabled: bool,
+}
+
 /// One typed description of a gradient run: method × scheme × span ×
 /// grid × execution engine.  Build via [`crate::api::SolverBuilder`] (which
 /// validates), serialize via [`RunSpec::to_json`], execute via
@@ -142,6 +154,8 @@ pub struct RunSpec {
     /// dynamics architecture ([`ArchSpec`]); `None` when the caller
     /// supplies its own `OdeRhs` (analytic RHSs, XLA artifacts)
     pub arch: Option<ArchSpec>,
+    /// observability controls ([`ObsSpec`]); `None` records nothing
+    pub obs: Option<ObsSpec>,
 }
 
 impl RunSpec {
@@ -308,6 +322,10 @@ impl RunSpec {
             None => Json::Null,
             Some(a) => a.to_json(),
         };
+        let obs = match &self.obs {
+            None => Json::Null,
+            Some(o) => Json::obj(vec![("enabled", Json::Bool(o.enabled))]),
+        };
         Json::obj(vec![
             ("version", Json::num(1.0)),
             ("method", Json::str(self.method.name())),
@@ -317,6 +335,7 @@ impl RunSpec {
             ("grid", grid_to_json(&self.grid)),
             ("exec", exec),
             ("arch", arch),
+            ("obs", obs),
         ])
     }
 
@@ -377,7 +396,22 @@ impl RunSpec {
             None | Some(Json::Null) => None,
             Some(a) => Some(ArchSpec::from_json(a)?),
         };
-        let spec = RunSpec { method, scheme, t0, tf, grid, exec, arch };
+        let obs = match v.get("obs") {
+            None | Some(Json::Null) => None,
+            Some(o) => {
+                // a present obs block with no "enabled" key means on (the
+                // block's presence is the signal); present-but-not-a-bool
+                // is an error, never a silent default
+                let enabled = match o.get("enabled") {
+                    None => true,
+                    Some(b) => b.as_bool().ok_or_else(|| {
+                        format!("obs field \"enabled\" must be a bool (got {b:?})")
+                    })?,
+                };
+                Some(ObsSpec { enabled })
+            }
+        };
+        let spec = RunSpec { method, scheme, t0, tf, grid, exec, arch, obs };
         spec.validate()?;
         Ok(spec)
     }
@@ -494,6 +528,33 @@ mod tests {
         assert!(e.contains("spill dir"), "{e}");
         let e = MethodSpec::parse("nope").unwrap_err();
         assert!(e.contains("nope"), "{e}");
+    }
+
+    #[test]
+    fn obs_block_round_trips_and_defaults_off() {
+        let spec = crate::api::SolverBuilder::new().uniform(4).build().unwrap();
+        assert!(spec.obs.is_none(), "off by default");
+        assert_eq!(RunSpec::from_json(&spec.to_json()).unwrap(), spec);
+
+        let spec = crate::api::SolverBuilder::new()
+            .uniform(4)
+            .observe(true)
+            .build()
+            .unwrap();
+        let back = RunSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.obs, Some(ObsSpec { enabled: true }));
+        assert_eq!(back, spec, "lossless round-trip");
+
+        // a bare obs block means on; a non-bool "enabled" is an error
+        let base = r#"{"method":"pnode","scheme":"rk4","grid":{"kind":"uniform","nt":4}"#;
+        let v = crate::util::json::parse(&format!("{base},\"obs\":{{}}}}")).unwrap();
+        assert_eq!(
+            RunSpec::from_json(&v).unwrap().obs,
+            Some(ObsSpec { enabled: true })
+        );
+        let v =
+            crate::util::json::parse(&format!("{base},\"obs\":{{\"enabled\":1}}}}")).unwrap();
+        assert!(RunSpec::from_json(&v).unwrap_err().contains("enabled"));
     }
 
     #[test]

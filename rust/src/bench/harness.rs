@@ -21,6 +21,20 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// JSON encoding for machine-readable bench artifacts (the micro
+    /// bench writes `BENCH_micro.json` at the repo root from these).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_secs", Json::num(self.mean_secs)),
+            ("std_secs", Json::num(self.std_secs)),
+            ("min_secs", Json::num(self.min_secs)),
+            ("max_secs", Json::num(self.max_secs)),
+        ])
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "{}: {} ± {} (n={}, min {}, max {})",
@@ -166,6 +180,12 @@ mod tests {
         assert!(r.min_secs <= r.mean_secs + 1e-12);
         assert_eq!(r.iters, 5);
         assert!(r.summary().contains("spin"));
+        // the JSON encoding round-trips through the in-tree parser
+        let j = crate::util::json::parse(&r.to_json().to_string_compact()).unwrap();
+        assert_eq!(j.get("name").and_then(|v| v.as_str()), Some("spin"));
+        assert_eq!(j.get("iters").and_then(|v| v.as_usize()), Some(5));
+        assert!(j.get("mean_secs").and_then(|v| v.as_f64()).is_some());
+        assert!(j.get("max_secs").and_then(|v| v.as_f64()).is_some());
     }
 
     #[test]

@@ -12,6 +12,7 @@ use super::prefetch::Prefetcher;
 use super::{CheckpointBackend, TierStats};
 use crate::checkpoint::store::StepCheckpoint;
 use crate::exec::arbiter::{BudgetArbiter, Lease};
+use crate::obs;
 
 /// Construction parameters for [`TieredStore`].
 #[derive(Clone, Debug)]
@@ -135,11 +136,15 @@ impl TieredStore {
             };
             let cp = self.hot.remove(&victim).expect("victim resident");
             self.hot_bytes -= cp.bytes();
+            let _sp = obs::span("tier.spill");
             self.cold
                 .append(&cp)
                 .expect("checkpoint spill failed (disk full or spill dir gone?)");
         }
         self.sync_lease();
+        if obs::enabled() {
+            obs::gauge("tier.hot_bytes", self.ram_bytes() as f64);
+        }
     }
 
     fn hot_insert(&mut self, cp: StepCheckpoint, protect: Option<usize>) {
@@ -223,6 +228,7 @@ impl TieredStore {
         // cold entries remain, a later lookup re-reads them), so RAM stays
         // bounded by budget + one record even under out-of-order access.
         if self.prefetcher.as_ref().map(|pf| pf.will_deliver(step)).unwrap_or(false) {
+            let _sp = obs::span("tier.prefetch_wait");
             while let Some(cp) = self.prefetcher.as_mut().and_then(|pf| pf.recv()) {
                 if cp.step == step {
                     self.cold.remove(step);
@@ -240,11 +246,13 @@ impl TieredStore {
         // prefetcher gone or out of order: synchronous read.  Invalidate
         // any still-in-flight delivery of this step — if the step is later
         // re-spilled, that old payload must not satisfy the new entry.
-        let cp = self
-            .cold
-            .read(step)
-            .expect("cold tier read failed")
-            .expect("indexed record readable");
+        let cp = {
+            let _sp = obs::span("tier.cold_read");
+            self.cold
+                .read(step)
+                .expect("cold tier read failed")
+                .expect("indexed record readable")
+        };
         self.cold.remove(step);
         if let Some(pf) = &mut self.prefetcher {
             pf.invalidate(step);
@@ -270,6 +278,9 @@ impl CheckpointBackend for TieredStore {
             self.hot_bytes -= cp.bytes();
             self.stats_hot_hits += 1;
             self.sync_lease();
+            if obs::enabled() {
+                obs::gauge("tier.hot_bytes", self.ram_bytes() as f64);
+            }
             return Some(cp);
         }
         self.fetch_cold(step)

@@ -61,6 +61,20 @@ pub struct ExperimentRow {
     pub lease_denied_bytes: u64,
     /// peak mandatory-floor overdraw beyond the pool (0 = budget held)
     pub over_grant_bytes: u64,
+    /// per-block exec stats folded into the exec columns
+    /// (0 = a single, never-aggregated block)
+    pub blocks_merged: u64,
+    /// observed wall time per adjoint phase, `(phase, seconds)` over
+    /// forward/store/restore/recompute/vjp — filled by
+    /// [`ExperimentRow::attach_obs`] on observed runs, empty otherwise
+    pub phase_secs: Vec<(String, f64)>,
+    /// [`crate::methods::MemModel`]'s checkpoint-storage prediction for
+    /// this run (observed runs; DESIGN.md §11)
+    pub mem_pred_ckpt_bytes: u64,
+    /// live peak checkpoint bytes seen by the obs gauges
+    pub mem_obs_ckpt_bytes: u64,
+    /// observed / predicted checkpoint bytes (0 when nothing attached)
+    pub mem_model_ratio: f64,
     /// the full serialized [`RunSpec`] that produced this row (rows from
     /// facade-driven jobs are reproducible artifacts)
     pub run_spec: Option<Json>,
@@ -105,9 +119,34 @@ impl ExperimentRow {
             lease_waits: report.exec.lease_waits,
             lease_denied_bytes: report.exec.lease_denied_bytes,
             over_grant_bytes: report.exec.over_grant_bytes,
+            blocks_merged: report.exec.blocks_merged,
+            phase_secs: Vec::new(),
+            mem_pred_ckpt_bytes: 0,
+            mem_obs_ckpt_bytes: 0,
+            mem_model_ratio: 0.0,
             run_spec: None,
             extra: Vec::new(),
         }
+    }
+
+    /// Fold an obs metrics snapshot into this row: per-phase wall times
+    /// plus the predicted-vs-observed checkpoint-memory comparison (the
+    /// paper's Table-2 model validated on every observed run; the
+    /// prediction comes from [`crate::methods::MemModel::ckpt_bytes_for`]).
+    pub fn attach_obs(&mut self, m: &crate::obs::Metrics, predicted_ckpt_bytes: u64) {
+        self.phase_secs = crate::obs::PHASES
+            .iter()
+            .filter(|p| m.span_count(p) > 0)
+            .map(|p| (p.to_string(), m.span_total_secs(p)))
+            .collect();
+        let observed = m.gauge("ckpt.hot_bytes").max.max(m.gauge("tier.hot_bytes").max);
+        self.mem_obs_ckpt_bytes = observed as u64;
+        self.mem_pred_ckpt_bytes = predicted_ckpt_bytes;
+        self.mem_model_ratio = if predicted_ckpt_bytes == 0 {
+            0.0
+        } else {
+            observed / predicted_ckpt_bytes as f64
+        };
     }
 
     /// Row identity and embedded spec derived from a [`RunSpec`] (the
@@ -166,7 +205,28 @@ impl ExperimentRow {
             ("lease_waits".to_string(), Json::num(self.lease_waits as f64)),
             ("lease_denied_bytes".to_string(), Json::num(self.lease_denied_bytes as f64)),
             ("over_grant_bytes".to_string(), Json::num(self.over_grant_bytes as f64)),
+            ("blocks_merged".to_string(), Json::num(self.blocks_merged as f64)),
+            (
+                "mem_pred_ckpt_bytes".to_string(),
+                Json::num(self.mem_pred_ckpt_bytes as f64),
+            ),
+            (
+                "mem_obs_ckpt_bytes".to_string(),
+                Json::num(self.mem_obs_ckpt_bytes as f64),
+            ),
+            ("mem_model_ratio".to_string(), Json::num(self.mem_model_ratio)),
         ];
+        if !self.phase_secs.is_empty() {
+            kv.push((
+                "phase_secs".to_string(),
+                Json::Obj(
+                    self.phase_secs
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v)))
+                        .collect(),
+                ),
+            ));
+        }
         if let Some(spec) = &self.run_spec {
             kv.push(("run_spec".to_string(), spec.clone()));
         }
@@ -365,6 +425,47 @@ mod tests {
         assert!(j.contains("\"samples_per_sec\""));
         assert!(j.contains("\"peak_leased_bytes\""));
         assert!(j.contains("\"lease_waits\""));
+    }
+
+    #[test]
+    fn attach_obs_fills_phase_and_memcheck_columns() {
+        use crate::obs::{Event, EventKind, Metrics};
+        let ev = |name: &'static str, kind: EventKind, seq: u64, ts: u64| Event {
+            name,
+            kind,
+            tid: 0,
+            seq,
+            ts_nanos: ts,
+            detail: None,
+        };
+        let events = vec![
+            ev("forward", EventKind::Begin, 0, 0),
+            ev("store", EventKind::Begin, 1, 100),
+            ev("ckpt.hot_bytes", EventKind::Gauge(4096.0), 2, 150),
+            ev("store", EventKind::End, 3, 200),
+            ev("forward", EventKind::End, 4, 1_000),
+        ];
+        let m = Metrics::from_events(&events);
+        let mut row = ExperimentRow::from_report(
+            "e",
+            "d",
+            "pnode",
+            "rk4",
+            4,
+            &MethodReport::default(),
+            0.0,
+            0,
+        );
+        row.attach_obs(&m, 8192);
+        assert_eq!(row.mem_obs_ckpt_bytes, 4096);
+        assert_eq!(row.mem_pred_ckpt_bytes, 8192);
+        assert!((row.mem_model_ratio - 0.5).abs() < 1e-12);
+        let names: Vec<&str> = row.phase_secs.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["forward", "store"], "only phases that ran appear");
+        let j = row.to_json().to_string_compact();
+        assert!(j.contains("\"phase_secs\""), "{j}");
+        assert!(j.contains("\"mem_model_ratio\":0.5"), "{j}");
+        assert!(j.contains("\"blocks_merged\""), "{j}");
     }
 
     #[test]

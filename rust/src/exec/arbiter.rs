@@ -39,6 +39,8 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::obs;
+
 /// Aggregate pool counters (see [`BudgetArbiter::stats`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ArbiterStats {
@@ -132,6 +134,9 @@ impl Lease {
         if want <= self.held {
             return self.held;
         }
+        // the span covers the lock acquisition, so its duration IS the
+        // wait this ask spent contending with the rest of the fleet
+        let _sp = obs::span("lease.ask");
         let parties = self.arb.parties.load(Ordering::Relaxed).max(1) as u64;
         let share = self.arb.total / parties;
         let target = want.min(self.held.max(share));
@@ -141,6 +146,10 @@ impl Lease {
         if grant < want {
             st.lease_waits += 1;
             st.denied_bytes += want - grant;
+            if obs::enabled() {
+                obs::instant("lease.wait");
+                obs::counter("lease.denied_bytes", (want - grant) as f64);
+            }
         }
         st.leased += grant - self.held;
         st.peak_leased = st.peak_leased.max(st.leased);
@@ -155,6 +164,7 @@ impl Lease {
         if bytes == self.held {
             return;
         }
+        let _sp = obs::span("lease.settle");
         let mut st = self.arb.state.lock().expect("arbiter lock");
         if bytes >= self.held {
             st.leased += bytes - self.held;

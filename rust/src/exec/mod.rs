@@ -91,6 +91,11 @@ pub struct ExecStats {
     pub lease_denied_bytes: u64,
     /// peak mandatory-floor overdraw beyond the pool
     pub over_grant_bytes: u64,
+    /// how many per-block stats this aggregate folds together (0 on a
+    /// raw, never-merged struct, which represents a single block) —
+    /// makes the conservative min-throughput `samples_per_sec`
+    /// interpretable downstream
+    pub blocks_merged: u64,
 }
 
 impl ExecStats {
@@ -99,6 +104,11 @@ impl ExecStats {
     /// counters accumulate, peaks widen, and the reported throughput is
     /// the slowest block's (conservative).
     pub fn merge(&mut self, other: &ExecStats) {
+        // a freshly produced per-block stats struct carries 0 and counts
+        // as one block, so the aggregate says how many mins were taken;
+        // seed aggregates from a real first block (not a default) or the
+        // empty accumulator is itself counted
+        self.blocks_merged = self.blocks_merged.max(1) + other.blocks_merged.max(1);
         self.workers = self.workers.max(other.workers);
         self.shards = self.shards.max(other.shards);
         self.samples_per_sec = if self.samples_per_sec == 0.0 {
@@ -153,6 +163,7 @@ mod tests {
             lease_waits: 2,
             lease_denied_bytes: 64,
             over_grant_bytes: 0,
+            blocks_merged: 0,
         };
         let b = ExecStats {
             workers: 4,
@@ -163,6 +174,7 @@ mod tests {
             lease_waits: 1,
             lease_denied_bytes: 16,
             over_grant_bytes: 8,
+            blocks_merged: 0,
         };
         a.merge(&b);
         assert_eq!(a.samples_per_sec, 80.0, "slowest block wins");
@@ -170,8 +182,10 @@ mod tests {
         assert_eq!(a.lease_waits, 3);
         assert_eq!(a.lease_denied_bytes, 80);
         assert_eq!(a.over_grant_bytes, 8);
+        assert_eq!(a.blocks_merged, 2, "two raw per-block stats folded");
         let mut c = ExecStats::default();
         c.merge(&a);
         assert_eq!(c.samples_per_sec, 80.0, "zero treated as unset");
+        assert_eq!(c.blocks_merged, 3, "a default self still counts as one block");
     }
 }

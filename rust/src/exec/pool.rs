@@ -10,6 +10,18 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::obs;
+
+/// Run one pool job inside its own obs logical-thread context: events are
+/// keyed by job index (`job + 1`; 0 is the main thread), not by OS
+/// thread, so the merged trace is identical across runs and worker
+/// counts even though index claiming is dynamic.
+fn run_job_observed<T>(i: usize, job: impl FnOnce(usize) -> T) -> T {
+    let _ctx = obs::job_ctx(i as u32 + 1);
+    let _sp = obs::span("pool.job");
+    job(i)
+}
+
 /// Run `job(0..n_jobs)` on up to `workers` threads; results in job order.
 ///
 /// `workers <= 1` (or a single job) runs inline on the caller's thread.
@@ -25,7 +37,7 @@ where
     }
     let workers = workers.clamp(1, n_jobs);
     if workers == 1 {
-        return (0..n_jobs).map(job).collect();
+        return (0..n_jobs).map(|i| run_job_observed(i, &job)).collect();
     }
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<T>>> = (0..n_jobs).map(|_| Mutex::new(None)).collect();
@@ -36,7 +48,7 @@ where
                 if i >= n_jobs {
                     break;
                 }
-                let out = job(i);
+                let out = run_job_observed(i, &job);
                 *slots[i].lock().expect("result slot") = Some(out);
             });
         }

@@ -35,6 +35,7 @@ pub mod exec;
 pub mod linalg;
 pub mod methods;
 pub mod nn;
+pub mod obs;
 pub mod ode;
 pub mod runtime;
 pub mod tasks;

@@ -7,7 +7,12 @@
 //!                               block in the same file picks what the
 //!                               spec drives (gradient | classification |
 //!                               cnf), and the spec's "arch" block picks
-//!                               the dynamics architecture (DESIGN.md §10)
+//!                               the dynamics architecture (DESIGN.md §10).
+//!                               `--trace out.trace.json` records the run
+//!                               and writes a Chrome trace-event file
+//!                               (load it in Perfetto / chrome://tracing);
+//!                               `--metrics` prints the folded metrics
+//!                               JSON (DESIGN.md §11)
 //!   info                      — artifact/platform info
 //!   gradcheck                 — XLA-vs-Rust cross-check on quick_d8
 //!   train-clf [--method ...]  — classification training (spiral surrogate);
@@ -79,6 +84,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     let spec = RunSpec::from_json(&doc).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
     println!("spec ({path}):\n{}", spec.to_json().to_string_pretty());
 
+    // --trace / --metrics (or an "obs" block in the spec itself) switch
+    // on the process-global recording sink before the run starts
+    let trace_path = args.get("trace").map(|s| s.to_string());
+    let want_metrics = args.flag("metrics");
+    if trace_path.is_some() || want_metrics || spec.obs.map_or(false, |o| o.enabled) {
+        pnode::obs::enable();
+    }
+
     // the "task" block is fully ours, so hold it to the spec's standard:
     // unknown keys are typos, and present-but-mistyped values are errors,
     // never silent defaults — the saved row must reproduce the document
@@ -119,14 +132,14 @@ fn cmd_run(args: &Args) -> Result<()> {
             anyhow::anyhow!("{path}: task field \"kind\" must be a string (got {k:?})")
         })?,
     };
-    match kind {
+    let events = match kind {
         "gradient" => run_spec_gradient(
             &spec,
             get_usize("dim", 16)?,
             get_usize("hidden", 32)?,
             get_usize("batch", 8)?,
             get_usize("seed", 7)? as u64,
-        ),
+        )?,
         "classification" => run_spec_classification(
             &spec,
             get_usize("steps", 20)?,
@@ -137,7 +150,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             get_usize("batch", 64)?,
             get_usize("seed", 7)? as u64,
             get_f64("lr", 3e-3)?,
-        ),
+        )?,
         "cnf" => run_spec_cnf(
             &spec,
             get_usize("steps", 10)?,
@@ -147,22 +160,55 @@ fn cmd_run(args: &Args) -> Result<()> {
             get_usize("batch", 32)?,
             get_usize("seed", 7)? as u64,
             get_f64("lr", 2e-2)?,
-        ),
-        k => Err(anyhow::anyhow!(
-            "{path}: unknown task kind {k:?} (want gradient | classification | cnf)"
-        )),
+        )?,
+        k => {
+            return Err(anyhow::anyhow!(
+                "{path}: unknown task kind {k:?} (want gradient | classification | cnf)"
+            ))
+        }
+    };
+
+    // solver warnings land in the trace, not on stderr: surface them here
+    for e in events.iter().filter(|e| e.name.starts_with("warn.")) {
+        match &e.detail {
+            Some(d) => println!("warn [{}]: {d}", e.name),
+            None => println!("warn [{}]", e.name),
+        }
+    }
+    if let Some(tp) = &trace_path {
+        let trace = pnode::obs::chrome_trace(&events);
+        std::fs::write(tp, trace.to_string_compact())?;
+        println!("chrome trace ({} events) written to {tp}", events.len());
+    }
+    if want_metrics {
+        let m = pnode::obs::Metrics::from_events(&events);
+        println!("metrics:\n{}", m.to_json().to_string_pretty());
+    }
+    Ok(())
+}
+
+/// Drain the obs sink when recording is on (the per-task tail call; an
+/// un-observed run returns no events without touching the sink).
+fn take_obs_events() -> Vec<pnode::obs::Event> {
+    if pnode::obs::enabled() {
+        pnode::obs::take()
+    } else {
+        Vec::new()
     }
 }
 
 /// One gradient of L = Σ u(T) on a synthetic MLP RHS — the zero-to-aha
 /// path for a spec file: run it, print the report, persist the row.
+/// Observed runs fold their metrics into the saved row (per-phase wall
+/// times, predicted-vs-observed checkpoint memory) and return the raw
+/// events for the caller's trace export.
 fn run_spec_gradient(
     spec: &pnode::api::RunSpec,
     dim: usize,
     hidden: usize,
     batch: usize,
     seed: u64,
-) -> Result<()> {
+) -> Result<Vec<pnode::obs::Event>> {
     use pnode::api::ArchSpec;
     use pnode::nn::Act;
     use pnode::ode::ModuleRhs;
@@ -202,10 +248,36 @@ fn run_spec_gradient(
         row.workers,
         row.time_secs
     );
+    let n_accepted = row.n_accepted;
     println!("|dL/dθ| = {:.4}", pnode::tensor::nrm2(session.grad_theta()));
+
+    let events = take_obs_events();
+    if !events.is_empty() {
+        // validate the paper's Table-2 memory model against this run:
+        // predict the checkpoint-storage term from the executed step
+        // count, compare against the live peak the obs gauges saw
+        let metrics = pnode::obs::Metrics::from_events(&events);
+        let n_stages = if spec.scheme.is_implicit() {
+            1
+        } else {
+            spec.scheme.tableau().s as u64
+        };
+        let mm = pnode::methods::MemModel::for_rhs(&rhs, n_stages, n_accepted, 1);
+        let predicted = mm.ckpt_bytes_for(&spec.method);
+        let row = runner.rows.last_mut().expect("row just pushed");
+        row.attach_obs(&metrics, predicted);
+        println!(
+            "memcheck: {}",
+            pnode::obs::memcheck(row.mem_pred_ckpt_bytes, row.mem_obs_ckpt_bytes)
+                .to_string_compact()
+        );
+        for (phase, secs) in &row.phase_secs {
+            println!("  phase {phase:10} {secs:.6}s");
+        }
+    }
     let path = runner.save()?;
     println!("row (with embedded run_spec) saved to {path:?}");
-    Ok(())
+    Ok(events)
 }
 
 /// Spiral-classification training driven entirely by the spec (the CI
@@ -221,7 +293,7 @@ fn run_spec_classification(
     batch: usize,
     seed: u64,
     lr: f64,
-) -> Result<()> {
+) -> Result<Vec<pnode::obs::Event>> {
     use pnode::api::ArchSpec;
     use pnode::data::spiral::SpiralDataset;
     use pnode::nn::{Act, Optimizer};
@@ -274,7 +346,7 @@ fn run_spec_classification(
     let (tl, ta) = task.evaluate(&mut rhs, batch, &xt, &yt);
     println!("test: loss {tl:.4} acc {ta:.3}");
     anyhow::ensure!(tl.is_finite(), "training diverged");
-    Ok(())
+    Ok(take_obs_events())
 }
 
 /// Concatsquash CNF density estimation driven by the spec: Hutchinson
@@ -290,7 +362,7 @@ fn run_spec_cnf(
     batch: usize,
     seed: u64,
     lr: f64,
-) -> Result<()> {
+) -> Result<Vec<pnode::obs::Event>> {
     use pnode::api::ArchSpec;
     use pnode::nn::{Act, Optimizer};
     use pnode::tasks::cnf::{CnfTask, HutchinsonCnfRhs};
@@ -345,7 +417,7 @@ fn run_spec_cnf(
     }
     anyhow::ensure!(last.is_finite(), "CNF training diverged");
     println!("nll {first:.4} -> {last:.4}");
-    Ok(())
+    Ok(take_obs_events())
 }
 
 fn cmd_info() -> Result<()> {

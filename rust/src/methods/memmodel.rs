@@ -87,6 +87,34 @@ impl MemModel {
             + self.act_bytes
     }
 
+    /// The checkpoint-storage term of the prediction alone — the part of
+    /// Table 2 this process actually allocates (no CUDA constant, no
+    /// AD-graph activations) — so observed runs can validate the model
+    /// against live peak checkpoint bytes (DESIGN.md §11).  Tiered
+    /// policies predict their inner placement: the tier split changes
+    /// *where* checkpoints live, never how many bytes exist.
+    pub fn ckpt_bytes_for(&self, method: &crate::api::MethodSpec) -> u64 {
+        use crate::api::MethodSpec as M;
+        use crate::checkpoint::CheckpointPolicy as P;
+        fn policy_bytes(m: &MemModel, p: &P) -> u64 {
+            let slots = m.nt.saturating_sub(1);
+            match p {
+                P::All => m.nb * slots * (m.n_stages + 1) * m.state_bytes,
+                P::SolutionOnly => m.nb * slots * m.state_bytes,
+                P::Binomial { n_checkpoints } => {
+                    m.nb * (*n_checkpoints as u64).min(slots) * (m.n_stages + 1) * m.state_bytes
+                }
+                P::Tiered { inner, .. } => policy_bytes(m, inner),
+            }
+        }
+        match method {
+            M::Pnode { policy } => policy_bytes(self, policy),
+            M::Anode => self.nb * self.state_bytes,
+            M::Aca => self.nb * self.nt * self.state_bytes,
+            M::NodeNaive | M::NodeCont => 0,
+        }
+    }
+
     pub fn by_method(&self, name: &str) -> Option<u64> {
         Some(match name {
             "naive" | "node_naive" => self.node_naive(),
@@ -157,6 +185,34 @@ mod tests {
         assert!(tight < full);
         assert!(tight > m.node_cont());
         assert_eq!(m.pnode_binomial(1000), full, "budget caps at N_t-1");
+    }
+
+    #[test]
+    fn ckpt_term_is_the_model_minus_base_and_graph() {
+        use crate::api::MethodSpec;
+        let m = model();
+        let base_graph = |total: u64, graph: u64| total - graph;
+        let pnode = MethodSpec::parse("pnode").unwrap();
+        assert_eq!(
+            m.ckpt_bytes_for(&pnode) + m.act_bytes,
+            base_graph(m.pnode(), m.base()),
+            "pnode: storage term + one f-eval graph"
+        );
+        let pnode2 = MethodSpec::parse("pnode2").unwrap();
+        assert_eq!(
+            m.ckpt_bytes_for(&pnode2) + m.act_bytes,
+            base_graph(m.pnode2(), m.base())
+        );
+        let bino = MethodSpec::parse("pnode:binomial:2").unwrap();
+        assert_eq!(
+            m.ckpt_bytes_for(&bino) + m.act_bytes,
+            base_graph(m.pnode_binomial(2), m.base())
+        );
+        assert_eq!(m.ckpt_bytes_for(&MethodSpec::Aca), m.nb * m.nt * m.state_bytes);
+        assert_eq!(m.ckpt_bytes_for(&MethodSpec::NodeCont), 0);
+        // tiered predicts its inner placement
+        let tiered = MethodSpec::parse("pnode:tiered:1m:/tmp/x").unwrap();
+        assert_eq!(m.ckpt_bytes_for(&tiered), m.ckpt_bytes_for(&pnode));
     }
 
     #[test]

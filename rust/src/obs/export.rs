@@ -1,0 +1,126 @@
+//! Exporters: Chrome trace-event JSON (loadable in Perfetto or
+//! `chrome://tracing`) and the predicted-vs-observed memory-model check.
+
+use crate::obs::trace::{Event, EventKind};
+use crate::util::json::Json;
+
+fn micros(ts_nanos: u64) -> f64 {
+    ts_nanos as f64 / 1000.0
+}
+
+/// Render the merged event stream as Chrome trace-event JSON:
+/// `{"traceEvents": [...], "displayTimeUnit": "ms"}`.  Spans become
+/// `"B"`/`"E"` duration events, counters and gauges `"C"` counter
+/// events, instants `"i"` with any detail under `args`.  `tid` is the
+/// logical obs tid (0 = main, `job + 1` per pool job), so the track
+/// layout matches the deterministic merge order.
+pub fn chrome_trace(events: &[Event]) -> Json {
+    let mut out: Vec<Json> = Vec::with_capacity(events.len());
+    for e in events {
+        let mut kv: Vec<(&str, Json)> = vec![
+            ("name", Json::str(e.name)),
+            ("ph", Json::str(phase_of(&e.kind))),
+            ("ts", Json::num(micros(e.ts_nanos))),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(e.tid as f64)),
+        ];
+        match &e.kind {
+            EventKind::Counter(v) | EventKind::Gauge(v) => {
+                kv.push(("args", Json::obj(vec![("value", Json::num(*v))])));
+            }
+            EventKind::Instant => {
+                kv.push(("s", Json::str("t")));
+                if let Some(d) = &e.detail {
+                    kv.push(("args", Json::obj(vec![("detail", Json::str(d.clone()))])));
+                }
+            }
+            EventKind::Begin | EventKind::End => {}
+        }
+        out.push(Json::obj(kv));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+fn phase_of(kind: &EventKind) -> &'static str {
+    match kind {
+        EventKind::Begin => "B",
+        EventKind::End => "E",
+        EventKind::Counter(_) | EventKind::Gauge(_) => "C",
+        EventKind::Instant => "i",
+    }
+}
+
+/// Predicted-vs-observed peak-bytes comparison — the paper's Table 2
+/// checked against live gauges on every run.  `ratio = observed /
+/// predicted` (0 when the model predicts zero bytes).
+pub fn memcheck(predicted_bytes: u64, observed_bytes: u64) -> Json {
+    let ratio = if predicted_bytes == 0 {
+        0.0
+    } else {
+        observed_bytes as f64 / predicted_bytes as f64
+    };
+    Json::obj(vec![
+        ("predicted_bytes", Json::num(predicted_bytes as f64)),
+        ("observed_bytes", Json::num(observed_bytes as f64)),
+        ("ratio", Json::num(ratio)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn ev(name: &'static str, kind: EventKind, tid: u32, seq: u64, ts: u64) -> Event {
+        Event { name, kind, tid, seq, ts_nanos: ts, detail: None }
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_the_parser() {
+        let events = vec![
+            ev("forward", EventKind::Begin, 0, 0, 1000),
+            ev("ckpt.hot_bytes", EventKind::Gauge(64.0), 0, 1, 1500),
+            Event {
+                name: "warn.theta_stall",
+                kind: EventKind::Instant,
+                tid: 0,
+                seq: 2,
+                ts_nanos: 1600,
+                detail: Some("t = 0.5".into()),
+            },
+            ev("forward", EventKind::End, 0, 3, 2000),
+        ];
+        let text = chrome_trace(&events).to_string_pretty();
+        let back = parse(&text).expect("exporter emits valid JSON");
+        let arr = back.get("traceEvents").and_then(|t| t.as_arr()).unwrap();
+        assert_eq!(arr.len(), 4);
+        for e in arr {
+            assert!(e.get("name").and_then(|n| n.as_str()).is_some());
+            assert!(e.get("ph").and_then(|p| p.as_str()).is_some());
+            assert!(e.get("ts").and_then(|t| t.as_f64()).is_some());
+            assert!(e.get("pid").is_some() && e.get("tid").is_some());
+        }
+        assert_eq!(arr[0].get("ph").unwrap().as_str(), Some("B"));
+        assert_eq!(arr[1].get("ph").unwrap().as_str(), Some("C"));
+        assert_eq!(arr[2].get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(
+            arr[2].get("args").unwrap().get("detail").unwrap().as_str(),
+            Some("t = 0.5")
+        );
+        assert_eq!(arr[3].get("ph").unwrap().as_str(), Some("E"));
+        // ts is microseconds
+        assert_eq!(arr[0].get("ts").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn memcheck_ratio() {
+        let j = memcheck(1000, 900);
+        assert_eq!(j.get("predicted_bytes").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(j.get("observed_bytes").unwrap().as_f64(), Some(900.0));
+        assert!((j.get("ratio").unwrap().as_f64().unwrap() - 0.9).abs() < 1e-12);
+        assert_eq!(memcheck(0, 5).get("ratio").unwrap().as_f64(), Some(0.0));
+    }
+}

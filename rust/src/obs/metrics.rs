@@ -1,0 +1,338 @@
+//! Metrics derived by folding the merged event stream: counters sum,
+//! gauges keep last/max, spans accumulate count + total wall-time + a
+//! fixed log-bucket latency histogram, and byte gauges are attributed to
+//! the innermost enclosing adjoint phase to give per-phase peaks.
+//!
+//! Keeping derivation out of the hot path means recording stays a plain
+//! buffer append; everything here is replayable from a saved trace.
+
+use crate::obs::trace::{Event, EventKind};
+use crate::obs::PHASES;
+use crate::util::json::Json;
+
+/// Fixed-size base-2 log-bucket histogram of durations in nanoseconds:
+/// bucket `i` holds samples in `[2^i, 2^{i+1})` ns (bucket 0 also takes
+/// 0-ns samples).  64 buckets cover every representable duration.
+#[derive(Clone, Debug)]
+pub struct Hist {
+    counts: [u64; 64],
+    n: u64,
+    sum_nanos: u64,
+    max_nanos: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { counts: [0; 64], n: 0, sum_nanos: 0, max_nanos: 0 }
+    }
+}
+
+impl Hist {
+    fn bucket(nanos: u64) -> usize {
+        (63 - nanos.max(1).leading_zeros()) as usize
+    }
+
+    pub fn record_nanos(&mut self, nanos: u64) {
+        self.counts[Self::bucket(nanos)] += 1;
+        self.n += 1;
+        self.sum_nanos += nanos;
+        self.max_nanos = self.max_nanos.max(nanos);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.sum_nanos as f64 * 1e-9
+    }
+
+    pub fn max_secs(&self) -> f64 {
+        self.max_nanos as f64 * 1e-9
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.total_secs() / self.n as f64
+        }
+    }
+
+    /// Quantile estimate from the buckets: the upper edge of the bucket
+    /// where the cumulative count crosses `q * n`.  Log-bucket accuracy:
+    /// within a factor of 2.
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.n as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return (1u64 << (i + 1).min(63)) as f64 * 1e-9;
+            }
+        }
+        self.max_secs()
+    }
+
+    /// Nonzero buckets as `[{"le_nanos", "count"}, ...]` (upper edges).
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                Json::obj(vec![
+                    ("le_nanos", Json::num((1u128 << (i + 1)).min(u64::MAX as u128) as f64)),
+                    ("count", Json::num(c as f64)),
+                ])
+            })
+            .collect();
+        Json::Arr(buckets)
+    }
+}
+
+/// Last and max sample of a gauge.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GaugeStat {
+    pub last: f64,
+    pub max: f64,
+}
+
+/// Aggregate of all spans sharing one name.
+#[derive(Clone, Debug, Default)]
+pub struct SpanStat {
+    pub count: u64,
+    pub hist: Hist,
+}
+
+impl SpanStat {
+    pub fn total_secs(&self) -> f64 {
+        self.hist.total_secs()
+    }
+}
+
+/// The flat metrics view of one run.  All maps are name-sorted vectors
+/// so JSON output is deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub counters: Vec<(String, f64)>,
+    pub gauges: Vec<(String, GaugeStat)>,
+    pub spans: Vec<(String, SpanStat)>,
+    /// peak value of `*bytes*` gauges per innermost enclosing phase span
+    /// (see [`crate::obs::PHASES`])
+    pub phase_peak_bytes: Vec<(String, u64)>,
+}
+
+fn upsert<T: Default>(v: &mut Vec<(String, T)>, name: &str) -> usize {
+    match v.binary_search_by(|(k, _)| k.as_str().cmp(name)) {
+        Ok(i) => i,
+        Err(i) => {
+            v.insert(i, (name.to_string(), T::default()));
+            i
+        }
+    }
+}
+
+fn get<'a, T>(v: &'a [(String, T)], name: &str) -> Option<&'a T> {
+    v.binary_search_by(|(k, _)| k.as_str().cmp(name)).ok().map(|i| &v[i].1)
+}
+
+impl Metrics {
+    /// Fold a `(tid, seq)`-merged event stream (the output of
+    /// [`crate::obs::take`]) into metrics.
+    pub fn from_events(events: &[Event]) -> Metrics {
+        let mut m = Metrics::default();
+        // per-tid span stacks: (name, begin ts)
+        let mut stacks: Vec<(u32, Vec<(&'static str, u64)>)> = Vec::new();
+        for e in events {
+            let si = match stacks.iter().position(|(t, _)| *t == e.tid) {
+                Some(i) => i,
+                None => {
+                    stacks.push((e.tid, Vec::new()));
+                    stacks.len() - 1
+                }
+            };
+            let stack = &mut stacks[si].1;
+            match &e.kind {
+                EventKind::Begin => stack.push((e.name, e.ts_nanos)),
+                EventKind::End => {
+                    // pop to the matching Begin; unmatched Ends are dropped
+                    if let Some(pos) = stack.iter().rposition(|(n, _)| *n == e.name) {
+                        let (_, t0) = stack.remove(pos);
+                        let i = upsert::<SpanStat>(&mut m.spans, e.name);
+                        let s = &mut m.spans[i].1;
+                        s.count += 1;
+                        s.hist.record_nanos(e.ts_nanos.saturating_sub(t0));
+                    }
+                }
+                EventKind::Counter(v) => {
+                    let i = upsert::<f64>(&mut m.counters, e.name);
+                    m.counters[i].1 += v;
+                }
+                EventKind::Gauge(v) => {
+                    let i = upsert::<GaugeStat>(&mut m.gauges, e.name);
+                    let g = &mut m.gauges[i].1;
+                    g.last = *v;
+                    g.max = g.max.max(*v);
+                    if e.name.contains("bytes") {
+                        if let Some(phase) =
+                            stack.iter().rev().map(|(n, _)| *n).find(|n| PHASES.contains(n))
+                        {
+                            let i = upsert::<u64>(&mut m.phase_peak_bytes, phase);
+                            let p = &mut m.phase_peak_bytes[i].1;
+                            *p = (*p).max(*v as u64);
+                        }
+                    }
+                }
+                EventKind::Instant => {
+                    let i = upsert::<f64>(&mut m.counters, e.name);
+                    m.counters[i].1 += 1.0;
+                }
+            }
+        }
+        m
+    }
+
+    pub fn counter(&self, name: &str) -> f64 {
+        get(&self.counters, name).copied().unwrap_or(0.0)
+    }
+
+    pub fn gauge(&self, name: &str) -> GaugeStat {
+        get(&self.gauges, name).copied().unwrap_or_default()
+    }
+
+    /// Total wall-time of all spans with this name, in seconds.
+    pub fn span_total_secs(&self, name: &str) -> f64 {
+        get(&self.spans, name).map(|s| s.total_secs()).unwrap_or(0.0)
+    }
+
+    pub fn span_count(&self, name: &str) -> u64 {
+        get(&self.spans, name).map(|s| s.count).unwrap_or(0)
+    }
+
+    /// Peak bytes observed while the named phase span was innermost.
+    pub fn phase_peak(&self, phase: &str) -> u64 {
+        get(&self.phase_peak_bytes, phase).copied().unwrap_or(0)
+    }
+
+    /// The flat metrics JSON merged into `ExperimentRow` / printed by
+    /// `pnode run --metrics`.
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters.iter().map(|(k, v)| (k.clone(), Json::num(*v))).collect(),
+        );
+        let gauges = Json::Obj(
+            self.gauges
+                .iter()
+                .map(|(k, g)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![("last", Json::num(g.last)), ("max", Json::num(g.max))]),
+                    )
+                })
+                .collect(),
+        );
+        let spans = Json::Obj(
+            self.spans
+                .iter()
+                .map(|(k, s)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::num(s.count as f64)),
+                            ("total_secs", Json::num(s.total_secs())),
+                            ("mean_secs", Json::num(s.hist.mean_secs())),
+                            ("p50_secs", Json::num(s.hist.quantile_secs(0.5))),
+                            ("p99_secs", Json::num(s.hist.quantile_secs(0.99))),
+                            ("max_secs", Json::num(s.hist.max_secs())),
+                            ("hist", s.hist.to_json()),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let phases = Json::Obj(
+            self.phase_peak_bytes
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("spans", spans),
+            ("phase_peak_bytes", phases),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &'static str, kind: EventKind, tid: u32, seq: u64, ts: u64) -> Event {
+        Event { name, kind, tid, seq, ts_nanos: ts, detail: None }
+    }
+
+    #[test]
+    fn hist_buckets_and_quantiles() {
+        let mut h = Hist::default();
+        for ns in [1u64, 2, 3, 1000, 1_000_000] {
+            h.record_nanos(ns);
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.max_secs() >= 1e-3 - 1e-12);
+        assert!(h.quantile_secs(0.5) > 0.0);
+        assert!(h.quantile_secs(1.0) >= h.quantile_secs(0.5));
+        // bucket edges: 1 -> bucket 0, 2..3 -> bucket 1
+        assert_eq!(Hist::bucket(0), 0);
+        assert_eq!(Hist::bucket(1), 0);
+        assert_eq!(Hist::bucket(2), 1);
+        assert_eq!(Hist::bucket(3), 1);
+        assert_eq!(Hist::bucket(4), 2);
+    }
+
+    #[test]
+    fn fold_derives_counters_spans_and_phase_peaks() {
+        let events = vec![
+            ev("forward", EventKind::Begin, 0, 0, 100),
+            ev("store", EventKind::Begin, 0, 1, 150),
+            ev("ckpt.hot_bytes", EventKind::Gauge(4096.0), 0, 2, 160),
+            ev("store", EventKind::End, 0, 3, 200),
+            ev("ckpt.hot_bytes", EventKind::Gauge(1024.0), 0, 4, 210),
+            ev("nfe", EventKind::Counter(3.0), 0, 5, 220),
+            ev("nfe", EventKind::Counter(2.0), 0, 6, 230),
+            ev("warn.stall", EventKind::Instant, 0, 7, 240),
+            ev("forward", EventKind::End, 0, 8, 300),
+        ];
+        let m = Metrics::from_events(&events);
+        assert_eq!(m.counter("nfe"), 5.0);
+        assert_eq!(m.counter("warn.stall"), 1.0);
+        assert_eq!(m.span_count("store"), 1);
+        assert!((m.span_total_secs("store") - 50e-9).abs() < 1e-15);
+        assert!((m.span_total_secs("forward") - 200e-9).abs() < 1e-15);
+        // 4096 sampled inside store (innermost phase), 1024 inside forward
+        assert_eq!(m.phase_peak("store"), 4096);
+        assert_eq!(m.phase_peak("forward"), 1024);
+        let g = m.gauge("ckpt.hot_bytes");
+        assert_eq!(g.max, 4096.0);
+        assert_eq!(g.last, 1024.0);
+    }
+
+    #[test]
+    fn metrics_json_is_deterministically_ordered() {
+        let events = vec![
+            ev("b.count", EventKind::Counter(1.0), 0, 0, 0),
+            ev("a.count", EventKind::Counter(1.0), 0, 1, 1),
+        ];
+        let m = Metrics::from_events(&events);
+        let s = m.to_json().to_string_compact();
+        let a = s.find("a.count").unwrap();
+        let b = s.find("b.count").unwrap();
+        assert!(a < b, "name-sorted output: {s}");
+    }
+}

@@ -1,0 +1,38 @@
+//! Crate-wide observability: tracing spans + derived metrics, zero deps.
+//!
+//! Design (DESIGN.md §11): a process-global sink gated by ONE relaxed
+//! atomic load when disabled — instrumentation anywhere in the crate is a
+//! single branch until someone calls [`enable`].  When enabled, events go
+//! to per-thread buffers (lock-free append; the only lock is taken once
+//! per thread at flush time) and are merged deterministically at
+//! [`take`], keyed by `(logical tid, per-thread sequence)`.  Logical tids
+//! are assigned by the caller — the main thread is 0, the execution pool
+//! stamps each *job* (not each OS thread) with `job index + 1` via
+//! [`job_ctx`] — so the merged event order is identical across runs and
+//! across worker counts, even though wall-clock timestamps are not.
+//!
+//! Everything downstream is a pure fold over the merged stream:
+//! [`metrics::Metrics`] derives counters, gauge extrema, span wall-times
+//! and log-bucket latency histograms, and per-phase peak bytes;
+//! [`export::chrome_trace`] renders Chrome trace-event JSON loadable in
+//! Perfetto / `chrome://tracing`.
+//!
+//! Recording is observation-only: no instrumented code path branches on
+//! recorded data, so gradients are bitwise identical with the sink on or
+//! off (asserted in `tests/obs_trace.rs`).
+
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+pub use export::{chrome_trace, memcheck};
+pub use metrics::{Hist, Metrics};
+pub use trace::{
+    counter, disable, enable, enabled, gauge, instant, job_ctx, reset, span, take, test_guard,
+    warn, Event, EventKind, JobCtx, SpanGuard,
+};
+
+/// Span names of the adjoint phases whose wall-time and peak-bytes are
+/// surfaced as `ExperimentRow` columns; byte gauges are attributed to the
+/// innermost enclosing span with one of these names.
+pub const PHASES: &[&str] = &["forward", "store", "restore", "recompute", "vjp"];

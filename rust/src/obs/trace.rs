@@ -1,0 +1,397 @@
+//! The event recorder: global on/off sink, per-thread buffers, spans,
+//! and the deterministic `(tid, seq)` merge.
+//!
+//! Hot-path contract: every public recording function begins with a
+//! single `Relaxed` load of the enable flag and returns immediately when
+//! it is clear — no clock read, no thread-local access, no allocation.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// What one [`Event`] records.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// span opened (paired with the next same-tid `End` of the same name)
+    Begin,
+    /// span closed
+    End,
+    /// additive counter increment
+    Counter(f64),
+    /// sampled level (occupancy, bytes resident, ...)
+    Gauge(f64),
+    /// point event — warnings, marks
+    Instant,
+}
+
+/// One recorded observation.  `(tid, seq)` is the deterministic merge
+/// key; `ts_nanos` (monotonic, from the first `enable`) is for humans
+/// and duration math only and is NOT stable across runs.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub name: &'static str,
+    pub kind: EventKind,
+    /// logical thread id: 0 = main, `job + 1` inside a pool job
+    pub tid: u32,
+    /// per-tid sequence number, dense from 0
+    pub seq: u64,
+    pub ts_nanos: u64,
+    /// free-form payload (warnings); `None` on the hot path
+    pub detail: Option<String>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn flushed() -> &'static Mutex<Vec<Event>> {
+    static FLUSHED: OnceLock<Mutex<Vec<Event>>> = OnceLock::new();
+    FLUSHED.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn lock_flushed() -> MutexGuard<'static, Vec<Event>> {
+    match flushed().lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Next sequence number per logical job tid, persisted across pool
+/// invocations within one stream.  A forward pool and a backward pool
+/// both run job 0 (tid 1); without continuation their events would
+/// collide at `(1, 0)` and merge in flush order, which is thread-timing
+/// dependent.  Touched once per job entry/exit, never per event.
+fn job_seqs() -> &'static Mutex<Vec<(u32, u64)>> {
+    static SEQS: OnceLock<Mutex<Vec<(u32, u64)>>> = OnceLock::new();
+    SEQS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn lock_job_seqs() -> MutexGuard<'static, Vec<(u32, u64)>> {
+    match job_seqs().lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Per-thread buffer.  Appends are lock-free; the contents reach the
+/// global pool either at [`take`] (current thread) or when the thread
+/// exits (the `Drop` impl runs from the TLS destructor on join).
+struct ThreadBuf {
+    tid: u32,
+    seq: u64,
+    events: Vec<Event>,
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        if !self.events.is_empty() {
+            lock_flushed().append(&mut self.events);
+        }
+    }
+}
+
+thread_local! {
+    static BUF: RefCell<ThreadBuf> =
+        RefCell::new(ThreadBuf { tid: 0, seq: 0, events: Vec::new() });
+}
+
+/// Is the sink recording?  One relaxed atomic load — the entire cost of
+/// every instrumentation point while observability is off.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the global sink on (idempotent).  Pins the timestamp epoch on
+/// first use.
+pub fn enable() {
+    epoch();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn the global sink off.  Already-buffered events stay until
+/// [`take`] or [`reset`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Drop every buffered event (current thread's buffer + the flushed
+/// pool) and rewind the current thread's sequence counter.
+pub fn reset() {
+    BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        b.events.clear();
+        b.seq = 0;
+    });
+    lock_flushed().clear();
+    lock_job_seqs().clear();
+}
+
+#[inline]
+fn record(name: &'static str, kind: EventKind, detail: Option<String>) {
+    let ts_nanos = epoch().elapsed().as_nanos() as u64;
+    BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        let (tid, seq) = (b.tid, b.seq);
+        b.seq += 1;
+        b.events.push(Event { name, kind, tid, seq, ts_nanos, detail });
+    });
+}
+
+/// Add `value` to the named counter.
+#[inline]
+pub fn counter(name: &'static str, value: f64) {
+    if !enabled() {
+        return;
+    }
+    record(name, EventKind::Counter(value), None);
+}
+
+/// Sample the named gauge at `value`.
+#[inline]
+pub fn gauge(name: &'static str, value: f64) {
+    if !enabled() {
+        return;
+    }
+    record(name, EventKind::Gauge(value), None);
+}
+
+/// Record a point event with no payload.
+#[inline]
+pub fn instant(name: &'static str) {
+    if !enabled() {
+        return;
+    }
+    record(name, EventKind::Instant, None);
+}
+
+/// Record a warning-class point event.  The payload closure only runs
+/// when the sink is enabled, so formatting costs nothing when off —
+/// this is the replacement for ad-hoc `eprintln!` diagnostics.
+#[inline]
+pub fn warn(name: &'static str, detail: impl FnOnce() -> String) {
+    if !enabled() {
+        return;
+    }
+    record(name, EventKind::Instant, Some(detail()));
+}
+
+/// RAII span: `Begin` now, `End` on drop.  A guard created while the
+/// sink was off records nothing on drop (balance is per-guard).
+pub struct SpanGuard {
+    name: &'static str,
+    active: bool,
+}
+
+/// Open a span.  Nest freely; the metrics fold pairs `Begin`/`End` with
+/// a per-tid stack.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { name, active: false };
+    }
+    record(name, EventKind::Begin, None);
+    SpanGuard { name, active: true }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.active {
+            // record unconditionally: a Begin must get its End even if
+            // the sink was disabled mid-span, or nesting checks break
+            record(self.name, EventKind::End, None);
+        }
+    }
+}
+
+/// RAII logical-thread context for pool jobs: swaps the current thread's
+/// `(tid, seq)` to `(tid, 0)` and restores the saved pair on drop.
+/// Because jobs are deterministic work units, keying events by job index
+/// instead of OS thread makes the merged stream identical across runs
+/// and worker counts.
+pub struct JobCtx {
+    saved_tid: u32,
+    saved_seq: u64,
+    active: bool,
+}
+
+/// Enter job context `tid` (the pool passes `job index + 1`; 0 is the
+/// main thread and must not be claimed by jobs).  The tid's sequence
+/// counter continues where a previous job context for the same tid left
+/// off, so multi-phase pool runs (forward pool, then backward pool) keep
+/// the merge key `(tid, seq)` collision-free.
+pub fn job_ctx(tid: u32) -> JobCtx {
+    if !enabled() {
+        return JobCtx { saved_tid: 0, saved_seq: 0, active: false };
+    }
+    let start = lock_job_seqs()
+        .iter()
+        .find(|(t, _)| *t == tid)
+        .map(|(_, s)| *s)
+        .unwrap_or(0);
+    BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        let ctx = JobCtx { saved_tid: b.tid, saved_seq: b.seq, active: true };
+        b.tid = tid;
+        b.seq = start;
+        ctx
+    })
+}
+
+impl Drop for JobCtx {
+    fn drop(&mut self) {
+        if self.active {
+            BUF.with(|b| {
+                let mut b = b.borrow_mut();
+                let (tid, seq) = (b.tid, b.seq);
+                let mut seqs = lock_job_seqs();
+                match seqs.iter_mut().find(|(t, _)| *t == tid) {
+                    Some(e) => e.1 = seq,
+                    None => seqs.push((tid, seq)),
+                }
+                drop(seqs);
+                b.tid = self.saved_tid;
+                b.seq = self.saved_seq;
+            });
+        }
+    }
+}
+
+/// Flush the current thread's buffer and drain the global pool, merged
+/// into the deterministic order: ascending `(tid, seq)`.  Worker-thread
+/// buffers were flushed by their TLS destructors when the scoped pool
+/// joined, so after a run completes this is the full stream.
+pub fn take() -> Vec<Event> {
+    BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        if !b.events.is_empty() {
+            let mut ev = std::mem::take(&mut b.events);
+            lock_flushed().append(&mut ev);
+        }
+        b.seq = 0;
+    });
+    lock_job_seqs().clear();
+    let mut all = std::mem::take(&mut *lock_flushed());
+    all.sort_by(|a, b| (a.tid, a.seq).cmp(&(b.tid, b.seq)));
+    all
+}
+
+/// Serialize tests that touch the global sink.  `cargo test` runs tests
+/// of one binary concurrently in one process; any test calling
+/// [`enable`] must hold this guard for its whole body.
+pub fn test_guard() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    match LOCK.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These unit tests exercise only mechanics that are safe under the
+    // shared process-global sink; end-to-end enable/disable runs live in
+    // tests/obs_trace.rs where every test holds `test_guard`.
+
+    #[test]
+    fn disabled_sink_records_nothing_and_guards_are_inert() {
+        let _g = test_guard();
+        disable();
+        reset();
+        {
+            let _s = span("never");
+            counter("never.count", 1.0);
+            gauge("never.gauge", 2.0);
+            instant("never.mark");
+            warn("never.warn", || panic!("payload must not be formatted"));
+        }
+        assert!(take().is_empty(), "obs off => zero events recorded");
+    }
+
+    #[test]
+    fn merge_orders_by_tid_then_seq_and_job_ctx_restores() {
+        let _g = test_guard();
+        reset();
+        enable();
+        counter("main.a", 1.0);
+        {
+            let _ctx = job_ctx(2);
+            counter("job2.a", 1.0);
+            counter("job2.b", 1.0);
+        }
+        {
+            let _ctx = job_ctx(1);
+            counter("job1.a", 1.0);
+        }
+        counter("main.b", 1.0);
+        disable();
+        let ev = take();
+        let keys: Vec<(u32, u64, &str)> = ev.iter().map(|e| (e.tid, e.seq, e.name)).collect();
+        assert_eq!(
+            keys,
+            vec![
+                (0, 0, "main.a"),
+                (0, 1, "main.b"),
+                (1, 0, "job1.a"),
+                (2, 0, "job2.a"),
+                (2, 1, "job2.b"),
+            ]
+        );
+        reset();
+    }
+
+    #[test]
+    fn job_seqs_continue_across_pool_phases() {
+        let _g = test_guard();
+        reset();
+        enable();
+        {
+            let _c = job_ctx(1);
+            counter("fwd", 1.0);
+        }
+        {
+            let _c = job_ctx(1);
+            counter("bwd", 1.0);
+        }
+        disable();
+        let ev = take();
+        let keys: Vec<(u32, u64, &str)> = ev.iter().map(|e| (e.tid, e.seq, e.name)).collect();
+        assert_eq!(
+            keys,
+            vec![(1, 0, "fwd"), (1, 1, "bwd")],
+            "a re-entered tid never collides with its earlier events"
+        );
+        reset();
+    }
+
+    #[test]
+    fn span_guards_balance_and_nest() {
+        let _g = test_guard();
+        reset();
+        enable();
+        {
+            let _outer = span("outer");
+            let _inner = span("inner");
+        }
+        disable();
+        let ev = take();
+        let shape: Vec<(&str, EventKind)> =
+            ev.iter().map(|e| (e.name, e.kind.clone())).collect();
+        assert_eq!(
+            shape,
+            vec![
+                ("outer", EventKind::Begin),
+                ("inner", EventKind::Begin),
+                ("inner", EventKind::End),
+                ("outer", EventKind::End),
+            ]
+        );
+        reset();
+    }
+}

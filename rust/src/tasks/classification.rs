@@ -181,7 +181,13 @@ impl ClassificationTask {
             // one at a time
             report.graph_bytes = report.graph_bytes.max(r.graph_bytes);
             report.merge_grid(&r);
-            report.exec.merge(&r.exec);
+            // seed from the first block's stats so blocks_merged counts
+            // real blocks, not the default accumulator
+            if b + 1 == self.n_blocks {
+                report.exec = r.exec;
+            } else {
+                report.exec.merge(&r.exec);
+            }
         }
         self.readout.apply_grads(readout_lr, &ro);
         StepResult { loss: ro.loss, accuracy: ro.accuracy, grad, report }

@@ -1,0 +1,229 @@
+//! End-to-end contract of the observability subsystem (DESIGN.md §11):
+//! a disabled sink records nothing, recording never changes gradient
+//! bits, the Chrome-trace export parses back well-formed through the
+//! in-tree JSON parser, and the merged `(tid, seq)` stream is identical
+//! across runs and worker counts.
+//!
+//! The obs sink is process-global and `cargo test` shares one process
+//! per binary, so EVERY test here holds [`pnode::obs::test_guard`] for
+//! its whole body and leaves the sink disabled + reset on exit.
+
+use pnode::api::{Session, SolverBuilder};
+use pnode::nn::Act;
+use pnode::obs::{self, EventKind};
+use pnode::ode::ModuleRhs;
+use pnode::ode::rhs::OdeRhs;
+use pnode::util::rng::Rng;
+
+const B: usize = 24;
+const D: usize = 6;
+const SHARD_ROWS: usize = 8;
+
+fn mk_rhs(seed: u64) -> ModuleRhs {
+    let dims = vec![D + 1, 16, D];
+    let mut rng = Rng::new(seed);
+    let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+    ModuleRhs::mlp(dims, Act::Tanh, true, B, theta)
+}
+
+fn vecs(seed: u64, n: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut u0 = vec![0.0f32; n];
+    rng.fill_normal(&mut u0);
+    for x in u0.iter_mut() {
+        *x *= 0.4;
+    }
+    let mut w = vec![0.0f32; n];
+    rng.fill_normal(&mut w);
+    (u0, w)
+}
+
+/// One full gradient through the facade; returns `(u_f, λ0, θ̄)`.
+fn run_grad(spec: &pnode::api::RunSpec) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let rhs = mk_rhs(7);
+    let (u0, w) = vecs(8, rhs.state_len());
+    let mut s = Session::new(spec.clone()).expect("valid spec");
+    let out = s.grad(&rhs, &u0, &w);
+    (out.u_f, s.lambda0().to_vec(), s.grad_theta().to_vec())
+}
+
+/// The acceptance configuration: tiered (over-budget, so it spills and
+/// leases) with a binomial inner placement, on the parallel engine.
+fn tiered_binomial_spec(dir: &str, workers: usize) -> pnode::api::RunSpec {
+    SolverBuilder::new()
+        .scheme_str("dopri5")
+        .policy_str(&format!("tiered:8k:{dir}:binomial:4"))
+        .uniform(12)
+        .workers(workers)
+        .shard_rows(SHARD_ROWS)
+        .build()
+        .expect("valid tiered+binomial spec")
+}
+
+fn tmp_dir(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("pnode-obs-{tag}-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+#[test]
+fn obs_off_records_nothing_and_gradients_are_bitwise_identical_on_off() {
+    let _g = obs::test_guard();
+    obs::disable();
+    obs::reset();
+
+    let dir = tmp_dir("bitwise");
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = tiered_binomial_spec(&dir, 2);
+
+    let off = run_grad(&spec);
+    assert!(obs::take().is_empty(), "obs off => zero events recorded");
+
+    obs::enable();
+    let on = run_grad(&spec);
+    let events = obs::take();
+    obs::disable();
+    assert!(!events.is_empty(), "obs on => the run is traced");
+
+    assert_eq!(off.0, on.0, "u(t_F) bitwise identical obs on/off");
+    assert_eq!(off.1, on.1, "λ0 bitwise identical obs on/off");
+    assert_eq!(off.2, on.2, "θ̄ bitwise identical obs on/off");
+
+    obs::reset();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spec_obs_block_switches_the_sink_on() {
+    let _g = obs::test_guard();
+    obs::disable();
+    obs::reset();
+
+    let spec = SolverBuilder::new().uniform(3).observe(true).build().unwrap();
+    let _s = Session::new(spec).unwrap();
+    assert!(obs::enabled(), "opening a session on an obs spec enables the sink");
+
+    obs::disable();
+    obs::reset();
+}
+
+#[test]
+fn chrome_trace_parses_back_and_is_well_formed() {
+    let _g = obs::test_guard();
+    obs::disable();
+    obs::reset();
+
+    let dir = tmp_dir("trace");
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = tiered_binomial_spec(&dir, 2);
+
+    obs::enable();
+    let _ = run_grad(&spec);
+    let events = obs::take();
+    obs::disable();
+
+    // every adjoint phase shows up, plus pool / lease / session spans
+    let names: std::collections::BTreeSet<&str> = events.iter().map(|e| e.name).collect();
+    for phase in obs::PHASES {
+        assert!(names.contains(phase), "missing {phase:?} span in {names:?}");
+    }
+    assert!(names.contains("session.grad"), "{names:?}");
+    assert!(names.contains("pool.job"), "{names:?}");
+    assert!(names.contains("lease.ask"), "arbiter lease spans: {names:?}");
+    assert!(
+        names.iter().any(|n| n.starts_with("tier.")),
+        "tiered-store events: {names:?}"
+    );
+
+    // spans balance per tid, Ends pair with the innermost Begin
+    let mut stacks: std::collections::BTreeMap<u32, Vec<&str>> = Default::default();
+    for e in &events {
+        match e.kind {
+            EventKind::Begin => stacks.entry(e.tid).or_default().push(e.name),
+            EventKind::End => {
+                let top = stacks.get_mut(&e.tid).and_then(|s| s.pop());
+                assert_eq!(
+                    top,
+                    Some(e.name),
+                    "End must match the innermost open Begin on tid {}",
+                    e.tid
+                );
+            }
+            _ => {}
+        }
+    }
+    for (tid, s) in &stacks {
+        assert!(s.is_empty(), "unbalanced spans on tid {tid}: {s:?}");
+    }
+
+    // export parses back through the in-tree parser, one traceEvent per
+    // recorded event, Chrome/Perfetto-shaped
+    let text = obs::chrome_trace(&events).to_string_compact();
+    let doc = pnode::util::json::parse(&text).expect("chrome trace is valid JSON");
+    assert_eq!(doc.get("displayTimeUnit").and_then(|v| v.as_str()), Some("ms"));
+    let tes = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .expect("traceEvents array");
+    assert_eq!(tes.len(), events.len(), "one trace event per recorded event");
+    for te in tes {
+        let ph = te.get("ph").and_then(|v| v.as_str()).expect("ph");
+        assert!(["B", "E", "C", "i"].contains(&ph), "unknown ph {ph:?}");
+        assert_eq!(te.get("pid").and_then(|v| v.as_usize()), Some(1));
+        assert!(te.get("tid").and_then(|v| v.as_usize()).is_some());
+        assert!(te.get("name").and_then(|v| v.as_str()).is_some());
+        assert!(te.get("ts").and_then(|v| v.as_f64()).is_some());
+    }
+
+    // the metrics fold sees the same phases
+    let m = obs::Metrics::from_events(&events);
+    assert!(m.span_count("forward") > 0);
+    assert!(m.span_total_secs("forward") >= 0.0);
+
+    obs::reset();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn merged_trace_is_deterministic_across_runs_and_worker_counts() {
+    let _g = obs::test_guard();
+    obs::disable();
+    obs::reset();
+
+    // NON-tiered on purpose: lease contention under the budget arbiter is
+    // timing-dependent (grants depend on what is concurrently leased), so
+    // the determinism contract covers every event source except it.
+    let spec_at = |workers: usize| {
+        SolverBuilder::new()
+            .scheme_str("dopri5")
+            .policy_str("binomial:3")
+            .uniform(12)
+            .workers(workers)
+            .shard_rows(SHARD_ROWS)
+            .build()
+            .unwrap()
+    };
+
+    obs::enable();
+    let _ = run_grad(&spec_at(1));
+    let a = obs::take();
+    let _ = run_grad(&spec_at(1));
+    let b = obs::take();
+    let _ = run_grad(&spec_at(3));
+    let c = obs::take();
+    obs::disable();
+
+    assert!(!a.is_empty());
+    let key = |ev: &[obs::Event]| -> Vec<(u32, u64, &str, EventKind)> {
+        ev.iter().map(|e| (e.tid, e.seq, e.name, e.kind.clone())).collect()
+    };
+    assert_eq!(key(&a), key(&b), "identical runs merge to identical streams");
+    assert_eq!(
+        key(&a),
+        key(&c),
+        "worker count changes wall clock, never the merged stream"
+    );
+
+    obs::reset();
+}
