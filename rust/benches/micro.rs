@@ -1,10 +1,14 @@
-//! Hot-path microbenchmarks (the §Perf profile base): ERK step, adjoint
-//! step, VJP through the pure-Rust MLP and (if built) the XLA artifacts,
-//! GMRES iteration, checkpoint store ops.
+//! Hot-path microbenchmarks (the §Perf profile base): raw GEMM kernel
+//! paths, ERK step, adjoint step, VJP through the pure-Rust MLP and
+//! (if built) the XLA artifacts, GMRES iteration, checkpoint store ops.
 //!
 //! Besides the human-readable summaries, every result is appended to
 //! `BENCH_micro.json` at the repo root (cargo runs benches from the
 //! workspace root) so perf trends are machine-diffable across commits.
+//!
+//! Flags: `--smoke` shrinks iteration counts for CI and turns the
+//! SIMD-vs-scalar comparison into a hard gate (the packed kernel must
+//! not be slower than the legacy scalar loop at the paper shape).
 
 use pnode::adjoint::discrete_erk::{adjoint_erk_step, AdjointErkWorkspace};
 use pnode::bench::{bench_fn, BenchResult};
@@ -14,9 +18,13 @@ use pnode::ode::erk::{erk_step, ErkWorkspace};
 use pnode::ode::ModuleRhs;
 use pnode::ode::rhs::OdeRhs;
 use pnode::ode::tableau;
+use pnode::tensor::gemm::{self, KernelPath};
 use pnode::util::rng::Rng;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (warm, iters) = if smoke { (1usize, 3usize) } else { (2, 10) };
+    let (warm2, iters2) = if smoke { (1usize, 2usize) } else { (1, 5) };
     let mut results: Vec<BenchResult> = Vec::new();
     let mut record = |r: BenchResult, results: &mut Vec<BenchResult>| {
         println!("{}", r.summary());
@@ -24,6 +32,60 @@ fn main() {
     };
 
     let mut rng = Rng::new(1);
+
+    // ---- raw GEMM kernel paths at the paper's hot shape -------------
+    // (B=128 rows through the 168-wide hidden layers; `_with` variants
+    // so one process exercises both the scalar and SIMD paths despite
+    // the one-time env dispatch)
+    let simd_path = match gemm::kernel_path() {
+        KernelPath::Scalar => KernelPath::Portable,
+        p => p,
+    };
+    {
+        let (m, k, n) = (128usize, 168usize, 168usize);
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 83) as f32 * 0.013 - 0.5).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 71) as f32 * 0.017 - 0.6).collect();
+        let mut c = vec![0.0f32; m * n];
+        let scalar = bench_fn("sgemm 128x168x168 scalar", warm, iters, || {
+            gemm::sgemm_with(KernelPath::Scalar, m, k, n, &a, &b, &mut c, 0.0);
+        });
+        record(scalar.clone(), &mut results);
+        let simd = bench_fn(
+            &format!("sgemm 128x168x168 {}", simd_path.name()),
+            warm,
+            iters,
+            || {
+                gemm::sgemm_with(simd_path, m, k, n, &a, &b, &mut c, 0.0);
+            },
+        );
+        record(simd.clone(), &mut results);
+        let speedup = scalar.mean_secs / simd.mean_secs.max(1e-12);
+        println!("  sgemm {} speedup over scalar: {speedup:.2}x", simd_path.name());
+        if smoke {
+            assert!(
+                speedup >= 1.0,
+                "perf gate: {} sgemm slower than scalar ({speedup:.2}x)",
+                simd_path.name()
+            );
+        }
+        // the adjoint's gW kernel (Aᵀ layout) at the same shape
+        let at_a: Vec<f32> = (0..k * m).map(|i| (i % 59) as f32 * 0.011 - 0.3).collect();
+        let at_b: Vec<f32> = (0..k * n).map(|i| (i % 67) as f32 * 0.019 - 0.7).collect();
+        let mut at_c = vec![0.0f32; m * n];
+        let r = bench_fn("sgemm_at 128x168x168 scalar", warm, iters, || {
+            gemm::sgemm_at_with(KernelPath::Scalar, m, k, n, &at_a, &at_b, &mut at_c, 0.0);
+        });
+        record(r, &mut results);
+        let r = bench_fn(
+            &format!("sgemm_at 128x168x168 {}", simd_path.name()),
+            warm,
+            iters,
+            || {
+                gemm::sgemm_at_with(simd_path, m, k, n, &at_a, &at_b, &mut at_c, 0.0);
+            },
+        );
+        record(r, &mut results);
+    }
     // paper-scale RHS: 65-168-168-64, batch 128
     let dims = vec![65, 168, 168, 64];
     let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
@@ -36,31 +98,90 @@ fn main() {
     let mut out = vec![0.0f32; n];
     let mut gt = vec![0.0f32; rhs.param_len()];
 
-    let r = bench_fn("mlp.f (B=128, 65-168-168-64)", 2, 10, || {
+    let r = bench_fn("mlp.f (B=128, 65-168-168-64)", warm, iters, || {
         rhs.f(0.3, &u, &mut out);
     });
     record(r, &mut results);
-    let r = bench_fn("mlp.vjp_both", 2, 10, || {
+    let r = bench_fn("mlp.vjp_both", warm, iters, || {
         rhs.vjp_both(0.3, &u, &v, &mut out, &mut gt);
     });
     record(r, &mut results);
-    let r = bench_fn("mlp.jvp", 2, 10, || {
+    let r = bench_fn("mlp.jvp", warm, iters, || {
         rhs.jvp(0.3, &u, &v, &mut out);
     });
     record(r, &mut results);
+
+    // ---- fused plan vs the pre-fusion per-module composition --------
+    // Same GEMM path underneath; the delta is the Linear+Activation
+    // epilogue fusion (one pass over each output row instead of three).
+    {
+        use pnode::nn::module::{Activation, Linear, Module, Sequential};
+        let dims = [65usize, 168, 168, 64];
+        let bsz = 128usize;
+        let seq = Sequential::new(vec![
+            Box::new(Linear::new(65, 168)) as Box<dyn Module>,
+            Box::new(Activation::new(Act::Relu, 168)),
+            Box::new(Linear::new(168, 168)),
+            Box::new(Activation::new(Act::Relu, 168)),
+            Box::new(Linear::new(168, 64)),
+        ]);
+        let theta2 = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+        let mut x = vec![0.0f32; bsz * dims[0]];
+        rng.fill_normal(&mut x);
+        let mut y = vec![0.0f32; bsz * dims[3]];
+        let mut cache = vec![0.0f32; seq.cache_len(bsz)];
+        let r = bench_fn("seq.forward fused (B=128, 65-168-168-64)", warm, iters, || {
+            seq.forward(bsz, 0.3, &theta2, &x, &mut y, &mut cache);
+        });
+        record(r, &mut results);
+        // hand-rolled replica of the pre-fusion per-child loop: GEMM,
+        // then a bias sweep, then a cache copy + activation sweep
+        let wmax = 168usize;
+        let mut cur = vec![0.0f32; bsz * wmax];
+        let mut nxt = vec![0.0f32; bsz * wmax];
+        let r = bench_fn("seq.forward unfused baseline", warm, iters, || {
+            let mut c_off = 0usize;
+            let mut o = 0usize;
+            cur[..bsz * dims[0]].copy_from_slice(&x);
+            for l in 0..dims.len() - 1 {
+                let (din, dout) = (dims[l], dims[l + 1]);
+                let w = &theta2[o..o + din * dout];
+                let b = &theta2[o + din * dout..o + din * dout + dout];
+                o += din * dout + dout;
+                cache[c_off..c_off + bsz * din].copy_from_slice(&cur[..bsz * din]);
+                c_off += bsz * din;
+                gemm::sgemm(bsz, din, dout, &cur[..bsz * din], w, &mut nxt[..bsz * dout], 0.0);
+                for row in 0..bsz {
+                    for j in 0..dout {
+                        nxt[row * dout + j] += b[j];
+                    }
+                }
+                if l + 1 < dims.len() - 1 {
+                    cache[c_off..c_off + bsz * dout].copy_from_slice(&nxt[..bsz * dout]);
+                    c_off += bsz * dout;
+                    for vj in nxt[..bsz * dout].iter_mut() {
+                        *vj = Act::Relu.apply(*vj);
+                    }
+                }
+                std::mem::swap(&mut cur, &mut nxt);
+            }
+            y.copy_from_slice(&cur[..bsz * dims[3]]);
+        });
+        record(r, &mut results);
+    }
 
     let tab = &tableau::DOPRI5;
     let mut ks: Vec<Vec<f32>> = (0..tab.s).map(|_| vec![0.0f32; n]).collect();
     let mut un = vec![0.0f32; n];
     let mut ews = ErkWorkspace::new(n);
-    let r = bench_fn("erk_step dopri5", 2, 10, || {
+    let r = bench_fn("erk_step dopri5", warm, iters, || {
         erk_step(tab, &rhs, 0.0, 0.1, &u, &mut ks, &mut un, &mut ews, None);
     });
     record(r, &mut results);
 
     let mut aws = AdjointErkWorkspace::new(tab.s, n);
     let mut lambda = v.clone();
-    let r = bench_fn("adjoint_erk_step dopri5", 1, 5, || {
+    let r = bench_fn("adjoint_erk_step dopri5", warm2, iters2, || {
         adjoint_erk_step(tab, &rhs, 0.0, 0.1, &u, &ks, &mut lambda, &mut gt, &mut aws);
     });
     record(r, &mut results);
@@ -68,7 +189,7 @@ fn main() {
     // GMRES on the implicit-step operator
     let mut x = vec![0.0f32; n];
     let mut jw = vec![0.0f32; n];
-    let r = bench_fn("gmres (I - h/2 J) solve", 1, 5, || {
+    let r = bench_fn("gmres (I - h/2 J) solve", warm2, iters2, || {
         x.fill(0.0);
         gmres(
             |w, out| {
@@ -119,8 +240,8 @@ fn main() {
             &rhs,
             &u,
             &lam,
-            1,
-            5,
+            warm2,
+            iters2,
         );
         record(r, &mut results);
     }
@@ -141,12 +262,12 @@ fn main() {
             rng2.fill_normal(&mut ux);
             let mut ox = vec![0.0f32; nx];
             let mut gx = vec![0.0f32; xrhs.param_len()];
-            let r = bench_fn("XLA clf_d64 f", 2, 10, || {
+            let r = bench_fn("XLA clf_d64 f", warm, iters, || {
                 xrhs.f(0.3, &ux, &mut ox);
             });
             record(r, &mut results);
             let vx = ox.clone();
-            let r = bench_fn("XLA clf_d64 vjp_both", 2, 10, || {
+            let r = bench_fn("XLA clf_d64 vjp_both", warm, iters, || {
                 xrhs.vjp_both(0.3, &ux, &vx, &mut ox, &mut gx);
             });
             record(r, &mut results);

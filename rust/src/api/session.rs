@@ -62,6 +62,10 @@ impl Session {
         if spec.obs.map_or(false, |o| o.enabled) {
             obs::enable();
         }
+        // one instant event naming the resolved GEMM kernel path; emitted
+        // here (not lazily at first GEMM) so its (tid, seq) slot in the
+        // trace is deterministic across runs and worker counts
+        crate::tensor::gemm::note_dispatch();
         let engine = registry.make(&spec)?;
         let block = spec.block_spec();
         Ok(Session {

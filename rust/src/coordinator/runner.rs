@@ -147,6 +147,15 @@ impl ExperimentRow {
         } else {
             observed / predicted_ckpt_bytes as f64
         };
+        // kernel provenance: which GEMM path ran and how much work it did
+        self.extra.push((
+            "kernel".to_string(),
+            crate::tensor::gemm::kernel_path().name().to_string(),
+        ));
+        let mul_adds = m.counter("gemm.mul_adds");
+        if mul_adds > 0.0 {
+            self.extra.push(("gemm_mul_adds".to_string(), format!("{mul_adds:.0}")));
+        }
     }
 
     /// Row identity and embedded spec derived from a [`RunSpec`] (the
@@ -444,6 +453,7 @@ mod tests {
             ev("ckpt.hot_bytes", EventKind::Gauge(4096.0), 2, 150),
             ev("store", EventKind::End, 3, 200),
             ev("forward", EventKind::End, 4, 1_000),
+            ev("gemm.mul_adds", EventKind::Counter(12288.0), 5, 1_100),
         ];
         let m = Metrics::from_events(&events);
         let mut row = ExperimentRow::from_report(
@@ -466,6 +476,8 @@ mod tests {
         assert!(j.contains("\"phase_secs\""), "{j}");
         assert!(j.contains("\"mem_model_ratio\":0.5"), "{j}");
         assert!(j.contains("\"blocks_merged\""), "{j}");
+        assert!(j.contains("\"kernel\""), "kernel provenance column present: {j}");
+        assert!(j.contains("\"gemm_mul_adds\":\"12288\""), "{j}");
     }
 
     #[test]

@@ -104,4 +104,8 @@ impl Module for Activation {
     fn boxed_clone(&self) -> Box<dyn Module> {
         Box::new(self.clone())
     }
+
+    fn as_activation(&self) -> Option<&Activation> {
+        Some(self)
+    }
 }

@@ -7,7 +7,7 @@
 //! implementation.
 
 use crate::nn::module::Module;
-use crate::tensor::gemm::{sgemm, sgemm_at, sgemm_bt};
+use crate::tensor::gemm::{sgemm, sgemm_at, sgemm_bt, sgemm_epi};
 
 #[derive(Clone, Debug)]
 pub struct Linear {
@@ -61,12 +61,13 @@ impl Module for Linear {
     ) {
         let (w, b) = self.split(theta);
         cache[..bsz * self.din].copy_from_slice(x);
-        sgemm(bsz, self.din, self.dout, x, w, y, 0.0);
-        for row in 0..bsz {
-            for j in 0..self.dout {
-                y[row * self.dout + j] += b[j];
+        // bias add fused into the GEMM epilogue (same single add per
+        // element as the legacy separate sweep — bitwise identical)
+        sgemm_epi(bsz, self.din, self.dout, x, w, y, &|_, yrow| {
+            for (yj, bj) in yrow.iter_mut().zip(b) {
+                *yj += *bj;
             }
-        }
+        });
     }
 
     fn vjp(
@@ -124,5 +125,9 @@ impl Module for Linear {
 
     fn boxed_clone(&self) -> Box<dyn Module> {
         Box::new(self.clone())
+    }
+
+    fn as_linear(&self) -> Option<&Linear> {
+        Some(self)
     }
 }

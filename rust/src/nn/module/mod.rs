@@ -140,6 +140,26 @@ pub trait Module: Send {
     fn activation_bytes(&self, bsz: usize) -> u64 {
         (self.cache_len(bsz) * 4) as u64
     }
+
+    /// Downcast hook for the kernel-fusion planner: `Some` iff this
+    /// module is a [`Linear`].  Composites use it to pair a Linear with
+    /// the following Activation into one fused GEMM+epilogue pass
+    /// (DESIGN.md §12); the default keeps third-party modules opaque.
+    fn as_linear(&self) -> Option<&Linear> {
+        None
+    }
+
+    /// Downcast hook: `Some` iff this module is an [`Activation`].
+    fn as_activation(&self) -> Option<&Activation> {
+        None
+    }
+
+    /// Downcast hook: `Some` iff this module is a [`Sequential`] —
+    /// [`ConcatTime`] uses it to hand the time column to the inner
+    /// stack's fused first layer instead of materialising `[x | t]`.
+    fn as_sequential(&self) -> Option<&Sequential> {
+        None
+    }
 }
 
 impl Clone for Box<dyn Module> {

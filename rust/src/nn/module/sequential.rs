@@ -1,5 +1,5 @@
-//! Composition `y = f_{K-1}(… f_1(f_0(x)))` with flat-parameter slicing
-//! and a single shared cache arena.
+//! Composition `y = f_{K-1}(… f_1(f_0(x)))` with flat-parameter slicing,
+//! a single shared cache arena, and a kernel-fusion plan.
 //!
 //! * θ layout: children's parameter slices concatenated in order (for a
 //!   `Linear`/`Activation` chain this is exactly the legacy `Mlp` layout
@@ -9,6 +9,34 @@
 //! * work buffers: two ping-pong buffers of `bsz · max_width` floats in
 //!   interior scratch carry the boundary values / cotangents between
 //!   children.
+//!
+//! **Fusion plan** (DESIGN.md §12): at construction the chain is walked
+//! once and every `Linear` immediately followed by an `Activation`
+//! (detected via [`Module::as_linear`] / [`Module::as_activation`])
+//! collapses into one plan step.  A fused step evaluates the GEMM, the
+//! bias add, and the activation in a single pass over each output row
+//! while it is still cache-hot ([`sgemm_epi2`]), and its VJP computes
+//! `gz = v ⊙ act'(z)` with the bias gradient folded into the same sweep.
+//! The per-element arithmetic — one add for the bias, the same
+//! elementwise multiply order, the same `sgemm_at`/`sgemm_bt` calls — is
+//! identical to the unfused module composition, so fused results are
+//! bitwise equal to the legacy child-by-child evaluation on the same
+//! kernel path (pinned by `nn::mlp`'s recomposition test).  The cache
+//! layout is also unchanged: the Linear slot holds the layer input, the
+//! Activation slot the pre-activation.
+//!
+//! **Time-augmented entry** (`*_time_aug`): for [`super::ConcatTime`]
+//! dynamics the first Linear consumes `[x | t]`.  Folding the constant
+//! `t` column into an effective bias `b_eff = b + t·W[d,:]` lets the
+//! fused first step run the GEMM at `k = d` straight off the un-augmented
+//! input — no `[B, d+1]` copy on the jvp path, no cotangent stripping on
+//! the vjp path.  The augmented input is still written into the Linear's
+//! cache (the weight gradient needs the `t` column).  Note `b_eff`
+//! associates `b + t·w` before the row sum, so the fused forward may
+//! differ from the unfused augment path in the last ulp — the fused path
+//! is used consistently for forward/vjp/jvp, and nothing pins those two
+//! evaluations bitwise against each other (`sovjp` stays on the augment
+//! path; see the contract note in DESIGN.md §12).
 //!
 //! The second-order pass ([`Module::sovjp`]) runs the standard
 //! Hessian-vector recursion over the chain: with boundaries
@@ -22,17 +50,34 @@
 //! evaluated in one reverse sweep: each child contributes its direct
 //! `sovjp` term, and the accumulated cotangent is pulled back through the
 //! child's first-order `vjp` — which also collects the θ-gradients of the
-//! earlier children the pullback passes through.
+//! earlier children the pullback passes through.  The sovjp sweep is
+//! per-child (unfused); it benefits from the fast kernels but not from
+//! step fusion.
 
 use std::cell::RefCell;
 
 use crate::nn::module::Module;
+use crate::tensor::gemm::{sgemm_at, sgemm_bt, sgemm_epi, sgemm_epi2};
+
+/// One step of the fusion plan.
+#[derive(Clone, Copy, Debug)]
+enum Step {
+    /// child `k` evaluated through its own `Module` impl
+    Child(usize),
+    /// children `(k, k+1)` = Linear + Activation evaluated as one fused
+    /// GEMM + epilogue pass
+    LinAct(usize),
+}
 
 #[derive(Clone, Debug, Default)]
 struct SeqScratch {
     /// first-order ping-pong boundary buffers
     buf_a: Vec<f32>,
     buf_b: Vec<f32>,
+    /// fused vjp: gz = v ⊙ act'(z) (must not alias the incoming v)
+    gz: Vec<f32>,
+    /// time-aug fused first layer: b_eff = b + t·W[d,:]
+    bias_eff: Vec<f32>,
     /// sovjp: all boundary values b_k, concatenated
     bounds: Vec<f32>,
     /// sovjp: all boundary tangents w_k, concatenated
@@ -54,6 +99,8 @@ impl SeqScratch {
         if self.buf_a.len() < work {
             self.buf_a.resize(work, 0.0);
             self.buf_b.resize(work, 0.0);
+            self.gz.resize(work, 0.0);
+            self.bias_eff.resize(work, 0.0);
         }
     }
 
@@ -77,6 +124,8 @@ pub struct Sequential {
     /// θ offsets: child k owns `theta[theta_off[k]..theta_off[k+1]]`
     theta_off: Vec<usize>,
     max_width: usize,
+    /// fusion plan computed once at construction
+    plan: Vec<Step>,
     scratch: RefCell<SeqScratch>,
 }
 
@@ -86,6 +135,7 @@ impl Clone for Sequential {
             children: self.children.clone(),
             theta_off: self.theta_off.clone(),
             max_width: self.max_width,
+            plan: self.plan.clone(),
             scratch: RefCell::default(),
         }
     }
@@ -95,6 +145,7 @@ impl std::fmt::Debug for Sequential {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Sequential")
             .field("children", &self.children.len())
+            .field("fused_steps", &self.plan.len())
             .field("in_dim", &self.in_dim())
             .field("out_dim", &self.out_dim())
             .finish()
@@ -120,11 +171,30 @@ impl Sequential {
             theta_off.push(acc);
             max_width = max_width.max(c.max_width());
         }
-        Sequential { children, theta_off, max_width, scratch: RefCell::default() }
+        let mut plan = Vec::with_capacity(children.len());
+        let mut k = 0;
+        while k < children.len() {
+            let fuse = k + 1 < children.len()
+                && children[k].as_linear().is_some()
+                && children[k + 1].as_activation().is_some();
+            if fuse {
+                plan.push(Step::LinAct(k));
+                k += 2;
+            } else {
+                plan.push(Step::Child(k));
+                k += 1;
+            }
+        }
+        Sequential { children, theta_off, max_width, plan, scratch: RefCell::default() }
     }
 
     pub fn n_children(&self) -> usize {
         self.children.len()
+    }
+
+    /// How many plan steps run fused Linear+Activation kernels.
+    pub fn n_fused_steps(&self) -> usize {
+        self.plan.iter().filter(|s| matches!(s, Step::LinAct(_))).count()
     }
 
     fn theta_slice<'a>(&self, theta: &'a [f32], k: usize) -> &'a [f32] {
@@ -143,6 +213,332 @@ impl Sequential {
             b_off.push(acc);
         }
         acc
+    }
+
+    /// Can [`Sequential::forward_time_aug`] & co. drive this stack?  The
+    /// time-augmented entry needs the first step to be a fused
+    /// Linear(+Activation) whose weight matrix owns the `t` column.
+    pub(crate) fn supports_time_aug(&self) -> bool {
+        matches!(self.plan.first(), Some(Step::LinAct(0)))
+    }
+
+    /// [`Module::forward`] with the first fused layer consuming the
+    /// logical input `[x | t]` (x is `[B, in_dim − 1]`): the constant `t`
+    /// column folds into an effective bias, the GEMM runs at `k = d`.
+    /// Caller must check [`Sequential::supports_time_aug`].
+    pub(crate) fn forward_time_aug(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        x: &[f32],
+        y: &mut [f32],
+        cache: &mut [f32],
+    ) {
+        self.forward_impl(bsz, t, theta, x, y, cache, true);
+    }
+
+    /// [`Module::vjp`] counterpart of [`Sequential::forward_time_aug`]:
+    /// `gx` is `[B, in_dim − 1]` (the `t` column's cotangent is dropped,
+    /// exactly as the augment path strips it).
+    pub(crate) fn vjp_time_aug(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        v: &[f32],
+        gx: &mut [f32],
+        grad_theta: Option<&mut [f32]>,
+        cache: &[f32],
+    ) {
+        self.vjp_impl(bsz, t, theta, v, gx, grad_theta, cache, true);
+    }
+
+    /// [`Module::jvp`] counterpart: the `t` column's tangent is zero, so
+    /// the first GEMM simply runs at `k = d` on the raw tangent.
+    pub(crate) fn jvp_time_aug(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        dx: &[f32],
+        dy: &mut [f32],
+        cache: &[f32],
+    ) {
+        self.jvp_impl(bsz, t, theta, dx, dy, cache, true);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn forward_impl(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        x: &[f32],
+        y: &mut [f32],
+        cache: &mut [f32],
+        aug: bool,
+    ) {
+        debug_assert!(!aug || self.supports_time_aug());
+        let mut s = self.scratch.borrow_mut();
+        s.ensure_work(bsz * self.max_width);
+        let SeqScratch { buf_a, buf_b, bias_eff, .. } = &mut *s;
+        let (mut cur, mut nxt) = (&mut buf_a[..], &mut buf_b[..]);
+        let n_steps = self.plan.len();
+        let mut c_off = 0;
+        for (si, step) in self.plan.iter().enumerate() {
+            let first = si == 0;
+            let last = si + 1 == n_steps;
+            match *step {
+                Step::Child(k) => {
+                    let child = &self.children[k];
+                    let cl = child.cache_len(bsz);
+                    let ck = &mut cache[c_off..c_off + cl];
+                    c_off += cl;
+                    let th = self.theta_slice(theta, k);
+                    let din = bsz * child.in_dim();
+                    let dout = bsz * child.out_dim();
+                    let xin: &[f32] = if first { x } else { &cur[..din] };
+                    if last {
+                        child.forward(bsz, t, th, xin, y, ck);
+                    } else {
+                        child.forward(bsz, t, th, xin, &mut nxt[..dout], ck);
+                    }
+                }
+                Step::LinAct(k) => {
+                    let lin = &self.children[k];
+                    let act = self.children[k + 1].as_activation().unwrap().act();
+                    let dfull = lin.in_dim();
+                    let dout = lin.out_dim();
+                    let cl = bsz * (dfull + dout);
+                    let (cx, cz) = cache[c_off..c_off + cl].split_at_mut(bsz * dfull);
+                    c_off += cl;
+                    let th = self.theta_slice(theta, k);
+                    let (w, b) = th.split_at(dfull * dout);
+                    let keff: usize;
+                    let weff: &[f32];
+                    let xin: &[f32];
+                    if aug && first {
+                        // write [x | t] into the Linear cache (gW needs
+                        // the t column), but drive the GEMM off the raw
+                        // x with b_eff = b + t·W[d,:]
+                        let d = dfull - 1;
+                        let tt = t as f32;
+                        for (crow, xrow) in
+                            cx.chunks_exact_mut(dfull).zip(x.chunks_exact(d))
+                        {
+                            crow[..d].copy_from_slice(xrow);
+                            crow[d] = tt;
+                        }
+                        let be = &mut bias_eff[..dout];
+                        for ((bj, wj), b0) in be.iter_mut().zip(&w[d * dout..]).zip(b) {
+                            *bj = *b0 + tt * *wj;
+                        }
+                        keff = d;
+                        weff = &w[..d * dout];
+                        xin = x;
+                    } else {
+                        let src: &[f32] = if first { x } else { &cur[..bsz * dfull] };
+                        cx.copy_from_slice(src);
+                        keff = dfull;
+                        weff = w;
+                        xin = src;
+                    }
+                    let bias: &[f32] =
+                        if aug && first { &bias_eff[..dout] } else { b };
+                    let yout: &mut [f32] =
+                        if last { &mut *y } else { &mut nxt[..bsz * dout] };
+                    // z (the Activation cache) and y in one pass per row
+                    sgemm_epi2(bsz, keff, dout, xin, weff, cz, yout, &|_, zrow, yrow| {
+                        for ((zj, yj), bj) in
+                            zrow.iter_mut().zip(yrow.iter_mut()).zip(bias)
+                        {
+                            let zv = *zj + *bj;
+                            *zj = zv;
+                            *yj = act.apply(zv);
+                        }
+                    });
+                }
+            }
+            if !last {
+                std::mem::swap(&mut cur, &mut nxt);
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn vjp_impl(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        v: &[f32],
+        gx: &mut [f32],
+        mut grad_theta: Option<&mut [f32]>,
+        cache: &[f32],
+        aug: bool,
+    ) {
+        debug_assert!(!aug || self.supports_time_aug());
+        let mut s = self.scratch.borrow_mut();
+        s.ensure_work(bsz * self.max_width);
+        let SeqScratch { buf_a, buf_b, gz, .. } = &mut *s;
+        let (mut cur, mut nxt) = (&mut buf_a[..], &mut buf_b[..]);
+        let n_steps = self.plan.len();
+        let mut c_end = self.cache_len(bsz);
+        for (si, step) in self.plan.iter().enumerate().rev() {
+            let first = si == 0;
+            let last = si + 1 == n_steps;
+            match *step {
+                Step::Child(k) => {
+                    let child = &self.children[k];
+                    let cl = child.cache_len(bsz);
+                    let ck = &cache[c_end - cl..c_end];
+                    c_end -= cl;
+                    let th = self.theta_slice(theta, k);
+                    let gt = grad_theta
+                        .as_deref_mut()
+                        .map(|g| &mut g[self.theta_off[k]..self.theta_off[k + 1]]);
+                    let din = bsz * child.in_dim();
+                    let dout = bsz * child.out_dim();
+                    let vin: &[f32] = if last { v } else { &cur[..dout] };
+                    if first {
+                        child.vjp(bsz, t, th, vin, gx, gt, ck);
+                    } else {
+                        child.vjp(bsz, t, th, vin, &mut nxt[..din], gt, ck);
+                    }
+                }
+                Step::LinAct(k) => {
+                    let lin = &self.children[k];
+                    let act = self.children[k + 1].as_activation().unwrap().act();
+                    let dfull = lin.in_dim();
+                    let dout = lin.out_dim();
+                    let cl = bsz * (dfull + dout);
+                    let ck = &cache[c_end - cl..c_end];
+                    c_end -= cl;
+                    let (cx, cz) = ck.split_at(bsz * dfull);
+                    let th = self.theta_slice(theta, k);
+                    let (w, _b) = th.split_at(dfull * dout);
+                    let vin: &[f32] = if last { v } else { &cur[..bsz * dout] };
+                    let gzs = &mut gz[..bsz * dout];
+                    // gz = v ⊙ act'(z); when θ-grads are on, gb folds
+                    // into the same sweep (same row-major accumulation
+                    // order as the unfused column-sum loop)
+                    let gt = grad_theta
+                        .as_deref_mut()
+                        .map(|g| &mut g[self.theta_off[k]..self.theta_off[k + 1]]);
+                    if let Some(gt) = gt {
+                        let (gw, gb) = gt.split_at_mut(dfull * dout);
+                        for (gzrow, (vrow, zrow)) in gzs
+                            .chunks_exact_mut(dout)
+                            .zip(vin.chunks_exact(dout).zip(cz.chunks_exact(dout)))
+                        {
+                            for ((gj, gbj), (vj, zj)) in gzrow
+                                .iter_mut()
+                                .zip(gb.iter_mut())
+                                .zip(vrow.iter().zip(zrow))
+                            {
+                                let g = *vj * act.grad(*zj);
+                                *gj = g;
+                                *gbj += g;
+                            }
+                        }
+                        // gW += xᵀ gz (x = the cached layer input)
+                        sgemm_at(dfull, bsz, dout, cx, gzs, gw, 1.0);
+                    } else {
+                        for (gj, (vj, zj)) in gzs.iter_mut().zip(vin.iter().zip(cz)) {
+                            *gj = *vj * act.grad(*zj);
+                        }
+                    }
+                    // gx = gz @ Wᵀ; on the time-aug first step the W rows
+                    // 0..d are a contiguous prefix, so dropping the t
+                    // cotangent is just a shorter n — no strip pass
+                    if first {
+                        if aug {
+                            let d = dfull - 1;
+                            sgemm_bt(bsz, dout, d, gzs, &w[..d * dout], gx, 0.0);
+                        } else {
+                            sgemm_bt(bsz, dout, dfull, gzs, w, gx, 0.0);
+                        }
+                    } else {
+                        sgemm_bt(bsz, dout, dfull, gzs, w, &mut nxt[..bsz * dfull], 0.0);
+                    }
+                }
+            }
+            if !first {
+                std::mem::swap(&mut cur, &mut nxt);
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn jvp_impl(
+        &self,
+        bsz: usize,
+        t: f64,
+        theta: &[f32],
+        dx: &[f32],
+        dy: &mut [f32],
+        cache: &[f32],
+        aug: bool,
+    ) {
+        debug_assert!(!aug || self.supports_time_aug());
+        let mut s = self.scratch.borrow_mut();
+        s.ensure_work(bsz * self.max_width);
+        let SeqScratch { buf_a, buf_b, .. } = &mut *s;
+        let (mut cur, mut nxt) = (&mut buf_a[..], &mut buf_b[..]);
+        let n_steps = self.plan.len();
+        let mut c_off = 0;
+        for (si, step) in self.plan.iter().enumerate() {
+            let first = si == 0;
+            let last = si + 1 == n_steps;
+            match *step {
+                Step::Child(k) => {
+                    let child = &self.children[k];
+                    let cl = child.cache_len(bsz);
+                    let ck = &cache[c_off..c_off + cl];
+                    c_off += cl;
+                    let th = self.theta_slice(theta, k);
+                    let din = bsz * child.in_dim();
+                    let dout = bsz * child.out_dim();
+                    let xin: &[f32] = if first { dx } else { &cur[..din] };
+                    if last {
+                        child.jvp(bsz, t, th, xin, dy, ck);
+                    } else {
+                        child.jvp(bsz, t, th, xin, &mut nxt[..dout], ck);
+                    }
+                }
+                Step::LinAct(k) => {
+                    let lin = &self.children[k];
+                    let act = self.children[k + 1].as_activation().unwrap().act();
+                    let dfull = lin.in_dim();
+                    let dout = lin.out_dim();
+                    let cl = bsz * (dfull + dout);
+                    let ck = &cache[c_off..c_off + cl];
+                    c_off += cl;
+                    let (_cx, cz) = ck.split_at(bsz * dfull);
+                    let th = self.theta_slice(theta, k);
+                    let (w, _b) = th.split_at(dfull * dout);
+                    // the t column's tangent is zero on the aug path
+                    let (keff, weff): (usize, &[f32]) = if aug && first {
+                        (dfull - 1, &w[..(dfull - 1) * dout])
+                    } else {
+                        (dfull, w)
+                    };
+                    let xin: &[f32] = if first { dx } else { &cur[..bsz * keff] };
+                    let dyout: &mut [f32] =
+                        if last { &mut *dy } else { &mut nxt[..bsz * dout] };
+                    sgemm_epi(bsz, keff, dout, xin, weff, dyout, &|i, yrow| {
+                        let zrow = &cz[i * dout..(i + 1) * dout];
+                        for (yj, zj) in yrow.iter_mut().zip(zrow) {
+                            *yj *= act.grad(*zj);
+                        }
+                    });
+                }
+            }
+            if !last {
+                std::mem::swap(&mut cur, &mut nxt);
+            }
+        }
     }
 }
 
@@ -177,33 +573,7 @@ impl Module for Sequential {
         y: &mut [f32],
         cache: &mut [f32],
     ) {
-        let k_n = self.children.len();
-        if k_n == 1 {
-            self.children[0].forward(bsz, t, self.theta_slice(theta, 0), x, y, cache);
-            return;
-        }
-        let mut s = self.scratch.borrow_mut();
-        s.ensure_work(bsz * self.max_width);
-        let s = &mut *s;
-        let (mut cur, mut nxt) = (&mut s.buf_a[..], &mut s.buf_b[..]);
-        let mut c_off = 0;
-        for (k, child) in self.children.iter().enumerate() {
-            let cl = child.cache_len(bsz);
-            let ck = &mut cache[c_off..c_off + cl];
-            c_off += cl;
-            let th = self.theta_slice(theta, k);
-            let din = bsz * child.in_dim();
-            let dout = bsz * child.out_dim();
-            if k == 0 {
-                child.forward(bsz, t, th, x, &mut nxt[..dout], ck);
-            } else if k + 1 == k_n {
-                child.forward(bsz, t, th, &cur[..din], y, ck);
-                return;
-            } else {
-                child.forward(bsz, t, th, &cur[..din], &mut nxt[..dout], ck);
-            }
-            std::mem::swap(&mut cur, &mut nxt);
-        }
+        self.forward_impl(bsz, t, theta, x, y, cache, false);
     }
 
     fn vjp(
@@ -213,68 +583,14 @@ impl Module for Sequential {
         theta: &[f32],
         v: &[f32],
         gx: &mut [f32],
-        mut grad_theta: Option<&mut [f32]>,
+        grad_theta: Option<&mut [f32]>,
         cache: &[f32],
     ) {
-        let k_n = self.children.len();
-        if k_n == 1 {
-            self.children[0].vjp(bsz, t, self.theta_slice(theta, 0), v, gx, grad_theta, cache);
-            return;
-        }
-        let mut s = self.scratch.borrow_mut();
-        s.ensure_work(bsz * self.max_width);
-        let s = &mut *s;
-        let (mut cur, mut nxt) = (&mut s.buf_a[..], &mut s.buf_b[..]);
-        let mut c_end = self.cache_len(bsz);
-        for k in (0..k_n).rev() {
-            let child = &self.children[k];
-            let cl = child.cache_len(bsz);
-            let ck = &cache[c_end - cl..c_end];
-            c_end -= cl;
-            let th = self.theta_slice(theta, k);
-            let gt = grad_theta
-                .as_deref_mut()
-                .map(|g| &mut g[self.theta_off[k]..self.theta_off[k + 1]]);
-            let din = bsz * child.in_dim();
-            let dout = bsz * child.out_dim();
-            let vin: &[f32] = if k + 1 == k_n { v } else { &cur[..dout] };
-            if k == 0 {
-                child.vjp(bsz, t, th, vin, gx, gt, ck);
-            } else {
-                child.vjp(bsz, t, th, vin, &mut nxt[..din], gt, ck);
-                std::mem::swap(&mut cur, &mut nxt);
-            }
-        }
+        self.vjp_impl(bsz, t, theta, v, gx, grad_theta, cache, false);
     }
 
     fn jvp(&self, bsz: usize, t: f64, theta: &[f32], dx: &[f32], dy: &mut [f32], cache: &[f32]) {
-        let k_n = self.children.len();
-        if k_n == 1 {
-            self.children[0].jvp(bsz, t, self.theta_slice(theta, 0), dx, dy, cache);
-            return;
-        }
-        let mut s = self.scratch.borrow_mut();
-        s.ensure_work(bsz * self.max_width);
-        let s = &mut *s;
-        let (mut cur, mut nxt) = (&mut s.buf_a[..], &mut s.buf_b[..]);
-        let mut c_off = 0;
-        for (k, child) in self.children.iter().enumerate() {
-            let cl = child.cache_len(bsz);
-            let ck = &cache[c_off..c_off + cl];
-            c_off += cl;
-            let th = self.theta_slice(theta, k);
-            let din = bsz * child.in_dim();
-            let dout = bsz * child.out_dim();
-            if k == 0 {
-                child.jvp(bsz, t, th, dx, &mut nxt[..dout], ck);
-            } else if k + 1 == k_n {
-                child.jvp(bsz, t, th, &cur[..din], dy, ck);
-                return;
-            } else {
-                child.jvp(bsz, t, th, &cur[..din], &mut nxt[..dout], ck);
-            }
-            std::mem::swap(&mut cur, &mut nxt);
-        }
+        self.jvp_impl(bsz, t, theta, dx, dy, cache, false);
     }
 
     fn sovjp(
@@ -387,5 +703,9 @@ impl Module for Sequential {
 
     fn boxed_clone(&self) -> Box<dyn Module> {
         Box::new(self.clone())
+    }
+
+    fn as_sequential(&self) -> Option<&Sequential> {
+        Some(self)
     }
 }

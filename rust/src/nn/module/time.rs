@@ -2,9 +2,14 @@
 //! need that a time-independent MLP cannot express.
 //!
 //! * [`ConcatTime`]: appends the scalar `t` as one extra input channel
-//!   per sample and runs an inner module over `[x, t]` — arithmetic
-//!   identical to the legacy `MlpRhs { time_dep: true }` augment/strip
-//!   path (`model.py::_augment_time` on the Python side).
+//!   per sample and runs an inner module over `[x, t]`.  When the inner
+//!   module is a [`Sequential`](super::Sequential) whose first step is a
+//!   fused Linear, the first-order passes skip the `[x | t]`
+//!   materialisation entirely and fold the time column into that layer's
+//!   effective bias (`b_eff = b + t·W[d, :]`, see `sequential.rs` for
+//!   the determinism contract); otherwise the legacy augment/strip path
+//!   (`model.py::_augment_time` on the Python side) runs unchanged, and
+//!   `sovjp` always uses it.
 //! * [`ConcatSquash`]: the FFJORD concatsquash layer
 //!   `y = (x W + b) ⊙ σ(t·w_g + b_g) + t·w_s` — a dense layer whose gate
 //!   and shift are hypernetworks in `t`.  θ layout:
@@ -14,7 +19,7 @@ use std::cell::RefCell;
 
 use crate::nn::Act;
 use crate::nn::module::Module;
-use crate::tensor::gemm::{sgemm, sgemm_at, sgemm_bt};
+use crate::tensor::gemm::{sgemm, sgemm_at, sgemm_bt, sgemm_epi, sgemm_epi2};
 
 // ---------------------------------------------------------------------------
 // ConcatTime
@@ -123,6 +128,14 @@ impl Module for ConcatTime {
         y: &mut [f32],
         cache: &mut [f32],
     ) {
+        // fused path: hand the t column to the inner stack's first fused
+        // Linear (no [B, d+1] materialisation; see sequential.rs docs)
+        if let Some(seq) = self.inner.as_sequential() {
+            if seq.supports_time_aug() {
+                seq.forward_time_aug(bsz, t, theta, x, y, cache);
+                return;
+            }
+        }
         self.ensure(bsz);
         let mut s = self.scratch.borrow_mut();
         let s = &mut *s;
@@ -140,6 +153,13 @@ impl Module for ConcatTime {
         grad_theta: Option<&mut [f32]>,
         cache: &[f32],
     ) {
+        if let Some(seq) = self.inner.as_sequential() {
+            if seq.supports_time_aug() {
+                // writes the [B, d] cotangent directly — no pad + strip
+                seq.vjp_time_aug(bsz, t, theta, v, gx, grad_theta, cache);
+                return;
+            }
+        }
         self.ensure(bsz);
         let mut s = self.scratch.borrow_mut();
         let s = &mut *s;
@@ -148,6 +168,12 @@ impl Module for ConcatTime {
     }
 
     fn jvp(&self, bsz: usize, t: f64, theta: &[f32], dx: &[f32], dy: &mut [f32], cache: &[f32]) {
+        if let Some(seq) = self.inner.as_sequential() {
+            if seq.supports_time_aug() {
+                seq.jvp_time_aug(bsz, t, theta, dx, dy, cache);
+                return;
+            }
+        }
         self.ensure(bsz);
         let mut s = self.scratch.borrow_mut();
         let s = &mut *s;
@@ -300,22 +326,21 @@ impl Module for ConcatSquash {
         self.ensure(bsz);
         let mut s = self.scratch.borrow_mut();
         let s = &mut *s;
+        self.gates(t, wg, bg, &mut s.gate);
         let (cx, clin) = cache.split_at_mut(bsz * self.din);
         cx.copy_from_slice(x);
         let lin = &mut clin[..bsz * self.dout];
-        sgemm(bsz, self.din, self.dout, x, w, lin, 0.0);
-        for row in 0..bsz {
-            for j in 0..self.dout {
-                lin[row * self.dout + j] += b[j];
-            }
-        }
-        self.gates(t, wg, bg, &mut s.gate);
+        let gate: &[f32] = &s.gate[..self.dout];
         let tt = t as f32;
-        for row in 0..bsz {
-            for j in 0..self.dout {
-                y[row * self.dout + j] = lin[row * self.dout + j] * s.gate[j] + tt * ws[j];
+        // bias, gate, and shift applied in the GEMM epilogue while each
+        // row is cache-hot; lin keeps the pre-gate map the vjp reads back
+        sgemm_epi2(bsz, self.din, self.dout, x, w, lin, y, &|_, zrow, yrow| {
+            for j in 0..zrow.len() {
+                let zv = zrow[j] + b[j];
+                zrow[j] = zv;
+                yrow[j] = zv * gate[j] + tt * ws[j];
             }
-        }
+        });
     }
 
     fn vjp(
@@ -337,23 +362,23 @@ impl Module for ConcatSquash {
         let lin = &clin[..bsz * self.dout];
         // vg = v ⊙ gate (broadcast over rows)
         let vg = &mut s.buf[..bsz * self.dout];
-        for row in 0..bsz {
-            for j in 0..self.dout {
-                vg[row * self.dout + j] = v[row * self.dout + j] * s.gate[j];
-            }
-        }
         if let Some(gt) = grad_theta {
             let tt = t as f32;
             let (gw, rest) = gt.split_at_mut(self.din * self.dout);
             let (gb, rest) = rest.split_at_mut(self.dout);
             let (gwg, rest) = rest.split_at_mut(self.dout);
             let (gbg, gws) = rest.split_at_mut(self.dout);
-            sgemm_at(self.din, bsz, self.dout, cx, vg, gw, 1.0);
+            // gb folded into the gating sweep: same row-major
+            // accumulation order as the separate column-sum loop had,
+            // so the sums are bitwise identical
             for row in 0..bsz {
                 for j in 0..self.dout {
-                    gb[j] += vg[row * self.dout + j];
+                    let g = v[row * self.dout + j] * s.gate[j];
+                    vg[row * self.dout + j] = g;
+                    gb[j] += g;
                 }
             }
+            sgemm_at(self.din, bsz, self.dout, cx, vg, gw, 1.0);
             for j in 0..self.dout {
                 // s_j = Σ_r v[r,j]·lin[r,j] drives the gate-parameter grads
                 let mut sj = 0.0f32;
@@ -367,6 +392,12 @@ impl Module for ConcatSquash {
                 gbg[j] += sj * gp;
                 gws[j] += tt * vsum;
             }
+        } else {
+            for row in 0..bsz {
+                for j in 0..self.dout {
+                    vg[row * self.dout + j] = v[row * self.dout + j] * s.gate[j];
+                }
+            }
         }
         sgemm_bt(bsz, self.dout, self.din, vg, w, gx, 0.0);
     }
@@ -377,13 +408,13 @@ impl Module for ConcatSquash {
         let mut s = self.scratch.borrow_mut();
         let s = &mut *s;
         self.gates(t, wg, bg, &mut s.gate);
-        let lin_d = &mut s.buf[..bsz * self.dout];
-        sgemm(bsz, self.din, self.dout, dx, w, lin_d, 0.0);
-        for row in 0..bsz {
-            for j in 0..self.dout {
-                dy[row * self.dout + j] = lin_d[row * self.dout + j] * s.gate[j];
+        let gate: &[f32] = &s.gate[..self.dout];
+        // gate multiply in the GEMM epilogue: no lin_d staging buffer
+        sgemm_epi(bsz, self.din, self.dout, dx, w, dy, &|_, yrow| {
+            for (yj, gj) in yrow.iter_mut().zip(gate) {
+                *yj *= *gj;
             }
-        }
+        });
     }
 
     fn sovjp(

@@ -9,7 +9,7 @@
 //!   dL/dlogits = (p - onehot(y)) / B
 //!   dL/du = dL/dlogits W^T,  dL/dW = u^T dL/dlogits,  dL/db = Σ_rows
 
-use crate::tensor::gemm::{sgemm, sgemm_at, sgemm_bt};
+use crate::tensor::gemm::{sgemm_at, sgemm_bt, sgemm_epi};
 use crate::util::rng::Rng;
 
 /// Linear readout (D features -> K classes).
@@ -44,15 +44,15 @@ impl Readout {
         self.d * self.k + self.k
     }
 
-    /// logits = u W + b
+    /// logits = u W + b (bias added in the GEMM epilogue)
     pub fn logits(&self, bsz: usize, u: &[f32]) -> Vec<f32> {
         let mut out = vec![0.0f32; bsz * self.k];
-        sgemm(bsz, self.d, self.k, u, &self.w, &mut out, 0.0);
-        for r in 0..bsz {
-            for j in 0..self.k {
-                out[r * self.k + j] += self.b[j];
+        let b = &self.b[..self.k];
+        sgemm_epi(bsz, self.d, self.k, u, &self.w, &mut out, &|_, row| {
+            for (oj, bj) in row.iter_mut().zip(b) {
+                *oj += *bj;
             }
-        }
+        });
         out
     }
 

@@ -1,20 +1,57 @@
-//! Small blocked SGEMM for the pure-Rust MLP (cross-check path and
-//! XLA-free tests).  The production hot path runs GEMMs inside the AOT HLO;
-//! this one only needs to be correct and reasonably fast.
+//! SGEMM kernel family for the pure-Rust hot path.  Since PR 1 made the
+//! `xla` feature off-by-default, every forward, VJP, and second-order
+//! adjoint in the crate bottoms out here — this IS the production kernel,
+//! not a cross-check curiosity.
 //!
-//! Two performance features, both value-preserving:
+//! Architecture (DESIGN.md §12):
 //!
-//! * a zero-skip fast path (`a` entries that are exactly 0 skip their `b`
-//!   row), guarded so it only fires when `b` is entirely finite —
-//!   `0 * NaN = NaN` and `0 * Inf = NaN` must poison the output, not be
-//!   silently dropped.  The finiteness scan runs lazily on the first
-//!   zero encountered, so zero-free GEMMs pay nothing for the guard;
-//! * row-blocked parallelism for large outputs ([`set_gemm_workers`]):
-//!   each worker computes a disjoint block of `c` rows with the *same*
-//!   per-row arithmetic as the serial loop, so the result is bitwise
-//!   identical for any worker count.
+//! * **Panel packing.** `b` is repacked once per call into zero-padded
+//!   panels of [`LANES`] contiguous columns (`panel[p * LANES + j]`), so
+//!   the microkernel streams unit-stride, aligned-width rows regardless
+//!   of `n` or transposition.
+//! * **Register-blocked microkernel.** [`MR`] output rows × [`LANES`]
+//!   output columns accumulate in registers over the full `k` extent —
+//!   one accumulator per (row, lane), the `p` loop strictly sequential,
+//!   no horizontal reduction.  Every multiply-add is a *fused*
+//!   multiply-add: `_mm256_fmadd_ps` on the AVX2 path, `f32::mul_add`
+//!   (correctly rounded everywhere) on the portable path, so the two
+//!   vector paths are bitwise identical on every CPU.
+//! * **One-time dispatch.** [`kernel_path`] picks scalar / portable /
+//!   AVX2 once per process: `PNODE_KERNEL=scalar` forces the legacy
+//!   loop, `PNODE_KERNEL=portable` forces the lane-emulation path
+//!   (debug aid), anything else runs CPU detection.
+//! * **`beta` folded into the writeback.** The vector paths never
+//!   pre-sweep `c`: each output element is produced exactly once, and the
+//!   first (only) panel write applies `beta` — `c = acc` when `beta == 0`
+//!   (old contents never read, NaN-safe), `c += acc` when `beta == 1`.
+//! * **Row-block parallelism** ([`set_gemm_workers`]) layers on top
+//!   unchanged: workers own disjoint `c` row blocks and each output
+//!   element's arithmetic is independent of how rows are grouped into
+//!   tiles, so results are bitwise identical for any worker count.
+//! * **Fused epilogues.** [`sgemm_epi`] / [`sgemm_epi2`] run a per-row
+//!   closure (bias add, activation, gating) while the freshly written row
+//!   is still cache-hot — the building block for the fused module kernels
+//!   in `nn/module/`.  Epilogues must not re-enter this module: the
+//!   thread-local pack buffer is borrowed for the whole call.
+//!
+//! Determinism contract: every path is bitwise reproducible across runs
+//! and worker counts, and the portable and AVX2 paths are bitwise
+//! identical to *each other* — but the vector paths are NOT bitwise equal
+//! to the scalar loop (different accumulation order + fused rounding).
+//! Oracle comparisons therefore pin the scalar path exactly and hold the
+//! vector paths to a tolerance; see DESIGN.md §12.
+//!
+//! The legacy scalar loop keeps its two value-preserving quirks: the
+//! zero-skip fast path (`a` entries that are exactly 0 skip their `b`
+//! row, guarded by a lazy `b`-finiteness scan so `0·NaN` / `0·Inf` still
+//! poison) and the serial ikj order.  The vector paths drop the skip —
+//! fused multiplies make `0·NaN = NaN` propagation automatic, and the
+//! `-0.0 + 0·x` sign preservation of the skip is a scalar-only artifact
+//! (pinned as such in the tests below).
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 /// Worker threads [`sgemm`] may use for large outputs (process-wide; set
 /// from `--workers` / `PNODE_WORKERS`).  1 disables parallelism.
@@ -32,6 +69,87 @@ pub fn gemm_workers() -> usize {
 const PAR_MIN_ROWS: usize = 64;
 /// ...and this many multiply-adds (thread spawn is a few tens of µs).
 const PAR_MIN_MULADDS: u64 = 1 << 21;
+
+/// Virtual vector width of the packed kernel, in f32 lanes.  Fixed — not
+/// CPU-dependent — so packing layout and reduction order (and therefore
+/// output bits) never vary across machines.
+const LANES: usize = 8;
+/// Output rows per register tile.
+const MR: usize = 4;
+
+// ---------------------------------------------------------------------------
+// dispatch
+
+/// Which kernel implementation this process runs.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum KernelPath {
+    /// legacy serial ikj loop with the zero-skip fast path
+    Scalar,
+    /// packed kernel, lane loop emulated with `f32::mul_add`
+    Portable,
+    /// packed kernel, AVX2 + FMA intrinsics (bitwise equal to Portable)
+    Avx2,
+}
+
+impl KernelPath {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Portable => "portable",
+            KernelPath::Avx2 => "avx2",
+        }
+    }
+}
+
+/// CPU-feature detection result (what an unset/`simd` `PNODE_KERNEL`
+/// resolves to) — exposed so tests and benches can pin the strongest
+/// path available on the host without touching the one-shot dispatch.
+pub fn detect() -> KernelPath {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return KernelPath::Avx2;
+        }
+    }
+    KernelPath::Portable
+}
+
+/// The process-wide kernel path, decided once on first use:
+/// `PNODE_KERNEL=scalar` forces the legacy loop, `PNODE_KERNEL=portable`
+/// forces lane emulation (debug aid — slow without hardware FMA), any
+/// other value (including the documented `simd` and unset) runs CPU
+/// detection.
+pub fn kernel_path() -> KernelPath {
+    static PATH: OnceLock<KernelPath> = OnceLock::new();
+    *PATH.get_or_init(|| match std::env::var("PNODE_KERNEL").as_deref() {
+        Ok("scalar") => KernelPath::Scalar,
+        Ok("portable") => KernelPath::Portable,
+        _ => detect(),
+    })
+}
+
+/// Record which kernel path the process dispatched to: one instant event
+/// (`kernel.dispatch`, detail = path name).  Called from `Session`
+/// construction — not from the first GEMM — so the event lands at a
+/// deterministic `(tid, seq)` position in every traced run.
+pub fn note_dispatch() {
+    if crate::obs::enabled() {
+        crate::obs::warn("kernel.dispatch", || kernel_path().name().to_string());
+    }
+}
+
+/// `gemm.mul_adds` counter, recorded on the *calling* thread only (the
+/// kernel's own row workers are raw scoped threads with no obs job
+/// context and must stay silent).
+#[inline]
+fn obs_gemm(m: usize, k: usize, n: usize) {
+    if crate::obs::enabled() {
+        crate::obs::counter("gemm.mul_adds", (m as f64) * (k as f64) * (n as f64));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// legacy scalar path (PNODE_KERNEL=scalar) — arithmetic preserved verbatim
 
 /// Lazily computed "is `b` entirely finite" — the zero-skip gate.  The
 /// scan costs O(k·n), so it only runs if a zero in `a` is actually
@@ -69,19 +187,7 @@ fn sgemm_rows(i0: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
     }
 }
 
-/// c[m,n] (+)= a[m,k] @ b[k,n];  row-major, `beta` scales existing c.
-pub fn sgemm(
-    m: usize,
-    k: usize,
-    n: usize,
-    a: &[f32],
-    b: &[f32],
-    c: &mut [f32],
-    beta: f32,
-) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
+fn scale_c(c: &mut [f32], beta: f32) {
     if beta == 0.0 {
         c.fill(0.0);
     } else if beta != 1.0 {
@@ -89,6 +195,10 @@ pub fn sgemm(
             *x *= beta;
         }
     }
+}
+
+fn scalar_sgemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], beta: f32) {
+    scale_c(c, beta);
     let workers = gemm_workers();
     if workers > 1 && m >= PAR_MIN_ROWS && (m as u64) * (k as u64) * (n as u64) >= PAR_MIN_MULADDS
     {
@@ -104,26 +214,8 @@ pub fn sgemm(
     sgemm_rows(0, k, n, a, b, c);
 }
 
-/// c[m,n] (+)= a^T[m,k] @ b[k,n] where a is stored [k,m] row-major.
-pub fn sgemm_at(
-    m: usize,
-    k: usize,
-    n: usize,
-    a: &[f32], // [k, m]
-    b: &[f32], // [k, n]
-    c: &mut [f32],
-    beta: f32,
-) {
-    debug_assert_eq!(a.len(), k * m);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    if beta == 0.0 {
-        c.fill(0.0);
-    } else if beta != 1.0 {
-        for x in c.iter_mut() {
-            *x *= beta;
-        }
-    }
+fn scalar_sgemm_at(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], beta: f32) {
+    scale_c(c, beta);
     let mut b_finite = BFinite::default();
     for p in 0..k {
         let arow = &a[p * m..(p + 1) * m];
@@ -141,26 +233,8 @@ pub fn sgemm_at(
     }
 }
 
-/// c[m,n] (+)= a[m,k] @ b^T[k,n] where b is stored [n,k] row-major.
-pub fn sgemm_bt(
-    m: usize,
-    k: usize,
-    n: usize,
-    a: &[f32], // [m, k]
-    b: &[f32], // [n, k]
-    c: &mut [f32],
-    beta: f32,
-) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    debug_assert_eq!(c.len(), m * n);
-    if beta == 0.0 {
-        c.fill(0.0);
-    } else if beta != 1.0 {
-        for x in c.iter_mut() {
-            *x *= beta;
-        }
-    }
+fn scalar_sgemm_bt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], beta: f32) {
+    scale_c(c, beta);
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
@@ -175,9 +249,500 @@ pub fn sgemm_bt(
     }
 }
 
+// ---------------------------------------------------------------------------
+// packed vector path (Portable / Avx2)
+
+/// Strided read-only view of the `a` operand: `at(i, p) = A[i, p]` for
+/// the logical [m, k] matrix, covering both the natural layout
+/// (`row_stride = k, p_stride = 1`) and the transposed-storage layout of
+/// [`sgemm_at`] (`row_stride = 1, p_stride = m`).
+#[derive(Clone, Copy)]
+struct AView<'a> {
+    a: &'a [f32],
+    row_stride: usize,
+    p_stride: usize,
+}
+
+impl AView<'_> {
+    #[inline(always)]
+    fn at(&self, i: usize, p: usize) -> f32 {
+        self.a[i * self.row_stride + p * self.p_stride]
+    }
+}
+
+thread_local! {
+    /// Per-thread pack buffer, reused across calls.  Borrowed for the
+    /// whole duration of a packed GEMM — epilogues must not re-enter.
+    static PACK: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Pack `b` into `n.div_ceil(LANES)` panels of `k` rows × `LANES`
+/// contiguous columns, zero-padding the last panel's missing columns.
+/// `transposed` reads `b` as [n, k] row-major (the [`sgemm_bt`] layout).
+fn pack_b(k: usize, n: usize, b: &[f32], transposed: bool, out: &mut Vec<f32>) {
+    let panels = n.div_ceil(LANES);
+    out.clear();
+    out.resize(panels * k * LANES, 0.0);
+    for jp in 0..panels {
+        let j0 = jp * LANES;
+        let jw = LANES.min(n - j0);
+        let panel = &mut out[jp * k * LANES..(jp + 1) * k * LANES];
+        if transposed {
+            for (dj, bcol) in b.chunks_exact(k).skip(j0).take(jw).enumerate() {
+                for (p, bv) in bcol.iter().enumerate() {
+                    panel[p * LANES + dj] = *bv;
+                }
+            }
+        } else {
+            for (p, brow) in b.chunks_exact(n).enumerate() {
+                panel[p * LANES..p * LANES + jw].copy_from_slice(&brow[j0..j0 + jw]);
+            }
+        }
+    }
+}
+
+/// Portable microkernel: `mr` rows × LANES lanes over the full `k`
+/// extent, one accumulator per (row, lane), `f32::mul_add` per element.
+/// Lane-for-lane this is the same arithmetic as [`mk_avx2`] (fused
+/// multiply-adds are correctly rounded), so the two are bitwise equal.
+fn mk_portable(
+    av: AView,
+    i0: usize,
+    mr: usize,
+    k: usize,
+    panel: &[f32],
+    acc: &mut [[f32; LANES]; MR],
+) {
+    for p in 0..k {
+        let brow = &panel[p * LANES..(p + 1) * LANES];
+        for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+            let aval = av.at(i0 + r, p);
+            for (al, bl) in accr.iter_mut().zip(brow) {
+                *al = aval.mul_add(*bl, *al);
+            }
+        }
+    }
+}
+
+/// AVX2 + FMA microkernel.  Only dispatched after runtime detection of
+/// both features; `a` indices are in range by the tiling invariants of
+/// [`do_tile`], the panel slice holds `k * LANES` floats by construction.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn mk_avx2(
+    av: AView,
+    i0: usize,
+    mr: usize,
+    k: usize,
+    panel: &[f32],
+    acc: &mut [[f32; LANES]; MR],
+) {
+    use std::arch::x86_64::*;
+    let (rs, ps) = (av.row_stride, av.p_stride);
+    let mut vacc = [_mm256_setzero_ps(); MR];
+    if mr == MR {
+        // full tile: constant trip count, unrolled by the compiler
+        for p in 0..k {
+            let bv = _mm256_loadu_ps(panel.as_ptr().add(p * LANES));
+            for (r, va) in vacc.iter_mut().enumerate() {
+                let aval = _mm256_set1_ps(*av.a.get_unchecked((i0 + r) * rs + p * ps));
+                *va = _mm256_fmadd_ps(aval, bv, *va);
+            }
+        }
+    } else {
+        for p in 0..k {
+            let bv = _mm256_loadu_ps(panel.as_ptr().add(p * LANES));
+            for (r, va) in vacc.iter_mut().enumerate().take(mr) {
+                let aval = _mm256_set1_ps(*av.a.get_unchecked((i0 + r) * rs + p * ps));
+                *va = _mm256_fmadd_ps(aval, bv, *va);
+            }
+        }
+    }
+    for (accr, va) in acc.iter_mut().zip(vacc).take(mr) {
+        _mm256_storeu_ps(accr.as_mut_ptr(), va);
+    }
+}
+
+/// Off x86-64 the Avx2 variant is never selected; keep the symbol so the
+/// dispatch match compiles everywhere.
+#[cfg(not(target_arch = "x86_64"))]
+unsafe fn mk_avx2(
+    av: AView,
+    i0: usize,
+    mr: usize,
+    k: usize,
+    panel: &[f32],
+    acc: &mut [[f32; LANES]; MR],
+) {
+    mk_portable(av, i0, mr, k, panel, acc)
+}
+
+/// One register tile: rows `[i_abs, i_abs + mr)` × all packed panels,
+/// with `beta` folded into the (single) writeback of each output element.
+#[allow(clippy::too_many_arguments)]
+fn do_tile(
+    path: KernelPath,
+    av: AView,
+    i_abs: usize,
+    mr: usize,
+    k: usize,
+    n: usize,
+    bp: &[f32],
+    crows: &mut [f32],
+    beta: f32,
+) {
+    let panels = n.div_ceil(LANES);
+    for jp in 0..panels {
+        let panel = &bp[jp * k * LANES..(jp + 1) * k * LANES];
+        let mut acc = [[0.0f32; LANES]; MR];
+        match path {
+            KernelPath::Avx2 => unsafe { mk_avx2(av, i_abs, mr, k, panel, &mut acc) },
+            _ => mk_portable(av, i_abs, mr, k, panel, &mut acc),
+        }
+        let j0 = jp * LANES;
+        let jw = LANES.min(n - j0);
+        for (r, accr) in acc.iter().enumerate().take(mr) {
+            let crow = &mut crows[r * n + j0..r * n + j0 + jw];
+            if beta == 0.0 {
+                // old contents never read: NaN/garbage in c cannot leak
+                crow.copy_from_slice(&accr[..jw]);
+            } else if beta == 1.0 {
+                for (cj, aj) in crow.iter_mut().zip(accr) {
+                    *cj += *aj;
+                }
+            } else {
+                for (cj, aj) in crow.iter_mut().zip(accr) {
+                    *cj = beta * *cj + *aj;
+                }
+            }
+        }
+    }
+}
+
+fn no_epi(_i: usize, _row: &mut [f32]) {}
+
+/// Packed kernel over output rows `[i0, i0 + rows)` (one worker's row
+/// block), then the per-row epilogue while each row is still hot.  Tile
+/// grouping never changes bits: each output element has its own
+/// accumulator and a fixed sequential `p` order.
+#[allow(clippy::too_many_arguments)]
+fn simd_rows<F: Fn(usize, &mut [f32])>(
+    path: KernelPath,
+    av: AView,
+    i0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    bp: &[f32],
+    cblock: &mut [f32],
+    beta: f32,
+    epi: &F,
+) {
+    let mut it = 0;
+    while it < rows {
+        let mr = MR.min(rows - it);
+        let crows = &mut cblock[it * n..(it + mr) * n];
+        do_tile(path, av, i0 + it, mr, k, n, bp, crows, beta);
+        for r in 0..mr {
+            epi(i0 + it + r, &mut crows[r * n..(r + 1) * n]);
+        }
+        it += mr;
+    }
+}
+
+/// As [`simd_rows`], with a second [rows, n] buffer `y` driven by the
+/// epilogue (`epi(abs_row, zrow, yrow)`); `z` gets the raw GEMM result.
+#[allow(clippy::too_many_arguments)]
+fn simd_rows2<F: Fn(usize, &mut [f32], &mut [f32])>(
+    path: KernelPath,
+    av: AView,
+    i0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    bp: &[f32],
+    zblock: &mut [f32],
+    yblock: &mut [f32],
+    epi: &F,
+) {
+    let mut it = 0;
+    while it < rows {
+        let mr = MR.min(rows - it);
+        let zrows = &mut zblock[it * n..(it + mr) * n];
+        do_tile(path, av, i0 + it, mr, k, n, bp, zrows, 0.0);
+        for r in 0..mr {
+            epi(
+                i0 + it + r,
+                &mut zrows[r * n..(r + 1) * n],
+                &mut yblock[(it + r) * n..(it + r + 1) * n],
+            );
+        }
+        it += mr;
+    }
+}
+
+fn par_worthwhile(m: usize, k: usize, n: usize) -> bool {
+    gemm_workers() > 1
+        && m >= PAR_MIN_ROWS
+        && (m as u64) * (k as u64) * (n as u64) >= PAR_MIN_MULADDS
+}
+
+// ---------------------------------------------------------------------------
+// public entry points
+
+/// c[m,n] (+)= a[m,k] @ b[k,n];  row-major, `beta` scales existing c.
+pub fn sgemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32], beta: f32) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    obs_gemm(m, k, n);
+    sgemm_with(kernel_path(), m, k, n, a, b, c, beta);
+}
+
+/// [`sgemm`] on an explicit kernel path — exposed so tests and benches
+/// can exercise every path in one process despite the one-time dispatch.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_with(
+    path: KernelPath,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    beta: f32,
+) {
+    if path == KernelPath::Scalar {
+        scalar_sgemm(m, k, n, a, b, c, beta);
+        return;
+    }
+    PACK.with(|p| {
+        let mut pk = p.borrow_mut();
+        pack_b(k, n, b, false, &mut pk);
+        let av = AView { a, row_stride: k, p_stride: 1 };
+        let bp: &[f32] = &pk;
+        if par_worthwhile(m, k, n) {
+            let rows_per = m.div_ceil(gemm_workers());
+            std::thread::scope(|s| {
+                for (bi, cblock) in c.chunks_mut(rows_per * n).enumerate() {
+                    s.spawn(move || {
+                        let rows = cblock.len() / n;
+                        simd_rows(path, av, bi * rows_per, rows, k, n, bp, cblock, beta, &no_epi);
+                    });
+                }
+            });
+            return;
+        }
+        simd_rows(path, av, 0, m, k, n, bp, c, beta, &no_epi);
+    });
+}
+
+/// c[m,n] (+)= a^T[m,k] @ b[k,n] where a is stored [k,m] row-major.
+pub fn sgemm_at(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32], // [k, m]
+    b: &[f32], // [k, n]
+    c: &mut [f32],
+    beta: f32,
+) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    obs_gemm(m, k, n);
+    sgemm_at_with(kernel_path(), m, k, n, a, b, c, beta);
+}
+
+/// [`sgemm_at`] on an explicit kernel path.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_at_with(
+    path: KernelPath,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    beta: f32,
+) {
+    if path == KernelPath::Scalar {
+        scalar_sgemm_at(m, k, n, a, b, c, beta);
+        return;
+    }
+    PACK.with(|p| {
+        let mut pk = p.borrow_mut();
+        pack_b(k, n, b, false, &mut pk);
+        let av = AView { a, row_stride: 1, p_stride: m };
+        simd_rows(path, av, 0, m, k, n, &pk, c, beta, &no_epi);
+    });
+}
+
+/// c[m,n] (+)= a[m,k] @ b^T[k,n] where b is stored [n,k] row-major.
+pub fn sgemm_bt(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32], // [m, k]
+    b: &[f32], // [n, k]
+    c: &mut [f32],
+    beta: f32,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    obs_gemm(m, k, n);
+    sgemm_bt_with(kernel_path(), m, k, n, a, b, c, beta);
+}
+
+/// [`sgemm_bt`] on an explicit kernel path.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_bt_with(
+    path: KernelPath,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    beta: f32,
+) {
+    if path == KernelPath::Scalar {
+        scalar_sgemm_bt(m, k, n, a, b, c, beta);
+        return;
+    }
+    PACK.with(|p| {
+        let mut pk = p.borrow_mut();
+        pack_b(k, n, b, true, &mut pk);
+        let av = AView { a, row_stride: k, p_stride: 1 };
+        simd_rows(path, av, 0, m, k, n, &pk, c, beta, &no_epi);
+    });
+}
+
+/// c[m,n] = a[m,k] @ b[k,n], then `epi(i, row_i)` on each completed row
+/// while it is still cache-hot (bias adds, activations, masking...).
+/// The epilogue runs once per row, on the worker that produced the row;
+/// it must be `Sync` and must not call back into this module.
+pub fn sgemm_epi<F: Fn(usize, &mut [f32]) + Sync>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    epi: &F,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    obs_gemm(m, k, n);
+    let path = kernel_path();
+    if path == KernelPath::Scalar {
+        scalar_sgemm(m, k, n, a, b, c, 0.0);
+        for (i, crow) in c.chunks_mut(n).enumerate() {
+            epi(i, crow);
+        }
+        return;
+    }
+    PACK.with(|p| {
+        let mut pk = p.borrow_mut();
+        pack_b(k, n, b, false, &mut pk);
+        let av = AView { a, row_stride: k, p_stride: 1 };
+        let bp: &[f32] = &pk;
+        if par_worthwhile(m, k, n) {
+            let rows_per = m.div_ceil(gemm_workers());
+            std::thread::scope(|s| {
+                for (bi, cblock) in c.chunks_mut(rows_per * n).enumerate() {
+                    s.spawn(move || {
+                        let rows = cblock.len() / n;
+                        simd_rows(path, av, bi * rows_per, rows, k, n, bp, cblock, 0.0, epi);
+                    });
+                }
+            });
+            return;
+        }
+        simd_rows(path, av, 0, m, k, n, bp, c, 0.0, epi);
+    });
+}
+
+/// z[m,n] = a[m,k] @ b[k,n], then `epi(i, z_row_i, y_row_i)` per row —
+/// the two-output variant for kernels that keep the pre-activation (z)
+/// and emit the activated value (y) in one pass.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_epi2<F: Fn(usize, &mut [f32], &mut [f32]) + Sync>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    z: &mut [f32],
+    y: &mut [f32],
+    epi: &F,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(z.len(), m * n);
+    debug_assert_eq!(y.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    obs_gemm(m, k, n);
+    let path = kernel_path();
+    if path == KernelPath::Scalar {
+        scalar_sgemm(m, k, n, a, b, z, 0.0);
+        for (i, (zrow, yrow)) in z.chunks_mut(n).zip(y.chunks_mut(n)).enumerate() {
+            epi(i, zrow, yrow);
+        }
+        return;
+    }
+    PACK.with(|p| {
+        let mut pk = p.borrow_mut();
+        pack_b(k, n, b, false, &mut pk);
+        let av = AView { a, row_stride: k, p_stride: 1 };
+        let bp: &[f32] = &pk;
+        if par_worthwhile(m, k, n) {
+            let rows_per = m.div_ceil(gemm_workers());
+            std::thread::scope(|s| {
+                let zc = z.chunks_mut(rows_per * n);
+                let yc = y.chunks_mut(rows_per * n);
+                for (bi, (zblock, yblock)) in zc.zip(yc).enumerate() {
+                    s.spawn(move || {
+                        let rows = zblock.len() / n;
+                        simd_rows2(path, av, bi * rows_per, rows, k, n, bp, zblock, yblock, epi);
+                    });
+                }
+            });
+            return;
+        }
+        simd_rows2(path, av, 0, m, k, n, bp, z, y, epi);
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Every path testable on this machine: scalar and portable always,
+    /// AVX2 when the CPU has it.
+    fn paths() -> Vec<KernelPath> {
+        let mut v = vec![KernelPath::Scalar, KernelPath::Portable];
+        if detect() == KernelPath::Avx2 {
+            v.push(KernelPath::Avx2);
+        }
+        v
+    }
 
     fn naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
         let mut c = vec![0.0; m * n];
@@ -191,107 +756,329 @@ mod tests {
         c
     }
 
+    /// Small integers (−6..7): all products and partial sums are exactly
+    /// representable, so EVERY path must match the oracle bit-for-bit
+    /// regardless of accumulation order.
     fn fill(seed: usize, len: usize) -> Vec<f32> {
         (0..len).map(|i| ((i * 31 + seed * 17) % 13) as f32 - 6.0).collect()
     }
 
+    /// Non-integer values: reassociation changes bits, so comparisons
+    /// against the oracle use a relative tolerance.
+    fn fill_f(seed: usize, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|i| (((i * 31 + seed * 17) % 97) as f32) * 0.217 - 10.0)
+            .collect()
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tag: &str) {
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let tol = 1e-4 * w.abs().max(1.0);
+            assert!((g - w).abs() <= tol, "{tag}[{i}]: got {g}, want {w}");
+        }
+    }
+
+    /// Kernel-edge shapes: 1, LANES−1, LANES, LANES+1, odd primes, and a
+    /// multi-tile/multi-panel case — exercises remainder tiles and panel
+    /// padding in every dimension.
+    const EDGES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 7, 9),
+        (3, 4, 5),
+        (7, 8, 8),
+        (8, 8, 8),
+        (9, 9, 9),
+        (13, 21, 7),
+        (17, 5, 23),
+        (5, 16, 1),
+        (2, 0, 3),
+        (31, 13, 19),
+    ];
+
     #[test]
-    fn sgemm_matches_naive() {
-        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (8, 8, 8), (13, 21, 7)] {
-            let a = fill(1, m * k);
-            let b = fill(2, k * n);
-            let mut c = vec![0.0; m * n];
-            sgemm(m, k, n, &a, &b, &mut c, 0.0);
-            assert_eq!(c, naive(m, k, n, &a, &b), "({m},{k},{n})");
+    fn sgemm_matches_naive_exactly_on_integer_data_all_paths() {
+        for path in paths() {
+            for &(m, k, n) in EDGES {
+                let a = fill(1, m * k);
+                let b = fill(2, k * n);
+                let mut c = vec![f32::NAN; m * n]; // beta=0 must overwrite, never read
+                sgemm_with(path, m, k, n, &a, &b, &mut c, 0.0);
+                assert_eq!(c, naive(m, k, n, &a, &b), "{path:?} ({m},{k},{n})");
+            }
         }
     }
 
     #[test]
-    fn sgemm_beta_accumulates() {
-        let a = fill(1, 4);
-        let b = fill(2, 4);
-        let mut c = vec![1.0; 4];
-        sgemm(2, 2, 2, &a, &b, &mut c, 1.0);
-        let mut want = naive(2, 2, 2, &a, &b);
-        for w in want.iter_mut() {
-            *w += 1.0;
+    fn sgemm_matches_naive_within_tolerance_on_float_data_all_paths() {
+        for path in paths() {
+            for &(m, k, n) in EDGES {
+                let a = fill_f(1, m * k);
+                let b = fill_f(2, k * n);
+                let mut c = vec![0.0; m * n];
+                sgemm_with(path, m, k, n, &a, &b, &mut c, 0.0);
+                assert_close(&c, &naive(m, k, n, &a, &b), &format!("{path:?} ({m},{k},{n})"));
+            }
         }
-        assert_eq!(c, want);
     }
 
     #[test]
-    fn zero_skip_does_not_swallow_non_finite_b() {
-        // regression: `a` entries that are exactly 0 used to skip their
-        // `b` row unconditionally, silently dropping 0·NaN / 0·Inf
-        for poison in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
-            // c[0,0] = 0·poison + 1·3, c[0,1] = 0·2 + 1·4
-            let a = vec![0.0f32, 1.0];
-            let b = vec![poison, 2.0, 3.0, 4.0];
-            let mut c = vec![0.0f32; 2];
-            sgemm(1, 2, 2, &a, &b, &mut c, 0.0);
-            assert!(c[0].is_nan(), "0·{poison} must poison the output, got {}", c[0]);
-            assert_eq!(c[1], 4.0, "finite columns are unaffected");
-
-            // a^T variant: same contraction, a stored [k=2, m=1]
-            let at = vec![0.0f32, 1.0];
-            let mut c2 = vec![0.0f32; 2];
-            sgemm_at(1, 2, 2, &at, &b, &mut c2, 0.0);
-            assert!(c2[0].is_nan(), "sgemm_at 0·{poison} must poison");
-            assert_eq!(c2[1], 4.0);
+    fn portable_and_avx2_are_bitwise_identical() {
+        if detect() != KernelPath::Avx2 {
+            return; // no AVX2 on this machine; contract vacuously holds
         }
-        // the skip still fires on finite inputs: -0.0 + 0·x keeps its sign
-        // only when skipped, which pins the fast path as actually taken
+        for &(m, k, n) in EDGES {
+            let a = fill_f(3, m * k);
+            let b = fill_f(4, k * n);
+            let mut cp = vec![0.0; m * n];
+            let mut cv = vec![0.0; m * n];
+            sgemm_with(KernelPath::Portable, m, k, n, &a, &b, &mut cp, 0.0);
+            sgemm_with(KernelPath::Avx2, m, k, n, &a, &b, &mut cv, 0.0);
+            assert_eq!(cp, cv, "({m},{k},{n}): fused-madd lanes must agree exactly");
+
+            let mut tp = vec![0.0; m * n];
+            let mut tv = vec![0.0; m * n];
+            let at: Vec<f32> = {
+                let mut t = vec![0.0; k * m];
+                for i in 0..m {
+                    for p in 0..k {
+                        t[p * m + i] = a[i * k + p];
+                    }
+                }
+                t
+            };
+            sgemm_at_with(KernelPath::Portable, m, k, n, &at, &b, &mut tp, 0.0);
+            sgemm_at_with(KernelPath::Avx2, m, k, n, &at, &b, &mut tv, 0.0);
+            assert_eq!(tp, tv, "sgemm_at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn sgemm_beta_accumulates_on_all_paths() {
+        for path in paths() {
+            // beta = 1: accumulate into existing c
+            let a = fill(1, 4);
+            let b = fill(2, 4);
+            let mut c = vec![1.0; 4];
+            sgemm_with(path, 2, 2, 2, &a, &b, &mut c, 1.0);
+            let mut want = naive(2, 2, 2, &a, &b);
+            for w in want.iter_mut() {
+                *w += 1.0;
+            }
+            assert_eq!(c, want, "{path:?} beta=1");
+
+            // general beta: c = beta·c + a@b  (integer data stays exact)
+            let mut c2 = vec![2.0; 4];
+            sgemm_with(path, 2, 2, 2, &a, &b, &mut c2, 3.0);
+            let mut want2 = naive(2, 2, 2, &a, &b);
+            for w in want2.iter_mut() {
+                *w += 6.0;
+            }
+            assert_eq!(c2, want2, "{path:?} beta=3");
+        }
+    }
+
+    #[test]
+    fn zero_times_nonfinite_poisons_on_all_paths() {
+        // 0·NaN / 0·Inf must poison the output on every path: the scalar
+        // loop via the guarded zero-skip, the vector paths via fused
+        // multiply-adds that never skip.
+        for path in paths() {
+            for poison in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                // c[0,0] = 0·poison + 1·3, c[0,1] = 0·2 + 1·4
+                let a = vec![0.0f32, 1.0];
+                let b = vec![poison, 2.0, 3.0, 4.0];
+                let mut c = vec![0.0f32; 2];
+                sgemm_with(path, 1, 2, 2, &a, &b, &mut c, 0.0);
+                assert!(c[0].is_nan(), "{path:?}: 0·{poison} must poison, got {}", c[0]);
+                assert_eq!(c[1], 4.0, "{path:?}: finite columns are unaffected");
+
+                // a^T variant: same contraction, a stored [k=2, m=1]
+                let at = vec![0.0f32, 1.0];
+                let mut c2 = vec![0.0f32; 2];
+                sgemm_at_with(path, 1, 2, 2, &at, &b, &mut c2, 0.0);
+                assert!(c2[0].is_nan(), "{path:?}: sgemm_at 0·{poison} must poison");
+                assert_eq!(c2[1], 4.0);
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_zero_skip_preserves_negative_zero() {
+        // The skip still fires on finite inputs: -0.0 + 0·x keeps its
+        // sign only when skipped, which pins the fast path as actually
+        // taken.  Scalar-path-only: the vector paths compute
+        // -0.0 + 0·5 = +0.0 (no skip), which is the documented behavior.
         let a = vec![0.0f32];
         let b = vec![5.0f32];
         let mut c = vec![-0.0f32];
-        sgemm(1, 1, 1, &a, &b, &mut c, 1.0);
+        sgemm_with(KernelPath::Scalar, 1, 1, 1, &a, &b, &mut c, 1.0);
         assert!(c[0] == 0.0 && c[0].is_sign_negative(), "skip taken for finite b");
     }
 
     #[test]
-    fn parallel_rows_are_bitwise_identical_to_serial() {
+    fn parallel_rows_are_bitwise_identical_to_serial_on_all_paths() {
         // above both thresholds: 256 rows, 256·96·96 ≈ 2.4M mul-adds
         let (m, k, n) = (256, 96, 96);
-        let a = fill(5, m * k);
-        let b = fill(6, k * n);
-        let mut serial = vec![0.0f32; m * n];
-        sgemm(m, k, n, &a, &b, &mut serial, 0.0);
-        for workers in [2usize, 3, 4] {
-            set_gemm_workers(workers);
-            let mut par = vec![0.5f32; m * n];
-            sgemm(m, k, n, &a, &b, &mut par, 0.0);
-            set_gemm_workers(1);
-            assert_eq!(par, serial, "workers={workers}: row blocks must not change bits");
+        let a = fill_f(5, m * k);
+        let b = fill_f(6, k * n);
+        for path in paths() {
+            let mut serial = vec![0.0f32; m * n];
+            sgemm_with(path, m, k, n, &a, &b, &mut serial, 0.0);
+            for workers in [2usize, 3, 4] {
+                set_gemm_workers(workers);
+                let mut par = vec![0.5f32; m * n];
+                sgemm_with(path, m, k, n, &a, &b, &mut par, 0.0);
+                set_gemm_workers(1);
+                assert_eq!(par, serial, "{path:?} workers={workers}: blocks must not change bits");
+            }
         }
     }
 
     #[test]
-    fn transposed_variants_match() {
-        let (m, k, n) = (5, 7, 3);
-        let a = fill(3, m * k);
-        let b = fill(4, k * n);
-        let want = naive(m, k, n, &a, &b);
+    fn transposed_variants_match_on_all_paths() {
+        for path in paths() {
+            for &(m, k, n) in &[(5, 7, 3), (9, 8, 17), (1, 13, 8)] {
+                let a = fill(3, m * k);
+                let b = fill(4, k * n);
+                let want = naive(m, k, n, &a, &b);
 
-        // a stored transposed [k,m]
-        let mut at = vec![0.0; k * m];
-        for i in 0..m {
-            for p in 0..k {
-                at[p * m + i] = a[i * k + p];
+                // a stored transposed [k,m]
+                let mut at = vec![0.0; k * m];
+                for i in 0..m {
+                    for p in 0..k {
+                        at[p * m + i] = a[i * k + p];
+                    }
+                }
+                let mut c = vec![0.0; m * n];
+                sgemm_at_with(path, m, k, n, &at, &b, &mut c, 0.0);
+                assert_eq!(c, want, "{path:?} sgemm_at ({m},{k},{n})");
+
+                // b stored transposed [n,k]
+                let mut bt = vec![0.0; n * k];
+                for p in 0..k {
+                    for j in 0..n {
+                        bt[j * k + p] = b[p * n + j];
+                    }
+                }
+                let mut c2 = vec![0.0; m * n];
+                sgemm_bt_with(path, m, k, n, &a, &bt, &mut c2, 0.0);
+                assert_eq!(c2, want, "{path:?} sgemm_bt ({m},{k},{n})");
             }
         }
-        let mut c = vec![0.0; m * n];
-        sgemm_at(m, k, n, &at, &b, &mut c, 0.0);
-        assert_eq!(c, want);
+    }
 
-        // b stored transposed [n,k]
-        let mut bt = vec![0.0; n * k];
+    #[test]
+    fn packing_pads_remainder_panels_with_zeros() {
+        // n = 11 → two panels; the second covers columns 8..11 + 5 pad
+        // lanes that must be exactly zero (they feed real FMAs).
+        let (k, n) = (3, 11);
+        let b = fill(7, k * n);
+        let mut out = vec![f32::NAN; 1]; // stale contents must be cleared
+        pack_b(k, n, &b, false, &mut out);
+        assert_eq!(out.len(), 2 * k * LANES);
         for p in 0..k {
-            for j in 0..n {
-                bt[j * k + p] = b[p * n + j];
+            for j in 0..LANES {
+                assert_eq!(out[p * LANES + j], b[p * n + j], "panel 0 ({p},{j})");
+            }
+            for dj in 0..LANES {
+                let j = LANES + dj;
+                let want = if j < n { b[p * n + j] } else { 0.0 };
+                assert_eq!(out[(k + p) * LANES + dj], want, "panel 1 ({p},{dj})");
             }
         }
-        let mut c2 = vec![0.0; m * n];
-        sgemm_bt(m, k, n, &a, &bt, &mut c2, 0.0);
-        assert_eq!(c2, want);
+    }
+
+    #[test]
+    fn epilogue_runs_once_per_row_with_correct_product() {
+        let (m, k, n) = (6, 5, 11);
+        let a = fill(1, m * k);
+        let b = fill(2, k * n);
+        let bias = fill(3, n);
+        let want = {
+            let mut w = naive(m, k, n, &a, &b);
+            for row in w.chunks_mut(n) {
+                for (x, bj) in row.iter_mut().zip(&bias) {
+                    *x += *bj;
+                }
+            }
+            w
+        };
+        let mut c = vec![0.0; m * n];
+        sgemm_epi(m, k, n, &a, &b, &mut c, &|_, row| {
+            for (x, bj) in row.iter_mut().zip(&bias) {
+                *x += *bj;
+            }
+        });
+        assert_close(&c, &want, "sgemm_epi");
+    }
+
+    #[test]
+    fn epilogue2_fills_both_buffers() {
+        let (m, k, n) = (7, 4, 9);
+        let a = fill(4, m * k);
+        let b = fill(5, k * n);
+        let z_want = naive(m, k, n, &a, &b);
+        let mut z = vec![0.0; m * n];
+        let mut y = vec![0.0; m * n];
+        sgemm_epi2(m, k, n, &a, &b, &mut z, &mut y, &|_, zrow, yrow| {
+            for (zj, yj) in zrow.iter().zip(yrow.iter_mut()) {
+                *yj = 2.0 * *zj;
+            }
+        });
+        assert_close(&z, &z_want, "epi2 z");
+        let y_want: Vec<f32> = z_want.iter().map(|v| 2.0 * v).collect();
+        assert_close(&y, &y_want, "epi2 y");
+    }
+
+    #[test]
+    fn mul_adds_counter_is_recorded_at_gemm_entry() {
+        let _g = crate::obs::test_guard();
+        crate::obs::disable();
+        crate::obs::reset();
+        crate::obs::enable();
+        let (m, k, n) = (3, 4, 5);
+        let a = fill(1, m * k);
+        let b = fill(2, k * n);
+        let mut c = vec![0.0; m * n];
+        sgemm(m, k, n, &a, &b, &mut c, 0.0);
+        crate::obs::disable();
+        let events = crate::obs::take();
+        let total: f64 = events
+            .iter()
+            .filter(|e| e.name == "gemm.mul_adds")
+            .map(|e| match e.kind {
+                crate::obs::EventKind::Counter(v) => v,
+                _ => 0.0,
+            })
+            .sum();
+        assert_eq!(total, (m * k * n) as f64);
+        crate::obs::reset();
+    }
+
+    #[test]
+    fn note_dispatch_emits_the_path_name() {
+        let _g = crate::obs::test_guard();
+        crate::obs::disable();
+        crate::obs::reset();
+        crate::obs::enable();
+        note_dispatch();
+        crate::obs::disable();
+        let events = crate::obs::take();
+        let ev = events.iter().find(|e| e.name == "kernel.dispatch").expect("dispatch event");
+        assert_eq!(ev.detail.as_deref(), Some(kernel_path().name()));
+        crate::obs::reset();
+    }
+
+    #[test]
+    fn degenerate_shapes_are_no_ops() {
+        let mut c: Vec<f32> = vec![];
+        sgemm(0, 3, 4, &[], &fill(1, 12), &mut c, 0.0);
+        sgemm(3, 4, 0, &fill(1, 12), &[], &mut c, 0.0);
+        // k = 0: the product is empty, so c = beta·c
+        for path in paths() {
+            let mut cc = vec![7.0f32; 6];
+            sgemm_with(path, 2, 0, 3, &[], &[], &mut cc, 0.0);
+            assert_eq!(cc, vec![0.0; 6], "{path:?} k=0 beta=0");
+        }
     }
 }

@@ -1,9 +1,10 @@
 //! Flat f32 vector/matrix kernels used by the L3 hot loop.
 //!
 //! ODE states, adjoint variables, and parameter vectors are flat `Vec<f32>`;
-//! these routines are the only numeric kernels the coordinator itself runs
-//! (everything heavy goes through the AOT-compiled HLO).  They are written
-//! to autovectorise and to allocate nothing.
+//! the vector helpers below are written to autovectorise and allocate
+//! nothing, and [`gemm`] is the production matrix kernel the whole crate
+//! bottoms out in (the optional `xla` feature, off by default, is the
+//! only path that runs GEMMs elsewhere).
 
 pub mod gemm;
 
