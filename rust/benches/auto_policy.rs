@@ -1,0 +1,173 @@
+//! Auto-policy sweep (fig. 3 shape): `pnode:auto:<budget>` against the
+//! hand-tuned checkpoint policies on the paper-sized classification model
+//! (dims 65-168-168-64, batch 128, dopri5, N_t = 12).
+//!
+//! Asserts the ISSUE-8 acceptance triplet:
+//!   * measured peak hot bytes of the auto run stay ≤ the budget,
+//!   * auto's measured wall time is within 15% of the best hand-tuned
+//!     policy that fits the budget,
+//!   * the auto session's gradients are bitwise identical to a session
+//!     running the resolved concrete policy directly.
+//!
+//! Flags: `--smoke` shrinks iteration counts for CI.  The ledger is
+//! pointed at `target/auto_policy_ledger` before any session opens, so
+//! resolution runs off whatever this bench itself has recorded (cold:
+//! the documented priors) instead of the repo's `.pnode/ledger`.
+
+use pnode::api::{Session, SolverBuilder};
+use pnode::bench::{bench_grad, Table};
+use pnode::coordinator::Runner;
+use pnode::methods::MemModel;
+use pnode::nn::Act;
+use pnode::ode::rhs::OdeRhs;
+use pnode::ode::tableau::Scheme;
+use pnode::ode::ModuleRhs;
+use pnode::util::rng::Rng;
+
+/// 1.5 MiB: admits binomial:4 (1 MiB hot) but not `all` (~2.75 MiB at
+/// N_t = 12, s+1 = 8 stage vectors per step) on the 32 KiB state below.
+const BUDGET: u64 = 1_572_864;
+const NT: usize = 12;
+
+fn main() {
+    // before any Session: resolution reads the default ledger directory
+    std::env::set_var("PNODE_LEDGER_DIR", "target/auto_policy_ledger");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (warm, iters) = if smoke { (1usize, 3usize) } else { (2, 8) };
+
+    const D: usize = 64;
+    const B: usize = 128;
+    let dims = vec![D + 1, 168, 168, D];
+    let mut rng = Rng::new(9);
+    let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+    let rhs = ModuleRhs::mlp(dims.clone(), Act::Relu, true, B, theta);
+    let mut u0 = vec![0.0f32; rhs.state_len()];
+    rng.fill_normal(&mut u0);
+    let lambda0 = vec![1.0f32; rhs.state_len()];
+    let s = Scheme::Dopri5.tableau().s as u64;
+
+    let hand_tuned = [
+        "all",
+        "solution_only",
+        "binomial:2",
+        "binomial:4",
+        "tiered:1572864:target/auto_policy_spill",
+    ];
+    let auto_str = format!("auto:{BUDGET}");
+
+    let mut runner = Runner::new("auto_policy");
+    let mut table = Table::new(
+        "auto:<budget> vs hand-tuned checkpoint policies (dopri5, N_t = 12)",
+        &["policy", "mean (s)", "min (s)", "peak hot bytes", "fits budget"],
+    );
+
+    let spec_for = |policy: &str| {
+        SolverBuilder::new()
+            .policy_str(policy)
+            .scheme(Scheme::Dopri5)
+            .uniform(NT)
+            .build()
+            .unwrap_or_else(|e| panic!("{policy}: {e}"))
+    };
+
+    // measured wall time + measured peak hot bytes per policy; the best
+    // budget-fitting hand-tuned mean is the 15% yardstick for auto
+    let mut best_fitting: Option<(String, f64)> = None;
+    let mut measure = |runner: &mut Runner, table: &mut Table, policy: &str| -> f64 {
+        let spec = spec_for(policy);
+        let mm = MemModel::for_rhs(&rhs, s, NT as u64, 1);
+        let r = bench_grad(policy, &spec, &rhs, &u0, &lambda0, warm, iters);
+        let row = runner.run_spec_job("spiral_clf", &spec, mm.ckpt_bytes_for(&spec.method), || {
+            let mut session = Session::new(spec.clone()).expect("spec validated at build");
+            session.grad(&rhs, &u0, &lambda0).report
+        });
+        // tiered runs count spilled bytes in measured_ckpt_bytes; their
+        // RAM residency is the hot-tier peak (0 for non-tiered policies)
+        let peak_hot = if row.ckpt_hot_bytes > 0 {
+            row.ckpt_hot_bytes
+        } else {
+            row.measured_ckpt_bytes
+        };
+        let fits = peak_hot <= BUDGET;
+        table.row(vec![
+            policy.into(),
+            format!("{:.4}", r.mean_secs),
+            format!("{:.4}", r.min_secs),
+            peak_hot.to_string(),
+            fits.to_string(),
+        ]);
+        let better = best_fitting.as_ref().map_or(true, |(_, b)| r.mean_secs < *b);
+        if fits && better {
+            best_fitting = Some((policy.to_string(), r.mean_secs));
+        }
+        r.mean_secs
+    };
+
+    for policy in hand_tuned {
+        measure(&mut runner, &mut table, policy);
+    }
+    let auto_mean = measure(&mut runner, &mut table, &auto_str);
+    table.print();
+
+    // --- budget + resolution + bitwise assertions -----------------------
+    let auto_spec = spec_for(&auto_str);
+    let mut auto_session = Session::new(auto_spec).expect("auto spec builds");
+    let out = auto_session.grad(&rhs, &u0, &lambda0);
+    let peak_hot = if out.report.tier.peak_hot_bytes > 0 {
+        out.report.tier.peak_hot_bytes
+    } else {
+        out.report.ckpt_bytes
+    };
+    assert!(
+        peak_hot <= BUDGET,
+        "auto run peak hot bytes {peak_hot} exceed the budget {BUDGET}"
+    );
+    let resolved = auto_session
+        .resolved_policy()
+        .expect("auto specs always record a resolution")
+        .clone();
+    println!(
+        "\nauto:{} resolved to {} (requested {:?})",
+        pnode::checkpoint::MemoryBudget::from_bytes(BUDGET).display(),
+        resolved.name(),
+        out.report.auto.requested_name(),
+    );
+
+    let direct_spec = SolverBuilder::new()
+        .policy_str(&resolved.name())
+        .scheme(Scheme::Dopri5)
+        .uniform(NT)
+        .build()
+        .expect("resolved policy is concrete and valid");
+    let mut direct = Session::new(direct_spec).expect("direct spec builds");
+    let direct_out = direct.grad(&rhs, &u0, &lambda0);
+    assert_eq!(out.u_f, direct_out.u_f, "forward states diverge");
+    assert_eq!(
+        auto_session.grad_theta(),
+        direct.grad_theta(),
+        "auto vs direct grad_theta must be bitwise identical"
+    );
+    assert_eq!(
+        auto_session.lambda0(),
+        direct.lambda0(),
+        "auto vs direct lambda0 must be bitwise identical"
+    );
+
+    let (best_name, best_mean) =
+        best_fitting.expect("at least one hand-tuned policy fits the budget");
+    println!(
+        "auto mean {:.4}s vs best fitting hand-tuned {best_name} {:.4}s ({:+.1}%)",
+        auto_mean,
+        best_mean,
+        100.0 * (auto_mean / best_mean - 1.0)
+    );
+    assert!(
+        auto_mean <= 1.15 * best_mean,
+        "auto mean {auto_mean:.4}s is more than 15% over the best \
+         budget-fitting hand-tuned policy {best_name} ({best_mean:.4}s)"
+    );
+
+    let path = runner.save().expect("save results");
+    println!("rows saved to {path:?} (total {:.1}s)", runner.elapsed_secs());
+    println!("auto policy OK: budget respected, within 15% of best, gradients bitwise equal");
+}

@@ -276,10 +276,37 @@ fn main() {
         println!("(XLA artifacts not available; skipped PJRT micro-benches)");
     }
 
-    let json =
-        pnode::util::json::Json::Arr(results.iter().map(|r| r.to_json()).collect());
-    match std::fs::write("BENCH_micro.json", json.to_string_pretty()) {
-        Ok(()) => println!("wrote BENCH_micro.json ({} entries)", results.len()),
-        Err(e) => println!("(could not write BENCH_micro.json: {e})"),
+    // BENCH_micro.json is a perf *trajectory*, not a snapshot: entries
+    // are keyed (name, build tag) and accumulate across PRs; re-running
+    // the same build replaces its own entries instead of duplicating
+    // them, and an unreadable existing file degrades to a fresh history
+    use pnode::util::json::Json;
+    let build = pnode::obs::build_tag();
+    let path = "BENCH_micro.json";
+    let mut entries: Vec<Json> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| pnode::util::json::parse(&t).ok())
+        .and_then(|j| j.as_arr().map(|a| a.to_vec()))
+        .unwrap_or_default();
+    let fresh: Vec<&str> = results.iter().map(|r| r.name.as_str()).collect();
+    entries.retain(|e| {
+        let same_build = e.get("build").and_then(Json::as_str) == Some(build.as_str());
+        let name = e.get("name").and_then(Json::as_str).unwrap_or("");
+        !(same_build && fresh.contains(&name))
+    });
+    for r in &results {
+        let mut kv = vec![("build".to_string(), Json::str(build.clone()))];
+        if let Some(obj) = r.to_json().as_obj() {
+            kv.extend(obj.iter().cloned());
+        }
+        entries.push(Json::Obj(kv));
+    }
+    let total = entries.len();
+    match std::fs::write(path, Json::Arr(entries).to_string_pretty()) {
+        Ok(()) => println!(
+            "appended {} entries (build {build}) to {path} ({total} total)",
+            results.len()
+        ),
+        Err(e) => println!("(could not write {path}: {e})"),
     }
 }

@@ -80,6 +80,19 @@ impl MethodRegistry {
     /// Construct the engine a spec describes: the family's factory, with
     /// the data-parallel wrapper composed on top when `spec.exec` is set.
     pub fn make(&self, spec: &RunSpec) -> Result<Box<dyn GradientMethod>, String> {
+        // `auto:<budget>` resolves to its concrete winner here — the one
+        // chokepoint every engine construction funnels through, so tasks
+        // and benches that bypass `Session` still get a runnable policy.
+        // (`Session` resolves earlier itself, to record requested vs.
+        // resolved in its reports; it then hands `make` a concrete spec.)
+        if matches!(
+            spec.method.pnode_policy(),
+            Some(crate::checkpoint::CheckpointPolicy::Auto { .. })
+        ) {
+            let (resolved, _, _) = crate::obs::calibrate::resolve_spec(spec)?
+                .expect("an Auto policy always resolves or errors");
+            return self.make(&resolved);
+        }
         let family = spec.method.family();
         let idx = self
             .entries

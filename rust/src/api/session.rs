@@ -20,7 +20,8 @@
 
 use crate::api::registry::{global, MethodRegistry};
 use crate::api::spec::RunSpec;
-use crate::methods::{BlockSpec, GradientMethod, MethodReport};
+use crate::checkpoint::CheckpointPolicy;
+use crate::methods::{AutoNote, BlockSpec, GradientMethod, MethodReport};
 use crate::obs;
 use crate::ode::rhs::OdeRhs;
 
@@ -37,6 +38,12 @@ pub struct GradReport {
 
 pub struct Session {
     spec: RunSpec,
+    /// the spec the engine actually runs: `auto:<budget>` replaced by the
+    /// cost model's winning concrete policy (identical to `spec` otherwise)
+    resolved_spec: RunSpec,
+    /// requested-vs-resolved note stamped onto every report this session
+    /// emits (the default note for concrete specs)
+    auto: AutoNote,
     block: BlockSpec,
     engine: Box<dyn GradientMethod>,
     /// reusable λ workspace: seeded with ∂L/∂u_F, left holding ∂L/∂u_0
@@ -66,10 +73,22 @@ impl Session {
         // here (not lazily at first GEMM) so its (tid, seq) slot in the
         // trace is deterministic across runs and worker counts
         crate::tensor::gemm::note_dispatch();
-        let engine = registry.make(&spec)?;
+        // resolve `auto:<budget>` once up front so this session can
+        // report both the requested and the winning policy; the registry
+        // would resolve identically on its own (same ledger, same model),
+        // but then the choice would be invisible to reports
+        let (resolved_spec, auto) = match crate::obs::calibrate::resolve_spec(&spec)? {
+            Some((resolved, budget, policy)) => {
+                (resolved, AutoNote::for_resolution(budget, &policy))
+            }
+            None => (spec.clone(), AutoNote::default()),
+        };
+        let engine = registry.make(&resolved_spec)?;
         let block = spec.block_spec();
         Ok(Session {
             spec,
+            resolved_spec,
+            auto,
             block,
             engine,
             lambda: Vec::new(),
@@ -81,6 +100,23 @@ impl Session {
 
     pub fn spec(&self) -> &RunSpec {
         &self.spec
+    }
+
+    /// The spec the engine actually runs: for `auto:<budget>` specs the
+    /// method carries the resolved concrete policy; otherwise identical
+    /// to [`Session::spec`].
+    pub fn resolved_spec(&self) -> &RunSpec {
+        &self.resolved_spec
+    }
+
+    /// The concrete checkpoint policy an `auto:<budget>` spec resolved
+    /// to; `None` when the spec named a concrete policy itself.
+    pub fn resolved_policy(&self) -> Option<&CheckpointPolicy> {
+        if self.auto.is_auto() {
+            self.resolved_spec.method.pnode_policy()
+        } else {
+            None
+        }
     }
 
     pub fn block_spec(&self) -> &BlockSpec {
@@ -130,7 +166,9 @@ impl Session {
         self.engine
             .backward(rhs, &self.block, &mut self.lambda, &mut self.grad);
         self.grads_run += 1;
-        GradReport { u_f, report: self.engine.report() }
+        let mut report = self.engine.report();
+        report.auto = self.auto;
+        GradReport { u_f, report }
     }
 
     /// ∂L/∂u_0 of the latest [`Session::grad`] call.
@@ -145,7 +183,9 @@ impl Session {
 
     /// Accounting of the latest forward+backward (either call style).
     pub fn report(&self) -> MethodReport {
-        self.engine.report()
+        let mut report = self.engine.report();
+        report.auto = self.auto;
+        report
     }
 
     /// How many times the `grad` workspace was (re)allocated.  Stable

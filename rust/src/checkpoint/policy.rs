@@ -35,6 +35,13 @@ pub enum CheckpointPolicy {
         /// placement policy: `All`, `SolutionOnly`, or `Binomial`
         inner: Box<CheckpointPolicy>,
     },
+    /// Resolve the cheapest concrete policy under a RAM budget at
+    /// `Session`/registry build time, using the ledger-calibrated cost
+    /// model (`crate::obs::calibrate`, DESIGN.md §13).  Engines never see
+    /// this variant: the facade replaces it with the winning concrete
+    /// policy before the engine is constructed, and records both the
+    /// requested budget and the resolution in the run report.
+    Auto { budget_bytes: u64 },
 }
 
 impl CheckpointPolicy {
@@ -44,11 +51,13 @@ impl CheckpointPolicy {
     /// all | solution | solution_only | pnode2
     /// binomial:<n>                          n >= 1
     /// tiered:<budget>[+f16]:<dir>[:<inner>] budget e.g. 4096 / 64k / 8m / 1g
+    /// auto:<budget>                         resolved by the cost model
     /// ```
     ///
-    /// Degenerate specs (`binomial:0`, zero budgets, nested `tiered`) are
-    /// rejected with a message naming the offending part rather than
-    /// constructing a policy whose schedule can never run.
+    /// Degenerate specs (`binomial:0`, zero budgets, nested `tiered`,
+    /// `auto` as a tiered inner) are rejected with a message naming the
+    /// offending part rather than constructing a policy whose schedule
+    /// can never run.
     pub fn parse(s: &str) -> Result<CheckpointPolicy, String> {
         if let Some(rest) = s.strip_prefix("binomial:") {
             let n: usize = rest
@@ -90,12 +99,18 @@ impl CheckpointPolicy {
             p.validate().map_err(|e| format!("{s:?}: {e}"))?;
             return Ok(p);
         }
+        if let Some(rest) = s.strip_prefix("auto:") {
+            let budget = MemoryBudget::parse(rest).map_err(|e| format!("{s:?}: {e}"))?;
+            let p = CheckpointPolicy::Auto { budget_bytes: budget.bytes };
+            p.validate().map_err(|e| format!("{s:?}: {e}"))?;
+            return Ok(p);
+        }
         match s {
             "all" => Ok(CheckpointPolicy::All),
             "solution" | "solution_only" | "pnode2" => Ok(CheckpointPolicy::SolutionOnly),
             _ => Err(format!(
                 "unknown checkpoint policy {s:?} (want all | solution_only | binomial:<n> | \
-                 tiered:<budget>:<dir>[:<inner>])"
+                 tiered:<budget>:<dir>[:<inner>] | auto:<budget>)"
             )),
         }
     }
@@ -124,8 +139,21 @@ impl CheckpointPolicy {
                 if matches!(inner.as_ref(), CheckpointPolicy::Tiered { .. }) {
                     return Err("tiered policies cannot nest".into());
                 }
+                if matches!(inner.as_ref(), CheckpointPolicy::Auto { .. }) {
+                    return Err(
+                        "auto cannot be a tiered inner policy: the placement must be \
+                         concrete (all | solution_only | binomial:<n>); put the budget \
+                         on `auto:<budget>` at the top level instead"
+                            .into(),
+                    );
+                }
                 inner.validate()
             }
+            CheckpointPolicy::Auto { budget_bytes: 0 } => Err(
+                "auto:0 is degenerate: the auto policy needs a nonzero RAM budget to \
+                 select a candidate under (e.g. auto:8m)"
+                    .into(),
+            ),
             _ => Ok(()),
         }
     }
@@ -143,6 +171,9 @@ impl CheckpointPolicy {
                     dir,
                     inner.name()
                 )
+            }
+            CheckpointPolicy::Auto { budget_bytes } => {
+                format!("auto:{}", MemoryBudget::from_bytes(*budget_bytes).display())
             }
         }
     }
@@ -167,7 +198,10 @@ impl CheckpointPolicy {
 
 /// Split `<dir>[:<inner-policy>]` by recognizing a valid inner-policy spec
 /// at the *end* of the string (`:all`, `:solution_only`, `:solution`,
-/// `:pnode2`, `:binomial:<digits>`); everything before it is the dir.
+/// `:pnode2`, `:binomial:<digits>`, `:auto:<budget>`); everything before
+/// it is the dir.  `auto` is recognized here only so that `validate` can
+/// reject the nesting with a precise message instead of silently folding
+/// the suffix into the dir.
 fn split_inner_suffix(rest: &str) -> Option<(&str, &str)> {
     for suffix in [":all", ":solution_only", ":solution", ":pnode2"] {
         if let Some(dir) = rest.strip_suffix(suffix) {
@@ -177,6 +211,12 @@ fn split_inner_suffix(rest: &str) -> Option<(&str, &str)> {
     if let Some(pos) = rest.rfind(":binomial:") {
         let digits = &rest[pos + ":binomial:".len()..];
         if !digits.is_empty() && digits.bytes().all(|b| b.is_ascii_digit()) {
+            return Some((&rest[..pos], &rest[pos + 1..]));
+        }
+    }
+    if let Some(pos) = rest.rfind(":auto:") {
+        let budget = &rest[pos + ":auto:".len()..];
+        if MemoryBudget::parse(budget).is_ok() {
             return Some((&rest[..pos], &rest[pos + 1..]));
         }
     }
@@ -226,6 +266,37 @@ mod tests {
         assert!(e.contains("inner"), "{e}");
         let e = CheckpointPolicy::parse("tiered:8m:/tmp/x:tiered:8m:/tmp/y").unwrap_err();
         assert!(e.contains("nest"), "{e}");
+    }
+
+    #[test]
+    fn auto_parse_roundtrip_and_rejection() {
+        let p = CheckpointPolicy::parse("auto:8m").unwrap();
+        assert_eq!(p, CheckpointPolicy::Auto { budget_bytes: 8 << 20 });
+        assert_eq!(p.name(), "auto:8m");
+        assert_eq!(CheckpointPolicy::parse(&p.name()), Ok(p));
+        assert_eq!(
+            CheckpointPolicy::parse("auto:4096").unwrap(),
+            CheckpointPolicy::Auto { budget_bytes: 4096 }
+        );
+        // zero budget: rejected both through parse and through validate
+        assert!(CheckpointPolicy::parse("auto:0").is_err());
+        let e = CheckpointPolicy::Auto { budget_bytes: 0 }.validate().unwrap_err();
+        assert!(e.contains("auto:0") && e.contains("nonzero"), "{e}");
+        assert!(CheckpointPolicy::parse("auto:").is_err());
+        assert!(CheckpointPolicy::parse("auto:x").is_err());
+        // auto cannot nest inside tiered — precise message, not a silent
+        // fold of ":auto:..." into the spill dir
+        let e = CheckpointPolicy::parse("tiered:8m:/tmp/x:auto:4k").unwrap_err();
+        assert!(e.contains("auto") && e.contains("concrete"), "{e}");
+        let e = CheckpointPolicy::Tiered {
+            budget_bytes: 4096,
+            dir: "/tmp/x".into(),
+            compress_f16: false,
+            inner: Box::new(CheckpointPolicy::Auto { budget_bytes: 4096 }),
+        }
+        .validate()
+        .unwrap_err();
+        assert!(e.contains("concrete"), "{e}");
     }
 
     #[test]

@@ -75,6 +75,15 @@ pub struct ExperimentRow {
     pub mem_obs_ckpt_bytes: u64,
     /// observed / predicted checkpoint bytes (0 when nothing attached)
     pub mem_model_ratio: f64,
+    /// total GEMM multiply-adds the obs counters recorded, summed across
+    /// every logical tid (pool-worker shards included — they stamp the
+    /// counter through their `job_ctx` tids); 0 on unobserved runs
+    pub gemm_mul_adds: u64,
+    /// the requested policy of an `auto:<budget>` run (`None` when the
+    /// spec named a concrete policy)
+    pub policy_requested: Option<String>,
+    /// the concrete policy the auto run resolved to
+    pub policy_resolved: Option<String>,
     /// the full serialized [`RunSpec`] that produced this row (rows from
     /// facade-driven jobs are reproducible artifacts)
     pub run_spec: Option<Json>,
@@ -124,6 +133,9 @@ impl ExperimentRow {
             mem_pred_ckpt_bytes: 0,
             mem_obs_ckpt_bytes: 0,
             mem_model_ratio: 0.0,
+            gemm_mul_adds: 0,
+            policy_requested: report.auto.requested_name(),
+            policy_resolved: report.auto.resolved_name(),
             run_spec: None,
             extra: Vec::new(),
         }
@@ -148,14 +160,13 @@ impl ExperimentRow {
             observed / predicted_ckpt_bytes as f64
         };
         // kernel provenance: which GEMM path ran and how much work it did
+        // (the counter fold already sums across logical tids, so pool
+        // shards are included)
         self.extra.push((
             "kernel".to_string(),
             crate::tensor::gemm::kernel_path().name().to_string(),
         ));
-        let mul_adds = m.counter("gemm.mul_adds");
-        if mul_adds > 0.0 {
-            self.extra.push(("gemm_mul_adds".to_string(), format!("{mul_adds:.0}")));
-        }
+        self.gemm_mul_adds = m.counter("gemm.mul_adds") as u64;
     }
 
     /// Row identity and embedded spec derived from a [`RunSpec`] (the
@@ -224,7 +235,14 @@ impl ExperimentRow {
                 Json::num(self.mem_obs_ckpt_bytes as f64),
             ),
             ("mem_model_ratio".to_string(), Json::num(self.mem_model_ratio)),
+            ("gemm_mul_adds".to_string(), Json::num(self.gemm_mul_adds as f64)),
         ];
+        if let Some(p) = &self.policy_requested {
+            kv.push(("policy_requested".to_string(), Json::str(p.clone())));
+        }
+        if let Some(p) = &self.policy_resolved {
+            kv.push(("policy_resolved".to_string(), Json::str(p.clone())));
+        }
         if !self.phase_secs.is_empty() {
             kv.push((
                 "phase_secs".to_string(),
@@ -477,7 +495,30 @@ mod tests {
         assert!(j.contains("\"mem_model_ratio\":0.5"), "{j}");
         assert!(j.contains("\"blocks_merged\""), "{j}");
         assert!(j.contains("\"kernel\""), "kernel provenance column present: {j}");
-        assert!(j.contains("\"gemm_mul_adds\":\"12288\""), "{j}");
+        assert_eq!(row.gemm_mul_adds, 12288);
+        assert!(j.contains("\"gemm_mul_adds\":12288"), "numeric column: {j}");
+        assert!(
+            !j.contains("policy_requested"),
+            "concrete-policy rows omit the auto columns: {j}"
+        );
+    }
+
+    #[test]
+    fn auto_resolution_lands_in_policy_columns() {
+        use crate::methods::AutoNote;
+        let rep = MethodReport {
+            auto: AutoNote::for_resolution(
+                8 << 20,
+                &crate::checkpoint::CheckpointPolicy::Binomial { n_checkpoints: 4 },
+            ),
+            ..Default::default()
+        };
+        let row = ExperimentRow::from_report("e", "d", "pnode:auto:8m", "rk4", 12, &rep, 0.0, 0);
+        assert_eq!(row.policy_requested.as_deref(), Some("auto:8m"));
+        assert_eq!(row.policy_resolved.as_deref(), Some("binomial:4"));
+        let j = row.to_json().to_string_compact();
+        assert!(j.contains("\"policy_requested\":\"auto:8m\""), "{j}");
+        assert!(j.contains("\"policy_resolved\":\"binomial:4\""), "{j}");
     }
 
     #[test]

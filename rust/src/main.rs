@@ -12,7 +12,19 @@
 //!                               and writes a Chrome trace-event file
 //!                               (load it in Perfetto / chrome://tracing);
 //!                               `--metrics` prints the folded metrics
-//!                               JSON (DESIGN.md §11)
+//!                               (human table; `--metrics json` emits one
+//!                               machine-readable JSON object as the last
+//!                               stdout line — DESIGN.md §11/§13).
+//!                               Observed runs append one record to the
+//!                               persistent ledger (`.pnode/ledger/`)
+//!   report                    — per-phase wall times of the last ledger
+//!                               run vs. the ledger baseline medians,
+//!                               with regression flags (DESIGN.md §13);
+//!                               `--ledger <dir>`, `--threshold <frac>`
+//!   advise --spec <file.json> — enumerate the auto-policy candidates for
+//!                               the spec with predicted bytes/secs and
+//!                               print the winner, without running
+//!                               (`--budget <bytes>` for non-auto specs)
 //!   info                      — artifact/platform info
 //!   gradcheck                 — XLA-vs-Rust cross-check on quick_d8
 //!   train-clf [--method ...]  — classification training (spiral surrogate);
@@ -42,6 +54,8 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("report") => cmd_report(&args),
+        Some("advise") => cmd_advise(&args),
         Some("info") => cmd_info(),
         Some("gradcheck") => cmd_gradcheck(),
         Some("train-clf") => cmd_train_clf(&args),
@@ -49,7 +63,8 @@ fn main() -> Result<()> {
         Some("bench") => cmd_bench(&args),
         _ => {
             eprintln!(
-                "usage: pnode <run|info|gradcheck|train-clf|train-stiff|bench> [options]\n\
+                "usage: pnode <run|report|advise|info|gradcheck|train-clf|train-stiff|bench> \
+                 [options]\n\
                  see README.md for details"
             );
             Ok(())
@@ -87,8 +102,18 @@ fn cmd_run(args: &Args) -> Result<()> {
     // --trace / --metrics (or an "obs" block in the spec itself) switch
     // on the process-global recording sink before the run starts
     let trace_path = args.get("trace").map(|s| s.to_string());
-    let want_metrics = args.flag("metrics");
-    if trace_path.is_some() || want_metrics || spec.obs.map_or(false, |o| o.enabled) {
+    // `--metrics` prints the human table; `--metrics json` emits the
+    // fold as one compact JSON object, guaranteed to be the last stdout
+    // line (so `... | tail -n 1` is machine-readable)
+    let metrics_json = match (args.get("metrics"), args.flag("metrics")) {
+        (Some("json"), _) => Some(true),
+        (Some("human"), _) | (None, true) => Some(false),
+        (Some(m), _) => {
+            return Err(anyhow::anyhow!("--metrics takes human | json (got {m:?})"))
+        }
+        (None, false) => None,
+    };
+    if trace_path.is_some() || metrics_json.is_some() || spec.obs.map_or(false, |o| o.enabled) {
         pnode::obs::enable();
     }
 
@@ -132,7 +157,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             anyhow::anyhow!("{path}: task field \"kind\" must be a string (got {k:?})")
         })?,
     };
-    let events = match kind {
+    let (events, row) = match kind {
         "gradient" => run_spec_gradient(
             &spec,
             get_usize("dim", 16)?,
@@ -180,10 +205,219 @@ fn cmd_run(args: &Args) -> Result<()> {
         std::fs::write(tp, trace.to_string_compact())?;
         println!("chrome trace ({} events) written to {tp}", events.len());
     }
-    if want_metrics {
-        let m = pnode::obs::Metrics::from_events(&events);
-        println!("metrics:\n{}", m.to_json().to_string_pretty());
+    // every observed run lands in the persistent ledger: `pnode report`
+    // folds over it, and the auto-policy cost model calibrates from it
+    if !events.is_empty() {
+        if let Some(row) = &row {
+            let metrics = pnode::obs::Metrics::from_events(&events);
+            let rec = pnode::obs::RunRecord {
+                build: pnode::obs::build_tag(),
+                spec: spec.to_json(),
+                row: row.to_json(),
+                metrics: metrics.to_json(),
+                memcheck: (row.mem_pred_ckpt_bytes > 0 || row.mem_obs_ckpt_bytes > 0).then(
+                    || pnode::obs::memcheck(row.mem_pred_ckpt_bytes, row.mem_obs_ckpt_bytes),
+                ),
+            };
+            match pnode::obs::Ledger::open_default() {
+                Ok(ledger) => match ledger.append(&rec) {
+                    Ok(()) => println!(
+                        "ledger: run (build {}) appended to {:?}",
+                        rec.build,
+                        ledger.path()
+                    ),
+                    Err(e) => println!("warn [ledger]: {e}"),
+                },
+                Err(e) => println!("warn [ledger]: {e}"),
+            }
+        }
     }
+    if let Some(as_json) = metrics_json {
+        let m = pnode::obs::Metrics::from_events(&events);
+        if as_json {
+            println!("{}", m.to_json().to_string_compact());
+        } else {
+            println!("metrics:\n{}", m.to_json().to_string_pretty());
+        }
+    }
+    Ok(())
+}
+
+/// Per-phase wall times of the last ledger run vs. the baseline medians
+/// over earlier runs of the same method+scheme, with regression flags
+/// (DESIGN.md §13).  Warn-only: drift prints `REGRESSED` but the command
+/// still exits 0, so CI gates stay a deliberate choice.
+fn cmd_report(args: &Args) -> Result<()> {
+    use pnode::obs::calibrate::REGRESSION_THRESHOLD;
+    use pnode::obs::Ledger;
+    use pnode::util::json::Json;
+
+    let ledger = match args.get("ledger") {
+        Some(dir) => Ledger::open(dir),
+        None => Ledger::open_default(),
+    }
+    .map_err(|e| anyhow::anyhow!(e))?;
+    let records = ledger.read_all().map_err(|e| anyhow::anyhow!(e))?;
+    let Some(last) = records.last() else {
+        println!(
+            "ledger {:?} is empty — run `pnode run --spec <file.json>` with an \
+             \"obs\" block (or --metrics) first",
+            ledger.path()
+        );
+        return Ok(());
+    };
+    let threshold = args.get_f64("threshold", REGRESSION_THRESHOLD);
+    let ident = |r: &pnode::obs::RunRecord| -> (String, String) {
+        let s = |key: &str| {
+            r.spec
+                .get(key)
+                .and_then(Json::as_str)
+                .unwrap_or("?")
+                .to_string()
+        };
+        (s("method"), s("scheme"))
+    };
+    let (method, scheme) = ident(last);
+    println!(
+        "last run: build {}  method {}  scheme {}  ({} ledger record(s))",
+        last.build,
+        method,
+        scheme,
+        records.len()
+    );
+    let row_str = |rec: &pnode::obs::RunRecord, key: &str| -> Option<String> {
+        rec.row.get(key).and_then(Json::as_str).map(str::to_string)
+    };
+    if let (Some(req), Some(res)) =
+        (row_str(last, "policy_requested"), row_str(last, "policy_resolved"))
+    {
+        println!("policy: {req} -> {res}");
+    }
+    if let Some(mc) = &last.memcheck {
+        println!("memcheck: {}", mc.to_string_compact());
+    }
+
+    // baseline: per-phase medians over the *earlier* runs with the same
+    // method+scheme identity (the comparable population)
+    let prior: Vec<&pnode::obs::RunRecord> = records[..records.len() - 1]
+        .iter()
+        .filter(|r| ident(r) == (method.clone(), scheme.clone()))
+        .collect();
+    let span_secs = |rec: &pnode::obs::RunRecord, phase: &str| -> Option<f64> {
+        rec.metrics
+            .get("spans")?
+            .get(phase)?
+            .get("total_secs")?
+            .as_f64()
+    };
+    let mut table = pnode::bench::Table::new(
+        "per-phase wall time vs ledger baseline",
+        &["phase", "last (s)", "baseline (s)", "delta", "flag"],
+    );
+    let mut regressions = 0usize;
+    for phase in pnode::obs::PHASES {
+        let last_secs = span_secs(last, phase);
+        let mut samples: Vec<f64> = prior.iter().filter_map(|r| span_secs(r, phase)).collect();
+        samples.sort_by(|a, b| a.partial_cmp(b).expect("span seconds are finite"));
+        let baseline = (!samples.is_empty()).then(|| samples[samples.len() / 2]);
+        let (Some(l), base) = (last_secs, baseline) else {
+            continue;
+        };
+        let (base_cell, delta_cell, flag) = match base {
+            None => ("-".to_string(), "-".to_string(), ""),
+            Some(b) if b > 0.0 => {
+                let delta = (l - b) / b;
+                let flag = if delta > threshold {
+                    regressions += 1;
+                    "REGRESSED"
+                } else {
+                    ""
+                };
+                (format!("{b:.6}"), format!("{:+.1}%", delta * 100.0), flag)
+            }
+            Some(b) => (format!("{b:.6}"), "-".to_string(), ""),
+        };
+        table.row(vec![
+            phase.to_string(),
+            format!("{l:.6}"),
+            base_cell,
+            delta_cell,
+            flag.to_string(),
+        ]);
+    }
+    table.print();
+    println!(
+        "baseline: median over {} comparable earlier run(s); regression threshold +{:.0}%{}",
+        prior.len(),
+        threshold * 100.0,
+        if regressions > 0 {
+            format!("; {regressions} phase(s) REGRESSED")
+        } else {
+            String::new()
+        }
+    );
+    Ok(())
+}
+
+/// Enumerate the auto-policy candidates for a spec with predicted peak
+/// hot bytes and wall seconds, and print the winner — without running
+/// the spec (DESIGN.md §13).
+fn cmd_advise(args: &Args) -> Result<()> {
+    use pnode::api::RunSpec;
+    use pnode::checkpoint::{CheckpointPolicy, MemoryBudget};
+    use pnode::obs::calibrate::{CostModel, ResolveCtx};
+    use pnode::util::json;
+
+    let path = args
+        .get("spec")
+        .ok_or_else(|| anyhow::anyhow!("advise needs --spec <file.json> (see examples/specs/)"))?;
+    let text = std::fs::read_to_string(path)?;
+    let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let spec = RunSpec::from_json(&doc).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let budget = match spec.method.pnode_policy() {
+        Some(CheckpointPolicy::Auto { budget_bytes }) => *budget_bytes,
+        _ => match args.get("budget") {
+            Some(b) => MemoryBudget::parse(b).map_err(|e| anyhow::anyhow!(e))?.bytes,
+            None => {
+                return Err(anyhow::anyhow!(
+                    "{path}: method {:?} has no auto budget — use a `pnode:auto:<bytes>` \
+                     policy or pass --budget <bytes>",
+                    spec.method.name()
+                ))
+            }
+        },
+    };
+    let model = CostModel::from_default_ledger();
+    println!(
+        "cost model: {} ledger sample(s){}",
+        model.samples,
+        if model.samples == 0 { " — documented priors (DESIGN.md §13)" } else { "" }
+    );
+    let ctx = ResolveCtx::for_spec(&spec, &model);
+    println!(
+        "resolve ctx: nt {}  n_stages {}  budget {}",
+        ctx.nt,
+        ctx.n_stages,
+        pnode::util::human_bytes(budget)
+    );
+    let winner = model
+        .resolve(budget, &ctx)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let mut table = pnode::bench::Table::new(
+        "auto-policy candidates",
+        &["policy", "pred peak hot", "pred secs", "fits", "pick"],
+    );
+    for c in model.candidates(budget, &ctx) {
+        table.row(vec![
+            c.policy.name(),
+            pnode::util::human_bytes(c.pred_peak_hot_bytes),
+            format!("{:.6}", c.pred_secs),
+            if c.fits { "yes" } else { "OVER BUDGET" }.to_string(),
+            if c.policy == winner { "<== winner" } else { "" }.to_string(),
+        ]);
+    }
+    table.print();
+    println!("advise: {} (budget {})", winner.name(), pnode::util::human_bytes(budget));
     Ok(())
 }
 
@@ -208,7 +442,7 @@ fn run_spec_gradient(
     hidden: usize,
     batch: usize,
     seed: u64,
-) -> Result<Vec<pnode::obs::Event>> {
+) -> Result<(Vec<pnode::obs::Event>, Option<pnode::coordinator::ExperimentRow>)> {
     use pnode::api::ArchSpec;
     use pnode::nn::Act;
     use pnode::ode::ModuleRhs;
@@ -232,6 +466,9 @@ fn run_spec_gradient(
 
     let mut session = pnode::api::Session::new(spec.clone())
         .map_err(|e| anyhow::anyhow!("invalid spec: {e}"))?;
+    if let Some(policy) = session.resolved_policy() {
+        println!("auto policy resolved to {}", policy.name());
+    }
     let mut runner = pnode::coordinator::Runner::new("run_spec");
     let row = runner.run_spec_job("synthetic_mlp", spec, 0, || {
         let out = session.grad(&rhs, &u0, &lambda);
@@ -263,7 +500,9 @@ fn run_spec_gradient(
             spec.scheme.tableau().s as u64
         };
         let mm = pnode::methods::MemModel::for_rhs(&rhs, n_stages, n_accepted, 1);
-        let predicted = mm.ckpt_bytes_for(&spec.method);
+        // predict with the *resolved* method so an auto spec is checked
+        // against the policy that actually ran
+        let predicted = mm.ckpt_bytes_for(&session.resolved_spec().method);
         let row = runner.rows.last_mut().expect("row just pushed");
         row.attach_obs(&metrics, predicted);
         println!(
@@ -277,7 +516,8 @@ fn run_spec_gradient(
     }
     let path = runner.save()?;
     println!("row (with embedded run_spec) saved to {path:?}");
-    Ok(events)
+    let row = runner.rows.pop();
+    Ok((events, row))
 }
 
 /// Spiral-classification training driven entirely by the spec (the CI
@@ -293,7 +533,7 @@ fn run_spec_classification(
     batch: usize,
     seed: u64,
     lr: f64,
-) -> Result<Vec<pnode::obs::Event>> {
+) -> Result<(Vec<pnode::obs::Event>, Option<pnode::coordinator::ExperimentRow>)> {
     use pnode::api::ArchSpec;
     use pnode::data::spiral::SpiralDataset;
     use pnode::nn::{Act, Optimizer};
@@ -325,9 +565,12 @@ fn run_spec_classification(
     let mut opt = pnode::nn::Adam::new(task.theta.len(), lr);
     let mut x = vec![0.0f32; batch * dim];
     let mut y = vec![0usize; batch];
+    let mut last_report = None;
+    let train_t = std::time::Instant::now();
     for step in 0..steps {
         train.fill_batch(step * batch, batch, &mut x, &mut y);
         let res = task.grad_step(&mut rhs, batch, &x, &y, 0.05);
+        last_report = Some(res.report);
         task.apply_grad(&mut opt as &mut dyn Optimizer, &res.grad);
         if step % 5 == 0 || step + 1 == steps {
             println!(
@@ -346,7 +589,34 @@ fn run_spec_classification(
     let (tl, ta) = task.evaluate(&mut rhs, batch, &xt, &yt);
     println!("test: loss {tl:.4} acc {ta:.3}");
     anyhow::ensure!(tl.is_finite(), "training diverged");
-    Ok(take_obs_events())
+    let events = take_obs_events();
+    let row = last_report.map(|rep| {
+        let mut row = pnode::coordinator::ExperimentRow::from_spec_report(
+            "run_spec",
+            "spiral_clf",
+            spec,
+            &rep,
+            train_t.elapsed().as_secs_f64(),
+            0,
+        );
+        if !events.is_empty() {
+            let metrics = pnode::obs::Metrics::from_events(&events);
+            let n_stages = if spec.scheme.is_implicit() {
+                1
+            } else {
+                spec.scheme.tableau().s as u64
+            };
+            let mm = pnode::methods::MemModel::for_rhs(
+                &rhs,
+                n_stages,
+                rep.n_accepted.max(1),
+                blocks as u64,
+            );
+            row.attach_obs(&metrics, mm.ckpt_bytes_for(&spec.method));
+        }
+        row
+    });
+    Ok((events, row))
 }
 
 /// Concatsquash CNF density estimation driven by the spec: Hutchinson
@@ -362,7 +632,7 @@ fn run_spec_cnf(
     batch: usize,
     seed: u64,
     lr: f64,
-) -> Result<Vec<pnode::obs::Event>> {
+) -> Result<(Vec<pnode::obs::Event>, Option<pnode::coordinator::ExperimentRow>)> {
     use pnode::api::ArchSpec;
     use pnode::nn::{Act, Optimizer};
     use pnode::tasks::cnf::{CnfTask, HutchinsonCnfRhs};
@@ -398,8 +668,11 @@ fn run_spec_cnf(
     let mut opt = pnode::nn::Adam::new(task.theta.len(), lr);
     let mut first = f64::NAN;
     let mut last = f64::NAN;
+    let mut last_report = None;
+    let train_t = std::time::Instant::now();
     for step in 0..steps {
         let res = task.grad_step(&mut rhs, &x);
+        last_report = Some(res.report);
         if step == 0 {
             first = res.nll;
         }
@@ -417,7 +690,22 @@ fn run_spec_cnf(
     }
     anyhow::ensure!(last.is_finite(), "CNF training diverged");
     println!("nll {first:.4} -> {last:.4}");
-    Ok(take_obs_events())
+    let events = take_obs_events();
+    let row = last_report.map(|rep| {
+        let mut row = pnode::coordinator::ExperimentRow::from_spec_report(
+            "run_spec",
+            "cnf",
+            spec,
+            &rep,
+            train_t.elapsed().as_secs_f64(),
+            0,
+        );
+        if !events.is_empty() {
+            row.attach_obs(&pnode::obs::Metrics::from_events(&events), 0);
+        }
+        row
+    });
+    Ok((events, row))
 }
 
 fn cmd_info() -> Result<()> {

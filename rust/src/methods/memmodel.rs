@@ -105,6 +105,12 @@ impl MemModel {
                     m.nb * (*n_checkpoints as u64).min(slots) * (m.n_stages + 1) * m.state_bytes
                 }
                 P::Tiered { inner, .. } => policy_bytes(m, inner),
+                // unresolved auto: bounded by its own budget and by the
+                // checkpoint-everything placement it may pick (callers
+                // that want the exact figure resolve the policy first)
+                P::Auto { budget_bytes } => {
+                    (*budget_bytes).min(m.nb * slots * (m.n_stages + 1) * m.state_bytes)
+                }
             }
         }
         match method {

@@ -23,7 +23,7 @@ pub use parallel::ParallelAdjoint;
 pub use pnode::Pnode;
 pub use theta::ImplicitAdjoint;
 
-use crate::checkpoint::TierStats;
+use crate::checkpoint::{CheckpointPolicy, TierStats};
 use crate::exec::ExecStats;
 use crate::ode::grid::TimeGrid;
 use crate::ode::rhs::OdeRhs;
@@ -89,6 +89,95 @@ pub struct MethodReport {
     /// data-parallel execution counters (workers, shards, throughput,
     /// arbiter lease contention); zeros for single-threaded methods
     pub exec: ExecStats,
+    /// how an `auto:<budget>` policy resolved (the default note for
+    /// concretely-specified policies); stamped by the `Session` facade
+    pub auto: AutoNote,
+}
+
+/// Resolution note stamped by the facade when a spec's checkpoint policy
+/// was `auto:<budget>`: which concrete candidate the calibrated cost
+/// model picked.  Kept `Copy` like the report that carries it — the
+/// candidate space is small enough to encode without strings, and the
+/// full policy strings are reconstructed by [`AutoNote::requested_name`]
+/// / [`AutoNote::resolved_name`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AutoNote {
+    /// requested auto budget in bytes (0 ⇒ the policy was concrete and
+    /// nothing was resolved)
+    pub budget_bytes: u64,
+    /// the winning candidate
+    pub resolved: ResolvedPolicy,
+}
+
+/// The concrete candidate an `auto:<budget>` policy resolved to.  Tiered
+/// candidates always use the fixed auto spill dir
+/// (`crate::obs::calibrate::AUTO_SPILL_DIR`) and an `All` inner placement,
+/// so the variant only needs the compression flag.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ResolvedPolicy {
+    /// the spec named a concrete policy; nothing was resolved
+    #[default]
+    NotAuto,
+    All,
+    SolutionOnly,
+    Binomial { k: u32 },
+    Tiered { f16: bool },
+}
+
+impl AutoNote {
+    /// Encode a resolution the cost model produced.  Panics on an
+    /// unresolvable shape (the resolver only emits the candidate set
+    /// below) or a zero budget (rejected at `validate`).
+    pub fn for_resolution(budget_bytes: u64, policy: &CheckpointPolicy) -> AutoNote {
+        assert!(budget_bytes > 0, "auto budgets are nonzero by validation");
+        let resolved = match policy {
+            CheckpointPolicy::All => ResolvedPolicy::All,
+            CheckpointPolicy::SolutionOnly => ResolvedPolicy::SolutionOnly,
+            CheckpointPolicy::Binomial { n_checkpoints } => {
+                ResolvedPolicy::Binomial { k: *n_checkpoints as u32 }
+            }
+            CheckpointPolicy::Tiered { compress_f16, .. } => {
+                ResolvedPolicy::Tiered { f16: *compress_f16 }
+            }
+            CheckpointPolicy::Auto { .. } => {
+                panic!("auto cannot resolve to itself")
+            }
+        };
+        AutoNote { budget_bytes, resolved }
+    }
+
+    /// Whether this report came from an `auto:<budget>` spec.
+    pub fn is_auto(&self) -> bool {
+        self.budget_bytes != 0
+    }
+
+    /// The requested policy string (`auto:<budget>`); `None` for
+    /// concrete specs.
+    pub fn requested_name(&self) -> Option<String> {
+        self.is_auto()
+            .then(|| CheckpointPolicy::Auto { budget_bytes: self.budget_bytes }.name())
+    }
+
+    /// The resolved policy string, reconstructed to match
+    /// `CheckpointPolicy::name()` of the winning candidate exactly;
+    /// `None` for concrete specs.
+    pub fn resolved_name(&self) -> Option<String> {
+        let p = match self.resolved {
+            ResolvedPolicy::NotAuto => return None,
+            ResolvedPolicy::All => CheckpointPolicy::All,
+            ResolvedPolicy::SolutionOnly => CheckpointPolicy::SolutionOnly,
+            ResolvedPolicy::Binomial { k } => {
+                CheckpointPolicy::Binomial { n_checkpoints: k as usize }
+            }
+            ResolvedPolicy::Tiered { f16 } => CheckpointPolicy::Tiered {
+                budget_bytes: self.budget_bytes,
+                dir: crate::obs::calibrate::AUTO_SPILL_DIR.into(),
+                compress_f16: f16,
+                inner: Box::new(CheckpointPolicy::All),
+            },
+        };
+        Some(p.name())
+    }
 }
 
 impl MethodReport {

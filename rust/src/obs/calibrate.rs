@@ -1,0 +1,471 @@
+//! Telemetry-calibrated cost model + `auto:<budget>` policy resolution
+//! (DESIGN.md §13).
+//!
+//! [`CostModel`] extends the paper's Table-2 memory model
+//! ([`crate::methods::MemModel`]) into *time*: per-phase seconds per call,
+//! checkpoint store/restore bandwidth, and tier spill/prefetch bandwidth.
+//! Each constant is fit as the median over persisted
+//! [`crate::obs::ledger`] records (robust to one slow outlier run) and
+//! falls back to a documented prior when the ledger is cold, so
+//! `auto:<budget>` resolves deterministically on a fresh checkout and
+//! sharpens as real telemetry accumulates.
+//!
+//! Resolution enumerates a fixed candidate list — `All`, `SolutionOnly`,
+//! `Binomial(k)` over a doubling k grid, and `tiered:{budget}[+f16]`
+//! around an `All` placement — predicts peak hot-tier bytes and wall
+//! seconds for each, rejects candidates whose predicted peak exceeds the
+//! budget, and picks the cheapest survivor (first wins ties, so the
+//! outcome is deterministic given a fixed ledger).
+
+use crate::api::spec::RunSpec;
+use crate::checkpoint::{prop2_extra_steps, CheckpointPolicy};
+use crate::obs::ledger::{Ledger, RunRecord};
+use crate::obs::PHASES;
+use crate::util::json::Json;
+
+/// Spill directory used by auto-resolved tiered candidates.  Fixed (not
+/// configurable per spec) so the resolution is fully described by
+/// `{budget, f16}` and [`crate::methods::AutoNote`] can stay `Copy`.
+pub const AUTO_SPILL_DIR: &str = ".pnode/spill";
+
+/// Default wall-time regression threshold of `pnode report`: a phase
+/// whose last-run time exceeds the ledger baseline median by more than
+/// this fraction is flagged `REGRESSED`.
+pub const REGRESSION_THRESHOLD: f64 = 0.25;
+
+/// Time-and-memory cost model.  All terms are per *one* gradient
+/// (forward + adjoint sweep); see DESIGN.md §13 for the prediction
+/// formula and the priors' provenance.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModel {
+    /// seconds per span call of each adjoint phase, in [`PHASES`] order
+    /// (`forward`, `store`, `restore`, `recompute`, `vjp`)
+    pub phase_secs: [f64; 5],
+    /// checkpoint store bandwidth (bytes/sec through the hot tier)
+    pub store_bytes_per_sec: f64,
+    /// checkpoint restore bandwidth (bytes/sec)
+    pub restore_bytes_per_sec: f64,
+    /// tier spill-to-disk bandwidth (bytes/sec)
+    pub spill_bytes_per_sec: f64,
+    /// tier prefetch-from-disk bandwidth (bytes/sec)
+    pub prefetch_bytes_per_sec: f64,
+    /// bytes of one stored checkpoint vector (solution or stage slot)
+    pub vec_bytes: f64,
+    /// executed steps of a typical run (stands in for `nt` when the
+    /// spec's grid is adaptive)
+    pub typical_nt: f64,
+    /// ledger records the fit consumed (0 ⇒ pure priors)
+    pub samples: usize,
+}
+
+impl CostModel {
+    /// Documented priors for a cold ledger: microsecond-scale phase steps
+    /// sized for the crate's default MLP benchmarks, RAM-copy store
+    /// bandwidth well above disk spill bandwidth (so recomputation is
+    /// preferred over spilling until telemetry says otherwise), and one
+    /// 32 KiB checkpoint vector (a 128x64 f32 state).
+    pub fn priors() -> CostModel {
+        CostModel {
+            phase_secs: [50e-6, 5e-6, 5e-6, 50e-6, 100e-6],
+            store_bytes_per_sec: 4e9,
+            restore_bytes_per_sec: 4e9,
+            spill_bytes_per_sec: 1e9,
+            prefetch_bytes_per_sec: 2e9,
+            vec_bytes: 32_768.0,
+            typical_nt: 16.0,
+            samples: 0,
+        }
+    }
+
+    /// Fit the model over ledger records: each term is the median of the
+    /// per-record estimates that could be derived (a record without tier
+    /// spans simply contributes nothing to the spill terms), and terms
+    /// with no estimates keep their prior.
+    pub fn fit(records: &[RunRecord]) -> CostModel {
+        let mut m = CostModel::priors();
+        let mut phase: [Vec<f64>; 5] = Default::default();
+        let mut store = Vec::new();
+        let mut restore = Vec::new();
+        let mut spill = Vec::new();
+        let mut prefetch = Vec::new();
+        let mut vecb = Vec::new();
+        let mut nts = Vec::new();
+        for r in records {
+            for (i, name) in PHASES.iter().enumerate() {
+                if let Some(per_call) = span_per_call_secs(&r.metrics, name) {
+                    phase[i].push(per_call);
+                }
+            }
+            let row_f64 = |key: &str| r.row.get(key).and_then(Json::as_f64).filter(|x| *x > 0.0);
+            let ckpt_bytes = row_f64("measured_ckpt_bytes");
+            if let (Some(b), Some(t)) = (ckpt_bytes, span_total_secs(&r.metrics, "store")) {
+                store.push(b / t);
+            }
+            if let (Some(b), Some(t)) = (ckpt_bytes, span_total_secs(&r.metrics, "restore")) {
+                restore.push(b / t);
+            }
+            let cold = row_f64("ckpt_cold_bytes");
+            if let (Some(b), Some(t)) = (cold, span_total_secs(&r.metrics, "tier.spill")) {
+                spill.push(b / t);
+            }
+            if let (Some(b), Some(t)) = (cold, span_total_secs(&r.metrics, "tier.prefetch_wait"))
+            {
+                prefetch.push(b / t);
+            }
+            // per-vector bytes: measured checkpoint residency over the
+            // stored-vector count the record's own spec implies
+            if let (Some(b), Some(nt), Some(spec)) =
+                (ckpt_bytes, row_f64("n_accepted"), record_policy(r))
+            {
+                let n_stages = record_n_stages(r);
+                let v = stored_vectors(&spec, nt as u64, n_stages);
+                if v > 0 {
+                    vecb.push(b / v as f64);
+                }
+            }
+            if let Some(nt) = row_f64("n_accepted") {
+                nts.push(nt);
+            }
+        }
+        for (i, samples) in phase.iter_mut().enumerate() {
+            if let Some(x) = median(samples) {
+                m.phase_secs[i] = x;
+            }
+        }
+        if let Some(x) = median(&mut store) {
+            m.store_bytes_per_sec = x;
+        }
+        if let Some(x) = median(&mut restore) {
+            m.restore_bytes_per_sec = x;
+        }
+        if let Some(x) = median(&mut spill) {
+            m.spill_bytes_per_sec = x;
+        }
+        if let Some(x) = median(&mut prefetch) {
+            m.prefetch_bytes_per_sec = x;
+        }
+        if let Some(x) = median(&mut vecb) {
+            m.vec_bytes = x;
+        }
+        if let Some(x) = median(&mut nts) {
+            m.typical_nt = x;
+        }
+        m.samples = records.len();
+        m
+    }
+
+    /// Fit against the process-default ledger; an unreadable or cold
+    /// ledger yields the priors.
+    pub fn from_default_ledger() -> CostModel {
+        Ledger::open_default()
+            .and_then(|l| l.read_all())
+            .map(|recs| CostModel::fit(&recs))
+            .unwrap_or_else(|_| CostModel::priors())
+    }
+
+    /// Predicted peak hot-tier (RAM-resident) checkpoint bytes.  Tiered
+    /// candidates are capped at their own hot budget — the overflow is
+    /// exactly what the tier spills.
+    pub fn predict_peak_hot_bytes(&self, policy: &CheckpointPolicy, ctx: &ResolveCtx) -> u64 {
+        let stored = stored_vectors(policy, ctx.nt, ctx.n_stages) as f64 * self.vec_bytes;
+        let stored = stored.round() as u64;
+        match policy {
+            CheckpointPolicy::Tiered { budget_bytes, .. } => stored.min(*budget_bytes),
+            _ => stored,
+        }
+    }
+
+    /// Predicted wall seconds of one gradient:
+    ///
+    /// ```text
+    /// nt·t_fwd + nt·t_vjp + R·t_rec            (integration + recompute)
+    /// + C·t_store + C·t_restore                (per-checkpoint-step span)
+    /// + V/store_bps + V/restore_bps            (checkpoint byte traffic)
+    /// + spilled/spill_bps + cold/prefetch_bps  (tiered overflow only)
+    /// ```
+    ///
+    /// with `R` from Prop. 2 for binomial placements, `V` the stored
+    /// bytes, `spilled = max(0, V - budget)`, and `cold` the spilled
+    /// payload after optional f16 halving.
+    pub fn predict_secs(&self, policy: &CheckpointPolicy, ctx: &ResolveCtx) -> f64 {
+        let nt = ctx.nt as f64;
+        let stored_bytes = stored_vectors(policy, ctx.nt, ctx.n_stages) as f64 * self.vec_bytes;
+        let ckpt_steps = stored_steps(policy, ctx.nt) as f64;
+        let recompute = recompute_steps(policy, ctx.nt) as f64;
+        let [t_fwd, t_store, t_restore, t_rec, t_vjp] = self.phase_secs;
+        let mut secs = nt * t_fwd
+            + nt * t_vjp
+            + recompute * t_rec
+            + ckpt_steps * (t_store + t_restore)
+            + stored_bytes / self.store_bytes_per_sec
+            + stored_bytes / self.restore_bytes_per_sec;
+        if let CheckpointPolicy::Tiered { budget_bytes, compress_f16, .. } = policy {
+            let spilled = (stored_bytes - *budget_bytes as f64).max(0.0);
+            let cold = if *compress_f16 { spilled / 2.0 } else { spilled };
+            secs += spilled / self.spill_bytes_per_sec + cold / self.prefetch_bytes_per_sec;
+        }
+        secs
+    }
+
+    /// The fixed candidate list for `auto:<budget>`, in enumeration
+    /// order, each with its predictions and budget verdict.
+    pub fn candidates(&self, budget_bytes: u64, ctx: &ResolveCtx) -> Vec<Candidate> {
+        let mut policies = vec![CheckpointPolicy::All, CheckpointPolicy::SolutionOnly];
+        let slots = ctx.nt.saturating_sub(1).max(1) as usize;
+        let mut k = 1usize;
+        while k < slots {
+            policies.push(CheckpointPolicy::Binomial { n_checkpoints: k });
+            k *= 2;
+        }
+        for compress_f16 in [false, true] {
+            policies.push(CheckpointPolicy::Tiered {
+                budget_bytes,
+                dir: AUTO_SPILL_DIR.into(),
+                compress_f16,
+                inner: Box::new(CheckpointPolicy::All),
+            });
+        }
+        policies
+            .into_iter()
+            .map(|policy| {
+                let peak = self.predict_peak_hot_bytes(&policy, ctx);
+                Candidate {
+                    pred_peak_hot_bytes: peak,
+                    pred_secs: self.predict_secs(&policy, ctx),
+                    fits: peak <= budget_bytes,
+                    policy,
+                }
+            })
+            .collect()
+    }
+
+    /// Resolve `auto:<budget>` to the cheapest fitting candidate.
+    /// Deterministic: strict `<` on predicted seconds keeps the earliest
+    /// enumerated candidate on ties, and the inputs (ledger fit + fixed
+    /// candidate list) carry no run-to-run nondeterminism.
+    pub fn resolve(&self, budget_bytes: u64, ctx: &ResolveCtx) -> Result<CheckpointPolicy, String> {
+        let cands = self.candidates(budget_bytes, ctx);
+        let mut best: Option<&Candidate> = None;
+        for c in cands.iter().filter(|c| c.fits) {
+            if best.map_or(true, |b| c.pred_secs < b.pred_secs) {
+                best = Some(c);
+            }
+        }
+        best.map(|c| c.policy.clone()).ok_or_else(|| {
+            format!(
+                "auto policy: no candidate fits under budget {budget_bytes} bytes \
+                 (smallest predicted peak was {} bytes); raise the budget",
+                cands.iter().map(|c| c.pred_peak_hot_bytes).min().unwrap_or(0)
+            )
+        })
+    }
+}
+
+/// The problem sizes known at resolution time (Session/registry build).
+#[derive(Clone, Copy, Debug)]
+pub struct ResolveCtx {
+    /// planned step count (the calibrated `typical_nt` for adaptive grids)
+    pub nt: u64,
+    /// stage derivatives stored per step by stage-keeping placements
+    pub n_stages: u64,
+}
+
+impl ResolveCtx {
+    pub fn for_spec(spec: &RunSpec, model: &CostModel) -> ResolveCtx {
+        let nt = spec
+            .grid
+            .planned_nt()
+            .map(|n| n as u64)
+            .unwrap_or_else(|| model.typical_nt.round().max(1.0) as u64);
+        let n_stages =
+            if spec.scheme.is_implicit() { 1 } else { spec.scheme.tableau().s as u64 };
+        ResolveCtx { nt, n_stages }
+    }
+}
+
+/// One enumerated auto-policy candidate with its predictions.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub policy: CheckpointPolicy,
+    pub pred_peak_hot_bytes: u64,
+    pub pred_secs: f64,
+    /// predicted peak hot bytes ≤ the auto budget
+    pub fits: bool,
+}
+
+/// Resolve a spec whose pnode policy is `auto:<budget>` against the
+/// default ledger.  Returns `None` for concrete policies, otherwise
+/// `(resolved spec, budget bytes, winning policy)`.  Deterministic given
+/// a fixed ledger: same records → same fit → same winner.
+pub fn resolve_spec(spec: &RunSpec) -> Result<Option<(RunSpec, u64, CheckpointPolicy)>, String> {
+    let budget = match spec.method.pnode_policy() {
+        Some(CheckpointPolicy::Auto { budget_bytes }) => *budget_bytes,
+        _ => return Ok(None),
+    };
+    let model = CostModel::from_default_ledger();
+    let ctx = ResolveCtx::for_spec(spec, &model);
+    let policy = model.resolve(budget, &ctx)?;
+    let mut resolved = spec.clone();
+    resolved.method = crate::api::spec::MethodSpec::Pnode { policy: policy.clone() };
+    resolved.validate()?;
+    Ok(Some((resolved, budget, policy)))
+}
+
+/// Checkpoint vectors (solution or stage slots) the placement stores over
+/// `nt` steps — the same counting `MemModel::ckpt_bytes_for` uses.
+pub fn stored_vectors(policy: &CheckpointPolicy, nt: u64, n_stages: u64) -> u64 {
+    let slots = nt.saturating_sub(1);
+    match policy {
+        CheckpointPolicy::All => slots * (n_stages + 1),
+        CheckpointPolicy::SolutionOnly => slots,
+        CheckpointPolicy::Binomial { n_checkpoints } => {
+            (*n_checkpoints as u64).min(slots) * (n_stages + 1)
+        }
+        CheckpointPolicy::Tiered { inner, .. } => stored_vectors(inner, nt, n_stages),
+        CheckpointPolicy::Auto { .. } => 0,
+    }
+}
+
+/// Steps at which the placement stores a checkpoint (each costs one
+/// store span going forward and one restore span coming back).
+fn stored_steps(policy: &CheckpointPolicy, nt: u64) -> u64 {
+    let slots = nt.saturating_sub(1);
+    match policy.placement() {
+        CheckpointPolicy::All | CheckpointPolicy::SolutionOnly => slots,
+        CheckpointPolicy::Binomial { n_checkpoints } => (*n_checkpoints as u64).min(slots),
+        _ => 0,
+    }
+}
+
+/// Recomputed forward steps of the adjoint sweep: 0 for `All`, `nt - 1`
+/// for `SolutionOnly`, Prop. 2 for binomial placements (pessimistic
+/// `nt²` when the closed form declines to answer).
+fn recompute_steps(policy: &CheckpointPolicy, nt: u64) -> u64 {
+    match policy.placement() {
+        CheckpointPolicy::All => 0,
+        CheckpointPolicy::SolutionOnly => nt.saturating_sub(1),
+        CheckpointPolicy::Binomial { n_checkpoints } => {
+            prop2_extra_steps(nt as usize, *n_checkpoints).unwrap_or(nt.saturating_mul(nt))
+        }
+        _ => 0,
+    }
+}
+
+fn span_total_secs(metrics: &Json, name: &str) -> Option<f64> {
+    metrics
+        .get("spans")?
+        .get(name)?
+        .get("total_secs")?
+        .as_f64()
+        .filter(|t| *t > 0.0)
+}
+
+fn span_per_call_secs(metrics: &Json, name: &str) -> Option<f64> {
+    let span = metrics.get("spans")?.get(name)?;
+    let count = span.get("count")?.as_f64().filter(|c| *c > 0.0)?;
+    let total = span.get("total_secs")?.as_f64().filter(|t| *t > 0.0)?;
+    Some(total / count)
+}
+
+/// The concrete checkpoint policy a ledger record ran under (its resolved
+/// policy when the run was auto, else the method string's own policy).
+fn record_policy(r: &RunRecord) -> Option<CheckpointPolicy> {
+    if let Some(name) = r.row.get("policy_resolved").and_then(Json::as_str) {
+        if let Ok(p) = CheckpointPolicy::parse(name) {
+            return Some(p);
+        }
+    }
+    let method = r.spec.get("method")?.as_str()?;
+    let spec = crate::api::spec::MethodSpec::parse(method).ok()?;
+    match spec.pnode_policy()? {
+        CheckpointPolicy::Auto { .. } => None,
+        p => Some(p.clone()),
+    }
+}
+
+fn record_n_stages(r: &RunRecord) -> u64 {
+    use crate::ode::tableau::Scheme;
+    r.spec
+        .get("scheme")
+        .and_then(Json::as_str)
+        .and_then(Scheme::parse)
+        .map(|s| if s.is_implicit() { 1 } else { s.tableau().s as u64 })
+        .unwrap_or(1)
+}
+
+/// Upper median: deterministic, robust to a minority of outliers, and
+/// never interpolates (a fitted constant is always one actually-observed
+/// estimate).
+fn median(xs: &mut Vec<f64>) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("cost estimates are finite"));
+    Some(xs[xs.len() / 2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> ResolveCtx {
+        ResolveCtx { nt: 12, n_stages: 7 }
+    }
+
+    #[test]
+    fn stored_vector_counts_match_the_memory_model() {
+        // nt=12, s=7: Table-2 counting
+        assert_eq!(stored_vectors(&CheckpointPolicy::All, 12, 7), 11 * 8);
+        assert_eq!(stored_vectors(&CheckpointPolicy::SolutionOnly, 12, 7), 11);
+        assert_eq!(
+            stored_vectors(&CheckpointPolicy::Binomial { n_checkpoints: 4 }, 12, 7),
+            4 * 8
+        );
+        let tiered = CheckpointPolicy::parse("tiered:1m:/tmp/x:binomial:4").unwrap();
+        assert_eq!(stored_vectors(&tiered, 12, 7), 4 * 8);
+    }
+
+    #[test]
+    fn priors_prefer_recomputation_over_spilling() {
+        // with a cold ledger and a budget that excludes All, binomial
+        // recomputation (~µs per step) must beat tiered disk traffic
+        // (~ms per MiB), so auto never picks the spill path by default
+        let m = CostModel::priors();
+        let budget = 1_572_864; // 1.5 MiB: All at nt=12/s=7 needs ~2.75 MiB
+        let win = m.resolve(budget, &ctx()).unwrap();
+        assert_eq!(win, CheckpointPolicy::Binomial { n_checkpoints: 4 }, "{win:?}");
+        let cands = m.candidates(budget, &ctx());
+        for c in &cands {
+            assert_eq!(c.fits, c.pred_peak_hot_bytes <= budget, "{c:?}");
+            assert!(c.pred_secs.is_finite() && c.pred_secs > 0.0, "{c:?}");
+        }
+        assert!(
+            !cands.iter().find(|c| c.policy == CheckpointPolicy::All).unwrap().fits,
+            "All must be over this budget"
+        );
+    }
+
+    #[test]
+    fn generous_budget_resolves_to_all() {
+        let m = CostModel::priors();
+        let win = m.resolve(1 << 30, &ctx()).unwrap();
+        assert_eq!(win, CheckpointPolicy::All);
+    }
+
+    #[test]
+    fn tiny_budget_falls_back_to_tiered_spill() {
+        // 1 byte fits no in-RAM placement, but tiered's hot peak is
+        // capped by its own budget — so the spill path still fits and wins
+        let m = CostModel::priors();
+        let win = m.resolve(1, &ctx()).unwrap();
+        assert!(matches!(win, CheckpointPolicy::Tiered { .. }), "{win:?}");
+    }
+
+    #[test]
+    fn resolution_is_deterministic() {
+        let m = CostModel::priors();
+        let a = m.resolve(1_572_864, &ctx()).unwrap();
+        let b = m.resolve(1_572_864, &ctx()).unwrap();
+        assert_eq!(a, b);
+    }
+}

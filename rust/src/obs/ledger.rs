@@ -1,0 +1,282 @@
+//! Persistent run ledger: an append-only JSONL store under
+//! `.pnode/ledger/` (DESIGN.md §13).
+//!
+//! Every observed `pnode run` appends one [`RunRecord`] — the serialized
+//! [`crate::api::RunSpec`], the run's `ExperimentRow`, the metrics fold,
+//! the live memcheck, and a git-describe-style [`build_tag`] — as one
+//! compact JSON object per line.  The format is the durability layer the
+//! rest of the PR builds on: `pnode report` folds per-phase wall times
+//! over it, and [`crate::obs::calibrate::CostModel`] fits its time
+//! constants from it to resolve `auto:<budget>` policies.
+//!
+//! JSONL was chosen over one growing array because appends are O(record)
+//! (open in append mode, write one line), a torn final line from a
+//! crashed run corrupts nothing before it, and external tooling can
+//! stream it line-by-line.  Round-trips go through `util/json`, so a
+//! record read back equals the record written (asserted in
+//! `tests/ledger_auto.rs`).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// File name of the JSONL store inside the ledger dir.
+pub const LEDGER_FILE: &str = "runs.jsonl";
+
+/// Env var overriding the default ledger dir (benches isolate their
+/// ledgers with it; unset means `.pnode/ledger` under the CWD).
+pub const LEDGER_DIR_ENV: &str = "PNODE_LEDGER_DIR";
+
+/// One persisted run.  The spec/row/metrics payloads are kept as [`Json`]
+/// rather than re-typed structs: the ledger is a durability format, and
+/// holding the documents verbatim keeps the round-trip lossless even as
+/// the row grows columns in later PRs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunRecord {
+    /// git-describe-style build tag (see [`build_tag`])
+    pub build: String,
+    /// the `RunSpec::to_json` document that produced the run
+    pub spec: Json,
+    /// the run's `ExperimentRow::to_json` document
+    pub row: Json,
+    /// the metrics fold (`crate::obs::Metrics::to_json`) — the same
+    /// serializer `pnode run --metrics json` emits
+    pub metrics: Json,
+    /// predicted-vs-observed checkpoint bytes (`crate::obs::memcheck`);
+    /// absent when the run had no memory model
+    pub memcheck: Option<Json>,
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("build", Json::str(self.build.clone())),
+            ("spec", self.spec.clone()),
+            ("row", self.row.clone()),
+            ("metrics", self.metrics.clone()),
+        ];
+        if let Some(mc) = &self.memcheck {
+            kv.push(("memcheck", mc.clone()));
+        }
+        Json::obj(kv)
+    }
+
+    pub fn from_json(v: &Json) -> Result<RunRecord, String> {
+        let req = |key: &str| {
+            v.get(key)
+                .cloned()
+                .ok_or_else(|| format!("ledger record is missing {key:?}"))
+        };
+        Ok(RunRecord {
+            build: req("build")?
+                .as_str()
+                .ok_or("ledger record \"build\" must be a string")?
+                .to_string(),
+            spec: req("spec")?,
+            row: req("row")?,
+            metrics: req("metrics")?,
+            memcheck: v.get("memcheck").cloned(),
+        })
+    }
+}
+
+/// Handle on one ledger directory.  `open` creates the directory;
+/// records live in `<dir>/runs.jsonl`.
+#[derive(Clone, Debug)]
+pub struct Ledger {
+    dir: PathBuf,
+}
+
+impl Ledger {
+    /// Open (creating if needed) the ledger at `dir`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Ledger, String> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| format!("cannot create ledger dir {}: {e}", dir.display()))?;
+        Ok(Ledger { dir })
+    }
+
+    /// The process-default ledger dir: `$PNODE_LEDGER_DIR`, else
+    /// `.pnode/ledger` under the CWD.
+    pub fn default_dir() -> PathBuf {
+        match std::env::var(LEDGER_DIR_ENV) {
+            Ok(d) if !d.is_empty() => PathBuf::from(d),
+            _ => PathBuf::from(".pnode/ledger"),
+        }
+    }
+
+    /// Open the process-default ledger (see [`Ledger::default_dir`]).
+    pub fn open_default() -> Result<Ledger, String> {
+        Ledger::open(Ledger::default_dir())
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path of the JSONL file (which may not exist yet — an empty ledger
+    /// has the dir but no file).
+    pub fn path(&self) -> PathBuf {
+        self.dir.join(LEDGER_FILE)
+    }
+
+    /// Append one record as a single compact JSON line.
+    pub fn append(&self, rec: &RunRecord) -> Result<(), String> {
+        let path = self.path();
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| format!("cannot open ledger {}: {e}", path.display()))?;
+        writeln!(f, "{}", rec.to_json().to_string_compact())
+            .map_err(|e| format!("cannot append to ledger {}: {e}", path.display()))
+    }
+
+    /// Read every record in append order.  A missing file is an empty
+    /// ledger; a malformed line is an error naming its line number.
+    pub fn read_all(&self) -> Result<Vec<RunRecord>, String> {
+        let path = self.path();
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(format!("cannot read ledger {}: {e}", path.display())),
+        };
+        let mut out = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let doc = json::parse(line)
+                .map_err(|e| format!("{}:{}: bad JSON: {e:?}", path.display(), i + 1))?;
+            out.push(
+                RunRecord::from_json(&doc)
+                    .map_err(|e| format!("{}:{}: {e}", path.display(), i + 1))?,
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// Git-describe-style build tag without shelling out: `$PNODE_BUILD_TAG`
+/// if set, else `<branch>-g<short-hash>` read from `.git/HEAD` (following
+/// the ref through loose and packed refs), else `"untagged"`.  Ledger
+/// records and `BENCH_micro.json` entries key on it so perf history stays
+/// attributable across PRs.
+pub fn build_tag() -> String {
+    if let Ok(tag) = std::env::var("PNODE_BUILD_TAG") {
+        if !tag.is_empty() {
+            return tag;
+        }
+    }
+    git_head_tag().unwrap_or_else(|| "untagged".to_string())
+}
+
+fn git_head_tag() -> Option<String> {
+    let head = std::fs::read_to_string(".git/HEAD").ok()?;
+    let head = head.trim();
+    if let Some(r) = head.strip_prefix("ref: ") {
+        let branch = r.rsplit('/').next().filter(|b| !b.is_empty())?;
+        let hash = std::fs::read_to_string(Path::new(".git").join(r))
+            .ok()
+            .map(|s| s.trim().to_string())
+            .filter(|h| !h.is_empty())
+            .or_else(|| packed_ref(r))?;
+        Some(format!("{branch}-g{}", &hash[..hash.len().min(12)]))
+    } else if !head.is_empty() {
+        Some(format!("detached-g{}", &head[..head.len().min(12)]))
+    } else {
+        None
+    }
+}
+
+fn packed_ref(r: &str) -> Option<String> {
+    let packed = std::fs::read_to_string(".git/packed-refs").ok()?;
+    for line in packed.lines() {
+        if line.starts_with('#') || line.starts_with('^') {
+            continue;
+        }
+        if let Some((hash, name)) = line.split_once(' ') {
+            if name.trim() == r && !hash.is_empty() {
+                return Some(hash.to_string());
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("pnode-ledger-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn rec(i: usize) -> RunRecord {
+        RunRecord {
+            build: format!("main-g{i:012}"),
+            spec: json::parse(&format!("{{\"version\":1,\"method\":\"pnode\",\"nt\":{i}}}"))
+                .unwrap(),
+            row: json::parse(&format!("{{\"time_secs\":{}.5,\"n\":{i}}}", i + 1)).unwrap(),
+            metrics: json::parse("{\"counters\":{\"gemm.mul_adds\":64},\"spans\":{}}").unwrap(),
+            memcheck: (i % 2 == 0)
+                .then(|| json::parse("{\"predicted_bytes\":10,\"observed_bytes\":9}").unwrap()),
+        }
+    }
+
+    #[test]
+    fn append_read_roundtrip_preserves_order_and_content() {
+        let dir = tmp_dir("roundtrip");
+        let ledger = Ledger::open(&dir).unwrap();
+        assert_eq!(ledger.read_all().unwrap(), vec![], "empty ledger reads as no records");
+        let recs: Vec<RunRecord> = (0..3).map(rec).collect();
+        for r in &recs {
+            ledger.append(r).unwrap();
+        }
+        assert_eq!(ledger.read_all().unwrap(), recs);
+        // a reopened handle sees the same records and keeps appending
+        let again = Ledger::open(&dir).unwrap();
+        again.append(&rec(3)).unwrap();
+        let all = again.read_all().unwrap();
+        assert_eq!(all.len(), 4);
+        assert_eq!(all[..3], recs[..]);
+        assert_eq!(all[3], rec(3));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn records_are_one_compact_line_each() {
+        let dir = tmp_dir("lines");
+        let ledger = Ledger::open(&dir).unwrap();
+        ledger.append(&rec(0)).unwrap();
+        ledger.append(&rec(1)).unwrap();
+        let text = std::fs::read_to_string(ledger.path()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let doc = json::parse(line).unwrap();
+            assert!(doc.get("build").is_some() && doc.get("metrics").is_some());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_lines_error_with_line_number() {
+        let dir = tmp_dir("malformed");
+        let ledger = Ledger::open(&dir).unwrap();
+        ledger.append(&rec(0)).unwrap();
+        let mut f = std::fs::OpenOptions::new().append(true).open(ledger.path()).unwrap();
+        writeln!(f, "{{\"build\":42}}").unwrap();
+        drop(f);
+        let e = ledger.read_all().unwrap_err();
+        assert!(e.contains(":2:"), "{e}");
+    }
+
+    #[test]
+    fn build_tag_is_nonempty() {
+        assert!(!build_tag().is_empty());
+    }
+}

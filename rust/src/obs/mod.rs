@@ -21,11 +21,15 @@
 //! recorded data, so gradients are bitwise identical with the sink on or
 //! off (asserted in `tests/obs_trace.rs`).
 
+pub mod calibrate;
 pub mod export;
+pub mod ledger;
 pub mod metrics;
 pub mod trace;
 
+pub use calibrate::CostModel;
 pub use export::{chrome_trace, memcheck};
+pub use ledger::{build_tag, Ledger, RunRecord};
 pub use metrics::{Hist, Metrics};
 pub use trace::{
     counter, disable, enable, enabled, gauge, instant, job_ctx, reset, span, take, test_guard,

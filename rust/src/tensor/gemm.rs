@@ -138,9 +138,16 @@ pub fn note_dispatch() {
     }
 }
 
-/// `gemm.mul_adds` counter, recorded on the *calling* thread only (the
-/// kernel's own row workers are raw scoped threads with no obs job
-/// context and must stay silent).
+/// `gemm.mul_adds` counter: the full `m·k·n` product, stamped under the
+/// caller's *logical* obs tid — the main thread (tid 0) or, inside the
+/// execution pool, the `job_ctx` tid of the enclosing job — so parallel
+/// shards contribute under their own deterministic `(tid, seq)` keys and
+/// the metrics fold's per-name sum covers every worker.  The kernel's own
+/// row-block scoped threads stay silent on purpose: counting there would
+/// split the product by `gemm_workers()`, making the event multiset
+/// depend on the worker count and breaking the trace-identical-across-
+/// worker-counts contract (`tests/obs_trace.rs`); the entry-point count
+/// is already the whole product regardless of the split.
 #[inline]
 fn obs_gemm(m: usize, k: usize, n: usize) {
     if crate::obs::enabled() {

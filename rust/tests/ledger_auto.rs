@@ -1,0 +1,239 @@
+//! ISSUE-8 integration surface: the persistent run ledger, the
+//! telemetry-calibrated [`CostModel`], and `auto:<budget>` resolution.
+//!
+//! Covers the satellite-4 checklist end to end: lossless/order-stable
+//! ledger round-trips, a fit that reproduces synthetic constants,
+//! deterministic resolution, gradients of an auto-resolved session
+//! bitwise identical to the same concrete policy run directly, and
+//! degenerate auto specs rejected at `validate()` with precise messages.
+//!
+//! No test here mutates process env (`PNODE_LEDGER_DIR` etc.) — the lib
+//! test harness runs threads in parallel and `set_var` would race; the
+//! ledger tests pass explicit temp dirs instead.
+
+use pnode::api::{MethodSpec, Session, SolverBuilder};
+use pnode::checkpoint::CheckpointPolicy;
+use pnode::coordinator::ExperimentRow;
+use pnode::methods::ResolvedPolicy;
+use pnode::obs::calibrate::ResolveCtx;
+use pnode::obs::{CostModel, Ledger, RunRecord};
+use pnode::ode::rhs::OdeRhs;
+use pnode::ode::tableau::Scheme;
+use pnode::ode::ModuleRhs;
+use pnode::util::json;
+use pnode::util::rng::Rng;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("pnode-la-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn approx(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * b.abs().max(1.0)
+}
+
+// ---------------------------------------------------------------- ledger
+
+fn sample_record(i: usize) -> RunRecord {
+    RunRecord {
+        build: format!("main-g{i:09}"),
+        spec: json::parse(&format!(
+            "{{\"version\":1,\"method\":\"pnode:binomial:{}\",\"scheme\":\"dopri5\"}}",
+            i + 1
+        ))
+        .unwrap(),
+        row: json::parse(&format!("{{\"n_accepted\":{},\"time_secs\":0.25}}", 10 + i)).unwrap(),
+        metrics: json::parse("{\"counters\":{\"gemm.mul_adds\":4096},\"spans\":{}}").unwrap(),
+        memcheck: (i % 2 == 1)
+            .then(|| json::parse("{\"predicted_bytes\":64,\"observed_bytes\":64}").unwrap()),
+    }
+}
+
+#[test]
+fn ledger_roundtrip_is_lossless_and_order_stable() {
+    let dir = tmp_dir("roundtrip");
+    let ledger = Ledger::open(&dir).unwrap();
+    let recs: Vec<RunRecord> = (0..5).map(sample_record).collect();
+    for r in &recs {
+        ledger.append(r).unwrap();
+    }
+    // lossless: every field (including nested Json docs and the optional
+    // memcheck) reads back equal; stable: in append order
+    assert_eq!(ledger.read_all().unwrap(), recs);
+    // appending through a fresh handle preserves the prefix
+    Ledger::open(&dir).unwrap().append(&sample_record(5)).unwrap();
+    let all = ledger.read_all().unwrap();
+    assert_eq!(all.len(), 6);
+    assert_eq!(all[..5], recs[..]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn ledger_lines_are_independent_json_objects() {
+    let dir = tmp_dir("lines");
+    let ledger = Ledger::open(&dir).unwrap();
+    for i in 0..3 {
+        ledger.append(&sample_record(i)).unwrap();
+    }
+    let text = std::fs::read_to_string(ledger.path()).unwrap();
+    for line in text.lines() {
+        let doc = json::parse(line).unwrap();
+        for key in ["build", "spec", "row", "metrics"] {
+            assert!(doc.get(key).is_some(), "line missing {key}: {line}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------------ cost model
+
+/// A synthetic record with exactly known constants: 10 forward span calls
+/// totalling `fwd_total` secs, 40960 checkpoint bytes stored in 1 ms and
+/// restored in 2 ms under `solution_only` at nt = 11 (10 slots).
+fn synth_record(fwd_total: f64) -> RunRecord {
+    let metrics = format!(
+        "{{\"counters\":{{}},\"spans\":{{\
+          \"forward\":{{\"count\":10,\"total_secs\":{fwd_total}}},\
+          \"store\":{{\"count\":10,\"total_secs\":0.001}},\
+          \"restore\":{{\"count\":10,\"total_secs\":0.002}}}}}}"
+    );
+    RunRecord {
+        build: "synth-g0".into(),
+        spec: json::parse("{\"method\":\"pnode:solution_only\",\"scheme\":\"rk4\"}").unwrap(),
+        row: json::parse("{\"measured_ckpt_bytes\":40960,\"n_accepted\":11}").unwrap(),
+        metrics: json::parse(&metrics).unwrap(),
+        memcheck: None,
+    }
+}
+
+#[test]
+fn fit_reproduces_synthetic_constants() {
+    let records: Vec<RunRecord> = [1.0, 2.0, 4.0].iter().map(|t| synth_record(*t)).collect();
+    let m = CostModel::fit(&records);
+    // per-call forward medians over {0.1, 0.2, 0.4} → upper median 0.2
+    assert!(approx(m.phase_secs[0], 0.2), "{:?}", m.phase_secs);
+    // bandwidths are bytes/total-secs of the matching span
+    assert!(approx(m.store_bytes_per_sec, 40960.0 / 0.001), "{}", m.store_bytes_per_sec);
+    assert!(approx(m.restore_bytes_per_sec, 40960.0 / 0.002), "{}", m.restore_bytes_per_sec);
+    // 40960 bytes over solution_only's 10 slots at nt = 11
+    assert!(approx(m.vec_bytes, 4096.0), "{}", m.vec_bytes);
+    assert!(approx(m.typical_nt, 11.0), "{}", m.typical_nt);
+    // no tier spans → spill terms keep their documented priors
+    let p = CostModel::priors();
+    assert_eq!(m.spill_bytes_per_sec, p.spill_bytes_per_sec);
+    assert_eq!(m.prefetch_bytes_per_sec, p.prefetch_bytes_per_sec);
+    assert_eq!(m.samples, 3);
+}
+
+#[test]
+fn cold_ledger_fit_is_exactly_the_priors() {
+    assert_eq!(CostModel::fit(&[]), CostModel::priors());
+}
+
+#[test]
+fn resolution_is_deterministic_and_budget_coherent() {
+    let m = CostModel::priors();
+    let ctx = ResolveCtx { nt: 12, n_stages: 7 };
+    assert_eq!(m.resolve(1_572_864, &ctx).unwrap(), m.resolve(1_572_864, &ctx).unwrap());
+    // a generous budget admits everything and All (zero recompute,
+    // cheapest predicted time) wins
+    assert_eq!(m.resolve(1 << 30, &ctx).unwrap(), CheckpointPolicy::All);
+    // every candidate's fits flag agrees with its own predicted peak
+    for c in m.candidates(1_572_864, &ctx) {
+        assert_eq!(c.fits, c.pred_peak_hot_bytes <= 1_572_864, "{c:?}");
+    }
+}
+
+// --------------------------------------------- auto sessions end to end
+
+fn mk_rhs(seed: u64) -> ModuleRhs {
+    let dims = vec![5, 9, 4];
+    let mut rng = Rng::new(seed);
+    let theta = pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0);
+    ModuleRhs::mlp(dims, pnode::nn::Act::Tanh, true, 2, theta)
+}
+
+#[test]
+fn auto_gradients_are_bitwise_identical_to_the_resolved_policy() {
+    let rhs = mk_rhs(801);
+    let mut rng = Rng::new(802);
+    let mut u0 = vec![0.0f32; rhs.state_len()];
+    rng.fill_normal(&mut u0);
+    let w = vec![1.0f32; rhs.state_len()];
+
+    let auto_spec = SolverBuilder::new()
+        .policy_str("auto:1m")
+        .scheme(Scheme::Dopri5)
+        .uniform(10)
+        .build()
+        .unwrap();
+    let mut auto = Session::new(auto_spec.clone()).unwrap();
+    let out = auto.grad(&rhs, &u0, &w);
+    assert_eq!(out.report.auto.budget_bytes, 1 << 20);
+    assert_ne!(out.report.auto.resolved, ResolvedPolicy::NotAuto);
+
+    // whatever the ledger-calibrated winner is, running it directly must
+    // produce the exact same bits (resolution is observation-only)
+    let resolved = auto.resolved_policy().expect("auto specs record a resolution").clone();
+    let direct_spec = SolverBuilder::new()
+        .policy(resolved.clone())
+        .scheme(Scheme::Dopri5)
+        .uniform(10)
+        .build()
+        .unwrap();
+    assert_eq!(direct_spec.method, auto.resolved_spec().method);
+    let mut direct = Session::new(direct_spec).unwrap();
+    let direct_out = direct.grad(&rhs, &u0, &w);
+    assert_eq!(out.u_f, direct_out.u_f);
+    assert_eq!(auto.grad_theta(), direct.grad_theta(), "grad_theta must match bitwise");
+    assert_eq!(auto.lambda0(), direct.lambda0(), "lambda0 must match bitwise");
+
+    // the rows built from these reports carry requested vs resolved
+    let row = ExperimentRow::from_spec_report("t", "d", &auto_spec, &out.report, 0.1, 0);
+    assert_eq!(row.policy_requested.as_deref(), Some("auto:1m"));
+    assert_eq!(row.policy_resolved.as_deref(), Some(resolved.name().as_str()));
+    let j = row.to_json().to_string_compact();
+    assert!(j.contains("\"policy_requested\":\"auto:1m\""), "{j}");
+    let direct_row =
+        ExperimentRow::from_spec_report("t", "d", direct.spec(), &direct_out.report, 0.1, 0);
+    assert_eq!(direct_row.policy_requested, None, "concrete runs have no auto columns");
+}
+
+#[test]
+fn auto_specs_roundtrip_through_strings_and_json() {
+    let m = MethodSpec::parse("pnode:auto:8m").unwrap();
+    assert_eq!(m.name(), "pnode:auto:8m");
+    assert_eq!(MethodSpec::parse(&m.name()).unwrap(), m);
+    assert_eq!(
+        m.pnode_policy(),
+        Some(&CheckpointPolicy::Auto { budget_bytes: 8 << 20 })
+    );
+
+    let spec = SolverBuilder::new()
+        .policy_str("auto:8m")
+        .scheme(Scheme::Rk4)
+        .uniform(6)
+        .build()
+        .unwrap();
+    let doc = spec.to_json();
+    let back = pnode::api::RunSpec::from_json(&doc).unwrap();
+    assert_eq!(back.method, spec.method);
+    assert_eq!(back.to_json(), doc, "auto specs round-trip losslessly through JSON");
+}
+
+#[test]
+fn degenerate_auto_specs_are_rejected_with_precise_messages() {
+    // zero budget, through the builder (parse + validate funnel)
+    let e = SolverBuilder::new().policy_str("auto:0").uniform(4).build().unwrap_err();
+    assert!(e.contains("auto:0") && e.contains("nonzero"), "{e}");
+    // zero budget, programmatic construction caught at spec validate
+    let mut spec = SolverBuilder::new().uniform(4).build().unwrap();
+    spec.method = MethodSpec::Pnode { policy: CheckpointPolicy::Auto { budget_bytes: 0 } };
+    let e = spec.validate().unwrap_err();
+    assert!(e.contains("auto:0"), "{e}");
+    assert!(Session::new(spec).is_err(), "invalid specs never open sessions");
+    // auto nested inside tiered: must name the fix, not fold into the dir
+    let e = MethodSpec::parse("pnode:tiered:8m:/tmp/x:auto:4k").unwrap_err();
+    assert!(e.contains("auto") && e.contains("concrete"), "{e}");
+}

@@ -227,3 +227,48 @@ fn merged_trace_is_deterministic_across_runs_and_worker_counts() {
 
     obs::reset();
 }
+
+#[test]
+fn gemm_mul_adds_total_is_worker_count_invariant_and_attributed_to_pool_tids() {
+    let _g = obs::test_guard();
+    obs::disable();
+    obs::reset();
+
+    // the counter is emitted per logical obs tid (main = 0, pool job
+    // i+1), never inside the kernel's internal row-block threads — so
+    // the summed total is exact work, independent of PNODE_WORKERS and
+    // of the GEMM thread pool
+    let spec_at = |workers: usize| {
+        SolverBuilder::new()
+            .scheme_str("dopri5")
+            .policy_str("binomial:3")
+            .uniform(12)
+            .workers(workers)
+            .shard_rows(SHARD_ROWS)
+            .build()
+            .unwrap()
+    };
+
+    obs::enable();
+    let _ = run_grad(&spec_at(1));
+    let serial = obs::take();
+    let _ = run_grad(&spec_at(3));
+    let pooled = obs::take();
+    obs::disable();
+
+    let total = |ev: &[obs::Event]| pnode::obs::Metrics::from_events(ev).counter("gemm.mul_adds");
+    assert!(total(&serial) > 0.0, "the gradient multiplies matrices");
+    assert_eq!(
+        total(&serial),
+        total(&pooled),
+        "summed mul-adds are exact work, invariant to sharding"
+    );
+    // under the pool, shard-local GEMMs attribute to their job's logical
+    // tid — the counter must not collapse onto the coordinator thread
+    let pool_attributed = pooled.iter().any(|e| {
+        e.tid > 0 && e.name == "gemm.mul_adds" && matches!(e.kind, EventKind::Counter(_))
+    });
+    assert!(pool_attributed, "pool workers emit their own mul-add counts");
+
+    obs::reset();
+}
