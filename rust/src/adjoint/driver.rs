@@ -129,6 +129,7 @@ impl ThetaDriver {
             ThetaStep::new(scheme),
             policy,
             ts[0],
+            // lint:allow(panic): the driver is built from a validated BlockSpec whose grid has at least one node
             *ts.last().expect("nonempty time grid"),
             TimeGrid::from_times(ts),
             arbiter,
@@ -163,6 +164,7 @@ impl<S: StepScheme> AdjointDriver<S> {
                     prefetch_window: 4,
                     arbiter,
                 })
+                // lint:allow(panic): an unwritable spill dir is an unrecoverable environment fault at solver construction
                 .expect("creating tiered checkpoint store (spill dir writable?)"),
             ),
             _ => Box::new(CheckpointStore::new()),
@@ -244,6 +246,7 @@ impl<S: StepScheme> AdjointDriver<S> {
                     Vec::new()
                 }
             }
+            // lint:allow(panic): placement() lowers Tiered to its inner placement before this match
             CheckpointPolicy::Tiered { .. } => unreachable!("placement() is never Tiered"),
         };
         let with_stages = self.policy.stores_stages() && self.scheme.needs_stages();
@@ -336,6 +339,7 @@ impl<S: StepScheme> AdjointDriver<S> {
             )
         };
         let res = res.unwrap_or_else(|| {
+            // lint:allow(panic): an adaptive grid on a scheme without an embedded estimate is a caller configuration bug, surfaced at first use
             panic!(
                 "TimeGrid::Adaptive requires an embedded error estimate ({} has none)",
                 self.scheme.name()
@@ -380,6 +384,7 @@ impl<S: StepScheme> AdjointDriver<S> {
         if i == self.steps.len() {
             &self.final_state
         } else {
+            // lint:allow(panic): the placement schedule stored this step (checked by the keep test above)
             &self.store.get(i).expect("state stored").u
         }
     }
@@ -429,6 +434,7 @@ impl<S: StepScheme> AdjointDriver<S> {
                     rhs, 0, nt, n_checkpoints, fwd, lambda, grad_theta, &mut aws, &mut ews,
                 );
             }
+            // lint:allow(panic): placement() lowers Tiered to its inner placement before this match
             CheckpointPolicy::Tiered { .. } => unreachable!("placement() is never Tiered"),
         }
         self.store.finish();
@@ -484,6 +490,7 @@ impl<S: StepScheme> AdjointDriver<S> {
         let mut upper: Vec<f32> = if j == nt {
             self.final_state.clone()
         } else {
+            // lint:allow(panic): range boundaries are always kept by the placement schedule
             self.store.take(j).expect("range boundary state stored").u
         };
         for step in (i..j).rev() {
@@ -492,6 +499,7 @@ impl<S: StepScheme> AdjointDriver<S> {
             // the global last step's (u, ks) may be retained transiently
             // from the forward pass: adjoint it without a recompute
             if step + 1 == nt && !keep && self.transient_last.is_some() {
+                // lint:allow(panic): guarded by the transient_last.is_some() arm of the enclosing condition
                 let (u, tks) = self.transient_last.take().expect("transient last step");
                 let _ = self.store.take(step); // consume the slot if stored
                 let _sp = obs::span("vjp");
@@ -503,8 +511,10 @@ impl<S: StepScheme> AdjointDriver<S> {
             let cp = {
                 let _sp = obs::span("restore");
                 if keep {
+                    // lint:allow(panic): the keep test just confirmed the placement schedule stored this step
                     self.store.get(step).expect("state stored").clone()
                 } else {
+                    // lint:allow(panic): the recompute loop stored this step into the transient slot above
                     self.store.take(step).expect("state stored")
                 }
             };
@@ -571,6 +581,7 @@ impl<S: StepScheme> AdjointDriver<S> {
             // adjoint step `lo`
             let (t, h) = self.steps[lo];
             if lo + 1 == nt && self.transient_last.is_some() {
+                // lint:allow(panic): guarded by the transient_last.is_some() arm of the enclosing condition
                 let (u, tks) = self.transient_last.take().expect("transient last step");
                 let u_next = self.final_state.clone();
                 let _sp = obs::span("vjp");
@@ -581,6 +592,7 @@ impl<S: StepScheme> AdjointDriver<S> {
                     let _sp = obs::span("restore");
                     self.store
                         .get(lo)
+                        // lint:allow(panic): the binomial schedule places an anchor at every range it revisits
                         .unwrap_or_else(|| panic!("binomial executor: no anchor at step {lo}"))
                         .clone()
                 };
@@ -624,6 +636,7 @@ impl<S: StepScheme> AdjointDriver<S> {
                 let last = hi - 1;
                 let (tl, hl) = self.steps[last];
                 if last + 1 == nt && self.transient_last.is_some() {
+                    // lint:allow(panic): guarded by the transient_last.is_some() arm of the enclosing condition
                     let (u, tks) = self.transient_last.take().expect("transient last step");
                     let u_next = self.final_state.clone();
                     let _sp = obs::span("vjp");
@@ -632,6 +645,7 @@ impl<S: StepScheme> AdjointDriver<S> {
                 } else {
                     let mut u = {
                         let _sp = obs::span("restore");
+                        // lint:allow(panic): the binomial schedule places an anchor at every range it revisits
                         self.store.get(lo).expect("anchor checkpoint").u.clone()
                     };
                     let mut un = vec![0.0f32; n];
@@ -662,6 +676,7 @@ impl<S: StepScheme> AdjointDriver<S> {
                     if anchor_kind == Anchor::Bare && !fwd {
                         let cp = {
                             let _sp = obs::span("restore");
+                            // lint:allow(panic): the binomial schedule places an anchor at every range it revisits
                             self.store.get(lo).expect("anchor").clone()
                         };
                         let (t, h) = self.steps[lo];
@@ -685,6 +700,7 @@ impl<S: StepScheme> AdjointDriver<S> {
                     // create the checkpoint by walking from the anchor
                     let mut u = {
                         let _sp = obs::span("restore");
+                        // lint:allow(panic): the binomial schedule places an anchor at every range it revisits
                         self.store.get(lo).expect("anchor checkpoint").u.clone()
                     };
                     let mut un = vec![0.0f32; n];

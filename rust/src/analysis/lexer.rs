@@ -1,0 +1,343 @@
+//! Comment/string-aware Rust source scanner for `pnode-lint`.
+//!
+//! This is not a full Rust lexer — it is the minimal state machine the
+//! lint rules need: it splits a source file into per-line **code text**
+//! (comments removed, string/char *contents* blanked to spaces so tokens
+//! inside literals can never match a rule) and per-line **comment text**
+//! (so rules can require `// SAFETY:` / justification comments and find
+//! `lint:allow` waivers).  Handled: line comments, nested block comments,
+//! string / byte-string / raw-string literals (any `#` count), char
+//! literals incl. escapes, and the lifetime-vs-char-literal ambiguity.
+//!
+//! On top of the split, [`test_region_lines`] marks every line covered by
+//! a `#[cfg(test)]`-gated item (attribute line through the matching close
+//! brace) so rules can exempt test code.
+
+/// One scanned file: `code[i]` and `comments[i]` partition line `i`
+/// (0-based) of the source.
+pub struct Scan {
+    /// source line with comments stripped and literal contents blanked
+    pub code: Vec<String>,
+    /// comment text on the line (`//`, `///`, `/* .. */` bodies); empty
+    /// when the line has no comment
+    pub comments: Vec<String>,
+}
+
+#[derive(PartialEq)]
+enum State {
+    Normal,
+    LineComment,
+    /// nested block comment at the given depth
+    BlockComment(u32),
+    /// inside `"…"` / `b"…"`
+    Str,
+    /// inside `r"…"` / `r#"…"#` / `br#"…"#` with this many hashes
+    RawStr(usize),
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Does a raw-string literal (`r"`, `r#"`, `br##"` …) start at `i`?
+/// Returns the hash count and the length of the opener when it does.
+fn raw_str_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if j >= chars.len() || chars[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while j < chars.len() && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < chars.len() && chars[j] == '"' {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// Is the `'` at `i` a char literal (as opposed to a lifetime)?  A char
+/// literal is `'\…'`, `'x'`, or `'ident'` with a closing quote right
+/// after the identifier; a lifetime (`'a`, `'static`) has none.
+fn is_char_literal(chars: &[char], i: usize) -> bool {
+    match chars.get(i + 1) {
+        Some('\\') => true,
+        Some(&c) => {
+            if chars.get(i + 2) == Some(&'\'') {
+                return true; // 'x'
+            }
+            if !is_ident(c) {
+                return false;
+            }
+            let mut j = i + 2;
+            while j < chars.len() && is_ident(chars[j]) {
+                j += 1;
+            }
+            chars.get(j) == Some(&'\'') // 'abc' (only valid as a typo, but lex it)
+        }
+        None => false,
+    }
+}
+
+/// Scan `src` into per-line code and comment text (see module docs).
+pub fn scan(src: &str) -> Scan {
+    let chars: Vec<char> = src.chars().collect();
+    let n_lines = src.split('\n').count();
+    let mut code: Vec<String> = vec![String::new(); n_lines];
+    let mut comments: Vec<String> = vec![String::new(); n_lines];
+    let mut li = 0usize;
+    let mut state = State::Normal;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if state == State::LineComment {
+                state = State::Normal;
+            }
+            li += 1;
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Normal => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    state = State::LineComment;
+                    comments[li].push_str("//");
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment(1);
+                    comments[li].push_str("/*");
+                    i += 2;
+                } else if c == '"' {
+                    code[li].push('"');
+                    state = State::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b')
+                    && (i == 0 || !is_ident(chars[i - 1]))
+                    && raw_str_open(&chars, i).is_some()
+                {
+                    let (hashes, len) = raw_str_open(&chars, i).expect("checked above"); // lint:allow(panic): guarded by the is_some() arm condition
+                    for k in 0..len {
+                        code[li].push(chars[i + k]);
+                    }
+                    state = State::RawStr(hashes);
+                    i += len;
+                } else if c == 'b'
+                    && chars.get(i + 1) == Some(&'"')
+                    && (i == 0 || !is_ident(chars[i - 1]))
+                {
+                    code[li].push_str("b\"");
+                    state = State::Str;
+                    i += 2;
+                } else if c == '\'' {
+                    if is_char_literal(&chars, i) {
+                        // consume to the closing quote, emit a blank literal
+                        let mut j = i + 1;
+                        if chars.get(j) == Some(&'\\') {
+                            j += 2;
+                            while j < chars.len() && chars[j] != '\'' {
+                                j += 1;
+                            }
+                        } else {
+                            j += 1;
+                            while j < chars.len() && chars[j] != '\'' {
+                                j += 1;
+                            }
+                        }
+                        code[li].push_str("' '");
+                        i = j + 1;
+                    } else {
+                        code[li].push('\''); // lifetime tick
+                        i += 1;
+                    }
+                } else {
+                    code[li].push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comments[li].push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment(depth + 1);
+                    comments[li].push_str("/*");
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    comments[li].push_str("*/");
+                    state = if depth == 1 { State::Normal } else { State::BlockComment(depth - 1) };
+                    i += 2;
+                } else {
+                    comments[li].push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    code[li].push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    code[li].push('"');
+                    state = State::Normal;
+                    i += 1;
+                } else {
+                    code[li].push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && chars[i + 1..].iter().take(hashes).filter(|&&h| h == '#').count() == hashes
+                {
+                    code[li].push('"');
+                    for _ in 0..hashes {
+                        code[li].push('#');
+                    }
+                    i += 1 + hashes;
+                    state = State::Normal;
+                } else {
+                    code[li].push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    Scan { code, comments }
+}
+
+/// Per-line flags: `true` when the line is covered by a `#[cfg(test)]`
+/// item — from the attribute line through the matching close brace of the
+/// item body.  Detection is literal (`#[cfg(test)]`), which is the only
+/// spelling this crate uses.
+pub fn test_region_lines(scan: &Scan) -> Vec<bool> {
+    let joined = scan.code.join("\n");
+    let bytes: Vec<char> = joined.chars().collect();
+    let mut covered = vec![false; scan.code.len()];
+    let needle: Vec<char> = "#[cfg(test)]".chars().collect();
+    let mut i = 0usize;
+    while i + needle.len() <= bytes.len() {
+        if bytes[i..i + needle.len()] != needle[..] {
+            i += 1;
+            continue;
+        }
+        let attr_start = i;
+        let mut j = i + needle.len();
+        // opening brace of the following item
+        while j < bytes.len() && bytes[j] != '{' {
+            j += 1;
+        }
+        let mut depth = 0i32;
+        while j < bytes.len() {
+            match bytes[j] {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let line_of =
+            |pos: usize| bytes[..pos.min(bytes.len())].iter().filter(|&&c| c == '\n').count();
+        let (a, b) = (line_of(attr_start), line_of(j));
+        for flag in covered.iter_mut().take(b + 1).skip(a) {
+            *flag = true;
+        }
+        i += needle.len();
+    }
+    covered
+}
+
+/// Column positions where `ident` occurs as a whole identifier token in
+/// `line` (code text — call only on [`Scan::code`] lines).
+pub fn ident_positions(line: &str, ident: &str) -> Vec<usize> {
+    let chars: Vec<char> = line.chars().collect();
+    let needle: Vec<char> = ident.chars().collect();
+    let mut out = Vec::new();
+    if needle.is_empty() || chars.len() < needle.len() {
+        return out;
+    }
+    for start in 0..=chars.len() - needle.len() {
+        if chars[start..start + needle.len()] != needle[..] {
+            continue;
+        }
+        let before_ok = start == 0 || !is_ident(chars[start - 1]);
+        let after = chars.get(start + needle.len());
+        let after_ok = after.map(|&c| !is_ident(c)).unwrap_or(true);
+        if before_ok && after_ok {
+            out.push(start);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_separated_from_code() {
+        let src = "let x = 1; // HashMap in a comment\nlet s = \"Instant::now\";\n";
+        let sc = scan(src);
+        assert!(sc.code[0].contains("let x = 1;"));
+        assert!(!sc.code[0].contains("HashMap"));
+        assert!(sc.comments[0].contains("HashMap"));
+        assert!(!sc.code[1].contains("Instant"), "{:?}", sc.code[1]);
+        assert!(sc.code[1].contains('"'), "delimiters stay");
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let src = "a /* one /* two */ still */ b\n/* open\nunsafe here\n*/ c\n";
+        let sc = scan(src);
+        assert!(sc.code[0].contains('a') && sc.code[0].contains('b'));
+        assert!(sc.comments[0].contains("two"));
+        assert!(sc.code[2].is_empty(), "{:?}", sc.code[2]);
+        assert!(sc.comments[2].contains("unsafe"));
+        assert!(sc.code[3].contains('c'));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_blank_their_contents() {
+        let src = "let r = r#\"panic! { \" } \"#; let c = '{'; let lt: &'static str = \"x\";\n";
+        let sc = scan(&src);
+        assert!(!sc.code[0].contains("panic"));
+        assert!(
+            !sc.code[0].contains('{'),
+            "brace inside literals must not count: {:?}",
+            sc.code[0]
+        );
+        assert!(sc.code[0].contains("'static"), "lifetimes survive: {:?}", sc.code[0]);
+    }
+
+    #[test]
+    fn escaped_quote_char_literal_does_not_derail_the_scanner() {
+        let src = "let q = '\\''; let after = unsafe_token;\n";
+        let sc = scan(src);
+        assert!(sc.code[0].contains("after"), "{:?}", sc.code[0]);
+    }
+
+    #[test]
+    fn cfg_test_region_covers_the_item_body() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn more() {}\n";
+        let sc = scan(src);
+        let cov = test_region_lines(&sc);
+        assert_eq!(cov, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn ident_positions_require_token_boundaries() {
+        assert_eq!(ident_positions("Instantiate(Instant)", "Instant"), vec![12]);
+        assert_eq!(ident_positions("x.unwrap()", "unwrap"), vec![2]);
+        assert!(ident_positions("my_unwrap()", "unwrap").is_empty());
+    }
+}

@@ -1,0 +1,443 @@
+//! The `pnode-lint` rule registry: crate-specific invariants over the
+//! [`crate::analysis::lexer`] scan, with an inline waiver grammar.
+//!
+//! Rules (DESIGN.md §14):
+//!
+//! * `determinism` — no `HashMap`/`HashSet`/`Instant`/`SystemTime`
+//!   tokens in the numeric/gradient modules (`ode/`, `adjoint/`, `nn/`,
+//!   `tensor/`, `linalg/`, `methods/`, `exec/reduce.rs`).  Hashing and
+//!   wall-clock time belong to `obs/` and the CLI; a stray `Instant` in a
+//!   gradient path is how bitwise reproducibility quietly dies.
+//! * `unsafe-safety` — every `unsafe` token must be immediately preceded
+//!   by a comment containing `SAFETY:` (attribute lines and blank lines
+//!   between the comment and the token are allowed).
+//! * `ordering` — every `Ordering::Relaxed`/`Acquire`/`Release`/`AcqRel`
+//!   use must carry a comment (same line, or the line directly above)
+//!   naming the happens-before edge it relies on.  `SeqCst` is exempt:
+//!   it is the maximal ordering, so there is no weaker edge to justify.
+//! * `panic` — `.unwrap()`/`.expect()`/`panic!`/`unreachable!` outside
+//!   `#[cfg(test)]` regions, `main.rs`, `bin/`, `bench/`, and `testing/`
+//!   requires a waiver.
+//!
+//! Waiver grammar: `// lint:allow(<rule>): <reason>` on the finding's
+//! line or the line directly above — in a *plain* comment (doc comments
+//! only document the grammar, they never waive).  A waiver without a
+//! reason, or naming an unknown rule, is itself reported (rule id
+//! `waiver`) and cannot be waived.
+//!
+//! All rules skip `#[cfg(test)]` regions — test code may hash, time,
+//! and assert freely; the invariants protect the library surface.
+
+use std::path::{Path, PathBuf};
+
+use crate::analysis::lexer::{ident_positions, scan, test_region_lines, Scan};
+use crate::util::json;
+
+/// Rule identifiers accepted by `lint:allow(...)`.
+pub const RULE_IDS: &[&str] = &["determinism", "unsafe-safety", "ordering", "panic"];
+
+/// Modules where the `determinism` rule applies (path prefixes relative
+/// to `rust/src`), plus exact files.
+const DET_MODULES: &[&str] = &["ode/", "adjoint/", "nn/", "tensor/", "linalg/", "methods/"];
+const DET_FILES: &[&str] = &["exec/reduce.rs"];
+/// Identifiers the `determinism` rule bans in those modules.
+const DET_IDENTS: &[&str] = &["HashMap", "HashSet", "Instant", "SystemTime"];
+/// Path prefixes exempt from the `panic` rule (CLI, benches, test kit).
+const PANIC_EXEMPT: &[&str] = &["main.rs", "bin/", "bench/", "testing/"];
+
+/// One lint finding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// rule id (`determinism`, `unsafe-safety`, `ordering`, `panic`,
+    /// `waiver`, or `artifact` for JSON artifact failures)
+    pub rule: &'static str,
+    /// path as given to the linter (relative to `rust/src` for tree runs)
+    pub file: String,
+    /// 1-based line number
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}:{}: {}", self.rule, self.file, self.line, self.message)
+    }
+}
+
+/// A parsed-and-valid waiver: `(1-based line, rule id)`.
+struct Waiver {
+    line: usize,
+    rule: String,
+}
+
+/// Parse `lint:allow(...)` waivers out of the per-line comment text.
+/// Malformed waivers are appended to `findings` under the `waiver` rule.
+fn collect_waivers(rel: &str, sc: &Scan, findings: &mut Vec<Finding>) -> Vec<Waiver> {
+    let mut waivers = Vec::new();
+    for (ln0, comment) in sc.comments.iter().enumerate() {
+        // waivers live in plain `//` comments; doc comments only *describe*
+        // the grammar (this module, README excerpts) and never waive
+        let t = comment.trim_start();
+        if t.starts_with("///") || t.starts_with("//!") {
+            continue;
+        }
+        let Some(at) = comment.find("lint:allow") else { continue };
+        let line = ln0 + 1;
+        let mut push_bad = |message: String| {
+            findings.push(Finding { rule: "waiver", file: rel.to_string(), line, message });
+        };
+        let rest = &comment[at + "lint:allow".len()..];
+        let Some(body) = rest.strip_prefix('(') else {
+            push_bad("malformed waiver (want `lint:allow(<rule>): <reason>`)".to_string());
+            continue;
+        };
+        let rule: String =
+            body.chars().take_while(|c| c.is_alphanumeric() || *c == '_' || *c == '-').collect();
+        let after_rule = &body[rule.len()..];
+        let Some(tail) = after_rule.strip_prefix(')') else {
+            push_bad("malformed waiver (want `lint:allow(<rule>): <reason>`)".to_string());
+            continue;
+        };
+        if !RULE_IDS.contains(&rule.as_str()) {
+            push_bad(format!("waiver names unknown rule {rule:?}"));
+            continue;
+        }
+        let reason = tail.strip_prefix(':').map(str::trim).unwrap_or("");
+        if !tail.starts_with(':') || reason.is_empty() {
+            push_bad(format!("waiver for {rule:?} has no reason"));
+            continue;
+        }
+        waivers.push(Waiver { line, rule });
+    }
+    waivers
+}
+
+/// Scan one line of code text for `Ordering::<weak>` uses; returns the
+/// matched variant names.
+fn ordering_uses(line: &str) -> Vec<&'static str> {
+    const WEAK: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel"];
+    let chars: Vec<char> = line.chars().collect();
+    let mut out = Vec::new();
+    for pos in ident_positions(line, "Ordering") {
+        let mut j = pos + "Ordering".len();
+        while chars.get(j) == Some(&' ') {
+            j += 1;
+        }
+        if chars.get(j) != Some(&':') || chars.get(j + 1) != Some(&':') {
+            continue;
+        }
+        j += 2;
+        while chars.get(j) == Some(&' ') {
+            j += 1;
+        }
+        let ident: String = chars[j.min(chars.len())..]
+            .iter()
+            .take_while(|c| c.is_alphanumeric() || **c == '_')
+            .collect();
+        if let Some(v) = WEAK.iter().find(|v| **v == ident) {
+            out.push(*v);
+        }
+    }
+    out
+}
+
+/// `.unwrap(` / `.expect(` call sites on a code line (method-call form
+/// only, so a local `fn expect` definition or `unwrap_or` never match).
+fn panic_calls(line: &str) -> Vec<&'static str> {
+    let chars: Vec<char> = line.chars().collect();
+    let mut out = Vec::new();
+    for name in ["unwrap", "expect"] {
+        for pos in ident_positions(line, name) {
+            let before_dot = chars[..pos].iter().rev().find(|c| !c.is_whitespace());
+            let mut j = pos + name.len();
+            while chars.get(j).map(|c| c.is_whitespace()).unwrap_or(false) {
+                j += 1;
+            }
+            if before_dot == Some(&'.') && chars.get(j) == Some(&'(') {
+                out.push(if name == "unwrap" { "unwrap" } else { "expect" });
+            }
+        }
+    }
+    for name in ["panic", "unreachable"] {
+        for pos in ident_positions(line, name) {
+            let mut j = pos + name.len();
+            while chars.get(j).map(|c| c.is_whitespace()).unwrap_or(false) {
+                j += 1;
+            }
+            if chars.get(j) == Some(&'!') {
+                out.push(if name == "panic" { "panic" } else { "unreachable" });
+            }
+        }
+    }
+    out
+}
+
+/// Lint one file's source text as if it lived at `rel` under `rust/src`.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let sc = scan(src);
+    let tests = test_region_lines(&sc);
+    let mut findings = Vec::new();
+    let waivers = collect_waivers(rel, &sc, &mut findings);
+    let waived = |rule: &str, line: usize| {
+        waivers.iter().any(|w| w.rule == rule && (w.line == line || w.line + 1 == line))
+    };
+    let has_comment = |ln0: usize| !sc.comments[ln0].trim().is_empty();
+
+    let det_applies =
+        DET_MODULES.iter().any(|m| rel.starts_with(m)) || DET_FILES.contains(&rel);
+    let panic_applies = !PANIC_EXEMPT.iter().any(|m| rel.starts_with(m));
+
+    for (ln0, code) in sc.code.iter().enumerate() {
+        let line = ln0 + 1;
+        if tests[ln0] {
+            continue; // all rules protect the library surface, not tests
+        }
+        if det_applies {
+            for ident in DET_IDENTS {
+                for _ in ident_positions(code, ident) {
+                    if !waived("determinism", line) {
+                        findings.push(Finding {
+                            rule: "determinism",
+                            file: rel.to_string(),
+                            line,
+                            message: format!(
+                                "`{ident}` in deterministic module (hash/time belong to obs/ and the CLI)"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        for _ in ident_positions(code, "unsafe") {
+            // accept SAFETY: on the same line or in the comment block
+            // directly above (attributes and blank lines may intervene)
+            let mut ok = sc.comments[ln0].contains("SAFETY:");
+            let mut k = ln0;
+            while !ok && k > 0 {
+                k -= 1;
+                let ck = sc.code[k].trim();
+                if ck.starts_with("#[") || (ck.is_empty() && !has_comment(k)) {
+                    continue; // attribute or blank line: keep walking
+                }
+                if ck.is_empty() && has_comment(k) {
+                    if sc.comments[k].contains("SAFETY:") {
+                        ok = true;
+                    } else {
+                        continue; // walk up the contiguous comment block
+                    }
+                } else {
+                    break; // hit real code: no SAFETY comment adjacent
+                }
+            }
+            if !ok && !waived("unsafe-safety", line) {
+                findings.push(Finding {
+                    rule: "unsafe-safety",
+                    file: rel.to_string(),
+                    line,
+                    message: "`unsafe` without an immediately preceding `// SAFETY:` comment"
+                        .to_string(),
+                });
+            }
+        }
+        for variant in ordering_uses(code) {
+            let justified = has_comment(ln0)
+                || (ln0 > 0 && sc.code[ln0 - 1].trim().is_empty() && has_comment(ln0 - 1));
+            if !justified && !waived("ordering", line) {
+                findings.push(Finding {
+                    rule: "ordering",
+                    file: rel.to_string(),
+                    line,
+                    message: format!(
+                        "`Ordering::{variant}` without a justification comment naming its happens-before edge"
+                    ),
+                });
+            }
+        }
+        if panic_applies {
+            for call in panic_calls(code) {
+                if !waived("panic", line) {
+                    let what = match call {
+                        "unwrap" | "expect" => format!("`.{call}()`"),
+                        other => format!("`{other}!`"),
+                    };
+                    findings.push(Finding {
+                        rule: "panic",
+                        file: rel.to_string(),
+                        line,
+                        message: format!("{what} on the library surface needs a waiver"),
+                    });
+                }
+            }
+        }
+    }
+    findings
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for a
+/// deterministic report order.
+fn rs_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> =
+            std::fs::read_dir(&dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `src_root` (normally `rust/src`).
+pub fn lint_tree(src_root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    for path in rs_files(src_root)? {
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        let src = std::fs::read_to_string(&path)?;
+        findings.extend(lint_source(&rel, &src));
+    }
+    Ok(findings)
+}
+
+/// Validate the checked-in JSON artifacts under `repo_root` parse
+/// cleanly with [`crate::util::json`]: `BENCH_*.json` at the root,
+/// `examples/specs/*.json`, and `ci/metrics_baseline.json`.  A malformed
+/// artifact must fail CI here, before a bench run silently masks it.
+pub fn validate_artifacts(repo_root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut root_entries: Vec<PathBuf> =
+        std::fs::read_dir(repo_root)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    root_entries.sort();
+    for p in root_entries {
+        let name = p.file_name().map(|n| n.to_string_lossy().to_string()).unwrap_or_default();
+        if name.starts_with("BENCH_") && name.ends_with(".json") {
+            paths.push(p);
+        }
+    }
+    let specs = repo_root.join("examples/specs");
+    if specs.is_dir() {
+        let mut spec_files: Vec<PathBuf> =
+            std::fs::read_dir(&specs)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+        spec_files.sort();
+        paths.extend(
+            spec_files
+                .into_iter()
+                .filter(|p| p.extension().map(|e| e == "json").unwrap_or(false)),
+        );
+    }
+    let baseline = repo_root.join("ci/metrics_baseline.json");
+    if baseline.exists() {
+        paths.push(baseline);
+    }
+    let mut findings = Vec::new();
+    for p in paths {
+        let rel = p
+            .strip_prefix(repo_root)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        let text = std::fs::read_to_string(&p)?;
+        if let Err(e) = json::parse(&text) {
+            findings.push(Finding { rule: "artifact", file: rel, line: 1, message: e.to_string() });
+        }
+    }
+    Ok(findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn determinism_flags_banned_idents_only_in_listed_modules() {
+        let src = "use std::collections::HashMap;\nfn f() { let t = Instant::now(); }\n";
+        let in_methods = lint_source("methods/x.rs", src);
+        assert_eq!(rules_of(&in_methods), vec!["determinism", "determinism"]);
+        assert_eq!(in_methods[0].line, 1);
+        assert_eq!(in_methods[1].line, 2);
+        assert!(lint_source("obs/x.rs", src).is_empty(), "obs/ may hash and time");
+        // substrings must not match: Instantiate != Instant
+        let doc = "fn f() { let instantiate_all = 1; let _ = instantiate_all; }\n";
+        assert!(lint_source("ode/x.rs", doc).is_empty());
+    }
+
+    #[test]
+    fn unsafe_requires_adjacent_safety_comment() {
+        let bad = "fn f() { unsafe { core() } }\n";
+        assert_eq!(rules_of(&lint_source("tensor/x.rs", bad)), vec!["unsafe-safety"]);
+        let good = "// SAFETY: bounds checked by the caller\nfn f() { unsafe { core() } }\n";
+        assert!(lint_source("tensor/x.rs", good).is_empty());
+        let through_attr =
+            "// SAFETY: dispatched only after feature detection\n#[target_feature(enable = \"avx2\")]\nunsafe fn g() {}\n";
+        assert!(lint_source("tensor/x.rs", through_attr).is_empty(), "attributes may intervene");
+        let same_line = "unsafe { core() } // SAFETY: single-threaded here\n";
+        assert!(lint_source("tensor/x.rs", same_line).is_empty());
+    }
+
+    #[test]
+    fn ordering_requires_comment_and_seqcst_is_exempt() {
+        let bad = "fn f() { X.load(Ordering::Relaxed); }\n";
+        let fs = lint_source("exec/x.rs", bad);
+        assert_eq!(rules_of(&fs), vec!["ordering"]);
+        let good = "fn f() { X.load(Ordering::Relaxed); // counter only, no edge needed\n}\n";
+        assert!(lint_source("exec/x.rs", good).is_empty());
+        let above = "// release-store in enable() is the edge\nfn f() {\n    // pairs with it\n    X.load(Ordering::Acquire);\n}\n";
+        assert!(lint_source("exec/x.rs", above).is_empty());
+        let seqcst = "fn f() { X.store(true, Ordering::SeqCst); }\n";
+        assert!(lint_source("exec/x.rs", seqcst).is_empty(), "SeqCst needs no justification");
+    }
+
+    #[test]
+    fn panic_rule_exempts_tests_and_cli_paths() {
+        let src = "fn f() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); panic!(); }\n}\n";
+        let fs = lint_source("util/x.rs", src);
+        assert_eq!(rules_of(&fs), vec!["panic"]);
+        assert_eq!(fs[0].line, 1);
+        assert!(lint_source("main.rs", src).is_empty());
+        assert!(lint_source("bin/pnode_lint.rs", src).is_empty());
+        assert!(lint_source("bench/harness.rs", src).is_empty());
+        assert!(lint_source("testing/prop.rs", src).is_empty());
+    }
+
+    #[test]
+    fn waivers_suppress_same_or_next_line_and_need_reasons() {
+        let waived =
+            "// lint:allow(panic): poisoned lock is unrecoverable\nfn f() { x.unwrap(); }\n";
+        assert!(lint_source("util/x.rs", waived).is_empty());
+        let trailing = "fn f() { x.unwrap() } // lint:allow(panic): infallible by construction\n";
+        assert!(lint_source("util/x.rs", trailing).is_empty());
+        let no_reason = "// lint:allow(panic):\nfn f() { x.unwrap(); }\n";
+        assert_eq!(rules_of(&lint_source("util/x.rs", no_reason)), vec!["waiver", "panic"]);
+        let unknown = "// lint:allow(speed): because\nfn f() { x.unwrap(); }\n";
+        assert_eq!(rules_of(&lint_source("util/x.rs", unknown)), vec!["waiver", "panic"]);
+        let wrong_rule = "// lint:allow(ordering): not the right rule\nfn f() { x.unwrap(); }\n";
+        assert_eq!(rules_of(&lint_source("util/x.rs", wrong_rule)), vec!["panic"]);
+        // doc comments describe the grammar without waiving (or tripping
+        // the malformed-waiver check)
+        let doc = "/// Waivers look like `lint:allow(<rule>): <reason>`.\nfn f() { x.unwrap(); }\n";
+        assert_eq!(rules_of(&lint_source("util/x.rs", doc)), vec!["panic"]);
+        let doc_waiver =
+            "//! lint:allow(panic): doc comments never waive\nfn f() { x.unwrap(); }\n";
+        assert_eq!(rules_of(&lint_source("util/x.rs", doc_waiver)), vec!["panic"]);
+    }
+
+    #[test]
+    fn tokens_inside_strings_and_comments_never_fire() {
+        let src = "// HashMap unsafe .unwrap() Ordering::Relaxed panic!\nfn f() { let s = \"Instant::now() unsafe panic!\"; let _ = s; }\n";
+        assert!(lint_source("methods/x.rs", src).is_empty());
+    }
+}

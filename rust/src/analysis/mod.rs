@@ -1,0 +1,23 @@
+//! Crate-tailored static analysis (DESIGN.md §14).
+//!
+//! Two halves:
+//!
+//! * **`pnode-lint`** ([`lexer`] + [`lints`]): a comment/string-aware
+//!   token scanner and rule registry enforcing the invariants the test
+//!   matrix cannot — no hash/time tokens in gradient modules, `SAFETY:`
+//!   comments on `unsafe`, justified weak atomic orderings, and a
+//!   panic-free library surface — with an inline waiver grammar
+//!   (`// lint:allow(<rule>): <reason>`).  CI runs the binary over
+//!   `rust/src` as a hard gate; it also validates the checked-in JSON
+//!   artifacts parse via [`crate::util::json`].
+//! * **[`race`]** (`debug-sync` feature): a deterministic vector-clock
+//!   happens-before checker stamped into the exec pool's job
+//!   claim/complete protocol and the budget arbiter's lease ask/settle
+//!   path, asserting byte-count reads are ordered after their writes.
+
+pub mod lexer;
+pub mod lints;
+#[cfg(feature = "debug-sync")]
+pub mod race;
+
+pub use lints::{lint_source, lint_tree, validate_artifacts, Finding, RULE_IDS};

@@ -90,7 +90,7 @@ impl MethodRegistry {
             Some(crate::checkpoint::CheckpointPolicy::Auto { .. })
         ) {
             let (resolved, _, _) = crate::obs::calibrate::resolve_spec(spec)?
-                .expect("an Auto policy always resolves or errors");
+                .ok_or_else(|| "auto policy did not resolve to a concrete spec".to_string())?;
             return self.make(&resolved);
         }
         let family = spec.method.family();

@@ -1,0 +1,75 @@
+//! `pnode-lint` — the crate's static-analysis gate (DESIGN.md §14).
+//!
+//! ```text
+//! pnode-lint [REPO_ROOT]          lint rust/src + validate JSON artifacts
+//! pnode-lint --rs FILE...         lint individual .rs files (fixture aid)
+//! ```
+//!
+//! Exit status 0 when clean, 1 on any finding, 2 on I/O errors.  Each
+//! finding prints as `rule: file:line: message`.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use pnode::analysis::{lint_source, lint_tree, validate_artifacts, Finding};
+
+fn fail(msg: impl std::fmt::Display) -> ExitCode {
+    eprintln!("pnode-lint: {msg}");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut findings: Vec<Finding> = Vec::new();
+
+    if args.first().map(String::as_str) == Some("--rs") {
+        if args.len() < 2 {
+            return fail("--rs needs at least one file");
+        }
+        for path in &args[1..] {
+            let src = match std::fs::read_to_string(path) {
+                Ok(s) => s,
+                Err(e) => return fail(format!("{path}: {e}")),
+            };
+            // ad-hoc files are linted under a virtual `methods/` path so
+            // every path-scoped rule (determinism included) applies
+            let name = Path::new(path)
+                .file_name()
+                .map(|n| n.to_string_lossy().to_string())
+                .unwrap_or_else(|| path.clone());
+            findings.extend(lint_source(&format!("methods/{name}"), &src));
+        }
+    } else {
+        if args.len() > 1 {
+            return fail("usage: pnode-lint [REPO_ROOT] | pnode-lint --rs FILE...");
+        }
+        let root = PathBuf::from(args.first().map(String::as_str).unwrap_or("."));
+        let src_root = root.join("rust/src");
+        if !src_root.is_dir() {
+            let msg = format!("{} is not a directory (run from the repo root)", src_root.display());
+            return fail(msg);
+        }
+        match lint_tree(&src_root) {
+            Ok(fs) => findings.extend(fs.into_iter().map(|mut f| {
+                f.file = format!("rust/src/{}", f.file);
+                f
+            })),
+            Err(e) => return fail(e),
+        }
+        match validate_artifacts(&root) {
+            Ok(fs) => findings.extend(fs),
+            Err(e) => return fail(e),
+        }
+    }
+
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!("pnode-lint: clean");
+        ExitCode::SUCCESS
+    } else {
+        println!("pnode-lint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}

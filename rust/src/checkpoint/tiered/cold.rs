@@ -111,6 +111,8 @@ impl ColdStore {
     /// stores never collide.
     pub fn create(dir: &Path, compress: bool) -> io::Result<ColdStore> {
         std::fs::create_dir_all(dir)?;
+        // Relaxed: the RMW only needs to mint distinct file-name suffixes;
+        // nothing is published through this counter
         let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
         let path = dir.join(format!("pnode-spill-{}-{}.ckpt", std::process::id(), seq));
         let write_file = OpenOptions::new()
@@ -293,8 +295,8 @@ pub fn read_record(file: &mut File, meta: &RecordMeta) -> io::Result<StepCheckpo
     file.seek(SeekFrom::Start(meta.offset))?;
     let mut header = [0u8; HEADER_BYTES as usize];
     file.read_exact(&mut header)?;
-    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
-    let step = u64::from_le_bytes(header[4..12].try_into().unwrap()) as usize;
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap()); // lint:allow(panic): a 4-byte slice always converts to [u8; 4]
+    let step = u64::from_le_bytes(header[4..12].try_into().unwrap()) as usize; // lint:allow(panic): an 8-byte slice always converts to [u8; 8]
     let enc_tag = header[40];
     if magic != RECORD_MAGIC || step != meta.step || Encoding::from_tag(enc_tag) != Some(meta.encoding)
     {
@@ -310,11 +312,11 @@ pub fn read_record(file: &mut File, meta: &RecordMeta) -> io::Result<StepCheckpo
         match meta.encoding {
             Encoding::F32 => bytes
                 .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap())) // lint:allow(panic): chunks_exact(4) yields exactly-4-byte chunks
                 .collect(),
             Encoding::F16 => bytes
                 .chunks_exact(2)
-                .map(|c| f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+                .map(|c| f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap()))) // lint:allow(panic): chunks_exact(2) yields exactly-2-byte chunks
                 .collect(),
         }
     };

@@ -134,11 +134,13 @@ impl TieredStore {
                 Some(v) => v,
                 None => break,
             };
+            // lint:allow(panic): the LRU scan above only yields keys resident in the hot map
             let cp = self.hot.remove(&victim).expect("victim resident");
             self.hot_bytes -= cp.bytes();
             let _sp = obs::span("tier.spill");
             self.cold
                 .append(&cp)
+                // lint:allow(panic): a failed spill (disk full / spill dir removed) loses checkpoint data; no recovery mid-sweep
                 .expect("checkpoint spill failed (disk full or spill dir gone?)");
         }
         self.sync_lease();
@@ -250,7 +252,9 @@ impl TieredStore {
             let _sp = obs::span("tier.cold_read");
             self.cold
                 .read(step)
+                // lint:allow(panic): an unreadable spill file mid-backward is unrecoverable
                 .expect("cold tier read failed")
+                // lint:allow(panic): records indexed in the cold map were fully written by append
                 .expect("indexed record readable")
         };
         self.cold.remove(step);

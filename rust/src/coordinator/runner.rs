@@ -332,6 +332,7 @@ impl Runner {
             secs,
             model_mem_bytes,
         ));
+        // lint:allow(panic): last() on the row pushed one line above
         self.rows.last().unwrap()
     }
 
@@ -355,6 +356,7 @@ impl Runner {
             secs,
             model_mem_bytes,
         ));
+        // lint:allow(panic): last() on the row pushed one line above
         self.rows.last().unwrap()
     }
 

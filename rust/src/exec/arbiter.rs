@@ -37,9 +37,22 @@
 //! worker-count-dependent lease interleavings cannot change gradients.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
+#[cfg(feature = "debug-sync")]
+use crate::analysis::race;
 use crate::obs;
+
+/// State lock that shrugs off poisoning: every critical section below is
+/// a handful of saturating counter updates that cannot unwind mid-write,
+/// so a poisoned guard still holds consistent counters — and refusing to
+/// settle would leak leased bytes on the panicking worker's unwind path.
+fn lock_state(m: &Mutex<ArbState>) -> MutexGuard<'_, ArbState> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
 
 /// Aggregate pool counters (see [`BudgetArbiter::stats`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -74,6 +87,9 @@ pub struct BudgetArbiter {
     /// fleet size for the fair-share grant cap (`total / parties`)
     parties: AtomicUsize,
     state: Mutex<ArbState>,
+    /// identity of this pool's byte counters for the vector-clock checker
+    #[cfg(feature = "debug-sync")]
+    sync_id: u64,
 }
 
 impl BudgetArbiter {
@@ -82,6 +98,8 @@ impl BudgetArbiter {
             total: total_bytes,
             parties: AtomicUsize::new(1),
             state: Mutex::new(ArbState::default()),
+            #[cfg(feature = "debug-sync")]
+            sync_id: race::new_object_id(),
         })
     }
 
@@ -92,11 +110,16 @@ impl BudgetArbiter {
     /// Declare how many accounts will share the pool; each account's
     /// grant is capped at `total / parties` (see the module docs).
     pub fn set_parties(&self, n: usize) {
+        // Relaxed: parties is a standalone tuning knob set before the
+        // fleet spawns — grant math re-reads it per ask and only the byte
+        // counters (which ride the state mutex) need a happens-before edge
         self.parties.store(n.max(1), Ordering::Relaxed);
     }
 
     pub fn stats(&self) -> ArbiterStats {
-        let st = self.state.lock().expect("arbiter lock");
+        let st = lock_state(&self.state);
+        #[cfg(feature = "debug-sync")]
+        race::stats_read(self.sync_id);
         ArbiterStats {
             total: self.total,
             leased: st.leased,
@@ -137,10 +160,15 @@ impl Lease {
         // the span covers the lock acquisition, so its duration IS the
         // wait this ask spent contending with the rest of the fleet
         let _sp = obs::span("lease.ask");
+        // Relaxed pairs with the Relaxed store in set_parties: a stale
+        // fair-share cap only re-slices grants, it cannot corrupt the
+        // byte counters — those are guarded by the state mutex below
         let parties = self.arb.parties.load(Ordering::Relaxed).max(1) as u64;
         let share = self.arb.total / parties;
         let target = want.min(self.held.max(share));
-        let mut st = self.arb.state.lock().expect("arbiter lock");
+        let mut st = lock_state(&self.arb.state);
+        #[cfg(feature = "debug-sync")]
+        race::lease_write(self.arb.sync_id);
         let avail = self.arb.total.saturating_sub(st.leased);
         let grant = self.held + avail.min(target.saturating_sub(self.held));
         if grant < want {
@@ -165,7 +193,9 @@ impl Lease {
             return;
         }
         let _sp = obs::span("lease.settle");
-        let mut st = self.arb.state.lock().expect("arbiter lock");
+        let mut st = lock_state(&self.arb.state);
+        #[cfg(feature = "debug-sync")]
+        race::lease_write(self.arb.sync_id);
         if bytes >= self.held {
             st.leased += bytes - self.held;
         } else {

@@ -8,9 +8,22 @@
 //! independent ordering by construction.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
+#[cfg(feature = "debug-sync")]
+use crate::analysis::race;
 use crate::obs;
+
+/// Slot lock that shrugs off poisoning: slots hold plain moved-in data
+/// (no invariants spanning the lock), and a panicking job propagates
+/// through the scope join anyway — recovering here never observes a
+/// half-written value.
+fn lock_slot<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
 
 /// Run one pool job inside its own obs logical-thread context: events are
 /// keyed by job index (`job + 1`; 0 is the main thread), not by OS
@@ -41,21 +54,42 @@ where
     }
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<T>>> = (0..n_jobs).map(|_| Mutex::new(None)).collect();
+    #[cfg(feature = "debug-sync")]
+    let run_id = race::pool_run_begin(n_jobs);
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| loop {
+                // Relaxed suffices: the RMW only hands out distinct
+                // indices; each result is published by the slot mutex
+                // (release at unlock → acquire at collection), and the
+                // collector runs after the scope join, a full edge
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n_jobs {
                     break;
                 }
+                #[cfg(feature = "debug-sync")]
+                race::pool_claim(run_id, i);
                 let out = run_job_observed(i, &job);
-                *slots[i].lock().expect("result slot") = Some(out);
+                *lock_slot(&slots[i]) = Some(out);
+                #[cfg(feature = "debug-sync")]
+                race::pool_complete(run_id, i);
             });
         }
     });
+    #[cfg(feature = "debug-sync")]
+    race::pool_scope_join(run_id);
     slots
         .into_iter()
-        .map(|m| m.into_inner().expect("result slot").expect("job completed"))
+        .enumerate()
+        .map(|(_i, m)| {
+            #[cfg(feature = "debug-sync")]
+            race::pool_collect(run_id, _i);
+            let slot = match m.into_inner() {
+                Ok(v) => v,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            slot.expect("scope joined with every job done") // lint:allow(panic): the counter runs past n_jobs before any worker exits, so a joined scope has filled every slot
+        })
         .collect()
 }
 
@@ -67,7 +101,8 @@ where
 {
     let jobs: Vec<Mutex<Option<J>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
     run_indexed(workers, jobs.len(), |i| {
-        let job = jobs[i].lock().expect("job slot").take().expect("job taken once");
+        // lint:allow(panic): the atomic counter hands each index to exactly one worker
+        let job = lock_slot(&jobs[i]).take().expect("index claimed once");
         job()
     })
 }

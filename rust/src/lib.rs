@@ -26,6 +26,7 @@
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for results.
 
 pub mod adjoint;
+pub mod analysis;
 pub mod api;
 pub mod bench;
 pub mod checkpoint;

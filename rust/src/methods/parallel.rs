@@ -33,12 +33,12 @@
 
 use std::ops::Range;
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::checkpoint::{CheckpointPolicy, TierStats};
 use crate::exec::arbiter::{ArbiterStats, BudgetArbiter};
 use crate::exec::{pool, reduce, shard_ranges, ExecConfig, ExecStats};
 use crate::methods::{BlockSpec, GradientMethod, MethodReport, Pnode};
+use crate::obs;
 use crate::ode::grid::{integrate_erk_over, TimeGrid};
 use crate::ode::rhs::OdeRhs;
 
@@ -153,7 +153,7 @@ impl GradientMethod for ParallelAdjoint {
     }
 
     fn forward(&mut self, rhs: &dyn OdeRhs, spec: &BlockSpec, u0: &[f32]) -> Vec<f32> {
-        let started = Instant::now();
+        let started = obs::stopwatch();
         self.shards.clear();
         self.shard_spec = None;
         self.fallback = None;
@@ -173,7 +173,7 @@ impl GradientMethod for ParallelAdjoint {
             let uf = m.forward(rhs, spec, u0);
             self.fallback = Some(m);
             self.batch_rows = rows;
-            self.fwd_secs = started.elapsed().as_secs_f64();
+            self.fwd_secs = started.elapsed_secs();
             return uf;
         }
         self.batch_rows = rows;
@@ -214,6 +214,7 @@ impl GradientMethod for ParallelAdjoint {
                 let r = r.clone();
                 let srhs = probe
                     .take()
+                    // lint:allow(panic): make_shard succeeded on shard 0's probe, and every shard asks for the same row layout
                     .unwrap_or_else(|| rhs.make_shard(r.len()).expect("shardability probed"));
                 let mut method = (self.make)();
                 let sub_u0 = u0[r.start * rl..r.end * rl].to_vec();
@@ -232,7 +233,7 @@ impl GradientMethod for ParallelAdjoint {
             self.shards.push(Shard { rows: r, rhs: srhs, method });
         }
         self.shard_spec = Some(shard_spec);
-        self.fwd_secs = started.elapsed().as_secs_f64();
+        self.fwd_secs = started.elapsed_secs();
         uf_full
     }
 
@@ -243,11 +244,11 @@ impl GradientMethod for ParallelAdjoint {
         lambda: &mut [f32],
         grad_theta: &mut [f32],
     ) {
-        let started = Instant::now();
+        let started = obs::stopwatch();
         if let Some(m) = &mut self.fallback {
             m.backward(rhs, spec, lambda, grad_theta);
             self.report = m.report();
-            let total = self.fwd_secs + started.elapsed().as_secs_f64();
+            let total = self.fwd_secs + started.elapsed_secs();
             let mut exec = ExecStats {
                 workers: 1,
                 shards: 1,
@@ -274,6 +275,7 @@ impl GradientMethod for ParallelAdjoint {
         // to the caller's RHS so multi-block training (set_params between
         // blocks) stays correct
         let theta = rhs.params().to_vec();
+        // lint:allow(panic): the GradientMethod contract runs forward before backward
         let sspec = self.shard_spec.clone().expect("forward before backward");
         let shards = std::mem::take(&mut self.shards);
         let n_shards = shards.len();
@@ -322,7 +324,7 @@ impl GradientMethod for ParallelAdjoint {
 
         agg.nfe_forward += self.pre_nfe;
         agg.n_rejected = self.pre_rejected as u64;
-        let total = self.fwd_secs + started.elapsed().as_secs_f64();
+        let total = self.fwd_secs + started.elapsed_secs();
         let mut exec = ExecStats {
             // the pool clamps concurrency to the job count: report the
             // parallelism that actually ran, not the configured ceiling

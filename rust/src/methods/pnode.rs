@@ -84,6 +84,7 @@ impl GradientMethod for Pnode {
         lambda: &mut [f32],
         grad_theta: &mut [f32],
     ) {
+        // lint:allow(panic): the GradientMethod contract runs forward before backward
         let run = self.run.as_mut().expect("forward before backward");
         rhs.reset_nfe();
         run.backward(rhs, lambda, grad_theta);

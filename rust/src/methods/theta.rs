@@ -38,6 +38,7 @@ fn theta_of(scheme: Scheme) -> ThetaScheme {
     match scheme {
         Scheme::BackwardEuler => ThetaScheme::backward_euler(),
         Scheme::CrankNicolson => ThetaScheme::crank_nicolson(),
+        // lint:allow(panic): constructor-time configuration check: pairing an explicit scheme with the implicit driver is a caller bug
         s => panic!("ImplicitAdjoint drives θ-schemes; {} is explicit (use Pnode)", s.name()),
     }
 }
@@ -78,6 +79,7 @@ impl GradientMethod for ImplicitAdjoint {
         lambda: &mut [f32],
         grad_theta: &mut [f32],
     ) {
+        // lint:allow(panic): the GradientMethod contract runs forward before backward
         let run = self.run.as_mut().expect("forward before backward");
         rhs.reset_nfe();
         run.backward(rhs, lambda, grad_theta);

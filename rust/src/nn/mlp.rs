@@ -80,6 +80,7 @@ impl Mlp {
     }
 
     pub fn out_dim(&self) -> usize {
+        // lint:allow(panic): dims is validated non-empty at construction
         *self.dims.last().unwrap()
     }
 

@@ -307,6 +307,7 @@ impl Sequential {
                 }
                 Step::LinAct(k) => {
                     let lin = &self.children[k];
+                    // lint:allow(panic): the step planner emits LinAct only when child k + 1 is an activation
                     let act = self.children[k + 1].as_activation().unwrap().act();
                     let dfull = lin.in_dim();
                     let dout = lin.out_dim();
@@ -409,6 +410,7 @@ impl Sequential {
                 }
                 Step::LinAct(k) => {
                     let lin = &self.children[k];
+                    // lint:allow(panic): the step planner emits LinAct only when child k + 1 is an activation
                     let act = self.children[k + 1].as_activation().unwrap().act();
                     let dfull = lin.in_dim();
                     let dout = lin.out_dim();
@@ -509,6 +511,7 @@ impl Sequential {
                 }
                 Step::LinAct(k) => {
                     let lin = &self.children[k];
+                    // lint:allow(panic): the step planner emits LinAct only when child k + 1 is an activation
                     let act = self.children[k + 1].as_activation().unwrap().act();
                     let dfull = lin.in_dim();
                     let dout = lin.out_dim();

@@ -32,8 +32,8 @@ pub use export::{chrome_trace, memcheck};
 pub use ledger::{build_tag, Ledger, RunRecord};
 pub use metrics::{Hist, Metrics};
 pub use trace::{
-    counter, disable, enable, enabled, gauge, instant, job_ctx, reset, span, take, test_guard,
-    warn, Event, EventKind, JobCtx, SpanGuard,
+    counter, disable, enable, enabled, gauge, instant, job_ctx, reset, span, stopwatch, take,
+    test_guard, warn, Event, EventKind, JobCtx, SpanGuard, Stopwatch,
 };
 
 /// Span names of the adjoint phases whose wall-time and peak-bytes are

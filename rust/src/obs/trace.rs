@@ -103,6 +103,8 @@ thread_local! {
 /// every instrumentation point while observability is off.
 #[inline(always)]
 pub fn enabled() -> bool {
+    // Relaxed: a stale read merely drops or records one extra event; the
+    // epoch the events need is published by the SeqCst store in enable()
     ENABLED.load(Ordering::Relaxed)
 }
 
@@ -117,6 +119,28 @@ pub fn enable() {
 /// [`take`] or [`reset`].
 pub fn disable() {
     ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Monotonic stopwatch for coarse phase timing (scaling reports,
+/// calibration).  Lives in `obs` so clock reads stay out of the gradient
+/// modules: the determinism lint bans `Instant` from `methods/` et al.,
+/// keeping every nondeterministic input to a run inside the
+/// observability layer.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    started: Instant,
+}
+
+impl Stopwatch {
+    /// Seconds since [`stopwatch`] was called.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+}
+
+/// Start a [`Stopwatch`] now.
+pub fn stopwatch() -> Stopwatch {
+    Stopwatch { started: Instant::now() }
 }
 
 /// Drop every buffered event (current thread's buffer + the flushed

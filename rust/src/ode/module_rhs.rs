@@ -51,6 +51,7 @@ impl ModuleRhs {
     /// Instantiate `arch` at `data_dim` over `batch` rows with parameters
     /// `theta` (layout: the arch's flat layout, see [`ArchSpec::init`]).
     pub fn from_arch(arch: &ArchSpec, data_dim: usize, batch: usize, theta: Vec<f32>) -> Self {
+        // lint:allow(panic): constructor-time validation of a caller-supplied architecture, surfaced at build
         arch.validate().unwrap_or_else(|e| panic!("invalid arch {:?}: {e}", arch.name()));
         assert!(batch > 0, "ModuleRhs needs at least one batch row");
         let module = arch.build(data_dim);
@@ -82,6 +83,7 @@ impl ModuleRhs {
     /// vectors (and RNG init streams) carry over unchanged.
     pub fn mlp(dims: Vec<usize>, act: Act, time_dep: bool, batch: usize, theta: Vec<f32>) -> Self {
         assert!(dims.len() >= 2, "an MLP RHS needs at least [in, out] dims (got {dims:?})");
+        // lint:allow(panic): dims.len() >= 2 asserted on the line above
         let state_dim = *dims.last().unwrap();
         let expect_in = if time_dep { state_dim + 1 } else { state_dim };
         assert_eq!(dims[0], expect_in, "in dim mismatch for time_dep={time_dep}");

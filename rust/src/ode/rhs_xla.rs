@@ -57,11 +57,13 @@ impl XlaRhs {
     fn run1(&self, prim: &str, t: f64, u: &[f32], extra: Option<&[f32]>, out: &mut [f32]) {
         self.t_buf.borrow_mut()[0] = t as f32;
         let tb = self.t_buf.borrow();
+        // lint:allow(panic): load() verified every manifest primitive before constructing the RHS
         let exe = self.arts.get(prim).expect("primitive loaded");
         let res = match extra {
             Some(v) => exe.call(&[u, &self.theta, &tb[..], v]),
             None => exe.call(&[u, &self.theta, &tb[..]]),
         }
+        // lint:allow(panic): a failed XLA execution mid-integration is unrecoverable; the message carries the primitive and error chain
         .unwrap_or_else(|e| panic!("XLA {prim} failed: {e:#}"));
         out.copy_from_slice(&res[0]);
     }
@@ -98,9 +100,11 @@ impl OdeRhs for XlaRhs {
         self.nfe.hit_backward();
         self.t_buf.borrow_mut()[0] = t as f32;
         let tb = self.t_buf.borrow();
+        // lint:allow(panic): load() verified every manifest primitive before constructing the RHS
         let exe = self.arts.get("vjp_both").expect("vjp_both loaded");
         let res = exe
             .call(&[u, &self.theta, &tb[..], v])
+            // lint:allow(panic): a failed XLA execution mid-integration is unrecoverable; the message carries the error chain
             .unwrap_or_else(|e| panic!("XLA vjp_both failed: {e:#}"));
         out_u.copy_from_slice(&res[0]);
         for (g, d) in grad_theta.iter_mut().zip(&res[1]) {
@@ -204,9 +208,11 @@ impl OdeRhs for XlaCnfRhs {
         let (x, _logp) = self.split(u);
         self.t_buf.borrow_mut()[0] = t as f32;
         let tb = self.t_buf.borrow();
+        // lint:allow(panic): load() verified every manifest primitive before constructing the RHS
         let exe = self.arts.get("faug").expect("faug loaded");
         let res = exe
             .call(&[x, &self.theta, &tb[..], &self.eps])
+            // lint:allow(panic): a failed XLA execution mid-integration is unrecoverable; the message carries the error chain
             .unwrap_or_else(|e| panic!("XLA faug failed: {e:#}"));
         let nd = self.batch * self.dim;
         out[..nd].copy_from_slice(&res[0]);
@@ -228,9 +234,11 @@ impl OdeRhs for XlaCnfRhs {
         let (vx, vlogp) = v.split_at(nd);
         self.t_buf.borrow_mut()[0] = t as f32;
         let tb = self.t_buf.borrow();
+        // lint:allow(panic): load() verified every manifest primitive before constructing the RHS
         let exe = self.arts.get("vjp_aug").expect("vjp_aug loaded");
         let res = exe
             .call(&[x, &self.theta, &tb[..], &self.eps, vx, vlogp])
+            // lint:allow(panic): a failed XLA execution mid-integration is unrecoverable; the message carries the error chain
             .unwrap_or_else(|e| panic!("XLA vjp_aug failed: {e:#}"));
         out_u[..nd].copy_from_slice(&res[0]);
         // d(dynamics)/d(logp) = 0: logp never feeds back into f

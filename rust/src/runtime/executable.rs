@@ -63,6 +63,9 @@ impl Executable {
                     shape
                 );
             }
+            // SAFETY: reinterprets the f32 slice as its own bytes — same
+            // allocation, same length in bytes (len * 4), and u8 has no
+            // alignment or validity requirements
             let bytes = unsafe {
                 std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
             };

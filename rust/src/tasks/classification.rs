@@ -60,6 +60,7 @@ impl ClassificationTask {
         let sessions = (0..n_blocks)
             .map(|_| {
                 Session::new(spec.clone())
+                    // lint:allow(panic): the task builds its spec from validated presets; a failure is a harness bug surfaced at startup
                     .unwrap_or_else(|e| panic!("classification task: invalid RunSpec: {e}"))
             })
             .collect();

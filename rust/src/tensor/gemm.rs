@@ -58,10 +58,14 @@ use std::sync::OnceLock;
 static GEMM_WORKERS: AtomicUsize = AtomicUsize::new(1);
 
 pub fn set_gemm_workers(n: usize) {
+    // Relaxed: a process-wide tuning knob written once at startup; a
+    // stale read changes thread count, never data — each GEMM publishes
+    // its results through the scoped-pool join, not through this atomic
     GEMM_WORKERS.store(n.max(1), Ordering::Relaxed);
 }
 
 pub fn gemm_workers() -> usize {
+    // Relaxed: pairs with the Relaxed store above (see set_gemm_workers)
     GEMM_WORKERS.load(Ordering::Relaxed)
 }
 
@@ -331,8 +335,10 @@ fn mk_portable(
     }
 }
 
-/// AVX2 + FMA microkernel.  Only dispatched after runtime detection of
-/// both features; `a` indices are in range by the tiling invariants of
+/// AVX2 + FMA microkernel.
+///
+/// SAFETY: callers dispatch this only after runtime detection of both
+/// features; `a` indices are in range by the tiling invariants of
 /// [`do_tile`], the panel slice holds `k * LANES` floats by construction.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
@@ -372,6 +378,9 @@ unsafe fn mk_avx2(
 
 /// Off x86-64 the Avx2 variant is never selected; keep the symbol so the
 /// dispatch match compiles everywhere.
+///
+/// SAFETY: trivially safe — delegates to the safe portable kernel; the
+/// signature stays `unsafe fn` only to match the x86-64 variant.
 #[cfg(not(target_arch = "x86_64"))]
 unsafe fn mk_avx2(
     av: AView,
@@ -403,6 +412,9 @@ fn do_tile(
         let panel = &bp[jp * k * LANES..(jp + 1) * k * LANES];
         let mut acc = [[0.0f32; LANES]; MR];
         match path {
+            // SAFETY: Avx2 is only ever selected by detect() after a
+            // runtime avx2+fma check, and do_tile's tiling invariants
+            // keep every index the microkernel touches in range
             KernelPath::Avx2 => unsafe { mk_avx2(av, i_abs, mr, k, panel, &mut acc) },
             _ => mk_portable(av, i_abs, mr, k, panel, &mut acc),
         }

@@ -34,6 +34,7 @@ impl Args {
                 }
                 match it.peek() {
                     Some(next) if !next.starts_with("--") => {
+                        // lint:allow(panic): peek() just returned Some, so next() yields that element
                         out.options.insert(name.to_string(), it.next().unwrap());
                     }
                     _ => out.flags.push(name.to_string()),
@@ -63,18 +64,21 @@ impl Args {
 
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
         self.get(name)
+            // lint:allow(panic): CLI argument errors abort with a pointed message by design
             .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}")))
             .unwrap_or(default)
     }
 
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name)
+            // lint:allow(panic): CLI argument errors abort with a pointed message by design
             .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {s:?}")))
             .unwrap_or(default)
     }
 
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
         self.get(name)
+            // lint:allow(panic): CLI argument errors abort with a pointed message by design
             .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {s:?}")))
             .unwrap_or(default)
     }

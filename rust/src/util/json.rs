@@ -239,7 +239,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), ParseError> {
+    fn eat(&mut self, c: u8) -> Result<(), ParseError> {
         if self.peek() == Some(c) {
             self.pos += 1;
             Ok(())
@@ -271,7 +271,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, ParseError> {
-        self.expect(b'[')?;
+        self.eat(b'[')?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -294,7 +294,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, ParseError> {
-        self.expect(b'{')?;
+        self.eat(b'{')?;
         let mut kv = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -305,7 +305,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let k = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.eat(b':')?;
             self.skip_ws();
             let v = self.value()?;
             kv.push((k, v));
@@ -322,7 +322,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, ParseError> {
-        self.expect(b'"')?;
+        self.eat(b'"')?;
         let mut s = String::new();
         loop {
             match self.peek() {
@@ -347,8 +347,8 @@ impl<'a> Parser<'a> {
                             let c = if (0xD800..0xDC00).contains(&cp) {
                                 // high surrogate: expect \uXXXX low surrogate
                                 self.pos += 1;
-                                self.expect(b'\\')?;
-                                self.expect(b'u')?;
+                                self.eat(b'\\')?;
+                                self.eat(b'u')?;
                                 self.pos -= 1; // hex4 advances from pos+1
                                 let lo = self.hex4()?;
                                 let c = 0x10000
@@ -398,7 +398,8 @@ impl<'a> Parser<'a> {
         {
             self.pos += 1;
         }
-        let text = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        let text = std::str::from_utf8(&self.b[start..self.pos])
+            .map_err(|_| self.err("bad number"))?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))

@@ -1,0 +1,5 @@
+use std::collections::HashMap;
+
+fn which_step(seen: &HashMap<u64, usize>, step: u64) -> Option<usize> {
+    seen.get(&step).copied()
+}

@@ -1,0 +1,7 @@
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static N: AtomicUsize = AtomicUsize::new(0);
+
+fn bump() -> usize {
+    N.fetch_add(1, Ordering::Relaxed)
+}

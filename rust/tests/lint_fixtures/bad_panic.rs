@@ -1,0 +1,3 @@
+fn parse_step(s: &str) -> usize {
+    s.parse().unwrap()
+}

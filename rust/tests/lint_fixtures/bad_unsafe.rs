@@ -1,0 +1,3 @@
+fn head(xs: &[f32]) -> f32 {
+    unsafe { *xs.as_ptr() }
+}

@@ -1,0 +1,4 @@
+// lint:allow(panic)
+fn parse_step(s: &str) -> usize {
+    s.parse().unwrap()
+}

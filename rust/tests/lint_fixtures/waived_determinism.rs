@@ -1,0 +1,7 @@
+// lint:allow(determinism): fixture — a keyed scratch map, never iterated
+use std::collections::HashMap;
+
+// lint:allow(determinism): fixture — insertion only, order never observed
+fn probe(seen: &mut HashMap<u64, usize>) {
+    seen.insert(7, 1);
+}

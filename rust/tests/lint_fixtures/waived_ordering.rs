@@ -1,0 +1,8 @@
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static N: AtomicUsize = AtomicUsize::new(0);
+
+fn bump() -> usize {
+    // Relaxed: a statistics counter; no data is published through it
+    N.fetch_add(1, Ordering::Relaxed)
+}

@@ -1,0 +1,4 @@
+fn parse_step(s: &str) -> usize {
+    // lint:allow(panic): fixture — the input is a compile-time constant
+    s.parse().unwrap()
+}

@@ -1,0 +1,4 @@
+fn head(xs: &[f32]) -> f32 {
+    // SAFETY: the caller guarantees xs is non-empty
+    unsafe { *xs.as_ptr() }
+}

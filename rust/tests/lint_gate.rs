@@ -1,0 +1,65 @@
+//! The static-analysis gate (DESIGN.md §14): fixture checks for every
+//! `pnode-lint` rule, then the self-run — the shipped tree and its JSON
+//! artifacts must be lint-clean.  CI additionally runs the `pnode-lint`
+//! binary, which is a thin wrapper over the same library entry points.
+
+use std::path::PathBuf;
+
+use pnode::analysis::{lint_source, lint_tree, validate_artifacts, Finding};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Lint one fixture the way `pnode-lint --rs` does: under a virtual
+/// `methods/` path, so every path-scoped rule (determinism included)
+/// applies.
+fn fixture(name: &str) -> Vec<Finding> {
+    let path = repo_root().join("rust/tests/lint_fixtures").join(name);
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading fixture {name}: {e}"));
+    lint_source(&format!("methods/{name}"), &src)
+}
+
+fn rule_lines(fs: &[Finding]) -> Vec<(&'static str, usize)> {
+    fs.iter().map(|f| (f.rule, f.line)).collect()
+}
+
+#[test]
+fn bad_fixtures_are_flagged_with_the_right_rule_and_line() {
+    assert_eq!(
+        rule_lines(&fixture("bad_determinism.rs")),
+        vec![("determinism", 1), ("determinism", 3)]
+    );
+    assert_eq!(rule_lines(&fixture("bad_unsafe.rs")), vec![("unsafe-safety", 2)]);
+    assert_eq!(rule_lines(&fixture("bad_ordering.rs")), vec![("ordering", 6)]);
+    assert_eq!(rule_lines(&fixture("bad_panic.rs")), vec![("panic", 2)]);
+    // a waiver without a reason is itself a finding and waives nothing
+    assert_eq!(rule_lines(&fixture("bad_waiver.rs")), vec![("waiver", 1), ("panic", 3)]);
+}
+
+#[test]
+fn waived_fixtures_pass() {
+    let names =
+        ["waived_determinism.rs", "waived_unsafe.rs", "waived_ordering.rs", "waived_panic.rs"];
+    for name in names {
+        let fs = fixture(name);
+        assert!(fs.is_empty(), "{name} should be clean, got: {fs:?}");
+    }
+}
+
+#[test]
+fn shipped_tree_is_lint_clean() {
+    let fs = lint_tree(&repo_root().join("rust/src")).expect("walking rust/src");
+    assert!(
+        fs.is_empty(),
+        "pnode-lint findings in the shipped tree:\n{}",
+        fs.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+#[test]
+fn shipped_json_artifacts_parse() {
+    let fs = validate_artifacts(&repo_root()).expect("walking artifacts");
+    assert!(fs.is_empty(), "malformed JSON artifacts: {fs:?}");
+}
