@@ -1,0 +1,219 @@
+//! Serving throughput at the paper's classifier shape (DESIGN.md §15):
+//! the coalescing session pool vs a sequential single-request loop over
+//! the same warm session, both on the allocation-free
+//! `Session::forward_into` path.
+//!
+//! Results land in `BENCH_serve.json` at the repo root — a perf
+//! *trajectory* keyed (name, build tag) exactly like `BENCH_micro.json` —
+//! and as `ExperimentRow`s under `target/bench_results/serve_throughput.json`
+//! with the serve columns (`requests_per_sec`, `latency_p50_secs`,
+//! `latency_p99_secs`) filled.
+//!
+//! Flags: `--smoke` shrinks the request counts for CI and turns the run
+//! into a hard gate:
+//!   * coalesced serving must beat the unbatched loop by >= 1.5x,
+//!   * the latency tail must be finite (p99 >= p50 > 0),
+//!   * steady-state serving must not allocate (forward_allocs flat
+//!     across the measured waves),
+//!   * every served result must be bitwise identical to an isolated run.
+
+use pnode::api::{RunSpec, Session, SolverBuilder};
+use pnode::coordinator::{ExperimentRow, Runner};
+use pnode::nn::module::ArchSpec;
+use pnode::nn::Act;
+use pnode::ode::rhs::OdeRhs;
+use pnode::serve::{ServeConfig, ServePool, Ticket};
+use pnode::util::json::Json;
+use pnode::util::rng::Rng;
+
+/// clf_d64 shape: 64 channels through concat-time MLP [168, 168], ReLU.
+const D: usize = 64;
+
+fn clf_spec() -> RunSpec {
+    SolverBuilder::new()
+        .scheme_str("rk4")
+        .uniform(8)
+        .arch(ArchSpec::ConcatMlp { hidden: vec![168, 168], act: Act::Relu })
+        .build()
+        .expect("clf_d64 serve spec")
+}
+
+fn requests(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut u0 = vec![0.0f32; D];
+            rng.fill_normal(&mut u0);
+            u0
+        })
+        .collect()
+}
+
+/// Sequential baseline: one warm session, one request per forward sweep.
+fn run_unbatched(spec: &RunSpec, theta: &[f32], reqs: &[Vec<f32>]) -> f64 {
+    let rhs = spec.make_rhs(D, 1, theta.to_vec()).expect("batch-1 rhs");
+    let mut session = Session::new(spec.clone()).expect("session");
+    let mut out = vec![0.0f32; D];
+    // warm the workspace so the loop measures steady state
+    session.forward_into(&rhs, &reqs[0], &mut out);
+    let sw = pnode::obs::stopwatch();
+    for u0 in reqs {
+        session.forward_into(&rhs, u0, &mut out);
+    }
+    let secs = sw.elapsed_secs();
+    reqs.len() as f64 / secs.max(1e-12)
+}
+
+/// Drive one pool configuration with `waves` bursts of `burst` requests
+/// and return its final report (the pool is shut down).
+fn run_pool(
+    spec: &RunSpec,
+    theta: &[f32],
+    cfg: ServeConfig,
+    reqs: &[Vec<f32>],
+    burst: usize,
+) -> pnode::serve::ServeReport {
+    let theta_owned = theta.to_vec();
+    let spec_rhs = spec.clone();
+    let pool = ServePool::new(spec, D, cfg, move |rows| {
+        Box::new(spec_rhs.make_rhs(D, rows, theta_owned.clone()).expect("pool rhs"))
+            as Box<dyn OdeRhs + Send>
+    })
+    .expect("serve pool");
+    for wave in reqs.chunks(burst) {
+        let tickets: Vec<Ticket> =
+            wave.iter().map(|u0| pool.submit(u0.clone()).expect("submit")).collect();
+        for t in tickets {
+            let _ = t.wait();
+        }
+    }
+    pool.shutdown()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n_requests = if smoke { 96 } else { 512 };
+
+    let spec = clf_spec();
+    let mut rng = Rng::new(42);
+    let theta = spec.init_theta(&mut rng, D).expect("theta");
+    let reqs = requests(n_requests, 43);
+
+    // ---- bitwise scatter contract: served == isolated, spot-checked up
+    // front so a perf regression never masks a correctness one
+    {
+        let cfg = ServeConfig { sessions: 2, max_batch: 8, ..Default::default() };
+        let theta_owned = theta.clone();
+        let spec_rhs = spec.clone();
+        let pool = ServePool::new(&spec, D, cfg, move |rows| {
+            Box::new(spec_rhs.make_rhs(D, rows, theta_owned.clone()).expect("pool rhs"))
+                as Box<dyn OdeRhs + Send>
+        })
+        .expect("serve pool");
+        let probe: Vec<Ticket> =
+            reqs[..16].iter().map(|u0| pool.submit(u0.clone()).expect("submit")).collect();
+        let served: Vec<Vec<f32>> = probe.into_iter().map(Ticket::wait).collect();
+        let _ = pool.shutdown();
+        let rhs1 = spec.make_rhs(D, 1, theta.clone()).expect("batch-1 rhs");
+        let mut isolated = Session::new(spec.clone()).expect("session");
+        let mut out = vec![0.0f32; D];
+        for (u0, got) in reqs[..16].iter().zip(&served) {
+            isolated.forward_into(&rhs1, u0, &mut out);
+            assert_eq!(&out, got, "served result must be bitwise = isolated run");
+        }
+        println!("scatter contract: 16/16 served results bitwise = isolated runs");
+    }
+
+    // ---- unbatched baseline ----------------------------------------
+    let unbatched_rps = run_unbatched(&spec, &theta, &reqs);
+    println!("unbatched  clf_d64        : {unbatched_rps:10.1} req/s");
+
+    // ---- pool configurations ----------------------------------------
+    let mut runner = Runner::new("serve_throughput");
+    let mut bench_entries: Vec<(String, pnode::serve::ServeReport)> = Vec::new();
+    let configs: &[(usize, usize)] = if smoke {
+        &[(1, 16)]
+    } else {
+        &[(1, 4), (1, 16), (2, 16), (4, 16)]
+    };
+    for &(sessions, max_batch) in configs {
+        let cfg = ServeConfig { sessions, max_batch, ..Default::default() };
+        let sw = pnode::obs::stopwatch();
+        let rep = run_pool(&spec, &theta, cfg, &reqs, max_batch);
+        let wall = sw.elapsed_secs();
+        let name = format!("serve clf_d64 s{sessions} b{max_batch}");
+        println!(
+            "{name:<26}: {:10.1} req/s  p50 {:.3} ms  p99 {:.3} ms  ({:.1} rows/sweep)",
+            rep.requests_per_sec,
+            rep.p50_secs * 1e3,
+            rep.p99_secs * 1e3,
+            rep.mean_batch_rows
+        );
+        runner
+            .rows
+            .push(ExperimentRow::from_serve_report("serve_throughput", "clf_d64", &spec, &rep, wall));
+        bench_entries.push((name, rep));
+
+        if smoke && sessions == 1 && max_batch == 16 {
+            let speedup = rep.requests_per_sec / unbatched_rps.max(1e-12);
+            println!("  coalescing speedup over unbatched: {speedup:.2}x");
+            assert!(
+                speedup >= 1.5,
+                "perf gate: coalesced serving ({:.1} req/s) must be >= 1.5x the unbatched \
+                 loop ({unbatched_rps:.1} req/s), got {speedup:.2}x",
+                rep.requests_per_sec
+            );
+            assert!(
+                rep.p99_secs.is_finite() && rep.p99_secs >= rep.p50_secs && rep.p50_secs > 0.0,
+                "latency gate: p50 {} p99 {}",
+                rep.p50_secs,
+                rep.p99_secs
+            );
+            assert_eq!(
+                rep.forward_allocs, sessions as u64,
+                "alloc gate: steady-state serving must not reallocate ({rep:?})"
+            );
+            println!("  smoke gates passed (speedup, finite tail, zero steady-state allocs)");
+        }
+    }
+
+    match runner.save() {
+        Ok(p) => println!("rows -> {}", p.display()),
+        Err(e) => println!("(could not write rows: {e})"),
+    }
+
+    // BENCH_serve.json is a perf *trajectory* like BENCH_micro.json:
+    // entries are keyed (name, build tag) and accumulate across PRs;
+    // re-running the same build replaces its own entries
+    let build = pnode::obs::build_tag();
+    let path = "BENCH_serve.json";
+    let mut entries: Vec<Json> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| pnode::util::json::parse(&t).ok())
+        .and_then(|j| j.as_arr().map(|a| a.to_vec()))
+        .unwrap_or_default();
+    let fresh: Vec<&str> = bench_entries.iter().map(|(n, _)| n.as_str()).collect();
+    entries.retain(|e| {
+        let same_build = e.get("build").and_then(Json::as_str) == Some(build.as_str());
+        let name = e.get("name").and_then(Json::as_str).unwrap_or("");
+        !(same_build && fresh.contains(&name))
+    });
+    for (name, rep) in &bench_entries {
+        let mut kv = vec![
+            ("build".to_string(), Json::str(build.clone())),
+            ("name".to_string(), Json::str(name.clone())),
+        ];
+        if let Json::Obj(obj) = rep.to_json() {
+            kv.extend(obj);
+        }
+        entries.push(Json::Obj(kv));
+    }
+    let total = entries.len();
+    match std::fs::write(path, Json::Arr(entries).to_string_pretty()) {
+        Ok(()) => println!(
+            "appended {} entries (build {build}) to {path} ({total} total)",
+            bench_entries.len()
+        ),
+        Err(e) => println!("(could not write {path}: {e})"),
+    }
+}

@@ -5,7 +5,8 @@
 //!
 //! * `determinism` — no `HashMap`/`HashSet`/`Instant`/`SystemTime`
 //!   tokens in the numeric/gradient modules (`ode/`, `adjoint/`, `nn/`,
-//!   `tensor/`, `linalg/`, `methods/`, `exec/reduce.rs`).  Hashing and
+//!   `tensor/`, `linalg/`, `methods/`, `serve/`, `exec/reduce.rs`).
+//!   Hashing and
 //!   wall-clock time belong to `obs/` and the CLI; a stray `Instant` in a
 //!   gradient path is how bitwise reproducibility quietly dies.
 //! * `unsafe-safety` — every `unsafe` token must be immediately preceded
@@ -38,7 +39,8 @@ pub const RULE_IDS: &[&str] = &["determinism", "unsafe-safety", "ordering", "pan
 
 /// Modules where the `determinism` rule applies (path prefixes relative
 /// to `rust/src`), plus exact files.
-const DET_MODULES: &[&str] = &["ode/", "adjoint/", "nn/", "tensor/", "linalg/", "methods/"];
+const DET_MODULES: &[&str] =
+    &["ode/", "adjoint/", "nn/", "tensor/", "linalg/", "methods/", "serve/"];
 const DET_FILES: &[&str] = &["exec/reduce.rs"];
 /// Identifiers the `determinism` rule bans in those modules.
 const DET_IDENTS: &[&str] = &["HashMap", "HashSet", "Instant", "SystemTime"];

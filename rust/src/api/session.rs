@@ -23,6 +23,7 @@ use crate::api::spec::RunSpec;
 use crate::checkpoint::CheckpointPolicy;
 use crate::methods::{AutoNote, BlockSpec, GradientMethod, MethodReport};
 use crate::obs;
+use crate::ode::forward::{forward_over_into, ForwardWorkspace};
 use crate::ode::rhs::OdeRhs;
 
 /// Outcome of one [`Session::grad`] call.  `u_f` is owned; the gradient
@@ -50,8 +51,13 @@ pub struct Session {
     lambda: Vec<f32>,
     /// reusable θ̄ accumulation workspace
     grad: Vec<f32>,
+    /// reusable forward-only workspace ([`Session::forward_into`])
+    fwd: ForwardWorkspace,
     workspace_allocs: u64,
+    /// times the forward-only workspace was (re)allocated
+    forward_allocs: u64,
     grads_run: u64,
+    forwards_run: u64,
 }
 
 impl Session {
@@ -93,8 +99,11 @@ impl Session {
             engine,
             lambda: Vec::new(),
             grad: Vec::new(),
+            fwd: ForwardWorkspace::new(),
             workspace_allocs: 0,
+            forward_allocs: 0,
             grads_run: 0,
+            forwards_run: 0,
         })
     }
 
@@ -134,10 +143,51 @@ impl Session {
         self.spec.make_rhs(data_dim, batch, theta)
     }
 
-    /// Integrate forward; must precede [`Session::backward`].
+    /// Integrate forward through the gradient engine; must precede
+    /// [`Session::backward`].
+    ///
+    /// **Deprecated for inference**: this path allocates a fresh
+    /// `Vec<f32>` per call and pays the engine's checkpoint store work.
+    /// Call it only when a backward pass follows (it records the forward
+    /// trajectory); for forward-only evaluation use
+    /// [`Session::forward_into`], which is allocation-free at steady
+    /// state and bitwise identical.
     pub fn forward(&mut self, rhs: &dyn OdeRhs, u0: &[f32]) -> Vec<f32> {
         let _sp = obs::span("session.forward");
         self.engine.forward(rhs, &self.block, u0)
+    }
+
+    /// Forward-only inference into a caller buffer — the serving fast
+    /// path.  Skips the engine and with it every checkpoint
+    /// store/restore (the `CheckpointPolicy::None`-equivalent internal
+    /// mode; an `auto:<budget>` policy trivially resolves to it here
+    /// because no backward pass is requested), integrating directly on
+    /// the session-owned [`ForwardWorkspace`].  Bitwise identical to
+    /// [`Session::forward`] for every method family and grid kind
+    /// (checkpoint sinks never change values; see
+    /// `crate::ode::forward`), and allocation-free once the state shape
+    /// is warm — observable through [`Session::forward_allocs`].
+    ///
+    /// Records nothing: a [`Session::backward`] call must be preceded by
+    /// [`Session::forward`], not by this.  Implicit θ-schemes fall back
+    /// to the engine path (serving stiff implicit models is off the hot
+    /// path and allocates; the fallback still counts a forward alloc).
+    pub fn forward_into(&mut self, rhs: &dyn OdeRhs, u0: &[f32], out: &mut [f32]) {
+        let _sp = obs::span("session.forward_into");
+        assert_eq!(out.len(), u0.len(), "forward_into: out must match u0's length");
+        if self.block.scheme.is_implicit() {
+            let u_f = self.engine.forward(rhs, &self.block, u0);
+            out.copy_from_slice(&u_f);
+            self.forward_allocs += 1;
+            self.forwards_run += 1;
+            return;
+        }
+        let tab = self.block.scheme.tableau();
+        if self.fwd.ensure(tab.s, u0.len()) {
+            self.forward_allocs += 1;
+        }
+        forward_over_into(tab, rhs, self.block.t0, self.block.tf, &self.block.grid, u0, &mut self.fwd, out);
+        self.forwards_run += 1;
     }
 
     /// Propagate `lambda` (∂L/∂u_F → ∂L/∂u_0) through the latest forward
@@ -199,6 +249,19 @@ impl Session {
     pub fn grads_run(&self) -> u64 {
         self.grads_run
     }
+
+    /// How many times the forward-only workspace was (re)allocated.
+    /// Stable state shapes keep this at 1 across any number of
+    /// [`Session::forward_into`] calls — the serve path's steady-state
+    /// zero-allocation invariant.
+    pub fn forward_allocs(&self) -> u64 {
+        self.forward_allocs
+    }
+
+    /// Completed [`Session::forward_into`] calls.
+    pub fn forwards_run(&self) -> u64 {
+        self.forwards_run
+    }
 }
 
 #[cfg(test)]
@@ -255,6 +318,34 @@ mod tests {
         }
         assert_eq!(s.workspace_allocs(), 1, "stable shapes never re-allocate");
         assert_eq!(s.grads_run(), 4);
+    }
+
+    #[test]
+    fn forward_into_matches_engine_forward_bitwise_and_never_reallocates() {
+        let rhs = mk_rhs(621);
+        let mut rng = Rng::new(622);
+        let mut u0 = vec![0.0f32; rhs.state_len()];
+        rng.fill_normal(&mut u0);
+
+        for spec in [
+            SolverBuilder::new().uniform(6).build().unwrap(),
+            SolverBuilder::new()
+                .scheme(crate::ode::Scheme::Dopri5)
+                .grid(crate::ode::TimeGrid::adaptive(1e-6))
+                .build()
+                .unwrap(),
+        ] {
+            let mut s = Session::new(spec).unwrap();
+            let reference = s.forward(&rhs, &u0);
+            let mut out = vec![0.0f32; u0.len()];
+            for _ in 0..3 {
+                s.forward_into(&rhs, &u0, &mut out);
+                assert_eq!(reference, out, "forward_into must be bitwise = forward");
+            }
+            assert_eq!(s.forward_allocs(), 1, "stable shapes never re-allocate");
+            assert_eq!(s.forwards_run(), 3);
+            assert_eq!(s.workspace_allocs(), 0, "the grad workspace is untouched");
+        }
     }
 
     #[test]

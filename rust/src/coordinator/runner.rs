@@ -79,6 +79,13 @@ pub struct ExperimentRow {
     /// every logical tid (pool-worker shards included — they stamp the
     /// counter through their `job_ctx` tids); 0 on unobserved runs
     pub gemm_mul_adds: u64,
+    /// serving throughput of a serve-mode row (`None` on gradient rows;
+    /// see [`ExperimentRow::from_serve_report`])
+    pub requests_per_sec: Option<f64>,
+    /// median request latency of a serve-mode row, seconds
+    pub latency_p50_secs: Option<f64>,
+    /// 99th-percentile request latency of a serve-mode row, seconds
+    pub latency_p99_secs: Option<f64>,
     /// the requested policy of an `auto:<budget>` run (`None` when the
     /// spec named a concrete policy)
     pub policy_requested: Option<String>,
@@ -134,6 +141,9 @@ impl ExperimentRow {
             mem_obs_ckpt_bytes: 0,
             mem_model_ratio: 0.0,
             gemm_mul_adds: 0,
+            requests_per_sec: None,
+            latency_p50_secs: None,
+            latency_p99_secs: None,
             policy_requested: report.auto.requested_name(),
             policy_resolved: report.auto.resolved_name(),
             run_spec: None,
@@ -194,6 +204,48 @@ impl ExperimentRow {
         row
     }
 
+    /// Row for a forward-only serving run (DESIGN.md §15): identity
+    /// columns from the spec, throughput/latency from the
+    /// [`crate::serve::ServeReport`], exec columns from the fleet's
+    /// summed stats.  Gradient-only columns stay zero; downstream
+    /// consumers (`pnode report`) recognize a serve row by its
+    /// `requests_per_sec` field.
+    pub fn from_serve_report(
+        experiment: &str,
+        dataset: &str,
+        spec: &RunSpec,
+        rep: &crate::serve::ServeReport,
+        time_secs: f64,
+    ) -> Self {
+        let mut row = ExperimentRow::from_spec_report(
+            experiment,
+            dataset,
+            spec,
+            &MethodReport::default(),
+            time_secs,
+            0,
+        );
+        row.workers = rep.exec.workers;
+        row.samples_per_sec = rep.exec.samples_per_sec;
+        row.lease_pool_bytes = rep.exec.lease_pool_bytes;
+        row.peak_leased_bytes = rep.exec.peak_leased_bytes;
+        row.lease_waits = rep.exec.lease_waits;
+        row.lease_denied_bytes = rep.exec.lease_denied_bytes;
+        row.over_grant_bytes = rep.exec.over_grant_bytes;
+        row.blocks_merged = rep.exec.blocks_merged;
+        row.requests_per_sec = Some(rep.requests_per_sec);
+        row.latency_p50_secs = Some(rep.p50_secs);
+        row.latency_p99_secs = Some(rep.p99_secs);
+        row.extra.push(("serve_sessions".to_string(), rep.sessions.to_string()));
+        row.extra.push(("serve_max_batch".to_string(), rep.max_batch.to_string()));
+        row.extra.push(("serve_requests".to_string(), rep.requests.to_string()));
+        row.extra.push((
+            "serve_mean_batch_rows".to_string(),
+            format!("{:.2}", rep.mean_batch_rows),
+        ));
+        row
+    }
+
     pub fn to_json(&self) -> Json {
         let mut kv = vec![
             ("experiment".to_string(), Json::str(self.experiment.clone())),
@@ -237,6 +289,15 @@ impl ExperimentRow {
             ("mem_model_ratio".to_string(), Json::num(self.mem_model_ratio)),
             ("gemm_mul_adds".to_string(), Json::num(self.gemm_mul_adds as f64)),
         ];
+        if let Some(v) = self.requests_per_sec {
+            kv.push(("requests_per_sec".to_string(), Json::num(v)));
+        }
+        if let Some(v) = self.latency_p50_secs {
+            kv.push(("latency_p50_secs".to_string(), Json::num(v)));
+        }
+        if let Some(v) = self.latency_p99_secs {
+            kv.push(("latency_p99_secs".to_string(), Json::num(v)));
+        }
         if let Some(p) = &self.policy_requested {
             kv.push(("policy_requested".to_string(), Json::str(p.clone())));
         }
@@ -542,6 +603,39 @@ mod tests {
         assert_eq!(back, spec, "the row's spec re-parses to the producing spec");
         let j = row.to_json().to_string_compact();
         assert!(j.contains("\"run_spec\""), "{j}");
+    }
+
+    #[test]
+    fn serve_rows_carry_throughput_and_latency_columns() {
+        use crate::api::SolverBuilder;
+        use crate::exec::ExecStats;
+        use crate::serve::ServeReport;
+        let spec = SolverBuilder::new().uniform(8).build().unwrap();
+        let rep = ServeReport {
+            requests: 640,
+            batches: 40,
+            sessions: 2,
+            max_batch: 16,
+            requests_per_sec: 1280.0,
+            p50_secs: 1.5e-3,
+            p99_secs: 4.0e-3,
+            mean_batch_rows: 16.0,
+            forward_allocs: 2,
+            exec: ExecStats { workers: 2, samples_per_sec: 1300.0, ..Default::default() },
+        };
+        let row = ExperimentRow::from_serve_report("serve_bench", "clf_d64", &spec, &rep, 0.5);
+        assert_eq!(row.requests_per_sec, Some(1280.0));
+        assert_eq!(row.latency_p99_secs, Some(4.0e-3));
+        assert_eq!(row.workers, 2);
+        let j = row.to_json().to_string_compact();
+        assert!(j.contains("\"requests_per_sec\":1280"), "{j}");
+        assert!(j.contains("\"latency_p50_secs\""), "{j}");
+        assert!(j.contains("\"latency_p99_secs\""), "{j}");
+        assert!(j.contains("\"serve_sessions\":\"2\""), "{j}");
+        // gradient rows omit the serve columns entirely
+        let grad = ExperimentRow::from_report("e", "d", "pnode", "rk4", 4, &MethodReport::default(), 0.0, 0);
+        let j = grad.to_json().to_string_compact();
+        assert!(!j.contains("requests_per_sec"), "{j}");
     }
 
     #[test]

@@ -9,6 +9,15 @@
 //! degrades by spilling to its cold tiers instead of exceeding the
 //! budget — the paper's memory/compute trade-off at fleet level.
 //!
+//! Two admission styles share the pool:
+//!
+//! * **Checkpoint leases** — the non-blocking `lease()`/`ask` protocol
+//!   below; clipped grants degrade stores to their cold tiers.
+//! * **Session leases** ([`BudgetArbiter::acquire`]) — whole-session
+//!   admission for the serve path: a serving sweep has no degraded mode,
+//!   so it *blocks* until its bytes fit in full and an over-subscribed
+//!   fleet queues instead of OOM-ing.
+//!
 //! Protocol (all calls non-blocking; no ordering between workers):
 //!
 //! 1. `lease()` — open a zero-byte account.
@@ -37,7 +46,7 @@
 //! worker-count-dependent lease interleavings cannot change gradients.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 #[cfg(feature = "debug-sync")]
 use crate::analysis::race;
@@ -87,6 +96,9 @@ pub struct BudgetArbiter {
     /// fleet size for the fair-share grant cap (`total / parties`)
     parties: AtomicUsize,
     state: Mutex<ArbState>,
+    /// wakes blocked [`BudgetArbiter::acquire`] calls whenever a lease
+    /// shrinks or drops (bytes return to the pool)
+    freed: Condvar,
     /// identity of this pool's byte counters for the vector-clock checker
     #[cfg(feature = "debug-sync")]
     sync_id: u64,
@@ -98,6 +110,7 @@ impl BudgetArbiter {
             total: total_bytes,
             parties: AtomicUsize::new(1),
             state: Mutex::new(ArbState::default()),
+            freed: Condvar::new(),
             #[cfg(feature = "debug-sync")]
             sync_id: race::new_object_id(),
         })
@@ -133,6 +146,53 @@ impl BudgetArbiter {
     /// Open a zero-byte lease account on this pool.
     pub fn lease(self: &Arc<Self>) -> Lease {
         Lease { arb: self.clone(), held: 0 }
+    }
+
+    /// Session-level admission control (the serve path): **block** until
+    /// `want` bytes fit in the pool *in full*, then lease them and return
+    /// the holding lease.
+    ///
+    /// [`Lease::ask`]'s clipped grants are right for checkpoint stores —
+    /// they degrade to their cold tiers and keep going — but a serving
+    /// session has no degraded mode: a partial grant would just overdraw
+    /// memory.  So an over-subscribed fleet queues here instead of
+    /// OOM-ing.  Deadlock-free by the mandatory-floor rule: a request
+    /// larger than the whole pool is admitted once nothing else is
+    /// leased, with the overdraw counted in `over_grant_bytes` like any
+    /// floor.  Each blocked acquisition bumps `lease_waits` /
+    /// `denied_bytes` once and emits the same `lease.wait` instant and
+    /// `lease.denied_bytes` counter through the obs sink as a clipped
+    /// `ask`.  [`Lease::settle`] shrinks and lease drops wake the queue.
+    pub fn acquire(self: &Arc<Self>, want: u64) -> Lease {
+        // the span covers the whole blocking wait, so its duration IS the
+        // admission delay this session spent queued behind the fleet
+        let _sp = obs::span("lease.acquire");
+        let mut st = lock_state(&self.state);
+        let mut waited = false;
+        while st.leased + want > self.total && st.leased > 0 {
+            if !waited {
+                waited = true;
+                st.lease_waits += 1;
+                let shortfall = want.saturating_sub(self.total.saturating_sub(st.leased));
+                st.denied_bytes += shortfall;
+                if obs::enabled() {
+                    obs::instant("lease.wait");
+                    obs::counter("lease.denied_bytes", shortfall as f64);
+                }
+            }
+            st = match self.freed.wait(st) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+        #[cfg(feature = "debug-sync")]
+        race::lease_write(self.sync_id);
+        st.leased += want;
+        st.peak_leased = st.peak_leased.max(st.leased);
+        if st.leased > self.total {
+            st.over_grant_bytes = st.over_grant_bytes.max(st.leased - self.total);
+        }
+        Lease { arb: self.clone(), held: want }
     }
 }
 
@@ -193,6 +253,7 @@ impl Lease {
             return;
         }
         let _sp = obs::span("lease.settle");
+        let shrank = bytes < self.held;
         let mut st = lock_state(&self.arb.state);
         #[cfg(feature = "debug-sync")]
         race::lease_write(self.arb.sync_id);
@@ -206,6 +267,11 @@ impl Lease {
             st.over_grant_bytes = st.over_grant_bytes.max(st.leased - self.arb.total);
         }
         st.peak_leased = st.peak_leased.max(st.leased);
+        drop(st);
+        if shrank {
+            // bytes just returned to the pool: wake queued acquire()s
+            self.arb.freed.notify_all();
+        }
     }
 }
 
@@ -299,6 +365,80 @@ mod tests {
         }
         assert_eq!(arb.stats().leased, 0);
         assert_eq!(arb.stats().peak_leased, 256, "peak is a high-water mark");
+    }
+
+    #[test]
+    fn acquire_blocks_until_bytes_return_and_counts_the_wait() {
+        let arb = BudgetArbiter::new(1000);
+        let first = arb.acquire(800);
+        assert_eq!(arb.stats().leased, 800);
+        assert_eq!(arb.stats().lease_waits, 0, "uncontended admission is free");
+        std::thread::scope(|s| {
+            let arb2 = arb.clone();
+            let t = s.spawn(move || {
+                // needs 400 but only 200 remain: must queue until `first` drops
+                let l = arb2.acquire(400);
+                let held = l.held();
+                drop(l);
+                held
+            });
+            // wait until the waiter has actually queued (its block is
+            // counted), then release the bytes it needs
+            for _ in 0..2000 {
+                if arb.stats().lease_waits == 1 {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            assert_eq!(arb.stats().lease_waits, 1, "waiter must have queued");
+            drop(first);
+            assert_eq!(t.join().unwrap(), 400);
+        });
+        let st = arb.stats();
+        assert_eq!(st.leased, 0, "both session leases released");
+        assert_eq!(st.lease_waits, 1, "the queued admission counted once");
+        assert_eq!(st.denied_bytes, 200, "shortfall at block time");
+        assert!(st.peak_leased <= 1000, "{st:?}");
+        assert_eq!(st.over_grant_bytes, 0);
+    }
+
+    #[test]
+    fn oversized_acquire_admits_alone_and_counts_overdraw() {
+        // a single session bigger than the pool must not deadlock the
+        // fleet: it is admitted once the pool is otherwise empty, like a
+        // mandatory floor
+        let arb = BudgetArbiter::new(100);
+        let big = arb.acquire(250);
+        assert_eq!(big.held(), 250);
+        let st = arb.stats();
+        assert_eq!(st.leased, 250);
+        assert_eq!(st.over_grant_bytes, 150);
+        drop(big);
+        assert_eq!(arb.stats().leased, 0);
+    }
+
+    #[test]
+    fn concurrent_acquires_serialize_within_the_pool() {
+        // 4 threads × 10 acquisitions of 600 against a 1000-byte pool:
+        // at most one sweep can hold bytes at a time, so leased never
+        // exceeds the pool and everything drains
+        let arb = BudgetArbiter::new(1000);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let arb = arb.clone();
+                s.spawn(move || {
+                    for _ in 0..10 {
+                        let l = arb.acquire(600);
+                        assert!(arb.stats().leased <= 1000);
+                        drop(l);
+                    }
+                });
+            }
+        });
+        let st = arb.stats();
+        assert_eq!(st.leased, 0);
+        assert!(st.peak_leased <= 1000, "{st:?}");
+        assert_eq!(st.over_grant_bytes, 0, "no session exceeded the pool: {st:?}");
     }
 
     #[test]

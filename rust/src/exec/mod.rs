@@ -124,6 +124,26 @@ impl ExecStats {
         self.lease_denied_bytes += other.lease_denied_bytes;
         self.over_grant_bytes = self.over_grant_bytes.max(other.over_grant_bytes);
     }
+
+    /// Fold a *concurrent* peer's stats into this aggregate — the serve
+    /// fleet's semantics.  [`ExecStats::merge`] takes the `min` of
+    /// `samples_per_sec` because sequential blocks bottleneck on the
+    /// slowest; sessions in a serve pool run side by side, so the
+    /// fleet's aggregate throughput is the **sum** of per-session
+    /// throughputs.  Everything else folds exactly like `merge`
+    /// (peaks widen, contention counters accumulate), and `0.0` still
+    /// reads as "unset" on either side rather than contributing zero.
+    pub fn merge_sum(&mut self, other: &ExecStats) {
+        let mine = self.samples_per_sec;
+        self.merge(other);
+        self.samples_per_sec = if mine == 0.0 {
+            other.samples_per_sec
+        } else if other.samples_per_sec == 0.0 {
+            mine
+        } else {
+            mine + other.samples_per_sec
+        };
+    }
 }
 
 #[cfg(test)]
@@ -187,5 +207,35 @@ mod tests {
         c.merge(&a);
         assert_eq!(c.samples_per_sec, 80.0, "zero treated as unset");
         assert_eq!(c.blocks_merged, 3, "a default self still counts as one block");
+    }
+
+    #[test]
+    fn exec_stats_merge_sum_adds_concurrent_throughput() {
+        // pin both folds side by side: sequential blocks take the min,
+        // concurrent serve sessions take the sum
+        let a0 = ExecStats { samples_per_sec: 100.0, lease_waits: 2, ..Default::default() };
+        let b = ExecStats {
+            samples_per_sec: 80.0,
+            lease_waits: 1,
+            peak_leased_bytes: 512,
+            ..Default::default()
+        };
+        let mut seq = a0;
+        seq.merge(&b);
+        assert_eq!(seq.samples_per_sec, 80.0, "merge: slowest block wins");
+        let mut par = a0;
+        par.merge_sum(&b);
+        assert_eq!(par.samples_per_sec, 180.0, "merge_sum: fleet throughput adds");
+        // everything else folds identically to merge
+        assert_eq!(par.lease_waits, 3);
+        assert_eq!(par.peak_leased_bytes, 512);
+        assert_eq!(par.blocks_merged, 2);
+        // zero stays "unset" in both directions
+        let mut empty = ExecStats::default();
+        empty.merge_sum(&b);
+        assert_eq!(empty.samples_per_sec, 80.0);
+        let mut back = b;
+        back.merge_sum(&ExecStats::default());
+        assert_eq!(back.samples_per_sec, 80.0);
     }
 }

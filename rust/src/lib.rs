@@ -39,6 +39,7 @@ pub mod nn;
 pub mod obs;
 pub mod ode;
 pub mod runtime;
+pub mod serve;
 pub mod tasks;
 pub mod tensor;
 pub mod testing;

@@ -17,6 +17,15 @@
 //!                               stdout line — DESIGN.md §11/§13).
 //!                               Observed runs append one record to the
 //!                               persistent ledger (`.pnode/ledger/`)
+//!   serve --spec <file.json>  — fixed-duration inference load loop on the
+//!                               forward-only session pool (DESIGN.md §15):
+//!                               the optional "serve" block in the spec file
+//!                               sizes the fleet/batching/clients; `--json`
+//!                               emits the final ServeReport as the last
+//!                               stdout line; observed runs (`--metrics` or
+//!                               an "obs" block) append a serve-mode ledger
+//!                               record that `pnode report` renders with
+//!                               requests/sec + latency columns
 //!   report                    — per-phase wall times of the last ledger
 //!                               run vs. the ledger baseline medians,
 //!                               with regression flags (DESIGN.md §13);
@@ -54,6 +63,7 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
         Some("report") => cmd_report(&args),
         Some("advise") => cmd_advise(&args),
         Some("info") => cmd_info(),
@@ -63,7 +73,7 @@ fn main() -> Result<()> {
         Some("bench") => cmd_bench(&args),
         _ => {
             eprintln!(
-                "usage: pnode <run|report|advise|info|gradcheck|train-clf|train-stiff|bench> \
+                "usage: pnode <run|serve|report|advise|info|gradcheck|train-clf|train-stiff|bench> \
                  [options]\n\
                  see README.md for details"
             );
@@ -243,6 +253,201 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Fixed-duration inference load loop on the serve pool (DESIGN.md §15).
+/// The spec file is a plain `RunSpec` document plus an optional `"serve"`
+/// object:
+///
+/// ```text
+/// "serve": {"sessions": 2, "max_batch": 16, "max_delay_ms": 2,
+///           "duration_secs": 2, "clients": 32, "dim": 16, "hidden": 32,
+///           "seed": 7, "pool_mb": 0}
+/// ```
+///
+/// `clients` closed-loop producers each keep one request in flight; the
+/// pool coalesces across them.  `--duration <secs>` overrides the file;
+/// `--json` prints the final `ServeReport` as the last stdout line.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use pnode::api::RunSpec;
+    use pnode::ode::rhs::OdeRhs;
+    use pnode::serve::{ServeConfig, ServePool};
+    use pnode::util::json;
+    use pnode::util::rng::Rng;
+
+    let path = args.get("spec").ok_or_else(|| {
+        anyhow::anyhow!("serve needs --spec <file.json> (see examples/specs/serve_clf.json)")
+    })?;
+    let text = std::fs::read_to_string(path)?;
+    let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let spec = RunSpec::from_json(&doc).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let as_json = args.flag("json");
+    if !as_json {
+        println!("spec ({path}):\n{}", spec.to_json().to_string_pretty());
+    }
+
+    // the "serve" block is held to the same standard as `run`'s "task"
+    // block: unknown keys are typos, mistyped values are errors
+    let serve = doc.get("serve");
+    if let Some(s) = serve {
+        const KNOWN: &[&str] = &[
+            "sessions", "max_batch", "max_delay_ms", "duration_secs", "clients", "dim", "hidden",
+            "seed", "pool_mb",
+        ];
+        let obj = s
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("{path}: \"serve\" must be an object"))?;
+        for (k, _) in obj {
+            anyhow::ensure!(
+                KNOWN.contains(&k.as_str()),
+                "{path}: unknown serve key {k:?} (known: {KNOWN:?})"
+            );
+        }
+    }
+    let get_usize = |key: &str, default: usize| -> Result<usize> {
+        match serve.and_then(|s| s.get(key)) {
+            None => Ok(default),
+            Some(v) => v.as_usize().ok_or_else(|| {
+                anyhow::anyhow!("{path}: serve field {key:?} must be a number (got {v:?})")
+            }),
+        }
+    };
+    let get_f64 = |key: &str, default: f64| -> Result<f64> {
+        match serve.and_then(|s| s.get(key)) {
+            None => Ok(default),
+            Some(v) => v.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("{path}: serve field {key:?} must be a number (got {v:?})")
+            }),
+        }
+    };
+    let sessions = get_usize("sessions", 2)?;
+    let max_batch = get_usize("max_batch", 16)?;
+    let max_delay_ms = get_f64("max_delay_ms", 2.0)?;
+    let duration_secs = args.get_f64("duration", get_f64("duration_secs", 2.0)?);
+    let clients = get_usize("clients", sessions * max_batch)?;
+    let dim = get_usize("dim", 16)?;
+    let hidden = get_usize("hidden", 32)?;
+    let seed = get_usize("seed", 7)? as u64;
+    let pool_mb = get_f64("pool_mb", 0.0)?;
+    anyhow::ensure!(clients >= 1, "{path}: serve needs clients >= 1");
+    anyhow::ensure!(
+        duration_secs.is_finite() && duration_secs > 0.0,
+        "{path}: serve needs a positive duration (got {duration_secs})"
+    );
+
+    if args.get("metrics").is_some()
+        || args.flag("metrics")
+        || spec.obs.map_or(false, |o| o.enabled)
+    {
+        pnode::obs::enable();
+    }
+
+    let arch = spec.arch.clone().unwrap_or(pnode::api::ArchSpec::ConcatMlp {
+        hidden: vec![hidden],
+        act: pnode::nn::Act::Relu,
+    });
+    let mut rng = Rng::new(seed);
+    let theta = arch.init(&mut rng, dim);
+    let cfg = ServeConfig {
+        sessions,
+        max_batch,
+        max_delay_secs: max_delay_ms * 1e-3,
+        session_bytes: 0,
+        pool_bytes: (pool_mb * (1u64 << 20) as f64) as u64,
+    };
+    let arch_rhs = arch.clone();
+    let theta_rhs = theta.clone();
+    let pool = ServePool::new(&spec, dim, cfg, move |rows| {
+        Box::new(pnode::ode::ModuleRhs::from_arch(&arch_rhs, dim, rows, theta_rhs.clone()))
+            as Box<dyn OdeRhs + Send>
+    })
+    .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    if !as_json {
+        println!(
+            "serving: arch {} dim {dim} | {sessions} session(s) x batch {max_batch} \
+             (deadline {max_delay_ms} ms), {clients} closed-loop client(s), {duration_secs:.1}s",
+            arch.name()
+        );
+    }
+
+    let sw = pnode::obs::stopwatch();
+    let served: u64 = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|cid| {
+                let pool = &pool;
+                let sw = &sw;
+                scope.spawn(move || {
+                    let mut rng = Rng::new(seed ^ (0x9e3779b97f4a7c15 + cid as u64));
+                    let mut u0 = vec![0.0f32; dim];
+                    let mut n = 0u64;
+                    while sw.elapsed_secs() < duration_secs {
+                        rng.fill_normal(&mut u0);
+                        match pool.submit(u0.clone()) {
+                            Ok(t) => {
+                                let _ = t.wait();
+                                n += 1;
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                    n
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap_or(0)).sum()
+    });
+    let wall = sw.elapsed_secs();
+    let report = pool.shutdown();
+    anyhow::ensure!(
+        report.requests == served,
+        "serve accounting drift: pool served {} vs clients counted {served}",
+        report.requests
+    );
+
+    let row =
+        pnode::coordinator::ExperimentRow::from_serve_report("serve", "load_loop", &spec, &report, wall);
+    let events = take_obs_events();
+    if !events.is_empty() {
+        let metrics = pnode::obs::Metrics::from_events(&events);
+        let rec = pnode::obs::RunRecord {
+            build: pnode::obs::build_tag(),
+            spec: spec.to_json(),
+            row: row.to_json(),
+            metrics: metrics.to_json(),
+            memcheck: None,
+        };
+        match pnode::obs::Ledger::open_default() {
+            Ok(ledger) => match ledger.append(&rec) {
+                Ok(()) => {
+                    if !as_json {
+                        println!(
+                            "ledger: serve run (build {}) appended to {:?}",
+                            rec.build,
+                            ledger.path()
+                        );
+                    }
+                }
+                Err(e) => eprintln!("warn [ledger]: {e}"),
+            },
+            Err(e) => eprintln!("warn [ledger]: {e}"),
+        }
+    }
+    if as_json {
+        println!("{}", report.to_json().to_string_compact());
+    } else {
+        println!(
+            "served {} request(s) in {wall:.2}s: {:.1} req/s, p50 {:.3} ms, p99 {:.3} ms, \
+             {:.1} rows/sweep over {} sweep(s), lease waits {}",
+            report.requests,
+            report.requests_per_sec,
+            report.p50_secs * 1e3,
+            report.p99_secs * 1e3,
+            report.mean_batch_rows,
+            report.batches,
+            report.exec.lease_waits
+        );
+    }
+    Ok(())
+}
+
 /// Per-phase wall times of the last ledger run vs. the baseline medians
 /// over earlier runs of the same method+scheme, with regression flags
 /// (DESIGN.md §13).  Warn-only: drift prints `REGRESSED` but the command
@@ -295,6 +500,75 @@ fn cmd_report(args: &Args) -> Result<()> {
     }
     if let Some(mc) = &last.memcheck {
         println!("memcheck: {}", mc.to_string_compact());
+    }
+
+    // serve-mode records (from `pnode serve`) carry throughput/latency
+    // columns instead of adjoint phases: render those against the
+    // comparable earlier serve runs and stop — the phase table below
+    // would be empty for a forward-only run
+    let row_f64 = |rec: &pnode::obs::RunRecord, key: &str| -> Option<f64> {
+        rec.row.get(key).and_then(Json::as_f64)
+    };
+    if let Some(rps) = row_f64(last, "requests_per_sec") {
+        let prior_serve: Vec<&pnode::obs::RunRecord> = records[..records.len() - 1]
+            .iter()
+            .filter(|r| ident(r) == (method.clone(), scheme.clone()))
+            .filter(|r| row_f64(r, "requests_per_sec").is_some())
+            .collect();
+        let median = |mut v: Vec<f64>| -> Option<f64> {
+            v.sort_by(|a, b| a.partial_cmp(b).expect("serve metrics are finite"));
+            (!v.is_empty()).then(|| v[v.len() / 2])
+        };
+        let mut table = pnode::bench::Table::new(
+            "serve throughput/latency vs ledger baseline",
+            &["metric", "last", "baseline", "delta", "flag"],
+        );
+        let mut regressions = 0usize;
+        // throughput regresses downward, latency regresses upward
+        for (key, label, scale, higher_better, last_v) in [
+            ("requests_per_sec", "requests/sec", 1.0, true, Some(rps)),
+            ("latency_p50_secs", "p50 (ms)", 1e3, false, row_f64(last, "latency_p50_secs")),
+            ("latency_p99_secs", "p99 (ms)", 1e3, false, row_f64(last, "latency_p99_secs")),
+        ] {
+            let Some(l) = last_v else { continue };
+            let base = median(prior_serve.iter().filter_map(|r| row_f64(r, key)).collect());
+            let (base_cell, delta_cell, flag) = match base {
+                None => ("-".to_string(), "-".to_string(), ""),
+                Some(b) if b > 0.0 => {
+                    let delta = (l - b) / b;
+                    let regressed =
+                        if higher_better { delta < -threshold } else { delta > threshold };
+                    let flag = if regressed {
+                        regressions += 1;
+                        "REGRESSED"
+                    } else {
+                        ""
+                    };
+                    (format!("{:.3}", b * scale), format!("{:+.1}%", delta * 100.0), flag)
+                }
+                Some(b) => (format!("{:.3}", b * scale), "-".to_string(), ""),
+            };
+            table.row(vec![
+                label.to_string(),
+                format!("{:.3}", l * scale),
+                base_cell,
+                delta_cell,
+                flag.to_string(),
+            ]);
+        }
+        table.print();
+        println!(
+            "baseline: median over {} comparable earlier serve run(s); regression threshold \
+             {:.0}%{}",
+            prior_serve.len(),
+            threshold * 100.0,
+            if regressions > 0 {
+                format!("; {regressions} metric(s) REGRESSED")
+            } else {
+                String::new()
+            }
+        );
+        return Ok(());
     }
 
     // baseline: per-phase medians over the *earlier* runs with the same

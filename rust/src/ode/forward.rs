@@ -1,0 +1,315 @@
+//! Allocation-free forward-only integration — the serving fast path.
+//!
+//! [`crate::ode::grid::integrate_erk_over`] allocates its state, stage,
+//! and FSAL buffers per call and hands every accepted step to a sink (the
+//! adjoint's recording hook).  Inference needs neither: this module runs
+//! the *same arithmetic* on a caller-owned [`ForwardWorkspace`] and
+//! writes the final state into a caller slice, so a warm
+//! [`crate::api::Session`] serves requests with zero steady-state
+//! allocation.
+//!
+//! Bitwise contract: [`forward_over_into`] reproduces
+//! `integrate_erk_over(..).final_state` bit for bit, for every grid kind.
+//!
+//! * Fixed grids run the identical [`erk_step`] sequence — same axpy
+//!   order, same FSAL carry, same `u`/`u_next` swap — with uniform step
+//!   records computed by the identical `t0 + i * h` expression.
+//! * Adaptive grids run the identical PI-controller loop (same accept /
+//!   reject tests, same factor clamps, same FSAL invalidation on
+//!   reject), so the generated step sequence — and therefore every
+//!   floating-point operation — matches.
+//!
+//! The tests pin this equality; `tests/serve_determinism.rs` pins it end
+//! to end through the facade.
+
+use crate::ode::adaptive::AdaptiveController;
+use crate::ode::erk::{erk_step, error_estimate, ErkWorkspace};
+use crate::ode::grid::{default_adaptive_h0, TimeGrid};
+use crate::ode::rhs::OdeRhs;
+use crate::ode::tableau::Tableau;
+use crate::tensor;
+
+/// Reusable buffers for [`forward_over_into`]: state ping-pong, stage
+/// derivatives, FSAL carry, and the adaptive controller's error scratch.
+/// Sized by [`ForwardWorkspace::ensure`]; a stable `(stages, state_len)`
+/// shape never re-allocates, which is the serving path's steady-state
+/// zero-allocation invariant (observable through the `ensure` return
+/// value, surfaced as `Session::forward_allocs`).
+pub struct ForwardWorkspace {
+    /// stage count the buffers are sized for (0 = empty)
+    s: usize,
+    /// state length the buffers are sized for
+    n: usize,
+    u: Vec<f32>,
+    u_next: Vec<f32>,
+    /// stage derivatives `k_i`
+    ks: Vec<Vec<f32>>,
+    /// FSAL carry: `k_{s-1}` of the previous step (valid per-call only)
+    fsal: Vec<f32>,
+    /// embedded error estimate (adaptive grids)
+    err: Vec<f32>,
+    /// per-component error scale (adaptive grids)
+    scale_ref: Vec<f32>,
+    stage: ErkWorkspace,
+}
+
+impl ForwardWorkspace {
+    /// An empty workspace; buffers appear at the first
+    /// [`ForwardWorkspace::ensure`].
+    pub fn new() -> Self {
+        ForwardWorkspace {
+            s: 0,
+            n: 0,
+            u: Vec::new(),
+            u_next: Vec::new(),
+            ks: Vec::new(),
+            fsal: Vec::new(),
+            err: Vec::new(),
+            scale_ref: Vec::new(),
+            stage: ErkWorkspace::new(0),
+        }
+    }
+
+    /// Size every buffer for a `(stages, state_len)` shape.  Returns
+    /// `true` iff this call had to (re)allocate: a stable shape returns
+    /// `false` forever after its first call, which is what the serving
+    /// tests and the `serve_throughput --smoke` gate pin.
+    pub fn ensure(&mut self, s: usize, n: usize) -> bool {
+        if self.s == s && self.n == n {
+            return false;
+        }
+        self.s = s;
+        self.n = n;
+        self.u = vec![0.0; n];
+        self.u_next = vec![0.0; n];
+        self.ks = (0..s).map(|_| vec![0.0f32; n]).collect();
+        self.fsal = vec![0.0; n];
+        self.err = vec![0.0; n];
+        self.scale_ref = vec![0.0; n];
+        self.stage = ErkWorkspace::new(n);
+        true
+    }
+
+    /// The `(stages, state_len)` shape the buffers are currently sized
+    /// for (`(0, 0)` when empty).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.s, self.n)
+    }
+}
+
+impl Default for ForwardWorkspace {
+    fn default() -> Self {
+        ForwardWorkspace::new()
+    }
+}
+
+/// Step counts of one [`forward_over_into`] call.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ForwardRun {
+    /// executed (accepted) steps
+    pub n_steps: u64,
+    /// rejected adaptive trials (0 on fixed grids)
+    pub n_rejected: u64,
+}
+
+/// One ERK step on the workspace state: `ws.u <- Φ_h(ws.u)` with the
+/// FSAL carry maintained — exactly `integrate_grid`'s per-step body.
+fn step_into(
+    tab: &Tableau,
+    rhs: &dyn OdeRhs,
+    t: f64,
+    h: f64,
+    ws: &mut ForwardWorkspace,
+    fsal_valid: &mut bool,
+) {
+    let fsal_k0 = if *fsal_valid { Some(ws.fsal.as_slice()) } else { None };
+    erk_step(tab, rhs, t, h, &ws.u, &mut ws.ks, &mut ws.u_next, &mut ws.stage, fsal_k0);
+    if tab.fsal {
+        // k_{s-1} at (t+h, u_next) is next step's k_0
+        ws.fsal.copy_from_slice(&ws.ks[tab.s - 1]);
+        *fsal_valid = true;
+    }
+    std::mem::swap(&mut ws.u, &mut ws.u_next);
+}
+
+/// Integrate an explicit RK scheme over `grid` without allocating: the
+/// sink-free, record-free twin of
+/// [`integrate_erk_over`](crate::ode::grid::integrate_erk_over), bitwise
+/// identical to its `final_state` (see the module docs for why).  The
+/// caller must have sized `ws` via `ws.ensure(tab.s, u0.len())`;
+/// `out.len()` must equal `u0.len()`.
+pub fn forward_over_into(
+    tab: &Tableau,
+    rhs: &dyn OdeRhs,
+    t0: f64,
+    tf: f64,
+    grid: &TimeGrid,
+    u0: &[f32],
+    ws: &mut ForwardWorkspace,
+    out: &mut [f32],
+) -> ForwardRun {
+    assert_eq!(
+        ws.shape(),
+        (tab.s, u0.len()),
+        "forward workspace not sized for this (stages, state_len): call ensure() first"
+    );
+    assert_eq!(out.len(), u0.len(), "out must match the state length");
+    match grid {
+        TimeGrid::Uniform { nt } => {
+            // the identical step records uniform_steps() would produce
+            let h = (tf - t0) / *nt as f64;
+            ws.u.copy_from_slice(u0);
+            let mut fsal_valid = false;
+            for i in 0..*nt {
+                let t = t0 + i as f64 * h;
+                step_into(tab, rhs, t, h, ws, &mut fsal_valid);
+            }
+            out.copy_from_slice(&ws.u);
+            ForwardRun { n_steps: *nt as u64, n_rejected: 0 }
+        }
+        TimeGrid::Explicit(steps) => {
+            ws.u.copy_from_slice(u0);
+            let mut fsal_valid = false;
+            for &(t, h) in steps {
+                step_into(tab, rhs, t, h, ws, &mut fsal_valid);
+            }
+            out.copy_from_slice(&ws.u);
+            ForwardRun { n_steps: steps.len() as u64, n_rejected: 0 }
+        }
+        TimeGrid::Adaptive { atol, rtol, h0 } => {
+            // same controller, same default trial step as integrate_erk_over:
+            // the accepted grid (and so the bits) must agree across entry
+            // points
+            assert!(tab.b_err.is_some(), "{} has no embedded pair", tab.name);
+            let ctrl = AdaptiveController::for_tableau(tab, *atol, *rtol);
+            let h0 = h0.unwrap_or_else(|| default_adaptive_h0(t0, tf));
+            let n = u0.len();
+            let (alpha, beta) = (ctrl.alpha, ctrl.beta);
+            ws.u.copy_from_slice(u0);
+            let mut fsal_valid = false;
+            let mut t = t0;
+            let mut h = h0.min(tf - t0);
+            let mut err_prev: f64 = 1.0;
+            let mut accepted = 0u64;
+            let mut rejected = 0u64;
+            for _ in 0..ctrl.max_steps {
+                if t >= tf - 1e-14 * (tf - t0).abs() {
+                    break;
+                }
+                h = h.min(tf - t);
+                let fsal_k0 = if fsal_valid { Some(ws.fsal.as_slice()) } else { None };
+                erk_step(tab, rhs, t, h, &ws.u, &mut ws.ks, &mut ws.u_next, &mut ws.stage, fsal_k0);
+                error_estimate(tab, h, &ws.ks, &mut ws.err);
+                for i in 0..n {
+                    ws.scale_ref[i] = ws.u[i].abs().max(ws.u_next[i].abs());
+                }
+                let err_norm = tensor::wrms_norm(&ws.err, &ws.scale_ref, ctrl.atol, ctrl.rtol);
+                if err_norm <= 1.0 || h <= 1e-14 * (tf - t0).abs() {
+                    // accept
+                    accepted += 1;
+                    if tab.fsal {
+                        ws.fsal.copy_from_slice(&ws.ks[tab.s - 1]);
+                        fsal_valid = true;
+                    }
+                    std::mem::swap(&mut ws.u, &mut ws.u_next);
+                    t += h;
+                    // PI controller update
+                    let e = err_norm.max(1e-10);
+                    let factor = ctrl.safety * e.powf(-alpha) * err_prev.powf(beta);
+                    h *= factor.clamp(ctrl.min_factor, ctrl.max_factor);
+                    err_prev = e;
+                } else {
+                    // reject: shrink, invalidate FSAL cache (same rule as
+                    // integrate_adaptive)
+                    rejected += 1;
+                    fsal_valid = false;
+                    let factor = ctrl.safety * err_norm.powf(-1.0 / ctrl.order);
+                    h *= factor.clamp(ctrl.min_factor, 1.0);
+                }
+            }
+            out.copy_from_slice(&ws.u);
+            ForwardRun { n_steps: accepted, n_rejected: rejected }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::grid::{integrate_erk_over, uniform_steps};
+    use crate::ode::rhs::LinearRhs;
+    use crate::ode::tableau;
+
+    fn rotation() -> LinearRhs {
+        LinearRhs::new(2, vec![0.0, 1.0, -1.0, 0.0])
+    }
+
+    fn run_both(tab: &Tableau, grid: &TimeGrid, u0: &[f32]) -> (Vec<f32>, Vec<f32>, ForwardRun) {
+        let rhs = rotation();
+        let reference =
+            integrate_erk_over(tab, &rhs, 0.0, 2.0, grid, u0, |_, _, _, _, _, _| {});
+        let mut ws = ForwardWorkspace::new();
+        assert!(ws.ensure(tab.s, u0.len()), "first ensure allocates");
+        let mut out = vec![0.0f32; u0.len()];
+        let run = forward_over_into(tab, &rhs, 0.0, 2.0, grid, u0, &mut ws, &mut out);
+        (reference.final_state, out, run)
+    }
+
+    #[test]
+    fn matches_integrate_erk_over_bitwise_on_all_grid_kinds() {
+        let u0 = [0.8f32, -0.35];
+        for tab in [&tableau::EULER, &tableau::RK4, &tableau::BOSH3, &tableau::DOPRI5] {
+            for grid in [
+                TimeGrid::Uniform { nt: 13 },
+                TimeGrid::Explicit(uniform_steps(0.0, 2.0, 13)),
+                TimeGrid::Explicit(vec![(0.0, 0.5), (0.5, 0.75), (1.25, 0.75)]),
+            ] {
+                let (reference, got, run) = run_both(tab, &grid, &u0);
+                assert_eq!(reference, got, "{} over {}", tab.name, grid.name());
+                assert_eq!(run.n_rejected, 0);
+                assert!(run.n_steps > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_adaptive_bitwise_including_rejected_steps() {
+        // -50u forces rejections, exercising FSAL invalidation parity
+        let rhs = LinearRhs::new(1, vec![-50.0]);
+        for tol in [1e-4, 1e-7] {
+            let grid = TimeGrid::Adaptive { atol: tol, rtol: tol, h0: Some(0.5) };
+            let reference =
+                integrate_erk_over(&tableau::DOPRI5, &rhs, 0.0, 2.0, &grid, &[1.0], |_, _, _, _, _, _| {});
+            let mut ws = ForwardWorkspace::new();
+            ws.ensure(tableau::DOPRI5.s, 1);
+            let mut out = vec![0.0f32; 1];
+            let run = forward_over_into(&tableau::DOPRI5, &rhs, 0.0, 2.0, &grid, &[1.0], &mut ws, &mut out);
+            assert_eq!(reference.final_state, out, "tol {tol}");
+            assert_eq!(run.n_steps as usize, reference.steps.len());
+            assert_eq!(run.n_rejected as usize, reference.n_rejected);
+            assert!(run.n_rejected > 0, "the stiff case must exercise rejects (tol {tol})");
+        }
+        // smooth default-h0 path too
+        let (reference, got, _) = run_both(&tableau::DOPRI5, &TimeGrid::adaptive(1e-8), &[1.0, 0.0]);
+        assert_eq!(reference, got);
+    }
+
+    #[test]
+    fn workspace_reuse_never_reallocates_and_keeps_bits() {
+        let rhs = rotation();
+        let tab = &tableau::DOPRI5;
+        let grid = TimeGrid::Uniform { nt: 9 };
+        let mut ws = ForwardWorkspace::new();
+        assert!(ws.ensure(tab.s, 2));
+        let mut first = vec![0.0f32; 2];
+        forward_over_into(tab, &rhs, 0.0, 2.0, &grid, &[1.0, 0.0], &mut ws, &mut first);
+        for _ in 0..5 {
+            assert!(!ws.ensure(tab.s, 2), "stable shape never re-allocates");
+            let mut again = vec![0.0f32; 2];
+            forward_over_into(tab, &rhs, 0.0, 2.0, &grid, &[1.0, 0.0], &mut ws, &mut again);
+            assert_eq!(first, again, "workspace reuse is bitwise repeatable");
+        }
+        assert!(ws.ensure(tab.s, 4), "shape change re-allocates");
+        assert_eq!(ws.shape(), (tab.s, 4));
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod adaptive;
 pub mod erk;
+pub mod forward;
 pub mod grid;
 pub mod implicit;
 pub mod module_rhs;
@@ -14,6 +15,7 @@ pub mod tableau;
 
 pub use adaptive::{AdaptiveController, AdaptiveResult};
 pub use erk::{erk_step, ErkWorkspace};
+pub use forward::{forward_over_into, ForwardRun, ForwardWorkspace};
 pub use grid::{integrate_erk_over, uniform_steps, GridRun, TimeGrid};
 pub use implicit::{ImplicitStepper, ThetaScheme};
 pub use module_rhs::ModuleRhs;

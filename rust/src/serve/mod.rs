@@ -1,0 +1,181 @@
+//! Forward-only inference serving (DESIGN.md §15): a warm session pool
+//! with request coalescing and admission control, layered on the facade.
+//!
+//! The paper's accounting is about the *gradient* path; at inference
+//! time a neural ODE needs no checkpoints and no adjoint sweep.  This
+//! module turns [`crate::api::Session::forward_into`] — the
+//! allocation-free forward path — into a serving engine:
+//!
+//! * **Session pool** ([`ServePool`]) — a fixed fleet of warm
+//!   [`crate::api::Session`]s, each owning its grid plan, forward
+//!   workspace, and one packed-θ RHS instance at the coalescing width,
+//!   reused across every request it ever serves.
+//! * **Request batcher** — a submission queue that coalesces compatible
+//!   single-sample requests into shared minibatch sweeps.  The
+//!   coalescing rule: a worker dispatches as soon as `max_batch`
+//!   requests are pending, **or** `max_delay_secs` after the oldest
+//!   pending request arrived — whichever comes first.  Partial batches
+//!   are padded to `max_batch` rows (copies of the last real row) so
+//!   the state shape — and with it the session workspace — never
+//!   changes; padded rows are never scattered back.
+//! * **Bitwise scatter contract** — batch rows are independent under a
+//!   static grid (the [`crate::ode::rhs::OdeRhs::make_shard`] row-shard
+//!   contract), so each scattered result is bitwise identical to
+//!   running that request alone.  Adaptive grids are rejected at pool
+//!   construction: the WRMS error norm couples rows, so a request's
+//!   bits would depend on its batch-mates.  `tests/serve_determinism.rs`
+//!   pins the contract across kernels and pool sizes.
+//! * **Admission control** — with a nonzero [`ServeConfig::pool_bytes`],
+//!   each sweep leases [`ServeConfig::session_bytes`] from a
+//!   [`crate::exec::BudgetArbiter`] via the blocking
+//!   [`crate::exec::BudgetArbiter::acquire`]: an over-subscribed fleet
+//!   queues instead of OOM-ing, with `lease.wait` / denial counters
+//!   flowing through the obs sink and into [`ServeReport::exec`].
+//!
+//! Throughput aggregates across the fleet with
+//! [`crate::exec::ExecStats::merge_sum`] (concurrent sessions add,
+//! unlike sequential blocks which `min`).
+
+pub mod pool;
+
+pub use pool::{ServePool, Ticket};
+
+use crate::exec::ExecStats;
+use crate::util::json::Json;
+
+/// Serving knobs.  `Default` is a small two-session fleet with a 16-row
+/// coalescing window and a 2 ms batching deadline.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// warm sessions in the fleet (dispatch concurrency)
+    pub sessions: usize,
+    /// coalescing cap: requests per minibatch sweep (and the fixed row
+    /// count every sweep is padded to)
+    pub max_batch: usize,
+    /// coalescing deadline: seconds the oldest pending request may wait
+    /// for the batch to fill before a partial sweep dispatches
+    pub max_delay_secs: f64,
+    /// admission: bytes one sweep leases while it runs (0 = derive a
+    /// default from the state/workspace footprint)
+    pub session_bytes: u64,
+    /// admission pool in bytes (0 = no admission control)
+    pub pool_bytes: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            sessions: 2,
+            max_batch: 16,
+            max_delay_secs: 2e-3,
+            session_bytes: 0,
+            pool_bytes: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.sessions == 0 {
+            return Err("serve config needs sessions >= 1".into());
+        }
+        if self.max_batch == 0 {
+            return Err("serve config needs max_batch >= 1".into());
+        }
+        if !(self.max_delay_secs.is_finite() && self.max_delay_secs >= 0.0) {
+            return Err(format!(
+                "serve config needs a finite nonnegative max_delay_secs, got {}",
+                self.max_delay_secs
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Aggregate serving statistics (snapshot or final; see
+/// [`ServePool::stats`] / [`ServePool::shutdown`]).
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    /// completed requests
+    pub requests: u64,
+    /// dispatched minibatch sweeps
+    pub batches: u64,
+    /// fleet size
+    pub sessions: usize,
+    /// coalescing cap the pool ran with
+    pub max_batch: usize,
+    /// completed requests per second of wall time (first submit to last
+    /// completion)
+    pub requests_per_sec: f64,
+    /// median request latency (submit → result posted), seconds
+    pub p50_secs: f64,
+    /// 99th-percentile request latency, seconds
+    pub p99_secs: f64,
+    /// mean real rows per dispatched sweep (coalescing effectiveness)
+    pub mean_batch_rows: f64,
+    /// forward-workspace (re)allocations summed over the fleet — flat at
+    /// `sessions` once warm (the steady-state zero-allocation invariant)
+    pub forward_allocs: u64,
+    /// fleet execution stats: summed throughput (`merge_sum`) plus the
+    /// admission arbiter's lease counters
+    pub exec: ExecStats,
+}
+
+impl ServeReport {
+    /// JSON rendering for `pnode serve --json` and machine validation.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("sessions", Json::num(self.sessions as f64)),
+            ("max_batch", Json::num(self.max_batch as f64)),
+            ("requests_per_sec", Json::num(self.requests_per_sec)),
+            ("latency_p50_secs", Json::num(self.p50_secs)),
+            ("latency_p99_secs", Json::num(self.p99_secs)),
+            ("mean_batch_rows", Json::num(self.mean_batch_rows)),
+            ("forward_allocs", Json::num(self.forward_allocs as f64)),
+            ("lease_waits", Json::num(self.exec.lease_waits as f64)),
+            ("lease_denied_bytes", Json::num(self.exec.lease_denied_bytes as f64)),
+        ])
+    }
+}
+
+/// Nearest-rank quantile over an ascending-sorted sample set; `0.0` on an
+/// empty set (a pool that served nothing has no latency, not an infinite
+/// one).
+pub fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).ceil() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_use_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(quantile(&xs, 0.5), 50.0);
+        assert_eq!(quantile(&xs, 0.99), 99.0);
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 100.0);
+        assert_eq!(quantile(&[7.0], 0.99), 7.0);
+        assert_eq!(quantile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn config_validation_rejects_degenerate_knobs() {
+        assert!(ServeConfig::default().validate().is_ok());
+        assert!(ServeConfig { sessions: 0, ..Default::default() }.validate().is_err());
+        assert!(ServeConfig { max_batch: 0, ..Default::default() }.validate().is_err());
+        assert!(ServeConfig { max_delay_secs: f64::NAN, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(ServeConfig { max_delay_secs: -1.0, ..Default::default() }
+            .validate()
+            .is_err());
+    }
+}

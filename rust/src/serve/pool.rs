@@ -1,0 +1,551 @@
+//! The session pool and request batcher behind [`crate::serve`].
+//!
+//! Concurrency layout: one submission queue (mutex + condvar) feeds
+//! `sessions` worker threads.  Each worker owns a warm
+//! [`Session`], one RHS instance built at the coalescing width, and two
+//! fixed `max_batch × dim` gather/scatter buffers — so after its first
+//! sweep a worker's forward path allocates nothing but the per-request
+//! result rows it hands back.  All timing runs on one monotonic
+//! [`crate::obs::Stopwatch`] epoch (wall-clock types never appear here:
+//! the module sits under the `determinism` lint like the rest of the
+//! numeric core).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::api::{RunSpec, Session};
+use crate::exec::{BudgetArbiter, ExecStats};
+use crate::obs;
+use crate::ode::rhs::OdeRhs;
+use crate::serve::{quantile, ServeConfig, ServeReport};
+
+/// Queue/stat locks that shrug off poisoning: every critical section is
+/// a handful of counter updates and buffer moves that leave the state
+/// consistent, and refusing to serve after one worker's panic would turn
+/// a single bad request into a fleet outage.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// One queued request.
+struct Request {
+    u0: Vec<f32>,
+    /// epoch stamp at submit (latency = scatter stamp − this)
+    enq_secs: f64,
+    slot: Arc<Slot>,
+}
+
+/// The response rendezvous a [`Ticket`] blocks on.
+struct Slot {
+    result: Mutex<Option<Vec<f32>>>,
+    done: Condvar,
+}
+
+/// Handle returned by [`ServePool::submit`]; redeem with
+/// [`Ticket::wait`].
+pub struct Ticket {
+    slot: Arc<Slot>,
+}
+
+impl Ticket {
+    /// Block until the pool has served this request; returns the final
+    /// state row.
+    pub fn wait(self) -> Vec<f32> {
+        let mut st = lock(&self.slot.result);
+        loop {
+            if let Some(out) = st.take() {
+                return out;
+            }
+            st = match self.slot.done.wait(st) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+}
+
+struct Queue {
+    pending: VecDeque<Request>,
+    closed: bool,
+}
+
+#[derive(Clone, Copy, Default)]
+struct WorkerStats {
+    requests: u64,
+    batches: u64,
+    /// seconds spent inside sweeps (admission + forward + scatter)
+    busy_secs: f64,
+    /// the owning session's forward-workspace (re)allocation count
+    forward_allocs: u64,
+}
+
+#[derive(Default)]
+struct Stats {
+    requests: u64,
+    batches: u64,
+    /// per-request latency samples, seconds
+    latencies: Vec<f64>,
+    /// epoch stamp of the first submit / the latest completion
+    first_enq: Option<f64>,
+    last_done: f64,
+    workers: Vec<WorkerStats>,
+}
+
+struct Shared {
+    cfg: ServeConfig,
+    /// per-request state row length
+    dim: usize,
+    /// resolved per-sweep admission lease (see [`ServeConfig::session_bytes`])
+    session_bytes: u64,
+    queue: Mutex<Queue>,
+    /// wakes workers on submit and on shutdown
+    arrived: Condvar,
+    stats: Mutex<Stats>,
+    /// session-level admission (None = unlimited)
+    arbiter: Option<Arc<BudgetArbiter>>,
+    /// monotonic epoch for every latency stamp
+    epoch: obs::Stopwatch,
+}
+
+/// A fixed fleet of warm sessions serving coalesced forward-only
+/// requests.  See the [module docs](crate::serve) for the coalescing
+/// rule, the bitwise scatter contract, and the admission protocol.
+pub struct ServePool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServePool {
+    /// Build a warm fleet from `spec`.  `dim` is the per-request state
+    /// length; `rhs_factory(rows)` builds the dynamics over a `rows`-row
+    /// batch (each worker calls it once, at the coalescing width
+    /// `cfg.max_batch`, and reuses that instance — packed θ, scratch and
+    /// all — for its whole lifetime).
+    ///
+    /// Serving requires a *static* grid and an explicit scheme: adaptive
+    /// step control couples batch rows through the WRMS error norm (a
+    /// request's bits would depend on its batch-mates), and implicit
+    /// θ-schemes fall back to the allocating engine path.
+    pub fn new<F>(
+        spec: &RunSpec,
+        dim: usize,
+        cfg: ServeConfig,
+        rhs_factory: F,
+    ) -> Result<ServePool, String>
+    where
+        F: Fn(usize) -> Box<dyn OdeRhs + Send>,
+    {
+        cfg.validate()?;
+        let block = spec.block_spec();
+        if !block.grid.is_static() {
+            return Err(format!(
+                "serve pool needs a static grid (uniform/explicit), got {}: adaptive step \
+                 control couples batch rows through the error norm, which would break the \
+                 bitwise per-request scatter contract",
+                block.grid.name()
+            ));
+        }
+        if block.scheme.is_implicit() {
+            return Err(format!(
+                "serve pool needs an explicit scheme, got {}: the implicit forward falls \
+                 back to the allocating engine path",
+                block.scheme.name()
+            ));
+        }
+        if dim == 0 {
+            return Err("serve pool needs dim >= 1".into());
+        }
+        // one sweep's resident footprint: state ping-pong + stage
+        // derivatives + FSAL/error scratch, all at the coalescing width
+        let session_bytes = if cfg.session_bytes > 0 {
+            cfg.session_bytes
+        } else {
+            let stages = block.scheme.tableau().s as u64;
+            (stages + 5) * (cfg.max_batch * dim * std::mem::size_of::<f32>()) as u64
+        };
+        let arbiter = if cfg.pool_bytes > 0 {
+            let arb = BudgetArbiter::new(cfg.pool_bytes);
+            arb.set_parties(cfg.sessions);
+            Some(arb)
+        } else {
+            None
+        };
+        let shared = Arc::new(Shared {
+            dim,
+            session_bytes,
+            queue: Mutex::new(Queue { pending: VecDeque::new(), closed: false }),
+            arrived: Condvar::new(),
+            stats: Mutex::new(Stats {
+                workers: vec![WorkerStats::default(); cfg.sessions],
+                ..Stats::default()
+            }),
+            arbiter,
+            epoch: obs::stopwatch(),
+            cfg,
+        });
+        let mut workers = Vec::with_capacity(shared.cfg.sessions);
+        for wid in 0..shared.cfg.sessions {
+            let session = Session::new(spec.clone())?;
+            let rhs = rhs_factory(shared.cfg.max_batch);
+            let sh = shared.clone();
+            workers.push(std::thread::spawn(move || worker_loop(wid, &sh, session, rhs)));
+        }
+        Ok(ServePool { shared, workers })
+    }
+
+    /// The per-request state length every submission must match.
+    pub fn dim(&self) -> usize {
+        self.shared.dim
+    }
+
+    /// Enqueue one request (`u0.len()` must equal [`ServePool::dim`]).
+    /// Returns a [`Ticket`] to block on.  Dispatch follows the
+    /// coalescing rule: `max_batch` pending requests, or
+    /// `max_delay_secs` after the oldest arrived — whichever first.
+    pub fn submit(&self, u0: Vec<f32>) -> Result<Ticket, String> {
+        if u0.len() != self.shared.dim {
+            return Err(format!(
+                "request state length {} does not match the pool dim {}",
+                u0.len(),
+                self.shared.dim
+            ));
+        }
+        let now = self.shared.epoch.elapsed_secs();
+        let slot = Arc::new(Slot { result: Mutex::new(None), done: Condvar::new() });
+        {
+            let mut q = lock(&self.shared.queue);
+            if q.closed {
+                return Err("serve pool is shut down".into());
+            }
+            q.pending.push_back(Request { u0, enq_secs: now, slot: slot.clone() });
+        }
+        {
+            let mut st = lock(&self.shared.stats);
+            if st.first_enq.is_none() {
+                st.first_enq = Some(now);
+            }
+        }
+        self.shared.arrived.notify_one();
+        Ok(Ticket { slot })
+    }
+
+    /// Snapshot the serving statistics so far (running pools included).
+    pub fn stats(&self) -> ServeReport {
+        let st = lock(&self.shared.stats);
+        build_report(&self.shared, &st)
+    }
+
+    /// Close the queue, serve every pending request, join the fleet, and
+    /// return the final statistics.
+    pub fn shutdown(mut self) -> ServeReport {
+        self.close_and_join();
+        let st = lock(&self.shared.stats);
+        build_report(&self.shared, &st)
+    }
+
+    fn close_and_join(&mut self) {
+        {
+            let mut q = lock(&self.shared.queue);
+            q.closed = true;
+        }
+        self.shared.arrived.notify_all();
+        for h in self.workers.drain(..) {
+            // a panicked worker poisoned nothing we rely on (locks
+            // recover); just reap the handle
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServePool {
+    fn drop(&mut self) {
+        // a dropped pool must not leave detached workers parked on the
+        // queue condvar forever (idempotent after shutdown())
+        self.close_and_join();
+    }
+}
+
+fn worker_loop(wid: usize, sh: &Shared, mut session: Session, rhs: Box<dyn OdeRhs + Send>) {
+    let d = sh.dim;
+    let mb = sh.cfg.max_batch;
+    let mut batch_u0 = vec![0.0f32; mb * d];
+    let mut batch_uf = vec![0.0f32; mb * d];
+    let mut taken: Vec<Request> = Vec::with_capacity(mb);
+    let mut lat_scratch: Vec<f64> = Vec::with_capacity(mb);
+    loop {
+        // ---- coalesce: max_batch pending, or max_delay past the oldest
+        {
+            let mut q = lock(&sh.queue);
+            loop {
+                let now = sh.epoch.elapsed_secs();
+                let age = q.pending.front().map(|r| now - r.enq_secs);
+                let full = q.pending.len() >= mb;
+                let expired = age.map(|a| a >= sh.cfg.max_delay_secs).unwrap_or(false);
+                if full || expired || (q.closed && !q.pending.is_empty()) {
+                    let k = q.pending.len().min(mb);
+                    taken.extend(q.pending.drain(..k));
+                    break;
+                }
+                if q.closed {
+                    return; // drained and closed: fleet exit
+                }
+                let wait = match age {
+                    // a batch is open: sleep only to its deadline
+                    Some(a) => (sh.cfg.max_delay_secs - a).clamp(1e-4, 3600.0),
+                    // queue empty: sleep until a submit (or shutdown) wakes us
+                    None => 3600.0,
+                };
+                let (g, _timed_out) =
+                    match sh.arrived.wait_timeout(q, Duration::from_secs_f64(wait)) {
+                        Ok(v) => v,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
+                q = g;
+            }
+            if !q.pending.is_empty() {
+                // leftovers: another worker can open its own batch now
+                sh.arrived.notify_one();
+            }
+        }
+
+        // ---- admission: the sweep's bytes in full, or queue (never OOM)
+        let sweep_start = sh.epoch.elapsed_secs();
+        let lease = sh.arbiter.as_ref().map(|a| a.acquire(sh.session_bytes));
+
+        // ---- gather into the fixed max_batch × dim state; pad the tail
+        // with copies of the last real row (row independence keeps real
+        // rows' bits unchanged; the fixed shape keeps the workspace warm)
+        let k = taken.len();
+        for (i, r) in taken.iter().enumerate() {
+            batch_u0[i * d..(i + 1) * d].copy_from_slice(&r.u0);
+        }
+        for i in k..mb {
+            batch_u0.copy_within((k - 1) * d..k * d, i * d);
+        }
+
+        {
+            let _sp = obs::span("serve.sweep");
+            session.forward_into(rhs.as_ref(), &batch_u0, &mut batch_uf);
+        }
+        drop(lease);
+
+        // ---- scatter: post each real row and wake its ticket
+        let done = sh.epoch.elapsed_secs();
+        for (i, r) in taken.drain(..).enumerate() {
+            let row = batch_uf[i * d..(i + 1) * d].to_vec();
+            {
+                let mut out = lock(&r.slot.result);
+                *out = Some(row);
+            }
+            r.slot.done.notify_all();
+            lat_scratch.push(done - r.enq_secs);
+        }
+
+        {
+            let mut st = lock(&sh.stats);
+            st.requests += k as u64;
+            st.batches += 1;
+            st.latencies.extend_from_slice(&lat_scratch);
+            st.last_done = st.last_done.max(done);
+            let w = &mut st.workers[wid];
+            w.requests += k as u64;
+            w.batches += 1;
+            w.busy_secs += done - sweep_start;
+            w.forward_allocs = session.forward_allocs();
+        }
+        lat_scratch.clear();
+    }
+}
+
+fn build_report(sh: &Shared, st: &Stats) -> ServeReport {
+    let mut sorted = st.latencies.clone();
+    sorted.sort_by(f64::total_cmp);
+    let wall = st.first_enq.map(|t0| (st.last_done - t0).max(0.0)).unwrap_or(0.0);
+    let mut exec = ExecStats::default();
+    let mut forward_allocs = 0u64;
+    let mut seeded = false;
+    for w in &st.workers {
+        forward_allocs += w.forward_allocs;
+        let per = ExecStats {
+            workers: 1,
+            samples_per_sec: if w.busy_secs > 0.0 { w.requests as f64 / w.busy_secs } else { 0.0 },
+            ..ExecStats::default()
+        };
+        if seeded {
+            // concurrent sessions: fleet throughput is the sum
+            exec.merge_sum(&per);
+        } else {
+            exec = per;
+            seeded = true;
+        }
+    }
+    exec.workers = sh.cfg.sessions as u64;
+    if let Some(arb) = &sh.arbiter {
+        let a = arb.stats();
+        exec.lease_pool_bytes = a.total;
+        exec.peak_leased_bytes = a.peak_leased;
+        exec.lease_waits = a.lease_waits;
+        exec.lease_denied_bytes = a.denied_bytes;
+        exec.over_grant_bytes = a.over_grant_bytes;
+    }
+    ServeReport {
+        requests: st.requests,
+        batches: st.batches,
+        sessions: sh.cfg.sessions,
+        max_batch: sh.cfg.max_batch,
+        requests_per_sec: if wall > 0.0 { st.requests as f64 / wall } else { 0.0 },
+        p50_secs: quantile(&sorted, 0.50),
+        p99_secs: quantile(&sorted, 0.99),
+        mean_batch_rows: if st.batches > 0 {
+            st.requests as f64 / st.batches as f64
+        } else {
+            0.0
+        },
+        forward_allocs,
+        exec,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::SolverBuilder;
+    use crate::nn::Act;
+    use crate::ode::{ModuleRhs, Scheme, TimeGrid};
+    use crate::util::rng::Rng;
+
+    fn theta(seed: u64) -> Vec<f32> {
+        // concat-time MLP over 4 state channels: input is [u, t]
+        let dims = vec![5, 8, 4];
+        let mut rng = Rng::new(seed);
+        crate::nn::init::kaiming_uniform(&mut rng, &dims, 1.0)
+    }
+
+    fn factory(seed: u64) -> impl Fn(usize) -> Box<dyn OdeRhs + Send> {
+        move |rows| {
+            Box::new(ModuleRhs::mlp(vec![5, 8, 4], Act::Tanh, true, rows, theta(seed)))
+                as Box<dyn OdeRhs + Send>
+        }
+    }
+
+    #[test]
+    fn coalesced_results_match_isolated_sessions_bitwise() {
+        let spec = SolverBuilder::new().uniform(5).build().unwrap();
+        let cfg = ServeConfig { sessions: 2, max_batch: 4, ..Default::default() };
+        let pool = ServePool::new(&spec, 4, cfg, factory(71)).unwrap();
+
+        let mut rng = Rng::new(72);
+        let mut requests = Vec::new();
+        for _ in 0..10 {
+            let mut u0 = vec![0.0f32; 4];
+            rng.fill_normal(&mut u0);
+            requests.push(u0);
+        }
+        let tickets: Vec<Ticket> =
+            requests.iter().map(|u0| pool.submit(u0.clone()).unwrap()).collect();
+        let served: Vec<Vec<f32>> = tickets.into_iter().map(Ticket::wait).collect();
+        let report = pool.shutdown();
+
+        let single = factory(71)(1);
+        let mut isolated = Session::new(spec).unwrap();
+        let mut out = vec![0.0f32; 4];
+        for (u0, got) in requests.iter().zip(&served) {
+            isolated.forward_into(single.as_ref(), u0, &mut out);
+            assert_eq!(&out, got, "scatter must be bitwise = isolated run");
+        }
+        assert_eq!(report.requests, 10);
+        assert!(report.batches >= 3, "10 requests / max_batch 4: {report:?}");
+        assert!(report.p99_secs.is_finite() && report.p99_secs >= report.p50_secs);
+    }
+
+    #[test]
+    fn steady_state_serving_never_reallocates_workspaces() {
+        let spec = SolverBuilder::new().uniform(4).build().unwrap();
+        let cfg = ServeConfig { sessions: 1, max_batch: 3, max_delay_secs: 1e-3, ..Default::default() };
+        let pool = ServePool::new(&spec, 4, cfg, factory(81)).unwrap();
+        let mut rng = Rng::new(82);
+        for _wave in 0..4 {
+            let tickets: Vec<Ticket> = (0..6)
+                .map(|_| {
+                    let mut u0 = vec![0.0f32; 4];
+                    rng.fill_normal(&mut u0);
+                    pool.submit(u0).unwrap()
+                })
+                .collect();
+            for t in tickets {
+                let _ = t.wait();
+            }
+        }
+        let report = pool.shutdown();
+        assert_eq!(report.requests, 24);
+        assert_eq!(
+            report.forward_allocs, 1,
+            "one warm-up allocation for the whole fleet lifetime: {report:?}"
+        );
+    }
+
+    #[test]
+    fn admission_queues_oversubscribed_sweeps() {
+        let spec = SolverBuilder::new().uniform(4).build().unwrap();
+        // pool holds exactly one sweep's bytes: with 2 sessions, every
+        // concurrent second sweep must queue on the arbiter
+        let cfg = ServeConfig {
+            sessions: 2,
+            max_batch: 2,
+            max_delay_secs: 1e-4,
+            session_bytes: 1024,
+            pool_bytes: 1024,
+        };
+        let pool = ServePool::new(&spec, 4, cfg, factory(91)).unwrap();
+        let mut rng = Rng::new(92);
+        let tickets: Vec<Ticket> = (0..40)
+            .map(|_| {
+                let mut u0 = vec![0.0f32; 4];
+                rng.fill_normal(&mut u0);
+                pool.submit(u0).unwrap()
+            })
+            .collect();
+        for t in tickets {
+            let _ = t.wait();
+        }
+        let report = pool.shutdown();
+        assert_eq!(report.requests, 40);
+        assert_eq!(report.exec.lease_pool_bytes, 1024);
+        assert!(
+            report.exec.peak_leased_bytes <= 1024,
+            "admission must cap the concurrent footprint: {report:?}"
+        );
+    }
+
+    #[test]
+    fn pool_rejects_adaptive_grids_implicit_schemes_and_bad_requests() {
+        let adaptive = SolverBuilder::new()
+            .scheme(Scheme::Dopri5)
+            .grid(TimeGrid::adaptive(1e-6))
+            .build()
+            .unwrap();
+        let e = ServePool::new(&adaptive, 4, ServeConfig::default(), factory(1)).unwrap_err();
+        assert!(e.contains("static grid"), "{e}");
+
+        let implicit = SolverBuilder::new()
+            .policy(crate::checkpoint::CheckpointPolicy::SolutionOnly)
+            .scheme(Scheme::CrankNicolson)
+            .uniform(4)
+            .build()
+            .unwrap();
+        let e = ServePool::new(&implicit, 4, ServeConfig::default(), factory(1)).unwrap_err();
+        assert!(e.contains("explicit scheme"), "{e}");
+
+        let spec = SolverBuilder::new().uniform(4).build().unwrap();
+        let pool = ServePool::new(&spec, 4, ServeConfig::default(), factory(1)).unwrap();
+        let e = pool.submit(vec![0.0; 3]).unwrap_err();
+        assert!(e.contains("does not match"), "{e}");
+        let report = pool.shutdown();
+        assert_eq!(report.requests, 0);
+        assert_eq!(report.p99_secs, 0.0, "no requests, no latency");
+    }
+}

@@ -26,6 +26,10 @@ pub struct ClassificationTask {
     /// ANODE lift (Gholami et al., 2019): data rows are zero-padded into
     /// the augmented ODE state before the first block
     lift: Option<Augment>,
+    /// ping-pong state buffers for the allocation-free [`Self::infer`]
+    /// path (reused across calls; sized on first use)
+    infer_u: Vec<f32>,
+    infer_v: Vec<f32>,
 }
 
 /// Outcome of one training step.
@@ -64,7 +68,15 @@ impl ClassificationTask {
                     .unwrap_or_else(|e| panic!("classification task: invalid RunSpec: {e}"))
             })
             .collect();
-        ClassificationTask { n_blocks, theta, readout, sessions, lift: None }
+        ClassificationTask {
+            n_blocks,
+            theta,
+            readout,
+            sessions,
+            lift: None,
+            infer_u: Vec::new(),
+            infer_v: Vec::new(),
+        }
     }
 
     /// The ANODE variant: ODE blocks run over `data_dim + extra` channels,
@@ -130,6 +142,11 @@ impl ClassificationTask {
     /// Forward through all blocks; returns the final features.
     /// `x` is the *data* batch — the ANODE variant lifts it into the
     /// augmented state first.
+    ///
+    /// This path feeds [`Self::grad_step`]: each session records its
+    /// forward state for the reverse λ sweep.  For inference-only calls
+    /// prefer [`Self::infer`], which produces bitwise-identical features
+    /// through the allocation-free [`Session::forward_into`] path.
     pub fn forward(&mut self, rhs: &mut dyn OdeRhs, x: &[f32]) -> Vec<f32> {
         let mut u = self.lifted(x);
         for b in 0..self.n_blocks {
@@ -139,7 +156,36 @@ impl ClassificationTask {
         u
     }
 
-    /// Inference-only loss/accuracy (no tapes, no gradients).
+    /// Inference forward through all blocks via the allocation-free
+    /// [`Session::forward_into`] path (no checkpoint writes, workspaces
+    /// and ping-pong buffers reused across calls).  Bitwise identical to
+    /// [`Self::forward`]; the returned slice lives until the next call.
+    pub fn infer(&mut self, rhs: &mut dyn OdeRhs, x: &[f32]) -> &[f32] {
+        let n = match &self.lift {
+            None => x.len(),
+            Some(l) => (x.len() / l.in_dim()) * l.out_dim(),
+        };
+        self.infer_u.resize(n, 0.0);
+        self.infer_v.resize(n, 0.0);
+        match &self.lift {
+            None => self.infer_u.copy_from_slice(x),
+            Some(l) => {
+                let rows = x.len() / l.in_dim();
+                self.infer_u.fill(0.0);
+                let mut cache: [f32; 0] = [];
+                l.forward(rows, 0.0, &[], x, &mut self.infer_u, &mut cache);
+            }
+        }
+        for b in 0..self.n_blocks {
+            rhs.set_params(self.block_theta(b));
+            self.sessions[b].forward_into(&*rhs, &self.infer_u, &mut self.infer_v);
+            std::mem::swap(&mut self.infer_u, &mut self.infer_v);
+        }
+        &self.infer_u
+    }
+
+    /// Inference-only loss/accuracy (no tapes, no gradients, no
+    /// steady-state allocation).
     pub fn evaluate(
         &mut self,
         rhs: &mut dyn OdeRhs,
@@ -147,8 +193,8 @@ impl ClassificationTask {
         x: &[f32],
         y: &[usize],
     ) -> (f64, f64) {
-        let u = self.forward(rhs, x);
-        let g = self.readout.loss_and_grads(bsz, &u, y);
+        self.infer(rhs, x);
+        let g = self.readout.loss_and_grads(bsz, &self.infer_u, y);
         (g.loss, g.accuracy)
     }
 
@@ -255,6 +301,31 @@ mod tests {
             last < first.unwrap() * 0.9,
             "loss should drop: {first:?} -> {last}"
         );
+    }
+
+    #[test]
+    fn infer_matches_forward_bitwise_without_reallocation() {
+        let mut rng = Rng::new(241);
+        let (mut task, mut rhs) = mk_task(&mut rng, 2);
+        let mut x = vec![0.0f32; B * D];
+        rng.fill_normal(&mut x);
+        let y: Vec<usize> = (0..B).map(|_| rng.below(3)).collect();
+
+        let via_forward = task.forward(&mut rhs, &x);
+        let (loss_fwd, acc_fwd) = {
+            let g = task.readout.loss_and_grads(B, &via_forward, &y);
+            (g.loss, g.accuracy)
+        };
+        for _ in 0..3 {
+            let via_infer = task.infer(&mut rhs, &x).to_vec();
+            assert_eq!(via_infer, via_forward, "infer must be bitwise = forward");
+        }
+        let (loss_inf, acc_inf) = task.evaluate(&mut rhs, B, &x, &y);
+        assert_eq!(loss_inf, loss_fwd);
+        assert_eq!(acc_inf, acc_fwd);
+        // one warm-up workspace allocation per block session, then flat
+        let allocs: u64 = task.sessions.iter().map(|s| s.forward_allocs()).sum();
+        assert_eq!(allocs, task.n_blocks as u64, "steady-state inference allocates nothing");
     }
 
     #[test]

@@ -502,11 +502,13 @@ mod tests {
             let mut z = vec![0.0f32; B * D + B];
             z[..B * D].copy_from_slice(&x);
             rhs.set_params(&task.theta);
-            let zf = probe.forward(&rhs, &z);
+            let mut zf = vec![0.0f32; B * D + B];
+            probe.forward_into(&rhs, &z, &mut zf);
             let lp = task.nll(&zf);
             task.theta[idx] = orig - h;
             rhs.set_params(&task.theta);
-            let zf = probe.forward(&rhs, &z);
+            let mut zf = vec![0.0f32; B * D + B];
+            probe.forward_into(&rhs, &z, &mut zf);
             let lm = task.nll(&zf);
             task.theta[idx] = orig;
             let fd = (lp - lm) / (2.0 * h as f64);
@@ -557,11 +559,13 @@ mod tests {
             let mut z = vec![0.0f32; B * D + B];
             z[..B * D].copy_from_slice(&x);
             rhs.set_params(&task.theta);
-            let zf = probe.forward(&rhs, &z);
+            let mut zf = vec![0.0f32; B * D + B];
+            probe.forward_into(&rhs, &z, &mut zf);
             let lp = task.nll(&zf);
             task.theta[idx] = orig - h;
             rhs.set_params(&task.theta);
-            let zf = probe.forward(&rhs, &z);
+            let mut zf = vec![0.0f32; B * D + B];
+            probe.forward_into(&rhs, &z, &mut zf);
             let lm = task.nll(&zf);
             task.theta[idx] = orig;
             let fd = (lp - lm) / (2.0 * h as f64);

@@ -1,0 +1,164 @@
+//! Serving determinism contract (DESIGN.md §15): results scattered out of
+//! the coalescing session pool must be bitwise identical to isolated
+//! single-request runs — for every pool size, every coalescing width,
+//! every gradient method's session, and whichever GEMM kernel path the
+//! process runs (CI drives this file across the `PNODE_KERNEL` matrix).
+
+use pnode::api::{RunSpec, Session, SolverBuilder};
+use pnode::nn::Act;
+use pnode::ode::rhs::OdeRhs;
+use pnode::ode::{ModuleRhs, Scheme, TimeGrid};
+use pnode::serve::{ServeConfig, ServePool, Ticket};
+use pnode::util::rng::Rng;
+
+const D: usize = 6;
+const K: usize = 10;
+
+fn theta(seed: u64) -> Vec<f32> {
+    // concat-time MLP over D state channels: input is [u, t]
+    let dims = vec![D + 1, 12, D];
+    let mut rng = Rng::new(seed);
+    pnode::nn::init::kaiming_uniform(&mut rng, &dims, 1.0)
+}
+
+fn rhs_at(rows: usize, seed: u64) -> ModuleRhs {
+    ModuleRhs::mlp(vec![D + 1, 12, D], Act::Tanh, true, rows, theta(seed))
+}
+
+fn requests(seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..K)
+        .map(|_| {
+            let mut u0 = vec![0.0f32; D];
+            rng.fill_normal(&mut u0);
+            u0
+        })
+        .collect()
+}
+
+/// Serve all K requests through a pool of `sessions` workers coalescing
+/// `max_batch` rows, and return the scattered results in request order.
+fn serve_all(spec: &RunSpec, sessions: usize, max_batch: usize, seed: u64) -> Vec<Vec<f32>> {
+    let cfg = ServeConfig { sessions, max_batch, ..Default::default() };
+    let pool = ServePool::new(spec, D, cfg, move |rows| {
+        Box::new(rhs_at(rows, seed)) as Box<dyn OdeRhs + Send>
+    })
+    .expect("serve pool");
+    let tickets: Vec<Ticket> = requests(seed + 1)
+        .into_iter()
+        .map(|u0| pool.submit(u0).expect("submit"))
+        .collect();
+    let out = tickets.into_iter().map(Ticket::wait).collect();
+    let report = pool.shutdown();
+    assert_eq!(report.requests, K as u64);
+    // each worker that dispatched >= 1 sweep allocates its workspace
+    // exactly once; how many of the `sessions` workers got work is a
+    // scheduling detail
+    assert!(
+        report.forward_allocs >= 1 && report.forward_allocs <= sessions as u64,
+        "workspace allocations must stay within one-per-worker: {report:?}"
+    );
+    out
+}
+
+#[test]
+fn coalesced_batches_match_isolated_forwards_across_pool_sizes() {
+    let spec = SolverBuilder::new().scheme(Scheme::Rk4).uniform(5).build().unwrap();
+
+    // ground truth: each request alone through the classic engine forward
+    let seed = 1700;
+    let rhs1 = rhs_at(1, seed);
+    let mut isolated = Session::new(spec.clone()).unwrap();
+    let reference: Vec<Vec<f32>> =
+        requests(seed + 1).iter().map(|u0| isolated.forward(&rhs1, u0)).collect();
+
+    for sessions in [1usize, 2, 4] {
+        let served = serve_all(&spec, sessions, 4, seed);
+        for (i, (got, want)) in served.iter().zip(&reference).enumerate() {
+            assert_eq!(
+                got, want,
+                "request {i} through a {sessions}-session pool must be bitwise = isolated"
+            );
+        }
+    }
+}
+
+#[test]
+fn coalescing_width_never_changes_bits() {
+    let spec = SolverBuilder::new().scheme(Scheme::Bosh3).uniform(7).build().unwrap();
+    let seed = 1800;
+    let narrow = serve_all(&spec, 2, 1, seed);
+    let wide = serve_all(&spec, 2, 8, seed);
+    assert_eq!(narrow, wide, "max_batch is a latency knob, never a bits knob");
+}
+
+#[test]
+fn forward_into_matches_forward_across_methods_and_grids() {
+    let seed = 1900;
+    let rhs = rhs_at(3, seed);
+    let mut rng = Rng::new(seed + 1);
+    let mut u0 = vec![0.0f32; 3 * D];
+    rng.fill_normal(&mut u0);
+
+    for method in ["pnode", "pnode:binomial:2", "cont", "naive"] {
+        for (scheme, grid) in [
+            (Scheme::Rk4, TimeGrid::Uniform { nt: 6 }),
+            (Scheme::Dopri5, TimeGrid::adaptive(1e-5)),
+        ] {
+            let spec = SolverBuilder::new()
+                .method_str(method)
+                .scheme(scheme)
+                .grid(grid)
+                .build()
+                .unwrap_or_else(|e| panic!("{method}: {e}"));
+            let mut s = Session::new(spec).unwrap();
+            let want = s.forward(&rhs, &u0);
+            let mut got = vec![0.0f32; u0.len()];
+            s.forward_into(&rhs, &u0, &mut got);
+            assert_eq!(
+                want, got,
+                "forward_into must be bitwise = forward ({method}, {})",
+                scheme.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn pool_rejects_nonstatic_grids() {
+    let spec = SolverBuilder::new()
+        .scheme(Scheme::Dopri5)
+        .grid(TimeGrid::adaptive(1e-6))
+        .build()
+        .unwrap();
+    let e = ServePool::new(&spec, D, ServeConfig::default(), |rows| {
+        Box::new(rhs_at(rows, 1)) as Box<dyn OdeRhs + Send>
+    })
+    .unwrap_err();
+    assert!(
+        e.contains("static grid") && e.contains("bitwise"),
+        "rejection must explain the determinism rationale: {e}"
+    );
+}
+
+#[test]
+fn steady_state_pool_serving_keeps_allocations_flat() {
+    let spec = SolverBuilder::new().uniform(4).build().unwrap();
+    let cfg = ServeConfig { sessions: 1, max_batch: K, ..Default::default() };
+    let pool = ServePool::new(&spec, D, cfg, |rows| {
+        Box::new(rhs_at(rows, 77)) as Box<dyn OdeRhs + Send>
+    })
+    .expect("serve pool");
+    for _wave in 0..5 {
+        let tickets: Vec<Ticket> = requests(78)
+            .into_iter()
+            .map(|u0| pool.submit(u0).expect("submit"))
+            .collect();
+        for t in tickets {
+            let _ = t.wait();
+        }
+    }
+    let report = pool.shutdown();
+    assert_eq!(report.requests, 5 * K as u64);
+    assert_eq!(report.forward_allocs, 1, "one warm-up allocation, then zero: {report:?}");
+}
